@@ -1,0 +1,61 @@
+//! Bench: RDP accountant + calibration cost, and the epsilon tables the
+//! paper's hyperparameters imply (Table A2 settings).
+//!
+//! `cargo bench --bench bench_accountant`
+
+use dp_shortcuts::privacy::{calibrate_sigma, RdpAccountant};
+use dp_shortcuts::util::bench::bench;
+
+fn main() {
+    println!("== bench_accountant ==");
+    let acc = RdpAccountant::default();
+
+    // The paper's setting and a classic large-T setting.
+    for (q, sigma, steps, delta) in [
+        (0.5, 0.9238, 4u64, 2.04e-5),
+        (0.01, 1.1, 10_000, 1e-5),
+        (0.001, 0.6, 100_000, 1e-6),
+    ] {
+        let eps = acc.epsilon(q, sigma, steps, delta);
+        println!("q={q:<6} sigma={sigma:<7} T={steps:<7} -> eps={eps:.4}");
+    }
+
+    let s = bench("epsilon/q0.5-T4", 10, 500, || {
+        std::hint::black_box(RdpAccountant::default().epsilon(0.5, 0.9238, 4, 2.04e-5));
+    });
+    println!("{s}");
+
+    let s = bench("epsilon/q0.01-T10k", 10, 200, || {
+        std::hint::black_box(RdpAccountant::default().epsilon(0.01, 1.1, 10_000, 1e-5));
+    });
+    println!("{s}");
+
+    let s = bench("calibrate/paper-setting", 3, 50, || {
+        std::hint::black_box(calibrate_sigma(8.0, 2.04e-5, 0.5, 4).unwrap());
+    });
+    println!("{s}");
+
+    // RDP vs PLD: the tighter Fourier accountant (ablation).
+    println!("-- RDP vs PLD epsilon (same mechanism) --");
+    for (q, sigma, steps, delta) in [(0.01, 1.1, 1000u32, 1e-5), (0.1, 1.0, 100, 1e-5)] {
+        let e_rdp = acc.epsilon(q, sigma, steps as u64, delta);
+        let e_pld = dp_shortcuts::privacy::pld_epsilon(q, sigma, steps, delta);
+        println!(
+            "q={q:<5} sigma={sigma:<4} T={steps:<5}: RDP {e_rdp:.4}  PLD {e_pld:.4}  (gap {:.1}%)",
+            100.0 * (e_rdp - e_pld) / e_rdp
+        );
+    }
+    let s = bench("pld/T100-4096buckets", 1, 5, || {
+        std::hint::black_box(dp_shortcuts::privacy::pld_epsilon(0.1, 1.0, 100, 1e-5));
+    });
+    println!("{s}");
+
+    // Per-step streaming accounting must be cheap enough for the hot
+    // loop (it runs once per optimizer step in the trainer).
+    let mut streaming =
+        dp_shortcuts::privacy::rdp::StreamingAccountant::new(RdpAccountant::default());
+    let s = bench("streaming/record_step", 10, 1000, || {
+        streaming.record_step(0.5, 0.9238);
+    });
+    println!("{s}");
+}

@@ -1,0 +1,55 @@
+//! Bench: the max-physical-batch memory planner (paper Fig 3 / Table 3)
+//! — model-ladder sweep at both GPU budgets, plus planner latency.
+//!
+//! `cargo bench --bench bench_batchsize`
+
+use dp_shortcuts::clipping::ClippingMethod;
+use dp_shortcuts::memory::{MemModel, A100_BYTES, V100_BYTES};
+use dp_shortcuts::models::paper_ladder;
+use dp_shortcuts::util::bench::bench;
+
+fn main() {
+    println!("== bench_batchsize (Fig 3 / Table 3) ==");
+    let mem = MemModel::default();
+    for (gpu, budget) in [("A100-40GB", A100_BYTES), ("V100-32GB", V100_BYTES)] {
+        println!("-- {gpu} --");
+        println!(
+            "{:<12} {:>11} {:>11} {:>11} {:>11} {:>8}",
+            "model", "nonprivate", "per-example", "ghost", "bk", "np/pe"
+        );
+        for arch in paper_ladder() {
+            let np = mem.max_physical_batch(&arch, ClippingMethod::NonPrivate, budget);
+            let pe = mem.max_physical_batch(&arch, ClippingMethod::PerExample, budget);
+            let (gh, bk) = if ClippingMethod::Ghost.supports(arch.family) {
+                (
+                    mem.max_physical_batch(&arch, ClippingMethod::Ghost, budget),
+                    mem.max_physical_batch(&arch, ClippingMethod::BkGhost, budget),
+                )
+            } else {
+                (0, 0)
+            };
+            println!(
+                "{:<12} {:>11} {:>11} {:>11} {:>11} {:>7.1}x",
+                arch.name,
+                np,
+                pe,
+                gh,
+                bk,
+                np as f64 / pe.max(1) as f64
+            );
+        }
+    }
+    // Planner latency (it sits on interactive paths in the launcher).
+    let ladder = paper_ladder();
+    let stats = bench("planner/full-ladder-sweep", 3, 20, || {
+        let mem = MemModel::default();
+        for arch in &ladder {
+            for m in ClippingMethod::ALL {
+                if m.supports(arch.family) {
+                    std::hint::black_box(mem.max_physical_batch(arch, *m, A100_BYTES));
+                }
+            }
+        }
+    });
+    println!("{stats}");
+}

@@ -1,0 +1,66 @@
+//! Bench: lower-precision study (paper Fig 5 / A.3) — measured bf16
+//! vs f32 executables plus the paper-scale TF32 roofline table.
+//!
+//! `cargo bench --bench bench_precision`
+
+use dp_shortcuts::clipping::ClippingMethod;
+use dp_shortcuts::coordinator::config::TrainConfig;
+use dp_shortcuts::coordinator::trainer::Trainer;
+use dp_shortcuts::metrics::summary_with_ci;
+use dp_shortcuts::models::paper_ladder;
+use dp_shortcuts::precision::Tf32Model;
+use dp_shortcuts::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    println!("== bench_precision (Fig 5 / A.3) ==");
+
+    println!("-- modeled TF32/FP32 throughput ratio at paper scale --");
+    let tf = Tf32Model::default();
+    println!("{:<12} {:>12} {:>12}", "model", "non-private", "private");
+    for a in &paper_ladder()[..5] {
+        println!(
+            "{:<12} {:>12.3} {:>12.3}",
+            a.name,
+            tf.throughput_ratio(a, ClippingMethod::NonPrivate),
+            tf.throughput_ratio(a, ClippingMethod::PerExample)
+        );
+    }
+
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP measured part: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::load("artifacts")?;
+    println!("-- measured bf16/f32 ratio (the CPU TF32 substitute) --");
+    let names: Vec<String> = rt.manifest().models.keys().cloned().collect();
+    for model in &names {
+        let meta = rt.manifest().model(model)?.clone();
+        for variant in ["nonprivate", "masked"] {
+            for &b in meta.accum_batches(variant, "bf16").iter() {
+                if !meta.accum_batches(variant, "f32").contains(&b) {
+                    continue;
+                }
+                let mut thr = [0.0f64; 2];
+                for (i, bf16) in [false, true].into_iter().enumerate() {
+                    let cfg = TrainConfig {
+                        model: model.clone(),
+                        variant: variant.into(),
+                        bf16,
+                        physical_batch: b,
+                        ..Default::default()
+                    };
+                    let t = Trainer::new(&rt, cfg)?;
+                    let samples = t.bench_accum(variant, b, 8)?;
+                    thr[i] = summary_with_ci(&samples, 0).median;
+                }
+                println!(
+                    "{model:<12} {variant:<12} B={b:<4} f32 {:>8.1} ex/s  bf16 {:>8.1} ex/s  ratio {:.3}",
+                    thr[0],
+                    thr[1],
+                    thr[1] / thr[0]
+                );
+            }
+        }
+    }
+    Ok(())
+}

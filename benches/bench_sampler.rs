@@ -1,0 +1,49 @@
+//! Bench: Poisson subsampling + batch splitting cost — the L3 overhead
+//! that proper (non-shortcut) sampling adds to every step. The paper's
+//! efficiency argument only holds if this is negligible next to the
+//! gradient computation; this bench proves it.
+//!
+//! `cargo bench --bench bench_sampler`
+
+use dp_shortcuts::coordinator::batcher::{BatchMemoryManager, BatchingMode};
+use dp_shortcuts::coordinator::sampler::{PoissonSampler, Sampler, ShuffleSampler};
+use dp_shortcuts::util::bench::bench;
+
+fn main() {
+    println!("== bench_sampler ==");
+    // The paper's full-scale setting: N = 50 000, q = 0.5 (E[L] = 25 000).
+    for (n, q) in [(50_000u32, 0.5), (50_000, 0.01), (1_000_000, 0.001)] {
+        let s = PoissonSampler::new(n, q, 0);
+        let mut step = 0u64;
+        let stats = bench(&format!("poisson/N{n}-q{q}"), 5, 100, || {
+            std::hint::black_box(s.sample(step));
+            step += 1;
+        });
+        println!("{stats}");
+    }
+
+    let s = ShuffleSampler::new(50_000, 25_000, 0);
+    let mut step = 0u64;
+    let stats = bench("shuffle-shortcut/N50k-B25k", 5, 100, || {
+        std::hint::black_box(s.sample(step));
+        step += 1;
+    });
+    println!("{stats}  (the 'shortcut' being avoided)");
+
+    // Batch splitting (Algorithm 2 masking) over a 25k logical batch.
+    let sampler = PoissonSampler::new(50_000, 0.5, 0);
+    let logical = sampler.sample(0);
+    let bmm = BatchMemoryManager::new(256, BatchingMode::Masked);
+    let stats = bench("split/masked-25k-into-256", 5, 200, || {
+        std::hint::black_box(bmm.split(&logical));
+    });
+    println!("{stats}");
+
+    let stats = bench("split/naive-sizes-25k", 5, 200, || {
+        std::hint::black_box(BatchMemoryManager::split_naive(
+            &logical,
+            &[32, 64, 128, 256],
+        ));
+    });
+    println!("{stats}");
+}

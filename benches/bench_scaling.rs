@@ -1,0 +1,55 @@
+//! Bench: the multi-GPU scaling simulation (paper Fig 7 / A.4 / A.5) —
+//! full curves for private vs non-private plus simulator latency.
+//!
+//! `cargo bench --bench bench_scaling`
+
+use dp_shortcuts::cluster::{amdahl_speedup, fit_parallel_fraction, ClusterSim, Interconnect};
+use dp_shortcuts::util::bench::bench;
+
+fn sim(thr: f64) -> ClusterSim {
+    ClusterSim {
+        single_worker_throughput: thr,
+        local_batch: 32,
+        grad_bytes: 86.6e6 * 4.0, // ViT-Base fp32 grads
+        overlap: 0.5,
+        serial_overhead: 1.0e-3,
+        interconnect: Interconnect::default(),
+    }
+}
+
+fn main() {
+    println!("== bench_scaling (Fig 7 / A.4 / A.5) ==");
+    let gpus = [1usize, 2, 4, 8, 16, 32, 64, 80];
+    // Paper-testbed-like single-GPU rates for ViT-Base on V100:
+    // non-private ~2.8x the private rate (Fig 2).
+    for (label, thr) in [("non-private", 1400.0), ("private", 500.0)] {
+        let curve = sim(thr).curve(&gpus);
+        println!("-- {label} --");
+        for p in &curve {
+            println!(
+                "  {:>3} GPUs: {:>9.0} ex/s ({:>5.1}% of ideal)",
+                p.gpus,
+                p.throughput,
+                100.0 * p.efficiency
+            );
+        }
+        let pts: Vec<(f64, f64)> = curve
+            .iter()
+            .filter(|p| p.gpus > 1)
+            .map(|p| (p.gpus as f64, p.throughput / curve[0].throughput))
+            .collect();
+        let frac = fit_parallel_fraction(&pts);
+        println!(
+            "  Amdahl p = {:.3}% -> predicted speedup@80 = {:.1}x",
+            100.0 * frac,
+            amdahl_speedup(frac, 80.0)
+        );
+    }
+    println!("(paper: private 69.2% vs non-private 53.3% of ideal at 80 GPUs;");
+    println!(" Amdahl 99.5% vs 98.9%)");
+
+    let s = bench("simulate/80-gpu-curve", 10, 200, || {
+        std::hint::black_box(sim(500.0).curve(&gpus));
+    });
+    println!("{s}");
+}

@@ -1,0 +1,60 @@
+//! Bench: throughput per clipping method x model x physical batch —
+//! regenerates the data behind paper Figures 1, 2, 4 and 6.
+//!
+//! `cargo bench --bench bench_throughput`
+
+use dp_shortcuts::coordinator::config::TrainConfig;
+use dp_shortcuts::coordinator::trainer::Trainer;
+use dp_shortcuts::metrics::summary_with_ci;
+use dp_shortcuts::runtime::Runtime;
+use dp_shortcuts::util::bench::stats_from;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::load("artifacts")?;
+    println!("== bench_throughput (Figs 1/2/4/6) ==");
+    let names: Vec<String> = rt.manifest().models.keys().cloned().collect();
+    for model in &names {
+        let meta = rt.manifest().model(model)?.clone();
+        // Baselines first: non-private throughput per batch size.
+        let mut baseline: std::collections::BTreeMap<usize, f64> = Default::default();
+        for b in meta.accum_batches("nonprivate", "f32") {
+            let cfg = TrainConfig {
+                model: model.clone(),
+                variant: "nonprivate".into(),
+                physical_batch: b,
+                ..Default::default()
+            };
+            let t = Trainer::new(&rt, cfg)?;
+            let samples = t.bench_accum("nonprivate", b, 8)?;
+            baseline.insert(b, summary_with_ci(&samples, 0).median);
+        }
+        for variant in meta.variants() {
+            if variant == "naive" {
+                continue;
+            }
+            for b in meta.accum_batches(&variant, "f32") {
+                let cfg = TrainConfig {
+                    model: model.clone(),
+                    variant: variant.clone(),
+                    physical_batch: b,
+                    ..Default::default()
+                };
+                let t = Trainer::new(&rt, cfg)?;
+                let samples = t.bench_accum(&variant, b, 8)?;
+                let per_iter: Vec<f64> = samples.iter().map(|s| b as f64 / s).collect();
+                let stats = stats_from(&format!("{model}/{variant}/B{b}"), &per_iter);
+                let ci = summary_with_ci(&samples, 0);
+                let rel = baseline.get(&b).map(|base| ci.median / base).unwrap_or(f64::NAN);
+                println!(
+                    "{stats}  -> {:>9.1} ex/s [{:>8.1},{:>8.1}] rel={rel:.2}",
+                    ci.median, ci.ci_low, ci.ci_high
+                );
+            }
+        }
+    }
+    Ok(())
+}

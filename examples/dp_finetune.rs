@@ -1,0 +1,73 @@
+//! Fine-tuning scenario (the paper's workload): full-parameter DP
+//! fine-tuning with paper hyperparameters, comparing every clipping
+//! method available for the model — the Figure 1/4 experience as a
+//! program.
+//!
+//! ```bash
+//! cargo run --release --example dp_finetune -- [model]
+//! ```
+
+use dp_shortcuts::coordinator::config::TrainConfig;
+use dp_shortcuts::coordinator::trainer::Trainer;
+use dp_shortcuts::metrics::summary_with_ci;
+use dp_shortcuts::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "vit-micro".into());
+    let rt = Runtime::load("artifacts")?;
+    let meta = rt.manifest().model(&model)?.clone();
+
+    println!("== DP fine-tuning study: {model} ({} params) ==", meta.n_params);
+    println!(
+        "{:<12} {:>8} {:>12} {:>10} {:>10} {:>8}",
+        "variant", "B", "ex/s (CI)", "rel", "eps", "acc"
+    );
+
+    // Non-private first so the relative column is anchored to it.
+    let mut variants = meta.variants();
+    variants.sort_by_key(|v| (v != "nonprivate", v.clone()));
+    let batch = *meta
+        .accum_batches("nonprivate", "f32")
+        .last()
+        .expect("nonprivate artifacts");
+
+    let mut base: Option<f64> = None;
+    for variant in &variants {
+        if variant == "naive" {
+            continue; // same graph as masked; its story is recompilation (Fig A.2)
+        }
+        if !meta.accum_batches(variant, "f32").contains(&batch) {
+            continue;
+        }
+        let cfg = TrainConfig {
+            model: model.clone(),
+            variant: variant.clone(),
+            dataset_size: 512,
+            sampling_rate: 0.5, // the paper's q
+            physical_batch: batch,
+            steps: 4, // the paper's benchmark length
+            eval_examples: 64,
+            ..Default::default()
+        };
+        let trainer = Trainer::new(&rt, cfg)?;
+        // Steady-state throughput with CIs (Fig 6 methodology)...
+        let samples = trainer.bench_accum(variant, batch, 6)?;
+        let s = summary_with_ci(&samples, 0);
+        // ...and a real training run for the privacy/accuracy columns.
+        let rep = trainer.run()?;
+        let baseline = *base.get_or_insert(s.median);
+        println!(
+            "{:<12} {:>8} {:>7.1} ±{:>4.0} {:>10.2} {:>10.3} {:>8.3}",
+            variant,
+            batch,
+            s.median,
+            (s.ci_high - s.ci_low) / 2.0,
+            s.median / baseline,
+            rep.epsilon_spent,
+            rep.eval_accuracy.unwrap_or(f64::NAN),
+        );
+    }
+    println!("\n(paper Fig 1: ghost/BK recover about half of the DP slowdown;");
+    println!(" per-example (masked graph) costs x2.6-3.2 for ViTs)");
+    Ok(())
+}

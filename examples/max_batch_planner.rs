@@ -1,0 +1,44 @@
+//! Memory planner (paper Figure 3 / Table 3): given a VRAM budget, what
+//! is the maximum physical batch size per model and clipping method —
+//! and which models cannot fit even one example under per-example
+//! clipping (the regime where ghost clipping is mandatory).
+//!
+//! ```bash
+//! cargo run --release --example max_batch_planner -- [budget-gb]
+//! ```
+
+use dp_shortcuts::clipping::ClippingMethod;
+use dp_shortcuts::memory::MemModel;
+use dp_shortcuts::models::paper_ladder;
+use dp_shortcuts::report::print_max_batch_table;
+
+fn main() {
+    let budget_gb: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40.0);
+    print_max_batch_table(budget_gb * 1e9);
+
+    // Planner mode: the largest model trainable at all, per method.
+    println!("\n== largest trainable model at {budget_gb} GB (>= 1 example) ==");
+    let mem = MemModel::default();
+    for method in [
+        ClippingMethod::NonPrivate,
+        ClippingMethod::PerExample,
+        ClippingMethod::Ghost,
+        ClippingMethod::BkGhost,
+    ] {
+        let mut best = "(none)".to_string();
+        for arch in paper_ladder() {
+            if !method.supports(arch.family) {
+                continue;
+            }
+            if mem.max_physical_batch(&arch, method, budget_gb * 1e9) >= 1 {
+                best = format!("{} ({:.0}M params)", arch.name, arch.params_m());
+            }
+        }
+        println!("  {:<26} {best}", method.label());
+    }
+    println!("\n(ghost-style methods keep the max batch near the non-private");
+    println!(" ceiling because they never materialize [B, P] per-example grads)");
+}

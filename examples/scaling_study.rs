@@ -1,0 +1,26 @@
+//! Multi-GPU scaling study (paper Section 7, Figures 7 / A.4 / A.5):
+//! measures real single-worker throughput of the private and non-private
+//! executables, then simulates data-parallel scaling over a 4-GPU-per-
+//! node cluster with hierarchical ring all-reduce.
+//!
+//! ```bash
+//! cargo run --release --example scaling_study -- [model] [gpus,...]
+//! ```
+
+use dp_shortcuts::report::print_scaling_study;
+use dp_shortcuts::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "vit-micro".into());
+    let gpus: Vec<usize> = std::env::args()
+        .nth(2)
+        .map(|s| s.split(',').map(|x| x.parse().expect("gpu count")).collect())
+        .unwrap_or_else(|| vec![1, 2, 4, 8, 16, 32, 64, 80]);
+    let rt = Runtime::load("artifacts")?;
+    print_scaling_study(&rt, &model, &gpus)?;
+    println!("\nInterpretation: the private step computes ~Nx longer per example,");
+    println!("so the fixed-size gradient all-reduce is a smaller fraction of each");
+    println!("step and the inter-node fabric saturates later — the paper's");
+    println!("'DP-SGD scales better than SGD' result.");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time-only Python package: JAX model (L2) + Pallas kernels (L1).
+
+Nothing in here is imported at runtime; `make artifacts` lowers everything
+to HLO text under artifacts/ and the Rust coordinator takes over.
+"""

@@ -1,0 +1,172 @@
+"""AOT entry point: lower every (model x variant x batch) step graph to
+HLO **text** under artifacts/, plus initial parameters and a manifest.
+
+Run via `make artifacts`:   cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the Rust `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONCE, here.  The Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import ModelBundle
+
+# Default artifact set (kept modest: each executable is PJRT-compiled by
+# the Rust side on a single CPU core).  Benches may request more via CLI.
+DEFAULT_PLAN = {
+    "vit-micro": {
+        "variants": ["nonprivate", "naive", "masked", "ghost", "bk"],
+        "batches": [2, 4, 8, 16, 32],
+        "bf16": {"variants": ["nonprivate", "masked"], "batches": [8, 16]},
+        "eval_batch": 32,
+    },
+    "vit-tiny": {
+        "variants": ["nonprivate", "masked", "ghost", "bk"],
+        "batches": [4, 8, 16],
+        "bf16": {"variants": ["nonprivate", "masked"], "batches": [8]},
+        "eval_batch": 16,
+    },
+    "rn-micro": {
+        "variants": ["nonprivate", "naive", "masked"],
+        "batches": [4, 8, 16],
+        "bf16": None,
+        "eval_batch": 16,
+    },
+}
+
+CLIP_NORM = 1.0  # baked into the accum graphs; matches rust config default
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe route)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_model(name: str, plan: dict, out_dir: Path, seed: int) -> dict:
+    """Lower one ladder rung per its plan; returns its manifest entry."""
+    t0 = time.time()
+    entry_execs = []
+
+    def emit(fname: str, lowered, **meta):
+        text = to_hlo_text(lowered)
+        (out_dir / fname).write_text(text)
+        entry_execs.append({"path": fname, **meta})
+        print(f"  wrote {fname} ({len(text)/1e3:.0f} kB)")
+
+    variants = plan["variants"]
+    dtypes = [("f32", jnp.float32)]
+    cfg0 = None
+    for dtype_name, dtype in dtypes + (
+        [("bf16", jnp.bfloat16)] if plan.get("bf16") else []
+    ):
+        mb = ModelBundle(name, seed=seed, dtype=dtype)
+        cfg0 = mb.cfg
+        p = mb.n_params
+        img = (mb.cfg.image, mb.cfg.image, mb.cfg.channels)
+
+        if dtype_name == "f32":
+            # Initial params + apply + eval are emitted once (f32 master).
+            np.asarray(mb.params_flat, dtype=np.float32).tofile(
+                out_dir / f"{name}_init.bin"
+            )
+            lowered = jax.jit(mb.apply_fn).lower(
+                spec((p,)), spec((p,)),
+                spec((1,), jnp.int32), spec((1,)), spec((1,)), spec((1,)),
+            )
+            emit(f"{name}_apply.hlo.txt", lowered, kind="apply")
+            eb = plan["eval_batch"]
+            lowered = jax.jit(mb.eval_fn).lower(
+                spec((p,)), spec((eb,) + img), spec((eb,), jnp.int32)
+            )
+            emit(f"{name}_eval_B{eb}.hlo.txt", lowered, kind="eval", batch=eb)
+            todo_variants, todo_batches = variants, plan["batches"]
+        else:
+            todo_variants = plan["bf16"]["variants"]
+            todo_batches = plan["bf16"]["batches"]
+
+        for variant in todo_variants:
+            accum = mb.make_accum(variant, CLIP_NORM)
+            for b in todo_batches:
+                lowered = jax.jit(accum).lower(
+                    spec((p,)), spec((p,)),
+                    spec((b,) + img), spec((b,), jnp.int32), spec((b,)),
+                )
+                sfx = "" if dtype_name == "f32" else f"_{dtype_name}"
+                emit(
+                    f"{name}_{variant}_B{b}{sfx}_accum.hlo.txt",
+                    lowered,
+                    kind="accum",
+                    variant=variant,
+                    batch=b,
+                    dtype=dtype_name,
+                )
+
+    mb = ModelBundle(name, seed=seed)
+    entry = {
+        "family": mb.family,
+        "n_params": mb.n_params,
+        "image": cfg0.image,
+        "channels": cfg0.channels,
+        "num_classes": cfg0.num_classes,
+        "clip_norm": CLIP_NORM,
+        "flops_fwd_per_example": cfg0.flops_per_example(),
+        "init_params": f"{name}_init.bin",
+        "executables": entry_execs,
+    }
+    print(f"  {name}: {len(entry_execs)} executables in {time.time()-t0:.1f}s")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=list(DEFAULT_PLAN))
+    ap.add_argument("--batches", nargs="*", type=int, default=None,
+                    help="override batch list for every model/variant")
+    ap.add_argument("--variants", nargs="*", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {"version": 1, "seed": args.seed, "models": {}}
+    for name in args.models:
+        plan = dict(DEFAULT_PLAN.get(
+            name,
+            {"variants": ["nonprivate", "masked"], "batches": [8],
+             "bf16": None, "eval_batch": 8},
+        ))
+        if args.batches:
+            plan["batches"] = args.batches
+        if args.variants:
+            plan["variants"] = args.variants
+        print(f"lowering {name}: {plan}")
+        manifest["models"][name] = lower_model(name, plan, out_dir, args.seed)
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"manifest.json written: {len(manifest['models'])} models")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels for DP-SGD hot spots, with pure-jnp oracles in ref.
+
+All kernels are lowered with interpret=True so the AOT HLO runs on the CPU
+PJRT client (Mosaic custom-calls are TPU-only); the BlockSpec schedules are
+written for TPU VMEM/MXU regardless (DESIGN.md §Hardware-Adaptation).
+"""
+
+from . import ref  # noqa: F401
+from .clip_accum import clip_accum  # noqa: F401
+from .ghost_norm import ghost_sq_norm  # noqa: F401
+from .grad_norm import per_example_sq_norms  # noqa: F401
+from .noisy_step import noisy_step  # noqa: F401

@@ -1,0 +1,87 @@
+"""Pallas kernel: per-example squared gradient norms.
+
+Input: flattened per-example gradients g[B, P].  Output: sq[B].
+
+TPU-shaped schedule (see DESIGN.md §Hardware-Adaptation): the reduction is
+bandwidth-bound, so we tile the parameter axis into VMEM-sized blocks of
+PTILE floats and run a 1-D grid over those tiles.  Every grid step loads a
+(B, PTILE) block, squares and row-reduces it on the VPU, and accumulates
+into the single (B,) output block (the output BlockSpec maps every grid
+step to block 0, which Pallas keeps resident in VMEM across steps — the
+TPU analogue of a blockwise reduction a GPU kernel would do with a
+threadblock-level tree reduction).
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, and interpret mode lowers the same schedule to plain HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Parameter-axis tile selection. Perf iteration log (EXPERIMENTS.md
+# §Perf-L1): a fixed 2048-float tile made the grid 59-400 steps long and
+# interpret-mode per-step overhead dominated (165 ms/step on vit-micro
+# B16, x22 over non-private). Sizing the tile to the VMEM budget
+# instead — the largest block such that (B+2) rows of PTILE f32 fit in
+# ~12 MiB of a TPU core's ~16 MiB VMEM — cut it to ~10 ms (x17). The
+# same rule is what a production Mosaic kernel would use.
+VMEM_BUDGET_FLOATS = 12 * 1024 * 1024 // 4
+MAX_PTILE = 131_072
+
+
+def choose_ptile(batch: int, p: int) -> int:
+    """Largest parameter tile whose (batch+2) rows fit the VMEM budget."""
+    by_vmem = VMEM_BUDGET_FLOATS // max(batch + 2, 1)
+    tile = min(MAX_PTILE, by_vmem, max(p, 1))
+    # round down to a lane-friendly multiple of 1024 (but never below)
+    if tile >= 1024:
+        tile -= tile % 1024
+    return max(tile, 128)
+
+
+def _sq_norm_kernel(g_ref, o_ref):
+    """One grid step: accumulate row-wise squared sums of a (B, PTILE) block."""
+    block = g_ref[...].astype(jnp.float32)
+    partial = jnp.sum(block * block, axis=1)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def per_example_sq_norms(g: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """Per-example squared L2 norms of g[B, P] via the tiled Pallas reduction."""
+    bsz, p = g.shape
+    ptile = choose_ptile(bsz, p)
+    if ptile >= p:
+        # Single-block fast path: no padding, one grid step.
+        return pl.pallas_call(
+            _sq_norm_kernel,
+            grid=(1,),
+            in_specs=[pl.BlockSpec((bsz, p), lambda i: (0, 0))],
+            out_specs=pl.BlockSpec((bsz,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((bsz,), jnp.float32),
+            interpret=interpret,
+        )(g)
+    padded = pl.cdiv(p, ptile) * ptile
+    if padded != p:
+        # Zero-pad the parameter axis so every block is full; zeros do not
+        # change the squared-norm reduction.
+        g = jnp.pad(g, ((0, 0), (0, padded - p)))
+    grid = (padded // ptile,)
+    return pl.pallas_call(
+        _sq_norm_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bsz, ptile), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((bsz,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((bsz,), jnp.float32),
+        interpret=interpret,
+    )(g)

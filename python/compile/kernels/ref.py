@@ -1,0 +1,103 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: every Pallas kernel in this
+package must agree with the corresponding function here to numerical
+tolerance (see python/tests/test_kernels.py, which sweeps shapes/dtypes
+with hypothesis).
+
+All functions implement pieces of Algorithm 1 / Algorithm 2 of the paper
+(virtual-batching DP-SGD with Poisson subsampling and masking):
+
+  - per-example squared gradient norms           (clip denominator)
+  - clip factors  c_i = mask_i * min(1, C/||g_i||)
+  - masked clip-and-accumulate                    (inner loop, Alg. 2)
+  - ghost-norm  ||a_i^T b_i||_F^2 without materializing a_i^T b_i
+  - noisy SGD step                                (Add noise + Step lines)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def per_example_sq_norms(g: jnp.ndarray) -> jnp.ndarray:
+    """Squared L2 norm per example of flattened per-example grads g[B, P]."""
+    return jnp.sum(jnp.square(g.astype(jnp.float32)), axis=1)
+
+
+def clip_factors(sq_norms: jnp.ndarray, mask: jnp.ndarray, clip: float) -> jnp.ndarray:
+    """Per-example scale  c_i = mask_i * min(1, C / ||g_i||).
+
+    This is the `Clip gradient and mask` line of Algorithm 2. A tiny eps
+    guards the zero-gradient corner (the factor is then 1, not inf).
+    """
+    norms = jnp.sqrt(jnp.maximum(sq_norms, 0.0))
+    factor = jnp.minimum(1.0, clip / jnp.maximum(norms, 1e-12))
+    return factor * mask
+
+
+def clip_accum(
+    acc: jnp.ndarray,
+    g: jnp.ndarray,
+    mask: jnp.ndarray,
+    clip: float,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Masked clip-and-accumulate (the physical-batch inner loop of Alg. 2).
+
+    acc[P]   running sum of clipped grads (theta_acc)
+    g[B, P]  per-example grads, flattened
+    mask[B]  Alg. 2 masks (1 for sampled examples, 0 for padding)
+    Returns (acc', sq_norms[B]).
+    """
+    sq = per_example_sq_norms(g)
+    c = clip_factors(sq, mask, clip)
+    acc_out = acc + jnp.einsum("b,bp->p", c, g.astype(jnp.float32))
+    return acc_out, sq
+
+
+def ghost_sq_norm(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Ghost-clipping squared weight-grad norms for a linear layer.
+
+    For y = a @ W (a: [B, T, d_in], output-grad b: [B, T, d_out]) the
+    per-example weight gradient is G_i = a_i^T b_i and
+
+        ||G_i||_F^2 = sum_{t,t'} (a_i a_i^T)_{t,t'} (b_i b_i^T)_{t,t'}
+
+    computed in O(T^2 (d_in + d_out)) instead of O(T d_in d_out)
+    (Li et al. 2022; the paper's Section 2.2).
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    aat = jnp.einsum("btd,bsd->bts", a, a)
+    bbt = jnp.einsum("btd,bsd->bts", b, b)
+    return jnp.sum(aat * bbt, axis=(1, 2))
+
+
+def ghost_sq_norm_direct(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Reference-of-the-reference: materialize G_i = a_i^T b_i and norm it."""
+    g = jnp.einsum("btd,bte->bde", a.astype(jnp.float32), b.astype(jnp.float32))
+    return jnp.sum(jnp.square(g), axis=(1, 2))
+
+
+def bias_sq_norm(b: jnp.ndarray) -> jnp.ndarray:
+    """Per-example squared norm of a bias gradient: ||sum_t b_i[t]||^2."""
+    s = jnp.sum(b.astype(jnp.float32), axis=1)
+    return jnp.sum(jnp.square(s), axis=-1)
+
+
+def noisy_step(
+    params: jnp.ndarray,
+    acc: jnp.ndarray,
+    noise: jnp.ndarray,
+    denom: jnp.ndarray,
+    lr: jnp.ndarray,
+    noise_mult: jnp.ndarray,
+) -> jnp.ndarray:
+    """The `Add noise` + `Step` lines of Algorithm 1/2.
+
+    params' = params - lr * (acc + noise_mult * noise) / denom
+
+    noise is standard normal; noise_mult is sigma * C (0 => non-private
+    SGD step, so the same executable serves both baselines).
+    """
+    return params - lr * (acc + noise_mult * noise) / denom

@@ -1,0 +1,239 @@
+"""Layer-2: DP-SGD step variants over the ViT / BiT-ResNet models.
+
+Builds the five training-step graphs the paper benchmarks, all over a
+single **flat f32 parameter vector** so the Rust coordinator (L3) never
+needs to know the parameter pytree:
+
+  nonprivate  batched-gradient SGD accumulate (the PyTorch baseline)
+  naive       per-example grads -> clip -> sum (Opacus per-example; in
+              JAX this is the "naive" variant that recompiles per batch
+              size — we lower it at several sizes and Rust's compile
+              cache measures exactly that recompilation cost, Fig. A.2)
+  masked      Algorithm 2: fixed-shape physical batches + masks (the
+              paper's contribution; never recompiles)
+  ghost       Ghost clipping (Li et al. 2022): norms via the ghost trick,
+              second backward pass with reweighted loss   [ViT only]
+  bk          Book Keeping (Bu et al. 2023): one backward pass, clipped
+              sums rebuilt from cached activations/output-grads [ViT only]
+
+ABI (see DESIGN.md §3):
+  accum(params[P], acc[P], x[B,H,W,C], y[B]i32, mask[B]) ->
+        (acc'[P], loss_sum, sq_norms[B])
+  apply(params[P], acc[P], seed i32[1], denom f32[1], lr f32[1],
+        noise_mult f32[1]) -> params'[P]
+  eval (params[P], x, y) -> (loss_sum, ncorrect f32)
+
+The inner loop over physical batches calls `accum`; the once-per-logical-
+batch noise+step calls `apply` (noise_mult = sigma*C; 0 = non-private).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from . import resnet, vit
+from .kernels import clip_accum as k_clip_accum
+from .kernels import ghost_sq_norm as k_ghost_sq_norm
+from .kernels import noisy_step as k_noisy_step
+from .kernels import ref as kref
+
+GHOST_CAPABLE = ("vit",)  # paper: PV/FastDP ghost does not support BiT-ResNet
+
+
+def get_model(name: str):
+    """Resolve a ladder name to (cfg, single_fn, init_fn, family)."""
+    if name in vit.VIT_LADDER:
+        cfg = vit.VIT_LADDER[name]
+        return cfg, vit.vit_single, vit.init_vit, "vit"
+    if name in resnet.RESNET_LADDER:
+        cfg = resnet.RESNET_LADDER[name]
+        return cfg, resnet.resnet_single, resnet.init_resnet, "resnet"
+    raise KeyError(f"unknown model {name!r}")
+
+
+def ce_loss(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Cross-entropy of one example's logits against integer label y."""
+    return jax.nn.logsumexp(logits) - logits[y]
+
+
+def _flatten_batch(tree, bsz: int) -> jnp.ndarray:
+    """Per-example grad tree (leaves [B, ...]) -> [B, P].
+
+    Leaf order matches ravel_pytree(params): both use tree_flatten order.
+    """
+    return jnp.concatenate(
+        [l.reshape(bsz, -1) for l in jax.tree_util.tree_leaves(tree)], axis=1
+    )
+
+
+class ModelBundle:
+    """One ladder rung: params template, flat<->tree adapters, step builders."""
+
+    def __init__(self, name: str, seed: int = 0, dtype=jnp.float32):
+        cfg, single, init, family = get_model(name)
+        self.name, self.cfg, self.family, self.dtype = name, cfg, family, dtype
+        self._single = single
+        self.params = init(jax.random.PRNGKey(seed), cfg)
+        flat, unravel = ravel_pytree(self.params)
+        self.params_flat = flat
+        self.unravel = unravel
+        self.n_params = int(flat.shape[0])
+
+    # ---- forward/loss helpers -------------------------------------------
+
+    def _loss_single(self, params, xi, yi):
+        logits, _ = self._single(
+            self.cfg, params["lin"], params["oth"], xi, None, False, self.dtype
+        )
+        return ce_loss(logits, yi)
+
+    def _logits_batch(self, params, x):
+        fn = lambda xi: self._single(
+            self.cfg, params["lin"], params["oth"], xi, None, False, self.dtype
+        )[0]
+        return jax.vmap(fn)(x)
+
+    # ---- step variants ----------------------------------------------------
+
+    def make_accum(self, variant: str, clip: float) -> Callable:
+        """Build accum(params, acc, x, y, mask) for one clipping variant."""
+        if variant == "nonprivate":
+            return self._accum_nonprivate
+        if variant in ("naive", "masked"):
+            return functools.partial(self._accum_perexample, clip=clip)
+        if variant in ("ghost", "bk"):
+            if self.family not in GHOST_CAPABLE:
+                raise ValueError(
+                    f"{variant} clipping unsupported for {self.family} "
+                    "(weight-standardized convs; matches the paper)"
+                )
+            return functools.partial(
+                self._accum_ghost, clip=clip, bookkeeping=(variant == "bk")
+            )
+        raise KeyError(variant)
+
+    def _accum_nonprivate(self, params_flat, acc, x, y, mask):
+        """Batched-gradient SGD accumulate (the non-private baseline)."""
+
+        def weighted_loss(pf):
+            params = self.unravel(pf)
+            lv = jax.vmap(lambda xi, yi: self._loss_single(params, xi, yi))(x, y)
+            return jnp.sum(lv * mask), lv
+
+        (loss_sum, lv), g = jax.value_and_grad(weighted_loss, has_aux=True)(
+            params_flat
+        )
+        return acc + g, loss_sum, jnp.zeros_like(mask)
+
+    def _accum_perexample(self, params_flat, acc, x, y, mask, *, clip):
+        """Per-example grads -> Pallas fused clip-mask-accumulate (Alg. 2).
+
+        The `naive` and `masked` variants share this graph; they differ
+        operationally (naive is lowered per batch size, masked once)."""
+        params = self.unravel(params_flat)
+        bsz = x.shape[0]
+
+        def one(xi, yi):
+            return jax.value_and_grad(
+                lambda p: self._loss_single(p, xi, yi)
+            )(params)
+
+        lv, gtree = jax.vmap(one)(x, y)
+        g = _flatten_batch(gtree, bsz)  # [B, P]
+        acc_out, sq = k_clip_accum(acc, g, mask, clip)
+        return acc_out, jnp.sum(lv * mask), sq
+
+    def _accum_ghost(self, params_flat, acc, x, y, mask, *, clip, bookkeeping):
+        """Ghost clipping / Book Keeping for ViT linear layers.
+
+        Pass A (one backward): vjp w.r.t. per-layer output perturbations
+        gives every layer's per-example output-grads b_l; the `oth`
+        subset (LayerNorm/cls/pos — ghost-unsupported layers) is tiled
+        per example so the same vjp yields its per-example grads.
+        Norms come from the Pallas ghost-norm kernel; then either
+          ghost: second backward of the c_i-reweighted loss, or
+          bk:    clipped sums rebuilt via einsum from (a_l, b_l, c_i).
+        """
+        params = self.unravel(params_flat)
+        lin, oth = params["lin"], params["oth"]
+        bsz = x.shape[0]
+        pert0 = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (bsz,) + p.shape),
+            vit.zero_perturbs(self.cfg),
+        )
+        oth_t = jax.tree.map(lambda p: jnp.broadcast_to(p, (bsz,) + p.shape), oth)
+
+        def f(pert_t, oth_tiled):
+            def one(pt, ot, xi, yi):
+                logits, acts = self._single(
+                    self.cfg, lin, ot, xi, pt, True, self.dtype
+                )
+                return ce_loss(logits, yi), acts
+
+            lv, acts = jax.vmap(one)(pert_t, oth_tiled, x, y)
+            return jnp.sum(lv), (acts, lv)
+
+        _, vjp_fn, (acts, lv) = jax.vjp(f, pert0, oth_t, has_aux=True)
+        b_pert, g_oth = vjp_fn(jnp.ones(()))
+
+        # Per-example squared norms: ghost trick for linear weights,
+        # column-sum for biases, direct for the tiled `oth` grads.
+        sq = jnp.zeros((bsz,), jnp.float32)
+        for lname in self.cfg.linear_shapes():
+            a, b = acts[lname], b_pert[lname]
+            if a.ndim == 2:  # head: [B, d] -> [B, 1, d]
+                a, b = a[:, None, :], b[:, None, :]
+            sq = sq + k_ghost_sq_norm(a, b) + kref.bias_sq_norm(b)
+        for leaf in jax.tree_util.tree_leaves(g_oth):
+            sq = sq + jnp.sum(jnp.square(leaf.reshape(bsz, -1)), axis=1)
+
+        c = jax.lax.stop_gradient(kref.clip_factors(sq, mask, clip))
+
+        if bookkeeping:
+            # One-pass: rebuild clipped grad sums from cached (a, b, c).
+            glin = {}
+            for lname in self.cfg.linear_shapes():
+                a, b = acts[lname], b_pert[lname]
+                if a.ndim == 2:
+                    a, b = a[:, None, :], b[:, None, :]
+                glin[lname] = {
+                    "w": jnp.einsum("bti,bto,b->io", a, b, c),
+                    "b": jnp.einsum("bto,b->o", b, c),
+                }
+            goth = jax.tree.map(
+                lambda g: jnp.einsum("b...,b->...", g, c), g_oth
+            )
+            gflat, _ = ravel_pytree({"lin": glin, "oth": goth})
+        else:
+            # Ghost: second backward pass with the reweighted loss.
+            def reweighted(pf):
+                p = self.unravel(pf)
+                lvv = jax.vmap(lambda xi, yi: self._loss_single(p, xi, yi))(x, y)
+                return jnp.sum(lvv * c)
+
+            gflat = jax.grad(reweighted)(params_flat)
+
+        return acc + gflat, jnp.sum(lv * mask), sq
+
+    # ---- apply & eval -------------------------------------------------------
+
+    def apply_fn(self, params_flat, acc, seed, denom, lr, noise_mult):
+        """Noise + SGD step (Pallas fused); one executable per model."""
+        key = jax.random.PRNGKey(seed[0])
+        noise = jax.random.normal(key, params_flat.shape, jnp.float32)
+        return k_noisy_step(
+            params_flat, acc, noise, denom[0], lr[0], noise_mult[0]
+        )
+
+    def eval_fn(self, params_flat, x, y):
+        """(loss_sum, ncorrect) over an eval batch."""
+        params = self.unravel(params_flat)
+        logits = self._logits_batch(params, x)
+        lv = jax.vmap(ce_loss)(logits, y)
+        ncorrect = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return jnp.sum(lv), ncorrect

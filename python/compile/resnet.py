@@ -1,0 +1,185 @@
+"""Layer-2: BiT-style ResNet (Kolesnikov et al. 2020) in pure JAX.
+
+Big-Transfer ResNets replace BatchNorm with **GroupNorm** and use
+**weight-standardized convolutions** — the exact combination the paper
+notes is *incompatible* with PrivateVision's and FastDP's ghost clipping
+("The non-Opacus implementations do not support the BiT ResNet due to
+their custom weight standardization layer").  We reproduce that boundary:
+the ResNet supports the nonprivate / naive per-example / masked (Alg. 2)
+variants, while ghost/BK variants are ViT-only, as in the paper's Section
+5.1.  The mix-ghost per-layer decision rule is still *modeled* for ResNets
+at paper scale in rust/src/clipping.rs (it needs only layer dims).
+
+Like vit.py, the forward is written per example and vmapped; convs on a
+[1, H, W, C] tensor batch cleanly under vmap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    """BiT-ResNet ladder rung: `depths` bottleneck blocks per stage,
+    `width` base channels (BiT width-factor scales this)."""
+
+    name: str
+    depths: tuple[int, ...]
+    width: int
+    image: int = 32
+    channels: int = 3
+    num_classes: int = 100
+    groups: int = 8
+
+    def stage_channels(self) -> list[int]:
+        # Bottleneck expansion 4, channel doubling per stage (BiT layout).
+        return [self.width * (2**i) * 4 for i in range(len(self.depths))]
+
+    def flops_per_example(self) -> float:
+        """Rough forward FLOPs (convs only), for manifest/roofline use."""
+        h = self.image
+        fl = 2.0 * h * h * 9 * self.channels * self.width
+        cin = self.width
+        for i, (d, cout) in enumerate(zip(self.depths, self.stage_channels())):
+            if i > 0:
+                h //= 2
+            mid = cout // 4
+            for _ in range(d):
+                fl += 2.0 * h * h * (cin * mid + 9 * mid * mid + mid * cout)
+                cin = cout
+        fl += 2.0 * cin * self.num_classes
+        return fl
+
+
+# CPU-scaled ladder mirroring the paper's BiT R50x1 -> R152x4 progression
+# (depth grows down the ladder, width grows via the xN factor).
+RESNET_LADDER: dict[str, ResNetConfig] = {
+    "rn-micro": ResNetConfig("rn-micro", depths=(1, 1), width=8),
+    "rn-small": ResNetConfig("rn-small", depths=(1, 1, 1), width=16),
+    "rn-base": ResNetConfig("rn-base", depths=(2, 2, 2), width=16),
+    "rn-wide": ResNetConfig("rn-wide", depths=(1, 1, 1), width=32),
+}
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) / jnp.sqrt(fan_in)
+
+
+def init_resnet(key: jax.Array, cfg: ResNetConfig) -> dict[str, Any]:
+    """Parameter tree {lin: {head}, oth: {convs, groupnorms}}.
+
+    Convs live in `oth` (per-example-grad territory — ghost clipping does
+    not apply to weight-standardized convs, matching the paper); only the
+    final dense head is in `lin`.
+    """
+    params_oth: dict[str, jnp.ndarray] = {}
+    keys = iter(jax.random.split(key, 4096))
+
+    def gn(name, c):
+        params_oth[f"{name}.g"] = jnp.ones((c,), jnp.float32)
+        params_oth[f"{name}.b"] = jnp.zeros((c,), jnp.float32)
+
+    params_oth["root.w"] = _conv_init(next(keys), 3, 3, cfg.channels, cfg.width)
+    cin = cfg.width
+    for s, (d, cout) in enumerate(zip(cfg.depths, cfg.stage_channels())):
+        mid = cout // 4
+        for b in range(d):
+            p = f"s{s}b{b}"
+            gn(f"{p}.gn1", cin)
+            params_oth[f"{p}.c1.w"] = _conv_init(next(keys), 1, 1, cin, mid)
+            gn(f"{p}.gn2", mid)
+            params_oth[f"{p}.c2.w"] = _conv_init(next(keys), 3, 3, mid, mid)
+            gn(f"{p}.gn3", mid)
+            params_oth[f"{p}.c3.w"] = _conv_init(next(keys), 1, 1, mid, cout)
+            if b == 0:
+                params_oth[f"{p}.proj.w"] = _conv_init(next(keys), 1, 1, cin, cout)
+            cin = cout
+    gn("gnf", cin)
+    head_key = next(keys)
+    lin = {
+        "head": {
+            "w": jax.random.normal(head_key, (cin, cfg.num_classes), jnp.float32)
+            / jnp.sqrt(cin),
+            "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+        }
+    }
+    return {"lin": lin, "oth": params_oth}
+
+
+def _ws(w: jnp.ndarray) -> jnp.ndarray:
+    """Weight standardization (BiT): zero-mean unit-var per output filter."""
+    mu = jnp.mean(w, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(w, axis=(0, 1, 2), keepdims=True)
+    return (w - mu) * jax.lax.rsqrt(var + 1e-10)
+
+
+def _conv(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """NHWC conv, SAME padding, weight standardized."""
+    return jax.lax.conv_general_dilated(
+        x,
+        _ws(w),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _groupnorm(oth, name, x, groups):
+    c = x.shape[-1]
+    g = min(groups, c)
+    shp = x.shape[:-1] + (g, c // g)
+    xg = x.reshape(shp)
+    mu = jnp.mean(xg, axis=(0, 1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(0, 1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + 1e-5)
+    return xg.reshape(x.shape) * oth[f"{name}.g"] + oth[f"{name}.b"]
+
+
+def resnet_single(
+    cfg: ResNetConfig,
+    lin: dict,
+    oth: dict,
+    img: jnp.ndarray,
+    perturbs: dict | None = None,
+    collect: bool = False,
+    dtype: jnp.dtype = jnp.float32,
+):
+    """Forward one example: [H, W, C] -> logits [num_classes].
+
+    perturbs/collect support only the head linear (ghost clipping is not
+    applicable to weight-standardized convs — see module docstring).
+    """
+    acts: dict[str, jnp.ndarray] | None = {} if collect else None
+    x = img[None].astype(dtype)  # [1, H, W, C]
+    x = _conv(x, oth["root.w"].astype(dtype))
+    cin = cfg.width
+    for s, (d, cout) in enumerate(zip(cfg.depths, cfg.stage_channels())):
+        for b in range(d):
+            p = f"s{s}b{b}"
+            stride = 2 if (s > 0 and b == 0) else 1
+            y = jax.nn.relu(_groupnorm(oth, f"{p}.gn1", x, cfg.groups))
+            sc = x
+            if b == 0:
+                sc = _conv(y, oth[f"{p}.proj.w"].astype(dtype), stride)
+            y = _conv(y, oth[f"{p}.c1.w"].astype(dtype))
+            y = jax.nn.relu(_groupnorm(oth, f"{p}.gn2", y, cfg.groups))
+            y = _conv(y, oth[f"{p}.c2.w"].astype(dtype), stride)
+            y = jax.nn.relu(_groupnorm(oth, f"{p}.gn3", y, cfg.groups))
+            y = _conv(y, oth[f"{p}.c3.w"].astype(dtype))
+            x = sc + y
+            cin = cout
+    x = jax.nn.relu(_groupnorm(oth, "gnf", x, cfg.groups))
+    pooled = jnp.mean(x, axis=(1, 2))[0]  # [C]
+    w = lin["head"]["w"].astype(dtype)
+    logits = pooled @ w + lin["head"]["b"].astype(dtype)
+    if perturbs is not None:
+        logits = logits + perturbs["head"].astype(dtype)
+    if acts is not None:
+        acts["head"] = pooled
+    return logits.astype(jnp.float32), (acts if collect else {})

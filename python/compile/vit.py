@@ -1,0 +1,204 @@
+"""Layer-2: Vision Transformer (ViT) in pure JAX, written for DP-SGD.
+
+Design decisions driven by the paper:
+
+* The forward pass is written **per example** (`vit_single`) and batched
+  with `jax.vmap`.  Per-example structure is what DP-SGD fundamentally
+  needs (per-example gradients / norms); XLA re-batches the matmuls, so
+  the non-private baseline loses nothing.
+
+* Parameters are split into two sub-trees:
+    - `lin`: weight/bias of every linear layer — these support **ghost
+      clipping** (norms from activations x output-grads, no per-example
+      gradient materialization);
+    - `oth`: LayerNorm scales/biases, cls token, position embeddings —
+      the "unsupported layer" set that real ghost implementations
+      (PrivateVision, FastDP) fall back to per-example gradients for.
+
+* Every linear layer optionally adds a zero **perturbation** input with
+  the layer's output shape.  The vector-Jacobian product with respect to
+  that perturbation is exactly the layer's per-example output gradient
+  b_i — the quantity ghost clipping and Book Keeping reuse (Bu et al.
+  2023).  This is the JAX analogue of Opacus' backward hooks.
+
+Model dims follow the paper's ViT ladder (Table 1) scaled to CPU-feasible
+sizes; the paper-scale dims live in rust/src/models.rs for the analytic
+memory/FLOP studies (Figures 3, 5; Table 3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    """Architecture hyperparameters for one ladder rung."""
+
+    name: str
+    depth: int
+    dim: int
+    heads: int
+    mlp_ratio: int = 4
+    patch: int = 4
+    image: int = 32
+    channels: int = 3
+    num_classes: int = 100
+
+    @property
+    def tokens(self) -> int:
+        """Sequence length including the cls token."""
+        return (self.image // self.patch) ** 2 + 1
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * self.channels
+
+    def linear_shapes(self) -> dict[str, tuple[int, int]]:
+        """(d_in, d_out) of every linear layer, keyed by layer name."""
+        d, m = self.dim, self.mlp_ratio * self.dim
+        shapes = {"embed": (self.patch_dim, d)}
+        for i in range(self.depth):
+            shapes[f"b{i}.qkv"] = (d, 3 * d)
+            shapes[f"b{i}.proj"] = (d, d)
+            shapes[f"b{i}.fc1"] = (d, m)
+            shapes[f"b{i}.fc2"] = (m, d)
+        shapes["head"] = (d, self.num_classes)
+        return shapes
+
+    def flops_per_example(self) -> float:
+        """Forward FLOPs per example (2*MACs), matmuls + attention only."""
+        t = self.tokens
+        fl = 0.0
+        for name, (d_in, d_out) in self.linear_shapes().items():
+            seq = 1 if name == "head" else t  # head acts on the cls token only
+            fl += 2.0 * seq * d_in * d_out
+        # attention: QK^T and AV, per head
+        fl += self.depth * 2 * (2.0 * t * t * self.dim)
+        return fl
+
+
+# The paper's ViT ladder (Table 1), scaled for a 1-core CPU testbed.
+VIT_LADDER: dict[str, ViTConfig] = {
+    "vit-micro": ViTConfig("vit-micro", depth=2, dim=64, heads=2, patch=8),
+    "vit-tiny": ViTConfig("vit-tiny", depth=4, dim=128, heads=4, patch=4),
+    "vit-small": ViTConfig("vit-small", depth=6, dim=192, heads=6, patch=4),
+    "vit-base": ViTConfig("vit-base", depth=8, dim=256, heads=8, patch=4),
+}
+
+
+def _trunc_normal(key, shape, std=0.02):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+
+
+def init_vit(key: jax.Array, cfg: ViTConfig) -> dict[str, Any]:
+    """Initialize {lin: {...}, oth: {...}} parameter tree."""
+    lin: dict[str, dict[str, jnp.ndarray]] = {}
+    shapes = cfg.linear_shapes()
+    keys = jax.random.split(key, len(shapes) + 2)
+    for k, (name, (d_in, d_out)) in zip(keys[:-2], sorted(shapes.items())):
+        lin[name] = {
+            "w": _trunc_normal(k, (d_in, d_out), std=1.0 / math.sqrt(d_in)),
+            "b": jnp.zeros((d_out,), jnp.float32),
+        }
+    oth: dict[str, jnp.ndarray] = {
+        "cls": _trunc_normal(keys[-2], (cfg.dim,)),
+        "pos": _trunc_normal(keys[-1], (cfg.tokens, cfg.dim)),
+    }
+    for i in range(cfg.depth):
+        for ln in (f"b{i}.ln1", f"b{i}.ln2"):
+            oth[f"{ln}.g"] = jnp.ones((cfg.dim,), jnp.float32)
+            oth[f"{ln}.b"] = jnp.zeros((cfg.dim,), jnp.float32)
+    oth["lnf.g"] = jnp.ones((cfg.dim,), jnp.float32)
+    oth["lnf.b"] = jnp.zeros((cfg.dim,), jnp.float32)
+    return {"lin": lin, "oth": oth}
+
+
+def zero_perturbs(cfg: ViTConfig) -> dict[str, jnp.ndarray]:
+    """Zero perturbation tree (single-example shapes: [T, d_out] / [nc])."""
+    t = cfg.tokens
+    pert = {}
+    for name, (_, d_out) in cfg.linear_shapes().items():
+        if name == "head":
+            pert[name] = jnp.zeros((d_out,), jnp.float32)
+        elif name == "embed":
+            pert[name] = jnp.zeros((t - 1, d_out), jnp.float32)
+        else:
+            pert[name] = jnp.zeros((t, d_out), jnp.float32)
+    return pert
+
+
+def _dense(lin, name, a, perturbs, acts, dtype):
+    """y = a @ W + b (+ perturbation); optionally record the input."""
+    w = lin[name]["w"].astype(dtype)
+    y = a.astype(dtype) @ w + lin[name]["b"].astype(dtype)
+    if perturbs is not None:
+        y = y + perturbs[name].astype(dtype)
+    if acts is not None:
+        acts[name] = a
+    return y
+
+
+def _layernorm(oth, name, x):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    xhat = (x - mu) * jax.lax.rsqrt(var + 1e-6)
+    return xhat * oth[f"{name}.g"] + oth[f"{name}.b"]
+
+
+def patchify(cfg: ViTConfig, img: jnp.ndarray) -> jnp.ndarray:
+    """[H, W, C] -> [T-1, patch*patch*C] raster-ordered patches."""
+    p, n = cfg.patch, cfg.image // cfg.patch
+    x = img.reshape(n, p, n, p, cfg.channels)
+    x = x.transpose(0, 2, 1, 3, 4)
+    return x.reshape(n * n, cfg.patch_dim)
+
+
+def vit_single(
+    cfg: ViTConfig,
+    lin: dict,
+    oth: dict,
+    img: jnp.ndarray,
+    perturbs: dict | None = None,
+    collect: bool = False,
+    dtype: jnp.dtype = jnp.float32,
+):
+    """Forward one example: [H, W, C] -> logits [num_classes].
+
+    Returns (logits, acts) where acts maps linear-layer name -> its input
+    activation (ghost clipping's `a_i`); acts is {} unless collect=True.
+    """
+    acts: dict[str, jnp.ndarray] | None = {} if collect else None
+    t, d, h = cfg.tokens, cfg.dim, cfg.heads
+    dh = d // h
+
+    x = patchify(cfg, img)
+    x = _dense(lin, "embed", x, perturbs, acts, dtype)  # [T-1, D]
+    x = jnp.concatenate([oth["cls"][None].astype(dtype), x], axis=0)
+    x = x + oth["pos"].astype(dtype)
+
+    for i in range(cfg.depth):
+        y = _layernorm(oth, f"b{i}.ln1", x)
+        qkv = _dense(lin, f"b{i}.qkv", y, perturbs, acts, dtype)  # [T, 3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(t, h, dh).transpose(1, 0, 2)
+        k = k.reshape(t, h, dh).transpose(1, 0, 2)
+        v = v.reshape(t, h, dh).transpose(1, 0, 2)
+        att = jnp.einsum("htd,hsd->hts", q, k) / math.sqrt(dh)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("hts,hsd->htd", att, v).transpose(1, 0, 2).reshape(t, d)
+        x = x + _dense(lin, f"b{i}.proj", o, perturbs, acts, dtype)
+
+        y = _layernorm(oth, f"b{i}.ln2", x)
+        y = _dense(lin, f"b{i}.fc1", y, perturbs, acts, dtype)
+        y = jax.nn.gelu(y)
+        x = x + _dense(lin, f"b{i}.fc2", y, perturbs, acts, dtype)
+
+    x = _layernorm(oth, "lnf", x)
+    logits = _dense(lin, "head", x[0], perturbs, acts, dtype)
+    return logits.astype(jnp.float32), (acts if collect else {})

@@ -1,0 +1,8 @@
+"""Shared fixtures: make `compile` importable and keep JAX on CPU."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

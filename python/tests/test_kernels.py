@@ -1,0 +1,173 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes (the CORE correctness signal for the
+kernels that end up inside the AOT-lowered step graphs).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    clip_accum,
+    ghost_sq_norm,
+    per_example_sq_norms,
+    noisy_step,
+    ref,
+)
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def rand(rng, shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------- grad_norm
+
+@given(
+    b=st.integers(1, 9),
+    p=st.integers(1, 5000),
+    dtype=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sq_norms_match_ref(b, p, dtype, seed):
+    rng = np.random.default_rng(seed)
+    g = rand(rng, (b, p), dtype)
+    got = per_example_sq_norms(g)
+    want = ref.per_example_sq_norms(g)
+    np.testing.assert_allclose(got, want, rtol=2e-3 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_sq_norms_zero_and_huge_rows():
+    g = jnp.zeros((3, 100), jnp.float32)
+    np.testing.assert_allclose(per_example_sq_norms(g), np.zeros(3))
+    g = jnp.full((2, 10), 1e3, jnp.float32)
+    np.testing.assert_allclose(per_example_sq_norms(g), np.full(2, 1e7), rtol=1e-6)
+
+
+# --------------------------------------------------------------- clip_accum
+
+@given(
+    b=st.integers(1, 8),
+    p=st.integers(1, 4097),
+    clip=st.floats(0.1, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_clip_accum_matches_ref(b, p, clip, seed):
+    rng = np.random.default_rng(seed)
+    g = rand(rng, (b, p))
+    acc = rand(rng, (p,))
+    mask = jnp.asarray(rng.integers(0, 2, size=b), jnp.float32)
+    got_acc, got_sq = clip_accum(acc, g, mask, clip)
+    want_acc, want_sq = ref.clip_accum(acc, g, mask, clip)
+    np.testing.assert_allclose(got_sq, want_sq, rtol=1e-4)
+    np.testing.assert_allclose(got_acc, want_acc, rtol=1e-4, atol=1e-5)
+
+
+def test_clip_accum_respects_clip_bound():
+    """Each example's contribution has norm <= C (the DP sensitivity)."""
+    rng = np.random.default_rng(0)
+    p, clip = 257, 0.5
+    for scale in [0.01, 1.0, 100.0]:
+        g = rand(rng, (1, p), scale=scale)
+        acc0 = jnp.zeros((p,))
+        acc, _ = clip_accum(acc0, g, jnp.ones(1), clip)
+        norm = float(jnp.linalg.norm(acc))
+        assert norm <= clip * 1.001, f"scale={scale}: {norm}"
+
+
+def test_clip_accum_mask_zeroes_contribution():
+    rng = np.random.default_rng(1)
+    g = rand(rng, (4, 100))
+    acc0 = jnp.zeros((100,))
+    acc_all, _ = clip_accum(acc0, g, jnp.asarray([1.0, 0.0, 0.0, 0.0]), 1.0)
+    acc_one, _ = clip_accum(acc0, g[:1], jnp.ones(1), 1.0)
+    np.testing.assert_allclose(acc_all, acc_one, rtol=1e-5, atol=1e-6)
+
+
+def test_clip_accum_small_grads_pass_through():
+    """Norms below C must not be scaled (factor = 1, not C/||g||)."""
+    rng = np.random.default_rng(2)
+    g = rand(rng, (2, 50), scale=1e-3)
+    acc0 = jnp.zeros((50,))
+    acc, _ = clip_accum(acc0, g, jnp.ones(2), 10.0)
+    np.testing.assert_allclose(acc, jnp.sum(g, 0), rtol=1e-5, atol=1e-7)
+
+
+# --------------------------------------------------------------- ghost_norm
+
+@given(
+    b=st.integers(1, 6),
+    t=st.integers(1, 17),
+    d_in=st.integers(1, 33),
+    d_out=st.integers(1, 29),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ghost_norm_matches_ref_and_direct(b, t, d_in, d_out, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, (b, t, d_in))
+    bb = rand(rng, (b, t, d_out))
+    got = ghost_sq_norm(a, bb)
+    np.testing.assert_allclose(got, ref.ghost_sq_norm(a, bb), rtol=1e-4)
+    # and against the materialized per-example grads
+    np.testing.assert_allclose(got, ref.ghost_sq_norm_direct(a, bb), rtol=1e-3)
+
+
+def test_ghost_norm_rank_one_identity():
+    """t=1: ||a^T b||_F^2 = ||a||^2 ||b||^2 exactly."""
+    rng = np.random.default_rng(3)
+    a = rand(rng, (5, 1, 7))
+    b = rand(rng, (5, 1, 11))
+    want = np.sum(np.asarray(a) ** 2, (1, 2)) * np.sum(np.asarray(b) ** 2, (1, 2))
+    np.testing.assert_allclose(ghost_sq_norm(a, b), want, rtol=1e-4)
+
+
+# --------------------------------------------------------------- noisy_step
+
+@given(
+    p=st.integers(1, 5000),
+    denom=st.floats(1.0, 1e5),
+    lr=st.floats(1e-5, 1.0),
+    nm=st.floats(0.0, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_noisy_step_matches_ref(p, denom, lr, nm, seed):
+    rng = np.random.default_rng(seed)
+    params = rand(rng, (p,))
+    acc = rand(rng, (p,))
+    noise = rand(rng, (p,))
+    got = noisy_step(params, acc, noise, denom, lr, nm)
+    want = ref.noisy_step(params, acc, noise, denom, lr, nm)
+    # f32 associativity differs between the fused kernel and the jnp
+    # reference (mul-by-reciprocal vs divide); allow a few ulps.
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_noisy_step_zero_noise_mult_is_sgd():
+    """noise_mult=0 turns the private step into plain SGD — the same
+    executable serves both baselines (DESIGN.md ABI)."""
+    rng = np.random.default_rng(4)
+    params = rand(rng, (100,))
+    acc = rand(rng, (100,))
+    noise = rand(rng, (100,), scale=100.0)  # must be fully ignored
+    got = noisy_step(params, acc, noise, 10.0, 0.5, 0.0)
+    want = params - 0.5 * acc / 10.0
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+
+def test_kernels_jit_and_grad_composable():
+    """Kernels must lower inside jit (the AOT path) without callbacks."""
+    @jax.jit
+    def f(g, acc, mask):
+        acc2, sq = clip_accum(acc, g, mask, 1.0)
+        return jnp.sum(acc2) + jnp.sum(sq)
+
+    rng = np.random.default_rng(5)
+    out = f(rand(rng, (3, 300)), rand(rng, (300,)), jnp.ones(3))
+    assert np.isfinite(float(out))

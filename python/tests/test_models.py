@@ -1,0 +1,231 @@
+"""L2 correctness: model shapes, gradient consistency across the five
+step variants, and the Algorithm-2 equivalences the paper's privacy
+argument rests on.
+
+Key theorems tested:
+
+* masked(batch, mask) == naive(subset)     — Algorithm 2 == Algorithm 1
+* ghost == bk == masked gradients + norms  — all clipping paths agree
+* per-example clipped contributions respect ||g_i|| <= C
+* bf16 variant approximates f32 (the TF32 substitute)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import ModelBundle
+from compile import vit, resnet
+
+B = 4
+C = 1.0
+
+
+def data(mb, b=B, seed=0):
+    rng = np.random.default_rng(seed)
+    cfg = mb.cfg
+    x = jnp.asarray(rng.normal(size=(b, cfg.image, cfg.image, cfg.channels)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, cfg.num_classes, size=(b,)), jnp.int32)
+    return x, y
+
+
+@pytest.fixture(scope="module")
+def vit_micro():
+    return ModelBundle("vit-micro")
+
+
+@pytest.fixture(scope="module")
+def rn_micro():
+    return ModelBundle("rn-micro")
+
+
+# ------------------------------------------------------------ shapes / init
+
+def test_vit_ladder_configs_monotone():
+    sizes = [ModelBundle(n).n_params for n in ["vit-micro", "vit-tiny"]]
+    assert sizes[0] < sizes[1]
+
+
+def test_vit_forward_shapes(vit_micro):
+    x, y = data(vit_micro)
+    params = vit_micro.params
+    logits, acts = vit.vit_single(
+        vit_micro.cfg, params["lin"], params["oth"], x[0], None, True
+    )
+    assert logits.shape == (vit_micro.cfg.num_classes,)
+    assert set(acts) == set(vit_micro.cfg.linear_shapes())
+
+
+def test_resnet_forward_shapes(rn_micro):
+    x, y = data(rn_micro)
+    params = rn_micro.params
+    logits, _ = resnet.resnet_single(rn_micro.cfg, params["lin"], params["oth"], x[0])
+    assert logits.shape == (rn_micro.cfg.num_classes,)
+
+
+def test_flat_param_roundtrip(vit_micro):
+    tree = vit_micro.unravel(vit_micro.params_flat)
+    flat2, _ = jax.flatten_util.ravel_pytree(tree)
+    np.testing.assert_array_equal(vit_micro.params_flat, flat2)
+
+
+# --------------------------------------------- Algorithm 2 == Algorithm 1
+
+def test_masked_equals_naive_on_subset(vit_micro):
+    """THE Algorithm-2 property: processing a padded full batch with
+    masks gives bit-for-bit (up to float assoc.) the same accumulated
+    clipped gradient as processing just the real examples."""
+    mb = vit_micro
+    x, y = data(mb, b=6, seed=1)
+    acc0 = jnp.zeros((mb.n_params,), jnp.float32)
+    accum = jax.jit(mb.make_accum("masked", C))
+    # full batch of 6 with last 2 masked out
+    mask = jnp.asarray([1, 1, 1, 1, 0, 0], jnp.float32)
+    acc_m, loss_m, _ = accum(mb.params_flat, acc0, x, y, mask)
+    # the "naive" path: just the 4 real examples
+    accum4 = jax.jit(mb.make_accum("naive", C))
+    acc_n, loss_n, _ = accum4(mb.params_flat, acc0, x[:4], y[:4], jnp.ones(4))
+    np.testing.assert_allclose(acc_m, acc_n, rtol=2e-4, atol=2e-6)
+    np.testing.assert_allclose(loss_m, loss_n, rtol=1e-5)
+
+
+def test_all_masked_batch_contributes_nothing(vit_micro):
+    mb = vit_micro
+    x, y = data(mb, seed=2)
+    acc0 = jnp.asarray(np.random.default_rng(0).normal(size=mb.n_params), jnp.float32)
+    accum = jax.jit(mb.make_accum("masked", C))
+    acc, loss, _ = accum(mb.params_flat, acc0, x, y, jnp.zeros(B))
+    np.testing.assert_allclose(acc, acc0, rtol=1e-6, atol=1e-6)
+    assert float(loss) == 0.0
+
+
+# ------------------------------------------ clipping-path equivalences
+
+def test_ghost_and_bk_match_perexample(vit_micro):
+    mb = vit_micro
+    x, y = data(mb, seed=3)
+    mask = jnp.asarray([1, 1, 0, 1], jnp.float32)
+    acc0 = jnp.zeros((mb.n_params,), jnp.float32)
+    outs = {}
+    for v in ["masked", "ghost", "bk"]:
+        acc, loss, sq = jax.jit(mb.make_accum(v, C))(mb.params_flat, acc0, x, y, mask)
+        outs[v] = (np.asarray(acc), float(loss), np.asarray(sq))
+    for v in ["ghost", "bk"]:
+        np.testing.assert_allclose(outs[v][2], outs["masked"][2], rtol=5e-3)
+        np.testing.assert_allclose(outs[v][0], outs["masked"][0], rtol=5e-3, atol=5e-5)
+        assert abs(outs[v][1] - outs["masked"][1]) < 1e-3
+
+
+def test_ghost_rejected_for_resnet(rn_micro):
+    """Paper Table A1: ghost/BK do not support weight-standardized convs."""
+    with pytest.raises(ValueError, match="unsupported"):
+        rn_micro.make_accum("ghost", C)
+    with pytest.raises(ValueError, match="unsupported"):
+        rn_micro.make_accum("bk", C)
+
+
+def test_clipped_contribution_bounded(vit_micro):
+    """Sensitivity: each example's accumulated contribution <= C."""
+    mb = vit_micro
+    x, y = data(mb, b=1, seed=4)
+    acc0 = jnp.zeros((mb.n_params,), jnp.float32)
+    accum = jax.jit(mb.make_accum("masked", 0.05))
+    acc, _, sq = accum(mb.params_flat, acc0, x, y, jnp.ones(1))
+    assert float(jnp.linalg.norm(acc)) <= 0.05 * 1.001
+    assert float(sq[0]) > 0.05**2  # the raw grad was genuinely clipped
+
+
+def test_nonprivate_matches_unclipped_sum(vit_micro):
+    """With a huge clip norm, DP-SGD accumulate == plain summed grads."""
+    mb = vit_micro
+    x, y = data(mb, seed=5)
+    acc0 = jnp.zeros((mb.n_params,), jnp.float32)
+    acc_np, _, _ = jax.jit(mb.make_accum("nonprivate", C))(
+        mb.params_flat, acc0, x, y, jnp.ones(B)
+    )
+    huge = jax.jit(mb.make_accum("masked", 1e9))
+    acc_pe, _, _ = huge(mb.params_flat, acc0, x, y, jnp.ones(B))
+    np.testing.assert_allclose(acc_pe, acc_np, rtol=2e-3, atol=2e-4)
+
+
+# ----------------------------------------------------------- apply / eval
+
+def test_apply_deterministic_per_seed(vit_micro):
+    mb = vit_micro
+    acc = jnp.asarray(np.random.default_rng(1).normal(size=mb.n_params), jnp.float32)
+    one = lambda s: jax.jit(mb.apply_fn)(
+        mb.params_flat,
+        acc,
+        jnp.asarray([s], jnp.int32),
+        jnp.asarray([100.0], jnp.float32),
+        jnp.asarray([0.1], jnp.float32),
+        jnp.asarray([1.0], jnp.float32),
+    )
+    np.testing.assert_array_equal(one(7), one(7))
+    assert not np.array_equal(np.asarray(one(7)), np.asarray(one(8)))
+
+
+def test_apply_noise_has_right_scale(vit_micro):
+    """params' - sgd_step == -lr * noise_mult/denom * N(0,1): check std."""
+    mb = vit_micro
+    acc = jnp.zeros((mb.n_params,), jnp.float32)
+    lr, denom, nm = 1.0, 1.0, 3.0
+    out = jax.jit(mb.apply_fn)(
+        mb.params_flat,
+        acc,
+        jnp.asarray([123], jnp.int32),
+        jnp.asarray([denom], jnp.float32),
+        jnp.asarray([lr], jnp.float32),
+        jnp.asarray([nm], jnp.float32),
+    )
+    diff = np.asarray(out - mb.params_flat)
+    assert abs(diff.std() - nm) / nm < 0.02
+    assert abs(diff.mean()) < 0.05
+
+
+def test_eval_counts_correct(vit_micro):
+    mb = vit_micro
+    x, y = data(mb, seed=6)
+    loss_sum, ncorrect = jax.jit(mb.eval_fn)(mb.params_flat, x, y)
+    assert 0 <= float(ncorrect) <= B
+    assert float(loss_sum) > 0
+
+
+# ------------------------------------------------------------------- bf16
+
+def test_bf16_variant_approximates_f32():
+    mb32 = ModelBundle("vit-micro", dtype=jnp.float32)
+    mb16 = ModelBundle("vit-micro", dtype=jnp.bfloat16)
+    x, y = data(mb32, seed=7)
+    acc0 = jnp.zeros((mb32.n_params,), jnp.float32)
+    mask = jnp.ones(B)
+    a32, l32, _ = jax.jit(mb32.make_accum("masked", C))(mb32.params_flat, acc0, x, y, mask)
+    a16, l16, _ = jax.jit(mb16.make_accum("masked", C))(mb16.params_flat, acc0, x, y, mask)
+    # bf16 matmuls: loose tolerance, but must be strongly correlated
+    corr = np.corrcoef(np.asarray(a32), np.asarray(a16))[0, 1]
+    assert corr > 0.98, corr
+    assert abs(float(l16) - float(l32)) / float(l32) < 0.05
+
+
+# -------------------------------------------------------- loss sanity
+
+def test_one_sgd_step_reduces_loss(vit_micro):
+    """A single non-private step on one batch must reduce that batch's
+    loss (learnability smoke test for the whole fwd/bwd)."""
+    mb = vit_micro
+    x, y = data(mb, b=8, seed=8)
+    mask = jnp.ones(8)
+    acc0 = jnp.zeros((mb.n_params,), jnp.float32)
+    accum = jax.jit(mb.make_accum("nonprivate", C))
+    acc, loss0, _ = accum(mb.params_flat, acc0, x, y, mask)
+    new_params = jax.jit(mb.apply_fn)(
+        mb.params_flat,
+        acc,
+        jnp.asarray([0], jnp.int32),
+        jnp.asarray([8.0], jnp.float32),
+        jnp.asarray([0.05], jnp.float32),
+        jnp.asarray([0.0], jnp.float32),
+    )
+    _, loss1, _ = accum(new_params, acc0, x, y, mask)
+    assert float(loss1) < float(loss0), (float(loss0), float(loss1))

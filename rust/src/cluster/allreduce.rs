@@ -1,0 +1,90 @@
+//! Ring all-reduce cost model over a hierarchical interconnect.
+//!
+//! Standard alpha-beta model: a ring all-reduce of S bytes over n ranks
+//! moves `2 S (n-1)/n` bytes across every link (reduce-scatter +
+//! all-gather) in `2 (n-1)` latency-bound steps. On a multi-node
+//! machine the ring necessarily crosses node boundaries, so the slowest
+//! (inter-node) link sets the pace once n exceeds the node size — which
+//! is exactly the knee the paper sees past 4 GPUs ("communication inside
+//! the node is fast, but communication between nodes will always be
+//! slower; the bottleneck is the bandwidth").
+
+
+/// Interconnect description (defaults follow the paper's HPC testbed:
+/// 4 GPUs/node, NVLink-class intra-node, ~100 Gb/s InfiniBand between
+/// nodes).
+#[derive(Debug, Clone, Copy)]
+pub struct Interconnect {
+    /// GPUs per node.
+    pub gpus_per_node: usize,
+    /// Intra-node per-link bandwidth, bytes/s.
+    pub intra_bw: f64,
+    /// Inter-node per-link bandwidth, bytes/s.
+    pub inter_bw: f64,
+    /// Per-message latency, seconds.
+    pub latency: f64,
+}
+
+impl Default for Interconnect {
+    fn default() -> Self {
+        Self {
+            gpus_per_node: 4,
+            intra_bw: 130.0e9, // NVLink-class effective
+            inter_bw: 12.5e9,  // 100 Gb/s IB
+            latency: 15.0e-6,
+        }
+    }
+}
+
+/// Time for one all-reduce of `bytes` over `n` ranks.
+///
+/// Within a node: plain ring over NVLink. Across nodes: hierarchical
+/// (NCCL-style) two-level all-reduce — intra-node reduce + inter-node
+/// ring among node leaders + intra-node broadcast — so the inter-node
+/// volume term depends on the *node* count, not the GPU count.
+pub fn ring_allreduce_seconds(ic: &Interconnect, n: usize, bytes: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    if n <= ic.gpus_per_node {
+        let volume = 2.0 * bytes * (nf - 1.0) / nf;
+        return volume / ic.intra_bw + 2.0 * (nf - 1.0) * ic.latency;
+    }
+    let g = ic.gpus_per_node as f64;
+    let nodes = (n as f64 / g).ceil();
+    let intra = 2.0 * bytes * (g - 1.0) / g / ic.intra_bw;
+    let inter = 2.0 * bytes * (nodes - 1.0) / nodes / ic.inter_bw;
+    intra + inter + 2.0 * (nf - 1.0) * ic.latency
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_rank_is_free() {
+        assert_eq!(ring_allreduce_seconds(&Interconnect::default(), 1, 1e9), 0.0);
+    }
+
+    #[test]
+    fn knee_at_node_boundary() {
+        // Crossing from 4 to 8 GPUs jumps onto the slow inter-node links
+        // (the paper: scaling departs from ideal past one node).
+        let ic = Interconnect::default();
+        let t4 = ring_allreduce_seconds(&ic, 4, 400e6);
+        let t8 = ring_allreduce_seconds(&ic, 8, 400e6);
+        assert!(t8 > 4.0 * t4, "t4={t4} t8={t8}");
+    }
+
+    #[test]
+    fn volume_term_saturates_with_n() {
+        // Hierarchical all-reduce: inter-node volume 2S(nodes-1)/nodes
+        // approaches 2S — the time asymptotes rather than exploding.
+        let ic = Interconnect::default();
+        let t16 = ring_allreduce_seconds(&ic, 16, 1e9);
+        let t64 = ring_allreduce_seconds(&ic, 64, 1e9);
+        assert!(t64 < t16 * 1.5);
+        assert!(t64 > t16); // latency term still grows
+    }
+}

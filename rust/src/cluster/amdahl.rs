@@ -1,0 +1,63 @@
+//! Amdahl's-law fit (paper Figure A.5).
+//!
+//! The paper summarizes its scaling curves by the Amdahl parallel
+//! fraction `p`: speedup(n) = 1 / ((1-p) + p/n), reporting p = 99.5%
+//! for private vs 98.9% for non-private training.
+
+/// Amdahl speedup at `n` processors with parallel fraction `p`.
+pub fn amdahl_speedup(p: f64, n: f64) -> f64 {
+    1.0 / ((1.0 - p) + p / n)
+}
+
+/// Least-squares fit of the parallel fraction from measured speedups
+/// `(n_i, s_i)` (s_i = throughput(n_i) / throughput(1)).
+///
+/// Each point gives a closed-form estimate
+/// `p_i = (1 - 1/s_i) / (1 - 1/n_i)`; we return the n-weighted mean
+/// (large-n points constrain p most), clamped to [0, 1].
+pub fn fit_parallel_fraction(points: &[(f64, f64)]) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for &(n, s) in points {
+        if n <= 1.0 || s <= 0.0 {
+            continue;
+        }
+        let p_i = (1.0 - 1.0 / s) / (1.0 - 1.0 / n);
+        num += n * p_i;
+        den += n;
+    }
+    if den == 0.0 {
+        return 1.0;
+    }
+    (num / den).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_recovery_on_synthetic_curve() {
+        let p = 0.995;
+        let pts: Vec<(f64, f64)> = [2.0, 4.0, 8.0, 16.0, 32.0, 80.0]
+            .iter()
+            .map(|&n| (n, amdahl_speedup(p, n)))
+            .collect();
+        let got = fit_parallel_fraction(&pts);
+        assert!((got - p).abs() < 1e-9, "{got}");
+    }
+
+    #[test]
+    fn speedup_sanity() {
+        assert!((amdahl_speedup(1.0, 80.0) - 80.0).abs() < 1e-9);
+        assert!((amdahl_speedup(0.0, 80.0) - 1.0).abs() < 1e-9);
+        // Paper's numbers: p=0.995 at n=80 gives ~57.6x (~72% efficiency).
+        let s = amdahl_speedup(0.995, 80.0);
+        assert!(s > 50.0 && s < 60.0, "{s}");
+    }
+
+    #[test]
+    fn higher_p_means_better_scaling() {
+        assert!(amdahl_speedup(0.995, 64.0) > amdahl_speedup(0.989, 64.0));
+    }
+}

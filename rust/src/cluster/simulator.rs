@@ -1,0 +1,150 @@
+//! Data-parallel scaling simulator (paper Figures 7 and A.4).
+//!
+//! Per step, every worker computes its share of the logical batch (time
+//! from measured single-worker throughput), then the ring all-reduce of
+//! the flat gradient runs; a configurable fraction of the all-reduce
+//! overlaps with the tail of the backward pass (bucketed DDP-style
+//! overlap). A fixed per-step serial overhead (host-side sampling,
+//! optimizer bookkeeping, data loading without workers — the paper notes
+//! multi-GPU runs cannot use loader workers) gives the Amdahl serial
+//! term.
+
+use super::allreduce::{ring_allreduce_seconds, Interconnect};
+
+/// One point of the scaling curve.
+#[derive(Debug, Clone, Copy)]
+pub struct ScalingPoint {
+    pub gpus: usize,
+    /// Achieved examples/second over the whole cluster.
+    pub throughput: f64,
+    /// Ideal linear scaling from 1 GPU.
+    pub ideal: f64,
+    /// throughput / ideal.
+    pub efficiency: f64,
+}
+
+/// Simulator configuration for one training setup.
+#[derive(Debug, Clone)]
+pub struct ClusterSim {
+    /// Per-worker examples/second measured on a single device (the real
+    /// measured CPU throughput of the AOT executable feeds this).
+    pub single_worker_throughput: f64,
+    /// Per-worker physical batch size.
+    pub local_batch: usize,
+    /// Gradient bytes all-reduced each step (4 * n_params).
+    pub grad_bytes: f64,
+    /// Fraction of the all-reduce hidden behind compute (0..1).
+    pub overlap: f64,
+    /// Serial per-step seconds that never parallelize (host sampling,
+    /// step bookkeeping, single-process data loading).
+    pub serial_overhead: f64,
+    pub interconnect: Interconnect,
+}
+
+impl ClusterSim {
+    /// Seconds of pure compute for one local physical batch.
+    fn compute_seconds(&self) -> f64 {
+        self.local_batch as f64 / self.single_worker_throughput
+    }
+
+    /// Simulate one step's wall-clock on `n` GPUs.
+    pub fn step_seconds(&self, n: usize) -> f64 {
+        let compute = self.compute_seconds();
+        let ar = ring_allreduce_seconds(&self.interconnect, n, self.grad_bytes);
+        let exposed_comm = (ar - self.overlap * compute).max(0.0);
+        self.serial_overhead + compute + exposed_comm
+    }
+
+    /// Cluster throughput (examples/s) at `n` GPUs.
+    pub fn throughput(&self, n: usize) -> f64 {
+        (n * self.local_batch) as f64 / self.step_seconds(n)
+    }
+
+    /// Full scaling curve over the given GPU counts.
+    pub fn curve(&self, gpu_counts: &[usize]) -> Vec<ScalingPoint> {
+        let t1 = self.throughput(1);
+        gpu_counts
+            .iter()
+            .map(|&n| {
+                let thr = self.throughput(n);
+                let ideal = t1 * n as f64;
+                ScalingPoint {
+                    gpus: n,
+                    throughput: thr,
+                    ideal,
+                    efficiency: thr / ideal,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim(throughput: f64, params: f64) -> ClusterSim {
+        ClusterSim {
+            single_worker_throughput: throughput,
+            local_batch: 32,
+            grad_bytes: params * 4.0,
+            overlap: 0.5,
+            serial_overhead: 2.0e-3,
+            interconnect: Interconnect::default(),
+        }
+    }
+
+    #[test]
+    fn never_exceeds_ideal() {
+        let s = sim(500.0, 86.6e6);
+        for p in s.curve(&[1, 2, 4, 8, 16, 32, 64, 80]) {
+            assert!(p.throughput <= p.ideal * 1.0 + 1e-9);
+            assert!(p.efficiency <= 1.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn private_scales_better_than_nonprivate() {
+        // The paper's headline scaling result: slower per-example compute
+        // => comm is relatively smaller => higher parallel efficiency.
+        // Non-private ViT-Base is ~2.8x faster per example than Opacus.
+        let nonpriv = sim(1400.0, 86.6e6);
+        let priv_ = sim(500.0, 86.6e6);
+        let e_np = nonpriv.curve(&[80])[0].efficiency;
+        let e_p = priv_.curve(&[80])[0].efficiency;
+        assert!(e_p > e_np, "private {e_p} vs nonprivate {e_np}");
+        // Paper: 69.2% (private) vs 53.3% (non-private) of ideal at 80.
+        // The simulator preserves the mechanism and the private
+        // magnitude; the non-private point is directionally right.
+        assert!(e_p > 0.55 && e_p < 0.9, "{e_p}");
+        assert!(e_np > 0.2 && e_np < e_p, "{e_np}");
+    }
+
+    #[test]
+    fn intra_node_scaling_is_near_linear() {
+        let s = sim(500.0, 86.6e6);
+        let e4 = s.curve(&[4])[0].efficiency;
+        assert!(e4 > 0.9, "within-node efficiency {e4}");
+    }
+
+    #[test]
+    fn throughput_monotone_beyond_node_boundary() {
+        // A dip is physically possible exactly at the 4->8 transition
+        // (onto the slow inter-node fabric, paper Fig. 7's knee); past
+        // it, adding nodes must keep increasing total throughput.
+        let s = sim(800.0, 300e6);
+        let curve = s.curve(&[1, 2, 4, 8, 16, 32, 64, 80]);
+        for w in curve.windows(2) {
+            if w[0].gpus >= 8 || w[1].gpus <= 4 {
+                assert!(
+                    w[1].throughput > w[0].throughput,
+                    "{} -> {} gpus: {} -> {}",
+                    w[0].gpus,
+                    w[1].gpus,
+                    w[0].throughput,
+                    w[1].throughput
+                );
+            }
+        }
+    }
+}

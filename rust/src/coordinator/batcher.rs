@@ -1,0 +1,266 @@
+//! Virtual batching: the BatchMemoryManager (paper Section 2.1 / Alg. 1-2).
+//!
+//! DP utility wants *logical* batches of thousands of examples (the paper
+//! samples E[L] = 25 000) while the accelerator fits a few hundred — so
+//! logical batches are split into *physical* batches, gradients are
+//! accumulated across them, and the optimizer steps once per logical
+//! batch. This does not change the privacy accounting (same noise, same
+//! sensitivity).
+//!
+//! Two modes, matching the paper's two JAX implementations:
+//!
+//! * [`BatchingMode::Variable`] — "naive": the trailing physical batch has
+//!   whatever size is left over. Every new size is a new compiled graph
+//!   (the recompilation the paper profiles in Fig. A.2); the runtime's
+//!   compile cache makes that cost observable.
+//! * [`BatchingMode::Masked`] — Algorithm 2: round the logical batch up to
+//!   `k` **full** physical batches and mask out the padding examples, so
+//!   the compiled shapes never change. A few surplus per-example
+//!   gradients are computed and multiplied by zero — the price of never
+//!   recompiling.
+
+use crate::coordinator::sampler::Sampler;
+
+/// How logical batches are split into physical ones.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchingMode {
+    /// Trailing partial physical batch keeps its natural (variable) size.
+    Variable,
+    /// Algorithm 2: pad to full physical batches, mask the padding.
+    Masked,
+}
+
+/// One physical batch handed to the runtime.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhysicalBatch {
+    /// Dataset indices; length is the *shape* of the executable input.
+    /// In `Masked` mode padding slots repeat index 0 with mask 0.
+    pub indices: Vec<u32>,
+    /// Algorithm-2 masks: 1.0 for real examples, 0.0 for padding.
+    pub mask: Vec<f32>,
+    /// True when this is the final physical batch of the logical batch —
+    /// the signal to add noise and take the optimizer step (this is the
+    /// paper's custom "flag when it is time to take a step").
+    pub step_boundary: bool,
+}
+
+impl PhysicalBatch {
+    /// Number of real (unmasked) examples.
+    pub fn real_count(&self) -> usize {
+        self.mask.iter().filter(|&&m| m > 0.0).count()
+    }
+}
+
+/// Splits logical batches into physical batches (the Opacus
+/// `BatchMemoryManager` role, plus Algorithm-2 masking).
+#[derive(Debug, Clone)]
+pub struct BatchMemoryManager {
+    physical: usize,
+    mode: BatchingMode,
+}
+
+impl BatchMemoryManager {
+    pub fn new(physical: usize, mode: BatchingMode) -> Self {
+        assert!(physical > 0, "physical batch size must be positive");
+        Self { physical, mode }
+    }
+
+    pub fn physical_batch_size(&self) -> usize {
+        self.physical
+    }
+
+    pub fn mode(&self) -> BatchingMode {
+        self.mode
+    }
+
+    /// Split one logical batch (dataset indices from the sampler) into
+    /// physical batches. The final batch carries `step_boundary = true`.
+    ///
+    /// An empty logical batch (possible under Poisson!) yields a single
+    /// all-masked physical batch in `Masked` mode — the step still
+    /// happens, with noise only, exactly as Algorithm 1 prescribes — and
+    /// a single empty batch in `Variable` mode.
+    pub fn split(&self, logical: &[u32]) -> Vec<PhysicalBatch> {
+        let tl = logical.len();
+        match self.mode {
+            BatchingMode::Variable => {
+                if tl == 0 {
+                    return vec![PhysicalBatch {
+                        indices: vec![],
+                        mask: vec![],
+                        step_boundary: true,
+                    }];
+                }
+                let mut out = Vec::with_capacity(tl.div_ceil(self.physical));
+                for chunk in logical.chunks(self.physical) {
+                    out.push(PhysicalBatch {
+                        indices: chunk.to_vec(),
+                        mask: vec![1.0; chunk.len()],
+                        step_boundary: false,
+                    });
+                }
+                out.last_mut().unwrap().step_boundary = true;
+                out
+            }
+            BatchingMode::Masked => {
+                // k = min k with k*p >= tl ; m = k*p (Algorithm 2)
+                let k = tl.div_ceil(self.physical).max(1);
+                let m = k * self.physical;
+                let mut out = Vec::with_capacity(k);
+                for c in 0..k {
+                    let lo = c * self.physical;
+                    let mut indices = Vec::with_capacity(self.physical);
+                    let mut mask = Vec::with_capacity(self.physical);
+                    for j in lo..lo + self.physical {
+                        if j < tl {
+                            indices.push(logical[j]);
+                            mask.push(1.0);
+                        } else {
+                            indices.push(*logical.first().unwrap_or(&0));
+                            mask.push(0.0);
+                        }
+                    }
+                    out.push(PhysicalBatch {
+                        indices,
+                        mask,
+                        step_boundary: c == k - 1,
+                    });
+                }
+                debug_assert_eq!(out.len() * self.physical, m);
+                out
+            }
+        }
+    }
+
+    /// Convenience: sample step `t` with `sampler` and split it.
+    pub fn batches_for_step(&self, sampler: &dyn Sampler, step: u64) -> Vec<PhysicalBatch> {
+        self.split(&sampler.sample(step))
+    }
+
+    /// Naive-JAX decomposition: split the logical batch into chunks whose
+    /// sizes come from `available` (the batch sizes that were AOT-lowered
+    /// / jit-compiled), greedily largest-first; the remainder uses the
+    /// smallest size that fits it, padded with masked slots.
+    ///
+    /// This mirrors what a naive JAX DP-SGD implementation does at run
+    /// time: every *new* chunk size triggers a compilation (jit retrace)
+    /// — the runtime's compile cache measures exactly that (Fig. A.2).
+    pub fn split_naive(logical: &[u32], available: &[usize]) -> Vec<PhysicalBatch> {
+        assert!(!available.is_empty(), "need at least one lowered batch size");
+        let mut sizes = available.to_vec();
+        sizes.sort_unstable();
+        let smallest = sizes[0];
+        let mut out = Vec::new();
+        let mut rest = logical;
+        if logical.is_empty() {
+            return vec![PhysicalBatch {
+                indices: vec![0; smallest],
+                mask: vec![0.0; smallest],
+                step_boundary: true,
+            }];
+        }
+        while !rest.is_empty() {
+            // Largest lowered size that still fits entirely.
+            let fit = sizes.iter().rev().find(|&&s| s <= rest.len()).copied();
+            match fit {
+                Some(s) => {
+                    let (chunk, tail) = rest.split_at(s);
+                    out.push(PhysicalBatch {
+                        indices: chunk.to_vec(),
+                        mask: vec![1.0; s],
+                        step_boundary: false,
+                    });
+                    rest = tail;
+                }
+                None => {
+                    // Remainder smaller than every size: pad the smallest.
+                    let s = smallest;
+                    let mut indices: Vec<u32> = rest.to_vec();
+                    let mut mask = vec![1.0f32; rest.len()];
+                    while indices.len() < s {
+                        indices.push(rest[0]);
+                        mask.push(0.0);
+                    }
+                    out.push(PhysicalBatch { indices, mask, step_boundary: false });
+                    rest = &[];
+                }
+            }
+        }
+        out.last_mut().unwrap().step_boundary = true;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masked_pads_to_full_batches() {
+        let bmm = BatchMemoryManager::new(4, BatchingMode::Masked);
+        let batches = bmm.split(&[10, 11, 12, 13, 14, 15]);
+        assert_eq!(batches.len(), 2);
+        assert!(batches.iter().all(|b| b.indices.len() == 4));
+        assert_eq!(batches[1].mask, vec![1.0, 1.0, 0.0, 0.0]);
+        assert!(batches[1].step_boundary && !batches[0].step_boundary);
+        let real: usize = batches.iter().map(|b| b.real_count()).sum();
+        assert_eq!(real, 6);
+    }
+
+    #[test]
+    fn variable_keeps_partial_tail() {
+        let bmm = BatchMemoryManager::new(4, BatchingMode::Variable);
+        let batches = bmm.split(&[1, 2, 3, 4, 5]);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[1].indices, vec![5]);
+        assert_eq!(batches[1].mask, vec![1.0]);
+    }
+
+    #[test]
+    fn empty_logical_batch_still_steps() {
+        for mode in [BatchingMode::Masked, BatchingMode::Variable] {
+            let bmm = BatchMemoryManager::new(8, mode);
+            let batches = bmm.split(&[]);
+            assert_eq!(batches.len(), 1);
+            assert!(batches[0].step_boundary);
+            assert_eq!(batches[0].real_count(), 0);
+        }
+    }
+
+    #[test]
+    fn naive_split_covers_all_examples_once() {
+        let logical: Vec<u32> = (0..77).collect();
+        let batches = BatchMemoryManager::split_naive(&logical, &[2, 4, 8, 16, 32]);
+        // 77 = 32 + 32 + 8 + 4 + (1 padded to 2)
+        let sizes: Vec<usize> = batches.iter().map(|b| b.indices.len()).collect();
+        assert_eq!(sizes, vec![32, 32, 8, 4, 2]);
+        let real: Vec<u32> = batches
+            .iter()
+            .flat_map(|b| {
+                b.indices
+                    .iter()
+                    .zip(&b.mask)
+                    .filter(|(_, &m)| m > 0.0)
+                    .map(|(&i, _)| i)
+            })
+            .collect();
+        assert_eq!(real, logical);
+        assert!(batches.last().unwrap().step_boundary);
+    }
+
+    #[test]
+    fn naive_split_empty_logical_batch() {
+        let batches = BatchMemoryManager::split_naive(&[], &[4, 8]);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].indices.len(), 4);
+        assert_eq!(batches[0].real_count(), 0);
+    }
+
+    #[test]
+    fn exact_multiple_has_no_padding() {
+        let bmm = BatchMemoryManager::new(3, BatchingMode::Masked);
+        let batches = bmm.split(&[1, 2, 3, 4, 5, 6]);
+        assert_eq!(batches.len(), 2);
+        assert!(batches.iter().all(|b| b.real_count() == 3));
+    }
+}

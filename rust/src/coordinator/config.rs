@@ -1,0 +1,101 @@
+//! Training-run configuration (the "config system" a launcher consumes).
+//!
+//! Defaults mirror the paper's experimental setup (Section 3): sampling
+//! rate 0.5 over a 50k-example dataset (E[L] = 25k at paper scale —
+//! scaled down here), four optimizer steps for benchmarking, eps = 8 /
+//! delta = 2.04e-5 privacy budget, clip norm from Table A2.
+
+use crate::coordinator::batcher::BatchingMode;
+
+/// Everything needed to launch one training/benchmark run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Model ladder name (must exist in artifacts/manifest.json).
+    pub model: String,
+    /// AOT step variant: nonprivate | naive | masked | ghost | bk.
+    pub variant: String,
+    /// Use the bf16 ("TF32-substitute") accum executables if present.
+    pub bf16: bool,
+    /// Dataset size N.
+    pub dataset_size: u32,
+    /// Poisson sampling rate q (expected logical batch = q * N).
+    pub sampling_rate: f64,
+    /// Physical batch size (must match a lowered executable).
+    pub physical_batch: usize,
+    /// Batching mode: Masked (Algorithm 2) or Variable (naive).
+    pub mode: BatchingMode,
+    /// Optimizer steps to take.
+    pub steps: u64,
+    /// Learning rate.
+    pub lr: f64,
+    /// Clipping norm C (informational: baked into accum at AOT time).
+    pub clip_norm: f64,
+    /// Noise multiplier sigma; if None, calibrated from (eps, delta).
+    pub noise_multiplier: Option<f64>,
+    /// Target privacy budget used when noise_multiplier is None.
+    pub target_epsilon: f64,
+    pub delta: f64,
+    /// Experiment seed (drives sampling, noise, and the dataset).
+    pub seed: u64,
+    /// Evaluate on this many held-out examples after training (0 = skip).
+    pub eval_examples: u32,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            model: "vit-micro".into(),
+            variant: "masked".into(),
+            bf16: false,
+            dataset_size: 2048,
+            sampling_rate: 0.5,
+            physical_batch: 16,
+            mode: BatchingMode::Masked,
+            steps: 4,
+            lr: 3.0e-4,
+            clip_norm: 1.0,
+            noise_multiplier: None,
+            target_epsilon: 8.0,
+            delta: 2.04e-5,
+            seed: 0,
+        eval_examples: 256,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Expected logical batch size E[L] = q * N.
+    pub fn expected_logical_batch(&self) -> f64 {
+        self.sampling_rate * self.dataset_size as f64
+    }
+
+    /// Is this configuration differentially private?
+    pub fn is_private(&self) -> bool {
+        self.variant != "nonprivate"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paperlike() {
+        let c = TrainConfig::default();
+        assert_eq!(c.sampling_rate, 0.5);
+        assert_eq!(c.steps, 4);
+        assert_eq!(c.target_epsilon, 8.0);
+        assert!(c.is_private());
+        assert_eq!(c.expected_logical_batch(), 1024.0);
+    }
+
+    #[test]
+    fn logical_batch_tracks_rate() {
+        let mut c = TrainConfig::default();
+        c.sampling_rate = 0.25;
+        c.dataset_size = 4000;
+        assert_eq!(c.expected_logical_batch(), 1000.0);
+        c.variant = "nonprivate".into();
+        assert!(!c.is_private());
+    }
+}

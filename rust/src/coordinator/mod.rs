@@ -1,0 +1,15 @@
+//! The Layer-3 coordinator: everything the paper's training pipeline does
+//! *outside* the jitted step function.
+//!
+//! This is where "DP-SGD without shortcuts" actually lives: the
+//! [`sampler::PoissonSampler`] draws true per-example Bernoulli samples
+//! (variable logical batch sizes — the part most implementations skip),
+//! the [`batcher::BatchMemoryManager`] splits logical batches into
+//! fixed-shape physical batches with Algorithm-2 masks, and the
+//! [`trainer::Trainer`] drives the AOT-compiled accum/apply executables
+//! through the PJRT runtime while timing each section (paper Table 2).
+
+pub mod batcher;
+pub mod config;
+pub mod sampler;
+pub mod trainer;

@@ -1,0 +1,355 @@
+//! The training-loop driver: virtual-batching DP-SGD (Algorithms 1 & 2)
+//! over the AOT executables, with per-section timing.
+//!
+//! Per optimizer step:
+//!
+//! 1. **sample**  — Poisson-sample the logical batch (L3, [`PoissonSampler`])
+//! 2. **split**   — into physical batches + masks ([`BatchMemoryManager`];
+//!                  masked mode = Algorithm 2, variable mode = naive JAX)
+//! 3. **accum**   — per physical batch: fetch data, run the `accum`
+//!                  executable (fwd + per-example bwd + clip + accumulate)
+//! 4. **apply**   — at the step boundary: run `apply` (noise + SGD step)
+//! 5. **account** — record the (q, sigma) step in the RDP accountant
+//!
+//! The per-section wall-clock breakdown is this codebase's analogue of
+//! the paper's Nsight profile (Table 2); compile time is tracked
+//! separately (Fig. A.2) and excluded from throughput, mirroring how the
+//! paper discounts JAX compilation when comparing steady-state rates.
+
+use crate::coordinator::batcher::{BatchMemoryManager, BatchingMode, PhysicalBatch};
+use crate::coordinator::config::TrainConfig;
+use crate::coordinator::sampler::{PoissonSampler, Sampler};
+use crate::data::SyntheticDataset;
+use crate::metrics::ThroughputMeter;
+use crate::privacy::rdp::StreamingAccountant;
+use crate::privacy::{calibrate_sigma, RdpAccountant};
+use crate::runtime::{ModelRuntime, Runtime};
+use anyhow::{anyhow, Result};
+use std::time::Instant;
+
+/// Wall-clock seconds per pipeline section (the Table-2 analogue).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SectionTimes {
+    /// Poisson sampling + batch splitting (host).
+    pub sampling: f64,
+    /// Synthetic-data materialization (the "data loading" stand-in).
+    pub data: f64,
+    /// accum executions (forward + backward + clip + accumulate).
+    pub accum: f64,
+    /// apply executions (noise + optimizer step).
+    pub apply: f64,
+    /// PJRT compilations (jit analogue; excluded from throughput).
+    pub compile: f64,
+}
+
+impl SectionTimes {
+    pub fn training_total(&self) -> f64 {
+        self.sampling + self.data + self.accum + self.apply
+    }
+}
+
+/// One optimizer step's log entry.
+#[derive(Debug, Clone)]
+pub struct StepLog {
+    pub step: u64,
+    /// True sampled logical batch size (varies under Poisson!).
+    pub logical_batch: usize,
+    /// Number of physical batches executed (including padded ones).
+    pub physical_batches: usize,
+    /// Examples computed including Algorithm-2 padding.
+    pub computed_examples: usize,
+    /// Mean training loss over the real examples of this step.
+    pub loss: f64,
+}
+
+/// Result of a training run.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub model: String,
+    pub variant: String,
+    pub mode: BatchingMode,
+    pub noise_multiplier: f64,
+    pub epsilon_spent: f64,
+    pub delta: f64,
+    pub steps: Vec<StepLog>,
+    pub sections: SectionTimes,
+    /// Real examples per second over sample+data+accum+apply time.
+    pub throughput: f64,
+    /// Including Algorithm-2 padding (the "wasted" gradient computation).
+    pub computed_throughput: f64,
+    /// Per-accum-call throughput samples (for bootstrap CIs).
+    pub accum_samples: Vec<f64>,
+    pub eval_loss: Option<f64>,
+    pub eval_accuracy: Option<f64>,
+    /// (artifact, seconds) for every PJRT compilation this run caused.
+    pub compiles: Vec<(String, f64)>,
+}
+
+/// Drives one configured training run over the runtime.
+pub struct Trainer<'rt> {
+    runtime: &'rt Runtime,
+    model: ModelRuntime,
+    config: TrainConfig,
+    dataset: SyntheticDataset,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(runtime: &'rt Runtime, config: TrainConfig) -> Result<Self> {
+        let model = runtime.model(&config.model)?;
+        let dataset = SyntheticDataset::new(
+            config.dataset_size,
+            model.meta().num_classes as u32,
+            model.meta().image,
+            model.meta().channels,
+            config.seed,
+        );
+        Ok(Self { runtime, model, config, dataset })
+    }
+
+    pub fn model(&self) -> &ModelRuntime {
+        &self.model
+    }
+
+    /// Resolve the noise multiplier: explicit, or calibrated to the
+    /// (epsilon, delta) target (paper Table A2 style).
+    pub fn resolve_sigma(&self) -> Result<f64> {
+        if !self.config.is_private() {
+            return Ok(0.0);
+        }
+        match self.config.noise_multiplier {
+            Some(s) => Ok(s),
+            None => calibrate_sigma(
+                self.config.target_epsilon,
+                self.config.delta,
+                self.config.sampling_rate,
+                self.config.steps,
+            )
+            .map_err(|e| anyhow!(e)),
+        }
+    }
+
+    fn dtype(&self) -> &'static str {
+        if self.config.bf16 {
+            "bf16"
+        } else {
+            "f32"
+        }
+    }
+
+    /// Run the configured number of optimizer steps.
+    pub fn run(&self) -> Result<TrainReport> {
+        let cfg = &self.config;
+        let sigma = self.resolve_sigma()?;
+        let sampler = PoissonSampler::new(cfg.dataset_size, cfg.sampling_rate, cfg.seed);
+        let bmm = BatchMemoryManager::new(cfg.physical_batch, cfg.mode);
+        let available = self.model.accum_batches(&cfg.variant, self.dtype());
+        if available.is_empty() {
+            return Err(anyhow!(
+                "no accum artifacts for {} variant={} dtype={}",
+                cfg.model,
+                cfg.variant,
+                self.dtype()
+            ));
+        }
+
+        let mut sections = SectionTimes::default();
+        let mut meter = ThroughputMeter::new();
+        let mut accum_samples = Vec::new();
+        let mut steps_log = Vec::new();
+        let mut accountant = StreamingAccountant::new(RdpAccountant::default());
+
+        let compiled_before = self.runtime.compile_records().len();
+        // Pre-compile the fixed-shape executables (apply + the masked
+        // accum shape) so their one-time compile cost lands in
+        // `sections.compile`, not in the steady-state sections — the
+        // same discount the paper applies to JAX compilation.
+        {
+            let t0 = Instant::now();
+            if cfg.mode == BatchingMode::Masked {
+                self.model.prepare_accum(&cfg.variant, cfg.physical_batch, self.dtype())?;
+            }
+            let _ = self.model.run_apply(
+                &self.model.init_params()?,
+                &self.model.zero_acc(),
+                0,
+                1.0,
+                0.0,
+                0.0,
+            )?;
+            sections.compile += t0.elapsed().as_secs_f64();
+        }
+        let mut params = {
+            let t0 = Instant::now();
+            let p = self.model.init_params()?;
+            sections.data += t0.elapsed().as_secs_f64();
+            p
+        };
+        // denom = E[L] (Algorithm 1's 1/|L| with the expected batch — the
+        // standard Opacus convention).
+        let denom = cfg.expected_logical_batch() as f32;
+        let noise_mult = (sigma * cfg.clip_norm) as f32;
+
+        for step in 0..cfg.steps {
+            let t0 = Instant::now();
+            let logical = sampler.sample(step);
+            let batches: Vec<PhysicalBatch> = match cfg.mode {
+                BatchingMode::Masked => bmm.split(&logical),
+                BatchingMode::Variable => {
+                    BatchMemoryManager::split_naive(&logical, &available)
+                }
+            };
+            sections.sampling += t0.elapsed().as_secs_f64();
+
+            let mut acc = self.model.zero_acc();
+            let mut loss_sum = 0.0f64;
+            let mut computed = 0usize;
+            for pb in &batches {
+                let b = pb.indices.len();
+                // Compile on first use of this size — timed separately
+                // (this is the naive-JAX recompile cost, Fig A.2).
+                if !self.model.accum_is_compiled(&cfg.variant, b, self.dtype()) {
+                    let t = Instant::now();
+                    self.model.prepare_accum(&cfg.variant, b, self.dtype())?;
+                    sections.compile += t.elapsed().as_secs_f64();
+                }
+                let exe = self.model.prepare_accum(&cfg.variant, b, self.dtype())?;
+
+                let t = Instant::now();
+                let (x, y) = self.dataset.batch(&pb.indices);
+                sections.data += t.elapsed().as_secs_f64();
+
+                let t = Instant::now();
+                let out = self.model.run_accum(&exe, &params, &acc, &x, &y, &pb.mask)?;
+                let dt = t.elapsed().as_secs_f64();
+                sections.accum += dt;
+                meter.record_secs(pb.real_count(), dt);
+                if dt > 0.0 {
+                    accum_samples.push(pb.real_count() as f64 / dt);
+                }
+                acc = out.acc;
+                loss_sum += out.loss_sum as f64;
+                computed += b;
+            }
+
+            let t = Instant::now();
+            let seed = (cfg.seed as i64 * 1_000_003 + step as i64) as i32;
+            params = self.model.run_apply(&params, &acc, seed, denom, cfg.lr as f32, noise_mult)?;
+            sections.apply += t.elapsed().as_secs_f64();
+
+            if cfg.is_private() && sigma > 0.0 {
+                accountant.record_step(cfg.sampling_rate, sigma);
+            }
+            steps_log.push(StepLog {
+                step,
+                logical_batch: logical.len(),
+                physical_batches: batches.len(),
+                computed_examples: computed,
+                loss: loss_sum / logical.len().max(1) as f64,
+            });
+        }
+
+        // Held-out evaluation with the fixed-size eval executable.
+        let (eval_loss, eval_accuracy) = if cfg.eval_examples > 0 {
+            self.evaluate(&params, cfg.eval_examples)?
+        } else {
+            (None, None)
+        };
+
+        let real: f64 = steps_log.iter().map(|s| s.logical_batch as f64).sum();
+        let comp: f64 = steps_log.iter().map(|s| s.computed_examples as f64).sum();
+        let total = sections.training_total();
+        let compiles = self.runtime.compile_records()[compiled_before..]
+            .iter()
+            .map(|r| (r.path.clone(), r.seconds))
+            .collect();
+        Ok(TrainReport {
+            model: cfg.model.clone(),
+            variant: cfg.variant.clone(),
+            mode: cfg.mode,
+            noise_multiplier: sigma,
+            // sigma == 0 on a private variant (debug/ablation runs) means
+            // no DP guarantee at all: report eps = infinity, not 0.
+            epsilon_spent: if !cfg.is_private() {
+                0.0
+            } else if sigma > 0.0 {
+                accountant.epsilon(cfg.delta)
+            } else {
+                f64::INFINITY
+            },
+            delta: cfg.delta,
+            steps: steps_log,
+            sections,
+            throughput: if total > 0.0 { real / total } else { 0.0 },
+            computed_throughput: if total > 0.0 { comp / total } else { 0.0 },
+            accum_samples,
+            eval_loss,
+            eval_accuracy,
+            compiles,
+        })
+    }
+
+    /// Evaluate on held-out examples: same data distribution (same
+    /// class patterns), indices disjoint from the training range.
+    fn evaluate(
+        &self,
+        params: &xla::Literal,
+        examples: u32,
+    ) -> Result<(Option<f64>, Option<f64>)> {
+        let Some(eb) = self.model.eval_batch() else {
+            return Ok((None, None));
+        };
+        let held_out = SyntheticDataset::new(
+            self.config.dataset_size + examples,
+            self.model.meta().num_classes as u32,
+            self.model.meta().image,
+            self.model.meta().channels,
+            self.config.seed,
+        );
+        let offset = self.config.dataset_size;
+        let mut loss = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut n = 0u32;
+        let mut start = 0u32;
+        while start + eb as u32 <= examples {
+            let idx: Vec<u32> = (offset + start..offset + start + eb as u32).collect();
+            let (x, y) = held_out.batch(&idx);
+            let (ls, nc) = self.model.run_eval(params, &x, &y)?;
+            loss += ls as f64;
+            correct += nc as f64;
+            n += eb as u32;
+            start += eb as u32;
+        }
+        if n == 0 {
+            return Ok((None, None));
+        }
+        Ok((Some(loss / n as f64), Some(correct / n as f64)))
+    }
+
+    /// Steady-state accum throughput sweep for one (variant, batch):
+    /// `repeats` timed executions of the same compiled executable on
+    /// fresh data — the measurement behind Figures 1/2/4/6.
+    pub fn bench_accum(
+        &self,
+        variant: &str,
+        batch: usize,
+        repeats: usize,
+    ) -> Result<Vec<f64>> {
+        let exe = self.model.prepare_accum(variant, batch, self.dtype())?;
+        let params = self.model.init_params()?;
+        let acc = self.model.zero_acc();
+        let mask = vec![1.0f32; batch];
+        let mut samples = Vec::with_capacity(repeats);
+        for r in 0..repeats {
+            let idx: Vec<u32> =
+                (0..batch as u32).map(|i| (r as u32 * batch as u32 + i) % self.config.dataset_size).collect();
+            let (x, y) = self.dataset.batch(&idx);
+            let t = Instant::now();
+            let _ = self.model.run_accum(&exe, &params, &acc, &x, &y, &mask)?;
+            let dt = t.elapsed().as_secs_f64();
+            if dt > 0.0 {
+                samples.push(batch as f64 / dt);
+            }
+        }
+        Ok(samples)
+    }
+}

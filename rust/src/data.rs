@@ -1,0 +1,169 @@
+//! Synthetic CIFAR-100-like dataset (seeded, class-conditional).
+//!
+//! The paper benchmarks on CIFAR-100 resized to 224x224; throughput
+//! benchmarking never inspects label quality, and the e2e training run
+//! only needs a *learnable* signal. We substitute a deterministic
+//! class-conditional Gaussian dataset: each class has a fixed smooth
+//! pattern (drawn once from a per-class ChaCha stream), and each example
+//! is its class pattern plus per-example noise. Images regenerate on
+//! demand from the index — no storage, any dataset size, perfectly
+//! reproducible across runs and languages.
+
+use crate::util::rng::ChaChaRng;
+
+/// Deterministic synthetic image-classification dataset.
+#[derive(Debug, Clone)]
+pub struct SyntheticDataset {
+    n: u32,
+    classes: u32,
+    image: usize,
+    channels: usize,
+    noise: f32,
+    seed: u64,
+    /// Per-class base patterns, generated once: [classes, image*image*ch].
+    patterns: Vec<Vec<f32>>,
+}
+
+impl SyntheticDataset {
+    pub fn new(n: u32, classes: u32, image: usize, channels: usize, seed: u64) -> Self {
+        assert!(classes >= 2);
+        let dim = image * image * channels;
+        let mut patterns = Vec::with_capacity(classes as usize);
+        for c in 0..classes {
+            let mut rng = ChaChaRng::from_seed_stream(seed, c as u64, b"classpat");
+            // Smooth-ish pattern: low-frequency sinusoid mixture.
+            let (fx, fy, phase): (f64, f64, f64) = (
+                0.5 + 2.5 * rng.next_f64(),
+                0.5 + 2.5 * rng.next_f64(),
+                std::f64::consts::TAU * rng.next_f64(),
+            );
+            let amp: f32 = 1.0;
+            let mut pat = vec![0.0f32; dim];
+            for y in 0..image {
+                for x in 0..image {
+                    for ch in 0..channels {
+                        let v = ((x as f64 / image as f64) * fx * std::f64::consts::TAU
+                            + (y as f64 / image as f64) * fy * std::f64::consts::TAU
+                            + phase
+                            + ch as f64)
+                            .sin();
+                        pat[(y * image + x) * channels + ch] = amp * v as f32;
+                    }
+                }
+            }
+            patterns.push(pat);
+        }
+        Self { n, classes, image, channels, noise: 0.5, seed, patterns }
+    }
+
+    /// CIFAR-100-shaped default: 32x32x3, 100 classes.
+    pub fn cifar_like(n: u32, seed: u64) -> Self {
+        Self::new(n, 100, 32, 3, seed)
+    }
+
+    pub fn len(&self) -> u32 {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn image_dim(&self) -> usize {
+        self.image * self.image * self.channels
+    }
+
+    /// Label of example `idx` (deterministic hash of the index).
+    pub fn label(&self, idx: u32) -> i32 {
+        // splitmix-style mix so labels are balanced but not periodic
+        let mut z = (idx as u64).wrapping_add(self.seed).wrapping_mul(0x9E3779B97F4A7C15);
+        z ^= z >> 30;
+        z = z.wrapping_mul(0xBF58476D1CE4E5B9);
+        z ^= z >> 27;
+        (z % self.classes as u64) as i32
+    }
+
+    /// Materialize example `idx` into `out` (len = image_dim).
+    pub fn fill_example(&self, idx: u32, out: &mut [f32]) {
+        let class = self.label(idx) as usize;
+        let mut rng = ChaChaRng::from_seed_stream(self.seed, idx as u64, b"example\0");
+        let pat = &self.patterns[class];
+        for (o, &p) in out.iter_mut().zip(pat) {
+            let eps = rng.next_normal() as f32;
+            *o = p + self.noise * eps;
+        }
+    }
+
+    /// Gather a batch: images [b, image, image, channels] row-major and
+    /// labels [b]. `indices` may repeat (Algorithm-2 padding does).
+    pub fn batch(&self, indices: &[u32]) -> (Vec<f32>, Vec<i32>) {
+        let d = self.image_dim();
+        let mut xs = vec![0.0f32; indices.len() * d];
+        let mut ys = Vec::with_capacity(indices.len());
+        for (i, &idx) in indices.iter().enumerate() {
+            self.fill_example(idx, &mut xs[i * d..(i + 1) * d]);
+            ys.push(self.label(idx));
+        }
+        (xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let d1 = SyntheticDataset::cifar_like(1000, 7);
+        let d2 = SyntheticDataset::cifar_like(1000, 7);
+        let (x1, y1) = d1.batch(&[0, 5, 999]);
+        let (x2, y2) = d2.batch(&[0, 5, 999]);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn different_seed_different_data() {
+        let d1 = SyntheticDataset::cifar_like(100, 1);
+        let d2 = SyntheticDataset::cifar_like(100, 2);
+        assert_ne!(d1.batch(&[3]).0, d2.batch(&[3]).0);
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        let d = SyntheticDataset::cifar_like(50_000, 3);
+        let mut counts = vec![0u32; 100];
+        for i in 0..50_000 {
+            counts[d.label(i) as usize] += 1;
+        }
+        let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(*min > 350 && *max < 650, "min={min} max={max}");
+    }
+
+    #[test]
+    fn class_signal_exceeds_noise() {
+        // Same-class examples must be closer than different-class ones.
+        let d = SyntheticDataset::new(1000, 10, 16, 3, 5);
+        let mut by_class: Vec<Vec<u32>> = vec![vec![]; 10];
+        for i in 0..1000 {
+            by_class[d.label(i) as usize].push(i);
+        }
+        let dist = |a: u32, b: u32| {
+            let (xa, _) = d.batch(&[a]);
+            let (xb, _) = d.batch(&[b]);
+            xa.iter().zip(&xb).map(|(p, q)| (p - q).powi(2)).sum::<f32>()
+        };
+        let same = dist(by_class[0][0], by_class[0][1]);
+        let diff = dist(by_class[0][0], by_class[1][0]);
+        assert!(diff > 1.5 * same, "same={same} diff={diff}");
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let d = SyntheticDataset::cifar_like(10, 0);
+        let (x, y) = d.batch(&[1, 1, 2]);
+        assert_eq!(x.len(), 3 * 32 * 32 * 3);
+        assert_eq!(y.len(), 3);
+        assert_eq!(y[0], y[1]);
+    }
+}

@@ -1,0 +1,40 @@
+//! # dp-shortcuts — DP-SGD without shortcuts
+//!
+//! A Rust + JAX + Pallas reproduction of *"Towards Efficient and Scalable
+//! Implementation of Differentially Private Deep Learning"* (Rodriguez
+//! Beltran et al., 2024): DP-SGD with **exact Poisson subsampling** (no
+//! fixed-batch shortcut), virtual batching, optimized clipping methods
+//! (per-example / ghost / Book Keeping), the paper's masked fixed-shape
+//! JAX variant (Algorithm 2), an RDP privacy accountant, an analytic
+//! memory planner, and a multi-GPU cluster simulator for the scaling
+//! study.
+//!
+//! Architecture (see DESIGN.md): Python/JAX/Pallas exist only at build
+//! time (`make artifacts`); this crate loads the AOT-lowered HLO via the
+//! PJRT C API and owns the entire training loop.
+//!
+//! ```text
+//! L3 (this crate)   sampler -> batcher -> runtime.execute(accum)* ->
+//!                   runtime.execute(apply) -> accountant.step()
+//! L2 (jax, AOT)     model fwd/bwd variants, flat-param ABI
+//! L1 (pallas, AOT)  clip-mask-accumulate / ghost-norm / noisy-step
+//! ```
+
+pub mod clipping;
+pub mod cluster;
+pub mod coordinator;
+pub mod data;
+pub mod memory;
+pub mod metrics;
+pub mod models;
+pub mod precision;
+pub mod privacy;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+pub use coordinator::batcher::{BatchMemoryManager, BatchingMode, PhysicalBatch};
+pub use coordinator::config::TrainConfig;
+pub use coordinator::sampler::{PoissonSampler, Sampler, ShuffleSampler};
+pub use coordinator::trainer::{SectionTimes, TrainReport, Trainer};
+pub use privacy::{DpParams, RdpAccountant};

@@ -1,0 +1,199 @@
+//! `dpshort` — the launcher for DP-SGD-without-shortcuts.
+//!
+//! Subcommands:
+//!
+//! ```text
+//! dpshort list                         show models/variants in artifacts/
+//! dpshort train   [flags]              run DP-SGD (or the baseline) end to end
+//! dpshort bench   [flags]              steady-state throughput sweep
+//! dpshort plan    [flags]              analytic max-batch memory planner (Fig 3 / Tab 3)
+//! dpshort account [flags]              privacy accounting / sigma calibration
+//! dpshort scale   [flags]              multi-GPU scaling simulation (Fig 7 / A.4 / A.5)
+//! dpshort report  <fig1|fig2|fig3|table1|table2|table3|fig4|fig5|fig6|figA1|figA2|fig7|figA5|all>
+//! ```
+
+use anyhow::{anyhow, Result};
+use dp_shortcuts::coordinator::batcher::BatchingMode;
+use dp_shortcuts::coordinator::config::TrainConfig;
+use dp_shortcuts::coordinator::trainer::Trainer;
+use dp_shortcuts::privacy::{calibrate_sigma, RdpAccountant};
+use dp_shortcuts::report;
+use dp_shortcuts::runtime::Runtime;
+use dp_shortcuts::util::cli::Args;
+
+const USAGE: &str = "usage: dpshort <list|train|bench|plan|account|scale|report> [--flags]
+  common flags: --artifacts DIR (default: artifacts)
+  train/bench:  --model NAME --variant V --batch B --steps N --rate Q
+                --dataset N --lr LR --sigma S --epsilon E --delta D
+                --seed S --bf16 --naive-mode --eval N
+  bench:        --repeats R
+  account:      --rate Q --steps N --delta D [--sigma S | --epsilon E]
+  scale:        --model NAME --gpus LIST (e.g. 1,4,8,16,32,80)
+  report:       <figure-or-table id> [--quick]";
+
+fn config_from(args: &Args) -> Result<TrainConfig> {
+    let mut c = TrainConfig::default();
+    if let Some(m) = args.get("model") {
+        c.model = m.to_string();
+    }
+    if let Some(v) = args.get("variant") {
+        c.variant = v.to_string();
+    }
+    c.bf16 = args.get_bool("bf16");
+    c.dataset_size = args.get_parse_or("dataset", c.dataset_size).map_err(|e| anyhow!(e))?;
+    c.sampling_rate = args.get_parse_or("rate", c.sampling_rate).map_err(|e| anyhow!(e))?;
+    c.physical_batch = args.get_parse_or("batch", c.physical_batch).map_err(|e| anyhow!(e))?;
+    c.steps = args.get_parse_or("steps", c.steps).map_err(|e| anyhow!(e))?;
+    c.lr = args.get_parse_or("lr", c.lr).map_err(|e| anyhow!(e))?;
+    c.clip_norm = args.get_parse_or("clip", c.clip_norm).map_err(|e| anyhow!(e))?;
+    c.noise_multiplier = args.get_parse("sigma").map_err(|e| anyhow!(e))?;
+    c.target_epsilon = args.get_parse_or("epsilon", c.target_epsilon).map_err(|e| anyhow!(e))?;
+    c.delta = args.get_parse_or("delta", c.delta).map_err(|e| anyhow!(e))?;
+    c.seed = args.get_parse_or("seed", c.seed).map_err(|e| anyhow!(e))?;
+    c.eval_examples = args.get_parse_or("eval", c.eval_examples).map_err(|e| anyhow!(e))?;
+    if args.get_bool("naive-mode") || c.variant == "naive" {
+        c.mode = BatchingMode::Variable;
+    }
+    Ok(c)
+}
+
+fn cmd_list(rt: &Runtime) -> Result<()> {
+    println!("{:<12} {:>10} {:>6}  variants x batches", "model", "params", "image");
+    for (name, m) in &rt.manifest().models {
+        println!(
+            "{:<12} {:>10} {:>4}px  {}",
+            name,
+            m.n_params,
+            m.image,
+            m.variants()
+                .iter()
+                .map(|v| format!("{v}@{:?}", m.accum_batches(v, "f32")))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    println!(
+        "train: model={} variant={} mode={:?} B={} q={} steps={} E[L]={}",
+        cfg.model,
+        cfg.variant,
+        cfg.mode,
+        cfg.physical_batch,
+        cfg.sampling_rate,
+        cfg.steps,
+        cfg.expected_logical_batch()
+    );
+    let trainer = Trainer::new(rt, cfg.clone())?;
+    let rep = trainer.run()?;
+    if cfg.is_private() {
+        println!(
+            "privacy: sigma={:.4}  spent eps={:.3} at delta={:.2e}",
+            rep.noise_multiplier, rep.epsilon_spent, rep.delta
+        );
+    }
+    for s in &rep.steps {
+        println!(
+            "  step {:>3}: |L|={:<5} phys={:<3} computed={:<5} loss={:.4}",
+            s.step, s.logical_batch, s.physical_batches, s.computed_examples, s.loss
+        );
+    }
+    let t = rep.sections;
+    println!(
+        "sections (s): sampling={:.3} data={:.3} accum={:.3} apply={:.3} compile={:.3}",
+        t.sampling, t.data, t.accum, t.apply, t.compile
+    );
+    println!(
+        "throughput: {:.1} ex/s (real), {:.1} ex/s (incl. Alg.2 padding)",
+        rep.throughput, rep.computed_throughput
+    );
+    if let (Some(l), Some(a)) = (rep.eval_loss, rep.eval_accuracy) {
+        println!("eval: loss={l:.4} accuracy={a:.4}");
+    }
+    if !rep.compiles.is_empty() {
+        println!("compiles ({}):", rep.compiles.len());
+        for (p, s) in &rep.compiles {
+            println!("  {p}: {s:.2}s");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_bench(rt: &Runtime, args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let repeats: usize = args.get_parse_or("repeats", 8).map_err(|e| anyhow!(e))?;
+    let trainer = Trainer::new(rt, cfg.clone())?;
+    let samples = trainer.bench_accum(&cfg.variant, cfg.physical_batch, repeats)?;
+    let s = dp_shortcuts::metrics::summary_with_ci(&samples, cfg.seed);
+    println!(
+        "{} {} B={}: median {:.1} ex/s (95% CI [{:.1}, {:.1}], n={})",
+        cfg.model, cfg.variant, cfg.physical_batch, s.median, s.ci_low, s.ci_high, s.n
+    );
+    Ok(())
+}
+
+fn cmd_account(args: &Args) -> Result<()> {
+    let q: f64 = args.get_parse_or("rate", 0.5).map_err(|e| anyhow!(e))?;
+    let steps: u64 = args.get_parse_or("steps", 4).map_err(|e| anyhow!(e))?;
+    let delta: f64 = args.get_parse_or("delta", 2.04e-5).map_err(|e| anyhow!(e))?;
+    let acc = RdpAccountant::default();
+    if let Some(sigma) = args.get_parse::<f64>("sigma").map_err(|e| anyhow!(e))? {
+        let eps = acc.epsilon(q, sigma, steps, delta);
+        let order = acc.optimal_order(q, sigma, steps, delta);
+        println!("eps = {eps:.4} at delta={delta:.2e} (optimal RDP order {order})");
+    } else {
+        let eps: f64 = args.get_parse_or("epsilon", 8.0).map_err(|e| anyhow!(e))?;
+        let sigma = calibrate_sigma(eps, delta, q, steps).map_err(|e| anyhow!(e))?;
+        println!("sigma = {sigma:.4} reaches eps={eps} at delta={delta:.2e} (q={q}, T={steps})");
+    }
+    Ok(())
+}
+
+fn cmd_scale(rt: &Runtime, args: &Args) -> Result<()> {
+    let gpus: Vec<usize> = args
+        .get_or("gpus", "1,2,4,8,16,32,64,80")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().map_err(|e| anyhow!("bad gpu count: {e}")))
+        .collect::<Result<_>>()?;
+    let model = args.get_or("model", "vit-micro");
+    report::print_scaling_study(rt, model, &gpus)
+}
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args =
+        Args::parse(&raw, &["bf16", "naive-mode", "quick", "help"]).map_err(|e| anyhow!(e))?;
+    if args.positional.is_empty() || args.get_bool("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let artifacts = args.get_or("artifacts", "artifacts").to_string();
+    let cmd = args.positional[0].as_str();
+
+    // Commands that don't need the runtime:
+    match cmd {
+        "account" => return cmd_account(&args),
+        "plan" => {
+            let budget_gb: f64 =
+                args.get_parse_or("budget-gb", 40.0).map_err(|e| anyhow!(e))?;
+            report::print_max_batch_table(budget_gb * 1e9);
+            return Ok(());
+        }
+        _ => {}
+    }
+    let rt = Runtime::load(&artifacts)?;
+    match cmd {
+        "list" => cmd_list(&rt),
+        "train" => cmd_train(&rt, &args),
+        "bench" => cmd_bench(&rt, &args),
+        "scale" => cmd_scale(&rt, &args),
+        "report" => {
+            let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            report::run(&rt, what, args.get_bool("quick"))
+        }
+        other => Err(anyhow!("unknown command {other:?}\n{USAGE}")),
+    }
+}

@@ -1,0 +1,222 @@
+//! Analytic accelerator-memory model: what determines the paper's
+//! **maximum physical batch size** (Figure 3, Table 3).
+//!
+//! The paper measures the largest physical batch before CUDA OOM on
+//! 32 GB V100 / 40 GB A100. Our substrate has no VRAM, so we model the
+//! footprint: each clipping method differs *structurally* in what it
+//! must hold per example —
+//!
+//! * non-private:     forward tape (activations) only
+//! * per-example:     tape (held longer by the hooks) **+ the [B, P]
+//!                    per-example gradient tensor** — the O(B*P) term
+//!                    that collapses the max batch (x4..x11 in Fig. 3)
+//! * ghost (PV):      tape + tiny T^2 Gram buffers (norms); no [B, P]
+//! * book keeping:    tape + the cached per-layer output-grads b_l
+//!                    needed to rebuild clipped sums (the "small memory
+//!                    cost" vs ghost the paper notes)
+//! * masked JAX:      [B, P] like per-example but without hook overhead
+//!
+//! Coefficients are calibrated once against Table 3 (ViT-Base, A100
+//! 40 GB) and then *validated* against the V100 column and the Figure 3
+//! model ladder in tests — i.e. one column fits, the rest must follow.
+
+use crate::clipping::ClippingMethod;
+use crate::models::Arch;
+
+/// Calibrated footprint coefficients (dimensionless multipliers on the
+/// stored-activation bytes, see module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct MemModel {
+    /// Non-private: tape + transient backward buffers.
+    pub k_act_nonprivate: f64,
+    /// Ghost clipping: tape held through the second backward + Grams.
+    pub k_act_ghost: f64,
+    /// Per-example (Opacus): hooks keep activations + per-layer backprops.
+    pub k_act_perexample: f64,
+    /// Per-example grad_sample storage multiplier (fp32 + einsum buffer).
+    pub k_grad_perexample: f64,
+    /// Masked JAX: vmapped tape; per-example grads materialized once.
+    pub k_act_masked: f64,
+    pub k_grad_masked: f64,
+    /// Fixed runtime overhead (context, workspace), bytes.
+    pub fixed_overhead: f64,
+}
+
+impl Default for MemModel {
+    fn default() -> Self {
+        Self {
+            k_act_nonprivate: 1.05,
+            k_act_ghost: 1.10,
+            k_act_perexample: 3.0,
+            k_grad_perexample: 2.0,
+            k_act_masked: 1.6,
+            k_grad_masked: 1.0,
+            fixed_overhead: 1.5e9,
+        }
+    }
+}
+
+impl MemModel {
+    /// Static (batch-independent) bytes: weights + summed grads + a
+    /// working copy (optimizer/update).
+    fn static_bytes(&self, arch: &Arch) -> f64 {
+        12.0 * arch.params() as f64 + self.fixed_overhead
+    }
+
+    /// Book-Keeping per-example extra: cached output-grads sum_l T_l * d_out_l.
+    fn bk_extra_floats(arch: &Arch) -> f64 {
+        arch.linears
+            .iter()
+            .map(|l| (l.t * l.d_out) as f64)
+            .sum()
+    }
+
+    /// Ghost per-example extra: the two T_l x T_l Grams of the largest
+    /// layer (computed layer-at-a-time, so only the max is live).
+    fn ghost_extra_floats(arch: &Arch) -> f64 {
+        arch.linears
+            .iter()
+            .map(|l| 2.0 * (l.t * l.t) as f64)
+            .fold(0.0, f64::max)
+    }
+
+    /// Peak bytes at physical batch `b` for `method` on `arch`.
+    pub fn peak_bytes(&self, arch: &Arch, method: ClippingMethod, b: usize) -> f64 {
+        let act = arch.act_floats_per_example as f64 * 4.0;
+        let p4 = arch.params() as f64 * 4.0;
+        let bf = b as f64;
+        let per_example = match method {
+            ClippingMethod::NonPrivate => act * self.k_act_nonprivate,
+            ClippingMethod::PerExample => {
+                act * self.k_act_perexample + p4 * self.k_grad_perexample
+            }
+            ClippingMethod::Ghost | ClippingMethod::MixGhost => {
+                act * self.k_act_ghost + Self::ghost_extra_floats(arch) * 4.0
+            }
+            ClippingMethod::BkGhost
+            | ClippingMethod::BkMixGhost
+            | ClippingMethod::BkMixOpt => {
+                act * self.k_act_nonprivate + Self::bk_extra_floats(arch) * 4.0
+            }
+            ClippingMethod::MaskedJax | ClippingMethod::NaiveJax => {
+                act * self.k_act_masked + p4 * self.k_grad_masked
+            }
+        };
+        self.static_bytes(arch) + bf * per_example
+    }
+
+    /// Largest physical batch fitting in `budget_bytes` (0 if even b=1
+    /// does not fit — the "too large to fit one example" regime the
+    /// paper flags for Huge models under per-example clipping).
+    pub fn max_physical_batch(
+        &self,
+        arch: &Arch,
+        method: ClippingMethod,
+        budget_bytes: f64,
+    ) -> usize {
+        if self.peak_bytes(arch, method, 1) > budget_bytes {
+            return 0;
+        }
+        let (mut lo, mut hi) = (1usize, 2usize);
+        while self.peak_bytes(arch, method, hi) <= budget_bytes {
+            lo = hi;
+            hi *= 2;
+            if hi > 1 << 24 {
+                break;
+            }
+        }
+        while lo + 1 < hi {
+            let mid = lo + (hi - lo) / 2;
+            if self.peak_bytes(arch, method, mid) <= budget_bytes {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+}
+
+/// GPU memory budgets used throughout the paper.
+pub const A100_BYTES: f64 = 40.0e9;
+pub const V100_BYTES: f64 = 32.0e9;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{paper_ladder, vit};
+
+    fn vit_base() -> Arch {
+        vit("ViT-Base", 12, 768, 4)
+    }
+
+    #[test]
+    fn table3_a100_ordering_and_magnitudes() {
+        // Paper Table 3 (ViT-Base, A100 40GB): NP 268, PerEx 35,
+        // Ghost 257, BK 209. Calibrated model must land within 30% and
+        // preserve the strict ordering NP > Ghost > BK >> PerEx.
+        let m = MemModel::default();
+        let a = vit_base();
+        let np = m.max_physical_batch(&a, ClippingMethod::NonPrivate, A100_BYTES);
+        let pe = m.max_physical_batch(&a, ClippingMethod::PerExample, A100_BYTES);
+        let gh = m.max_physical_batch(&a, ClippingMethod::Ghost, A100_BYTES);
+        let bk = m.max_physical_batch(&a, ClippingMethod::BkGhost, A100_BYTES);
+        assert!(np > gh && gh > bk && bk > pe, "{np} {gh} {bk} {pe}");
+        for (got, want) in [(np, 268.0), (pe, 35.0), (gh, 257.0), (bk, 209.0)] {
+            let rel = (got as f64 - want).abs() / want;
+            assert!(rel < 0.35, "got {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn table3_v100_follows_from_same_calibration() {
+        // V100 column (32 GB): NP 216, PerEx 28, Ghost 203, BK 189.
+        let m = MemModel::default();
+        let a = vit_base();
+        let np = m.max_physical_batch(&a, ClippingMethod::NonPrivate, V100_BYTES);
+        let pe = m.max_physical_batch(&a, ClippingMethod::PerExample, V100_BYTES);
+        assert!((np as f64 - 216.0).abs() / 216.0 < 0.35, "np={np}");
+        assert!((pe as f64 - 28.0).abs() / 28.0 < 0.45, "pe={pe}");
+    }
+
+    #[test]
+    fn perexample_gap_grows_with_model_size() {
+        // Figure 3: relative max-batch gap is ~x4 for Tiny, ~x11 for Huge.
+        let m = MemModel::default();
+        let ladder = paper_ladder();
+        let ratios: Vec<f64> = ladder[..5]
+            .iter()
+            .map(|a| {
+                let np = m.max_physical_batch(a, ClippingMethod::NonPrivate, A100_BYTES);
+                let pe = m.max_physical_batch(a, ClippingMethod::PerExample, A100_BYTES);
+                np as f64 / pe.max(1) as f64
+            })
+            .collect();
+        assert!(
+            ratios.windows(2).all(|w| w[1] >= w[0] * 0.95),
+            "gap must grow with size: {ratios:?}"
+        );
+        assert!(ratios[0] > 2.0 && *ratios.last().unwrap() > 8.0, "{ratios:?}");
+    }
+
+    #[test]
+    fn peak_is_monotone_in_batch() {
+        let m = MemModel::default();
+        let a = vit_base();
+        for method in ClippingMethod::ALL {
+            let mut prev = 0.0;
+            for b in [1, 2, 8, 32, 128] {
+                let p = m.peak_bytes(&a, *method, b);
+                assert!(p > prev);
+                prev = p;
+            }
+        }
+    }
+
+    #[test]
+    fn oom_at_one_example_reports_zero() {
+        let m = MemModel::default();
+        let a = vit("huge", 32, 1280, 4);
+        assert_eq!(m.max_physical_batch(&a, ClippingMethod::PerExample, 1e9), 0);
+    }
+}

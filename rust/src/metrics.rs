@@ -1,0 +1,157 @@
+//! Throughput metering and bootstrap confidence intervals.
+//!
+//! The paper's headline metric is **throughput** — processed training
+//! examples per second — and its Figure 6 reports medians with 95%
+//! bootstrap confidence intervals (JAX runs are notably more variable
+//! than PyTorch's, which the error bars make visible). Both utilities
+//! live here, seeded for reproducibility.
+
+use crate::util::rng::ChaChaRng;
+use std::time::Duration;
+
+/// Accumulates (examples, seconds) observations for one configuration.
+#[derive(Debug, Clone, Default)]
+pub struct ThroughputMeter {
+    /// Per-observation throughput samples (examples/second).
+    samples: Vec<f64>,
+    total_examples: f64,
+    total_seconds: f64,
+}
+
+impl ThroughputMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one timed segment that processed `examples` examples.
+    pub fn record(&mut self, examples: usize, elapsed: Duration) {
+        let secs = elapsed.as_secs_f64();
+        if secs > 0.0 {
+            self.samples.push(examples as f64 / secs);
+        }
+        self.total_examples += examples as f64;
+        self.total_seconds += secs;
+    }
+
+    pub fn record_secs(&mut self, examples: usize, secs: f64) {
+        self.record(examples, Duration::from_secs_f64(secs));
+    }
+
+    /// Aggregate throughput = total examples / total time.
+    pub fn aggregate(&self) -> f64 {
+        if self.total_seconds == 0.0 {
+            0.0
+        } else {
+            self.total_examples / self.total_seconds
+        }
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Median + bootstrap 95% CI of the per-observation throughput
+    /// (the Figure 6 estimator).
+    pub fn median_ci(&self, seed: u64) -> Summary {
+        summary_with_ci(&self.samples, seed)
+    }
+}
+
+/// Median and bootstrap 95% confidence interval.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub median: f64,
+    pub ci_low: f64,
+    pub ci_high: f64,
+    pub n: usize,
+}
+
+fn median_of(sorted: &[f64]) -> f64 {
+    let n = sorted.len();
+    if n == 0 {
+        return f64::NAN;
+    }
+    if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+    }
+}
+
+/// Seeded bootstrap (1000 resamples) of the median with a percentile
+/// 95% interval — the paper's Figure 6 estimator.
+pub fn summary_with_ci(samples: &[f64], seed: u64) -> Summary {
+    let n = samples.len();
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = median_of(&sorted);
+    if n < 2 {
+        return Summary { median: med, ci_low: med, ci_high: med, n };
+    }
+    let mut rng = ChaChaRng::from_seed_stream(seed, 0, b"bootstrp");
+    const RESAMPLES: usize = 1000;
+    let mut medians = Vec::with_capacity(RESAMPLES);
+    let mut buf = vec![0.0; n];
+    for _ in 0..RESAMPLES {
+        for slot in buf.iter_mut() {
+            *slot = samples[rng.gen_range(n)];
+        }
+        buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        medians.push(median_of(&buf));
+    }
+    medians.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lo = medians[(0.025 * RESAMPLES as f64) as usize];
+    let hi = medians[((0.975 * RESAMPLES as f64) as usize).min(RESAMPLES - 1)];
+    Summary { median: med, ci_low: lo, ci_high: hi, n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_throughput() {
+        let mut m = ThroughputMeter::new();
+        m.record_secs(100, 1.0);
+        m.record_secs(300, 1.0);
+        assert!((m.aggregate() - 200.0).abs() < 1e-9);
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn ci_covers_true_median_and_is_deterministic() {
+        let samples: Vec<f64> = (0..200).map(|i| 100.0 + (i % 17) as f64).collect();
+        let s1 = summary_with_ci(&samples, 42);
+        let s2 = summary_with_ci(&samples, 42);
+        assert_eq!(s1, s2, "seeded bootstrap must be deterministic");
+        assert!(s1.ci_low <= s1.median && s1.median <= s1.ci_high);
+        // True median of the pattern is 108; CI tight for 200 samples.
+        assert!((s1.median - 108.0).abs() <= 1.0);
+        assert!(s1.ci_high - s1.ci_low < 4.0);
+    }
+
+    #[test]
+    fn tiny_sample_degenerates_gracefully() {
+        let s = summary_with_ci(&[5.0], 1);
+        assert_eq!(s.median, 5.0);
+        assert_eq!((s.ci_low, s.ci_high), (5.0, 5.0));
+        assert!(summary_with_ci(&[], 1).median.is_nan());
+    }
+
+    #[test]
+    fn wider_spread_wider_ci() {
+        let tight: Vec<f64> = (0..100).map(|i| 100.0 + (i % 3) as f64).collect();
+        let wide: Vec<f64> = (0..100).map(|i| 100.0 + (i % 37) as f64 * 3.0).collect();
+        let st = summary_with_ci(&tight, 7);
+        let sw = summary_with_ci(&wide, 7);
+        assert!(sw.ci_high - sw.ci_low > st.ci_high - st.ci_low);
+    }
+}

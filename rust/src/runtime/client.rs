@@ -1,0 +1,296 @@
+//! The model-facing runtime: typed wrappers over the flat-param ABI.
+
+use super::compile_cache::CompileCache;
+use super::manifest::{Manifest, ModelMeta};
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::Arc;
+
+fn xerr(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e:?}")
+}
+
+/// Owns the PJRT client, the manifest, and the compile cache.
+pub struct Runtime {
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Rc<RefCell<CompileCache>>,
+}
+
+impl Runtime {
+    /// Load the artifacts directory (must contain manifest.json).
+    pub fn load(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = artifacts_dir.into();
+        let (manifest, dir) = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(Self { dir, manifest, cache: Rc::new(RefCell::new(CompileCache::new(client))) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile timings recorded so far (Fig A.2 data).
+    pub fn compile_records(&self) -> Vec<super::CompileRecord> {
+        self.cache.borrow().records().to_vec()
+    }
+
+    /// A typed view over one model's artifacts.
+    pub fn model(&self, name: &str) -> Result<ModelRuntime> {
+        let meta = self.manifest.model(name)?.clone();
+        Ok(ModelRuntime {
+            name: name.to_string(),
+            dir: self.dir.clone(),
+            meta,
+            cache: self.cache.clone(),
+        })
+    }
+}
+
+/// Decoded outputs of one accum call.
+pub struct AccumOut {
+    /// New gradient accumulator (kept as a Literal: it round-trips back
+    /// into the next accum call without re-encoding).
+    pub acc: xla::Literal,
+    /// Sum of masked per-example losses.
+    pub loss_sum: f32,
+    /// Per-example squared gradient norms (zeros for nonprivate).
+    pub sq_norms: Vec<f32>,
+}
+
+/// Typed executor for one model.
+pub struct ModelRuntime {
+    name: String,
+    dir: PathBuf,
+    meta: ModelMeta,
+    cache: Rc<RefCell<CompileCache>>,
+}
+
+impl ModelRuntime {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.meta.n_params
+    }
+
+    /// Image elements per example (H*W*C).
+    pub fn image_dim(&self) -> usize {
+        self.meta.image * self.meta.image * self.meta.channels
+    }
+
+    /// Load the initial (AOT-initialized) parameter vector.
+    pub fn init_params(&self) -> Result<xla::Literal> {
+        let path = self.dir.join(&self.meta.init_params);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != self.meta.n_params * 4 {
+            return Err(anyhow!(
+                "init params size mismatch: {} bytes for {} params",
+                bytes.len(),
+                self.meta.n_params
+            ));
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(xla::Literal::vec1(&floats))
+    }
+
+    /// Fresh zero accumulator.
+    pub fn zero_acc(&self) -> xla::Literal {
+        xla::Literal::vec1(&vec![0.0f32; self.meta.n_params])
+    }
+
+    /// Checkpoint the flat parameter vector (raw little-endian f32, the
+    /// same format as the AOT-written `*_init.bin`, so checkpoints and
+    /// initializations are interchangeable).
+    pub fn save_params(&self, params: &xla::Literal, path: &std::path::Path) -> Result<()> {
+        let v = params.to_vec::<f32>().map_err(xerr)?;
+        if v.len() != self.meta.n_params {
+            return Err(anyhow!(
+                "checkpoint length {} != n_params {}",
+                v.len(),
+                self.meta.n_params
+            ));
+        }
+        let mut bytes = Vec::with_capacity(v.len() * 4);
+        for x in &v {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load a checkpoint written by [`Self::save_params`] (or the AOT
+    /// init file) as the flat parameter Literal.
+    pub fn load_params(&self, path: &std::path::Path) -> Result<xla::Literal> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != self.meta.n_params * 4 {
+            return Err(anyhow!(
+                "checkpoint {} has {} bytes, expected {}",
+                path.display(),
+                bytes.len(),
+                self.meta.n_params * 4
+            ));
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(xla::Literal::vec1(&floats))
+    }
+
+    /// Whether the accum executable for this spec exists.
+    pub fn has_accum(&self, variant: &str, batch: usize, dtype: &str) -> bool {
+        self.meta.find_accum(variant, batch, dtype).is_some()
+    }
+
+    /// Batch sizes available for (variant, dtype).
+    pub fn accum_batches(&self, variant: &str, dtype: &str) -> Vec<usize> {
+        self.meta.accum_batches(variant, dtype)
+    }
+
+    /// Whether the given accum executable is already compiled (used to
+    /// observe naive-JAX recompilation, Fig A.2).
+    pub fn accum_is_compiled(&self, variant: &str, batch: usize, dtype: &str) -> bool {
+        match self.meta.find_accum(variant, batch, dtype) {
+            Some(e) => self.cache.borrow().is_cached(&e.path),
+            None => false,
+        }
+    }
+
+    fn compile(&self, file: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        self.cache.borrow_mut().get(&self.dir, file)
+    }
+
+    /// Pre-compile (and time) the accum executable for this spec.
+    pub fn prepare_accum(
+        &self,
+        variant: &str,
+        batch: usize,
+        dtype: &str,
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let e = self.meta.find_accum(variant, batch, dtype).ok_or_else(|| {
+            anyhow!(
+                "no accum artifact for {} variant={variant} B={batch} dtype={dtype} \
+                 (lowered batches: {:?})",
+                self.name,
+                self.meta.accum_batches(variant, dtype)
+            )
+        })?;
+        self.compile(&e.path)
+    }
+
+    /// One gradient-accumulation call (the Algorithm 1/2 inner loop).
+    ///
+    /// `x` is row-major [batch, H, W, C]; `mask` the Algorithm-2 masks.
+    pub fn run_accum(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        params: &xla::Literal,
+        acc: &xla::Literal,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<AccumOut> {
+        let b = y.len();
+        debug_assert_eq!(x.len(), b * self.image_dim());
+        debug_assert_eq!(mask.len(), b);
+        let img = self.meta.image as i64;
+        let xs = xla::Literal::vec1(x)
+            .reshape(&[b as i64, img, img, self.meta.channels as i64])
+            .map_err(xerr)?;
+        let ys = xla::Literal::vec1(y);
+        let ms = xla::Literal::vec1(mask);
+        let out = exe
+            .execute(&[params, acc, &xs, &ys, &ms])
+            .map_err(xerr)?[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?;
+        let (acc_out, loss, sq) = out.to_tuple3().map_err(xerr)?;
+        Ok(AccumOut {
+            acc: acc_out,
+            loss_sum: loss.get_first_element::<f32>().map_err(xerr)?,
+            sq_norms: sq.to_vec::<f32>().map_err(xerr)?,
+        })
+    }
+
+    /// The once-per-logical-batch noise + SGD step.
+    ///
+    /// `denom` is the Algorithm-1 |L| divisor (expected logical batch),
+    /// `noise_mult` is sigma * C (0 for the non-private baseline).
+    pub fn run_apply(
+        &self,
+        params: &xla::Literal,
+        acc: &xla::Literal,
+        seed: i32,
+        denom: f32,
+        lr: f32,
+        noise_mult: f32,
+    ) -> Result<xla::Literal> {
+        let e = self
+            .meta
+            .find_apply()
+            .ok_or_else(|| anyhow!("no apply artifact for {}", self.name))?;
+        let exe = self.compile(&e.path)?;
+        let out = exe
+            .execute(&[
+                params,
+                acc,
+                &xla::Literal::vec1(&[seed]),
+                &xla::Literal::vec1(&[denom]),
+                &xla::Literal::vec1(&[lr]),
+                &xla::Literal::vec1(&[noise_mult]),
+            ])
+            .map_err(xerr)?[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?;
+        out.to_tuple1().map_err(xerr)
+    }
+
+    /// Forward-only evaluation: returns (loss_sum, ncorrect) over the
+    /// eval batch (whose size is fixed by the lowered artifact).
+    pub fn run_eval(
+        &self,
+        params: &xla::Literal,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f32, f32)> {
+        let e = self
+            .meta
+            .find_eval()
+            .ok_or_else(|| anyhow!("no eval artifact for {}", self.name))?;
+        let want = e.batch.unwrap_or(0);
+        if y.len() != want {
+            return Err(anyhow!("eval batch must be exactly {want}, got {}", y.len()));
+        }
+        let exe = self.compile(&e.path)?;
+        let img = self.meta.image as i64;
+        let xs = xla::Literal::vec1(x)
+            .reshape(&[y.len() as i64, img, img, self.meta.channels as i64])
+            .map_err(xerr)?;
+        let ys = xla::Literal::vec1(y);
+        let out = exe.execute(&[params, &xs, &ys]).map_err(xerr)?[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?;
+        let (loss, ncorrect) = out.to_tuple2().map_err(xerr)?;
+        Ok((
+            loss.get_first_element::<f32>().map_err(xerr)?,
+            ncorrect.get_first_element::<f32>().map_err(xerr)?,
+        ))
+    }
+
+    /// Eval batch size fixed at AOT time.
+    pub fn eval_batch(&self) -> Option<usize> {
+        self.meta.find_eval().and_then(|e| e.batch)
+    }
+}

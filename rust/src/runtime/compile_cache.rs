@@ -1,0 +1,78 @@
+//! Compile-once cache with timing — the observable behind Figure A.2.
+//!
+//! The paper's "naive JAX" DP-SGD recompiles whenever Poisson sampling
+//! produces a physical batch size it has not seen (jit retracing); the
+//! masked variant (Algorithm 2) compiles exactly once per shape. This
+//! cache makes that cost a first-class measurement: every PJRT
+//! compilation is recorded with its wall-clock, and the trainer's report
+//! includes the per-size compile-time series.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One recorded compilation.
+#[derive(Debug, Clone)]
+pub struct CompileRecord {
+    /// Artifact file name.
+    pub path: String,
+    /// Wall-clock seconds for parse + PJRT compile.
+    pub seconds: f64,
+}
+
+/// Caches compiled executables keyed by artifact path.
+pub struct CompileCache {
+    client: xla::PjRtClient,
+    cache: HashMap<String, Arc<xla::PjRtLoadedExecutable>>,
+    records: Vec<CompileRecord>,
+}
+
+impl CompileCache {
+    pub fn new(client: xla::PjRtClient) -> Self {
+        Self { client, cache: HashMap::new(), records: Vec::new() }
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Number of distinct executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// All compile timings observed (Fig A.2 data).
+    pub fn records(&self) -> &[CompileRecord] {
+        &self.records
+    }
+
+    /// True if `file` is already compiled (no cost on next use).
+    pub fn is_cached(&self, file: &str) -> bool {
+        self.cache.contains_key(file)
+    }
+
+    /// Get or compile the executable for `dir/file`.
+    pub fn get(&mut self, dir: &Path, file: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.get(file) {
+            return Ok(exe.clone());
+        }
+        let full = dir.join(file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&full)
+            .map_err(|e| anyhow::anyhow!("{e:?}"))
+            .with_context(|| format!("parsing HLO text {}", full.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("{e:?}"))
+            .with_context(|| format!("PJRT compile of {}", full.display()))?;
+        let seconds = t0.elapsed().as_secs_f64();
+        self.records.push(CompileRecord { path: file.to_string(), seconds });
+        let exe = Arc::new(exe);
+        self.cache.insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+}

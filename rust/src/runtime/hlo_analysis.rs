@@ -1,0 +1,193 @@
+//! Static analysis of HLO text — the reproduction's stand-in for the
+//! paper's Nsight memory profiling.
+//!
+//! Parses the shapes out of an AOT-lowered module and reports:
+//!
+//! * the largest live tensor and total declared tensor bytes (a proxy
+//!   for the activation/grad footprint that determines Fig. 3's max
+//!   physical batch), and
+//! * whether any tensor of shape `[B, P]` (per-example gradients for
+//!   the full parameter vector) exists — the **structural proof** that
+//!   ghost clipping / Book Keeping never materialize per-example grads
+//!   while the per-example variants do (paper Section 2.2).
+//!
+//! The parser is deliberately small: HLO text lines look like
+//! `  %name = f32[16,120100]{1,0} op-name(...)` and we only need the
+//! result dtype/shape of each instruction.
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Summary of one HLO module's tensor population.
+#[derive(Debug, Clone)]
+pub struct HloStats {
+    /// Instruction count by opcode.
+    pub op_counts: BTreeMap<String, usize>,
+    /// Total bytes across all instruction result shapes.
+    pub total_tensor_bytes: u64,
+    /// Largest single tensor (bytes, rendered shape).
+    pub largest_tensor_bytes: u64,
+    pub largest_tensor_shape: String,
+    /// All distinct result shapes (dims only) and their counts.
+    pub shapes: BTreeMap<Vec<u64>, usize>,
+}
+
+fn dtype_bytes(ty: &str) -> u64 {
+    match ty {
+        "f64" | "s64" | "u64" | "c64" => 8,
+        "f32" | "s32" | "u32" => 4,
+        "f16" | "bf16" | "s16" | "u16" => 2,
+        "s8" | "u8" | "pred" => 1,
+        _ => 4,
+    }
+}
+
+/// Parse ` f32[16,120100]{...}` -> (elem_bytes, dims). Returns None for
+/// tuple/opaque/token results.
+fn parse_shape(s: &str) -> Option<(u64, Vec<u64>)> {
+    let s = s.trim_start();
+    let bracket = s.find('[')?;
+    let ty = &s[..bracket];
+    if !ty.chars().all(|c| c.is_ascii_alphanumeric()) || ty.is_empty() {
+        return None;
+    }
+    let close = s.find(']')?;
+    let dims_str = &s[bracket + 1..close];
+    let dims: Vec<u64> = if dims_str.is_empty() {
+        vec![]
+    } else {
+        dims_str
+            .split(',')
+            .map(|d| d.trim().parse::<u64>().ok())
+            .collect::<Option<_>>()?
+    };
+    Some((dtype_bytes(ty), dims))
+}
+
+/// Analyze an HLO text module.
+pub fn analyze(text: &str) -> HloStats {
+    let mut stats = HloStats {
+        op_counts: BTreeMap::new(),
+        total_tensor_bytes: 0,
+        largest_tensor_bytes: 0,
+        largest_tensor_shape: String::new(),
+        shapes: BTreeMap::new(),
+    };
+    for line in text.lines() {
+        let line = line.trim_start();
+        // instruction lines: [ROOT] [%]name = <shape> opcode(...)
+        // (jax-emitted HLO text omits the % sigil on instruction names)
+        let rest = line.strip_prefix("ROOT ").unwrap_or(line);
+        let named = rest.starts_with('%')
+            || rest
+                .chars()
+                .next()
+                .is_some_and(|c| c.is_ascii_alphabetic() || c == '_');
+        if !named {
+            continue;
+        }
+        let Some(eq) = rest.find(" = ") else { continue };
+        // the name must not contain spaces (rules out header lines)
+        if rest[..eq].contains(' ') {
+            continue;
+        }
+        let rhs = &rest[eq + 3..];
+        let Some((bytes_per, dims)) = parse_shape(rhs) else { continue };
+        // opcode: token after the shape's layout annotation
+        let after_shape = rhs
+            .find(' ')
+            .map(|i| rhs[i + 1..].trim_start())
+            .unwrap_or("");
+        let opcode: String = after_shape
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '-' || *c == '.')
+            .collect();
+        let opcode = opcode
+            .split('.')
+            .next()
+            .unwrap_or("")
+            .to_string();
+        if !opcode.is_empty() {
+            *stats.op_counts.entry(opcode).or_insert(0) += 1;
+        }
+        let total: u64 = bytes_per * dims.iter().product::<u64>().max(1);
+        stats.total_tensor_bytes += total;
+        if total > stats.largest_tensor_bytes {
+            stats.largest_tensor_bytes = total;
+            stats.largest_tensor_shape = format!("{dims:?}");
+        }
+        *stats.shapes.entry(dims).or_insert(0) += 1;
+    }
+    stats
+}
+
+/// Analyze an artifact file.
+pub fn analyze_file(path: &Path) -> Result<HloStats> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Ok(analyze(&text))
+}
+
+impl HloStats {
+    /// Does any tensor have exactly the shape [batch, n_params]?
+    /// (The per-example gradient matrix ghost clipping avoids.)
+    pub fn has_tensor(&self, dims: &[u64]) -> bool {
+        self.shapes.contains_key(&dims.to_vec())
+    }
+
+    /// Count of instructions with a given opcode.
+    pub fn ops(&self, opcode: &str) -> usize {
+        self.op_counts.get(opcode).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"HloModule jit_f, entry_computation_layout={(f32[10]{0})->f32[10]{0}}
+
+ENTRY main.5 {
+  %p0 = f32[10]{0} parameter(0)
+  %c = f32[] constant(2)
+  %b = f32[10]{0} broadcast(%c), dimensions={}
+  %big = f32[16,120100]{1,0} broadcast(%c), dimensions={}
+  %m = bf16[4,8]{1,0} convert(%p0)
+  ROOT %mul = f32[10]{0} multiply(%p0, %b)
+}
+"#;
+
+    #[test]
+    fn parses_shapes_and_ops() {
+        let s = analyze(SAMPLE);
+        assert_eq!(s.ops("parameter"), 1);
+        assert_eq!(s.ops("broadcast"), 2);
+        assert_eq!(s.ops("multiply"), 1);
+        assert!(s.has_tensor(&[16, 120100]));
+        assert!(s.has_tensor(&[10]));
+        assert!(!s.has_tensor(&[9, 9]));
+        assert_eq!(s.largest_tensor_bytes, 16 * 120100 * 4);
+        assert_eq!(s.largest_tensor_shape, "[16, 120100]");
+    }
+
+    #[test]
+    fn bf16_bytes_counted() {
+        let s = analyze(SAMPLE);
+        // bf16[4,8] = 64 bytes contributes to the total
+        assert!(s.total_tensor_bytes >= 16 * 120100 * 4 + 64);
+    }
+
+    #[test]
+    fn scalar_and_empty_shapes() {
+        let s = analyze("ENTRY e {\n  %c = f32[] constant(1)\n}\n");
+        assert!(s.has_tensor(&[]));
+        assert_eq!(s.total_tensor_bytes, 4);
+    }
+
+    #[test]
+    fn ignores_non_instruction_lines() {
+        let s = analyze("HloModule foo\n\nsome comment\n");
+        assert_eq!(s.total_tensor_bytes, 0);
+    }
+}

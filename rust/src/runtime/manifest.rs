@@ -1,0 +1,234 @@
+//! artifacts/manifest.json schema — written by python/compile/aot.py,
+//! the single source of truth about what was lowered.
+
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One lowered executable.
+#[derive(Debug, Clone)]
+pub struct ExecutableMeta {
+    /// File name under the artifacts dir.
+    pub path: String,
+    /// "accum" | "apply" | "eval".
+    pub kind: String,
+    /// Step variant for accum executables.
+    pub variant: Option<String>,
+    /// Physical batch size for accum/eval executables.
+    pub batch: Option<usize>,
+    /// "f32" (default) or "bf16".
+    pub dtype: Option<String>,
+}
+
+impl ExecutableMeta {
+    pub fn dtype_or_f32(&self) -> &str {
+        self.dtype.as_deref().unwrap_or("f32")
+    }
+}
+
+/// One model's artifact set.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub family: String,
+    pub n_params: usize,
+    pub image: usize,
+    pub channels: usize,
+    pub num_classes: usize,
+    pub clip_norm: f64,
+    pub flops_fwd_per_example: f64,
+    pub init_params: String,
+    pub executables: Vec<ExecutableMeta>,
+}
+
+impl ModelMeta {
+    /// Find the accum executable for (variant, batch, dtype).
+    pub fn find_accum(&self, variant: &str, batch: usize, dtype: &str) -> Option<&ExecutableMeta> {
+        self.executables.iter().find(|e| {
+            e.kind == "accum"
+                && e.variant.as_deref() == Some(variant)
+                && e.batch == Some(batch)
+                && e.dtype_or_f32() == dtype
+        })
+    }
+
+    pub fn find_apply(&self) -> Option<&ExecutableMeta> {
+        self.executables.iter().find(|e| e.kind == "apply")
+    }
+
+    pub fn find_eval(&self) -> Option<&ExecutableMeta> {
+        self.executables.iter().find(|e| e.kind == "eval")
+    }
+
+    /// Batch sizes lowered for (variant, dtype), ascending.
+    pub fn accum_batches(&self, variant: &str, dtype: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .executables
+            .iter()
+            .filter(|e| {
+                e.kind == "accum"
+                    && e.variant.as_deref() == Some(variant)
+                    && e.dtype_or_f32() == dtype
+            })
+            .filter_map(|e| e.batch)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// All accum variants present (f32).
+    pub fn variants(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .executables
+            .iter()
+            .filter(|e| e.kind == "accum" && e.dtype_or_f32() == "f32")
+            .filter_map(|e| e.variant.clone())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub seed: u64,
+    /// BTreeMap for stable iteration order in reports.
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+fn need<'a>(v: &'a Value, key: &str) -> Result<&'a Value> {
+    v.get(key).ok_or_else(|| anyhow!("manifest: missing key {key:?}"))
+}
+
+fn need_usize(v: &Value, key: &str) -> Result<usize> {
+    need(v, key)?.as_usize().ok_or_else(|| anyhow!("manifest: {key:?} not a number"))
+}
+
+fn need_f64(v: &Value, key: &str) -> Result<f64> {
+    need(v, key)?.as_f64().ok_or_else(|| anyhow!("manifest: {key:?} not a number"))
+}
+
+fn need_str(v: &Value, key: &str) -> Result<String> {
+    Ok(need(v, key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("manifest: {key:?} not a string"))?
+        .to_string())
+}
+
+impl ExecutableMeta {
+    fn from_value(v: &Value) -> Result<Self> {
+        Ok(Self {
+            path: need_str(v, "path")?,
+            kind: need_str(v, "kind")?,
+            variant: v.get("variant").and_then(|x| x.as_str()).map(str::to_string),
+            batch: v.get("batch").and_then(|x| x.as_usize()),
+            dtype: v.get("dtype").and_then(|x| x.as_str()).map(str::to_string),
+        })
+    }
+}
+
+impl ModelMeta {
+    fn from_value(v: &Value) -> Result<Self> {
+        let executables = need(v, "executables")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest: executables not an array"))?
+            .iter()
+            .map(ExecutableMeta::from_value)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            family: need_str(v, "family")?,
+            n_params: need_usize(v, "n_params")?,
+            image: need_usize(v, "image")?,
+            channels: need_usize(v, "channels")?,
+            num_classes: need_usize(v, "num_classes")?,
+            clip_norm: need_f64(v, "clip_norm")?,
+            flops_fwd_per_example: need_f64(v, "flops_fwd_per_example")?,
+            init_params: need_str(v, "init_params")?,
+            executables,
+        })
+    }
+}
+
+impl Manifest {
+    /// Parse manifest JSON text (in-tree parser; offline, no serde).
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow!("parsing manifest.json: {e}"))?;
+        let mut models = BTreeMap::new();
+        for (name, mv) in need(&v, "models")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest: models not an object"))?
+        {
+            models.insert(
+                name.clone(),
+                ModelMeta::from_value(mv).with_context(|| format!("model {name:?}"))?,
+            );
+        }
+        Ok(Self {
+            version: need_usize(&v, "version")? as u32,
+            seed: need_usize(&v, "seed")? as u64,
+            models,
+        })
+    }
+
+    pub fn load(artifacts_dir: &Path) -> Result<(Self, PathBuf)> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let m = Manifest::parse(&text).context("parsing manifest.json")?;
+        Ok((m, artifacts_dir.to_path_buf()))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "model {name:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest::parse(
+            r#"{
+            "version": 1, "seed": 0,
+            "models": {"m": {
+              "family": "vit", "n_params": 10, "image": 32, "channels": 3,
+              "num_classes": 100, "clip_norm": 1.0,
+              "flops_fwd_per_example": 1000.0, "init_params": "m_init.bin",
+              "executables": [
+                {"path": "a", "kind": "accum", "variant": "masked", "batch": 8, "dtype": "f32"},
+                {"path": "b", "kind": "accum", "variant": "masked", "batch": 4, "dtype": "f32"},
+                {"path": "c", "kind": "accum", "variant": "masked", "batch": 8, "dtype": "bf16"},
+                {"path": "d", "kind": "apply"},
+                {"path": "e", "kind": "eval", "batch": 8}
+              ]}}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn lookup_by_variant_batch_dtype() {
+        let m = sample();
+        let mm = m.model("m").unwrap();
+        assert_eq!(mm.find_accum("masked", 8, "f32").unwrap().path, "a");
+        assert_eq!(mm.find_accum("masked", 8, "bf16").unwrap().path, "c");
+        assert!(mm.find_accum("masked", 16, "f32").is_none());
+        assert!(mm.find_apply().is_some());
+        assert_eq!(mm.accum_batches("masked", "f32"), vec![4, 8]);
+        assert_eq!(mm.variants(), vec!["masked".to_string()]);
+    }
+
+    #[test]
+    fn missing_model_is_an_error() {
+        assert!(sample().model("nope").is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text + manifest + initial
+//! parameters) and executes them on the CPU PJRT client.
+//!
+//! This is the only boundary between L3 (Rust) and the L2/L1 graphs.
+//! Everything crossing it uses the flat-parameter ABI described in
+//! DESIGN.md §3:
+//!
+//! ```text
+//! accum(params[P], acc[P], x[B,H,W,C], y[B], mask[B])
+//!       -> (acc'[P], loss_sum, sq_norms[B])
+//! apply(params[P], acc[P], seed i32[1], denom[1], lr[1], noise_mult[1])
+//!       -> params'[P]
+//! eval (params[P], x[B,H,W,C], y[B]) -> (loss_sum, ncorrect)
+//! ```
+//!
+//! Compilation is cached per artifact and **timed** — the compile-time
+//! measurements are the data behind the paper's Figure A.2 (JAX naive
+//! recompilation cost as a function of batch size).
+
+pub mod client;
+pub mod compile_cache;
+pub mod hlo_analysis;
+pub mod manifest;
+
+pub use client::{ModelRuntime, Runtime};
+pub use compile_cache::{CompileCache, CompileRecord};
+pub use hlo_analysis::{analyze, analyze_file, HloStats};
+pub use manifest::{ExecutableMeta, Manifest, ModelMeta};

@@ -1,0 +1,95 @@
+//! Micro-benchmark harness (offline stand-in for criterion).
+//!
+//! `cargo bench` targets in benches/ are plain binaries (harness = false)
+//! that use this module: warmup iterations, then timed iterations, then
+//! median / mean / min and a simple MAD-based spread. Good enough to
+//! regenerate the paper's tables, deterministic enough for the perf log.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    /// Seconds per iteration.
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    /// Median absolute deviation (robust spread).
+    pub mad: f64,
+}
+
+impl BenchStats {
+    pub fn per_sec(&self) -> f64 {
+        if self.median > 0.0 {
+            1.0 / self.median
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10.3} ms/iter (median; min {:.3}, mad {:.3}, n={})",
+            self.name,
+            self.median * 1e3,
+            self.min * 1e3,
+            self.mad * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` unmeasured + `iters` measured iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    stats_from(name, &samples)
+}
+
+/// Build stats from externally collected per-iteration seconds.
+pub fn stats_from(name: &str, samples: &[f64]) -> BenchStats {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len().max(1);
+    let median = sorted[n / 2];
+    let mean = sorted.iter().sum::<f64>() / n as f64;
+    let min = *sorted.first().unwrap_or(&0.0);
+    let mut dev: Vec<f64> = sorted.iter().map(|x| (x - median).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = dev[n / 2];
+    BenchStats { name: name.to_string(), iters: samples.len(), mean, median, min, mad }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let s = stats_from("t", &[0.2, 0.1, 0.3, 0.1, 0.1]);
+        assert_eq!(s.min, 0.1);
+        assert!(s.median <= 0.2 && s.median >= 0.1);
+        assert!((s.mean - 0.16).abs() < 1e-12);
+        assert!(s.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn bench_runs_the_closure() {
+        let mut count = 0usize;
+        let s = bench("count", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.iters, 5);
+    }
+}

@@ -1,0 +1,109 @@
+//! Tiny CLI argument parser for the `dpshort` launcher (no `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments; collects unknown flags as errors with the
+//! usage string attached.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals in order + flag map.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from raw args (excluding argv[0]); `bool_flags` lists flags
+    /// that take no value.
+    pub fn parse(raw: &[String], bool_flags: &[&str]) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                } else {
+                    i += 1;
+                    let v = raw
+                        .get(i)
+                        .ok_or_else(|| format!("--{name} needs a value"))?;
+                    out.flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| format!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parse(key)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let a = Args::parse(
+            &v(&["train", "--model", "vit-micro", "--steps=4", "--bf16", "extra"]),
+            &["bf16"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.get("model"), Some("vit-micro"));
+        assert_eq!(a.get_parse_or::<u64>("steps", 0).unwrap(), 4);
+        assert!(a.get_bool("bf16"));
+        assert!(!a.get_bool("nope"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&v(&["--model"]), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = Args::parse(&v(&["--steps", "abc"]), &[]).unwrap();
+        assert!(a.get_parse::<u64>("steps").is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! In-tree substrates that would normally come from crates.io — the
+//! build environment is fully offline (only the `xla` bindings and
+//! `anyhow` are vendored), so the reproduction builds its own:
+//!
+//! * [`rng`]   — seeded ChaCha20 PRNG + uniform/normal/shuffle (no `rand`)
+//! * [`json`]  — JSON parser/writer for the artifact manifest (no `serde`)
+//! * [`cli`]   — flag parsing for the `dpshort` launcher (no `clap`)
+//! * [`bench`] — timing harness with warmup + robust stats (no `criterion`)
+//! * [`prop`]  — randomized property-test runner (no `proptest`)
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use rng::ChaChaRng;

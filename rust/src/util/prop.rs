@@ -1,0 +1,58 @@
+//! Randomized property testing (offline stand-in for proptest).
+//!
+//! A seeded case generator + assertion runner: properties run over a few
+//! hundred random cases; on failure the failing case's seed and
+//! description are printed so the case can be replayed exactly. No
+//! shrinking — cases are kept small instead.
+
+use crate::util::rng::ChaChaRng;
+
+/// Run `cases` random property checks. `gen_and_check` receives a
+/// per-case RNG; return `Err(description)` to fail.
+pub fn check<F>(name: &str, cases: u64, mut gen_and_check: F)
+where
+    F: FnMut(&mut ChaChaRng) -> Result<(), String>,
+{
+    // Base seed fixed for reproducibility; override with PROP_SEED.
+    let base: u64 = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD1CE);
+    for case in 0..cases {
+        let mut rng = ChaChaRng::from_seed_stream(base, case, b"proptest");
+        if let Err(msg) = gen_and_check(&mut rng) {
+            panic!(
+                "property `{name}` failed on case {case} (PROP_SEED={base}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("u32 roundtrip", 100, |rng| {
+            let x = rng.next_u32();
+            if x as u64 <= u32::MAX as u64 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed on case")]
+    fn failing_property_panics_with_case() {
+        check("always fails eventually", 10, |rng| {
+            if rng.next_f64() < 0.999 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,237 @@
+//! Seeded ChaCha20 PRNG + distributions — built in-tree because the
+//! environment is offline (no `rand`); DP experiment reproducibility
+//! demands a counter-based, splittable, cross-platform-stable stream,
+//! which ChaCha20 provides (it is also what `rand_chacha` implements, so
+//! the design translates directly).
+//!
+//! The implementation follows RFC 7539's block function; we use the
+//! 32-byte seed as the key, a zero nonce, and the 32-bit block counter,
+//! giving 2^38 bytes per stream — far beyond any run here.
+
+/// ChaCha20-based deterministic RNG.
+#[derive(Debug, Clone)]
+pub struct ChaChaRng {
+    key: [u32; 8],
+    counter: u32,
+    buf: [u32; 16],
+    /// Next unread word in `buf` (16 = exhausted).
+    pos: usize,
+    /// Cached second normal deviate (Box-Muller produces pairs).
+    spare_normal: Option<f64>,
+}
+
+#[inline(always)]
+fn quarter_round(state: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
+    state[a] = state[a].wrapping_add(state[b]);
+    state[d] = (state[d] ^ state[a]).rotate_left(16);
+    state[c] = state[c].wrapping_add(state[d]);
+    state[b] = (state[b] ^ state[c]).rotate_left(12);
+    state[a] = state[a].wrapping_add(state[b]);
+    state[d] = (state[d] ^ state[a]).rotate_left(8);
+    state[c] = state[c].wrapping_add(state[d]);
+    state[b] = (state[b] ^ state[c]).rotate_left(7);
+}
+
+impl ChaChaRng {
+    /// RFC 7539 constants: "expand 32-byte k".
+    const SIGMA: [u32; 4] = [0x6170_7865, 0x3320_646e, 0x7962_2d32, 0x6b20_6574];
+
+    /// Construct from a 32-byte seed (the key).
+    pub fn from_seed(seed: [u8; 32]) -> Self {
+        let mut key = [0u32; 8];
+        for (i, k) in key.iter_mut().enumerate() {
+            *k = u32::from_le_bytes([
+                seed[4 * i],
+                seed[4 * i + 1],
+                seed[4 * i + 2],
+                seed[4 * i + 3],
+            ]);
+        }
+        Self { key, counter: 0, buf: [0; 16], pos: 16, spare_normal: None }
+    }
+
+    /// Domain-separated stream from (seed, stream-id, label): the
+    /// convenience constructor every subsystem uses so samples never
+    /// collide across (experiment seed, step, purpose).
+    pub fn from_seed_stream(seed: u64, stream: u64, label: &[u8; 8]) -> Self {
+        let mut key = [0u8; 32];
+        key[..8].copy_from_slice(&seed.to_le_bytes());
+        key[8..16].copy_from_slice(&stream.to_le_bytes());
+        key[16..24].copy_from_slice(label);
+        Self::from_seed(key)
+    }
+
+    /// Produce the next 16-word block.
+    fn refill(&mut self) {
+        let mut state = [0u32; 16];
+        state[..4].copy_from_slice(&Self::SIGMA);
+        state[4..12].copy_from_slice(&self.key);
+        state[12] = self.counter;
+        // words 13..16 are the zero nonce
+        let initial = state;
+        for _ in 0..10 {
+            // column rounds
+            quarter_round(&mut state, 0, 4, 8, 12);
+            quarter_round(&mut state, 1, 5, 9, 13);
+            quarter_round(&mut state, 2, 6, 10, 14);
+            quarter_round(&mut state, 3, 7, 11, 15);
+            // diagonal rounds
+            quarter_round(&mut state, 0, 5, 10, 15);
+            quarter_round(&mut state, 1, 6, 11, 12);
+            quarter_round(&mut state, 2, 7, 8, 13);
+            quarter_round(&mut state, 3, 4, 9, 14);
+        }
+        for (o, i) in state.iter_mut().zip(initial) {
+            *o = o.wrapping_add(i);
+        }
+        self.buf = state;
+        self.counter = self.counter.wrapping_add(1);
+        self.pos = 0;
+    }
+
+    /// Next uniform u32.
+    pub fn next_u32(&mut self) -> u32 {
+        if self.pos >= 16 {
+            self.refill();
+        }
+        let w = self.buf[self.pos];
+        self.pos += 1;
+        w
+    }
+
+    /// Next uniform u64.
+    pub fn next_u64(&mut self) -> u64 {
+        let lo = self.next_u32() as u64;
+        let hi = self.next_u32() as u64;
+        (hi << 32) | lo
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of precision.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) via Lemire-style rejection (unbiased).
+    pub fn gen_range(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        let n = n as u64;
+        // zone = largest multiple of n that fits in u64
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % n) as usize;
+            }
+        }
+    }
+
+    /// Standard normal deviate (Box-Muller, pair-cached).
+    pub fn next_normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // u in (0,1] so ln(u) is finite.
+        let u = 1.0 - self.next_f64();
+        let v = self.next_f64();
+        let r = (-2.0 * u.ln()).sqrt();
+        let theta = std::f64::consts::TAU * v;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rfc7539_block_vector() {
+        // RFC 7539 §2.3.2 test vector: key = 00 01 02 .. 1f, counter = 1,
+        // nonce = 00:00:00:09:00:00:00:4a:00:00:00:00. Our nonce is fixed
+        // to zero, so instead verify the keystream is stable and
+        // non-degenerate, plus known-answer for the all-zero key/counter0
+        // first word of the zero-key block (precomputed with this code
+        // and cross-checked against a python chacha20 implementation):
+        let mut rng = ChaChaRng::from_seed([0u8; 32]);
+        let w = rng.next_u32();
+        assert_eq!(w, 0xade0b876, "zero-key first keystream word");
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let mut a1 = ChaChaRng::from_seed_stream(1, 2, b"testing\0");
+        let mut a2 = ChaChaRng::from_seed_stream(1, 2, b"testing\0");
+        let mut b = ChaChaRng::from_seed_stream(1, 3, b"testing\0");
+        let xs1: Vec<u32> = (0..100).map(|_| a1.next_u32()).collect();
+        let xs2: Vec<u32> = (0..100).map(|_| a2.next_u32()).collect();
+        let ys: Vec<u32> = (0..100).map(|_| b.next_u32()).collect();
+        assert_eq!(xs1, xs2);
+        assert_ne!(xs1, ys);
+    }
+
+    #[test]
+    fn uniform_f64_in_range_and_mean() {
+        let mut rng = ChaChaRng::from_seed_stream(7, 0, b"uniform\0");
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn gen_range_unbiased_small_n() {
+        let mut rng = ChaChaRng::from_seed_stream(9, 0, b"range\0\0\0");
+        let mut counts = [0u32; 7];
+        for _ in 0..70_000 {
+            counts[rng.gen_range(7)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = ChaChaRng::from_seed_stream(11, 0, b"normal\0\0");
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.next_normal();
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = ChaChaRng::from_seed_stream(3, 0, b"shuffle\0");
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+        assert_ne!(xs, (0..100).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,270 @@
+//! Integration tests over the real AOT artifacts (require `make
+//! artifacts` to have run; they are skipped with a clear message
+//! otherwise so `cargo test` works on a fresh checkout).
+
+use dp_shortcuts::coordinator::batcher::BatchingMode;
+use dp_shortcuts::coordinator::config::TrainConfig;
+use dp_shortcuts::coordinator::trainer::Trainer;
+use dp_shortcuts::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::load("artifacts").expect("loading artifacts"))
+}
+
+fn base_config() -> TrainConfig {
+    TrainConfig {
+        model: "vit-micro".into(),
+        variant: "masked".into(),
+        dataset_size: 128,
+        sampling_rate: 0.25,
+        physical_batch: 8,
+        steps: 2,
+        eval_examples: 0,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn manifest_models_have_complete_artifact_sets() {
+    let Some(rt) = runtime() else { return };
+    for (name, m) in &rt.manifest().models {
+        assert!(m.find_apply().is_some(), "{name}: no apply");
+        assert!(m.find_eval().is_some(), "{name}: no eval");
+        assert!(!m.variants().is_empty(), "{name}: no accum variants");
+        assert!(m.n_params > 0);
+    }
+}
+
+#[test]
+fn init_params_load_and_are_finite() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.model("vit-micro").unwrap();
+    let p = m.init_params().unwrap();
+    let v = p.to_vec::<f32>().unwrap();
+    assert_eq!(v.len(), m.n_params());
+    assert!(v.iter().all(|x| x.is_finite()));
+    // initialization is not degenerate
+    let nonzero = v.iter().filter(|x| **x != 0.0).count();
+    assert!(nonzero > v.len() / 2);
+}
+
+#[test]
+fn masked_training_runs_and_accounts() {
+    let Some(rt) = runtime() else { return };
+    let cfg = base_config();
+    let rep = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    assert_eq!(rep.steps.len(), 2);
+    assert!(rep.noise_multiplier > 0.0);
+    assert!(rep.epsilon_spent > 0.0 && rep.epsilon_spent <= 8.0 + 1e-6);
+    for s in &rep.steps {
+        assert!(s.loss.is_finite() && s.loss > 0.0);
+        // Algorithm 2: computed examples = ceil(|L|/p)*p >= |L|
+        assert!(s.computed_examples >= s.logical_batch);
+        assert_eq!(s.computed_examples % 8, 0);
+    }
+    assert!(rep.throughput > 0.0);
+    assert!(rep.computed_throughput >= rep.throughput);
+}
+
+#[test]
+fn masked_mode_compiles_exactly_one_accum_shape() {
+    let Some(rt) = runtime() else { return };
+    let rep = Trainer::new(&rt, base_config()).unwrap().run().unwrap();
+    let accum_compiles = rep
+        .compiles
+        .iter()
+        .filter(|(p, _)| p.contains("_accum"))
+        .count();
+    assert_eq!(accum_compiles, 1, "masked DP-SGD must never recompile: {:?}", rep.compiles);
+}
+
+#[test]
+fn naive_mode_recompiles_per_batch_size() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = base_config();
+    cfg.variant = "naive".into();
+    cfg.mode = BatchingMode::Variable;
+    cfg.dataset_size = 256;
+    cfg.sampling_rate = 0.3;
+    cfg.steps = 3;
+    let rep = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    let accum_compiles = rep
+        .compiles
+        .iter()
+        .filter(|(p, _)| p.contains("_accum"))
+        .count();
+    // Variable logical batches force several distinct chunk sizes.
+    assert!(
+        accum_compiles >= 2,
+        "naive mode should hit multiple batch-size compilations: {:?}",
+        rep.compiles
+    );
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let Some(rt) = runtime() else { return };
+    let r1 = Trainer::new(&rt, base_config()).unwrap().run().unwrap();
+    let r2 = Trainer::new(&rt, base_config()).unwrap().run().unwrap();
+    for (a, b) in r1.steps.iter().zip(&r2.steps) {
+        assert_eq!(a.logical_batch, b.logical_batch);
+        assert!((a.loss - b.loss).abs() < 1e-6, "{} vs {}", a.loss, b.loss);
+    }
+}
+
+#[test]
+fn different_seeds_differ() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = base_config();
+    cfg.seed = 1;
+    let r1 = Trainer::new(&rt, base_config()).unwrap().run().unwrap();
+    let r2 = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    assert!(
+        r1.steps[0].logical_batch != r2.steps[0].logical_batch
+            || (r1.steps[0].loss - r2.steps[0].loss).abs() > 1e-9
+    );
+}
+
+#[test]
+fn nonprivate_baseline_runs_without_noise() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = base_config();
+    cfg.variant = "nonprivate".into();
+    let rep = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    assert_eq!(rep.noise_multiplier, 0.0);
+    assert_eq!(rep.epsilon_spent, 0.0);
+}
+
+#[test]
+fn ghost_and_bk_agree_with_masked_through_pjrt() {
+    // The L2-level equivalence re-checked through the whole AOT+PJRT
+    // path: same logical batches => same losses (clipped grads agree).
+    let Some(rt) = runtime() else { return };
+    let mut losses = Vec::new();
+    for variant in ["masked", "ghost", "bk"] {
+        let mut cfg = base_config();
+        cfg.variant = variant.into();
+        cfg.noise_multiplier = Some(0.0); // isolate the clipping path
+        let rep = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+        losses.push(rep.steps.iter().map(|s| s.loss).collect::<Vec<_>>());
+    }
+    for other in &losses[1..] {
+        for (a, b) in losses[0].iter().zip(other) {
+            assert!((a - b).abs() / a < 1e-3, "{a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn resnet_masked_runs() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = base_config();
+    cfg.model = "rn-micro".into();
+    let rep = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    assert!(rep.steps.iter().all(|s| s.loss.is_finite()));
+}
+
+#[test]
+fn eval_after_training_returns_metrics() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = base_config();
+    cfg.eval_examples = 64;
+    let rep = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    let (l, a) = (rep.eval_loss.unwrap(), rep.eval_accuracy.unwrap());
+    assert!(l > 0.0 && l.is_finite());
+    assert!((0.0..=1.0).contains(&a));
+}
+
+#[test]
+fn bf16_artifacts_execute() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.model("vit-micro").unwrap();
+    let batches = m.accum_batches("masked", "bf16");
+    if batches.is_empty() {
+        eprintln!("SKIP: no bf16 artifacts lowered");
+        return;
+    }
+    let mut cfg = base_config();
+    cfg.bf16 = true;
+    cfg.physical_batch = *batches.last().unwrap();
+    let rep = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    assert!(rep.steps.iter().all(|s| s.loss.is_finite()));
+}
+
+#[test]
+fn ghost_hlo_never_materializes_per_example_grads() {
+    // The paper's Section 2.2 memory claim, checked STRUCTURALLY on the
+    // real lowered artifacts: per-example variants contain a [B, P]
+    // tensor; ghost and BK variants must not.
+    let Some(rt) = runtime() else { return };
+    let meta = rt.manifest().model("vit-micro").unwrap().clone();
+    let p = meta.n_params as u64;
+    let b = 16u64;
+    let dir = std::path::Path::new("artifacts");
+    let stats_of = |variant: &str| {
+        let e = meta.find_accum(variant, b as usize, "f32").unwrap();
+        dp_shortcuts::runtime::analyze_file(&dir.join(&e.path)).unwrap()
+    };
+    assert!(
+        stats_of("masked").has_tensor(&[b, p]),
+        "per-example variant should materialize [B, P]"
+    );
+    for v in ["ghost", "bk"] {
+        assert!(
+            !stats_of(v).has_tensor(&[b, p]),
+            "{v} must not materialize per-example grads"
+        );
+    }
+    // Non-private never needs it either.
+    assert!(!stats_of("nonprivate").has_tensor(&[b, p]));
+}
+
+#[test]
+fn hlo_footprint_ordering_matches_memory_model() {
+    // Largest-tensor ordering across variants mirrors the Table 3
+    // max-batch ordering: per-example > ghost/bk/non-private.
+    let Some(rt) = runtime() else { return };
+    let meta = rt.manifest().model("vit-micro").unwrap().clone();
+    let dir = std::path::Path::new("artifacts");
+    let largest = |variant: &str| {
+        let e = meta.find_accum(variant, 16, "f32").unwrap();
+        dp_shortcuts::runtime::analyze_file(&dir.join(&e.path))
+            .unwrap()
+            .largest_tensor_bytes
+    };
+    let pe = largest("masked");
+    let gh = largest("ghost");
+    let np = largest("nonprivate");
+    assert!(pe > gh, "per-example {pe} should exceed ghost {gh}");
+    assert!(pe > np, "per-example {pe} should exceed non-private {np}");
+}
+
+#[test]
+fn checkpoint_roundtrip() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.model("vit-micro").unwrap();
+    let p = m.init_params().unwrap();
+    let path = std::env::temp_dir().join("dpshort_ckpt_test.bin");
+    m.save_params(&p, &path).unwrap();
+    let p2 = m.load_params(&path).unwrap();
+    assert_eq!(p.to_vec::<f32>().unwrap(), p2.to_vec::<f32>().unwrap());
+    // wrong-size file is rejected cleanly
+    std::fs::write(&path, [0u8; 12]).unwrap();
+    assert!(m.load_params(&path).is_err());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn missing_batch_size_is_a_clean_error() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.model("vit-micro").unwrap();
+    let msg = match m.prepare_accum("masked", 12_345, "f32") {
+        Ok(_) => panic!("expected error for unlowered batch size"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(msg.contains("no accum artifact"), "{msg}");
+}

@@ -1,0 +1,263 @@
+//! Property tests over the coordinator invariants (routing, batching,
+//! accounting, memory, cluster) using the in-tree randomized property
+//! runner (`util::prop` — the offline stand-in for proptest; failing
+//! cases print their replay seed).
+
+use dp_shortcuts::clipping::ClippingMethod;
+use dp_shortcuts::cluster::{fit_parallel_fraction, ring_allreduce_seconds, ClusterSim, Interconnect};
+use dp_shortcuts::coordinator::batcher::{BatchMemoryManager, BatchingMode};
+use dp_shortcuts::coordinator::sampler::{PoissonSampler, Sampler};
+use dp_shortcuts::memory::MemModel;
+use dp_shortcuts::metrics::summary_with_ci;
+use dp_shortcuts::models::vit;
+use dp_shortcuts::privacy::RdpAccountant;
+use dp_shortcuts::util::prop::check;
+
+// ------------------------------------------------------------- sampler
+
+#[test]
+fn prop_poisson_indices_valid_and_deterministic() {
+    check("poisson indices sorted/unique/in-range + replay-stable", 200, |rng| {
+        let n = 1 + rng.gen_range(20_000) as u32;
+        let q = rng.next_f64();
+        let seed = rng.next_u64();
+        let step = rng.next_u64() % 1000;
+        let s = PoissonSampler::new(n, q, seed);
+        let a = s.sample(step);
+        if a != s.sample(step) {
+            return Err("not deterministic".into());
+        }
+        if !a.windows(2).all(|w| w[0] < w[1]) {
+            return Err("not sorted-unique".into());
+        }
+        if a.iter().any(|&i| i >= n) {
+            return Err("index out of range".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_poisson_mean_concentration() {
+    check("poisson batch size ~ Binomial(n, q)", 60, |rng| {
+        let n = 5_000 + rng.gen_range(20_000) as u32;
+        let q = 0.05 + 0.9 * rng.next_f64();
+        let s = PoissonSampler::new(n, q, rng.next_u64());
+        let mean = n as f64 * q;
+        let sd = (n as f64 * q * (1.0 - q)).sqrt();
+        let b = s.sample(rng.next_u64() % 100).len() as f64;
+        if (b - mean).abs() > 6.0 * sd {
+            return Err(format!("batch {b} vs mean {mean} (sd {sd})"));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------- batcher
+
+#[test]
+fn prop_masked_split_partitions_and_pads() {
+    check("masked split: full shapes, masks sum to |L|, one boundary", 300, |rng| {
+        let p = 1 + rng.gen_range(64);
+        let tl = rng.gen_range(1000);
+        let logical: Vec<u32> = (0..tl as u32).collect();
+        let bmm = BatchMemoryManager::new(p, BatchingMode::Masked);
+        let batches = bmm.split(&logical);
+        if !batches.iter().all(|b| b.indices.len() == p) {
+            return Err("non-uniform physical shape".into());
+        }
+        let real: usize = batches.iter().map(|b| b.real_count()).sum();
+        if real != tl {
+            return Err(format!("mask total {real} != |L| {tl}"));
+        }
+        let boundaries = batches.iter().filter(|b| b.step_boundary).count();
+        if boundaries != 1 || !batches.last().unwrap().step_boundary {
+            return Err("step boundary not exactly-last".into());
+        }
+        // Real examples appear in order, exactly once.
+        let seq: Vec<u32> = batches
+            .iter()
+            .flat_map(|b| {
+                b.indices
+                    .iter()
+                    .zip(&b.mask)
+                    .filter(|(_, &m)| m > 0.0)
+                    .map(|(&i, _)| i)
+            })
+            .collect();
+        if seq != logical {
+            return Err("real examples lost or reordered".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_naive_split_covers_with_available_sizes() {
+    check("naive split: chunk sizes lowered, coverage exact", 300, |rng| {
+        let mut sizes = vec![2usize, 4, 8, 16, 32];
+        sizes.truncate(1 + rng.gen_range(5));
+        let tl = rng.gen_range(500);
+        let logical: Vec<u32> = (0..tl as u32).collect();
+        let batches = BatchMemoryManager::split_naive(&logical, &sizes);
+        for b in &batches {
+            if !sizes.contains(&b.indices.len()) {
+                return Err(format!("chunk size {} not lowered", b.indices.len()));
+            }
+        }
+        let real: usize = batches.iter().map(|b| b.real_count()).sum();
+        if real != tl {
+            return Err(format!("coverage {real} != {tl}"));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------ privacy
+
+#[test]
+fn prop_rdp_monotone_in_all_arguments() {
+    check("epsilon monotone in q, steps; antitone in sigma, delta", 80, |rng| {
+        let acc = RdpAccountant::default();
+        let q = 0.01 + 0.8 * rng.next_f64();
+        let sigma = 0.5 + 4.0 * rng.next_f64();
+        let steps = 1 + rng.gen_range(500) as u64;
+        let delta = 1e-7 + 1e-4 * rng.next_f64();
+        let e = acc.epsilon(q, sigma, steps, delta);
+        if !(acc.epsilon((q * 1.2).min(1.0), sigma, steps, delta) >= e - 1e-9) {
+            return Err("not monotone in q".into());
+        }
+        if !(acc.epsilon(q, sigma * 1.2, steps, delta) <= e + 1e-9) {
+            return Err("not antitone in sigma".into());
+        }
+        if !(acc.epsilon(q, sigma, steps * 2, delta) >= e - 1e-9) {
+            return Err("not monotone in steps".into());
+        }
+        if !(acc.epsilon(q, sigma, steps, delta * 10.0) <= e + 1e-9) {
+            return Err("not antitone in delta".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rdp_subsampling_amplifies() {
+    check("subsampled RDP <= full-batch RDP", 100, |rng| {
+        let alpha = 2 + rng.gen_range(60) as u32;
+        let sigma = 0.5 + 4.0 * rng.next_f64();
+        let q = rng.next_f64();
+        let sub = RdpAccountant::rdp_single(q, sigma, alpha);
+        let full = RdpAccountant::rdp_single(1.0, sigma, alpha);
+        if sub > full + 1e-12 {
+            return Err(format!("q={q}: {sub} > {full}"));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------- memory
+
+#[test]
+fn prop_max_batch_monotone_in_budget_and_antitone_in_size() {
+    check("memory planner monotonicity", 100, |rng| {
+        let mem = MemModel::default();
+        let depth = 2 + rng.gen_range(30);
+        let dim = 64 * (1 + rng.gen_range(20));
+        let a = vit("a", depth, dim, 4);
+        let budget = 8e9 + rng.next_f64() * 72e9;
+        for m in ClippingMethod::ALL {
+            if !m.supports(a.family) {
+                continue;
+            }
+            let b1 = mem.max_physical_batch(&a, *m, budget);
+            let b2 = mem.max_physical_batch(&a, *m, budget * 1.5);
+            if b2 < b1 {
+                return Err(format!("{m:?}: bigger budget smaller batch"));
+            }
+        }
+        // per-example <= ghost <= non-private at any budget
+        let pe = mem.max_physical_batch(&a, ClippingMethod::PerExample, budget);
+        let gh = mem.max_physical_batch(&a, ClippingMethod::Ghost, budget);
+        let np = mem.max_physical_batch(&a, ClippingMethod::NonPrivate, budget);
+        if !(pe <= gh && gh <= np) {
+            return Err(format!("ordering violated: {pe} {gh} {np}"));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------- cluster
+
+#[test]
+fn prop_cluster_efficiency_bounded_and_slower_scales_better() {
+    check("efficiency in (0,1]; slower compute => >= efficiency", 100, |rng| {
+        let thr = 50.0 + rng.next_f64() * 5000.0;
+        let params = 1e6 + rng.next_f64() * 1e9;
+        let mk = |t: f64| ClusterSim {
+            single_worker_throughput: t,
+            local_batch: 32,
+            grad_bytes: params * 4.0,
+            overlap: rng_free_overlap(),
+            serial_overhead: 1e-3,
+            interconnect: Interconnect::default(),
+        };
+        fn rng_free_overlap() -> f64 {
+            0.5
+        }
+        let n = 8 + 4 * rng.gen_range(19); // 8..80
+        let fast = mk(thr).curve(&[n])[0].efficiency;
+        let slow = mk(thr / (1.5 + 3.0 * rng.next_f64())).curve(&[n])[0].efficiency;
+        if !(fast > 0.0 && fast <= 1.0 + 1e-12) {
+            return Err(format!("efficiency out of range: {fast}"));
+        }
+        if slow + 1e-9 < fast {
+            return Err(format!("slower compute scaled worse: {slow} < {fast}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allreduce_monotone_in_bytes() {
+    check("allreduce time monotone in message size", 200, |rng| {
+        let ic = Interconnect::default();
+        let n = 2 + rng.gen_range(127);
+        let s1 = rng.next_f64() * 1e9;
+        let s2 = s1 * (1.0 + rng.next_f64());
+        if ring_allreduce_seconds(&ic, n, s2) + 1e-15 < ring_allreduce_seconds(&ic, n, s1) {
+            return Err("not monotone".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_amdahl_fit_recovers_planted_fraction() {
+    check("Amdahl fit inverts amdahl_speedup", 100, |rng| {
+        let p = 0.8 + 0.1999 * rng.next_f64();
+        let pts: Vec<(f64, f64)> = [2.0, 4.0, 8.0, 32.0, 80.0]
+            .iter()
+            .map(|&n| (n, dp_shortcuts::cluster::amdahl_speedup(p, n)))
+            .collect();
+        let got = fit_parallel_fraction(&pts);
+        if (got - p).abs() > 1e-6 {
+            return Err(format!("planted {p}, fit {got}"));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------- metrics
+
+#[test]
+fn prop_bootstrap_ci_brackets_median() {
+    check("bootstrap CI contains the sample median", 60, |rng| {
+        let n = 5 + rng.gen_range(200);
+        let samples: Vec<f64> = (0..n).map(|_| 10.0 + rng.next_normal().abs() * 5.0).collect();
+        let s = summary_with_ci(&samples, rng.next_u64());
+        if !(s.ci_low <= s.median && s.median <= s.ci_high) {
+            return Err(format!("CI [{}, {}] vs median {}", s.ci_low, s.ci_high, s.median));
+        }
+        Ok(())
+    });
+}
