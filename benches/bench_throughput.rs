@@ -10,12 +10,9 @@ use dp_shortcuts::runtime::Runtime;
 use dp_shortcuts::util::bench::stats_from;
 
 fn main() -> anyhow::Result<()> {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("SKIP: run `make artifacts` first");
-        return Ok(());
-    }
-    let rt = Runtime::load("artifacts")?;
-    println!("== bench_throughput (Figs 1/2/4/6) ==");
+    // Artifacts + PJRT when available, pure-Rust reference otherwise.
+    let rt = Runtime::auto("artifacts")?;
+    println!("== bench_throughput (Figs 1/2/4/6, backend {}) ==", rt.backend_name());
     let names: Vec<String> = rt.manifest().models.keys().cloned().collect();
     for model in &names {
         let meta = rt.manifest().model(model)?.clone();

@@ -13,8 +13,11 @@ use dp_shortcuts::metrics::summary_with_ci;
 use dp_shortcuts::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let model = std::env::args().nth(1).unwrap_or_else(|| "vit-micro".into());
-    let rt = Runtime::load("artifacts")?;
+    // Artifacts + PJRT when available, pure-Rust reference otherwise.
+    let rt = Runtime::auto("artifacts")?;
+    let model = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| rt.default_model().expect("model").to_string());
     let meta = rt.manifest().model(&model)?.clone();
 
     println!("== DP fine-tuning study: {model} ({} params) ==", meta.n_params);

@@ -1,9 +1,10 @@
-//! Quickstart: train a small ViT with DP-SGD **without shortcuts** —
-//! exact Poisson subsampling, Algorithm-2 masked virtual batching, RDP
-//! accounting — then evaluate, all through the public API.
+//! Quickstart: train with DP-SGD **without shortcuts** — exact Poisson
+//! subsampling, Algorithm-2 masked virtual batching, RDP accounting —
+//! then evaluate, all through the public API.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart            # reference backend
+//! make artifacts && cargo run --release --features pjrt --example quickstart
 //! ```
 
 use dp_shortcuts::coordinator::config::TrainConfig;
@@ -11,15 +12,18 @@ use dp_shortcuts::coordinator::trainer::Trainer;
 use dp_shortcuts::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Load the AOT artifacts (built once by `make artifacts`;
-    //    Python is never on this path).
-    let rt = Runtime::load("artifacts")?;
+    // 1. Pick a runtime: the AOT artifacts when present (built once by
+    //    `make artifacts`; Python is never on this path), otherwise the
+    //    pure-Rust reference backend so the quickstart always runs.
+    let rt = Runtime::auto("artifacts")?;
+    let model = rt.default_model().expect("model").to_string();
+    println!("backend: {} / model: {model}", rt.backend_name());
 
     // 2. Configure a run. Defaults mirror the paper's setup (sampling
     //    rate 0.5, eps=8, delta=2.04e-5); we shrink the dataset so the
     //    quickstart finishes in seconds on one CPU core.
     let cfg = TrainConfig {
-        model: "vit-micro".into(),
+        model,
         variant: "masked".into(), // Algorithm 2: fixed shapes + masks
         dataset_size: 512,
         sampling_rate: 0.25, // E[L] = 128
@@ -32,7 +36,7 @@ fn main() -> anyhow::Result<()> {
 
     // 3. Train. The trainer Poisson-samples each logical batch, splits
     //    it into masked physical batches, accumulates clipped gradients
-    //    through the PJRT executables, and takes one noisy step per
+    //    through the backend's executables, and takes one noisy step per
     //    logical batch.
     let trainer = Trainer::new(&rt, cfg)?;
     let report = trainer.run()?;

@@ -11,12 +11,15 @@ use dp_shortcuts::report::print_scaling_study;
 use dp_shortcuts::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let model = std::env::args().nth(1).unwrap_or_else(|| "vit-micro".into());
     let gpus: Vec<usize> = std::env::args()
         .nth(2)
         .map(|s| s.split(',').map(|x| x.parse().expect("gpu count")).collect())
         .unwrap_or_else(|| vec![1, 2, 4, 8, 16, 32, 64, 80]);
-    let rt = Runtime::load("artifacts")?;
+    // Artifacts + PJRT when available, pure-Rust reference otherwise.
+    let rt = Runtime::auto("artifacts")?;
+    let model = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| rt.default_model().expect("model").to_string());
     print_scaling_study(&rt, &model, &gpus)?;
     println!("\nInterpretation: the private step computes ~Nx longer per example,");
     println!("so the fixed-size gradient all-reduce is a smaller fraction of each");

@@ -22,7 +22,7 @@
 use crate::coordinator::sampler::Sampler;
 
 /// How logical batches are split into physical ones.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, serde::Serialize)]
 pub enum BatchingMode {
     /// Trailing partial physical batch keeps its natural (variable) size.
     Variable,

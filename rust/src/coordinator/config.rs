@@ -58,7 +58,7 @@ impl Default for TrainConfig {
             target_epsilon: 8.0,
             delta: 2.04e-5,
             seed: 0,
-        eval_examples: 256,
+            eval_examples: 256,
         }
     }
 }

@@ -136,15 +136,23 @@ impl ShuffleSampler {
 
 impl Sampler for ShuffleSampler {
     fn sample(&self, step: u64) -> Vec<u32> {
-        let steps_per_epoch = (self.n / self.batch).max(1) as u64;
+        // ceil(n / batch) steps per epoch, so the permutation tail forms
+        // a partial final batch instead of being dropped. (Truncating
+        // division silently excluded the last `n % batch` positions of
+        // every epoch — those examples were never trained on and got
+        // more privacy than accounted.)
+        let steps_per_epoch = (self.n as u64).div_ceil(self.batch as u64);
         let epoch = step / steps_per_epoch;
         let pos = (step % steps_per_epoch) as usize * self.batch as usize;
+        let end = (pos + self.batch as usize).min(self.n as usize);
         let perm = self.epoch_perm(epoch);
-        perm[pos..pos + self.batch as usize].to_vec()
+        perm[pos..end].to_vec()
     }
 
     fn expected_batch_size(&self) -> f64 {
-        self.batch as f64
+        // Average over the epoch, counting the partial final batch.
+        let steps_per_epoch = (self.n as u64).div_ceil(self.batch as u64);
+        self.n as f64 / steps_per_epoch as f64
     }
 
     fn poisson_rate(&self) -> Option<f64> {
@@ -207,6 +215,36 @@ mod tests {
     fn zero_and_one_rates() {
         assert!(PoissonSampler::new(100, 0.0, 0).sample(0).is_empty());
         assert_eq!(PoissonSampler::new(100, 1.0, 0).sample(0).len(), 100);
+    }
+
+    #[test]
+    fn shuffle_covers_whole_epoch_when_batch_divides_n() {
+        let s = ShuffleSampler::new(100, 10, 5);
+        assert_eq!(s.expected_batch_size(), 10.0);
+        let mut seen: Vec<u32> = (0..10).flat_map(|t| s.sample(t)).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..100).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn shuffle_uses_whole_dataset_when_batch_does_not_divide_n() {
+        // Regression: n % batch != 0 used to drop the tail of every
+        // epoch's permutation — those examples were never sampled.
+        let s = ShuffleSampler::new(105, 10, 9);
+        let steps_per_epoch = 11; // ceil(105 / 10)
+        for epoch in 0..2u64 {
+            let lo = epoch * steps_per_epoch;
+            let mut seen: Vec<u32> =
+                (lo..lo + steps_per_epoch).flat_map(|t| s.sample(t)).collect();
+            assert_eq!(seen.len(), 105, "epoch {epoch} must touch all examples");
+            seen.sort_unstable();
+            assert_eq!(seen, (0..105).collect::<Vec<u32>>());
+        }
+        // Full batches first, partial tail last.
+        assert_eq!(s.sample(0).len(), 10);
+        assert_eq!(s.sample(10).len(), 5);
+        assert_eq!(s.sample(11).len(), 10); // next epoch restarts
+        assert!((s.expected_batch_size() - 105.0 / 11.0).abs() < 1e-12);
     }
 
     #[test]

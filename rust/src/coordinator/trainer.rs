@@ -1,5 +1,6 @@
 //! The training-loop driver: virtual-batching DP-SGD (Algorithms 1 & 2)
-//! over the AOT executables, with per-section timing.
+//! over any execution [`Backend`](crate::runtime::Backend), with
+//! per-section timing.
 //!
 //! Per optimizer step:
 //!
@@ -23,12 +24,37 @@ use crate::data::SyntheticDataset;
 use crate::metrics::ThroughputMeter;
 use crate::privacy::rdp::StreamingAccountant;
 use crate::privacy::{calibrate_sigma, RdpAccountant};
-use crate::runtime::{ModelRuntime, Runtime};
+use crate::runtime::{ModelRuntime, Runtime, Tensor};
+use crate::util::rng::ChaChaRng;
 use anyhow::{anyhow, Result};
+use serde::Serialize;
 use std::time::Instant;
 
+/// Full-width per-step noise seed: the high 32 bits are a per-experiment
+/// stream id (ChaCha20-derived, the same domain separation the samplers
+/// use), the low 32 bits the step counter.
+///
+/// The old derivation `(seed * 1_000_003 + step) as i32` wrapped through
+/// 32 bits and could collide between steps — silently reusing Gaussian
+/// noise between optimizer steps, which voids the privacy analysis
+/// (noise must be independent across compositions). The structured
+/// layout guarantees what the analysis needs: **within one run the seed
+/// is injective in `step`** (for the < 2^32 steps any run takes), and it
+/// stays injective even after the PJRT backend folds it into the ABI's
+/// 32-bit seed slot (xor of the halves = stream-id ^ step, a bijection
+/// in `step`). Across *different* experiment seeds the 32-bit stream id
+/// collides with probability 2^-32 per pair — harmless for DP (each
+/// run's composition uses independent noise) but worth knowing when
+/// comparing runs.
+pub fn per_step_noise_seed(experiment_seed: u64, step: u64) -> u64 {
+    debug_assert!(step < 1u64 << 32, "runs are bounded far below 2^32 steps");
+    let mut rng = ChaChaRng::from_seed_stream(experiment_seed, 0, b"noisesd\0");
+    let stream_id = rng.next_u32() as u64;
+    (stream_id << 32) | (step & 0xffff_ffff)
+}
+
 /// Wall-clock seconds per pipeline section (the Table-2 analogue).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, Serialize)]
 pub struct SectionTimes {
     /// Poisson sampling + batch splitting (host).
     pub sampling: f64,
@@ -38,7 +64,7 @@ pub struct SectionTimes {
     pub accum: f64,
     /// apply executions (noise + optimizer step).
     pub apply: f64,
-    /// PJRT compilations (jit analogue; excluded from throughput).
+    /// Executable compilations (jit analogue; excluded from throughput).
     pub compile: f64,
 }
 
@@ -49,7 +75,7 @@ impl SectionTimes {
 }
 
 /// One optimizer step's log entry.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Serialize)]
 pub struct StepLog {
     pub step: u64,
     /// True sampled logical batch size (varies under Poisson!).
@@ -63,7 +89,7 @@ pub struct StepLog {
 }
 
 /// Result of a training run.
-#[derive(Debug)]
+#[derive(Debug, Serialize)]
 pub struct TrainReport {
     pub model: String,
     pub variant: String,
@@ -81,8 +107,18 @@ pub struct TrainReport {
     pub accum_samples: Vec<f64>,
     pub eval_loss: Option<f64>,
     pub eval_accuracy: Option<f64>,
-    /// (artifact, seconds) for every PJRT compilation this run caused.
+    /// (artifact, seconds) for every compilation this run caused.
     pub compiles: Vec<(String, f64)>,
+    /// Flat parameter vector after the final step (checkpointable via
+    /// [`ModelRuntime::save_params`]).
+    pub final_params: Vec<f32>,
+}
+
+impl TrainReport {
+    /// Serialize the whole report (steps, sections, privacy, params).
+    pub fn to_json(&self) -> serde_json::Result<String> {
+        serde_json::to_string_pretty(self)
+    }
 }
 
 /// Drives one configured training run over the runtime.
@@ -163,21 +199,13 @@ impl<'rt> Trainer<'rt> {
         // accum shape) so their one-time compile cost lands in
         // `sections.compile`, not in the steady-state sections — the
         // same discount the paper applies to JAX compilation.
-        {
-            let t0 = Instant::now();
-            if cfg.mode == BatchingMode::Masked {
+        if cfg.mode == BatchingMode::Masked {
+            let prep =
                 self.model.prepare_accum(&cfg.variant, cfg.physical_batch, self.dtype())?;
-            }
-            let _ = self.model.run_apply(
-                &self.model.init_params()?,
-                &self.model.zero_acc(),
-                0,
-                1.0,
-                0.0,
-                0.0,
-            )?;
-            sections.compile += t0.elapsed().as_secs_f64();
+            sections.compile += prep.compile_seconds.unwrap_or(0.0);
         }
+        let apply_prep = self.model.prepare_apply()?;
+        sections.compile += apply_prep.compile_seconds.unwrap_or(0.0);
         let mut params = {
             let t0 = Instant::now();
             let p = self.model.init_params()?;
@@ -185,8 +213,11 @@ impl<'rt> Trainer<'rt> {
             p
         };
         // denom = E[L] (Algorithm 1's 1/|L| with the expected batch — the
-        // standard Opacus convention).
-        let denom = cfg.expected_logical_batch() as f32;
+        // standard Opacus convention). Only the degenerate q = 0 case is
+        // substituted (1.0, keeping noise-only steps well-defined);
+        // fractional E[L] < 1 is a legitimate divisor and passes through.
+        let expected = cfg.expected_logical_batch() as f32;
+        let denom = if expected > 0.0 { expected } else { 1.0 };
         let noise_mult = (sigma * cfg.clip_norm) as f32;
 
         for step in 0..cfg.steps {
@@ -205,21 +236,19 @@ impl<'rt> Trainer<'rt> {
             let mut computed = 0usize;
             for pb in &batches {
                 let b = pb.indices.len();
-                // Compile on first use of this size — timed separately
-                // (this is the naive-JAX recompile cost, Fig A.2).
-                if !self.model.accum_is_compiled(&cfg.variant, b, self.dtype()) {
-                    let t = Instant::now();
-                    self.model.prepare_accum(&cfg.variant, b, self.dtype())?;
-                    sections.compile += t.elapsed().as_secs_f64();
-                }
-                let exe = self.model.prepare_accum(&cfg.variant, b, self.dtype())?;
+                // One cache lookup: compiles on first use of this size
+                // (the naive-JAX recompile cost, Fig A.2) and reports
+                // the compile time it spent, if any, so the attribution
+                // cannot drift from the execution.
+                let prep = self.model.prepare_accum(&cfg.variant, b, self.dtype())?;
+                sections.compile += prep.compile_seconds.unwrap_or(0.0);
 
                 let t = Instant::now();
                 let (x, y) = self.dataset.batch(&pb.indices);
                 sections.data += t.elapsed().as_secs_f64();
 
                 let t = Instant::now();
-                let out = self.model.run_accum(&exe, &params, &acc, &x, &y, &pb.mask)?;
+                let out = self.model.run_accum(&prep, &params, &acc, &x, &y, &pb.mask)?;
                 let dt = t.elapsed().as_secs_f64();
                 sections.accum += dt;
                 meter.record_secs(pb.real_count(), dt);
@@ -232,8 +261,16 @@ impl<'rt> Trainer<'rt> {
             }
 
             let t = Instant::now();
-            let seed = (cfg.seed as i64 * 1_000_003 + step as i64) as i32;
-            params = self.model.run_apply(&params, &acc, seed, denom, cfg.lr as f32, noise_mult)?;
+            let seed = per_step_noise_seed(cfg.seed, step);
+            params = self.model.run_apply(
+                &apply_prep,
+                &params,
+                &acc,
+                seed,
+                denom,
+                cfg.lr as f32,
+                noise_mult,
+            )?;
             sections.apply += t.elapsed().as_secs_f64();
 
             if cfg.is_private() && sigma > 0.0 {
@@ -285,6 +322,7 @@ impl<'rt> Trainer<'rt> {
             eval_loss,
             eval_accuracy,
             compiles,
+            final_params: params.to_vec(),
         })
     }
 
@@ -292,7 +330,7 @@ impl<'rt> Trainer<'rt> {
     /// class patterns), indices disjoint from the training range.
     fn evaluate(
         &self,
-        params: &xla::Literal,
+        params: &Tensor,
         examples: u32,
     ) -> Result<(Option<f64>, Option<f64>)> {
         let Some(eb) = self.model.eval_batch() else {
@@ -334,7 +372,7 @@ impl<'rt> Trainer<'rt> {
         batch: usize,
         repeats: usize,
     ) -> Result<Vec<f64>> {
-        let exe = self.model.prepare_accum(variant, batch, self.dtype())?;
+        let prep = self.model.prepare_accum(variant, batch, self.dtype())?;
         let params = self.model.init_params()?;
         let acc = self.model.zero_acc();
         let mask = vec![1.0f32; batch];
@@ -344,12 +382,67 @@ impl<'rt> Trainer<'rt> {
                 (0..batch as u32).map(|i| (r as u32 * batch as u32 + i) % self.config.dataset_size).collect();
             let (x, y) = self.dataset.batch(&idx);
             let t = Instant::now();
-            let _ = self.model.run_accum(&exe, &params, &acc, &x, &y, &mask)?;
+            let _ = self.model.run_accum(&prep, &params, &acc, &x, &y, &mask)?;
             let dt = t.elapsed().as_secs_f64();
             if dt > 0.0 {
                 samples.push(batch as f64 / dt);
             }
         }
         Ok(samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn per_step_noise_seeds_do_not_collide() {
+        // Seeds chosen to include the pair that collided under the old
+        // i32 folding (see below): 4295 * 1_000_003 wraps past 2^32.
+        let mut seen = HashSet::new();
+        for &seed in &[0u64, 1, 4295, 4296] {
+            for step in 0..50_000u64 {
+                assert!(
+                    seen.insert(per_step_noise_seed(seed, step)),
+                    "seed collision at ({seed}, {step})"
+                );
+            }
+        }
+        assert_eq!(seen.len(), 4 * 50_000);
+    }
+
+    #[test]
+    fn per_step_noise_seed_is_deterministic() {
+        assert_eq!(per_step_noise_seed(7, 3), per_step_noise_seed(7, 3));
+        assert_ne!(per_step_noise_seed(7, 3), per_step_noise_seed(7, 4));
+        assert_ne!(per_step_noise_seed(7, 3), per_step_noise_seed(8, 3));
+    }
+
+    #[test]
+    fn old_i32_seed_folding_collided() {
+        // Documents the bug the 64-bit derivation replaces: the i32 cast
+        // of `seed * 1_000_003 + step` wraps, so distinct (seed, step)
+        // pairs shared a noise stream.
+        let old = |seed: i64, step: i64| (seed * 1_000_003 + step) as i32;
+        // 4295 * 1_000_003 = 4_295_012_885 ≡ 45_589 (mod 2^32).
+        assert_eq!(old(4295, 0), old(0, 45_589));
+    }
+
+    #[test]
+    fn abi_fold_of_noise_seed_is_injective_within_a_run() {
+        // The PJRT backend folds the u64 seed to the ABI's i32 slot by
+        // xoring the halves; with the structured layout that is
+        // stream-id ^ step — a bijection in step, so one run can never
+        // reuse a noise seed on the 32-bit path either.
+        let fold = |s: u64| ((s >> 32) ^ (s & 0xffff_ffff)) as u32;
+        let mut seen = HashSet::new();
+        for step in 0..100_000u64 {
+            assert!(
+                seen.insert(fold(per_step_noise_seed(12345, step))),
+                "folded seed collision at step {step}"
+            );
+        }
     }
 }

@@ -10,12 +10,14 @@
 //! study.
 //!
 //! Architecture (see DESIGN.md): Python/JAX/Pallas exist only at build
-//! time (`make artifacts`); this crate loads the AOT-lowered HLO via the
-//! PJRT C API and owns the entire training loop.
+//! time (`make artifacts`); this crate owns the entire training loop and
+//! executes models through a pluggable [`runtime::Backend`] — the
+//! pure-Rust reference executor by default, or the AOT-lowered HLO via
+//! the PJRT C API behind the `pjrt` feature.
 //!
 //! ```text
-//! L3 (this crate)   sampler -> batcher -> runtime.execute(accum)* ->
-//!                   runtime.execute(apply) -> accountant.step()
+//! L3 (this crate)   sampler -> batcher -> backend.run_accum* ->
+//!                   backend.run_apply -> accountant.step()
 //! L2 (jax, AOT)     model fwd/bwd variants, flat-param ABI
 //! L1 (pallas, AOT)  clip-mask-accumulate / ghost-norm / noisy-step
 //! ```
@@ -38,3 +40,4 @@ pub use coordinator::config::TrainConfig;
 pub use coordinator::sampler::{PoissonSampler, Sampler, ShuffleSampler};
 pub use coordinator::trainer::{SectionTimes, TrainReport, Trainer};
 pub use privacy::{DpParams, RdpAccountant};
+pub use runtime::{Backend, ReferenceBackend, Runtime, Tensor};

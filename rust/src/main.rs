@@ -3,7 +3,7 @@
 //! Subcommands:
 //!
 //! ```text
-//! dpshort list                         show models/variants in artifacts/
+//! dpshort list                         show models/variants of the active backend
 //! dpshort train   [flags]              run DP-SGD (or the baseline) end to end
 //! dpshort bench   [flags]              steady-state throughput sweep
 //! dpshort plan    [flags]              analytic max-batch memory planner (Fig 3 / Tab 3)
@@ -11,6 +11,12 @@
 //! dpshort scale   [flags]              multi-GPU scaling simulation (Fig 7 / A.4 / A.5)
 //! dpshort report  <fig1|fig2|fig3|table1|table2|table3|fig4|fig5|fig6|figA1|figA2|fig7|figA5|all>
 //! ```
+//!
+//! Backend selection: `--backend reference` forces the pure-Rust
+//! reference executor; `--backend pjrt` forces the artifact path. With
+//! neither, artifacts are used when present (and the `pjrt` feature is
+//! on), falling back to the reference backend so every command works on
+//! a fresh offline checkout.
 
 use anyhow::{anyhow, Result};
 use dp_shortcuts::coordinator::batcher::BatchingMode;
@@ -23,18 +29,25 @@ use dp_shortcuts::util::cli::Args;
 
 const USAGE: &str = "usage: dpshort <list|train|bench|plan|account|scale|report> [--flags]
   common flags: --artifacts DIR (default: artifacts)
+                --backend reference|pjrt (default: pjrt if artifacts exist, else reference)
   train/bench:  --model NAME --variant V --batch B --steps N --rate Q
                 --dataset N --lr LR --sigma S --epsilon E --delta D
-                --seed S --bf16 --naive-mode --eval N
+                --seed S --bf16 --naive-mode --eval N --json
   bench:        --repeats R
   account:      --rate Q --steps N --delta D [--sigma S | --epsilon E]
   scale:        --model NAME --gpus LIST (e.g. 1,4,8,16,32,80)
   report:       <figure-or-table id> [--quick]";
 
-fn config_from(args: &Args) -> Result<TrainConfig> {
+fn config_from(args: &Args, rt: &Runtime) -> Result<TrainConfig> {
     let mut c = TrainConfig::default();
     if let Some(m) = args.get("model") {
         c.model = m.to_string();
+    } else if !rt.manifest().models.contains_key(&c.model) {
+        // No --model and the compiled-in default isn't in this
+        // manifest (e.g. reference backend): use its first model.
+        if let Some(first) = rt.default_model() {
+            c.model = first.to_string();
+        }
     }
     if let Some(v) = args.get("variant") {
         c.variant = v.to_string();
@@ -57,7 +70,18 @@ fn config_from(args: &Args) -> Result<TrainConfig> {
     Ok(c)
 }
 
+/// Resolve the runtime from `--backend`/`--artifacts` (see module docs).
+fn load_runtime(args: &Args, artifacts: &str) -> Result<Runtime> {
+    match args.get("backend") {
+        Some("reference") => Ok(Runtime::reference()),
+        Some("pjrt") => Runtime::load(artifacts),
+        Some(other) => Err(anyhow!("unknown backend {other:?} (reference|pjrt)")),
+        None => Runtime::auto(artifacts),
+    }
+}
+
 fn cmd_list(rt: &Runtime) -> Result<()> {
+    println!("backend: {}", rt.backend_name());
     println!("{:<12} {:>10} {:>6}  variants x batches", "model", "params", "image");
     for (name, m) in &rt.manifest().models {
         println!(
@@ -76,9 +100,10 @@ fn cmd_list(rt: &Runtime) -> Result<()> {
 }
 
 fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
-    let cfg = config_from(args)?;
+    let cfg = config_from(args, rt)?;
     println!(
-        "train: model={} variant={} mode={:?} B={} q={} steps={} E[L]={}",
+        "train: backend={} model={} variant={} mode={:?} B={} q={} steps={} E[L]={}",
+        rt.backend_name(),
         cfg.model,
         cfg.variant,
         cfg.mode,
@@ -89,6 +114,10 @@ fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
     );
     let trainer = Trainer::new(rt, cfg.clone())?;
     let rep = trainer.run()?;
+    if args.get_bool("json") {
+        println!("{}", rep.to_json()?);
+        return Ok(());
+    }
     if cfg.is_private() {
         println!(
             "privacy: sigma={:.4}  spent eps={:.3} at delta={:.2e}",
@@ -123,7 +152,7 @@ fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(rt: &Runtime, args: &Args) -> Result<()> {
-    let cfg = config_from(args)?;
+    let cfg = config_from(args, rt)?;
     let repeats: usize = args.get_parse_or("repeats", 8).map_err(|e| anyhow!(e))?;
     let trainer = Trainer::new(rt, cfg.clone())?;
     let samples = trainer.bench_accum(&cfg.variant, cfg.physical_batch, repeats)?;
@@ -158,14 +187,18 @@ fn cmd_scale(rt: &Runtime, args: &Args) -> Result<()> {
         .split(',')
         .map(|s| s.trim().parse::<usize>().map_err(|e| anyhow!("bad gpu count: {e}")))
         .collect::<Result<_>>()?;
-    let model = args.get_or("model", "vit-micro");
+    let default_model = rt
+        .default_model()
+        .ok_or_else(|| anyhow!("empty manifest"))?
+        .to_string();
+    let model = args.get_or("model", &default_model);
     report::print_scaling_study(rt, model, &gpus)
 }
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args =
-        Args::parse(&raw, &["bf16", "naive-mode", "quick", "help"]).map_err(|e| anyhow!(e))?;
+    let args = Args::parse(&raw, &["bf16", "naive-mode", "quick", "help", "json"])
+        .map_err(|e| anyhow!(e))?;
     if args.positional.is_empty() || args.get_bool("help") {
         println!("{USAGE}");
         return Ok(());
@@ -184,7 +217,7 @@ fn main() -> Result<()> {
         }
         _ => {}
     }
-    let rt = Runtime::load(&artifacts)?;
+    let rt = load_runtime(&args, &artifacts)?;
     match cmd {
         "list" => cmd_list(&rt),
         "train" => cmd_train(&rt, &args),

@@ -98,17 +98,25 @@ impl RdpAccountant {
 
     /// Convert a composed RDP curve to epsilon at `delta` (Balle et al.
     /// 2020 / Opacus formula), minimizing over orders.
+    ///
+    /// The minimum runs over **all** orders and is clamped at zero
+    /// afterwards (the Opacus convention): a negative candidate means
+    /// the mechanism is (0, delta)-DP at that order, not that the order
+    /// is invalid. Filtering negatives out and returning `+inf` when
+    /// every candidate was negative silently destroyed the tiny-T /
+    /// large-sigma corner, reporting an infinite budget for mechanisms
+    /// that are in fact essentially free.
     pub fn eps_from_rdp(&self, rdp: &[f64], delta: f64) -> f64 {
         assert!(delta > 0.0 && delta < 1.0);
         let mut best = f64::INFINITY;
         for (&alpha, &r) in self.orders.iter().zip(rdp) {
             let a = alpha as f64;
             let eps = r + ((a - 1.0) / a).ln() - (delta.ln() + a.ln()) / (a - 1.0);
-            if eps >= 0.0 && eps < best {
+            if eps < best {
                 best = eps;
             }
         }
-        best
+        best.max(0.0)
     }
 
     /// End-to-end: epsilon spent by `steps` Poisson-subsampled Gaussian
@@ -126,7 +134,7 @@ impl RdpAccountant {
         for (&alpha, &r) in self.orders.iter().zip(&rdp) {
             let a = alpha as f64;
             let eps = r + ((a - 1.0) / a).ln() - (delta.ln() + a.ln()) / (a - 1.0);
-            if eps >= 0.0 && eps < best.0 {
+            if eps < best.0 {
                 best = (eps, alpha);
             }
         }
@@ -238,6 +246,27 @@ mod tests {
         let acc = RdpAccountant::default();
         let eps = acc.epsilon(0.5, 0.92378, 4, 2.04e-5);
         assert!((eps - 8.0).abs() < 0.01, "eps = {eps}");
+    }
+
+    #[test]
+    fn all_negative_candidates_clamp_to_zero_not_infinity() {
+        // Regression (tiny-T / large-sigma corner): with one nearly
+        // noiseless-in-epsilon step and a loose delta, every order's
+        // conversion candidate is negative. The accountant must report
+        // 0 (the mechanism is (0, delta)-DP), matching Opacus — the old
+        // `eps >= 0` filter fell through to +infinity.
+        let acc = RdpAccountant::default();
+        let eps = acc.epsilon(0.01, 100.0, 1, 0.9);
+        assert_eq!(eps, 0.0, "expected clamped epsilon, got {eps}");
+        // The streaming accountant goes through the same conversion.
+        let mut s = StreamingAccountant::new(acc.clone());
+        s.record_step(0.01, 100.0);
+        assert_eq!(s.epsilon(0.9), 0.0);
+        // Ordinary settings are untouched by the fallback.
+        let normal = acc.epsilon(0.01, 1.1, 10_000, 1e-5);
+        assert!((normal - 5.65431).abs() < 1e-3, "eps = {normal}");
+        // Epsilon can never be negative either.
+        assert!(acc.epsilon(0.001, 50.0, 1, 0.5) >= 0.0);
     }
 
     #[test]

@@ -72,13 +72,12 @@ pub fn run(rt: &Runtime, what: &str, quick: bool) -> Result<()> {
     Ok(())
 }
 
-fn default_model(rt: &Runtime) -> Result<&'static str> {
-    // vit-micro is always lowered; fall back gracefully if not.
-    if rt.manifest().models.contains_key("vit-micro") {
-        Ok("vit-micro")
-    } else {
-        Err(anyhow!("vit-micro artifacts missing; run `make artifacts`"))
-    }
+fn default_model(rt: &Runtime) -> Result<&str> {
+    // One policy for every entry point: Runtime::default_model prefers
+    // vit-micro (the artifact ladder's canonical rung), else the
+    // backend's first model (the reference backend's linear model).
+    rt.default_model()
+        .ok_or_else(|| anyhow!("manifest has no models; run `make artifacts`"))
 }
 
 fn bench_median(rt: &Runtime, model: &str, variant: &str, batch: usize, repeats: usize) -> Result<f64> {

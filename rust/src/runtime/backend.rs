@@ -1,0 +1,112 @@
+//! The execution-backend seam (the "multi-backend" refactor).
+//!
+//! A [`Backend`] owns compilation/caching of a model's executables and
+//! the three calls of the flat-parameter ABI (DESIGN.md §3):
+//!
+//! ```text
+//! accum(params[P], acc[P], x[B,H,W,C], y[B], mask[B])
+//!       -> (acc'[P], loss_sum, sq_norms[B])
+//! apply(params[P], acc[P], seed, denom, lr, noise_mult) -> params'[P]
+//! eval (params[P], x[B,H,W,C], y[B]) -> (loss_sum, ncorrect)
+//! ```
+//!
+//! Two implementations ship:
+//!
+//! * [`super::reference::ReferenceBackend`] — pure-Rust linear+softmax
+//!   reference model (the Rust port of `python/compile/kernels/ref.py`);
+//!   always available, default.
+//! * `super::pjrt::PjrtBackend` (feature `pjrt`) — executes AOT-lowered
+//!   HLO artifacts through the `xla` bindings.
+//!
+//! The trait is object-safe; the runtime facade holds `Rc<dyn Backend>`.
+
+use super::compile_cache::CompileRecord;
+use super::manifest::{ExecutableMeta, ModelMeta};
+use super::tensor::{read_flat_f32, Tensor};
+use anyhow::Result;
+use std::path::Path;
+
+/// Handle to a prepared (compiled-and-cached) executable.
+#[derive(Debug, Clone)]
+pub struct Prepared {
+    /// Artifact file name — the backend's cache key.
+    pub key: String,
+    /// Wall-clock seconds this `prepare` spent compiling, or `None` on a
+    /// cache hit. One lookup answers both "give me the executable" and
+    /// "did this batch just pay a compile" (the Fig. A.2 attribution).
+    pub compile_seconds: Option<f64>,
+}
+
+/// Decoded outputs of one accum call.
+#[derive(Debug, Clone)]
+pub struct AccumOut {
+    /// New gradient accumulator; round-trips into the next accum call.
+    pub acc: Tensor,
+    /// Sum of masked per-example losses.
+    pub loss_sum: f32,
+    /// Per-example squared gradient norms (zeros for nonprivate).
+    pub sq_norms: Vec<f32>,
+}
+
+/// An execution backend: compiles artifacts and runs the ABI calls.
+pub trait Backend {
+    /// Short backend name ("reference" | "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Compile (or fetch from cache) the executable for `exe`. The
+    /// returned [`Prepared`] reports compile time iff this call compiled.
+    fn prepare(&self, dir: &Path, meta: &ModelMeta, exe: &ExecutableMeta) -> Result<Prepared>;
+
+    /// True if `key` (an artifact file name) is already compiled.
+    fn is_compiled(&self, key: &str) -> bool;
+
+    /// Every compilation this backend performed, with timings.
+    fn compile_records(&self) -> Vec<CompileRecord>;
+
+    /// Initial flat parameter vector for `meta`. The default reads the
+    /// AOT-written little-endian f32 file; backends without artifact
+    /// files (the reference backend) synthesize their own.
+    fn init_params(&self, dir: &Path, meta: &ModelMeta) -> Result<Tensor> {
+        read_flat_f32(&dir.join(&meta.init_params), meta.n_params)
+    }
+
+    /// One gradient-accumulation call (the Algorithm 1/2 inner loop).
+    /// `x` is row-major `[B, H, W, C]`; `mask` the Algorithm-2 masks.
+    #[allow(clippy::too_many_arguments)]
+    fn run_accum(
+        &self,
+        prep: &Prepared,
+        meta: &ModelMeta,
+        params: &Tensor,
+        acc: &Tensor,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<AccumOut>;
+
+    /// The once-per-logical-batch noise + SGD step. `seed` is the
+    /// full-width 64-bit per-step noise seed; `denom` the Algorithm-1
+    /// `|L|` divisor; `noise_mult` is `sigma * C` (0 for non-private).
+    #[allow(clippy::too_many_arguments)]
+    fn run_apply(
+        &self,
+        prep: &Prepared,
+        meta: &ModelMeta,
+        params: &Tensor,
+        acc: &Tensor,
+        seed: u64,
+        denom: f32,
+        lr: f32,
+        noise_mult: f32,
+    ) -> Result<Tensor>;
+
+    /// Forward-only evaluation: `(loss_sum, ncorrect)` over the batch.
+    fn run_eval(
+        &self,
+        prep: &Prepared,
+        meta: &ModelMeta,
+        params: &Tensor,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f32, f32)>;
+}

@@ -1,63 +1,121 @@
-//! The model-facing runtime: typed wrappers over the flat-param ABI.
+//! The model-facing runtime facade: typed wrappers over the flat-param
+//! ABI, generic over the execution [`Backend`].
+//!
+//! [`Runtime`] pairs a manifest (what was lowered) with a backend (how
+//! to run it); [`ModelRuntime`] is the per-model view the trainer
+//! drives. Artifact-backed runtimes come from [`Runtime::load`] (PJRT,
+//! feature `pjrt`); the dependency-free default is
+//! [`Runtime::reference`], whose manifest and executables are
+//! synthesized in-memory by the pure-Rust reference backend.
 
-use super::compile_cache::CompileCache;
+use super::backend::{AccumOut, Backend, Prepared};
+use super::compile_cache::CompileRecord;
 use super::manifest::{Manifest, ModelMeta};
+use super::reference::ReferenceBackend;
+use super::tensor::{self, Tensor};
 use anyhow::{anyhow, Context, Result};
-use std::cell::RefCell;
 use std::path::PathBuf;
 use std::rc::Rc;
-use std::sync::Arc;
 
-fn xerr(e: xla::Error) -> anyhow::Error {
-    anyhow!("xla: {e:?}")
-}
-
-/// Owns the PJRT client, the manifest, and the compile cache.
+/// Owns the manifest and the execution backend.
 pub struct Runtime {
     dir: PathBuf,
     manifest: Manifest,
-    cache: Rc<RefCell<CompileCache>>,
+    backend: Rc<dyn Backend>,
 }
 
 impl Runtime {
-    /// Load the artifacts directory (must contain manifest.json).
+    /// Load an artifacts directory (must contain manifest.json) and
+    /// execute it through the PJRT backend. Requires the `pjrt` feature;
+    /// without it this returns an error pointing at
+    /// [`Runtime::reference`].
     pub fn load(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
         let dir = artifacts_dir.into();
         let (manifest, dir) = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu().map_err(xerr)?;
-        Ok(Self { dir, manifest, cache: Rc::new(RefCell::new(CompileCache::new(client))) })
+        Self::artifact_backend(dir, manifest)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn artifact_backend(dir: PathBuf, manifest: Manifest) -> Result<Self> {
+        let backend: Rc<dyn Backend> = Rc::new(super::pjrt::PjrtBackend::new()?);
+        Ok(Self { dir, manifest, backend })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn artifact_backend(dir: PathBuf, _manifest: Manifest) -> Result<Self> {
+        Err(anyhow!(
+            "artifacts at {} need the PJRT backend; rebuild with `--features pjrt` \
+             or use Runtime::reference() for the pure-Rust backend",
+            dir.display()
+        ))
+    }
+
+    /// The shared launcher policy: artifacts through PJRT when both the
+    /// feature and `<dir>/manifest.json` are present, the pure-Rust
+    /// reference backend otherwise — so every entry point (CLI,
+    /// examples, benches) works on a fresh offline checkout.
+    pub fn auto(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = artifacts_dir.into();
+        if cfg!(feature = "pjrt") && dir.join("manifest.json").exists() {
+            Self::load(dir)
+        } else {
+            Ok(Self::reference())
+        }
+    }
+
+    /// Offline runtime over the pure-Rust reference backend (seed 0).
+    pub fn reference() -> Self {
+        Self::reference_with_seed(0)
+    }
+
+    /// Reference runtime with an explicit init/manifest seed.
+    pub fn reference_with_seed(seed: u64) -> Self {
+        Self::with_backend(
+            PathBuf::from("."),
+            ReferenceBackend::manifest(seed),
+            Rc::new(ReferenceBackend::new(seed)),
+        )
+    }
+
+    /// Assemble a runtime from parts (custom backends, tests).
+    pub fn with_backend(dir: PathBuf, manifest: Manifest, backend: Rc<dyn Backend>) -> Self {
+        Self { dir, manifest, backend }
+    }
+
+    /// Short name of the active backend ("reference" | "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    /// Compile timings recorded so far (Fig A.2 data).
-    pub fn compile_records(&self) -> Vec<super::CompileRecord> {
-        self.cache.borrow().records().to_vec()
+    /// The shared "no `--model` given" default: `vit-micro` when the
+    /// manifest has it (the artifact ladder's canonical rung, keeping
+    /// paper-figure commands stable), otherwise the first model.
+    pub fn default_model(&self) -> Option<&str> {
+        if self.manifest.models.contains_key("vit-micro") {
+            return Some("vit-micro");
+        }
+        self.manifest.models.keys().next().map(String::as_str)
     }
 
-    /// A typed view over one model's artifacts.
+    /// Compile timings recorded so far (Fig A.2 data).
+    pub fn compile_records(&self) -> Vec<CompileRecord> {
+        self.backend.compile_records()
+    }
+
+    /// A typed view over one model's executables.
     pub fn model(&self, name: &str) -> Result<ModelRuntime> {
         let meta = self.manifest.model(name)?.clone();
         Ok(ModelRuntime {
             name: name.to_string(),
             dir: self.dir.clone(),
             meta,
-            cache: self.cache.clone(),
+            backend: self.backend.clone(),
         })
     }
-}
-
-/// Decoded outputs of one accum call.
-pub struct AccumOut {
-    /// New gradient accumulator (kept as a Literal: it round-trips back
-    /// into the next accum call without re-encoding).
-    pub acc: xla::Literal,
-    /// Sum of masked per-example losses.
-    pub loss_sum: f32,
-    /// Per-example squared gradient norms (zeros for nonprivate).
-    pub sq_norms: Vec<f32>,
 }
 
 /// Typed executor for one model.
@@ -65,7 +123,7 @@ pub struct ModelRuntime {
     name: String,
     dir: PathBuf,
     meta: ModelMeta,
-    cache: Rc<RefCell<CompileCache>>,
+    backend: Rc<dyn Backend>,
 }
 
 impl ModelRuntime {
@@ -86,67 +144,39 @@ impl ModelRuntime {
         self.meta.image * self.meta.image * self.meta.channels
     }
 
-    /// Load the initial (AOT-initialized) parameter vector.
-    pub fn init_params(&self) -> Result<xla::Literal> {
-        let path = self.dir.join(&self.meta.init_params);
-        let bytes = std::fs::read(&path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        if bytes.len() != self.meta.n_params * 4 {
-            return Err(anyhow!(
-                "init params size mismatch: {} bytes for {} params",
-                bytes.len(),
-                self.meta.n_params
-            ));
-        }
-        let floats: Vec<f32> = bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        Ok(xla::Literal::vec1(&floats))
+    /// Initial parameter vector (AOT file or backend-synthesized).
+    pub fn init_params(&self) -> Result<Tensor> {
+        self.backend.init_params(&self.dir, &self.meta)
     }
 
     /// Fresh zero accumulator.
-    pub fn zero_acc(&self) -> xla::Literal {
-        xla::Literal::vec1(&vec![0.0f32; self.meta.n_params])
+    pub fn zero_acc(&self) -> Tensor {
+        Tensor::zeros(self.meta.n_params)
     }
 
     /// Checkpoint the flat parameter vector (raw little-endian f32, the
     /// same format as the AOT-written `*_init.bin`, so checkpoints and
     /// initializations are interchangeable).
-    pub fn save_params(&self, params: &xla::Literal, path: &std::path::Path) -> Result<()> {
-        let v = params.to_vec::<f32>().map_err(xerr)?;
-        if v.len() != self.meta.n_params {
+    pub fn save_params(&self, params: &Tensor, path: &std::path::Path) -> Result<()> {
+        if params.len() != self.meta.n_params {
             return Err(anyhow!(
                 "checkpoint length {} != n_params {}",
-                v.len(),
+                params.len(),
                 self.meta.n_params
             ));
         }
-        let mut bytes = Vec::with_capacity(v.len() * 4);
-        for x in &v {
+        let mut bytes = Vec::with_capacity(params.len() * 4);
+        for x in params.as_slice() {
             bytes.extend_from_slice(&x.to_le_bytes());
         }
         std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
     }
 
     /// Load a checkpoint written by [`Self::save_params`] (or the AOT
-    /// init file) as the flat parameter Literal.
-    pub fn load_params(&self, path: &std::path::Path) -> Result<xla::Literal> {
-        let bytes =
-            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
-        if bytes.len() != self.meta.n_params * 4 {
-            return Err(anyhow!(
-                "checkpoint {} has {} bytes, expected {}",
-                path.display(),
-                bytes.len(),
-                self.meta.n_params * 4
-            ));
-        }
-        let floats: Vec<f32> = bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        Ok(xla::Literal::vec1(&floats))
+    /// init file) as the flat parameter vector.
+    pub fn load_params(&self, path: &std::path::Path) -> Result<Tensor> {
+        tensor::read_flat_f32(path, self.meta.n_params)
+            .with_context(|| format!("loading checkpoint {}", path.display()))
     }
 
     /// Whether the accum executable for this spec exists.
@@ -163,22 +193,15 @@ impl ModelRuntime {
     /// observe naive-JAX recompilation, Fig A.2).
     pub fn accum_is_compiled(&self, variant: &str, batch: usize, dtype: &str) -> bool {
         match self.meta.find_accum(variant, batch, dtype) {
-            Some(e) => self.cache.borrow().is_cached(&e.path),
+            Some(e) => self.backend.is_compiled(&e.path),
             None => false,
         }
     }
 
-    fn compile(&self, file: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        self.cache.borrow_mut().get(&self.dir, file)
-    }
-
-    /// Pre-compile (and time) the accum executable for this spec.
-    pub fn prepare_accum(
-        &self,
-        variant: &str,
-        batch: usize,
-        dtype: &str,
-    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+    /// Compile (or fetch) the accum executable for this spec. The
+    /// returned handle reports compile time iff this call compiled, so
+    /// one lookup serves both the hot loop and its Fig. A.2 attribution.
+    pub fn prepare_accum(&self, variant: &str, batch: usize, dtype: &str) -> Result<Prepared> {
         let e = self.meta.find_accum(variant, batch, dtype).ok_or_else(|| {
             anyhow!(
                 "no accum artifact for {} variant={variant} B={batch} dtype={dtype} \
@@ -187,7 +210,25 @@ impl ModelRuntime {
                 self.meta.accum_batches(variant, dtype)
             )
         })?;
-        self.compile(&e.path)
+        self.backend.prepare(&self.dir, &self.meta, e)
+    }
+
+    /// Compile (or fetch) the apply executable.
+    pub fn prepare_apply(&self) -> Result<Prepared> {
+        let e = self
+            .meta
+            .find_apply()
+            .ok_or_else(|| anyhow!("no apply artifact for {}", self.name))?;
+        self.backend.prepare(&self.dir, &self.meta, e)
+    }
+
+    /// Compile (or fetch) the eval executable.
+    pub fn prepare_eval(&self) -> Result<Prepared> {
+        let e = self
+            .meta
+            .find_eval()
+            .ok_or_else(|| anyhow!("no eval artifact for {}", self.name))?;
+        self.backend.prepare(&self.dir, &self.meta, e)
     }
 
     /// One gradient-accumulation call (the Algorithm 1/2 inner loop).
@@ -195,98 +236,54 @@ impl ModelRuntime {
     /// `x` is row-major [batch, H, W, C]; `mask` the Algorithm-2 masks.
     pub fn run_accum(
         &self,
-        exe: &xla::PjRtLoadedExecutable,
-        params: &xla::Literal,
-        acc: &xla::Literal,
+        prep: &Prepared,
+        params: &Tensor,
+        acc: &Tensor,
         x: &[f32],
         y: &[i32],
         mask: &[f32],
     ) -> Result<AccumOut> {
-        let b = y.len();
-        debug_assert_eq!(x.len(), b * self.image_dim());
-        debug_assert_eq!(mask.len(), b);
-        let img = self.meta.image as i64;
-        let xs = xla::Literal::vec1(x)
-            .reshape(&[b as i64, img, img, self.meta.channels as i64])
-            .map_err(xerr)?;
-        let ys = xla::Literal::vec1(y);
-        let ms = xla::Literal::vec1(mask);
-        let out = exe
-            .execute(&[params, acc, &xs, &ys, &ms])
-            .map_err(xerr)?[0][0]
-            .to_literal_sync()
-            .map_err(xerr)?;
-        let (acc_out, loss, sq) = out.to_tuple3().map_err(xerr)?;
-        Ok(AccumOut {
-            acc: acc_out,
-            loss_sum: loss.get_first_element::<f32>().map_err(xerr)?,
-            sq_norms: sq.to_vec::<f32>().map_err(xerr)?,
-        })
+        debug_assert_eq!(x.len(), y.len() * self.image_dim());
+        debug_assert_eq!(mask.len(), y.len());
+        self.backend.run_accum(prep, &self.meta, params, acc, x, y, mask)
     }
 
-    /// The once-per-logical-batch noise + SGD step.
+    /// The once-per-logical-batch noise + SGD step, on an executable
+    /// from [`Self::prepare_apply`] (same single-lookup compile
+    /// attribution as the accum path).
     ///
-    /// `denom` is the Algorithm-1 |L| divisor (expected logical batch),
-    /// `noise_mult` is sigma * C (0 for the non-private baseline).
+    /// `seed` is the full-width 64-bit per-step noise seed, `denom` the
+    /// Algorithm-1 |L| divisor (expected logical batch), `noise_mult`
+    /// is sigma * C (0 for the non-private baseline).
+    #[allow(clippy::too_many_arguments)]
     pub fn run_apply(
         &self,
-        params: &xla::Literal,
-        acc: &xla::Literal,
-        seed: i32,
+        prep: &Prepared,
+        params: &Tensor,
+        acc: &Tensor,
+        seed: u64,
         denom: f32,
         lr: f32,
         noise_mult: f32,
-    ) -> Result<xla::Literal> {
-        let e = self
-            .meta
-            .find_apply()
-            .ok_or_else(|| anyhow!("no apply artifact for {}", self.name))?;
-        let exe = self.compile(&e.path)?;
-        let out = exe
-            .execute(&[
-                params,
-                acc,
-                &xla::Literal::vec1(&[seed]),
-                &xla::Literal::vec1(&[denom]),
-                &xla::Literal::vec1(&[lr]),
-                &xla::Literal::vec1(&[noise_mult]),
-            ])
-            .map_err(xerr)?[0][0]
-            .to_literal_sync()
-            .map_err(xerr)?;
-        out.to_tuple1().map_err(xerr)
+    ) -> Result<Tensor> {
+        self.backend
+            .run_apply(prep, &self.meta, params, acc, seed, denom, lr, noise_mult)
     }
 
     /// Forward-only evaluation: returns (loss_sum, ncorrect) over the
     /// eval batch (whose size is fixed by the lowered artifact).
-    pub fn run_eval(
-        &self,
-        params: &xla::Literal,
-        x: &[f32],
-        y: &[i32],
-    ) -> Result<(f32, f32)> {
-        let e = self
+    pub fn run_eval(&self, params: &Tensor, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let want = self
             .meta
             .find_eval()
-            .ok_or_else(|| anyhow!("no eval artifact for {}", self.name))?;
-        let want = e.batch.unwrap_or(0);
+            .ok_or_else(|| anyhow!("no eval artifact for {}", self.name))?
+            .batch
+            .unwrap_or(0);
         if y.len() != want {
             return Err(anyhow!("eval batch must be exactly {want}, got {}", y.len()));
         }
-        let exe = self.compile(&e.path)?;
-        let img = self.meta.image as i64;
-        let xs = xla::Literal::vec1(x)
-            .reshape(&[y.len() as i64, img, img, self.meta.channels as i64])
-            .map_err(xerr)?;
-        let ys = xla::Literal::vec1(y);
-        let out = exe.execute(&[params, &xs, &ys]).map_err(xerr)?[0][0]
-            .to_literal_sync()
-            .map_err(xerr)?;
-        let (loss, ncorrect) = out.to_tuple2().map_err(xerr)?;
-        Ok((
-            loss.get_first_element::<f32>().map_err(xerr)?,
-            ncorrect.get_first_element::<f32>().map_err(xerr)?,
-        ))
+        let prep = self.prepare_eval()?;
+        self.backend.run_eval(&prep, &self.meta, params, x, y)
     }
 
     /// Eval batch size fixed at AOT time.

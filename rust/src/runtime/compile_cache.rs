@@ -3,13 +3,16 @@
 //! The paper's "naive JAX" DP-SGD recompiles whenever Poisson sampling
 //! produces a physical batch size it has not seen (jit retracing); the
 //! masked variant (Algorithm 2) compiles exactly once per shape. This
-//! cache makes that cost a first-class measurement: every PJRT
-//! compilation is recorded with its wall-clock, and the trainer's report
-//! includes the per-size compile-time series.
+//! cache makes that cost a first-class measurement: every compilation is
+//! recorded with its wall-clock, and the trainer's report includes the
+//! per-size compile-time series.
+//!
+//! Generic over the compiled value so both backends share it: the PJRT
+//! backend caches `xla::PjRtLoadedExecutable`s, the reference backend
+//! its decoded executable specs.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::collections::HashMap;
-use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -18,24 +21,25 @@ use std::time::Instant;
 pub struct CompileRecord {
     /// Artifact file name.
     pub path: String,
-    /// Wall-clock seconds for parse + PJRT compile.
+    /// Wall-clock seconds for parse + compile.
     pub seconds: f64,
 }
 
-/// Caches compiled executables keyed by artifact path.
-pub struct CompileCache {
-    client: xla::PjRtClient,
-    cache: HashMap<String, Arc<xla::PjRtLoadedExecutable>>,
+/// Caches compiled executables keyed by artifact file name.
+pub struct CompileCache<E> {
+    cache: HashMap<String, Arc<E>>,
     records: Vec<CompileRecord>,
 }
 
-impl CompileCache {
-    pub fn new(client: xla::PjRtClient) -> Self {
-        Self { client, cache: HashMap::new(), records: Vec::new() }
+impl<E> Default for CompileCache<E> {
+    fn default() -> Self {
+        Self::new()
     }
+}
 
-    pub fn client(&self) -> &xla::PjRtClient {
-        &self.client
+impl<E> CompileCache<E> {
+    pub fn new() -> Self {
+        Self { cache: HashMap::new(), records: Vec::new() }
     }
 
     /// Number of distinct executables compiled so far.
@@ -53,26 +57,69 @@ impl CompileCache {
         self.cache.contains_key(file)
     }
 
-    /// Get or compile the executable for `dir/file`.
-    pub fn get(&mut self, dir: &Path, file: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+    /// The cached executable for `file`, if compiled.
+    pub fn get_cached(&self, file: &str) -> Option<Arc<E>> {
+        self.cache.get(file).cloned()
+    }
+
+    /// Get `file`'s executable, invoking (and timing) `compile` on a
+    /// miss. Returns the executable plus `Some(seconds)` iff this call
+    /// compiled — the single-lookup answer to "did we just pay a
+    /// compile?" that the trainer's hot loop needs.
+    pub fn get_or_compile<F>(&mut self, file: &str, compile: F) -> Result<(Arc<E>, Option<f64>)>
+    where
+        F: FnOnce() -> Result<E>,
+    {
         if let Some(exe) = self.cache.get(file) {
-            return Ok(exe.clone());
+            return Ok((exe.clone(), None));
         }
-        let full = dir.join(file);
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&full)
-            .map_err(|e| anyhow::anyhow!("{e:?}"))
-            .with_context(|| format!("parsing HLO text {}", full.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("{e:?}"))
-            .with_context(|| format!("PJRT compile of {}", full.display()))?;
+        let exe = compile()?;
         let seconds = t0.elapsed().as_secs_f64();
         self.records.push(CompileRecord { path: file.to_string(), seconds });
         let exe = Arc::new(exe);
         self.cache.insert(file.to_string(), exe.clone());
-        Ok(exe)
+        Ok((exe, Some(seconds)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compiles_once_and_records() {
+        let mut cache: CompileCache<u32> = CompileCache::new();
+        let mut calls = 0;
+        let (a, t1) = cache
+            .get_or_compile("f", || {
+                calls += 1;
+                Ok(7)
+            })
+            .unwrap();
+        assert_eq!(*a, 7);
+        assert!(t1.is_some());
+        let (b, t2) = cache
+            .get_or_compile("f", || {
+                calls += 1;
+                Ok(8)
+            })
+            .unwrap();
+        assert_eq!(*b, 7, "cache hit must not recompile");
+        assert!(t2.is_none());
+        assert_eq!(calls, 1);
+        assert_eq!(cache.compiled_count(), 1);
+        assert_eq!(cache.records().len(), 1);
+        assert!(cache.is_cached("f") && !cache.is_cached("g"));
+        assert_eq!(cache.get_cached("f").map(|e| *e), Some(7));
+    }
+
+    #[test]
+    fn failed_compile_is_not_cached() {
+        let mut cache: CompileCache<u32> = CompileCache::new();
+        assert!(cache.get_or_compile("f", || anyhow::bail!("nope")).is_err());
+        assert!(!cache.is_cached("f"));
+        assert!(cache.records().is_empty());
+        assert!(cache.get_or_compile("f", || Ok(1)).is_ok());
     }
 }

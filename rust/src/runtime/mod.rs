@@ -1,5 +1,4 @@
-//! PJRT runtime: loads the AOT artifacts (HLO text + manifest + initial
-//! parameters) and executes them on the CPU PJRT client.
+//! Execution runtime: manifest + pluggable backends behind one facade.
 //!
 //! This is the only boundary between L3 (Rust) and the L2/L1 graphs.
 //! Everything crossing it uses the flat-parameter ABI described in
@@ -8,21 +7,33 @@
 //! ```text
 //! accum(params[P], acc[P], x[B,H,W,C], y[B], mask[B])
 //!       -> (acc'[P], loss_sum, sq_norms[B])
-//! apply(params[P], acc[P], seed i32[1], denom[1], lr[1], noise_mult[1])
+//! apply(params[P], acc[P], seed, denom[1], lr[1], noise_mult[1])
 //!       -> params'[P]
 //! eval (params[P], x[B,H,W,C], y[B]) -> (loss_sum, ncorrect)
 //! ```
 //!
+//! The [`Backend`] trait (DESIGN.md §2) seams the executor out of the
+//! coordinator: the default build ships the pure-Rust
+//! [`ReferenceBackend`] (linear+softmax reference model, fully offline);
+//! the `pjrt` feature adds the PJRT path over AOT-lowered HLO artifacts.
 //! Compilation is cached per artifact and **timed** — the compile-time
 //! measurements are the data behind the paper's Figure A.2 (JAX naive
 //! recompilation cost as a function of batch size).
 
+pub mod backend;
 pub mod client;
 pub mod compile_cache;
 pub mod hlo_analysis;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
+pub mod tensor;
 
+pub use backend::{AccumOut, Backend, Prepared};
 pub use client::{ModelRuntime, Runtime};
 pub use compile_cache::{CompileCache, CompileRecord};
 pub use hlo_analysis::{analyze, analyze_file, HloStats};
 pub use manifest::{ExecutableMeta, Manifest, ModelMeta};
+pub use reference::{ReferenceBackend, REFERENCE_MODEL};
+pub use tensor::Tensor;

@@ -1,0 +1,169 @@
+//! PJRT backend (feature `pjrt`): executes the AOT-lowered HLO
+//! artifacts through the `xla` bindings — the deployment path of the
+//! paper's system. Offline builds type-check this module against the
+//! in-tree stub crate (vendor/xla-stub), which errors at runtime; link
+//! real bindings to execute artifacts.
+//!
+//! Tensors cross the boundary by value: the crate-owned [`Tensor`] is
+//! re-encoded into an `xla::Literal` per call. For the CPU testbed the
+//! copy is noise next to the graph execution; a buffer-donation fast
+//! path can come back behind this trait if a future device backend
+//! needs it.
+
+// The ABI methods carry the full flat-param call (8-9 args by design).
+#![allow(clippy::too_many_arguments)]
+
+use super::backend::{AccumOut, Backend, Prepared};
+use super::compile_cache::{CompileCache, CompileRecord};
+use super::manifest::{ExecutableMeta, ModelMeta};
+use super::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::path::Path;
+use std::sync::Arc;
+
+fn xerr(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e:?}")
+}
+
+/// Backend over the PJRT CPU client.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    cache: RefCell<CompileCache<xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(Self { client, cache: RefCell::new(CompileCache::new()) })
+    }
+
+    fn lookup(&self, prep: &Prepared) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        self.cache
+            .borrow()
+            .get_cached(&prep.key)
+            .ok_or_else(|| anyhow!("executable {} was not prepared", prep.key))
+    }
+
+    /// Fold the 64-bit per-step seed into the ABI's i32 seed slot,
+    /// xoring the halves so both contribute.
+    fn fold_seed(seed: u64) -> i32 {
+        ((seed >> 32) ^ (seed & 0xffff_ffff)) as u32 as i32
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn prepare(&self, dir: &Path, _meta: &ModelMeta, exe: &ExecutableMeta) -> Result<Prepared> {
+        let full = dir.join(&exe.path);
+        let client = &self.client;
+        let (_, compile_seconds) = self.cache.borrow_mut().get_or_compile(&exe.path, || {
+            let proto = xla::HloModuleProto::from_text_file(&full)
+                .map_err(xerr)
+                .with_context(|| format!("parsing HLO text {}", full.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(xerr)
+                .with_context(|| format!("PJRT compile of {}", full.display()))
+        })?;
+        Ok(Prepared { key: exe.path.clone(), compile_seconds })
+    }
+
+    fn is_compiled(&self, key: &str) -> bool {
+        self.cache.borrow().is_cached(key)
+    }
+
+    fn compile_records(&self) -> Vec<CompileRecord> {
+        self.cache.borrow().records().to_vec()
+    }
+
+    fn run_accum(
+        &self,
+        prep: &Prepared,
+        meta: &ModelMeta,
+        params: &Tensor,
+        acc: &Tensor,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<AccumOut> {
+        let exe = self.lookup(prep)?;
+        let b = y.len();
+        let img = meta.image as i64;
+        let xs = xla::Literal::vec1(x)
+            .reshape(&[b as i64, img, img, meta.channels as i64])
+            .map_err(xerr)?;
+        let ys = xla::Literal::vec1(y);
+        let ms = xla::Literal::vec1(mask);
+        let ps = xla::Literal::vec1(params.as_slice());
+        let ac = xla::Literal::vec1(acc.as_slice());
+        let out = exe.execute(&[&ps, &ac, &xs, &ys, &ms]).map_err(xerr)?[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?;
+        let (acc_out, loss, sq) = out.to_tuple3().map_err(xerr)?;
+        Ok(AccumOut {
+            acc: Tensor::from_vec(acc_out.to_vec::<f32>().map_err(xerr)?),
+            loss_sum: loss.get_first_element::<f32>().map_err(xerr)?,
+            sq_norms: sq.to_vec::<f32>().map_err(xerr)?,
+        })
+    }
+
+    fn run_apply(
+        &self,
+        prep: &Prepared,
+        _meta: &ModelMeta,
+        params: &Tensor,
+        acc: &Tensor,
+        seed: u64,
+        denom: f32,
+        lr: f32,
+        noise_mult: f32,
+    ) -> Result<Tensor> {
+        let exe = self.lookup(prep)?;
+        let ps = xla::Literal::vec1(params.as_slice());
+        let ac = xla::Literal::vec1(acc.as_slice());
+        let out = exe
+            .execute(&[
+                &ps,
+                &ac,
+                &xla::Literal::vec1(&[Self::fold_seed(seed)]),
+                &xla::Literal::vec1(&[denom]),
+                &xla::Literal::vec1(&[lr]),
+                &xla::Literal::vec1(&[noise_mult]),
+            ])
+            .map_err(xerr)?[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?;
+        let params_out = out.to_tuple1().map_err(xerr)?;
+        Ok(Tensor::from_vec(params_out.to_vec::<f32>().map_err(xerr)?))
+    }
+
+    fn run_eval(
+        &self,
+        prep: &Prepared,
+        meta: &ModelMeta,
+        params: &Tensor,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f32, f32)> {
+        let exe = self.lookup(prep)?;
+        let img = meta.image as i64;
+        let xs = xla::Literal::vec1(x)
+            .reshape(&[y.len() as i64, img, img, meta.channels as i64])
+            .map_err(xerr)?;
+        let ys = xla::Literal::vec1(y);
+        let ps = xla::Literal::vec1(params.as_slice());
+        let out = exe.execute(&[&ps, &xs, &ys]).map_err(xerr)?[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?;
+        let (loss, ncorrect) = out.to_tuple2().map_err(xerr)?;
+        Ok((
+            loss.get_first_element::<f32>().map_err(xerr)?,
+            ncorrect.get_first_element::<f32>().map_err(xerr)?,
+        ))
+    }
+}

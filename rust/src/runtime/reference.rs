@@ -1,0 +1,588 @@
+//! Pure-Rust reference backend: the default, dependency-free executor.
+//!
+//! Ports the linear+softmax reference model and the kernel oracles of
+//! `python/compile/kernels/ref.py` to Rust so the entire sampler →
+//! batcher → trainer → accountant → report pipeline runs end-to-end
+//! offline, with the exact Algorithm 1/2 semantics:
+//!
+//! * per-example gradients of softmax cross-entropy over one linear
+//!   layer (`logits = W x + b`, flat params `[W row-major | b]`),
+//! * per-example squared grad norms via the closed form
+//!   `||g_i||^2 = ||dlogits_i||^2 * (||x_i||^2 + 1)` (weight ⊗ input
+//!   outer product plus the bias row — for a single linear layer this
+//!   equals the ghost-norm trick, which is why the `ghost`/`bk`
+//!   variants share the per-example path here),
+//! * masked clip-and-accumulate `acc += mask_i * min(1, C/||g_i||) g_i`,
+//! * the noisy step `params - lr * (acc + sigma*C*z) / denom` with
+//!   ChaCha20-seeded Gaussian noise from the 64-bit per-step seed.
+//!
+//! "Compilation" is a spec decode, timed through the same
+//! [`CompileCache`] as PJRT so the masked-vs-naive compile-count
+//! invariants (Fig. A.2) are observable on this backend too.
+
+// The ABI methods carry the full flat-param call (8-9 args by design).
+#![allow(clippy::too_many_arguments)]
+
+use super::backend::{AccumOut, Backend, Prepared};
+use super::compile_cache::{CompileCache, CompileRecord};
+use super::manifest::{ExecutableMeta, Manifest, ModelMeta};
+use super::tensor::Tensor;
+use crate::util::rng::ChaChaRng;
+use anyhow::{anyhow, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Name of the synthetic reference model in [`ReferenceBackend::manifest`].
+pub const REFERENCE_MODEL: &str = "ref-linear";
+
+/// Decoded executable spec (the reference backend's "compiled" form).
+#[derive(Debug, Clone)]
+enum RefExec {
+    Accum { variant: String, batch: usize },
+    Apply,
+    Eval { batch: usize },
+}
+
+/// The pure-Rust reference CPU backend.
+pub struct ReferenceBackend {
+    cache: RefCell<CompileCache<RefExec>>,
+    /// Seed for the synthesized initial parameters.
+    init_seed: u64,
+}
+
+impl ReferenceBackend {
+    pub fn new(init_seed: u64) -> Self {
+        Self { cache: RefCell::new(CompileCache::new()), init_seed }
+    }
+
+    /// In-memory manifest for the reference model: every clipping
+    /// variant at a ladder of physical batch sizes, plus apply/eval —
+    /// the same catalog shape `python/compile/aot.py` writes for real
+    /// artifacts, so the trainer cannot tell the backends apart.
+    pub fn manifest(seed: u64) -> Manifest {
+        let image = 16;
+        let channels = 3;
+        let num_classes = 10;
+        let d = image * image * channels;
+        let mut executables = Vec::new();
+        for variant in ["nonprivate", "naive", "masked", "ghost", "bk"] {
+            for batch in [1usize, 2, 4, 8, 16, 32, 64] {
+                executables.push(ExecutableMeta {
+                    path: format!("{REFERENCE_MODEL}_accum_{variant}_b{batch}_f32.ref"),
+                    kind: "accum".into(),
+                    variant: Some(variant.into()),
+                    batch: Some(batch),
+                    dtype: Some("f32".into()),
+                });
+            }
+        }
+        executables.push(ExecutableMeta {
+            path: format!("{REFERENCE_MODEL}_apply.ref"),
+            kind: "apply".into(),
+            variant: None,
+            batch: None,
+            dtype: None,
+        });
+        executables.push(ExecutableMeta {
+            path: format!("{REFERENCE_MODEL}_eval_b32.ref"),
+            kind: "eval".into(),
+            variant: None,
+            batch: Some(32),
+            dtype: None,
+        });
+        let meta = ModelMeta {
+            family: "linear".into(),
+            n_params: num_classes * d + num_classes,
+            image,
+            channels,
+            num_classes,
+            clip_norm: 1.0,
+            flops_fwd_per_example: (2 * num_classes * d) as f64,
+            init_params: format!("{REFERENCE_MODEL}_init.synthetic"),
+            executables,
+        };
+        let mut models = BTreeMap::new();
+        models.insert(REFERENCE_MODEL.to_string(), meta);
+        Manifest { version: 1, seed, models }
+    }
+
+    fn spec(&self, prep: &Prepared) -> Result<Arc<RefExec>> {
+        self.cache
+            .borrow()
+            .get_cached(&prep.key)
+            .ok_or_else(|| anyhow!("executable {} was not prepared", prep.key))
+    }
+
+    fn check_model_vectors(meta: &ModelMeta, params: &Tensor, acc: Option<&Tensor>) -> Result<()> {
+        if params.len() != meta.n_params {
+            return Err(anyhow!(
+                "params length {} != n_params {}",
+                params.len(),
+                meta.n_params
+            ));
+        }
+        if let Some(acc) = acc {
+            if acc.len() != meta.n_params {
+                return Err(anyhow!(
+                    "acc length {} != n_params {}",
+                    acc.len(),
+                    meta.n_params
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn check_batch(meta: &ModelMeta, x: &[f32], y: &[i32]) -> Result<()> {
+        let d = image_dim(meta);
+        if x.len() != y.len() * d {
+            return Err(anyhow!(
+                "x length {} != batch {} * image dim {}",
+                x.len(),
+                y.len(),
+                d
+            ));
+        }
+        for &yi in y {
+            if yi < 0 || yi as usize >= meta.num_classes {
+                return Err(anyhow!(
+                    "label {yi} out of range for {} classes",
+                    meta.num_classes
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn image_dim(meta: &ModelMeta) -> usize {
+    meta.image * meta.image * meta.channels
+}
+
+/// `logits = W x + b` over the flat parameter layout `[W row-major | b]`.
+fn logits(meta: &ModelMeta, params: &[f32], xi: &[f32]) -> Vec<f32> {
+    let d = image_dim(meta);
+    let ncls = meta.num_classes;
+    let (w, rest) = params.split_at(ncls * d);
+    let bias = &rest[..ncls];
+    let mut out = Vec::with_capacity(ncls);
+    for (cls, &b) in bias.iter().enumerate() {
+        let row = &w[cls * d..(cls + 1) * d];
+        let dot: f32 = row.iter().zip(xi).map(|(wv, xv)| wv * xv).sum();
+        out.push(dot + b);
+    }
+    out
+}
+
+/// Stable log-sum-exp of the logits.
+fn logsumexp(lg: &[f32]) -> f32 {
+    let max = lg.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let z: f32 = lg.iter().map(|&l| (l - max).exp()).sum();
+    max + z.ln()
+}
+
+/// Cross-entropy loss and `dlogits = softmax(logits) - onehot(y)`.
+fn loss_and_dlogits(lg: &[f32], y: usize) -> (f32, Vec<f32>) {
+    let max = lg.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<f32> = lg.iter().map(|&l| (l - max).exp()).collect();
+    let z: f32 = probs.iter().sum();
+    let loss = max + z.ln() - lg[y];
+    for p in probs.iter_mut() {
+        *p /= z;
+    }
+    probs[y] -= 1.0;
+    (loss, probs)
+}
+
+/// `acc += scale * g_i` for the linear model's per-example gradient
+/// `g_i = (dlogits ⊗ x_i, dlogits)` — no `[B, P]` materialization.
+fn accumulate_scaled_grad(acc: &mut [f32], ncls: usize, d: usize, scale: f32, dlog: &[f32], xi: &[f32]) {
+    for (cls, &dl) in dlog.iter().enumerate() {
+        let g = scale * dl;
+        let row = &mut acc[cls * d..(cls + 1) * d];
+        for (a, &xv) in row.iter_mut().zip(xi) {
+            *a += g * xv;
+        }
+        acc[ncls * d + cls] += g;
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn prepare(&self, _dir: &Path, _meta: &ModelMeta, exe: &ExecutableMeta) -> Result<Prepared> {
+        let spec = match exe.kind.as_str() {
+            "accum" => RefExec::Accum {
+                variant: exe
+                    .variant
+                    .clone()
+                    .ok_or_else(|| anyhow!("accum artifact {} missing variant", exe.path))?,
+                batch: exe
+                    .batch
+                    .ok_or_else(|| anyhow!("accum artifact {} missing batch", exe.path))?,
+            },
+            "apply" => RefExec::Apply,
+            "eval" => RefExec::Eval {
+                batch: exe
+                    .batch
+                    .ok_or_else(|| anyhow!("eval artifact {} missing batch", exe.path))?,
+            },
+            other => return Err(anyhow!("unknown executable kind {other:?} for {}", exe.path)),
+        };
+        let (_, compile_seconds) =
+            self.cache.borrow_mut().get_or_compile(&exe.path, || Ok(spec))?;
+        Ok(Prepared { key: exe.path.clone(), compile_seconds })
+    }
+
+    fn is_compiled(&self, key: &str) -> bool {
+        self.cache.borrow().is_cached(key)
+    }
+
+    fn compile_records(&self) -> Vec<CompileRecord> {
+        self.cache.borrow().records().to_vec()
+    }
+
+    /// Synthesized deterministic init: small Gaussian weights, zero
+    /// biases (no artifact file to read).
+    fn init_params(&self, _dir: &Path, meta: &ModelMeta) -> Result<Tensor> {
+        let d = image_dim(meta);
+        let ncls = meta.num_classes;
+        let mut rng = ChaChaRng::from_seed_stream(self.init_seed, 0, b"refinit\0");
+        let mut v = Vec::with_capacity(meta.n_params);
+        for _ in 0..ncls * d {
+            v.push((0.05 * rng.next_normal()) as f32);
+        }
+        v.resize(meta.n_params, 0.0);
+        Ok(Tensor::from_vec(v))
+    }
+
+    fn run_accum(
+        &self,
+        prep: &Prepared,
+        meta: &ModelMeta,
+        params: &Tensor,
+        acc: &Tensor,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<AccumOut> {
+        let spec = self.spec(prep)?;
+        let (variant, batch) = match spec.as_ref() {
+            RefExec::Accum { variant, batch } => (variant.as_str(), *batch),
+            _ => return Err(anyhow!("{} is not an accum executable", prep.key)),
+        };
+        let b = y.len();
+        if b != batch {
+            return Err(anyhow!("accum batch mismatch: executable {batch}, got {b}"));
+        }
+        if mask.len() != b {
+            return Err(anyhow!("mask length {} != batch {b}", mask.len()));
+        }
+        Self::check_model_vectors(meta, params, Some(acc))?;
+        Self::check_batch(meta, x, y)?;
+
+        let d = image_dim(meta);
+        let ncls = meta.num_classes;
+        let p = params.as_slice();
+        let mut acc_out = acc.to_vec();
+        let mut loss_sum = 0.0f32;
+        let mut sq_norms = Vec::with_capacity(b);
+        for i in 0..b {
+            let xi = &x[i * d..(i + 1) * d];
+            let m = mask[i];
+            let lg = logits(meta, p, xi);
+            let (loss, dlog) = loss_and_dlogits(&lg, y[i] as usize);
+            loss_sum += m * loss;
+            if variant == "nonprivate" {
+                // Batched-gradient baseline: no clipping, norms reported
+                // as zeros (matching `_accum_nonprivate` in model.py).
+                sq_norms.push(0.0);
+                if m != 0.0 {
+                    accumulate_scaled_grad(&mut acc_out, ncls, d, m, &dlog, xi);
+                }
+            } else {
+                let xsq: f32 = xi.iter().map(|v| v * v).sum();
+                let dlsq: f32 = dlog.iter().map(|v| v * v).sum();
+                let sq = dlsq * (xsq + 1.0);
+                sq_norms.push(sq);
+                let norm = sq.max(0.0).sqrt().max(1e-12);
+                let cfac = ((meta.clip_norm as f32) / norm).min(1.0) * m;
+                if cfac != 0.0 {
+                    accumulate_scaled_grad(&mut acc_out, ncls, d, cfac, &dlog, xi);
+                }
+            }
+        }
+        Ok(AccumOut { acc: Tensor::from_vec(acc_out), loss_sum, sq_norms })
+    }
+
+    fn run_apply(
+        &self,
+        prep: &Prepared,
+        meta: &ModelMeta,
+        params: &Tensor,
+        acc: &Tensor,
+        seed: u64,
+        denom: f32,
+        lr: f32,
+        noise_mult: f32,
+    ) -> Result<Tensor> {
+        let spec = self.spec(prep)?;
+        if !matches!(spec.as_ref(), RefExec::Apply) {
+            return Err(anyhow!("{} is not an apply executable", prep.key));
+        }
+        Self::check_model_vectors(meta, params, Some(acc))?;
+        if !denom.is_finite() || denom <= 0.0 {
+            return Err(anyhow!("apply denom must be positive, got {denom}"));
+        }
+        let mut out = params.to_vec();
+        if noise_mult != 0.0 {
+            let mut rng = ChaChaRng::from_seed_stream(seed, 0, b"applynse");
+            for (pj, &aj) in out.iter_mut().zip(acc.as_slice()) {
+                let z = rng.next_normal() as f32;
+                *pj -= lr * (aj + noise_mult * z) / denom;
+            }
+        } else {
+            for (pj, &aj) in out.iter_mut().zip(acc.as_slice()) {
+                *pj -= lr * aj / denom;
+            }
+        }
+        Ok(Tensor::from_vec(out))
+    }
+
+    fn run_eval(
+        &self,
+        prep: &Prepared,
+        meta: &ModelMeta,
+        params: &Tensor,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f32, f32)> {
+        let spec = self.spec(prep)?;
+        let batch = match spec.as_ref() {
+            RefExec::Eval { batch } => *batch,
+            _ => return Err(anyhow!("{} is not an eval executable", prep.key)),
+        };
+        if y.len() != batch {
+            return Err(anyhow!("eval batch must be exactly {batch}, got {}", y.len()));
+        }
+        Self::check_model_vectors(meta, params, None)?;
+        Self::check_batch(meta, x, y)?;
+        let d = image_dim(meta);
+        let p = params.as_slice();
+        let mut loss_sum = 0.0f32;
+        let mut ncorrect = 0.0f32;
+        for (i, &yi) in y.iter().enumerate() {
+            let xi = &x[i * d..(i + 1) * d];
+            let lg = logits(meta, p, xi);
+            loss_sum += logsumexp(&lg) - lg[yi as usize];
+            let mut best = 0usize;
+            for (j, &v) in lg.iter().enumerate() {
+                if v > lg[best] {
+                    best = j;
+                }
+            }
+            if best == yi as usize {
+                ncorrect += 1.0;
+            }
+        }
+        Ok((loss_sum, ncorrect))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (ReferenceBackend, ModelMeta) {
+        let backend = ReferenceBackend::new(0);
+        let manifest = ReferenceBackend::manifest(0);
+        let meta = manifest.models[REFERENCE_MODEL].clone();
+        (backend, meta)
+    }
+
+    fn prepare_accum(b: &ReferenceBackend, meta: &ModelMeta, variant: &str, batch: usize) -> Prepared {
+        let exe = meta.find_accum(variant, batch, "f32").expect("lowered").clone();
+        b.prepare(Path::new("."), meta, &exe).unwrap()
+    }
+
+    fn batch_of(meta: &ModelMeta, n: usize) -> (Vec<f32>, Vec<i32>) {
+        let d = image_dim(meta);
+        let mut rng = ChaChaRng::from_seed_stream(7, 1, b"testdata");
+        let x: Vec<f32> = (0..n * d).map(|_| rng.next_normal() as f32).collect();
+        let y: Vec<i32> = (0..n).map(|i| (i % meta.num_classes) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn manifest_is_complete() {
+        let m = ReferenceBackend::manifest(0);
+        let meta = m.model(REFERENCE_MODEL).unwrap();
+        assert!(meta.find_apply().is_some());
+        assert_eq!(meta.find_eval().and_then(|e| e.batch), Some(32));
+        assert_eq!(meta.accum_batches("masked", "f32"), vec![1, 2, 4, 8, 16, 32, 64]);
+        assert_eq!(meta.n_params, 10 * 16 * 16 * 3 + 10);
+        assert!(meta.variants().contains(&"nonprivate".to_string()));
+    }
+
+    #[test]
+    fn init_params_deterministic_and_nondegenerate() {
+        let (b, meta) = setup();
+        let p1 = b.init_params(Path::new("."), &meta).unwrap();
+        let p2 = b.init_params(Path::new("."), &meta).unwrap();
+        assert_eq!(p1, p2);
+        assert_eq!(p1.len(), meta.n_params);
+        let nonzero = p1.as_slice().iter().filter(|v| **v != 0.0).count();
+        assert!(nonzero > meta.n_params / 2);
+        let other = ReferenceBackend::new(1).init_params(Path::new("."), &meta).unwrap();
+        assert_ne!(p1, other);
+    }
+
+    #[test]
+    fn masked_examples_contribute_nothing() {
+        let (b, meta) = setup();
+        let params = b.init_params(Path::new("."), &meta).unwrap();
+        let acc = Tensor::zeros(meta.n_params);
+        let d = image_dim(&meta);
+        let (x, y) = batch_of(&meta, 4);
+        // Batch of 4 with the last two slots masked out (Alg. 2 padding)
+        // must equal the same two live examples run at batch 2.
+        let prep4 = prepare_accum(&b, &meta, "masked", 4);
+        let padded = b
+            .run_accum(&prep4, &meta, &params, &acc, &x, &y, &[1.0, 1.0, 0.0, 0.0])
+            .unwrap();
+        let prep2 = prepare_accum(&b, &meta, "masked", 2);
+        let live = b
+            .run_accum(&prep2, &meta, &params, &acc, &x[..2 * d], &y[..2], &[1.0, 1.0])
+            .unwrap();
+        assert_eq!(padded.acc, live.acc);
+        assert_eq!(padded.loss_sum, live.loss_sum);
+        // All-masked batch: accumulator unchanged, loss zero.
+        let none = b
+            .run_accum(&prep4, &meta, &params, &acc, &x, &y, &[0.0; 4])
+            .unwrap();
+        assert_eq!(none.acc, acc);
+        assert_eq!(none.loss_sum, 0.0);
+        // Norms are still reported for every slot (B of them).
+        assert_eq!(none.sq_norms.len(), 4);
+    }
+
+    #[test]
+    fn clipped_accumulator_norm_bounded_by_batch_times_clip() {
+        let (b, meta) = setup();
+        let prep = prepare_accum(&b, &meta, "masked", 8);
+        let params = b.init_params(Path::new("."), &meta).unwrap();
+        let acc = Tensor::zeros(meta.n_params);
+        let (x, y) = batch_of(&meta, 8);
+        let out = b
+            .run_accum(&prep, &meta, &params, &acc, &x, &y, &[1.0; 8])
+            .unwrap();
+        let norm: f32 = out
+            .acc
+            .as_slice()
+            .iter()
+            .map(|v| v * v)
+            .sum::<f32>()
+            .sqrt();
+        // Triangle inequality: ||sum of clipped grads|| <= B * C.
+        assert!(norm <= 8.0 * meta.clip_norm as f32 + 1e-4, "norm {norm}");
+        assert!(out.loss_sum > 0.0);
+        assert!(out.sq_norms.iter().all(|s| *s >= 0.0 && s.is_finite()));
+    }
+
+    #[test]
+    fn nonprivate_reports_zero_norms_and_skips_clipping() {
+        let (b, meta) = setup();
+        let prep = prepare_accum(&b, &meta, "nonprivate", 2);
+        let params = b.init_params(Path::new("."), &meta).unwrap();
+        let acc = Tensor::zeros(meta.n_params);
+        let (x, y) = batch_of(&meta, 2);
+        let out = b
+            .run_accum(&prep, &meta, &params, &acc, &x, &y, &[1.0, 1.0])
+            .unwrap();
+        assert_eq!(out.sq_norms, vec![0.0, 0.0]);
+        let norm: f32 = out.acc.as_slice().iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!(norm > 0.0);
+    }
+
+    #[test]
+    fn ghost_variant_matches_per_example_path() {
+        // Single linear layer: the ghost-norm trick is exact, so ghost
+        // and masked produce identical accumulators.
+        let (b, meta) = setup();
+        let params = b.init_params(Path::new("."), &meta).unwrap();
+        let acc = Tensor::zeros(meta.n_params);
+        let (x, y) = batch_of(&meta, 4);
+        let masked = prepare_accum(&b, &meta, "masked", 4);
+        let ghost = prepare_accum(&b, &meta, "ghost", 4);
+        let a = b.run_accum(&masked, &meta, &params, &acc, &x, &y, &[1.0; 4]).unwrap();
+        let g = b.run_accum(&ghost, &meta, &params, &acc, &x, &y, &[1.0; 4]).unwrap();
+        assert_eq!(a.acc, g.acc);
+        assert_eq!(a.sq_norms, g.sq_norms);
+    }
+
+    #[test]
+    fn apply_without_noise_is_plain_sgd_and_with_noise_is_seeded() {
+        let (b, meta) = setup();
+        let apply_meta = meta.find_apply().unwrap().clone();
+        let prep = b.prepare(Path::new("."), &meta, &apply_meta).unwrap();
+        let params = b.init_params(Path::new("."), &meta).unwrap();
+        let mut acc = Tensor::zeros(meta.n_params);
+        acc.as_mut_slice()[0] = 2.0;
+        let out = b
+            .run_apply(&prep, &meta, &params, &acc, 42, 4.0, 0.1, 0.0)
+            .unwrap();
+        let want = params.as_slice()[0] - 0.1 * 2.0 / 4.0;
+        assert!((out.as_slice()[0] - want).abs() < 1e-7);
+        assert_eq!(out.as_slice()[1], params.as_slice()[1]);
+        // Noise: deterministic per seed, different across seeds.
+        let n1 = b.run_apply(&prep, &meta, &params, &acc, 7, 4.0, 0.1, 1.0).unwrap();
+        let n2 = b.run_apply(&prep, &meta, &params, &acc, 7, 4.0, 0.1, 1.0).unwrap();
+        let n3 = b.run_apply(&prep, &meta, &params, &acc, 8, 4.0, 0.1, 1.0).unwrap();
+        assert_eq!(n1, n2);
+        assert_ne!(n1, n3);
+        assert_ne!(n1, out);
+    }
+
+    #[test]
+    fn eval_counts_and_losses_are_sane() {
+        let (b, meta) = setup();
+        let eval_meta = meta.find_eval().unwrap().clone();
+        let prep = b.prepare(Path::new("."), &meta, &eval_meta).unwrap();
+        let params = b.init_params(Path::new("."), &meta).unwrap();
+        let (x, y) = batch_of(&meta, 32);
+        let (loss, ncorrect) = b.run_eval(&prep, &meta, &params, &x, &y).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((0.0..=32.0).contains(&ncorrect));
+        // Wrong batch size is a clean error.
+        let (x2, y2) = batch_of(&meta, 8);
+        assert!(b.run_eval(&prep, &meta, &params, &x2, &y2).is_err());
+    }
+
+    #[test]
+    fn prepare_caches_and_reports_compiles_once() {
+        let (b, meta) = setup();
+        let exe = meta.find_accum("masked", 8, "f32").unwrap().clone();
+        let p1 = b.prepare(Path::new("."), &meta, &exe).unwrap();
+        assert!(p1.compile_seconds.is_some());
+        assert!(b.is_compiled(&p1.key));
+        let p2 = b.prepare(Path::new("."), &meta, &exe).unwrap();
+        assert!(p2.compile_seconds.is_none(), "second prepare must be a cache hit");
+        assert_eq!(b.compile_records().len(), 1);
+    }
+
+    #[test]
+    fn out_of_range_label_is_an_error() {
+        let (b, meta) = setup();
+        let prep = prepare_accum(&b, &meta, "masked", 1);
+        let params = b.init_params(Path::new("."), &meta).unwrap();
+        let acc = Tensor::zeros(meta.n_params);
+        let d = image_dim(&meta);
+        let x = vec![0.0f32; d];
+        assert!(b.run_accum(&prep, &meta, &params, &acc, &x, &[99], &[1.0]).is_err());
+        assert!(b.run_accum(&prep, &meta, &params, &acc, &x, &[-1], &[1.0]).is_err());
+    }
+}

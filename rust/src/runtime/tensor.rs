@@ -1,0 +1,122 @@
+//! Crate-owned tensor value type.
+//!
+//! Everything crossing the [`super::backend::Backend`] boundary uses
+//! this type instead of a backend-specific literal (the seed hard-wired
+//! `xla::Literal` here, which made the crate unbuildable without the
+//! PJRT bindings). The flat-parameter ABI only ever moves rank-1 f32
+//! vectors plus raw `&[f32]`/`&[i32]` batch slices, so this stays
+//! deliberately small: a flat f32 buffer. Shape metadata can come back
+//! when a backend actually consumes it.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// A dense rank-1 f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    data: Vec<f32>,
+}
+
+/// Read a raw little-endian f32 file (the AOT `*_init.bin` /
+/// checkpoint format) of exactly `n_params` values.
+pub fn read_flat_f32(path: &Path, n_params: usize) -> Result<Tensor> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() != n_params * 4 {
+        return Err(anyhow!(
+            "{}: {} bytes, expected {} ({} f32 params)",
+            path.display(),
+            bytes.len(),
+            n_params * 4,
+            n_params
+        ));
+    }
+    let floats: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Tensor::from_vec(floats))
+}
+
+impl Tensor {
+    /// Rank-1 tensor from a slice.
+    pub fn vec1(data: &[f32]) -> Self {
+        Self { data: data.to_vec() }
+    }
+
+    /// Rank-1 tensor taking ownership of the buffer.
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Self { data }
+    }
+
+    /// Rank-1 zero tensor of length `n` (e.g. a fresh grad accumulator).
+    pub fn zeros(n: usize) -> Self {
+        Self::from_vec(vec![0.0; n])
+    }
+
+    /// Total number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Copy the elements out (row-major).
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.data.clone()
+    }
+
+    /// Consume into the underlying buffer without copying.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = Tensor::vec1(&[1.0, 2.0, 3.0]);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.as_slice(), &[1.0, 2.0, 3.0]);
+        assert_eq!(t.to_vec(), vec![1.0, 2.0, 3.0]);
+        assert!(!t.is_empty());
+    }
+
+    #[test]
+    fn read_flat_f32_roundtrip_and_size_check() {
+        let path = std::env::temp_dir().join("dpshort_tensor_flat_test.bin");
+        let vals = [1.5f32, -2.0, 0.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, &bytes).unwrap();
+        assert_eq!(read_flat_f32(&path, 3).unwrap().to_vec(), vals.to_vec());
+        assert!(read_flat_f32(&path, 4).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn zeros_and_mutation() {
+        let mut t = Tensor::zeros(4);
+        assert_eq!(t.as_slice(), &[0.0; 4]);
+        t.as_mut_slice()[2] = 5.0;
+        assert_eq!(t.into_vec(), vec![0.0, 0.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn from_vec_roundtrip() {
+        let v = vec![0.5f32; 7];
+        let t = Tensor::from_vec(v.clone());
+        assert_eq!(t.into_vec(), v);
+    }
+}

@@ -1,12 +1,14 @@
-//! In-tree substrates that would normally come from crates.io — the
-//! build environment is fully offline (only the `xla` bindings and
-//! `anyhow` are vendored), so the reproduction builds its own:
+//! In-tree substrates kept from the fully-offline seed. `serde` /
+//! `serde_json` now serialize the training report and `proptest` backs
+//! the dev-only invariant tests, but these stay deliberately
+//! dependency-free (the manifest parser predates serde and remains the
+//! reference for its format):
 //!
 //! * [`rng`]   — seeded ChaCha20 PRNG + uniform/normal/shuffle (no `rand`)
-//! * [`json`]  — JSON parser/writer for the artifact manifest (no `serde`)
+//! * [`json`]  — JSON parser/writer for the artifact manifest
 //! * [`cli`]   — flag parsing for the `dpshort` launcher (no `clap`)
 //! * [`bench`] — timing harness with warmup + robust stats (no `criterion`)
-//! * [`prop`]  — randomized property-test runner (no `proptest`)
+//! * [`prop`]  — in-tree randomized property-test runner
 
 pub mod bench;
 pub mod cli;

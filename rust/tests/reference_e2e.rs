@@ -1,0 +1,269 @@
+//! End-to-end integration over the pure-Rust reference backend: the
+//! whole sampler → batcher → trainer → accountant → report pipeline,
+//! fully offline — the regression gate the AOT-artifact tests (see
+//! integration.rs) cannot provide on a fresh checkout.
+
+use dp_shortcuts::coordinator::batcher::BatchingMode;
+use dp_shortcuts::coordinator::config::TrainConfig;
+use dp_shortcuts::coordinator::trainer::Trainer;
+use dp_shortcuts::privacy::RdpAccountant;
+use dp_shortcuts::runtime::{Runtime, REFERENCE_MODEL};
+
+fn base_config(variant: &str, mode: BatchingMode) -> TrainConfig {
+    TrainConfig {
+        model: REFERENCE_MODEL.into(),
+        variant: variant.into(),
+        mode,
+        dataset_size: 96,
+        sampling_rate: 0.25,
+        physical_batch: 8,
+        steps: 3,
+        lr: 0.05,
+        noise_multiplier: Some(1.1),
+        eval_examples: 32,
+        ..Default::default()
+    }
+}
+
+/// The satellite invariants on one report: epsilon matches a fresh
+/// accountant, and Algorithm-2 padding only ever adds computation.
+fn assert_report_invariants(rep: &dp_shortcuts::TrainReport, cfg: &TrainConfig) {
+    assert_eq!(rep.steps.len(), cfg.steps as usize);
+    let fresh = RdpAccountant::default().epsilon(
+        cfg.sampling_rate,
+        rep.noise_multiplier,
+        cfg.steps,
+        cfg.delta,
+    );
+    assert!(
+        (rep.epsilon_spent - fresh).abs() < 1e-9,
+        "epsilon_spent {} != fresh accountant {}",
+        rep.epsilon_spent,
+        fresh
+    );
+    for s in &rep.steps {
+        assert!(s.loss.is_finite());
+        assert!(
+            s.computed_examples >= s.logical_batch,
+            "step {}: computed {} < logical {}",
+            s.step,
+            s.computed_examples,
+            s.logical_batch
+        );
+    }
+    assert_eq!(
+        rep.final_params.len(),
+        10 * 16 * 16 * 3 + 10,
+        "final params must be the full flat vector"
+    );
+    assert!(rep.final_params.iter().all(|p| p.is_finite()));
+}
+
+#[test]
+fn masked_training_runs_end_to_end() {
+    let rt = Runtime::reference();
+    let cfg = base_config("masked", BatchingMode::Masked);
+    let rep = Trainer::new(&rt, cfg.clone()).unwrap().run().unwrap();
+    assert_report_invariants(&rep, &cfg);
+    assert!(rep.epsilon_spent > 0.0);
+    for s in &rep.steps {
+        assert!(s.loss > 0.0);
+        // Algorithm 2: computed examples = ceil(|L|/p)*p, full shapes only.
+        assert_eq!(s.computed_examples % cfg.physical_batch, 0);
+    }
+    assert!(rep.throughput > 0.0);
+    assert!(rep.computed_throughput >= rep.throughput);
+    let (l, a) = (rep.eval_loss.unwrap(), rep.eval_accuracy.unwrap());
+    assert!(l.is_finite() && l > 0.0);
+    assert!((0.0..=1.0).contains(&a));
+}
+
+#[test]
+fn variable_training_runs_end_to_end() {
+    let rt = Runtime::reference();
+    let cfg = base_config("naive", BatchingMode::Variable);
+    let rep = Trainer::new(&rt, cfg.clone()).unwrap().run().unwrap();
+    assert_report_invariants(&rep, &cfg);
+    assert!(rep.epsilon_spent > 0.0);
+    assert!(rep.steps.iter().all(|s| s.loss > 0.0));
+}
+
+#[test]
+fn masked_padding_never_changes_the_update() {
+    // Same seed => same logical batches, same per-step noise seeds. The
+    // masked run pads every logical batch up to full physical shapes
+    // (mask-0 slots); the variable run computes exactly the sampled
+    // examples. Padding must be update-neutral: identical parameters.
+    let masked = {
+        let rt = Runtime::reference();
+        let cfg = base_config("masked", BatchingMode::Masked);
+        Trainer::new(&rt, cfg).unwrap().run().unwrap()
+    };
+    let unpadded = {
+        let rt = Runtime::reference();
+        let cfg = base_config("naive", BatchingMode::Variable);
+        Trainer::new(&rt, cfg).unwrap().run().unwrap()
+    };
+    for (s_m, s_u) in masked.steps.iter().zip(&unpadded.steps) {
+        assert_eq!(s_m.logical_batch, s_u.logical_batch, "same sampler stream");
+        // Losses agree up to f32 summation grouping (the per-batch
+        // loss_sum partials are grouped differently across modes).
+        assert!(
+            (s_m.loss - s_u.loss).abs() < 1e-4,
+            "step {}: masked loss {} vs unpadded {}",
+            s_m.step,
+            s_m.loss,
+            s_u.loss
+        );
+        assert!(s_m.computed_examples >= s_u.computed_examples);
+    }
+    assert_eq!(
+        masked.final_params, unpadded.final_params,
+        "Algorithm-2 padding changed the parameter update"
+    );
+}
+
+#[test]
+fn empty_poisson_batches_still_take_noise_only_steps() {
+    // q = 0 makes every logical batch empty — the Algorithm-1 corner
+    // where the step still happens with noise only.
+    for (variant, mode) in [("masked", BatchingMode::Masked), ("naive", BatchingMode::Variable)] {
+        let rt = Runtime::reference();
+        let mut cfg = base_config(variant, mode);
+        cfg.sampling_rate = 0.0;
+        cfg.steps = 2;
+        cfg.eval_examples = 0;
+        let init = rt.model(REFERENCE_MODEL).unwrap().init_params().unwrap();
+        let rep = Trainer::new(&rt, cfg.clone()).unwrap().run().unwrap();
+        assert_report_invariants(&rep, &cfg);
+        for s in &rep.steps {
+            assert_eq!(s.logical_batch, 0);
+            assert!(s.physical_batches >= 1, "empty batch must still step");
+        }
+        assert_ne!(
+            rep.final_params,
+            init.to_vec(),
+            "{variant}: noise-only steps must still perturb the parameters"
+        );
+    }
+}
+
+#[test]
+fn masked_mode_compiles_exactly_one_accum_shape() {
+    let rt = Runtime::reference();
+    let cfg = base_config("masked", BatchingMode::Masked);
+    let rep = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    let accum_compiles = rep.compiles.iter().filter(|(p, _)| p.contains("_accum_")).count();
+    assert_eq!(
+        accum_compiles, 1,
+        "masked DP-SGD must never recompile: {:?}",
+        rep.compiles
+    );
+    // A second run on the same runtime hits the cache for everything.
+    let cfg = base_config("masked", BatchingMode::Masked);
+    let rep2 = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    assert!(rep2.compiles.is_empty(), "unexpected recompiles: {:?}", rep2.compiles);
+    assert_eq!(rep2.sections.compile, 0.0);
+}
+
+#[test]
+fn variable_mode_compiles_per_batch_size() {
+    let rt = Runtime::reference();
+    let mut cfg = base_config("naive", BatchingMode::Variable);
+    cfg.dataset_size = 256;
+    cfg.sampling_rate = 0.3;
+    let rep = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    let accum_compiles = rep.compiles.iter().filter(|(p, _)| p.contains("_accum_")).count();
+    // Variable logical batches force several distinct chunk sizes.
+    assert!(
+        accum_compiles >= 2,
+        "naive mode should hit multiple batch-size compilations: {:?}",
+        rep.compiles
+    );
+}
+
+#[test]
+fn deterministic_given_seed_and_seed_sensitive() {
+    let run = |seed: u64| {
+        let rt = Runtime::reference();
+        let mut cfg = base_config("masked", BatchingMode::Masked);
+        cfg.seed = seed;
+        Trainer::new(&rt, cfg).unwrap().run().unwrap()
+    };
+    let r1 = run(0);
+    let r2 = run(0);
+    assert_eq!(r1.final_params, r2.final_params);
+    for (a, b) in r1.steps.iter().zip(&r2.steps) {
+        assert_eq!(a.logical_batch, b.logical_batch);
+        assert_eq!(a.loss, b.loss);
+    }
+    let r3 = run(1);
+    assert_ne!(r1.final_params, r3.final_params);
+}
+
+#[test]
+fn nonprivate_baseline_runs_without_noise() {
+    let rt = Runtime::reference();
+    let mut cfg = base_config("nonprivate", BatchingMode::Masked);
+    cfg.noise_multiplier = None;
+    let rep = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    assert_eq!(rep.noise_multiplier, 0.0);
+    assert_eq!(rep.epsilon_spent, 0.0);
+    assert!(rep.steps.iter().all(|s| s.loss.is_finite() && s.loss > 0.0));
+}
+
+#[test]
+fn training_reduces_loss_on_the_synthetic_task() {
+    // The reference model must actually learn: non-private SGD over the
+    // class-conditional synthetic data drives the loss down.
+    let rt = Runtime::reference();
+    let mut cfg = base_config("nonprivate", BatchingMode::Masked);
+    cfg.noise_multiplier = None;
+    cfg.steps = 12;
+    cfg.lr = 0.5;
+    cfg.eval_examples = 0;
+    let rep = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    let first = rep.steps.first().unwrap().loss;
+    let last = rep.steps.last().unwrap().loss;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+}
+
+#[test]
+fn report_serializes_to_json() {
+    let rt = Runtime::reference();
+    let mut cfg = base_config("masked", BatchingMode::Masked);
+    cfg.steps = 1;
+    cfg.eval_examples = 0;
+    let rep = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    let json = rep.to_json().unwrap();
+    assert!(json.contains("\"epsilon_spent\""));
+    assert!(json.contains("\"Masked\""));
+    assert!(json.contains("\"final_params\""));
+    let parsed: serde_json::Value = serde_json::from_str(&json).unwrap();
+    assert_eq!(parsed["steps"].as_array().unwrap().len(), 1);
+}
+
+#[test]
+fn checkpoint_roundtrip_through_reference_model() {
+    let rt = Runtime::reference();
+    let m = rt.model(REFERENCE_MODEL).unwrap();
+    let p = m.init_params().unwrap();
+    let path = std::env::temp_dir().join("dpshort_ref_ckpt_test.bin");
+    m.save_params(&p, &path).unwrap();
+    let p2 = m.load_params(&path).unwrap();
+    assert_eq!(p.to_vec(), p2.to_vec());
+    std::fs::write(&path, [0u8; 12]).unwrap();
+    assert!(m.load_params(&path).is_err());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn missing_batch_size_is_a_clean_error() {
+    let rt = Runtime::reference();
+    let m = rt.model(REFERENCE_MODEL).unwrap();
+    let msg = match m.prepare_accum("masked", 12_345, "f32") {
+        Ok(_) => panic!("expected error for unlowered batch size"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(msg.contains("no accum artifact"), "{msg}");
+}

@@ -1,0 +1,132 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real bindings (PJRT C API over the AOT-lowered HLO artifacts)
+//! are unavailable in the offline build environment. This stub mirrors
+//! exactly the API surface `dp-shortcuts`' `pjrt` backend uses, so
+//! `cargo check --features pjrt` type-checks the whole PJRT path; every
+//! runtime entry point returns [`Error::Unavailable`] instead of
+//! executing. Swap the `[dependencies.xla]` path in the root manifest
+//! for real bindings to run artifacts for real.
+
+use std::path::Path;
+
+/// Error type matching the bindings' `xla::Error` role.
+#[derive(Debug)]
+pub enum Error {
+    /// The stub was called at runtime: no PJRT plugin is linked in.
+    Unavailable(&'static str),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Unavailable(what) => {
+                write!(f, "xla stub: {what} requires the real PJRT bindings")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>(what: &'static str) -> Result<T, Error> {
+    Err(Error::Unavailable(what))
+}
+
+/// Element types the bindings marshal across the PJRT boundary.
+pub trait NativeType: Copy {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Host-side literal (stub: carries no data).
+#[derive(Debug, Default, Clone)]
+pub struct Literal;
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Self {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Ok(Literal)
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T, Error> {
+        unavailable("Literal::get_first_element")
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal), Error> {
+        unavailable("Literal::to_tuple2")
+    }
+
+    pub fn to_tuple3(self) -> Result<(Literal, Literal, Literal), Error> {
+        unavailable("Literal::to_tuple3")
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &Path) -> Result<Self, Error> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Compilable computation (stub).
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Device buffer returned by an execution (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Loaded executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute(&self, _args: &[&Literal]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client (stub). `cpu()` fails, so a `pjrt`-feature build reports
+/// a clear error the moment a runtime is constructed.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, Error> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable("PjRtClient::compile")
+    }
+}
