@@ -2,56 +2,55 @@
 //! regenerates the data behind paper Figures 1, 2, 4 and 6.
 //!
 //! `cargo bench --bench bench_throughput`
+//!
+//! Thin wrapper over the shared sweep harness (`dp_shortcuts::benchreport`,
+//! the same engine as `dpshort bench`): runs the full accum/apply sweep,
+//! prints per-config medians with bootstrap CIs and the speed relative
+//! to the non-private baseline, and writes `BENCH_throughput.json` so
+//! the run is recorded machine-readably.
 
-use dp_shortcuts::coordinator::config::TrainConfig;
-use dp_shortcuts::coordinator::trainer::Trainer;
-use dp_shortcuts::metrics::summary_with_ci;
+use dp_shortcuts::benchreport::{run_sweep, SweepOptions, DEFAULT_OUT};
 use dp_shortcuts::runtime::Runtime;
-use dp_shortcuts::util::bench::stats_from;
+use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
     // Artifacts + PJRT when available, pure-Rust reference otherwise.
     let rt = Runtime::auto("artifacts")?;
     println!("== bench_throughput (Figs 1/2/4/6, backend {}) ==", rt.backend_name());
-    let names: Vec<String> = rt.manifest().models.keys().cloned().collect();
-    for model in &names {
-        let meta = rt.manifest().model(model)?.clone();
-        // Baselines first: non-private throughput per batch size.
-        let mut baseline: std::collections::BTreeMap<usize, f64> = Default::default();
-        for b in meta.accum_batches("nonprivate", "f32") {
-            let cfg = TrainConfig {
-                model: model.clone(),
-                variant: "nonprivate".into(),
-                physical_batch: b,
-                ..Default::default()
-            };
-            let t = Trainer::new(&rt, cfg)?;
-            let samples = t.bench_accum("nonprivate", b, 8)?;
-            baseline.insert(b, summary_with_ci(&samples, 0).median);
-        }
-        for variant in meta.variants() {
-            if variant == "naive" {
-                continue;
-            }
-            for b in meta.accum_batches(&variant, "f32") {
-                let cfg = TrainConfig {
-                    model: model.clone(),
-                    variant: variant.clone(),
-                    physical_batch: b,
-                    ..Default::default()
-                };
-                let t = Trainer::new(&rt, cfg)?;
-                let samples = t.bench_accum(&variant, b, 8)?;
-                let per_iter: Vec<f64> = samples.iter().map(|s| b as f64 / s).collect();
-                let stats = stats_from(&format!("{model}/{variant}/B{b}"), &per_iter);
-                let ci = summary_with_ci(&samples, 0);
-                let rel = baseline.get(&b).map(|base| ci.median / base).unwrap_or(f64::NAN);
+    let mut opts = SweepOptions::new(false);
+    opts.repeats = 8;
+    let report = run_sweep(&rt, &opts)?;
+    for e in &report.entries {
+        match e.kind.as_str() {
+            "accum" => {
+                let variant = e.variant.as_deref().unwrap_or("?");
+                let batch = e.batch.unwrap_or(0);
+                // Relative throughput vs the non-private baseline at the
+                // same batch (the Fig. 1/2 normalization).
+                let rel = report
+                    .accum_entry(&e.model, "nonprivate", batch)
+                    .map(|base| e.median / base.median)
+                    .unwrap_or(f64::NAN);
                 println!(
-                    "{stats}  -> {:>9.1} ex/s [{:>8.1},{:>8.1}] rel={rel:.2}",
-                    ci.median, ci.ci_low, ci.ci_high
+                    "{:<32} {:>10.1} ex/s [{:>9.1},{:>9.1}] n={:<3} rel={rel:.2}",
+                    format!("{}/{}/B{}", e.model, variant, batch),
+                    e.median,
+                    e.ci_low,
+                    e.ci_high,
+                    e.n
                 );
             }
+            _ => println!(
+                "{:<32} {:>10.1} calls/s [{:>9.1},{:>9.1}] n={}",
+                format!("{}/apply", e.model),
+                e.median,
+                e.ci_low,
+                e.ci_high,
+                e.n
+            ),
         }
     }
+    report.write(Path::new(DEFAULT_OUT))?;
+    println!("wrote {DEFAULT_OUT} ({} entries)", report.entries.len());
     Ok(())
 }

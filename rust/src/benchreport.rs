@@ -1,0 +1,444 @@
+//! Machine-readable throughput harness: the engine behind
+//! `dpshort bench` and `benches/bench_throughput.rs`.
+//!
+//! Runs the steady-state accum/apply sweep over the active backend's
+//! manifest (the paper's Figures 1/2/4/6 estimator: medians with seeded
+//! bootstrap 95% CIs) and emits `BENCH_throughput.json`, so every PR
+//! records the measured perf trajectory instead of printing text that
+//! evaporates. The schema (DESIGN.md §6):
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "backend": "reference",
+//!   "seed": 0,
+//!   "quick": true,
+//!   "sections": {"sampling": .., "data": .., "accum": .., "apply": .., "compile": ..},
+//!   "entries": [
+//!     {"kind": "accum", "model": "ref-linear", "variant": "masked",
+//!      "batch": 64, "repeats": 30, "unit": "examples_per_sec",
+//!      "median": 1.0e5, "ci_low": .., "ci_high": .., "n": 30,
+//!      "secs_total": ..},
+//!     {"kind": "apply", "model": "ref-linear", "variant": null,
+//!      "batch": null, "repeats": 30, "unit": "calls_per_sec", ...}
+//!   ]
+//! }
+//! ```
+//!
+//! [`BenchReport::validate`] is the schema gate CI runs against the
+//! emitted file (`dpshort bench --check`).
+
+use crate::coordinator::batcher::BatchingMode;
+use crate::coordinator::config::TrainConfig;
+use crate::coordinator::trainer::{SectionTimes, Trainer};
+use crate::metrics::summary_with_ci;
+use crate::runtime::Runtime;
+use anyhow::{anyhow, Context, Result};
+use serde::{Deserialize, Serialize};
+use std::path::Path;
+
+/// Version stamp of the `BENCH_throughput.json` schema.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Default output file name (repo-root convention; empty until a sweep
+/// has run on a machine).
+pub const DEFAULT_OUT: &str = "BENCH_throughput.json";
+
+/// Batch sizes the `--quick` sweep keeps per (model, variant) — the
+/// smoke-test subset; the full sweep runs the whole lowered ladder.
+const QUICK_BATCHES: [usize; 2] = [16, 64];
+
+/// One measured configuration.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+pub struct BenchEntry {
+    /// "accum" | "apply".
+    pub kind: String,
+    pub model: String,
+    /// Clipping variant (accum entries; `null` for apply).
+    pub variant: Option<String>,
+    /// Physical batch size (accum entries; `null` for apply).
+    pub batch: Option<usize>,
+    /// Requested timed repeats.
+    pub repeats: usize,
+    /// "examples_per_sec" (accum) | "calls_per_sec" (apply).
+    pub unit: String,
+    /// Median of the per-call samples.
+    pub median: f64,
+    /// Bootstrap 95% CI (seeded, 1000 resamples).
+    pub ci_low: f64,
+    pub ci_high: f64,
+    /// Timed samples behind the median.
+    pub n: usize,
+    /// Total timed seconds this entry consumed.
+    pub secs_total: f64,
+}
+
+/// The full document written to `BENCH_throughput.json`.
+#[derive(Debug, Serialize, Deserialize)]
+pub struct BenchReport {
+    pub schema_version: u32,
+    pub backend: String,
+    pub seed: u64,
+    pub quick: bool,
+    /// Per-section wall-clock of a short masked training run on the
+    /// first swept model (the Table-2 analogue for this checkout).
+    pub sections: Option<SectionTimes>,
+    pub entries: Vec<BenchEntry>,
+}
+
+impl BenchReport {
+    pub fn to_json(&self) -> Result<String> {
+        serde_json::to_string_pretty(self).context("serializing bench report")
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let report: Self = serde_json::from_str(text).context("parsing bench report")?;
+        Ok(report)
+    }
+
+    /// Write to `path` (pretty JSON + trailing newline).
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let mut text = self.to_json()?;
+        text.push('\n');
+        std::fs::write(path, text).with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load and schema-check an emitted file — the CI smoke gate.
+    pub fn check_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let report = Self::from_json(&text)?;
+        report.validate()?;
+        Ok(report)
+    }
+
+    /// Schema invariants beyond what deserialization enforces.
+    pub fn validate(&self) -> Result<()> {
+        if self.schema_version != SCHEMA_VERSION {
+            return Err(anyhow!(
+                "schema_version {} != supported {SCHEMA_VERSION}",
+                self.schema_version
+            ));
+        }
+        if self.backend.is_empty() {
+            return Err(anyhow!("backend must be non-empty"));
+        }
+        if self.entries.is_empty() {
+            return Err(anyhow!("bench report has no entries"));
+        }
+        for (i, e) in self.entries.iter().enumerate() {
+            let ctx = |msg: &str| anyhow!("entry {i} ({}/{:?}): {msg}", e.model, e.variant);
+            match e.kind.as_str() {
+                "accum" => {
+                    if e.variant.is_none() || e.batch.is_none() {
+                        return Err(ctx("accum entries need variant and batch"));
+                    }
+                    if e.unit != "examples_per_sec" {
+                        return Err(ctx("accum unit must be examples_per_sec"));
+                    }
+                }
+                "apply" => {
+                    if e.unit != "calls_per_sec" {
+                        return Err(ctx("apply unit must be calls_per_sec"));
+                    }
+                }
+                _ => return Err(ctx("kind must be accum|apply")),
+            }
+            if e.n == 0 || e.n > e.repeats {
+                return Err(ctx("sample count n must be in 1..=repeats"));
+            }
+            if !(e.median.is_finite() && e.median > 0.0) {
+                return Err(ctx("median must be finite and positive"));
+            }
+            if !(e.ci_low.is_finite() && e.ci_high.is_finite()) {
+                return Err(ctx("CI bounds must be finite"));
+            }
+            if e.ci_low > e.median || e.median > e.ci_high {
+                return Err(ctx("CI must bracket the median"));
+            }
+            if !(e.secs_total.is_finite() && e.secs_total >= 0.0) {
+                return Err(ctx("secs_total must be finite and non-negative"));
+            }
+        }
+        Ok(())
+    }
+
+    /// The accum entry for (model, variant, batch), if swept.
+    pub fn accum_entry(&self, model: &str, variant: &str, batch: usize) -> Option<&BenchEntry> {
+        self.entries.iter().find(|e| {
+            e.kind == "accum"
+                && e.model == model
+                && e.variant.as_deref() == Some(variant)
+                && e.batch == Some(batch)
+        })
+    }
+}
+
+/// What to sweep. `None` filters mean "everything the manifest lowers".
+#[derive(Debug, Clone)]
+pub struct SweepOptions {
+    pub model: Option<String>,
+    pub variant: Option<String>,
+    pub batch: Option<usize>,
+    /// Timed repeats per configuration.
+    pub repeats: usize,
+    /// Smoke mode: restrict batches to [`QUICK_BATCHES`].
+    pub quick: bool,
+    /// Seed for data, bootstrap, and the sections run.
+    pub seed: u64,
+    /// Also time a short training run for the per-section breakdown.
+    pub with_sections: bool,
+}
+
+impl SweepOptions {
+    /// Defaults: full ladder at 30 repeats, or the quick smoke subset
+    /// at 5.
+    pub fn new(quick: bool) -> Self {
+        Self {
+            model: None,
+            variant: None,
+            batch: None,
+            repeats: if quick { 5 } else { 30 },
+            quick,
+            seed: 0,
+            with_sections: true,
+        }
+    }
+}
+
+/// Run the accum/apply sweep and assemble the validated report.
+pub fn run_sweep(rt: &Runtime, opts: &SweepOptions) -> Result<BenchReport> {
+    let models: Vec<String> = rt
+        .manifest()
+        .models
+        .keys()
+        .filter(|m| opts.model.as_deref().is_none_or(|want| want == m.as_str()))
+        .cloned()
+        .collect();
+    if models.is_empty() {
+        return Err(anyhow!(
+            "no models match {:?} (manifest has {:?})",
+            opts.model,
+            rt.manifest().models.keys().collect::<Vec<_>>()
+        ));
+    }
+    let mut entries = Vec::new();
+    let mut sections = None;
+    for model in &models {
+        let meta = rt.manifest().model(model)?.clone();
+        for variant in meta.variants() {
+            if let Some(want) = &opts.variant {
+                if *want != variant {
+                    continue;
+                }
+            } else if variant == "naive" {
+                // "naive" shares the masked accum kernel and only
+                // differs in Variable-mode chunking; skip unless asked.
+                continue;
+            }
+            let mut batches = meta.accum_batches(&variant, "f32");
+            if let Some(want) = opts.batch {
+                batches.retain(|b| *b == want);
+            } else if opts.quick {
+                let full = batches.clone();
+                batches.retain(|b| QUICK_BATCHES.contains(b));
+                if batches.is_empty() {
+                    // Ladder without the canonical rungs: keep the largest.
+                    batches = full.last().copied().into_iter().collect();
+                }
+            }
+            for b in batches {
+                let cfg = TrainConfig {
+                    model: model.clone(),
+                    variant: variant.clone(),
+                    physical_batch: b,
+                    seed: opts.seed,
+                    ..Default::default()
+                };
+                let trainer = Trainer::new(rt, cfg)?;
+                let samples = trainer.bench_accum(&variant, b, opts.repeats)?;
+                entries.push(entry_from(
+                    "accum",
+                    model,
+                    Some(variant.clone()),
+                    Some(b),
+                    opts.repeats,
+                    opts.seed,
+                    &samples,
+                ));
+            }
+        }
+        let cfg = TrainConfig { model: model.clone(), seed: opts.seed, ..Default::default() };
+        let trainer = Trainer::new(rt, cfg)?;
+        let samples = trainer.bench_apply(opts.repeats)?;
+        entries.push(entry_from("apply", model, None, None, opts.repeats, opts.seed, &samples));
+
+        if opts.with_sections && sections.is_none() {
+            sections = Some(train_sections(rt, model, opts)?);
+        }
+    }
+    // An explicit filter that matched nothing is an error, not a report
+    // quietly missing the requested measurement (the apply entries keep
+    // `entries` non-empty, so validate() alone cannot catch this).
+    if let Some(want) = &opts.variant {
+        if !entries
+            .iter()
+            .any(|e| e.kind == "accum" && e.variant.as_deref() == Some(want.as_str()))
+        {
+            return Err(anyhow!("--variant {want} matches no lowered accum executable"));
+        }
+    }
+    if let Some(want) = opts.batch {
+        if !entries.iter().any(|e| e.kind == "accum" && e.batch == Some(want)) {
+            return Err(anyhow!("--batch {want} matches no lowered accum executable"));
+        }
+    }
+    let report = BenchReport {
+        schema_version: SCHEMA_VERSION,
+        backend: rt.backend_name().to_string(),
+        seed: opts.seed,
+        quick: opts.quick,
+        sections,
+        entries,
+    };
+    report.validate()?;
+    Ok(report)
+}
+
+fn entry_from(
+    kind: &str,
+    model: &str,
+    variant: Option<String>,
+    batch: Option<usize>,
+    repeats: usize,
+    seed: u64,
+    samples: &[f64],
+) -> BenchEntry {
+    let s = summary_with_ci(samples, seed);
+    // Samples are rates; invert (scaled by the per-call example count)
+    // to recover the timed seconds.
+    let per_call = batch.unwrap_or(1) as f64;
+    let secs_total: f64 = samples.iter().filter(|r| **r > 0.0).map(|r| per_call / r).sum();
+    BenchEntry {
+        kind: kind.to_string(),
+        model: model.to_string(),
+        unit: if kind == "accum" { "examples_per_sec" } else { "calls_per_sec" }.to_string(),
+        variant,
+        batch,
+        repeats,
+        median: s.median,
+        ci_low: s.ci_low,
+        ci_high: s.ci_high,
+        n: s.n,
+        secs_total,
+    }
+}
+
+/// Short masked training run for the per-section breakdown (Table 2).
+fn train_sections(rt: &Runtime, model: &str, opts: &SweepOptions) -> Result<SectionTimes> {
+    let meta = rt.manifest().model(model)?.clone();
+    let variants = meta.variants();
+    let variant = if variants.iter().any(|v| v == "masked") {
+        "masked".to_string()
+    } else {
+        variants
+            .first()
+            .cloned()
+            .ok_or_else(|| anyhow!("model {model} lowers no accum variants"))?
+    };
+    let batches = meta.accum_batches(&variant, "f32");
+    let batch = batches
+        .iter()
+        .copied()
+        .filter(|b| *b <= 16)
+        .max()
+        .or_else(|| batches.first().copied())
+        .ok_or_else(|| anyhow!("model {model} lowers no {variant} batches"))?;
+    let cfg = TrainConfig {
+        model: model.to_string(),
+        variant: variant.clone(),
+        mode: if variant == "naive" { BatchingMode::Variable } else { BatchingMode::Masked },
+        physical_batch: batch,
+        dataset_size: 256,
+        sampling_rate: 0.25,
+        steps: if opts.quick { 2 } else { 4 },
+        noise_multiplier: Some(1.0),
+        eval_examples: 0,
+        seed: opts.seed,
+        ..Default::default()
+    };
+    Ok(Trainer::new(rt, cfg)?.run()?.sections)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_report() -> BenchReport {
+        let rt = Runtime::reference();
+        let mut opts = SweepOptions::new(true);
+        opts.repeats = 3;
+        opts.variant = Some("masked".to_string());
+        opts.batch = Some(16);
+        run_sweep(&rt, &opts).unwrap()
+    }
+
+    #[test]
+    fn sweep_emits_valid_schema_and_roundtrips() {
+        let report = quick_report();
+        report.validate().unwrap();
+        assert_eq!(report.backend, "reference");
+        assert!(report.accum_entry("ref-linear", "masked", 16).is_some());
+        assert!(report.entries.iter().any(|e| e.kind == "apply"));
+        let sections = report.sections.expect("sections run");
+        assert!(sections.accum > 0.0);
+        // JSON roundtrip preserves the schema.
+        let text = report.to_json().unwrap();
+        let parsed = BenchReport::from_json(&text).unwrap();
+        parsed.validate().unwrap();
+        assert_eq!(parsed.entries.len(), report.entries.len());
+    }
+
+    #[test]
+    fn check_file_roundtrip_and_rejects_garbage() {
+        let report = quick_report();
+        let path = std::env::temp_dir().join("dpshort_bench_schema_test.json");
+        report.write(&path).unwrap();
+        let loaded = BenchReport::check_file(&path).unwrap();
+        assert_eq!(loaded.backend, "reference");
+        std::fs::write(&path, "{\"schema_version\": 1}").unwrap();
+        assert!(BenchReport::check_file(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn unmatched_explicit_filters_are_errors() {
+        let rt = Runtime::reference();
+        let mut opts = SweepOptions::new(true);
+        opts.repeats = 2;
+        opts.with_sections = false;
+        opts.batch = Some(12_345);
+        assert!(run_sweep(&rt, &opts).is_err(), "unlowered --batch must not pass silently");
+        let mut opts = SweepOptions::new(true);
+        opts.repeats = 2;
+        opts.with_sections = false;
+        opts.variant = Some("mystery".to_string());
+        assert!(run_sweep(&rt, &opts).is_err(), "unknown --variant must not pass silently");
+    }
+
+    #[test]
+    fn validate_catches_schema_violations() {
+        let mut report = quick_report();
+        report.entries[0].median = f64::NAN;
+        assert!(report.validate().is_err());
+        let mut report = quick_report();
+        report.entries[0].kind = "mystery".into();
+        assert!(report.validate().is_err());
+        let mut report = quick_report();
+        report.schema_version = 99;
+        assert!(report.validate().is_err());
+        let mut report = quick_report();
+        report.entries.clear();
+        assert!(report.validate().is_err());
+    }
+}

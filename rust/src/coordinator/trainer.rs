@@ -21,13 +21,13 @@ use crate::coordinator::batcher::{BatchMemoryManager, BatchingMode, PhysicalBatc
 use crate::coordinator::config::TrainConfig;
 use crate::coordinator::sampler::{PoissonSampler, Sampler};
 use crate::data::SyntheticDataset;
-use crate::metrics::ThroughputMeter;
+use crate::metrics::{Summary, ThroughputMeter};
 use crate::privacy::rdp::StreamingAccountant;
 use crate::privacy::{calibrate_sigma, RdpAccountant};
 use crate::runtime::{ModelRuntime, Runtime, Tensor};
 use crate::util::rng::ChaChaRng;
 use anyhow::{anyhow, Result};
-use serde::Serialize;
+use serde::{Deserialize, Serialize};
 use std::time::Instant;
 
 /// Full-width per-step noise seed: the high 32 bits are a per-experiment
@@ -54,7 +54,7 @@ pub fn per_step_noise_seed(experiment_seed: u64, step: u64) -> u64 {
 }
 
 /// Wall-clock seconds per pipeline section (the Table-2 analogue).
-#[derive(Debug, Clone, Copy, Default, Serialize)]
+#[derive(Debug, Clone, Copy, Default, Serialize, Deserialize)]
 pub struct SectionTimes {
     /// Poisson sampling + batch splitting (host).
     pub sampling: f64,
@@ -105,8 +105,20 @@ pub struct TrainReport {
     pub computed_throughput: f64,
     /// Per-accum-call throughput samples (for bootstrap CIs).
     pub accum_samples: Vec<f64>,
+    /// Aggregate accum throughput: real examples / total accum seconds
+    /// (the [`ThroughputMeter`] view the hot loop feeds).
+    pub accum_throughput_aggregate: f64,
+    /// Median + bootstrap 95% CI over the per-accum-call samples
+    /// (`None` when no accum call produced a timed sample).
+    pub accum_throughput: Option<Summary>,
     pub eval_loss: Option<f64>,
     pub eval_accuracy: Option<f64>,
+    /// Held-out examples the eval metrics actually averaged over. The
+    /// eval executable has a fixed AOT batch size, so a request that is
+    /// not a multiple of it can only cover `floor(requested / eb) * eb`
+    /// examples — this field makes that coverage exact instead of
+    /// silently pretending the tail was evaluated.
+    pub eval_covered: u32,
     /// (artifact, seconds) for every compilation this run caused.
     pub compiles: Vec<(String, f64)>,
     /// Flat parameter vector after the final step (checkpointable via
@@ -190,7 +202,6 @@ impl<'rt> Trainer<'rt> {
 
         let mut sections = SectionTimes::default();
         let mut meter = ThroughputMeter::new();
-        let mut accum_samples = Vec::new();
         let mut steps_log = Vec::new();
         let mut accountant = StreamingAccountant::new(RdpAccountant::default());
 
@@ -220,6 +231,12 @@ impl<'rt> Trainer<'rt> {
         let denom = if expected > 0.0 { expected } else { 1.0 };
         let noise_mult = (sigma * cfg.clip_norm) as f32;
 
+        // The gradient accumulator is allocated once and *donated* to
+        // every accum call (updated in place, re-zeroed per step) — the
+        // `donate_argnums` analogue: the hot loop never copies the
+        // P-length vector.
+        let mut acc = self.model.zero_acc();
+
         for step in 0..cfg.steps {
             let t0 = Instant::now();
             let logical = sampler.sample(step);
@@ -231,7 +248,7 @@ impl<'rt> Trainer<'rt> {
             };
             sections.sampling += t0.elapsed().as_secs_f64();
 
-            let mut acc = self.model.zero_acc();
+            acc.fill(0.0);
             let mut loss_sum = 0.0f64;
             let mut computed = 0usize;
             for pb in &batches {
@@ -248,23 +265,20 @@ impl<'rt> Trainer<'rt> {
                 sections.data += t.elapsed().as_secs_f64();
 
                 let t = Instant::now();
-                let out = self.model.run_accum(&prep, &params, &acc, &x, &y, &pb.mask)?;
+                let stats =
+                    self.model.run_accum_into(&prep, &params, &mut acc, &x, &y, &pb.mask)?;
                 let dt = t.elapsed().as_secs_f64();
                 sections.accum += dt;
                 meter.record_secs(pb.real_count(), dt);
-                if dt > 0.0 {
-                    accum_samples.push(pb.real_count() as f64 / dt);
-                }
-                acc = out.acc;
-                loss_sum += out.loss_sum as f64;
+                loss_sum += stats.loss_sum as f64;
                 computed += b;
             }
 
             let t = Instant::now();
             let seed = per_step_noise_seed(cfg.seed, step);
-            params = self.model.run_apply(
+            self.model.run_apply_into(
                 &apply_prep,
-                &params,
+                &mut params,
                 &acc,
                 seed,
                 denom,
@@ -286,10 +300,10 @@ impl<'rt> Trainer<'rt> {
         }
 
         // Held-out evaluation with the fixed-size eval executable.
-        let (eval_loss, eval_accuracy) = if cfg.eval_examples > 0 {
+        let (eval_loss, eval_accuracy, eval_covered) = if cfg.eval_examples > 0 {
             self.evaluate(&params, cfg.eval_examples)?
         } else {
-            (None, None)
+            (None, None, 0)
         };
 
         let real: f64 = steps_log.iter().map(|s| s.logical_batch as f64).sum();
@@ -318,9 +332,16 @@ impl<'rt> Trainer<'rt> {
             sections,
             throughput: if total > 0.0 { real / total } else { 0.0 },
             computed_throughput: if total > 0.0 { comp / total } else { 0.0 },
-            accum_samples,
+            accum_throughput_aggregate: meter.aggregate(),
+            accum_throughput: if meter.is_empty() {
+                None
+            } else {
+                Some(meter.median_ci(cfg.seed))
+            },
+            accum_samples: meter.samples().to_vec(),
             eval_loss,
             eval_accuracy,
+            eval_covered,
             compiles,
             final_params: params.to_vec(),
         })
@@ -328,13 +349,18 @@ impl<'rt> Trainer<'rt> {
 
     /// Evaluate on held-out examples: same data distribution (same
     /// class patterns), indices disjoint from the training range.
+    /// Returns `(loss, accuracy, covered)` where `covered` is the exact
+    /// number of examples averaged over: the eval executable's batch
+    /// size is fixed at AOT time, so only `floor(examples / eb)` full
+    /// batches can run — the remainder is reported, never silently
+    /// folded into the average.
     fn evaluate(
         &self,
         params: &Tensor,
         examples: u32,
-    ) -> Result<(Option<f64>, Option<f64>)> {
+    ) -> Result<(Option<f64>, Option<f64>, u32)> {
         let Some(eb) = self.model.eval_batch() else {
-            return Ok((None, None));
+            return Ok((None, None, 0));
         };
         let held_out = SyntheticDataset::new(
             self.config.dataset_size + examples,
@@ -358,14 +384,16 @@ impl<'rt> Trainer<'rt> {
             start += eb as u32;
         }
         if n == 0 {
-            return Ok((None, None));
+            return Ok((None, None, 0));
         }
-        Ok((Some(loss / n as f64), Some(correct / n as f64)))
+        Ok((Some(loss / n as f64), Some(correct / n as f64), n))
     }
 
     /// Steady-state accum throughput sweep for one (variant, batch):
     /// `repeats` timed executions of the same compiled executable on
-    /// fresh data — the measurement behind Figures 1/2/4/6.
+    /// fresh data, through the donating (`run_accum_into`) hot path —
+    /// the measurement behind Figures 1/2/4/6. Returns examples/second
+    /// per call.
     pub fn bench_accum(
         &self,
         variant: &str,
@@ -374,15 +402,19 @@ impl<'rt> Trainer<'rt> {
     ) -> Result<Vec<f64>> {
         let prep = self.model.prepare_accum(variant, batch, self.dtype())?;
         let params = self.model.init_params()?;
-        let acc = self.model.zero_acc();
+        let mut acc = self.model.zero_acc();
         let mask = vec![1.0f32; batch];
         let mut samples = Vec::with_capacity(repeats);
         for r in 0..repeats {
-            let idx: Vec<u32> =
-                (0..batch as u32).map(|i| (r as u32 * batch as u32 + i) % self.config.dataset_size).collect();
+            let idx: Vec<u32> = (0..batch)
+                .map(|i| bench_index(r, batch, i, self.config.dataset_size))
+                .collect();
             let (x, y) = self.dataset.batch(&idx);
+            // Re-zero the donated accumulator outside the timed region
+            // so every call measures the same accumulate workload.
+            acc.fill(0.0);
             let t = Instant::now();
-            let _ = self.model.run_accum(&prep, &params, &acc, &x, &y, &mask)?;
+            let _ = self.model.run_accum_into(&prep, &params, &mut acc, &x, &y, &mask)?;
             let dt = t.elapsed().as_secs_f64();
             if dt > 0.0 {
                 samples.push(batch as f64 / dt);
@@ -390,6 +422,37 @@ impl<'rt> Trainer<'rt> {
         }
         Ok(samples)
     }
+
+    /// Steady-state apply throughput: `repeats` timed executions of the
+    /// noisy step through the donating hot path, with the Gaussian path
+    /// exercised (`noise_mult = 1`) and `lr = 0` so the parameters stay
+    /// put across repeats. Returns calls/second per call.
+    pub fn bench_apply(&self, repeats: usize) -> Result<Vec<f64>> {
+        let prep = self.model.prepare_apply()?;
+        let mut params = self.model.init_params()?;
+        let acc = self.model.zero_acc();
+        let mut samples = Vec::with_capacity(repeats);
+        for r in 0..repeats {
+            let seed = per_step_noise_seed(self.config.seed, r as u64);
+            let t = Instant::now();
+            self.model.run_apply_into(&prep, &mut params, &acc, seed, 1.0, 0.0, 1.0)?;
+            let dt = t.elapsed().as_secs_f64();
+            if dt > 0.0 {
+                samples.push(1.0 / dt);
+            }
+        }
+        Ok(samples)
+    }
+}
+
+/// Dataset index for bench repeat `r`, slot `i` at batch size `batch`,
+/// wrapping over `dataset_size`. Widened to `u64` before the modulo:
+/// the old `r as u32 * batch as u32` product overflowed once
+/// `repeats * batch` crossed 2^32, silently re-benching a skewed index
+/// pattern.
+pub fn bench_index(r: usize, batch: usize, i: usize, dataset_size: u32) -> u32 {
+    debug_assert!(dataset_size > 0);
+    ((r as u64 * batch as u64 + i as u64) % dataset_size as u64) as u32
 }
 
 #[cfg(test)]
@@ -428,6 +491,25 @@ mod tests {
         let old = |seed: i64, step: i64| (seed * 1_000_003 + step) as i32;
         // 4295 * 1_000_003 = 4_295_012_885 ≡ 45_589 (mod 2^32).
         assert_eq!(old(4295, 0), old(0, 45_589));
+    }
+
+    #[test]
+    fn bench_index_survives_large_repeats_times_batch() {
+        // The old derivation computed `r as u32 * batch as u32`, which
+        // wraps once repeats * batch crosses 2^32. 2^20 repeats at batch
+        // 2^13 puts the product at 2^33: the u64 path must still agree
+        // with exact arithmetic.
+        let (r, batch, n) = (1usize << 20, 1usize << 13, 1_000_003u32);
+        let exact = ((r as u128 * batch as u128 + 5) % n as u128) as u32;
+        assert_eq!(bench_index(r, batch, 5, n), exact);
+        // The u32 product would have wrapped to 0 here: 2^20 * 2^13 ≡ 0
+        // (mod 2^32), i.e. the old code would return 5 — the new result
+        // must differ from that wrapped value.
+        assert_ne!(bench_index(r, batch, 5, n), 5 % n);
+        // Small cases keep the obvious value.
+        assert_eq!(bench_index(2, 8, 3, 1000), 19);
+        assert_eq!(bench_index(0, 64, 63, 64), 63);
+        assert_eq!(bench_index(3, 4, 0, 5), 12 % 5);
     }
 
     #[test]

@@ -22,6 +22,7 @@
 //! L1 (pallas, AOT)  clip-mask-accumulate / ghost-norm / noisy-step
 //! ```
 
+pub mod benchreport;
 pub mod clipping;
 pub mod cluster;
 pub mod coordinator;

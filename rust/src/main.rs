@@ -19,6 +19,7 @@
 //! a fresh offline checkout.
 
 use anyhow::{anyhow, Result};
+use dp_shortcuts::benchreport::{self, BenchReport, SweepOptions};
 use dp_shortcuts::coordinator::batcher::BatchingMode;
 use dp_shortcuts::coordinator::config::TrainConfig;
 use dp_shortcuts::coordinator::trainer::Trainer;
@@ -26,6 +27,7 @@ use dp_shortcuts::privacy::{calibrate_sigma, RdpAccountant};
 use dp_shortcuts::report;
 use dp_shortcuts::runtime::Runtime;
 use dp_shortcuts::util::cli::Args;
+use std::path::{Path, PathBuf};
 
 const USAGE: &str = "usage: dpshort <list|train|bench|plan|account|scale|report> [--flags]
   common flags: --artifacts DIR (default: artifacts)
@@ -33,7 +35,10 @@ const USAGE: &str = "usage: dpshort <list|train|bench|plan|account|scale|report>
   train/bench:  --model NAME --variant V --batch B --steps N --rate Q
                 --dataset N --lr LR --sigma S --epsilon E --delta D
                 --seed S --bf16 --naive-mode --eval N --json
-  bench:        --repeats R
+  bench:        accum/apply throughput sweep -> BENCH_throughput.json
+                --repeats R --quick --out FILE (default BENCH_throughput.json)
+                --model/--variant/--batch restrict the sweep
+                --check FILE  validate an emitted file's schema and exit
   account:      --rate Q --steps N --delta D [--sigma S | --epsilon E]
   scale:        --model NAME --gpus LIST (e.g. 1,4,8,16,32,80)
   report:       <figure-or-table id> [--quick]";
@@ -139,8 +144,17 @@ fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
         "throughput: {:.1} ex/s (real), {:.1} ex/s (incl. Alg.2 padding)",
         rep.throughput, rep.computed_throughput
     );
+    if let Some(s) = &rep.accum_throughput {
+        println!(
+            "accum throughput: aggregate {:.1} ex/s, median {:.1} ex/s (95% CI [{:.1}, {:.1}], n={})",
+            rep.accum_throughput_aggregate, s.median, s.ci_low, s.ci_high, s.n
+        );
+    }
     if let (Some(l), Some(a)) = (rep.eval_loss, rep.eval_accuracy) {
-        println!("eval: loss={l:.4} accuracy={a:.4}");
+        println!(
+            "eval: loss={l:.4} accuracy={a:.4} (over {} of {} requested examples)",
+            rep.eval_covered, cfg.eval_examples
+        );
     }
     if !rep.compiles.is_empty() {
         println!("compiles ({}):", rep.compiles.len());
@@ -151,15 +165,63 @@ fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The accum/apply throughput sweep: runs on the active backend, prints
+/// a human summary, and writes the machine-readable
+/// `BENCH_throughput.json` (schema in `benchreport`, DESIGN.md §6) so
+/// the perf trajectory is recorded across PRs.
 fn cmd_bench(rt: &Runtime, args: &Args) -> Result<()> {
-    let cfg = config_from(args, rt)?;
-    let repeats: usize = args.get_parse_or("repeats", 8).map_err(|e| anyhow!(e))?;
-    let trainer = Trainer::new(rt, cfg.clone())?;
-    let samples = trainer.bench_accum(&cfg.variant, cfg.physical_batch, repeats)?;
-    let s = dp_shortcuts::metrics::summary_with_ci(&samples, cfg.seed);
+    let quick = args.get_bool("quick");
+    let mut opts = SweepOptions::new(quick);
+    opts.model = args.get("model").map(str::to_string);
+    opts.variant = args.get("variant").map(str::to_string);
+    opts.batch = args.get_parse("batch").map_err(|e| anyhow!(e))?;
+    opts.seed = args.get_parse_or("seed", opts.seed).map_err(|e| anyhow!(e))?;
+    opts.repeats = args.get_parse_or("repeats", opts.repeats).map_err(|e| anyhow!(e))?;
+    let report = benchreport::run_sweep(rt, &opts)?;
+    for e in &report.entries {
+        match e.kind.as_str() {
+            "accum" => println!(
+                "{} {} B={}: median {:.1} ex/s (95% CI [{:.1}, {:.1}], n={})",
+                e.model,
+                e.variant.as_deref().unwrap_or("?"),
+                e.batch.unwrap_or(0),
+                e.median,
+                e.ci_low,
+                e.ci_high,
+                e.n
+            ),
+            _ => println!(
+                "{} apply: median {:.1} calls/s (95% CI [{:.1}, {:.1}], n={})",
+                e.model, e.median, e.ci_low, e.ci_high, e.n
+            ),
+        }
+    }
+    if let Some(s) = &report.sections {
+        println!(
+            "sections (s): sampling={:.3} data={:.3} accum={:.3} apply={:.3} compile={:.3}",
+            s.sampling, s.data, s.accum, s.apply, s.compile
+        );
+    }
+    let out = PathBuf::from(args.get_or("out", benchreport::DEFAULT_OUT));
+    report.write(&out)?;
     println!(
-        "{} {} B={}: median {:.1} ex/s (95% CI [{:.1}, {:.1}], n={})",
-        cfg.model, cfg.variant, cfg.physical_batch, s.median, s.ci_low, s.ci_high, s.n
+        "wrote {} ({} entries, backend {})",
+        out.display(),
+        report.entries.len(),
+        report.backend
+    );
+    Ok(())
+}
+
+/// `dpshort bench --check FILE`: schema-validate an emitted report
+/// (the CI smoke gate) without running any benchmark.
+fn cmd_bench_check(path: &str) -> Result<()> {
+    let report = BenchReport::check_file(Path::new(path))?;
+    println!(
+        "{path}: schema v{} ok ({} entries, backend {})",
+        report.schema_version,
+        report.entries.len(),
+        report.backend
     );
     Ok(())
 }
@@ -209,6 +271,9 @@ fn main() -> Result<()> {
     // Commands that don't need the runtime:
     match cmd {
         "account" => return cmd_account(&args),
+        "bench" if args.get("check").is_some() => {
+            return cmd_bench_check(args.get("check").unwrap())
+        }
         "plan" => {
             let budget_gb: f64 =
                 args.get_parse_or("budget-gb", 40.0).map_err(|e| anyhow!(e))?;

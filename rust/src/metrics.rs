@@ -66,7 +66,7 @@ impl ThroughputMeter {
 }
 
 /// Median and bootstrap 95% confidence interval.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, serde::Serialize, serde::Deserialize)]
 pub struct Summary {
     pub median: f64,
     pub ci_low: f64,

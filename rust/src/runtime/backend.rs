@@ -10,6 +10,26 @@
 //! eval (params[P], x[B,H,W,C], y[B]) -> (loss_sum, ncorrect)
 //! ```
 //!
+//! The accum/apply calls exist in two forms:
+//!
+//! * **copying** (`run_accum`, `run_apply`) — the caller keeps its
+//!   buffers; the backend returns fresh ones.
+//! * **donating** (`run_accum_into`, `run_apply_into`) — the caller
+//!   *donates* the round-tripping buffer (the gradient accumulator for
+//!   accum, the parameters for apply) and the backend updates it in
+//!   place. This is the Rust analogue of JAX's `donate_argnums` / XLA
+//!   input-output aliasing: the hot loop never pays a P-length copy per
+//!   call. Both forms must produce bitwise-identical results — the
+//!   proptests in `rust/tests/proptest_invariants.rs` enforce it.
+//!
+//! The copying forms are required (so a backend can never accidentally
+//! ship neither); the donating forms default to "run the copying form,
+//! move the result into the donated buffer" — already zero-copy for a
+//! backend that returns a fresh `Tensor` per call (a move, not a
+//! memcpy). Backends with a genuinely in-place kernel (the reference
+//! backend) override the donating forms and implement the copying forms
+//! as clone + donate.
+//!
 //! Two implementations ship:
 //!
 //! * [`super::reference::ReferenceBackend`] — pure-Rust linear+softmax
@@ -48,6 +68,16 @@ pub struct AccumOut {
     pub sq_norms: Vec<f32>,
 }
 
+/// Scalar outputs of one *donating* accum call — the accumulator itself
+/// is updated in place in the donated buffer.
+#[derive(Debug, Clone)]
+pub struct AccumStats {
+    /// Sum of masked per-example losses.
+    pub loss_sum: f32,
+    /// Per-example squared gradient norms (zeros for nonprivate).
+    pub sq_norms: Vec<f32>,
+}
+
 /// An execution backend: compiles artifacts and runs the ABI calls.
 pub trait Backend {
     /// Short backend name ("reference" | "pjrt").
@@ -70,8 +100,11 @@ pub trait Backend {
         read_flat_f32(&dir.join(&meta.init_params), meta.n_params)
     }
 
-    /// One gradient-accumulation call (the Algorithm 1/2 inner loop).
-    /// `x` is row-major `[B, H, W, C]`; `mask` the Algorithm-2 masks.
+    /// One gradient-accumulation call (the Algorithm 1/2 inner loop),
+    /// copying form: the input accumulator is untouched and a fresh one
+    /// is returned. `x` is row-major `[B, H, W, C]`; `mask` the
+    /// Algorithm-2 masks. An in-place backend implements this as
+    /// clone + [`Self::run_accum_into`].
     #[allow(clippy::too_many_arguments)]
     fn run_accum(
         &self,
@@ -84,9 +117,35 @@ pub trait Backend {
         mask: &[f32],
     ) -> Result<AccumOut>;
 
-    /// The once-per-logical-batch noise + SGD step. `seed` is the
-    /// full-width 64-bit per-step noise seed; `denom` the Algorithm-1
-    /// `|L|` divisor; `noise_mult` is `sigma * C` (0 for non-private).
+    /// Donating form of the accum call: `acc` is updated in place (the
+    /// `donate_argnums` analogue, DESIGN.md §3). On error the donated
+    /// buffer is left unmodified. Must be bitwise-identical to
+    /// [`Self::run_accum`].
+    ///
+    /// Default: runs the copying form and *moves* the returned tensor
+    /// into `acc` — zero-copy already for backends minting a fresh
+    /// result; override only with a genuinely in-place kernel.
+    #[allow(clippy::too_many_arguments)]
+    fn run_accum_into(
+        &self,
+        prep: &Prepared,
+        meta: &ModelMeta,
+        params: &Tensor,
+        acc: &mut Tensor,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<AccumStats> {
+        let out = self.run_accum(prep, meta, params, acc, x, y, mask)?;
+        *acc = out.acc;
+        Ok(AccumStats { loss_sum: out.loss_sum, sq_norms: out.sq_norms })
+    }
+
+    /// The once-per-logical-batch noise + SGD step, copying form. `seed`
+    /// is the full-width 64-bit per-step noise seed; `denom` the
+    /// Algorithm-1 `|L|` divisor; `noise_mult` is `sigma * C` (0 for
+    /// non-private). An in-place backend implements this as
+    /// clone + [`Self::run_apply_into`].
     #[allow(clippy::too_many_arguments)]
     fn run_apply(
         &self,
@@ -100,6 +159,28 @@ pub trait Backend {
         noise_mult: f32,
     ) -> Result<Tensor>;
 
+    /// Donating form of the apply call: `params` is updated in place.
+    /// On error the donated buffer is left unmodified. Must be
+    /// bitwise-identical to [`Self::run_apply`].
+    ///
+    /// Default: runs the copying form and *moves* the returned tensor
+    /// into `params`; override only with a genuinely in-place kernel.
+    #[allow(clippy::too_many_arguments)]
+    fn run_apply_into(
+        &self,
+        prep: &Prepared,
+        meta: &ModelMeta,
+        params: &mut Tensor,
+        acc: &Tensor,
+        seed: u64,
+        denom: f32,
+        lr: f32,
+        noise_mult: f32,
+    ) -> Result<()> {
+        *params = self.run_apply(prep, meta, params, acc, seed, denom, lr, noise_mult)?;
+        Ok(())
+    }
+
     /// Forward-only evaluation: `(loss_sum, ncorrect)` over the batch.
     fn run_eval(
         &self,
@@ -109,4 +190,134 @@ pub trait Backend {
         x: &[f32],
         y: &[i32],
     ) -> Result<(f32, f32)>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal copying-only backend: the donating forms must come from
+    /// the trait defaults (this is the path a literal-marshalling
+    /// backend like PJRT runs in production).
+    struct CopyOnly;
+
+    impl Backend for CopyOnly {
+        fn name(&self) -> &'static str {
+            "copy-only"
+        }
+
+        fn prepare(
+            &self,
+            _dir: &Path,
+            _meta: &ModelMeta,
+            exe: &ExecutableMeta,
+        ) -> Result<Prepared> {
+            Ok(Prepared { key: exe.path.clone(), compile_seconds: None })
+        }
+
+        fn is_compiled(&self, _key: &str) -> bool {
+            true
+        }
+
+        fn compile_records(&self) -> Vec<CompileRecord> {
+            Vec::new()
+        }
+
+        /// Toy kernel: acc' = acc + mask-weighted example count in slot
+        /// 0, loss = batch size.
+        fn run_accum(
+            &self,
+            _prep: &Prepared,
+            _meta: &ModelMeta,
+            _params: &Tensor,
+            acc: &Tensor,
+            _x: &[f32],
+            y: &[i32],
+            mask: &[f32],
+        ) -> Result<AccumOut> {
+            let mut out = acc.to_vec();
+            out[0] += mask.iter().sum::<f32>();
+            Ok(AccumOut {
+                acc: Tensor::from_vec(out),
+                loss_sum: y.len() as f32,
+                sq_norms: vec![0.5; y.len()],
+            })
+        }
+
+        /// Toy step: params' = params - lr * acc / denom.
+        fn run_apply(
+            &self,
+            _prep: &Prepared,
+            _meta: &ModelMeta,
+            params: &Tensor,
+            acc: &Tensor,
+            _seed: u64,
+            denom: f32,
+            lr: f32,
+            _noise_mult: f32,
+        ) -> Result<Tensor> {
+            let out: Vec<f32> = params
+                .as_slice()
+                .iter()
+                .zip(acc.as_slice())
+                .map(|(p, a)| p - lr * a / denom)
+                .collect();
+            Ok(Tensor::from_vec(out))
+        }
+
+        fn run_eval(
+            &self,
+            _prep: &Prepared,
+            _meta: &ModelMeta,
+            _params: &Tensor,
+            _x: &[f32],
+            y: &[i32],
+        ) -> Result<(f32, f32)> {
+            Ok((y.len() as f32, 0.0))
+        }
+    }
+
+    fn toy_meta() -> ModelMeta {
+        ModelMeta {
+            family: "toy".into(),
+            n_params: 3,
+            image: 1,
+            channels: 1,
+            num_classes: 2,
+            clip_norm: 1.0,
+            flops_fwd_per_example: 1.0,
+            init_params: "toy.bin".into(),
+            executables: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn default_donating_forms_match_copying_forms() {
+        let b = CopyOnly;
+        let meta = toy_meta();
+        let prep = Prepared { key: "toy".into(), compile_seconds: None };
+        let params = Tensor::vec1(&[1.0, 2.0, 3.0]);
+        let acc = Tensor::vec1(&[4.0, 0.0, -1.0]);
+        let (x, y, mask) = (vec![0.0f32; 2], vec![0, 1], vec![1.0f32, 0.0]);
+
+        let copied = b.run_accum(&prep, &meta, &params, &acc, &x, &y, &mask).unwrap();
+        let mut donated = acc.clone();
+        let stats = b
+            .run_accum_into(&prep, &meta, &params, &mut donated, &x, &y, &mask)
+            .unwrap();
+        assert_eq!(copied.acc, donated, "default donating accum must equal copying");
+        assert_eq!(copied.loss_sum, stats.loss_sum);
+        assert_eq!(copied.sq_norms, stats.sq_norms);
+        // The donated buffer was genuinely updated in place.
+        assert_eq!(donated.as_slice()[0], 5.0);
+
+        let applied = b
+            .run_apply(&prep, &meta, &params, &acc, 7, 2.0, 0.5, 0.0)
+            .unwrap();
+        let mut donated_p = params.clone();
+        b.run_apply_into(&prep, &meta, &mut donated_p, &acc, 7, 2.0, 0.5, 0.0)
+            .unwrap();
+        assert_eq!(applied, donated_p, "default donating apply must equal copying");
+        assert_eq!(donated_p.as_slice()[0], 1.0 - 0.5 * 4.0 / 2.0);
+    }
 }

@@ -8,7 +8,7 @@
 //! [`Runtime::reference`], whose manifest and executables are
 //! synthesized in-memory by the pure-Rust reference backend.
 
-use super::backend::{AccumOut, Backend, Prepared};
+use super::backend::{AccumOut, AccumStats, Backend, Prepared};
 use super::compile_cache::CompileRecord;
 use super::manifest::{Manifest, ModelMeta};
 use super::reference::ReferenceBackend;
@@ -248,6 +248,24 @@ impl ModelRuntime {
         self.backend.run_accum(prep, &self.meta, params, acc, x, y, mask)
     }
 
+    /// Donating form of the accum call: `acc` is the donated buffer,
+    /// updated in place (the `donate_argnums` analogue — no P-length
+    /// copy per physical batch). Bitwise-identical to
+    /// [`Self::run_accum`]; the trainer's hot loop uses this form.
+    pub fn run_accum_into(
+        &self,
+        prep: &Prepared,
+        params: &Tensor,
+        acc: &mut Tensor,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<AccumStats> {
+        debug_assert_eq!(x.len(), y.len() * self.image_dim());
+        debug_assert_eq!(mask.len(), y.len());
+        self.backend.run_accum_into(prep, &self.meta, params, acc, x, y, mask)
+    }
+
     /// The once-per-logical-batch noise + SGD step, on an executable
     /// from [`Self::prepare_apply`] (same single-lookup compile
     /// attribution as the accum path).
@@ -268,6 +286,24 @@ impl ModelRuntime {
     ) -> Result<Tensor> {
         self.backend
             .run_apply(prep, &self.meta, params, acc, seed, denom, lr, noise_mult)
+    }
+
+    /// Donating form of the apply call: `params` is the donated buffer,
+    /// updated in place. Bitwise-identical to [`Self::run_apply`]; the
+    /// trainer's hot loop uses this form.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_apply_into(
+        &self,
+        prep: &Prepared,
+        params: &mut Tensor,
+        acc: &Tensor,
+        seed: u64,
+        denom: f32,
+        lr: f32,
+        noise_mult: f32,
+    ) -> Result<()> {
+        self.backend
+            .run_apply_into(prep, &self.meta, params, acc, seed, denom, lr, noise_mult)
     }
 
     /// Forward-only evaluation: returns (loss_sum, ncorrect) over the

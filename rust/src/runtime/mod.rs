@@ -12,6 +12,11 @@
 //! eval (params[P], x[B,H,W,C], y[B]) -> (loss_sum, ncorrect)
 //! ```
 //!
+//! accum and apply each come in a copying and a *donating* form
+//! (`run_accum_into` / `run_apply_into`): the round-tripping buffer
+//! (acc, params) is updated in place — the `donate_argnums` / XLA
+//! input-output-aliasing analogue the hot loop runs on (DESIGN.md §3).
+//!
 //! The [`Backend`] trait (DESIGN.md §2) seams the executor out of the
 //! coordinator: the default build ships the pure-Rust
 //! [`ReferenceBackend`] (linear+softmax reference model, fully offline);
@@ -30,7 +35,7 @@ pub mod pjrt;
 pub mod reference;
 pub mod tensor;
 
-pub use backend::{AccumOut, Backend, Prepared};
+pub use backend::{AccumOut, AccumStats, Backend, Prepared};
 pub use client::{ModelRuntime, Runtime};
 pub use compile_cache::{CompileCache, CompileRecord};
 pub use hlo_analysis::{analyze, analyze_file, HloStats};

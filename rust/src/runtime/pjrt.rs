@@ -5,10 +5,22 @@
 //! real bindings to execute artifacts.
 //!
 //! Tensors cross the boundary by value: the crate-owned [`Tensor`] is
-//! re-encoded into an `xla::Literal` per call. For the CPU testbed the
-//! copy is noise next to the graph execution; a buffer-donation fast
-//! path can come back behind this trait if a future device backend
-//! needs it.
+//! re-encoded into an `xla::Literal` per call.
+//!
+//! **Donation mapping** (DESIGN.md §3): the `run_*_into` entry points
+//! are this backend's hook for XLA input-output aliasing — the same
+//! contract `jax.jit(donate_argnums=...)` lowers to, where the
+//! round-tripping operand (`acc` for accum, `params` for apply) shares
+//! its device buffer with the corresponding output. Real PJRT bindings
+//! express that via `ExecuteOptions` non-donatable-argument sets at
+//! execute time plus `input_output_alias` in the lowered HLO (the AOT
+//! pipeline already marks those pairs); a device-resident backend would
+//! override `run_accum_into`/`run_apply_into` to keep the buffer on
+//! device across calls. Against the offline stub the device side is
+//! unavailable, so this backend keeps the trait defaults: the copying
+//! form mints one fresh host `Tensor` per call and the donating default
+//! *moves* it into the donated slot — no extra copy, and the trainer's
+//! hot loop still holds one params and one acc binding for the run.
 
 // The ABI methods carry the full flat-param call (8-9 args by design).
 #![allow(clippy::too_many_arguments)]

@@ -16,6 +16,32 @@
 //! * the noisy step `params - lr * (acc + sigma*C*z) / denom` with
 //!   ChaCha20-seeded Gaussian noise from the 64-bit per-step seed.
 //!
+//! ## Hot-path implementation (DESIGN.md §3)
+//!
+//! The kernels are written for steady-state speed without giving up
+//! bitwise determinism:
+//!
+//! * **Buffer donation** — the backend implements the `run_*_into`
+//!   forms natively: the gradient accumulator and the parameter vector
+//!   are updated in place, never cloned per call. The copying forms are
+//!   the trait defaults (clone + donate), so both are identical by
+//!   construction.
+//! * **Scratch arena** — per-call working sets (dlogits, clip scales,
+//!   losses, the apply noise vector) live in one reusable arena instead
+//!   of per-example `Vec` allocations.
+//! * **Blocked matvec** — logits come from an 8-lane unrolled dot
+//!   product with a fixed reduction tree; each weight row stays hot
+//!   across the lane loop.
+//! * **Deterministic threading** — `std::thread::scope` with fixed
+//!   index partitions. Phase 1 (per-example dlogits/norms/scales) is
+//!   parallel over *example ranges*; phase 2 (the `acc +=` update) is
+//!   parallel over *class-row ranges* with every worker scanning
+//!   examples in batch order. No float addition chain ever depends on
+//!   the thread count, so results are bitwise-reproducible for any
+//!   parallelism — and identical to a sequential run. This is also what
+//!   keeps Algorithm-2 padding exactly update-neutral across different
+//!   physical chunkings of the same example stream.
+//!
 //! "Compilation" is a spec decode, timed through the same
 //! [`CompileCache`] as PJRT so the masked-vs-naive compile-count
 //! invariants (Fig. A.2) are observable on this backend too.
@@ -23,7 +49,7 @@
 // The ABI methods carry the full flat-param call (8-9 args by design).
 #![allow(clippy::too_many_arguments)]
 
-use super::backend::{AccumOut, Backend, Prepared};
+use super::backend::{AccumOut, AccumStats, Backend, Prepared};
 use super::compile_cache::{CompileCache, CompileRecord};
 use super::manifest::{ExecutableMeta, Manifest, ModelMeta};
 use super::tensor::Tensor;
@@ -37,6 +63,17 @@ use std::sync::Arc;
 /// Name of the synthetic reference model in [`ReferenceBackend::manifest`].
 pub const REFERENCE_MODEL: &str = "ref-linear";
 
+/// Minimum inner-loop multiply-adds a worker thread must amortize
+/// before auto-threading spawns it: scoped-thread spawn costs tens of
+/// microseconds, so each worker needs at least that much kernel work to
+/// pay for itself. The gate only affects wall-clock, never results
+/// (see the determinism notes above).
+const MIN_WORK_PER_WORKER: usize = 200_000;
+
+/// Cap for auto-detected worker threads (diminishing returns beyond the
+/// row count of the reference model).
+const MAX_AUTO_THREADS: usize = 8;
+
 /// Decoded executable spec (the reference backend's "compiled" form).
 #[derive(Debug, Clone)]
 enum RefExec {
@@ -45,16 +82,97 @@ enum RefExec {
     Eval { batch: usize },
 }
 
+/// Reusable per-call working buffers — the scratch arena. Sized on
+/// first use, reused (and regrown, never shrunk below need) afterwards,
+/// so the steady-state hot loop performs no heap allocation beyond the
+/// per-call `sq_norms` output.
+#[derive(Debug, Default)]
+struct Scratch {
+    /// `[B, ncls]`: logits, transformed in place into dlogits.
+    dlogits: Vec<f32>,
+    /// `[B]`: accumulate scale `mask_i * min(1, C/||g_i||)`.
+    scale: Vec<f32>,
+    /// `[B]`: unmasked per-example losses.
+    losses: Vec<f32>,
+    /// `[P]`: Gaussian noise vector for the apply step.
+    noise: Vec<f32>,
+}
+
+impl Scratch {
+    /// Hand out the accum buffers `(dlogits[B*ncls], scale[B], losses[B])`.
+    fn accum(&mut self, b: usize, ncls: usize) -> (&mut [f32], &mut [f32], &mut [f32]) {
+        self.dlogits.resize(b * ncls, 0.0);
+        self.scale.resize(b, 0.0);
+        self.losses.resize(b, 0.0);
+        (
+            &mut self.dlogits[..b * ncls],
+            &mut self.scale[..b],
+            &mut self.losses[..b],
+        )
+    }
+
+    /// Hand out the `[P]` noise buffer for the apply step.
+    fn noise(&mut self, n: usize) -> &mut [f32] {
+        self.noise.resize(n, 0.0);
+        &mut self.noise[..n]
+    }
+}
+
 /// The pure-Rust reference CPU backend.
 pub struct ReferenceBackend {
     cache: RefCell<CompileCache<RefExec>>,
     /// Seed for the synthesized initial parameters.
     init_seed: u64,
+    /// Worker-thread budget for the accum kernels (resolved at
+    /// construction; results are bitwise-identical for every value).
+    threads: usize,
+    /// `with_threads(_, n > 0)`: use exactly `threads` workers instead
+    /// of the work-size heuristic (tests and explicit operator control).
+    forced_threads: bool,
+    scratch: RefCell<Scratch>,
 }
 
 impl ReferenceBackend {
     pub fn new(init_seed: u64) -> Self {
-        Self { cache: RefCell::new(CompileCache::new()), init_seed }
+        Self::with_threads(init_seed, 0)
+    }
+
+    /// Backend with an explicit worker-thread count (`0` = auto-detect,
+    /// where each kernel call sizes its worker set to the work
+    /// available; `n > 0` = exactly `n` workers, spawn cost be damned).
+    /// The thread count is a wall-clock knob only: outputs are
+    /// bitwise-identical for every value, which the proptests assert.
+    pub fn with_threads(init_seed: u64, threads: usize) -> Self {
+        let forced = threads > 0;
+        let threads = if forced {
+            threads
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(MAX_AUTO_THREADS)
+        };
+        Self {
+            cache: RefCell::new(CompileCache::new()),
+            init_seed,
+            threads,
+            forced_threads: forced,
+            scratch: RefCell::new(Scratch::default()),
+        }
+    }
+
+    /// Worker count for a parallel section with `work` inner-loop
+    /// multiply-adds and at most `cap` partitions. Auto mode spawns a
+    /// worker only once it has [`MIN_WORK_PER_WORKER`] to amortize the
+    /// spawn; forced mode honors the constructor's count. Either way
+    /// the result only moves wall-clock, never bits.
+    fn workers(&self, work: usize, cap: usize) -> usize {
+        let cap = cap.max(1);
+        if self.forced_threads {
+            self.threads.min(cap).max(1)
+        } else {
+            (work / MIN_WORK_PER_WORKER).min(self.threads).min(cap).max(1)
+        }
     }
 
     /// In-memory manifest for the reference model: every clipping
@@ -161,19 +279,37 @@ fn image_dim(meta: &ModelMeta) -> usize {
     meta.image * meta.image * meta.channels
 }
 
-/// `logits = W x + b` over the flat parameter layout `[W row-major | b]`.
-fn logits(meta: &ModelMeta, params: &[f32], xi: &[f32]) -> Vec<f32> {
-    let d = image_dim(meta);
-    let ncls = meta.num_classes;
-    let (w, rest) = params.split_at(ncls * d);
-    let bias = &rest[..ncls];
-    let mut out = Vec::with_capacity(ncls);
-    for (cls, &b) in bias.iter().enumerate() {
-        let row = &w[cls * d..(cls + 1) * d];
-        let dot: f32 = row.iter().zip(xi).map(|(wv, xv)| wv * xv).sum();
-        out.push(dot + b);
+/// 8-lane unrolled dot product with a fixed reduction tree — the inner
+/// kernel of the blocked matvec. Lane association is part of the
+/// determinism contract: the same inputs produce the same bits on every
+/// run and thread count (the lanes and their final tree never change).
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n8 = a.len() - a.len() % 8;
+    let (a8, at) = a.split_at(n8);
+    let (b8, bt) = b.split_at(n8);
+    let mut lanes = [0.0f32; 8];
+    for (ac, bc) in a8.chunks_exact(8).zip(b8.chunks_exact(8)) {
+        for j in 0..8 {
+            lanes[j] += ac[j] * bc[j];
+        }
     }
-    out
+    let mut tail = 0.0f32;
+    for (av, bv) in at.iter().zip(bt) {
+        tail += av * bv;
+    }
+    (((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7])))
+        + tail
+}
+
+/// `row += g * xi` — no cross-iteration dependency, auto-vectorizes.
+#[inline]
+fn axpy(row: &mut [f32], xi: &[f32], g: f32) {
+    for (a, &xv) in row.iter_mut().zip(xi) {
+        *a += g * xv;
+    }
 }
 
 /// Stable log-sum-exp of the logits.
@@ -183,29 +319,104 @@ fn logsumexp(lg: &[f32]) -> f32 {
     max + z.ln()
 }
 
-/// Cross-entropy loss and `dlogits = softmax(logits) - onehot(y)`.
-fn loss_and_dlogits(lg: &[f32], y: usize) -> (f32, Vec<f32>) {
-    let max = lg.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let mut probs: Vec<f32> = lg.iter().map(|&l| (l - max).exp()).collect();
-    let z: f32 = probs.iter().sum();
-    let loss = max + z.ln() - lg[y];
-    for p in probs.iter_mut() {
-        *p /= z;
-    }
-    probs[y] -= 1.0;
-    (loss, probs)
+/// Read-only inputs shared by every accum kernel worker.
+#[derive(Clone, Copy)]
+struct AccumCtx<'a> {
+    meta: &'a ModelMeta,
+    nonprivate: bool,
+    params: &'a [f32],
+    x: &'a [f32],
+    y: &'a [i32],
+    mask: &'a [f32],
 }
 
-/// `acc += scale * g_i` for the linear model's per-example gradient
-/// `g_i = (dlogits ⊗ x_i, dlogits)` — no `[B, P]` materialization.
-fn accumulate_scaled_grad(acc: &mut [f32], ncls: usize, d: usize, scale: f32, dlog: &[f32], xi: &[f32]) {
-    for (cls, &dl) in dlog.iter().enumerate() {
-        let g = scale * dl;
-        let row = &mut acc[cls * d..(cls + 1) * d];
-        for (a, &xv) in row.iter_mut().zip(xi) {
-            *a += g * xv;
+/// Accum phase 1: for the examples of one partition (`start` onward,
+/// one slot per element of `scale`), compute dlogits (softmax − onehot,
+/// in place over the logits), the unmasked loss, the squared grad norm,
+/// and the accumulate scale. Examples are independent — this is the
+/// parallel-over-examples section. Output slices are the partition's
+/// disjoint windows (local index 0 = example `start`).
+fn accum_examples(
+    ctx: AccumCtx<'_>,
+    start: usize,
+    dlogits: &mut [f32],
+    scale: &mut [f32],
+    losses: &mut [f32],
+    sq_norms: &mut [f32],
+) {
+    let AccumCtx { meta, nonprivate, params, x, y, mask } = ctx;
+    let d = image_dim(meta);
+    let ncls = meta.num_classes;
+    let (w, rest) = params.split_at(ncls * d);
+    let bias = &rest[..ncls];
+    for k in 0..scale.len() {
+        let i = start + k;
+        let xi = &x[i * d..(i + 1) * d];
+        let dl = &mut dlogits[k * ncls..(k + 1) * ncls];
+        // Blocked matvec: logits land in the dlogits slot and are
+        // transformed in place below.
+        for (cls, slot) in dl.iter_mut().enumerate() {
+            *slot = dot(&w[cls * d..(cls + 1) * d], xi) + bias[cls];
         }
-        acc[ncls * d + cls] += g;
+        let yi = y[i] as usize;
+        let ly = dl[yi];
+        let max = dl.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for v in dl.iter_mut() {
+            *v = (*v - max).exp();
+            z += *v;
+        }
+        losses[k] = max + z.ln() - ly;
+        for v in dl.iter_mut() {
+            *v /= z;
+        }
+        dl[yi] -= 1.0;
+        if nonprivate {
+            // Batched-gradient baseline: no clipping, norms reported
+            // as zeros (matching `_accum_nonprivate` in model.py).
+            sq_norms[k] = 0.0;
+            scale[k] = mask[i];
+        } else {
+            let xsq = dot(xi, xi);
+            let dlsq = dot(dl, dl);
+            let sq = dlsq * (xsq + 1.0);
+            sq_norms[k] = sq;
+            let norm = sq.max(0.0).sqrt().max(1e-12);
+            scale[k] = ((meta.clip_norm as f32) / norm).min(1.0) * mask[i];
+        }
+    }
+}
+
+/// Accum phase 2: `acc += scale_i * (dlogits_i ⊗ x_i, dlogits_i)` for
+/// the class rows `[c0, c0 + b_rows.len())`, scanning examples in batch
+/// order. Parallelism partitions *rows* (coordinates), never examples,
+/// so every accumulator coordinate sees the exact addition chain of a
+/// sequential per-example run — for any thread count and any physical
+/// chunking of the same example stream (Algorithm-2 padding neutrality
+/// stays bitwise-exact).
+fn accum_update(
+    ctx: AccumCtx<'_>,
+    c0: usize,
+    w_rows: &mut [f32],
+    b_rows: &mut [f32],
+    dlogits: &[f32],
+    scale: &[f32],
+) {
+    let d = image_dim(ctx.meta);
+    let ncls = ctx.meta.num_classes;
+    let x = ctx.x;
+    let rows = b_rows.len();
+    for (i, &sc) in scale.iter().enumerate() {
+        if sc == 0.0 {
+            continue;
+        }
+        let xi = &x[i * d..(i + 1) * d];
+        let dl = &dlogits[i * ncls..(i + 1) * ncls];
+        for r in 0..rows {
+            let g = sc * dl[c0 + r];
+            axpy(&mut w_rows[r * d..(r + 1) * d], xi, g);
+            b_rows[r] += g;
+        }
     }
 }
 
@@ -260,6 +471,8 @@ impl Backend for ReferenceBackend {
         Ok(Tensor::from_vec(v))
     }
 
+    /// Copying accum: clone + donate, so the two forms agree bitwise by
+    /// construction (the donating kernel below is the implementation).
     fn run_accum(
         &self,
         prep: &Prepared,
@@ -270,6 +483,41 @@ impl Backend for ReferenceBackend {
         y: &[i32],
         mask: &[f32],
     ) -> Result<AccumOut> {
+        let mut donated = acc.clone();
+        let stats = self.run_accum_into(prep, meta, params, &mut donated, x, y, mask)?;
+        Ok(AccumOut { acc: donated, loss_sum: stats.loss_sum, sq_norms: stats.sq_norms })
+    }
+
+    /// Copying apply: clone + donate (see `run_accum`).
+    fn run_apply(
+        &self,
+        prep: &Prepared,
+        meta: &ModelMeta,
+        params: &Tensor,
+        acc: &Tensor,
+        seed: u64,
+        denom: f32,
+        lr: f32,
+        noise_mult: f32,
+    ) -> Result<Tensor> {
+        let mut donated = params.clone();
+        self.run_apply_into(prep, meta, &mut donated, acc, seed, denom, lr, noise_mult)?;
+        Ok(donated)
+    }
+
+    /// Native donating accum: `acc` is updated in place through the
+    /// scratch arena + deterministic-threading kernel described in the
+    /// module docs.
+    fn run_accum_into(
+        &self,
+        prep: &Prepared,
+        meta: &ModelMeta,
+        params: &Tensor,
+        acc: &mut Tensor,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<AccumStats> {
         let spec = self.spec(prep)?;
         let (variant, batch) = match spec.as_ref() {
             RefExec::Accum { variant, batch } => (variant.as_str(), *batch),
@@ -287,49 +535,84 @@ impl Backend for ReferenceBackend {
 
         let d = image_dim(meta);
         let ncls = meta.num_classes;
-        let p = params.as_slice();
-        let mut acc_out = acc.to_vec();
-        let mut loss_sum = 0.0f32;
-        let mut sq_norms = Vec::with_capacity(b);
-        for i in 0..b {
-            let xi = &x[i * d..(i + 1) * d];
-            let m = mask[i];
-            let lg = logits(meta, p, xi);
-            let (loss, dlog) = loss_and_dlogits(&lg, y[i] as usize);
-            loss_sum += m * loss;
-            if variant == "nonprivate" {
-                // Batched-gradient baseline: no clipping, norms reported
-                // as zeros (matching `_accum_nonprivate` in model.py).
-                sq_norms.push(0.0);
-                if m != 0.0 {
-                    accumulate_scaled_grad(&mut acc_out, ncls, d, m, &dlog, xi);
+        let ctx = AccumCtx {
+            meta,
+            nonprivate: variant == "nonprivate",
+            params: params.as_slice(),
+            x,
+            y,
+            mask,
+        };
+        let mut sq_norms = vec![0.0f32; b];
+
+        let mut scratch = self.scratch.borrow_mut();
+        let (dlogits, scale, losses) = scratch.accum(b, ncls);
+
+        // Phase 1: per-example dlogits / losses / norms / scales,
+        // parallel over fixed contiguous example partitions.
+        let nthreads = self.workers(b * ncls * d, b);
+        if nthreads > 1 {
+            let per = b.div_ceil(nthreads);
+            std::thread::scope(|sc| {
+                for (ti, (((dl, sl), ls), sq)) in dlogits
+                    .chunks_mut(per * ncls)
+                    .zip(scale.chunks_mut(per))
+                    .zip(losses.chunks_mut(per))
+                    .zip(sq_norms.chunks_mut(per))
+                    .enumerate()
+                {
+                    sc.spawn(move || accum_examples(ctx, ti * per, dl, sl, ls, sq));
                 }
-            } else {
-                let xsq: f32 = xi.iter().map(|v| v * v).sum();
-                let dlsq: f32 = dlog.iter().map(|v| v * v).sum();
-                let sq = dlsq * (xsq + 1.0);
-                sq_norms.push(sq);
-                let norm = sq.max(0.0).sqrt().max(1e-12);
-                let cfac = ((meta.clip_norm as f32) / norm).min(1.0) * m;
-                if cfac != 0.0 {
-                    accumulate_scaled_grad(&mut acc_out, ncls, d, cfac, &dlog, xi);
-                }
-            }
+            });
+        } else {
+            accum_examples(ctx, 0, dlogits, scale, losses, &mut sq_norms);
         }
-        Ok(AccumOut { acc: Tensor::from_vec(acc_out), loss_sum, sq_norms })
+
+        // Masked loss sum in example order (the sequential association).
+        let mut loss_sum = 0.0f32;
+        for (&ls, &m) in losses.iter().zip(mask) {
+            loss_sum += m * ls;
+        }
+
+        // Phase 2: the in-place accumulator update, parallel over fixed
+        // class-row partitions (examples always scanned in order).
+        let dlogits: &[f32] = dlogits;
+        let scale: &[f32] = scale;
+        let acc_s = acc.as_mut_slice();
+        let (w_acc, rest) = acc_s.split_at_mut(ncls * d);
+        let bias_acc = &mut rest[..ncls];
+        let t2 = self.workers(b * ncls * d, ncls);
+        if t2 > 1 {
+            let rows_per = ncls.div_ceil(t2);
+            std::thread::scope(|sc| {
+                for (ti, (wc, bc)) in w_acc
+                    .chunks_mut(rows_per * d)
+                    .zip(bias_acc.chunks_mut(rows_per))
+                    .enumerate()
+                {
+                    sc.spawn(move || accum_update(ctx, ti * rows_per, wc, bc, dlogits, scale));
+                }
+            });
+        } else {
+            accum_update(ctx, 0, w_acc, bias_acc, dlogits, scale);
+        }
+        Ok(AccumStats { loss_sum, sq_norms })
     }
 
-    fn run_apply(
+    /// Native donating apply: in-place SGD step with bulk ChaCha20
+    /// Gaussian noise (`fill_normals` over the arena's noise buffer).
+    /// The copying `run_apply` is the trait default.
+    fn run_apply_into(
         &self,
         prep: &Prepared,
         meta: &ModelMeta,
-        params: &Tensor,
+        params: &mut Tensor,
         acc: &Tensor,
         seed: u64,
         denom: f32,
         lr: f32,
         noise_mult: f32,
-    ) -> Result<Tensor> {
+    ) -> Result<()> {
         let spec = self.spec(prep)?;
         if !matches!(spec.as_ref(), RefExec::Apply) {
             return Err(anyhow!("{} is not an apply executable", prep.key));
@@ -338,11 +621,13 @@ impl Backend for ReferenceBackend {
         if !denom.is_finite() || denom <= 0.0 {
             return Err(anyhow!("apply denom must be positive, got {denom}"));
         }
-        let mut out = params.to_vec();
+        let out = params.as_mut_slice();
         if noise_mult != 0.0 {
+            let mut scratch = self.scratch.borrow_mut();
+            let noise = scratch.noise(out.len());
             let mut rng = ChaChaRng::from_seed_stream(seed, 0, b"applynse");
-            for (pj, &aj) in out.iter_mut().zip(acc.as_slice()) {
-                let z = rng.next_normal() as f32;
+            rng.fill_normals(noise);
+            for ((pj, &aj), &z) in out.iter_mut().zip(acc.as_slice()).zip(noise.iter()) {
                 *pj -= lr * (aj + noise_mult * z) / denom;
             }
         } else {
@@ -350,7 +635,7 @@ impl Backend for ReferenceBackend {
                 *pj -= lr * aj / denom;
             }
         }
-        Ok(Tensor::from_vec(out))
+        Ok(())
     }
 
     fn run_eval(
@@ -372,12 +657,18 @@ impl Backend for ReferenceBackend {
         Self::check_model_vectors(meta, params, None)?;
         Self::check_batch(meta, x, y)?;
         let d = image_dim(meta);
+        let ncls = meta.num_classes;
         let p = params.as_slice();
+        let (w, rest) = p.split_at(ncls * d);
+        let bias = &rest[..ncls];
+        let mut lg = vec![0.0f32; ncls];
         let mut loss_sum = 0.0f32;
         let mut ncorrect = 0.0f32;
         for (i, &yi) in y.iter().enumerate() {
             let xi = &x[i * d..(i + 1) * d];
-            let lg = logits(meta, p, xi);
+            for (cls, slot) in lg.iter_mut().enumerate() {
+                *slot = dot(&w[cls * d..(cls + 1) * d], xi) + bias[cls];
+            }
             loss_sum += logsumexp(&lg) - lg[yi as usize];
             let mut best = 0usize;
             for (j, &v) in lg.iter().enumerate() {
@@ -525,6 +816,56 @@ mod tests {
     }
 
     #[test]
+    fn donated_accum_matches_copying_accum_bitwise() {
+        let (b, meta) = setup();
+        let params = b.init_params(Path::new("."), &meta).unwrap();
+        let (x, y) = batch_of(&meta, 8);
+        let mut acc_init = Tensor::zeros(meta.n_params);
+        acc_init.as_mut_slice()[3] = 0.25;
+        for variant in ["masked", "nonprivate", "ghost"] {
+            let prep = prepare_accum(&b, &meta, variant, 8);
+            let mask = [1.0, 1.0, 0.0, 1.0, 1.0, 1.0, 0.0, 1.0];
+            let copied = b
+                .run_accum(&prep, &meta, &params, &acc_init, &x, &y, &mask)
+                .unwrap();
+            let mut donated = acc_init.clone();
+            let stats = b
+                .run_accum_into(&prep, &meta, &params, &mut donated, &x, &y, &mask)
+                .unwrap();
+            assert_eq!(copied.acc, donated, "{variant}: acc diverged");
+            assert_eq!(copied.loss_sum.to_bits(), stats.loss_sum.to_bits());
+            assert_eq!(copied.sq_norms, stats.sq_norms);
+        }
+    }
+
+    #[test]
+    fn thread_count_never_changes_the_bits() {
+        // The determinism contract: outputs are a pure function of the
+        // inputs, not of the parallelism. Exercise a batch above the
+        // threading gate with every thread count 1..=4.
+        let meta = ReferenceBackend::manifest(0).models[REFERENCE_MODEL].clone();
+        let (x, y) = batch_of(&meta, 32);
+        let mut mask = vec![1.0f32; 32];
+        mask[7] = 0.0;
+        mask[31] = 0.0;
+        let mut reference_out: Option<AccumOut> = None;
+        for threads in 1..=4 {
+            let b = ReferenceBackend::with_threads(0, threads);
+            let prep = prepare_accum(&b, &meta, "masked", 32);
+            let params = b.init_params(Path::new("."), &meta).unwrap();
+            let acc = Tensor::zeros(meta.n_params);
+            let out = b.run_accum(&prep, &meta, &params, &acc, &x, &y, &mask).unwrap();
+            if let Some(want) = &reference_out {
+                assert_eq!(want.acc, out.acc, "threads={threads}: acc diverged");
+                assert_eq!(want.loss_sum.to_bits(), out.loss_sum.to_bits());
+                assert_eq!(want.sq_norms, out.sq_norms);
+            } else {
+                reference_out = Some(out);
+            }
+        }
+    }
+
+    #[test]
     fn apply_without_noise_is_plain_sgd_and_with_noise_is_seeded() {
         let (b, meta) = setup();
         let apply_meta = meta.find_apply().unwrap().clone();
@@ -545,6 +886,25 @@ mod tests {
         assert_eq!(n1, n2);
         assert_ne!(n1, n3);
         assert_ne!(n1, out);
+    }
+
+    #[test]
+    fn donated_apply_matches_copying_apply_bitwise() {
+        let (b, meta) = setup();
+        let apply_meta = meta.find_apply().unwrap().clone();
+        let prep = b.prepare(Path::new("."), &meta, &apply_meta).unwrap();
+        let params = b.init_params(Path::new("."), &meta).unwrap();
+        let mut acc = Tensor::zeros(meta.n_params);
+        acc.as_mut_slice()[5] = -1.5;
+        for noise_mult in [0.0f32, 1.3] {
+            let copied = b
+                .run_apply(&prep, &meta, &params, &acc, 99, 8.0, 0.2, noise_mult)
+                .unwrap();
+            let mut donated = params.clone();
+            b.run_apply_into(&prep, &meta, &mut donated, &acc, 99, 8.0, 0.2, noise_mult)
+                .unwrap();
+            assert_eq!(copied, donated, "noise_mult={noise_mult}");
+        }
     }
 
     #[test]

@@ -70,6 +70,12 @@ impl Tensor {
         &mut self.data
     }
 
+    /// Set every element to `v` (e.g. re-zeroing a donated accumulator
+    /// between optimizer steps without reallocating).
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
     /// Copy the elements out (row-major).
     pub fn to_vec(&self) -> Vec<f32> {
         self.data.clone()
@@ -111,6 +117,14 @@ mod tests {
         assert_eq!(t.as_slice(), &[0.0; 4]);
         t.as_mut_slice()[2] = 5.0;
         assert_eq!(t.into_vec(), vec![0.0, 0.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn fill_resets_in_place() {
+        let mut t = Tensor::vec1(&[1.0, 2.0, 3.0]);
+        t.fill(0.0);
+        assert_eq!(t.as_slice(), &[0.0; 3]);
+        assert_eq!(t.len(), 3);
     }
 
     #[test]

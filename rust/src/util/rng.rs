@@ -144,6 +144,45 @@ impl ChaChaRng {
         r * theta.cos()
     }
 
+    /// Fill `out` with standard normal deviates — bulk Box-Muller for
+    /// the noisy step's P-length Gaussian vector. Exactly equivalent to
+    /// `for o in out { *o = self.next_normal() as f32 }` in **every**
+    /// RNG state (a pending spare is drained first, an odd tail caches
+    /// its sine partner), but pairs are written straight into the
+    /// output with no per-element `Option` bookkeeping, draining each
+    /// 16-word ChaCha keystream block across four pairs. The
+    /// determinism regression tests below pin the equivalence, so
+    /// swapping the scalar loop for the bulk fill cannot change any
+    /// seeded noise.
+    pub fn fill_normals(&mut self, out: &mut [f32]) {
+        const TAU: f64 = std::f64::consts::TAU;
+        if out.is_empty() {
+            return;
+        }
+        let mut i = 0;
+        if let Some(z) = self.spare_normal.take() {
+            out[0] = z as f32;
+            i = 1;
+        }
+        while i + 1 < out.len() {
+            let u = 1.0 - self.next_f64();
+            let v = self.next_f64();
+            let r = (-2.0 * u.ln()).sqrt();
+            let theta = TAU * v;
+            out[i] = (r * theta.cos()) as f32;
+            out[i + 1] = (r * theta.sin()) as f32;
+            i += 2;
+        }
+        if i < out.len() {
+            let u = 1.0 - self.next_f64();
+            let v = self.next_f64();
+            let r = (-2.0 * u.ln()).sqrt();
+            let theta = TAU * v;
+            out[i] = (r * theta.cos()) as f32;
+            self.spare_normal = Some(r * theta.sin());
+        }
+    }
+
     /// Fisher-Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
@@ -220,6 +259,63 @@ mod tests {
         }
         let mean = s1 / n as f64;
         let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn fill_normals_matches_scalar_sequence() {
+        // The bulk fill must reproduce the scalar next_normal stream
+        // exactly — the noisy step's output is part of the seeded-run
+        // determinism contract.
+        for n in [0usize, 1, 2, 7, 64, 129] {
+            let mut bulk_rng = ChaChaRng::from_seed_stream(5, 9, b"normblk\0");
+            let mut buf = vec![0.0f32; n];
+            bulk_rng.fill_normals(&mut buf);
+            let mut scalar_rng = ChaChaRng::from_seed_stream(5, 9, b"normblk\0");
+            for (i, &b) in buf.iter().enumerate() {
+                let want = scalar_rng.next_normal() as f32;
+                assert_eq!(b.to_bits(), want.to_bits(), "n={n} slot {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fill_normals_equivalent_in_every_rng_state() {
+        // Interleaving scalar and bulk draws must stay on the scalar
+        // stream: a pending spare is drained into the fill, and an odd
+        // tail leaves its sine partner cached for the next scalar call.
+        for prefix in [0usize, 1, 2, 3] {
+            for n in [0usize, 1, 5, 8] {
+                let mut a = ChaChaRng::from_seed_stream(6, 2, b"normmix\0");
+                let mut b = ChaChaRng::from_seed_stream(6, 2, b"normmix\0");
+                for _ in 0..prefix {
+                    let za = a.next_normal();
+                    let zb = b.next_normal();
+                    assert_eq!(za.to_bits(), zb.to_bits());
+                }
+                let mut buf = vec![0.0f32; n];
+                a.fill_normals(&mut buf);
+                for (i, &got) in buf.iter().enumerate() {
+                    let want = b.next_normal() as f32;
+                    assert_eq!(got.to_bits(), want.to_bits(), "prefix={prefix} n={n} slot {i}");
+                }
+                // Both sides continue on the same stream afterwards.
+                let za = (a.next_normal() as f32).to_bits();
+                let zb = (b.next_normal() as f32).to_bits();
+                assert_eq!(za, zb, "prefix={prefix} n={n} post-fill");
+            }
+        }
+    }
+
+    #[test]
+    fn fill_normals_moments() {
+        let mut rng = ChaChaRng::from_seed_stream(13, 0, b"normblk\0");
+        let mut buf = vec![0.0f32; 50_000];
+        rng.fill_normals(&mut buf);
+        let n = buf.len() as f64;
+        let mean = buf.iter().map(|&z| z as f64).sum::<f64>() / n;
+        let var = buf.iter().map(|&z| (z as f64) * (z as f64)).sum::<f64>() / n - mean * mean;
         assert!(mean.abs() < 0.02, "mean {mean}");
         assert!((var - 1.0).abs() < 0.03, "var {var}");
     }

@@ -6,8 +6,39 @@
 use dp_shortcuts::coordinator::sampler::{Sampler, ShuffleSampler};
 use dp_shortcuts::coordinator::trainer::per_step_noise_seed;
 use dp_shortcuts::privacy::RdpAccountant;
-use dp_shortcuts::runtime::Tensor;
+use dp_shortcuts::runtime::{Backend, ModelMeta, ReferenceBackend, Tensor, REFERENCE_MODEL};
+use dp_shortcuts::util::rng::ChaChaRng;
 use proptest::prelude::*;
+use std::path::Path;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+fn reference_meta() -> ModelMeta {
+    ReferenceBackend::manifest(0).models[REFERENCE_MODEL].clone()
+}
+
+/// Deterministic batch (x, y) for the reference model from a seed.
+fn synth_batch(meta: &ModelMeta, batch: usize, data_seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let d = meta.image * meta.image * meta.channels;
+    let mut rng = ChaChaRng::from_seed_stream(data_seed, 0, b"propdata");
+    let x: Vec<f32> = (0..batch * d).map(|_| rng.next_normal() as f32).collect();
+    let y: Vec<i32> = (0..batch)
+        .map(|_| (rng.next_u32() % meta.num_classes as u32) as i32)
+        .collect();
+    (x, y)
+}
+
+/// Non-trivial starting accumulator (mid-logical-batch state).
+fn synth_acc(meta: &ModelMeta, acc_seed: u64) -> Tensor {
+    let mut rng = ChaChaRng::from_seed_stream(acc_seed, 1, b"propacc\0");
+    let mut acc = Tensor::zeros(meta.n_params);
+    for v in acc.as_mut_slice().iter_mut() {
+        *v = (0.1 * rng.next_normal()) as f32;
+    }
+    acc
+}
 
 proptest! {
     /// Within one run the per-step noise seed is injective in `step` —
@@ -59,5 +90,116 @@ proptest! {
         prop_assert_eq!(t.len(), data.len());
         prop_assert_eq!(t.to_vec(), data.clone());
         prop_assert_eq!(Tensor::from_vec(data.clone()).into_vec(), data);
+    }
+}
+
+// Donation + determinism invariants of the execution ABI. Determinism
+// here is a DP-correctness property, not hygiene: the accumulator and
+// the seeded noise feed the privacy accounting, so the donated
+// (`run_*_into`) hot path and the copying path must agree *bitwise*,
+// and threading must never perturb a single bit.
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(48))]
+
+    /// The donated accum path is bitwise-identical to the copying path
+    /// across every clipping variant, batch size, mask pattern
+    /// (including all-masked), data, and accumulator state.
+    #[test]
+    fn donated_accum_bitwise_matches_copying(
+        variant_idx in 0usize..4,
+        batch_idx in 0usize..5,
+        mask_bits in prop_oneof![Just(0u32), Just(u32::MAX), proptest::num::u32::ANY],
+        data_seed in proptest::num::u64::ANY,
+        acc_seed in proptest::num::u64::ANY,
+    ) {
+        let variant = ["nonprivate", "masked", "ghost", "bk"][variant_idx];
+        let batch = [1usize, 2, 4, 8, 16][batch_idx];
+        let backend = ReferenceBackend::new(0);
+        let meta = reference_meta();
+        let exe = meta.find_accum(variant, batch, "f32").unwrap().clone();
+        let prep = backend.prepare(Path::new("."), &meta, &exe).unwrap();
+        let params = backend.init_params(Path::new("."), &meta).unwrap();
+        let (x, y) = synth_batch(&meta, batch, data_seed);
+        let mask: Vec<f32> = (0..batch)
+            .map(|i| if (mask_bits >> (i % 32)) & 1 == 1 { 1.0 } else { 0.0 })
+            .collect();
+        let acc0 = synth_acc(&meta, acc_seed);
+
+        let copied = backend
+            .run_accum(&prep, &meta, &params, &acc0, &x, &y, &mask)
+            .unwrap();
+        let mut donated = acc0.clone();
+        let stats = backend
+            .run_accum_into(&prep, &meta, &params, &mut donated, &x, &y, &mask)
+            .unwrap();
+
+        prop_assert_eq!(bits(copied.acc.as_slice()), bits(donated.as_slice()));
+        prop_assert_eq!(copied.loss_sum.to_bits(), stats.loss_sum.to_bits());
+        prop_assert_eq!(bits(&copied.sq_norms), bits(&stats.sq_norms));
+        // All-masked batches must leave the accumulator untouched.
+        if mask.iter().all(|m| *m == 0.0) {
+            prop_assert_eq!(bits(donated.as_slice()), bits(acc0.as_slice()));
+        }
+    }
+
+    /// The donated apply path is bitwise-identical to the copying path
+    /// across noise seeds, with and without the Gaussian path.
+    #[test]
+    fn donated_apply_bitwise_matches_copying(
+        noise_seed in proptest::num::u64::ANY,
+        acc_seed in proptest::num::u64::ANY,
+        noise_on in proptest::bool::ANY,
+        denom in 0.5f32..64.0,
+        lr in 1e-4f32..0.5,
+    ) {
+        let backend = ReferenceBackend::new(0);
+        let meta = reference_meta();
+        let exe = meta.find_apply().unwrap().clone();
+        let prep = backend.prepare(Path::new("."), &meta, &exe).unwrap();
+        let params = backend.init_params(Path::new("."), &meta).unwrap();
+        let acc = synth_acc(&meta, acc_seed);
+        let noise_mult = if noise_on { 1.1 } else { 0.0 };
+
+        let copied = backend
+            .run_apply(&prep, &meta, &params, &acc, noise_seed, denom, lr, noise_mult)
+            .unwrap();
+        let mut donated = params.clone();
+        backend
+            .run_apply_into(&prep, &meta, &mut donated, &acc, noise_seed, denom, lr, noise_mult)
+            .unwrap();
+        prop_assert_eq!(bits(copied.as_slice()), bits(donated.as_slice()));
+    }
+
+    /// Threaded accum is bitwise-reproducible: the worker-thread count
+    /// is a wall-clock knob only. Batch 32 sits above the threading
+    /// gate, so 1-vs-N genuinely compares sequential to parallel.
+    #[test]
+    fn accum_bits_independent_of_thread_count(
+        threads in 2usize..5,
+        mask_bits in proptest::num::u32::ANY,
+        data_seed in proptest::num::u64::ANY,
+    ) {
+        let batch = 32usize;
+        let meta = reference_meta();
+        let (x, y) = synth_batch(&meta, batch, data_seed);
+        let mask: Vec<f32> = (0..batch)
+            .map(|i| if (mask_bits >> (i % 32)) & 1 == 1 { 1.0 } else { 0.0 })
+            .collect();
+        let run = |nthreads: usize| {
+            let backend = ReferenceBackend::with_threads(0, nthreads);
+            let exe = meta.find_accum("masked", batch, "f32").unwrap().clone();
+            let prep = backend.prepare(Path::new("."), &meta, &exe).unwrap();
+            let params = backend.init_params(Path::new("."), &meta).unwrap();
+            let mut acc = Tensor::zeros(meta.n_params);
+            let stats = backend
+                .run_accum_into(&prep, &meta, &params, &mut acc, &x, &y, &mask)
+                .unwrap();
+            (acc, stats)
+        };
+        let (acc_seq, stats_seq) = run(1);
+        let (acc_par, stats_par) = run(threads);
+        prop_assert_eq!(bits(acc_seq.as_slice()), bits(acc_par.as_slice()));
+        prop_assert_eq!(stats_seq.loss_sum.to_bits(), stats_par.loss_sum.to_bits());
+        prop_assert_eq!(bits(&stats_seq.sq_norms), bits(&stats_par.sq_norms));
     }
 }

@@ -229,6 +229,49 @@ fn training_reduces_loss_on_the_synthetic_task() {
 }
 
 #[test]
+fn eval_coverage_is_reported_exactly() {
+    // The eval executable's batch size is fixed at AOT time (32 here),
+    // so a request that is not a multiple can only cover the full
+    // batches — the report must say exactly how many examples the
+    // metrics averaged over instead of silently dropping the tail.
+    let run = |eval_examples: u32| {
+        let rt = Runtime::reference();
+        let mut cfg = base_config("masked", BatchingMode::Masked);
+        cfg.steps = 1;
+        cfg.eval_examples = eval_examples;
+        Trainer::new(&rt, cfg).unwrap().run().unwrap()
+    };
+    // 70 requested, eval batch 32: exactly 64 covered.
+    let rep = run(70);
+    assert_eq!(rep.eval_covered, 64);
+    assert!(rep.eval_loss.is_some() && rep.eval_accuracy.is_some());
+    // Exact multiple: full coverage.
+    let rep = run(64);
+    assert_eq!(rep.eval_covered, 64);
+    // Below one eval batch: nothing can run — no metrics, coverage 0.
+    let rep = run(10);
+    assert_eq!(rep.eval_covered, 0);
+    assert!(rep.eval_loss.is_none() && rep.eval_accuracy.is_none());
+    // Eval disabled: coverage 0.
+    let rep = run(0);
+    assert_eq!(rep.eval_covered, 0);
+}
+
+#[test]
+fn accum_throughput_meter_lands_in_the_report() {
+    let rt = Runtime::reference();
+    let cfg = base_config("masked", BatchingMode::Masked);
+    let rep = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    assert!(rep.accum_throughput_aggregate > 0.0);
+    let s = rep.accum_throughput.expect("accum calls ran");
+    assert!(s.median > 0.0 && s.n == rep.accum_samples.len());
+    assert!(s.ci_low <= s.median && s.median <= s.ci_high);
+    let json = rep.to_json().unwrap();
+    assert!(json.contains("\"accum_throughput_aggregate\""));
+    assert!(json.contains("\"eval_covered\""));
+}
+
+#[test]
 fn report_serializes_to_json() {
     let rt = Runtime::reference();
     let mut cfg = base_config("masked", BatchingMode::Masked);
