@@ -6,8 +6,10 @@
 //! (variable logical batch sizes — the part most implementations skip),
 //! the [`batcher::BatchMemoryManager`] splits logical batches into
 //! fixed-shape physical batches with Algorithm-2 masks, and the
-//! [`trainer::Trainer`] drives the AOT-compiled accum/apply executables
-//! through the PJRT runtime while timing each section (paper Table 2).
+//! step-driven [`trainer::TrainSession`] (wrapped by
+//! [`trainer::Trainer`]) drives the accum/apply executables through a
+//! bound-buffer runtime session while timing each section (paper
+//! Table 2), with checkpoint/resume built into the loop.
 
 pub mod batcher;
 pub mod config;

@@ -2,20 +2,38 @@
 //! over any execution [`Backend`](crate::runtime::Backend), with
 //! per-section timing.
 //!
-//! Per optimizer step:
+//! The hot loop lives in one place: the step-driven [`TrainSession`].
+//! A session binds an [`ExecSession`] (params + gradient accumulator
+//! owned by the backend session for the whole run — the
+//! `donate_argnums` analogue) and exposes:
 //!
-//! 1. **sample**  — Poisson-sample the logical batch (L3, [`PoissonSampler`])
-//! 2. **split**   — into physical batches + masks ([`BatchMemoryManager`];
-//!                  masked mode = Algorithm 2, variable mode = naive JAX)
-//! 3. **accum**   — per physical batch: fetch data, run the `accum`
-//!                  executable (fwd + per-example bwd + clip + accumulate)
-//! 4. **apply**   — at the step boundary: run `apply` (noise + SGD step)
-//! 5. **account** — record the (q, sigma) step in the RDP accountant
+//! * [`TrainSession::step`] — one optimizer step:
+//!   1. **sample**  — Poisson-sample the logical batch ([`PoissonSampler`])
+//!   2. **split**   — into physical batches + masks ([`BatchMemoryManager`];
+//!                    masked mode = Algorithm 2, variable mode = naive JAX)
+//!   3. **accum**   — per physical batch: fetch data, run the `accum`
+//!                    executable (fwd + per-example bwd + clip + accumulate)
+//!   4. **apply**   — at the step boundary: run `apply` (noise + SGD step)
+//!   5. **account** — record the (q, sigma) step in the RDP accountant
+//! * [`TrainSession::eval`] — held-out evaluation at the current
+//!   parameters (mid-run cadence or final).
+//! * [`TrainSession::checkpoint`] / [`TrainSession::resume`] — the
+//!   save → drop → load → resume seam; a resumed session is
+//!   bitwise-identical to an uninterrupted run (property-tested in
+//!   `rust/tests/session_api.rs`).
+//! * [`TrainSession::finish`] — close out into a [`TrainReport`].
+//!
+//! [`Trainer::run`] is a thin loop over a session; the bench entry
+//! points (`bench_accum`/`bench_apply`) and `benchreport.rs` drive the
+//! same session hot path, so there is exactly one copy of the loop.
 //!
 //! The per-section wall-clock breakdown is this codebase's analogue of
 //! the paper's Nsight profile (Table 2); compile time is tracked
 //! separately (Fig. A.2) and excluded from throughput, mirroring how the
 //! paper discounts JAX compilation when comparing steady-state rates.
+//! Every compile this loop causes — accum, apply, *and eval* — is
+//! attributed to `SectionTimes::compile` from the single
+//! `Prepared::compile_seconds` lookup.
 
 use crate::coordinator::batcher::{BatchMemoryManager, BatchingMode, PhysicalBatch};
 use crate::coordinator::config::TrainConfig;
@@ -24,7 +42,9 @@ use crate::data::SyntheticDataset;
 use crate::metrics::{Summary, ThroughputMeter};
 use crate::privacy::rdp::StreamingAccountant;
 use crate::privacy::{calibrate_sigma, RdpAccountant};
-use crate::runtime::{ModelRuntime, Runtime, Tensor};
+use crate::runtime::{
+    AccumArgs, ApplyArgs, ExecSession, ModelRuntime, Prepared, Runtime, Tensor,
+};
 use crate::util::rng::ChaChaRng;
 use anyhow::{anyhow, Result};
 use serde::{Deserialize, Serialize};
@@ -75,7 +95,7 @@ impl SectionTimes {
 }
 
 /// One optimizer step's log entry.
-#[derive(Debug, Clone, Serialize)]
+#[derive(Debug, Clone, Serialize, Deserialize)]
 pub struct StepLog {
     pub step: u64,
     /// True sampled logical batch size (varies under Poisson!).
@@ -133,7 +153,110 @@ impl TrainReport {
     }
 }
 
-/// Drives one configured training run over the runtime.
+/// Portable mid-run state of a [`TrainSession`] — everything a fresh
+/// process needs to continue a run bitwise-identically: the step
+/// counter, the flat parameter vector (via the session's `read_params`
+/// checkpoint seam), and the completed step logs. Sampling, per-step
+/// noise seeds, and the accountant replay all re-derive from
+/// `(TrainConfig, step)`, so they need no state here.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+pub struct TrainCheckpoint {
+    /// Fingerprint of every config field that shapes the trajectory
+    /// (model/variant/mode/dtype, dataset size, sampling rate, physical
+    /// batch, lr, clip norm, resolved sigma, seed). [`TrainSession::resume`]
+    /// rejects a checkpoint whose fingerprint does not match the config
+    /// it is resumed under — otherwise the accountant would replay the
+    /// completed compositions at the *new* `(q, sigma)` and silently
+    /// mis-report epsilon (a DP-correctness violation, not a nuisance).
+    pub fingerprint: String,
+    /// Optimizer steps already taken.
+    pub step: u64,
+    /// Flat parameter vector after `step` steps.
+    pub params: Vec<f32>,
+    /// Per-step logs of the completed steps (so the finished report is
+    /// identical to an uninterrupted run's).
+    pub steps: Vec<StepLog>,
+}
+
+impl TrainCheckpoint {
+    pub fn to_json(&self) -> serde_json::Result<String> {
+        serde_json::to_string(self)
+    }
+
+    pub fn from_json(text: &str) -> serde_json::Result<Self> {
+        serde_json::from_str(text)
+    }
+}
+
+/// Resolve the noise multiplier for a config: explicit, or calibrated
+/// to the (epsilon, delta) target (paper Table A2 style).
+fn resolve_sigma(config: &TrainConfig) -> Result<f64> {
+    if !config.is_private() {
+        return Ok(0.0);
+    }
+    match config.noise_multiplier {
+        Some(s) => Ok(s),
+        None => calibrate_sigma(
+            config.target_epsilon,
+            config.delta,
+            config.sampling_rate,
+            config.steps,
+        )
+        .map_err(|e| anyhow!(e)),
+    }
+}
+
+fn dtype_of(config: &TrainConfig) -> &'static str {
+    if config.bf16 {
+        "bf16"
+    } else {
+        "f32"
+    }
+}
+
+/// The trajectory-shaping identity of a run, for checkpoint/resume
+/// validation. `{:?}` on the floats is the shortest round-trip (ryu)
+/// form, so distinct values never collide through formatting.
+fn config_fingerprint(config: &TrainConfig, sigma: f64) -> String {
+    format!(
+        "v1|{}|{}|{:?}|{}|N={}|q={:?}|B={}|lr={:?}|C={:?}|sigma={:?}|seed={}",
+        config.model,
+        config.variant,
+        config.mode,
+        dtype_of(config),
+        config.dataset_size,
+        config.sampling_rate,
+        config.physical_batch,
+        config.lr,
+        config.clip_norm,
+        sigma,
+        config.seed,
+    )
+}
+
+fn training_dataset(config: &TrainConfig, model: &ModelRuntime) -> SyntheticDataset {
+    SyntheticDataset::new(
+        config.dataset_size,
+        model.meta().num_classes as u32,
+        model.meta().image,
+        model.meta().channels,
+        config.seed,
+    )
+}
+
+fn held_out_dataset(config: &TrainConfig, model: &ModelRuntime, examples: u32) -> SyntheticDataset {
+    SyntheticDataset::new(
+        config.dataset_size + examples,
+        model.meta().num_classes as u32,
+        model.meta().image,
+        model.meta().channels,
+        config.seed,
+    )
+}
+
+/// Drives configured training/bench runs over the runtime. Thin: the
+/// hot loop is [`TrainSession`]; this type owns the config + dataset
+/// and hands out sessions.
 pub struct Trainer<'rt> {
     runtime: &'rt Runtime,
     model: ModelRuntime,
@@ -144,13 +267,7 @@ pub struct Trainer<'rt> {
 impl<'rt> Trainer<'rt> {
     pub fn new(runtime: &'rt Runtime, config: TrainConfig) -> Result<Self> {
         let model = runtime.model(&config.model)?;
-        let dataset = SyntheticDataset::new(
-            config.dataset_size,
-            model.meta().num_classes as u32,
-            model.meta().image,
-            model.meta().channels,
-            config.seed,
-        );
+        let dataset = training_dataset(&config, &model);
         Ok(Self { runtime, model, config, dataset })
     }
 
@@ -161,239 +278,42 @@ impl<'rt> Trainer<'rt> {
     /// Resolve the noise multiplier: explicit, or calibrated to the
     /// (epsilon, delta) target (paper Table A2 style).
     pub fn resolve_sigma(&self) -> Result<f64> {
-        if !self.config.is_private() {
-            return Ok(0.0);
-        }
-        match self.config.noise_multiplier {
-            Some(s) => Ok(s),
-            None => calibrate_sigma(
-                self.config.target_epsilon,
-                self.config.delta,
-                self.config.sampling_rate,
-                self.config.steps,
-            )
-            .map_err(|e| anyhow!(e)),
-        }
+        resolve_sigma(&self.config)
     }
 
     fn dtype(&self) -> &'static str {
-        if self.config.bf16 {
-            "bf16"
-        } else {
-            "f32"
-        }
+        dtype_of(&self.config)
     }
 
-    /// Run the configured number of optimizer steps.
+    /// Open a fresh step-driven session for this configuration. The
+    /// trainer's already-built model view and dataset are handed to the
+    /// session (clones are cheap: the dataset's class patterns are the
+    /// only real payload and the backend rides the shared `Arc`).
+    pub fn session(&self) -> Result<TrainSession<'rt>> {
+        TrainSession::build(
+            self.runtime,
+            self.config.clone(),
+            self.model.clone(),
+            self.dataset.clone(),
+            None,
+        )
+    }
+
+    /// Run the configured number of optimizer steps: a thin loop over
+    /// one [`TrainSession`].
     pub fn run(&self) -> Result<TrainReport> {
-        let cfg = &self.config;
-        let sigma = self.resolve_sigma()?;
-        let sampler = PoissonSampler::new(cfg.dataset_size, cfg.sampling_rate, cfg.seed);
-        let bmm = BatchMemoryManager::new(cfg.physical_batch, cfg.mode);
-        let available = self.model.accum_batches(&cfg.variant, self.dtype());
-        if available.is_empty() {
-            return Err(anyhow!(
-                "no accum artifacts for {} variant={} dtype={}",
-                cfg.model,
-                cfg.variant,
-                self.dtype()
-            ));
+        let mut session = self.session()?;
+        while !session.done() {
+            session.step()?;
         }
-
-        let mut sections = SectionTimes::default();
-        let mut meter = ThroughputMeter::new();
-        let mut steps_log = Vec::new();
-        let mut accountant = StreamingAccountant::new(RdpAccountant::default());
-
-        let compiled_before = self.runtime.compile_records().len();
-        // Pre-compile the fixed-shape executables (apply + the masked
-        // accum shape) so their one-time compile cost lands in
-        // `sections.compile`, not in the steady-state sections — the
-        // same discount the paper applies to JAX compilation.
-        if cfg.mode == BatchingMode::Masked {
-            let prep =
-                self.model.prepare_accum(&cfg.variant, cfg.physical_batch, self.dtype())?;
-            sections.compile += prep.compile_seconds.unwrap_or(0.0);
-        }
-        let apply_prep = self.model.prepare_apply()?;
-        sections.compile += apply_prep.compile_seconds.unwrap_or(0.0);
-        let mut params = {
-            let t0 = Instant::now();
-            let p = self.model.init_params()?;
-            sections.data += t0.elapsed().as_secs_f64();
-            p
-        };
-        // denom = E[L] (Algorithm 1's 1/|L| with the expected batch — the
-        // standard Opacus convention). Only the degenerate q = 0 case is
-        // substituted (1.0, keeping noise-only steps well-defined);
-        // fractional E[L] < 1 is a legitimate divisor and passes through.
-        let expected = cfg.expected_logical_batch() as f32;
-        let denom = if expected > 0.0 { expected } else { 1.0 };
-        let noise_mult = (sigma * cfg.clip_norm) as f32;
-
-        // The gradient accumulator is allocated once and *donated* to
-        // every accum call (updated in place, re-zeroed per step) — the
-        // `donate_argnums` analogue: the hot loop never copies the
-        // P-length vector.
-        let mut acc = self.model.zero_acc();
-
-        for step in 0..cfg.steps {
-            let t0 = Instant::now();
-            let logical = sampler.sample(step);
-            let batches: Vec<PhysicalBatch> = match cfg.mode {
-                BatchingMode::Masked => bmm.split(&logical),
-                BatchingMode::Variable => {
-                    BatchMemoryManager::split_naive(&logical, &available)
-                }
-            };
-            sections.sampling += t0.elapsed().as_secs_f64();
-
-            acc.fill(0.0);
-            let mut loss_sum = 0.0f64;
-            let mut computed = 0usize;
-            for pb in &batches {
-                let b = pb.indices.len();
-                // One cache lookup: compiles on first use of this size
-                // (the naive-JAX recompile cost, Fig A.2) and reports
-                // the compile time it spent, if any, so the attribution
-                // cannot drift from the execution.
-                let prep = self.model.prepare_accum(&cfg.variant, b, self.dtype())?;
-                sections.compile += prep.compile_seconds.unwrap_or(0.0);
-
-                let t = Instant::now();
-                let (x, y) = self.dataset.batch(&pb.indices);
-                sections.data += t.elapsed().as_secs_f64();
-
-                let t = Instant::now();
-                let stats =
-                    self.model.run_accum_into(&prep, &params, &mut acc, &x, &y, &pb.mask)?;
-                let dt = t.elapsed().as_secs_f64();
-                sections.accum += dt;
-                meter.record_secs(pb.real_count(), dt);
-                loss_sum += stats.loss_sum as f64;
-                computed += b;
-            }
-
-            let t = Instant::now();
-            let seed = per_step_noise_seed(cfg.seed, step);
-            self.model.run_apply_into(
-                &apply_prep,
-                &mut params,
-                &acc,
-                seed,
-                denom,
-                cfg.lr as f32,
-                noise_mult,
-            )?;
-            sections.apply += t.elapsed().as_secs_f64();
-
-            if cfg.is_private() && sigma > 0.0 {
-                accountant.record_step(cfg.sampling_rate, sigma);
-            }
-            steps_log.push(StepLog {
-                step,
-                logical_batch: logical.len(),
-                physical_batches: batches.len(),
-                computed_examples: computed,
-                loss: loss_sum / logical.len().max(1) as f64,
-            });
-        }
-
-        // Held-out evaluation with the fixed-size eval executable.
-        let (eval_loss, eval_accuracy, eval_covered) = if cfg.eval_examples > 0 {
-            self.evaluate(&params, cfg.eval_examples)?
-        } else {
-            (None, None, 0)
-        };
-
-        let real: f64 = steps_log.iter().map(|s| s.logical_batch as f64).sum();
-        let comp: f64 = steps_log.iter().map(|s| s.computed_examples as f64).sum();
-        let total = sections.training_total();
-        let compiles = self.runtime.compile_records()[compiled_before..]
-            .iter()
-            .map(|r| (r.path.clone(), r.seconds))
-            .collect();
-        Ok(TrainReport {
-            model: cfg.model.clone(),
-            variant: cfg.variant.clone(),
-            mode: cfg.mode,
-            noise_multiplier: sigma,
-            // sigma == 0 on a private variant (debug/ablation runs) means
-            // no DP guarantee at all: report eps = infinity, not 0.
-            epsilon_spent: if !cfg.is_private() {
-                0.0
-            } else if sigma > 0.0 {
-                accountant.epsilon(cfg.delta)
-            } else {
-                f64::INFINITY
-            },
-            delta: cfg.delta,
-            steps: steps_log,
-            sections,
-            throughput: if total > 0.0 { real / total } else { 0.0 },
-            computed_throughput: if total > 0.0 { comp / total } else { 0.0 },
-            accum_throughput_aggregate: meter.aggregate(),
-            accum_throughput: if meter.is_empty() {
-                None
-            } else {
-                Some(meter.median_ci(cfg.seed))
-            },
-            accum_samples: meter.samples().to_vec(),
-            eval_loss,
-            eval_accuracy,
-            eval_covered,
-            compiles,
-            final_params: params.to_vec(),
-        })
-    }
-
-    /// Evaluate on held-out examples: same data distribution (same
-    /// class patterns), indices disjoint from the training range.
-    /// Returns `(loss, accuracy, covered)` where `covered` is the exact
-    /// number of examples averaged over: the eval executable's batch
-    /// size is fixed at AOT time, so only `floor(examples / eb)` full
-    /// batches can run — the remainder is reported, never silently
-    /// folded into the average.
-    fn evaluate(
-        &self,
-        params: &Tensor,
-        examples: u32,
-    ) -> Result<(Option<f64>, Option<f64>, u32)> {
-        let Some(eb) = self.model.eval_batch() else {
-            return Ok((None, None, 0));
-        };
-        let held_out = SyntheticDataset::new(
-            self.config.dataset_size + examples,
-            self.model.meta().num_classes as u32,
-            self.model.meta().image,
-            self.model.meta().channels,
-            self.config.seed,
-        );
-        let offset = self.config.dataset_size;
-        let mut loss = 0.0f64;
-        let mut correct = 0.0f64;
-        let mut n = 0u32;
-        let mut start = 0u32;
-        while start + eb as u32 <= examples {
-            let idx: Vec<u32> = (offset + start..offset + start + eb as u32).collect();
-            let (x, y) = held_out.batch(&idx);
-            let (ls, nc) = self.model.run_eval(params, &x, &y)?;
-            loss += ls as f64;
-            correct += nc as f64;
-            n += eb as u32;
-            start += eb as u32;
-        }
-        if n == 0 {
-            return Ok((None, None, 0));
-        }
-        Ok((Some(loss / n as f64), Some(correct / n as f64), n))
+        session.finish()
     }
 
     /// Steady-state accum throughput sweep for one (variant, batch):
     /// `repeats` timed executions of the same compiled executable on
-    /// fresh data, through the donating (`run_accum_into`) hot path —
-    /// the measurement behind Figures 1/2/4/6. Returns examples/second
-    /// per call.
+    /// fresh data, through the session hot path (bound buffers, zero
+    /// per-call P-length copies) — the measurement behind Figures
+    /// 1/2/4/6. Returns examples/second per call.
     pub fn bench_accum(
         &self,
         variant: &str,
@@ -401,8 +321,7 @@ impl<'rt> Trainer<'rt> {
         repeats: usize,
     ) -> Result<Vec<f64>> {
         let prep = self.model.prepare_accum(variant, batch, self.dtype())?;
-        let params = self.model.init_params()?;
-        let mut acc = self.model.zero_acc();
+        let mut sess = self.model.open_session(self.model.init_params()?)?;
         let mask = vec![1.0f32; batch];
         let mut samples = Vec::with_capacity(repeats);
         for r in 0..repeats {
@@ -410,11 +329,11 @@ impl<'rt> Trainer<'rt> {
                 .map(|i| bench_index(r, batch, i, self.config.dataset_size))
                 .collect();
             let (x, y) = self.dataset.batch(&idx);
-            // Re-zero the donated accumulator outside the timed region
+            // Re-zero the bound accumulator outside the timed region
             // so every call measures the same accumulate workload.
-            acc.fill(0.0);
+            sess.zero_acc()?;
             let t = Instant::now();
-            let _ = self.model.run_accum_into(&prep, &params, &mut acc, &x, &y, &mask)?;
+            let _ = sess.accum(&prep, &AccumArgs { x: &x, y: &y, mask: &mask })?;
             let dt = t.elapsed().as_secs_f64();
             if dt > 0.0 {
                 samples.push(batch as f64 / dt);
@@ -424,24 +343,462 @@ impl<'rt> Trainer<'rt> {
     }
 
     /// Steady-state apply throughput: `repeats` timed executions of the
-    /// noisy step through the donating hot path, with the Gaussian path
+    /// noisy step through the session hot path, with the Gaussian path
     /// exercised (`noise_mult = 1`) and `lr = 0` so the parameters stay
     /// put across repeats. Returns calls/second per call.
     pub fn bench_apply(&self, repeats: usize) -> Result<Vec<f64>> {
         let prep = self.model.prepare_apply()?;
-        let mut params = self.model.init_params()?;
-        let acc = self.model.zero_acc();
+        let mut sess = self.model.open_session(self.model.init_params()?)?;
         let mut samples = Vec::with_capacity(repeats);
         for r in 0..repeats {
             let seed = per_step_noise_seed(self.config.seed, r as u64);
+            let args = ApplyArgs { seed, denom: 1.0, lr: 0.0, noise_mult: 1.0 };
             let t = Instant::now();
-            self.model.run_apply_into(&prep, &mut params, &acc, seed, 1.0, 0.0, 1.0)?;
+            sess.apply(&prep, &args)?;
             let dt = t.elapsed().as_secs_f64();
             if dt > 0.0 {
                 samples.push(1.0 / dt);
             }
         }
         Ok(samples)
+    }
+}
+
+/// A resumable, step-driven training run over a bound-buffer
+/// [`ExecSession`]. See the module docs for the step anatomy.
+///
+/// The exec session's lifetime is tied to the [`Runtime`] (not to the
+/// owned [`ModelRuntime`] view), which is what lets this struct own its
+/// model view, config, and dataset while borrowing only the runtime.
+pub struct TrainSession<'rt> {
+    runtime: &'rt Runtime,
+    model: ModelRuntime,
+    config: TrainConfig,
+    dataset: SyntheticDataset,
+    /// Held-out eval dataset, synthesized once on the first eval call
+    /// (mid-run eval cadence must not re-generate the class patterns
+    /// per call).
+    held_out: Option<SyntheticDataset>,
+    exec: Box<dyn ExecSession + 'rt>,
+    sampler: PoissonSampler,
+    bmm: BatchMemoryManager,
+    /// Batch sizes lowered for (variant, dtype) — the Variable-mode
+    /// chunking menu.
+    available: Vec<usize>,
+    apply_prep: Prepared,
+    accountant: StreamingAccountant,
+    sections: SectionTimes,
+    meter: ThroughputMeter,
+    steps_log: Vec<StepLog>,
+    sigma: f64,
+    denom: f32,
+    noise_mult: f32,
+    /// Next step index (== number of steps taken, counting resumed-over
+    /// ones).
+    step: u64,
+    /// Compile-record count at session open, for the report's compile
+    /// attribution slice.
+    compiled_before: usize,
+    /// Step-log entries restored from a checkpoint (0 for a fresh
+    /// session). Those steps carry no section time in this process, so
+    /// throughput denominators must exclude them.
+    restored_steps: usize,
+}
+
+impl<'rt> TrainSession<'rt> {
+    /// Open a fresh session at step 0 with the backend's initial
+    /// parameters.
+    pub fn new(runtime: &'rt Runtime, config: TrainConfig) -> Result<Self> {
+        let model = runtime.model(&config.model)?;
+        let dataset = training_dataset(&config, &model);
+        Self::build(runtime, config, model, dataset, None)
+    }
+
+    /// Reopen a session from a [`TrainCheckpoint`]: parameters are
+    /// written back through the session's resume seam, the privacy
+    /// accountant replays the completed steps, and stepping continues
+    /// at `checkpoint.step` — bitwise-identical to never having
+    /// stopped. Wall-clock sections and throughput meters restart at
+    /// zero (they describe this process's work, not the whole run).
+    pub fn resume(
+        runtime: &'rt Runtime,
+        config: TrainConfig,
+        checkpoint: TrainCheckpoint,
+    ) -> Result<Self> {
+        let model = runtime.model(&config.model)?;
+        let dataset = training_dataset(&config, &model);
+        Self::build(runtime, config, model, dataset, Some(checkpoint))
+    }
+
+    fn build(
+        runtime: &'rt Runtime,
+        config: TrainConfig,
+        model: ModelRuntime,
+        dataset: SyntheticDataset,
+        start: Option<TrainCheckpoint>,
+    ) -> Result<Self> {
+        let sigma = resolve_sigma(&config)?;
+        let sampler = PoissonSampler::new(config.dataset_size, config.sampling_rate, config.seed);
+        let bmm = BatchMemoryManager::new(config.physical_batch, config.mode);
+        let available = model.accum_batches(&config.variant, dtype_of(&config));
+        if available.is_empty() {
+            return Err(anyhow!(
+                "no accum artifacts for {} variant={} dtype={}",
+                config.model,
+                config.variant,
+                dtype_of(&config)
+            ));
+        }
+
+        let mut sections = SectionTimes::default();
+        let compiled_before = runtime.compile_records().len();
+        // Pre-compile the fixed-shape executables (apply + the masked
+        // accum shape) so their one-time compile cost lands in
+        // `sections.compile`, not in the steady-state sections — the
+        // same discount the paper applies to JAX compilation.
+        if config.mode == BatchingMode::Masked {
+            let prep =
+                model.prepare_accum(&config.variant, config.physical_batch, dtype_of(&config))?;
+            sections.compile += prep.compile_seconds.unwrap_or(0.0);
+        }
+        let apply_prep = model.prepare_apply()?;
+        sections.compile += apply_prep.compile_seconds.unwrap_or(0.0);
+
+        let mut accountant = StreamingAccountant::new(RdpAccountant::default());
+        let (step, steps_log, params) = match start {
+            None => {
+                let t0 = Instant::now();
+                let p = model.init_params()?;
+                sections.data += t0.elapsed().as_secs_f64();
+                (0, Vec::new(), p)
+            }
+            Some(ckpt) => {
+                let want = config_fingerprint(&config, sigma);
+                if ckpt.fingerprint != want {
+                    return Err(anyhow!(
+                        "checkpoint was taken under a different configuration \
+                         (checkpoint {:?}, resume config {:?}); resuming would \
+                         mis-replay the privacy accounting",
+                        ckpt.fingerprint,
+                        want
+                    ));
+                }
+                if ckpt.step > config.steps {
+                    return Err(anyhow!(
+                        "checkpoint is already past this config: step {} > steps {}",
+                        ckpt.step,
+                        config.steps
+                    ));
+                }
+                if ckpt.params.len() != model.n_params() {
+                    return Err(anyhow!(
+                        "checkpoint params length {} != n_params {}",
+                        ckpt.params.len(),
+                        model.n_params()
+                    ));
+                }
+                // A truncated/edited checkpoint would otherwise resume
+                // with accountant, step logs, and throughput all
+                // disagreeing about how many steps happened.
+                if ckpt.steps.len() as u64 != ckpt.step {
+                    return Err(anyhow!(
+                        "checkpoint is inconsistent: step counter {} but {} step logs",
+                        ckpt.step,
+                        ckpt.steps.len()
+                    ));
+                }
+                // Replay the completed compositions so epsilon_spent at
+                // finish() equals the uninterrupted run's.
+                if config.is_private() && sigma > 0.0 {
+                    for _ in 0..ckpt.step {
+                        accountant.record_step(config.sampling_rate, sigma);
+                    }
+                }
+                (ckpt.step, ckpt.steps, Tensor::from_vec(ckpt.params))
+            }
+        };
+        // The session owns params + accumulator from here on (the
+        // donate_argnums analogue): the hot loop never copies the
+        // P-length vectors.
+        let exec = runtime.open_session(&config.model, params)?;
+
+        // denom = E[L] (Algorithm 1's 1/|L| with the expected batch — the
+        // standard Opacus convention). Only the degenerate q = 0 case is
+        // substituted (1.0, keeping noise-only steps well-defined);
+        // fractional E[L] < 1 is a legitimate divisor and passes through.
+        let expected = config.expected_logical_batch() as f32;
+        let denom = if expected > 0.0 { expected } else { 1.0 };
+        let noise_mult = (sigma * config.clip_norm) as f32;
+        let restored_steps = steps_log.len();
+
+        Ok(Self {
+            runtime,
+            model,
+            config,
+            dataset,
+            held_out: None,
+            exec,
+            sampler,
+            bmm,
+            available,
+            apply_prep,
+            accountant,
+            sections,
+            meter: ThroughputMeter::new(),
+            steps_log,
+            sigma,
+            denom,
+            noise_mult,
+            step,
+            compiled_before,
+            restored_steps,
+        })
+    }
+
+    /// The model view this session drives (checkpoint file helpers,
+    /// artifact queries).
+    pub fn model(&self) -> &ModelRuntime {
+        &self.model
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.config
+    }
+
+    /// Resolved noise multiplier for this run.
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    /// Next step index (== optimizer steps completed so far, counting
+    /// steps a checkpoint resumed over).
+    pub fn step_index(&self) -> u64 {
+        self.step
+    }
+
+    /// True once the configured number of steps has run. [`Self::step`]
+    /// may be driven past this — the config's step count bounds
+    /// [`Trainer::run`], not the session.
+    pub fn done(&self) -> bool {
+        self.step >= self.config.steps
+    }
+
+    /// Sections timed so far (compile/sampling/data/accum/apply).
+    pub fn sections(&self) -> SectionTimes {
+        self.sections
+    }
+
+    /// Epsilon spent so far at the configured delta (mid-run budget
+    /// monitoring). Matches the finished report's accounting.
+    pub fn epsilon_spent(&self) -> f64 {
+        if !self.config.is_private() {
+            0.0
+        } else if self.sigma > 0.0 {
+            self.accountant.epsilon(self.config.delta)
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Copy the current parameters out of the session (the checkpoint
+    /// seam — a device-to-host transfer on a device-resident backend).
+    pub fn read_params(&self) -> Result<Tensor> {
+        self.exec.read_params()
+    }
+
+    /// Replace the session's parameters (the resume/warm-start seam).
+    pub fn write_params(&mut self, params: Tensor) -> Result<()> {
+        self.exec.write_params(params)
+    }
+
+    /// Snapshot the resumable state: step counter, parameters, and the
+    /// completed step logs. Serialize with
+    /// [`TrainCheckpoint::to_json`]; reopen with [`Self::resume`].
+    ///
+    /// Refuses to snapshot a diverged run: JSON has no NaN/inf, so
+    /// serde would silently write `null`s that only fail at resume —
+    /// surfacing the corruption at save time instead.
+    pub fn checkpoint(&self) -> Result<TrainCheckpoint> {
+        let params = self.exec.read_params()?.into_vec();
+        if params.iter().any(|p| !p.is_finite()) {
+            return Err(anyhow!(
+                "refusing to checkpoint non-finite parameters (diverged run); \
+                 JSON cannot represent NaN/inf"
+            ));
+        }
+        if self.steps_log.iter().any(|s| !s.loss.is_finite()) {
+            return Err(anyhow!(
+                "refusing to checkpoint non-finite step losses (diverged run); \
+                 JSON cannot represent NaN/inf"
+            ));
+        }
+        Ok(TrainCheckpoint {
+            fingerprint: config_fingerprint(&self.config, self.sigma),
+            step: self.step,
+            params,
+            steps: self.steps_log.clone(),
+        })
+    }
+
+    /// Take one optimizer step (see the module docs for the anatomy).
+    pub fn step(&mut self) -> Result<StepLog> {
+        let t0 = Instant::now();
+        let logical = self.sampler.sample(self.step);
+        let batches: Vec<PhysicalBatch> = match self.config.mode {
+            BatchingMode::Masked => self.bmm.split(&logical),
+            BatchingMode::Variable => BatchMemoryManager::split_naive(&logical, &self.available),
+        };
+        self.sections.sampling += t0.elapsed().as_secs_f64();
+
+        self.exec.zero_acc()?;
+        let mut loss_sum = 0.0f64;
+        let mut computed = 0usize;
+        for pb in &batches {
+            let b = pb.indices.len();
+            // One cache lookup: compiles on first use of this size
+            // (the naive-JAX recompile cost, Fig A.2) and reports
+            // the compile time it spent, if any, so the attribution
+            // cannot drift from the execution.
+            let prep =
+                self.model.prepare_accum(&self.config.variant, b, dtype_of(&self.config))?;
+            self.sections.compile += prep.compile_seconds.unwrap_or(0.0);
+
+            let t = Instant::now();
+            let (x, y) = self.dataset.batch(&pb.indices);
+            self.sections.data += t.elapsed().as_secs_f64();
+
+            let t = Instant::now();
+            let stats = self.exec.accum(&prep, &AccumArgs { x: &x, y: &y, mask: &pb.mask })?;
+            let dt = t.elapsed().as_secs_f64();
+            self.sections.accum += dt;
+            self.meter.record_secs(pb.real_count(), dt);
+            loss_sum += stats.loss_sum as f64;
+            computed += b;
+        }
+
+        let t = Instant::now();
+        let args = ApplyArgs {
+            seed: per_step_noise_seed(self.config.seed, self.step),
+            denom: self.denom,
+            lr: self.config.lr as f32,
+            noise_mult: self.noise_mult,
+        };
+        self.exec.apply(&self.apply_prep, &args)?;
+        self.sections.apply += t.elapsed().as_secs_f64();
+
+        if self.config.is_private() && self.sigma > 0.0 {
+            self.accountant.record_step(self.config.sampling_rate, self.sigma);
+        }
+        let log = StepLog {
+            step: self.step,
+            logical_batch: logical.len(),
+            physical_batches: batches.len(),
+            computed_examples: computed,
+            loss: loss_sum / logical.len().max(1) as f64,
+        };
+        self.step += 1;
+        self.steps_log.push(log.clone());
+        Ok(log)
+    }
+
+    /// Held-out evaluation at the current parameters: same data
+    /// distribution (same class patterns), indices disjoint from the
+    /// training range. Returns `(loss, accuracy, covered)` where
+    /// `covered` is the exact number of examples averaged over: the
+    /// eval executable's batch size is fixed at AOT time, so only
+    /// `floor(examples / eb)` full batches can run — the remainder is
+    /// reported, never silently folded into the average.
+    ///
+    /// The eval executable is prepared **once** per call and its
+    /// compile time (first call only) attributed to
+    /// `SectionTimes::compile`, exactly like the accum/apply paths —
+    /// the old per-batch `prepare_eval` was never attributed at all.
+    pub fn eval(&mut self) -> Result<(Option<f64>, Option<f64>, u32)> {
+        self.evaluate()
+    }
+
+    fn evaluate(&mut self) -> Result<(Option<f64>, Option<f64>, u32)> {
+        let examples = self.config.eval_examples;
+        let Some(eb) = self.model.eval_batch() else {
+            return Ok((None, None, 0));
+        };
+        if eb == 0 || (eb as u32) > examples {
+            return Ok((None, None, 0));
+        }
+        let prep = self.model.prepare_eval()?;
+        self.sections.compile += prep.compile_seconds.unwrap_or(0.0);
+        let held_out = self
+            .held_out
+            .get_or_insert_with(|| held_out_dataset(&self.config, &self.model, examples));
+        let offset = self.config.dataset_size;
+        let mut loss = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut n = 0u32;
+        let mut start = 0u32;
+        // The guard above ensures eb <= examples, so at least one full
+        // batch always runs (n >= eb > 0).
+        while start + eb as u32 <= examples {
+            let idx: Vec<u32> = (offset + start..offset + start + eb as u32).collect();
+            let (x, y) = held_out.batch(&idx);
+            let (ls, nc) = self.exec.eval(&prep, &x, &y)?;
+            loss += ls as f64;
+            correct += nc as f64;
+            n += eb as u32;
+            start += eb as u32;
+        }
+        Ok((Some(loss / n as f64), Some(correct / n as f64), n))
+    }
+
+    /// Close the session out into a [`TrainReport`]: run the configured
+    /// held-out evaluation, read the final parameters back through the
+    /// checkpoint seam, and aggregate throughput + privacy accounting.
+    pub fn finish(mut self) -> Result<TrainReport> {
+        let (eval_loss, eval_accuracy, eval_covered) = if self.config.eval_examples > 0 {
+            self.evaluate()?
+        } else {
+            (None, None, 0)
+        };
+        let epsilon_spent = self.epsilon_spent();
+        let final_params = self.exec.read_params()?.into_vec();
+        // Throughput denominators describe *this process's* timed work:
+        // steps restored from a checkpoint carry no section time here,
+        // so only the live steps enter the rate (the restored logs still
+        // appear in `steps` for the full training record).
+        let live = &self.steps_log[self.restored_steps.min(self.steps_log.len())..];
+        let real: f64 = live.iter().map(|s| s.logical_batch as f64).sum();
+        let comp: f64 = live.iter().map(|s| s.computed_examples as f64).sum();
+        let total = self.sections.training_total();
+        let compiles = self.runtime.compile_records()[self.compiled_before..]
+            .iter()
+            .map(|r| (r.path.clone(), r.seconds))
+            .collect();
+        Ok(TrainReport {
+            model: self.config.model.clone(),
+            variant: self.config.variant.clone(),
+            mode: self.config.mode,
+            noise_multiplier: self.sigma,
+            // sigma == 0 on a private variant (debug/ablation runs) means
+            // no DP guarantee at all: epsilon_spent() reports infinity
+            // there, never 0.
+            epsilon_spent,
+            delta: self.config.delta,
+            steps: self.steps_log,
+            sections: self.sections,
+            throughput: if total > 0.0 { real / total } else { 0.0 },
+            computed_throughput: if total > 0.0 { comp / total } else { 0.0 },
+            accum_throughput_aggregate: self.meter.aggregate(),
+            accum_throughput: if self.meter.is_empty() {
+                None
+            } else {
+                Some(self.meter.median_ci(self.config.seed))
+            },
+            accum_samples: self.meter.samples().to_vec(),
+            eval_loss,
+            eval_accuracy,
+            eval_covered,
+            compiles,
+            final_params,
+        })
     }
 }
 
@@ -526,5 +883,30 @@ mod tests {
                 "folded seed collision at step {step}"
             );
         }
+    }
+
+    #[test]
+    fn checkpoint_json_roundtrip_is_exact() {
+        let ckpt = TrainCheckpoint {
+            fingerprint: "v1|test".into(),
+            step: 3,
+            params: vec![0.1f32, -2.5e-8, 3.0, f32::MIN_POSITIVE],
+            steps: vec![StepLog {
+                step: 2,
+                logical_batch: 17,
+                physical_batches: 3,
+                computed_examples: 24,
+                loss: 2.302_585_092_994_046,
+            }],
+        };
+        let json = ckpt.to_json().unwrap();
+        let back = TrainCheckpoint::from_json(&json).unwrap();
+        assert_eq!(back.step, ckpt.step);
+        // serde_json uses ryu shortest-roundtrip formatting: every f32
+        // and f64 must come back bit-exact (the resume contract).
+        let bits: Vec<u32> = ckpt.params.iter().map(|f| f.to_bits()).collect();
+        let back_bits: Vec<u32> = back.params.iter().map(|f| f.to_bits()).collect();
+        assert_eq!(bits, back_bits);
+        assert_eq!(back.steps[0].loss.to_bits(), ckpt.steps[0].loss.to_bits());
     }
 }

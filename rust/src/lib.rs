@@ -16,8 +16,8 @@
 //! the PJRT C API behind the `pjrt` feature.
 //!
 //! ```text
-//! L3 (this crate)   sampler -> batcher -> backend.run_accum* ->
-//!                   backend.run_apply -> accountant.step()
+//! L3 (this crate)   sampler -> batcher -> session.accum ->
+//!                   session.apply -> accountant.step()
 //! L2 (jax, AOT)     model fwd/bwd variants, flat-param ABI
 //! L1 (pallas, AOT)  clip-mask-accumulate / ghost-norm / noisy-step
 //! ```
@@ -39,6 +39,10 @@ pub mod util;
 pub use coordinator::batcher::{BatchMemoryManager, BatchingMode, PhysicalBatch};
 pub use coordinator::config::TrainConfig;
 pub use coordinator::sampler::{PoissonSampler, Sampler, ShuffleSampler};
-pub use coordinator::trainer::{SectionTimes, TrainReport, Trainer};
+pub use coordinator::trainer::{
+    SectionTimes, TrainCheckpoint, TrainReport, TrainSession, Trainer,
+};
 pub use privacy::{DpParams, RdpAccountant};
-pub use runtime::{Backend, ReferenceBackend, Runtime, Tensor};
+pub use runtime::{
+    AccumArgs, ApplyArgs, Backend, ExecSession, ReferenceBackend, Runtime, Tensor,
+};

@@ -22,7 +22,7 @@ use anyhow::{anyhow, Result};
 use dp_shortcuts::benchreport::{self, BenchReport, SweepOptions};
 use dp_shortcuts::coordinator::batcher::BatchingMode;
 use dp_shortcuts::coordinator::config::TrainConfig;
-use dp_shortcuts::coordinator::trainer::Trainer;
+use dp_shortcuts::coordinator::trainer::TrainSession;
 use dp_shortcuts::privacy::{calibrate_sigma, RdpAccountant};
 use dp_shortcuts::report;
 use dp_shortcuts::runtime::Runtime;
@@ -32,9 +32,16 @@ use std::path::{Path, PathBuf};
 const USAGE: &str = "usage: dpshort <list|train|bench|plan|account|scale|report> [--flags]
   common flags: --artifacts DIR (default: artifacts)
                 --backend reference|pjrt (default: pjrt if artifacts exist, else reference)
+                --threads N (reference-backend accum workers; 0 = auto;
+                             wall-clock only, bits never change)
   train/bench:  --model NAME --variant V --batch B --steps N --rate Q
                 --dataset N --lr LR --sigma S --epsilon E --delta D
                 --seed S --bf16 --naive-mode --eval N --json
+  train:        --load-params FILE  warm-start from saved parameters
+                                    (fresh step counter and privacy
+                                    accounting; exact resume is the
+                                    TrainCheckpoint API)
+                --save-params FILE  write the final parameters
   bench:        accum/apply throughput sweep -> BENCH_throughput.json
                 --repeats R --quick --out FILE (default BENCH_throughput.json)
                 --model/--variant/--batch restrict the sweep
@@ -75,13 +82,20 @@ fn config_from(args: &Args, rt: &Runtime) -> Result<TrainConfig> {
     Ok(c)
 }
 
-/// Resolve the runtime from `--backend`/`--artifacts` (see module docs).
+/// Resolve the runtime from `--backend`/`--artifacts`/`--threads` (see
+/// module docs). `--threads` wires `ReferenceBackend::with_threads` —
+/// a wall-clock knob only (bits never change) — and is rejected on the
+/// PJRT path, where worker threading belongs to the PJRT client.
 fn load_runtime(args: &Args, artifacts: &str) -> Result<Runtime> {
+    let threads: usize = args.get_parse_or("threads", 0).map_err(|e| anyhow!(e))?;
     match args.get("backend") {
-        Some("reference") => Ok(Runtime::reference()),
+        Some("reference") => Ok(Runtime::reference_with_threads(0, threads)),
+        Some("pjrt") if threads > 0 => {
+            Err(anyhow!("--threads applies to the reference backend only"))
+        }
         Some("pjrt") => Runtime::load(artifacts),
         Some(other) => Err(anyhow!("unknown backend {other:?} (reference|pjrt)")),
-        None => Runtime::auto(artifacts),
+        None => Runtime::auto_with_threads(artifacts, threads),
     }
 }
 
@@ -117,8 +131,27 @@ fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
         cfg.steps,
         cfg.expected_logical_batch()
     );
-    let trainer = Trainer::new(rt, cfg.clone())?;
-    let rep = trainer.run()?;
+    // Step-driven session: the same hot loop Trainer::run wraps, but
+    // with the checkpoint seam exposed for --load-params/--save-params.
+    let mut session = TrainSession::new(rt, cfg.clone())?;
+    if let Some(p) = args.get("load-params") {
+        let params = session.model().load_params(Path::new(p))?;
+        session.write_params(params)?;
+        eprintln!(
+            "warm start from {p}: step counter and privacy accounting begin fresh \
+             (exact resume is the TrainCheckpoint API)"
+        );
+    }
+    while !session.done() {
+        session.step()?;
+    }
+    if let Some(p) = args.get("save-params") {
+        // The session's own checkpoint seam: read_params is the exact
+        // post-training state (finish() only evaluates after this).
+        session.model().save_params(&session.read_params()?, Path::new(p))?;
+        eprintln!("saved params to {p}");
+    }
+    let rep = session.finish()?;
     if args.get_bool("json") {
         println!("{}", rep.to_json()?);
         return Ok(());

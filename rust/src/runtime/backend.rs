@@ -1,49 +1,63 @@
-//! The execution-backend seam (the "multi-backend" refactor).
+//! The execution-backend seam: typed call structs, stateful sessions
+//! with bound buffers, and the legacy free-function entry points.
 //!
 //! A [`Backend`] owns compilation/caching of a model's executables and
 //! the three calls of the flat-parameter ABI (DESIGN.md §3):
 //!
 //! ```text
-//! accum(params[P], acc[P], x[B,H,W,C], y[B], mask[B])
+//! accum(params[P], acc[P], AccumArgs { x[B,H,W,C], y[B], mask[B] })
 //!       -> (acc'[P], loss_sum, sq_norms[B])
-//! apply(params[P], acc[P], seed, denom, lr, noise_mult) -> params'[P]
+//! apply(params[P], acc[P], ApplyArgs { seed, denom, lr, noise_mult })
+//!       -> params'[P]
 //! eval (params[P], x[B,H,W,C], y[B]) -> (loss_sum, ncorrect)
 //! ```
 //!
-//! The accum/apply calls exist in two forms:
+//! ## Sessions (the primary API)
+//!
+//! [`Backend::open_session`] binds the round-tripping state — the flat
+//! parameter vector and the gradient accumulator — to an
+//! [`ExecSession`] that *owns* those buffers for the life of a run.
+//! This is the Rust analogue of how the paper's JAX implementation gets
+//! its speed: compiled executables keep params and the accumulator
+//! device-resident across calls (`donate_argnums` / XLA input-output
+//! aliasing), so the hot loop never marshals a P-length vector. A
+//! caller drives the session (`accum`, `apply`, `zero_acc`, `eval`)
+//! and only crosses the host boundary at the checkpoint seam
+//! (`read_params` / `write_params`).
+//!
+//! The default `open_session` returns a host-buffered session over the
+//! backend's donating entry points — exactly right for the reference
+//! backend (whose donating kernels are genuinely in-place) and the
+//! correct host-side shape for PJRT until real bindings keep the
+//! buffers on device (then `PjrtBackend` overrides `open_session` and
+//! the same trainer code becomes zero-marshalling).
+//!
+//! ## Legacy entry points (migration shims)
+//!
+//! The free-function forms predate sessions and remain so every
+//! existing caller and proptest keeps passing during the migration:
 //!
 //! * **copying** (`run_accum`, `run_apply`) — the caller keeps its
-//!   buffers; the backend returns fresh ones.
+//!   buffers; the backend returns fresh ones. Required methods.
 //! * **donating** (`run_accum_into`, `run_apply_into`) — the caller
-//!   *donates* the round-tripping buffer (the gradient accumulator for
-//!   accum, the parameters for apply) and the backend updates it in
-//!   place. This is the Rust analogue of JAX's `donate_argnums` / XLA
-//!   input-output aliasing: the hot loop never pays a P-length copy per
-//!   call. Both forms must produce bitwise-identical results — the
-//!   proptests in `rust/tests/proptest_invariants.rs` enforce it.
+//!   *donates* the round-tripping buffer and the backend updates it in
+//!   place. Defaults run the copying form and *move* the result into
+//!   the donated buffer.
 //!
-//! The copying forms are required (so a backend can never accidentally
-//! ship neither); the donating forms default to "run the copying form,
-//! move the result into the donated buffer" — already zero-copy for a
-//! backend that returns a fresh `Tensor` per call (a move, not a
-//! memcpy). Backends with a genuinely in-place kernel (the reference
-//! backend) override the donating forms and implement the copying forms
-//! as clone + donate.
+//! Sessions and the legacy forms execute the same kernels on the same
+//! buffers, so all three (session, donating, copying) are
+//! **bitwise-identical** — the proptests in
+//! `rust/tests/proptest_invariants.rs` and
+//! `rust/tests/session_api.rs` enforce it.
 //!
-//! Two implementations ship:
-//!
-//! * [`super::reference::ReferenceBackend`] — pure-Rust linear+softmax
-//!   reference model (the Rust port of `python/compile/kernels/ref.py`);
-//!   always available, default.
-//! * `super::pjrt::PjrtBackend` (feature `pjrt`) — executes AOT-lowered
-//!   HLO artifacts through the `xla` bindings.
-//!
-//! The trait is object-safe; the runtime facade holds `Rc<dyn Backend>`.
+//! The trait is object-safe; the runtime facade holds
+//! `Arc<dyn Backend + Send + Sync>` so sessions can later be driven
+//! from worker threads.
 
 use super::compile_cache::CompileRecord;
 use super::manifest::{ExecutableMeta, ModelMeta};
 use super::tensor::{read_flat_f32, Tensor};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::path::Path;
 
 /// Handle to a prepared (compiled-and-cached) executable.
@@ -57,7 +71,41 @@ pub struct Prepared {
     pub compile_seconds: Option<f64>,
 }
 
-/// Decoded outputs of one accum call.
+/// Batch operands of one accum call (the Algorithm 1/2 inner loop).
+///
+/// Borrowed views, grouped so every accum entry point — session or
+/// legacy — takes one struct instead of three trailing slices.
+#[derive(Debug, Clone, Copy)]
+pub struct AccumArgs<'a> {
+    /// Row-major `[B, H, W, C]` input images.
+    pub x: &'a [f32],
+    /// `[B]` class labels.
+    pub y: &'a [i32],
+    /// `[B]` Algorithm-2 masks (0 for padding slots).
+    pub mask: &'a [f32],
+}
+
+impl AccumArgs<'_> {
+    /// Batch size `B` (one label per example).
+    pub fn batch(&self) -> usize {
+        self.y.len()
+    }
+}
+
+/// Scalar operands of the once-per-logical-batch noise + SGD step.
+#[derive(Debug, Clone, Copy)]
+pub struct ApplyArgs {
+    /// Full-width 64-bit per-step noise seed.
+    pub seed: u64,
+    /// The Algorithm-1 `|L|` divisor (expected logical batch).
+    pub denom: f32,
+    /// Learning rate.
+    pub lr: f32,
+    /// `sigma * C` (0 for the non-private baseline).
+    pub noise_mult: f32,
+}
+
+/// Decoded outputs of one copying accum call.
 #[derive(Debug, Clone)]
 pub struct AccumOut {
     /// New gradient accumulator; round-trips into the next accum call.
@@ -68,8 +116,8 @@ pub struct AccumOut {
     pub sq_norms: Vec<f32>,
 }
 
-/// Scalar outputs of one *donating* accum call — the accumulator itself
-/// is updated in place in the donated buffer.
+/// Scalar outputs of one bound-buffer accum call — the accumulator
+/// itself stays resident in the session (or the donated buffer).
 #[derive(Debug, Clone)]
 pub struct AccumStats {
     /// Sum of masked per-example losses.
@@ -78,8 +126,106 @@ pub struct AccumStats {
     pub sq_norms: Vec<f32>,
 }
 
+/// A stateful execution session: the bound-buffer view of one model.
+///
+/// The session owns the flat parameter vector and the gradient
+/// accumulator for the life of a run (for a device backend: persistent
+/// device buffers; for the host backends: two `Tensor`s updated in
+/// place). All calls take a [`Prepared`] handle so compile attribution
+/// stays a caller concern, exactly as with the legacy entry points.
+///
+/// Determinism contract: a session driven through any interleaving of
+/// `accum`/`apply`/`zero_acc` is bitwise-identical to the same call
+/// sequence through the legacy entry points with host-held buffers.
+///
+/// `Send` is a supertrait: a session is exactly the thing a worker
+/// thread owns, so the `Arc<dyn Backend>` sharing story (see
+/// [`Backend`]) would be moot if sessions could not cross threads.
+pub trait ExecSession: Send {
+    /// One gradient-accumulation call; the bound accumulator is updated
+    /// in place. On error the bound buffers are left unmodified.
+    fn accum(&mut self, prep: &Prepared, args: &AccumArgs<'_>) -> Result<AccumStats>;
+
+    /// The noise + SGD step; the bound parameters are updated in place
+    /// from the bound accumulator. On error the bound buffers are left
+    /// unmodified.
+    fn apply(&mut self, prep: &Prepared, args: &ApplyArgs) -> Result<()>;
+
+    /// Re-zero the bound accumulator (the per-optimizer-step reset —
+    /// `Tensor::fill` on the host; a device kernel launch on a
+    /// device-resident backend, hence fallible).
+    fn zero_acc(&mut self) -> Result<()>;
+
+    /// Forward-only evaluation against the bound parameters:
+    /// `(loss_sum, ncorrect)` over the batch.
+    fn eval(&self, prep: &Prepared, x: &[f32], y: &[i32]) -> Result<(f32, f32)>;
+
+    /// Copy the bound parameters out — the checkpoint seam (a
+    /// device-to-host transfer for a device-resident backend).
+    fn read_params(&self) -> Result<Tensor>;
+
+    /// Replace the bound parameters — the resume seam (a host-to-device
+    /// transfer for a device-resident backend). Fails if the length
+    /// does not match the model.
+    fn write_params(&mut self, params: Tensor) -> Result<()>;
+}
+
+/// Host-buffered [`ExecSession`] over a backend's donating entry
+/// points: the trait default. For backends with genuinely in-place
+/// kernels (the reference backend) this *is* the bound-buffer hot path;
+/// for literal-marshalling backends (offline PJRT) it is the correct
+/// host-side shape until real bindings pin the buffers on device.
+struct HostSession<'a, B: ?Sized> {
+    backend: &'a B,
+    meta: ModelMeta,
+    params: Tensor,
+    acc: Tensor,
+}
+
+impl<B: Backend + ?Sized> ExecSession for HostSession<'_, B> {
+    fn accum(&mut self, prep: &Prepared, args: &AccumArgs<'_>) -> Result<AccumStats> {
+        self.backend
+            .run_accum_into(prep, &self.meta, &self.params, &mut self.acc, args)
+    }
+
+    fn apply(&mut self, prep: &Prepared, args: &ApplyArgs) -> Result<()> {
+        self.backend
+            .run_apply_into(prep, &self.meta, &mut self.params, &self.acc, args)
+    }
+
+    fn zero_acc(&mut self) -> Result<()> {
+        self.acc.fill(0.0);
+        Ok(())
+    }
+
+    fn eval(&self, prep: &Prepared, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        self.backend.run_eval(prep, &self.meta, &self.params, x, y)
+    }
+
+    fn read_params(&self) -> Result<Tensor> {
+        Ok(self.params.clone())
+    }
+
+    fn write_params(&mut self, params: Tensor) -> Result<()> {
+        if params.len() != self.meta.n_params {
+            return Err(anyhow!(
+                "write_params length {} != n_params {}",
+                params.len(),
+                self.meta.n_params
+            ));
+        }
+        self.params = params;
+        Ok(())
+    }
+}
+
 /// An execution backend: compiles artifacts and runs the ABI calls.
-pub trait Backend {
+///
+/// `Send + Sync` are supertraits: backends are shared as
+/// `Arc<dyn Backend + Send + Sync>` across (future) worker threads,
+/// and the supertrait is what lets the default [`Backend::open_session`]
+/// hand out `Send` sessions that borrow the backend.
+pub trait Backend: Send + Sync {
     /// Short backend name ("reference" | "pjrt").
     fn name(&self) -> &'static str;
 
@@ -100,21 +246,41 @@ pub trait Backend {
         read_flat_f32(&dir.join(&meta.init_params), meta.n_params)
     }
 
-    /// One gradient-accumulation call (the Algorithm 1/2 inner loop),
-    /// copying form: the input accumulator is untouched and a fresh one
-    /// is returned. `x` is row-major `[B, H, W, C]`; `mask` the
-    /// Algorithm-2 masks. An in-place backend implements this as
-    /// clone + [`Self::run_accum_into`].
-    #[allow(clippy::too_many_arguments)]
+    /// Open a stateful session that *owns* `params` (donated here) and
+    /// a zeroed gradient accumulator for the life of a run. The default
+    /// is the host-buffered session over the donating entry points; a
+    /// device-resident backend overrides this to upload the buffers
+    /// once and keep them on device across calls.
+    fn open_session(
+        &self,
+        dir: &Path,
+        meta: &ModelMeta,
+        params: Tensor,
+    ) -> Result<Box<dyn ExecSession + '_>> {
+        let _ = dir; // host sessions need no artifact directory
+        if params.len() != meta.n_params {
+            return Err(anyhow!(
+                "session params length {} != n_params {}",
+                params.len(),
+                meta.n_params
+            ));
+        }
+        let acc = Tensor::zeros(meta.n_params);
+        Ok(Box::new(HostSession { backend: self, meta: meta.clone(), params, acc }))
+    }
+
+    /// One gradient-accumulation call, copying form: the input
+    /// accumulator is untouched and a fresh one is returned. An
+    /// in-place backend implements this as clone +
+    /// [`Self::run_accum_into`]. Legacy migration shim — new code
+    /// drives [`Self::open_session`] instead.
     fn run_accum(
         &self,
         prep: &Prepared,
         meta: &ModelMeta,
         params: &Tensor,
         acc: &Tensor,
-        x: &[f32],
-        y: &[i32],
-        mask: &[f32],
+        args: &AccumArgs<'_>,
     ) -> Result<AccumOut>;
 
     /// Donating form of the accum call: `acc` is updated in place (the
@@ -125,38 +291,30 @@ pub trait Backend {
     /// Default: runs the copying form and *moves* the returned tensor
     /// into `acc` — zero-copy already for backends minting a fresh
     /// result; override only with a genuinely in-place kernel.
-    #[allow(clippy::too_many_arguments)]
     fn run_accum_into(
         &self,
         prep: &Prepared,
         meta: &ModelMeta,
         params: &Tensor,
         acc: &mut Tensor,
-        x: &[f32],
-        y: &[i32],
-        mask: &[f32],
+        args: &AccumArgs<'_>,
     ) -> Result<AccumStats> {
-        let out = self.run_accum(prep, meta, params, acc, x, y, mask)?;
+        let out = self.run_accum(prep, meta, params, acc, args)?;
         *acc = out.acc;
         Ok(AccumStats { loss_sum: out.loss_sum, sq_norms: out.sq_norms })
     }
 
-    /// The once-per-logical-batch noise + SGD step, copying form. `seed`
-    /// is the full-width 64-bit per-step noise seed; `denom` the
-    /// Algorithm-1 `|L|` divisor; `noise_mult` is `sigma * C` (0 for
-    /// non-private). An in-place backend implements this as
-    /// clone + [`Self::run_apply_into`].
-    #[allow(clippy::too_many_arguments)]
+    /// The once-per-logical-batch noise + SGD step, copying form. An
+    /// in-place backend implements this as clone +
+    /// [`Self::run_apply_into`]. Legacy migration shim — new code
+    /// drives [`Self::open_session`] instead.
     fn run_apply(
         &self,
         prep: &Prepared,
         meta: &ModelMeta,
         params: &Tensor,
         acc: &Tensor,
-        seed: u64,
-        denom: f32,
-        lr: f32,
-        noise_mult: f32,
+        args: &ApplyArgs,
     ) -> Result<Tensor>;
 
     /// Donating form of the apply call: `params` is updated in place.
@@ -165,19 +323,15 @@ pub trait Backend {
     ///
     /// Default: runs the copying form and *moves* the returned tensor
     /// into `params`; override only with a genuinely in-place kernel.
-    #[allow(clippy::too_many_arguments)]
     fn run_apply_into(
         &self,
         prep: &Prepared,
         meta: &ModelMeta,
         params: &mut Tensor,
         acc: &Tensor,
-        seed: u64,
-        denom: f32,
-        lr: f32,
-        noise_mult: f32,
+        args: &ApplyArgs,
     ) -> Result<()> {
-        *params = self.run_apply(prep, meta, params, acc, seed, denom, lr, noise_mult)?;
+        *params = self.run_apply(prep, meta, params, acc, args)?;
         Ok(())
     }
 
@@ -196,9 +350,9 @@ pub trait Backend {
 mod tests {
     use super::*;
 
-    /// Minimal copying-only backend: the donating forms must come from
-    /// the trait defaults (this is the path a literal-marshalling
-    /// backend like PJRT runs in production).
+    /// Minimal copying-only backend: the donating forms and the session
+    /// must come from the trait defaults (this is the path a
+    /// literal-marshalling backend like PJRT runs in production).
     struct CopyOnly;
 
     impl Backend for CopyOnly {
@@ -231,16 +385,14 @@ mod tests {
             _meta: &ModelMeta,
             _params: &Tensor,
             acc: &Tensor,
-            _x: &[f32],
-            y: &[i32],
-            mask: &[f32],
+            args: &AccumArgs<'_>,
         ) -> Result<AccumOut> {
             let mut out = acc.to_vec();
-            out[0] += mask.iter().sum::<f32>();
+            out[0] += args.mask.iter().sum::<f32>();
             Ok(AccumOut {
                 acc: Tensor::from_vec(out),
-                loss_sum: y.len() as f32,
-                sq_norms: vec![0.5; y.len()],
+                loss_sum: args.batch() as f32,
+                sq_norms: vec![0.5; args.batch()],
             })
         }
 
@@ -251,16 +403,13 @@ mod tests {
             _meta: &ModelMeta,
             params: &Tensor,
             acc: &Tensor,
-            _seed: u64,
-            denom: f32,
-            lr: f32,
-            _noise_mult: f32,
+            args: &ApplyArgs,
         ) -> Result<Tensor> {
             let out: Vec<f32> = params
                 .as_slice()
                 .iter()
                 .zip(acc.as_slice())
-                .map(|(p, a)| p - lr * a / denom)
+                .map(|(p, a)| p - args.lr * a / args.denom)
                 .collect();
             Ok(Tensor::from_vec(out))
         }
@@ -269,11 +418,11 @@ mod tests {
             &self,
             _prep: &Prepared,
             _meta: &ModelMeta,
-            _params: &Tensor,
+            params: &Tensor,
             _x: &[f32],
             y: &[i32],
         ) -> Result<(f32, f32)> {
-            Ok((y.len() as f32, 0.0))
+            Ok((y.len() as f32 + params.as_slice()[0], 0.0))
         }
     }
 
@@ -291,19 +440,24 @@ mod tests {
         }
     }
 
+    fn toy_prep() -> Prepared {
+        Prepared { key: "toy".into(), compile_seconds: None }
+    }
+
     #[test]
     fn default_donating_forms_match_copying_forms() {
         let b = CopyOnly;
         let meta = toy_meta();
-        let prep = Prepared { key: "toy".into(), compile_seconds: None };
+        let prep = toy_prep();
         let params = Tensor::vec1(&[1.0, 2.0, 3.0]);
         let acc = Tensor::vec1(&[4.0, 0.0, -1.0]);
         let (x, y, mask) = (vec![0.0f32; 2], vec![0, 1], vec![1.0f32, 0.0]);
+        let args = AccumArgs { x: &x, y: &y, mask: &mask };
 
-        let copied = b.run_accum(&prep, &meta, &params, &acc, &x, &y, &mask).unwrap();
+        let copied = b.run_accum(&prep, &meta, &params, &acc, &args).unwrap();
         let mut donated = acc.clone();
         let stats = b
-            .run_accum_into(&prep, &meta, &params, &mut donated, &x, &y, &mask)
+            .run_accum_into(&prep, &meta, &params, &mut donated, &args)
             .unwrap();
         assert_eq!(copied.acc, donated, "default donating accum must equal copying");
         assert_eq!(copied.loss_sum, stats.loss_sum);
@@ -311,13 +465,69 @@ mod tests {
         // The donated buffer was genuinely updated in place.
         assert_eq!(donated.as_slice()[0], 5.0);
 
-        let applied = b
-            .run_apply(&prep, &meta, &params, &acc, 7, 2.0, 0.5, 0.0)
-            .unwrap();
+        let apply = ApplyArgs { seed: 7, denom: 2.0, lr: 0.5, noise_mult: 0.0 };
+        let applied = b.run_apply(&prep, &meta, &params, &acc, &apply).unwrap();
         let mut donated_p = params.clone();
-        b.run_apply_into(&prep, &meta, &mut donated_p, &acc, 7, 2.0, 0.5, 0.0)
-            .unwrap();
+        b.run_apply_into(&prep, &meta, &mut donated_p, &acc, &apply).unwrap();
         assert_eq!(applied, donated_p, "default donating apply must equal copying");
         assert_eq!(donated_p.as_slice()[0], 1.0 - 0.5 * 4.0 / 2.0);
+    }
+
+    #[test]
+    fn default_session_matches_legacy_call_sequence() {
+        let b = CopyOnly;
+        let meta = toy_meta();
+        let prep = toy_prep();
+        let params = Tensor::vec1(&[1.0, 2.0, 3.0]);
+        let (x, y) = (vec![0.0f32; 2], vec![0, 1]);
+        let masks = [vec![1.0f32, 1.0], vec![1.0f32, 0.0]];
+
+        let mut sess = b.open_session(Path::new("."), &meta, params.clone()).unwrap();
+
+        // Legacy side: host-held buffers through the copying forms.
+        let mut acc_legacy = Tensor::zeros(meta.n_params);
+        for mask in &masks {
+            let args = AccumArgs { x: &x, y: &y, mask };
+            let stats = sess.accum(&prep, &args).unwrap();
+            let out = b.run_accum(&prep, &meta, &params, &acc_legacy, &args).unwrap();
+            acc_legacy = out.acc;
+            assert_eq!(stats.loss_sum, out.loss_sum);
+            assert_eq!(stats.sq_norms, out.sq_norms);
+        }
+
+        let apply = ApplyArgs { seed: 3, denom: 2.0, lr: 0.25, noise_mult: 0.0 };
+        sess.apply(&prep, &apply).unwrap();
+        let p_legacy = b.run_apply(&prep, &meta, &params, &acc_legacy, &apply).unwrap();
+        assert_eq!(sess.read_params().unwrap(), p_legacy);
+
+        // eval sees the session's updated parameters.
+        let (loss, _) = sess.eval(&prep, &x, &y).unwrap();
+        assert_eq!(loss, y.len() as f32 + p_legacy.as_slice()[0]);
+
+        // zero_acc resets the bound accumulator: the next apply from a
+        // zeroed accumulator is a no-op at lr-weight zero gradient.
+        sess.zero_acc().unwrap();
+        let before = sess.read_params().unwrap();
+        sess.apply(&prep, &apply).unwrap();
+        assert_eq!(sess.read_params().unwrap(), before);
+    }
+
+    #[test]
+    fn session_write_params_validates_length() {
+        let b = CopyOnly;
+        let meta = toy_meta();
+        let mut sess = b
+            .open_session(Path::new("."), &meta, Tensor::zeros(meta.n_params))
+            .unwrap();
+        assert!(sess.write_params(Tensor::zeros(2)).is_err());
+        sess.write_params(Tensor::vec1(&[9.0, 8.0, 7.0])).unwrap();
+        assert_eq!(sess.read_params().unwrap().to_vec(), vec![9.0, 8.0, 7.0]);
+    }
+
+    #[test]
+    fn open_session_validates_params_length() {
+        let b = CopyOnly;
+        let meta = toy_meta();
+        assert!(b.open_session(Path::new("."), &meta, Tensor::zeros(1)).is_err());
     }
 }

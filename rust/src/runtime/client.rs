@@ -1,27 +1,36 @@
-//! The model-facing runtime facade: typed wrappers over the flat-param
-//! ABI, generic over the execution [`Backend`].
+//! The model-facing runtime facade: typed wrappers over the session
+//! API and the legacy flat-param entry points, generic over the
+//! execution [`Backend`].
 //!
 //! [`Runtime`] pairs a manifest (what was lowered) with a backend (how
 //! to run it); [`ModelRuntime`] is the per-model view the trainer
-//! drives. Artifact-backed runtimes come from [`Runtime::load`] (PJRT,
-//! feature `pjrt`); the dependency-free default is
-//! [`Runtime::reference`], whose manifest and executables are
-//! synthesized in-memory by the pure-Rust reference backend.
+//! drives. Hot loops run on an [`ExecSession`] opened through
+//! [`Runtime::open_session`] (lifetime tied to the runtime, so a
+//! step-driven trainer can own its model view and the session side by
+//! side) or [`ModelRuntime::open_session`]. Artifact-backed runtimes
+//! come from [`Runtime::load`] (PJRT, feature `pjrt`); the
+//! dependency-free default is [`Runtime::reference`], whose manifest
+//! and executables are synthesized in-memory by the pure-Rust
+//! reference backend.
+//!
+//! The backend is held as `Arc<dyn Backend + Send + Sync>` (not `Rc`)
+//! so sessions can later be driven from worker threads — the sharding
+//! seam the ROADMAP asks for.
 
-use super::backend::{AccumOut, AccumStats, Backend, Prepared};
+use super::backend::{AccumArgs, AccumOut, AccumStats, ApplyArgs, Backend, ExecSession, Prepared};
 use super::compile_cache::CompileRecord;
 use super::manifest::{Manifest, ModelMeta};
 use super::reference::ReferenceBackend;
 use super::tensor::{self, Tensor};
 use anyhow::{anyhow, Context, Result};
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Owns the manifest and the execution backend.
 pub struct Runtime {
     dir: PathBuf,
     manifest: Manifest,
-    backend: Rc<dyn Backend>,
+    backend: Arc<dyn Backend + Send + Sync>,
 }
 
 impl Runtime {
@@ -37,7 +46,8 @@ impl Runtime {
 
     #[cfg(feature = "pjrt")]
     fn artifact_backend(dir: PathBuf, manifest: Manifest) -> Result<Self> {
-        let backend: Rc<dyn Backend> = Rc::new(super::pjrt::PjrtBackend::new()?);
+        let backend: Arc<dyn Backend + Send + Sync> =
+            Arc::new(super::pjrt::PjrtBackend::new()?);
         Ok(Self { dir, manifest, backend })
     }
 
@@ -55,11 +65,27 @@ impl Runtime {
     /// reference backend otherwise — so every entry point (CLI,
     /// examples, benches) works on a fresh offline checkout.
     pub fn auto(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        Self::auto_with_threads(artifacts_dir, 0)
+    }
+
+    /// [`Self::auto`] with the reference worker-thread knob (`dpshort
+    /// --threads`). The policy lives here — not in the CLI — so every
+    /// entry point picks the same backend on the same checkout. The
+    /// knob only applies when the policy selects the reference backend;
+    /// selecting artifacts with `threads > 0` is an error (PJRT owns
+    /// its own threading).
+    pub fn auto_with_threads(artifacts_dir: impl Into<PathBuf>, threads: usize) -> Result<Self> {
         let dir = artifacts_dir.into();
         if cfg!(feature = "pjrt") && dir.join("manifest.json").exists() {
+            if threads > 0 {
+                return Err(anyhow!(
+                    "a worker-thread override applies to the reference backend only; \
+                     the PJRT backend manages its own threading"
+                ));
+            }
             Self::load(dir)
         } else {
-            Ok(Self::reference())
+            Ok(Self::reference_with_threads(0, threads))
         }
     }
 
@@ -70,15 +96,26 @@ impl Runtime {
 
     /// Reference runtime with an explicit init/manifest seed.
     pub fn reference_with_seed(seed: u64) -> Self {
+        Self::reference_with_threads(seed, 0)
+    }
+
+    /// Reference runtime with an explicit worker-thread count for the
+    /// accum kernels (`0` = auto-detect; the `dpshort --threads` knob).
+    /// Thread count is a wall-clock knob only — bits never change.
+    pub fn reference_with_threads(seed: u64, threads: usize) -> Self {
         Self::with_backend(
             PathBuf::from("."),
             ReferenceBackend::manifest(seed),
-            Rc::new(ReferenceBackend::new(seed)),
+            Arc::new(ReferenceBackend::with_threads(seed, threads)),
         )
     }
 
     /// Assemble a runtime from parts (custom backends, tests).
-    pub fn with_backend(dir: PathBuf, manifest: Manifest, backend: Rc<dyn Backend>) -> Self {
+    pub fn with_backend(
+        dir: PathBuf,
+        manifest: Manifest,
+        backend: Arc<dyn Backend + Send + Sync>,
+    ) -> Self {
         Self { dir, manifest, backend }
     }
 
@@ -106,6 +143,20 @@ impl Runtime {
         self.backend.compile_records()
     }
 
+    /// Open a bound-buffer execution session for `model`, donating
+    /// `params` as the session's parameter state. The session's
+    /// lifetime is tied to this runtime (not to a [`ModelRuntime`]
+    /// view), so a step-driven trainer can own its model view and the
+    /// session side by side.
+    pub fn open_session(
+        &self,
+        model: &str,
+        params: Tensor,
+    ) -> Result<Box<dyn ExecSession + '_>> {
+        let meta = self.manifest.model(model)?;
+        self.backend.open_session(&self.dir, meta, params)
+    }
+
     /// A typed view over one model's executables.
     pub fn model(&self, name: &str) -> Result<ModelRuntime> {
         let meta = self.manifest.model(name)?.clone();
@@ -118,12 +169,14 @@ impl Runtime {
     }
 }
 
-/// Typed executor for one model.
+/// Typed executor for one model. Cloning is cheap (the backend is
+/// shared through the `Arc`; only the meta/name/dir copy).
+#[derive(Clone)]
 pub struct ModelRuntime {
     name: String,
     dir: PathBuf,
     meta: ModelMeta,
-    backend: Rc<dyn Backend>,
+    backend: Arc<dyn Backend + Send + Sync>,
 }
 
 impl ModelRuntime {
@@ -149,9 +202,17 @@ impl ModelRuntime {
         self.backend.init_params(&self.dir, &self.meta)
     }
 
-    /// Fresh zero accumulator.
+    /// Fresh zero accumulator (legacy host-buffered loops; sessions
+    /// bind their own).
     pub fn zero_acc(&self) -> Tensor {
         Tensor::zeros(self.meta.n_params)
+    }
+
+    /// Open a bound-buffer execution session for this model, donating
+    /// `params`. The session borrows this view — use
+    /// [`Runtime::open_session`] when the session must outlive it.
+    pub fn open_session(&self, params: Tensor) -> Result<Box<dyn ExecSession + '_>> {
+        self.backend.open_session(&self.dir, &self.meta, params)
     }
 
     /// Checkpoint the flat parameter vector (raw little-endian f32, the
@@ -222,7 +283,10 @@ impl ModelRuntime {
         self.backend.prepare(&self.dir, &self.meta, e)
     }
 
-    /// Compile (or fetch) the eval executable.
+    /// Compile (or fetch) the eval executable. Like the accum/apply
+    /// paths, the returned handle reports compile time iff this call
+    /// compiled — prepare once per eval loop and attribute that time,
+    /// instead of paying an unattributed lookup per batch.
     pub fn prepare_eval(&self) -> Result<Prepared> {
         let e = self
             .meta
@@ -231,83 +295,84 @@ impl ModelRuntime {
         self.backend.prepare(&self.dir, &self.meta, e)
     }
 
-    /// One gradient-accumulation call (the Algorithm 1/2 inner loop).
-    ///
-    /// `x` is row-major [batch, H, W, C]; `mask` the Algorithm-2 masks.
+    /// One gradient-accumulation call (the Algorithm 1/2 inner loop),
+    /// copying form. Legacy migration shim — hot loops drive an
+    /// [`ExecSession`] instead.
     pub fn run_accum(
         &self,
         prep: &Prepared,
         params: &Tensor,
         acc: &Tensor,
-        x: &[f32],
-        y: &[i32],
-        mask: &[f32],
+        args: &AccumArgs<'_>,
     ) -> Result<AccumOut> {
-        debug_assert_eq!(x.len(), y.len() * self.image_dim());
-        debug_assert_eq!(mask.len(), y.len());
-        self.backend.run_accum(prep, &self.meta, params, acc, x, y, mask)
+        debug_assert_eq!(args.x.len(), args.batch() * self.image_dim());
+        debug_assert_eq!(args.mask.len(), args.batch());
+        self.backend.run_accum(prep, &self.meta, params, acc, args)
     }
 
     /// Donating form of the accum call: `acc` is the donated buffer,
     /// updated in place (the `donate_argnums` analogue — no P-length
     /// copy per physical batch). Bitwise-identical to
-    /// [`Self::run_accum`]; the trainer's hot loop uses this form.
+    /// [`Self::run_accum`] and to the session path.
     pub fn run_accum_into(
         &self,
         prep: &Prepared,
         params: &Tensor,
         acc: &mut Tensor,
-        x: &[f32],
-        y: &[i32],
-        mask: &[f32],
+        args: &AccumArgs<'_>,
     ) -> Result<AccumStats> {
-        debug_assert_eq!(x.len(), y.len() * self.image_dim());
-        debug_assert_eq!(mask.len(), y.len());
-        self.backend.run_accum_into(prep, &self.meta, params, acc, x, y, mask)
+        debug_assert_eq!(args.x.len(), args.batch() * self.image_dim());
+        debug_assert_eq!(args.mask.len(), args.batch());
+        self.backend.run_accum_into(prep, &self.meta, params, acc, args)
     }
 
-    /// The once-per-logical-batch noise + SGD step, on an executable
-    /// from [`Self::prepare_apply`] (same single-lookup compile
-    /// attribution as the accum path).
-    ///
-    /// `seed` is the full-width 64-bit per-step noise seed, `denom` the
-    /// Algorithm-1 |L| divisor (expected logical batch), `noise_mult`
-    /// is sigma * C (0 for the non-private baseline).
-    #[allow(clippy::too_many_arguments)]
+    /// The once-per-logical-batch noise + SGD step, copying form, on an
+    /// executable from [`Self::prepare_apply`] (same single-lookup
+    /// compile attribution as the accum path). Legacy migration shim —
+    /// hot loops drive an [`ExecSession`] instead.
     pub fn run_apply(
         &self,
         prep: &Prepared,
         params: &Tensor,
         acc: &Tensor,
-        seed: u64,
-        denom: f32,
-        lr: f32,
-        noise_mult: f32,
+        args: &ApplyArgs,
     ) -> Result<Tensor> {
-        self.backend
-            .run_apply(prep, &self.meta, params, acc, seed, denom, lr, noise_mult)
+        self.backend.run_apply(prep, &self.meta, params, acc, args)
     }
 
     /// Donating form of the apply call: `params` is the donated buffer,
-    /// updated in place. Bitwise-identical to [`Self::run_apply`]; the
-    /// trainer's hot loop uses this form.
-    #[allow(clippy::too_many_arguments)]
+    /// updated in place. Bitwise-identical to [`Self::run_apply`] and
+    /// to the session path.
     pub fn run_apply_into(
         &self,
         prep: &Prepared,
         params: &mut Tensor,
         acc: &Tensor,
-        seed: u64,
-        denom: f32,
-        lr: f32,
-        noise_mult: f32,
+        args: &ApplyArgs,
     ) -> Result<()> {
-        self.backend
-            .run_apply_into(prep, &self.meta, params, acc, seed, denom, lr, noise_mult)
+        self.backend.run_apply_into(prep, &self.meta, params, acc, args)
     }
 
-    /// Forward-only evaluation: returns (loss_sum, ncorrect) over the
-    /// eval batch (whose size is fixed by the lowered artifact).
+    /// Forward-only evaluation on an already-prepared executable:
+    /// `(loss_sum, ncorrect)` over the batch. Pair with
+    /// [`Self::prepare_eval`] so the one-time compile is attributed
+    /// exactly once per eval loop.
+    pub fn run_eval_prepared(
+        &self,
+        prep: &Prepared,
+        params: &Tensor,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f32, f32)> {
+        self.backend.run_eval(prep, &self.meta, params, x, y)
+    }
+
+    /// Forward-only evaluation: `(loss_sum, ncorrect)` over the eval
+    /// batch (whose size is fixed by the lowered artifact). Legacy
+    /// convenience shim: prepares per call and drops the compile-time
+    /// attribution — loops should prepare once
+    /// ([`Self::prepare_eval`]) and use [`Self::run_eval_prepared`] or
+    /// a session.
     pub fn run_eval(&self, params: &Tensor, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
         let want = self
             .meta
@@ -319,7 +384,7 @@ impl ModelRuntime {
             return Err(anyhow!("eval batch must be exactly {want}, got {}", y.len()));
         }
         let prep = self.prepare_eval()?;
-        self.backend.run_eval(&prep, &self.meta, params, x, y)
+        self.run_eval_prepared(&prep, params, x, y)
     }
 
     /// Eval batch size fixed at AOT time.

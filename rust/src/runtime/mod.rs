@@ -2,28 +2,33 @@
 //!
 //! This is the only boundary between L3 (Rust) and the L2/L1 graphs.
 //! Everything crossing it uses the flat-parameter ABI described in
-//! DESIGN.md §3:
+//! DESIGN.md §3, addressed through typed call structs:
 //!
 //! ```text
-//! accum(params[P], acc[P], x[B,H,W,C], y[B], mask[B])
+//! accum(params[P], acc[P], AccumArgs { x[B,H,W,C], y[B], mask[B] })
 //!       -> (acc'[P], loss_sum, sq_norms[B])
-//! apply(params[P], acc[P], seed, denom[1], lr[1], noise_mult[1])
+//! apply(params[P], acc[P], ApplyArgs { seed, denom, lr, noise_mult })
 //!       -> params'[P]
 //! eval (params[P], x[B,H,W,C], y[B]) -> (loss_sum, ncorrect)
 //! ```
 //!
-//! accum and apply each come in a copying and a *donating* form
-//! (`run_accum_into` / `run_apply_into`): the round-tripping buffer
-//! (acc, params) is updated in place — the `donate_argnums` / XLA
-//! input-output-aliasing analogue the hot loop runs on (DESIGN.md §3).
+//! Hot loops run on a **session** ([`ExecSession`], opened via
+//! [`Backend::open_session`]): the session owns the round-tripping
+//! buffers (params + the gradient accumulator) for the life of a run —
+//! the `donate_argnums` / XLA input-output-aliasing analogue, and the
+//! hook a device-resident backend uses to keep those buffers on device
+//! across calls (DESIGN.md §3). The legacy copying/donating entry
+//! points (`run_accum*`, `run_apply*`) remain as migration shims,
+//! bitwise-identical to the session path.
 //!
 //! The [`Backend`] trait (DESIGN.md §2) seams the executor out of the
 //! coordinator: the default build ships the pure-Rust
 //! [`ReferenceBackend`] (linear+softmax reference model, fully offline);
 //! the `pjrt` feature adds the PJRT path over AOT-lowered HLO artifacts.
-//! Compilation is cached per artifact and **timed** — the compile-time
-//! measurements are the data behind the paper's Figure A.2 (JAX naive
-//! recompilation cost as a function of batch size).
+//! Backends are shared as `Arc<dyn Backend + Send + Sync>`. Compilation
+//! is cached per artifact and **timed** — the compile-time measurements
+//! are the data behind the paper's Figure A.2 (JAX naive recompilation
+//! cost as a function of batch size).
 
 pub mod backend;
 pub mod client;
@@ -35,7 +40,9 @@ pub mod pjrt;
 pub mod reference;
 pub mod tensor;
 
-pub use backend::{AccumOut, AccumStats, Backend, Prepared};
+pub use backend::{
+    AccumArgs, AccumOut, AccumStats, ApplyArgs, Backend, ExecSession, Prepared,
+};
 pub use client::{ModelRuntime, Runtime};
 pub use compile_cache::{CompileCache, CompileRecord};
 pub use hlo_analysis::{analyze, analyze_file, HloStats};

@@ -7,52 +7,54 @@
 //! Tensors cross the boundary by value: the crate-owned [`Tensor`] is
 //! re-encoded into an `xla::Literal` per call.
 //!
-//! **Donation mapping** (DESIGN.md §3): the `run_*_into` entry points
-//! are this backend's hook for XLA input-output aliasing — the same
-//! contract `jax.jit(donate_argnums=...)` lowers to, where the
-//! round-tripping operand (`acc` for accum, `params` for apply) shares
-//! its device buffer with the corresponding output. Real PJRT bindings
-//! express that via `ExecuteOptions` non-donatable-argument sets at
-//! execute time plus `input_output_alias` in the lowered HLO (the AOT
-//! pipeline already marks those pairs); a device-resident backend would
-//! override `run_accum_into`/`run_apply_into` to keep the buffer on
-//! device across calls. Against the offline stub the device side is
-//! unavailable, so this backend keeps the trait defaults: the copying
-//! form mints one fresh host `Tensor` per call and the donating default
-//! *moves* it into the donated slot — no extra copy, and the trainer's
-//! hot loop still holds one params and one acc binding for the run.
+//! **Session / device-residency mapping** (DESIGN.md §3): the session
+//! API ([`Backend::open_session`]) is this backend's hook for keeping
+//! params and the gradient accumulator device-resident across calls —
+//! the contract `jax.jit(donate_argnums=...)` lowers to, where the
+//! round-tripping operand shares its device buffer with the
+//! corresponding output. Real PJRT bindings express that via
+//! `ExecuteOptions` non-donatable-argument sets at execute time plus
+//! `input_output_alias` in the lowered HLO (the AOT pipeline already
+//! marks those pairs); a device-resident `PjrtSession` would upload
+//! params once in `open_session`, hold two `PjRtBuffer`s, alias them
+//! through every execute, and only download at `read_params` (the
+//! checkpoint seam). Against the offline stub the device side is
+//! unavailable, so this backend keeps the trait defaults: the session
+//! is host-buffered over the donating defaults, which mint one fresh
+//! host `Tensor` per call and *move* it into the bound slot — no extra
+//! copy, and the trainer already holds exactly one params and one acc
+//! binding for the run.
 
-// The ABI methods carry the full flat-param call (8-9 args by design).
-#![allow(clippy::too_many_arguments)]
-
-use super::backend::{AccumOut, Backend, Prepared};
+use super::backend::{AccumArgs, AccumOut, ApplyArgs, Backend, Prepared};
 use super::compile_cache::{CompileCache, CompileRecord};
 use super::manifest::{ExecutableMeta, ModelMeta};
 use super::tensor::Tensor;
 use anyhow::{anyhow, Context, Result};
-use std::cell::RefCell;
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 fn xerr(e: xla::Error) -> anyhow::Error {
     anyhow!("xla: {e:?}")
 }
 
-/// Backend over the PJRT CPU client.
+/// Backend over the PJRT CPU client. `Send + Sync`: the compile cache
+/// sits behind a `Mutex` (the stub client carries no state; real
+/// bindings' clients are internally synchronized).
 pub struct PjrtBackend {
     client: xla::PjRtClient,
-    cache: RefCell<CompileCache<xla::PjRtLoadedExecutable>>,
+    cache: Mutex<CompileCache<xla::PjRtLoadedExecutable>>,
 }
 
 impl PjrtBackend {
     pub fn new() -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(xerr)?;
-        Ok(Self { client, cache: RefCell::new(CompileCache::new()) })
+        Ok(Self { client, cache: Mutex::new(CompileCache::new()) })
     }
 
     fn lookup(&self, prep: &Prepared) -> Result<Arc<xla::PjRtLoadedExecutable>> {
         self.cache
-            .borrow()
+            .lock()
+            .unwrap()
             .get_cached(&prep.key)
             .ok_or_else(|| anyhow!("executable {} was not prepared", prep.key))
     }
@@ -72,7 +74,7 @@ impl Backend for PjrtBackend {
     fn prepare(&self, dir: &Path, _meta: &ModelMeta, exe: &ExecutableMeta) -> Result<Prepared> {
         let full = dir.join(&exe.path);
         let client = &self.client;
-        let (_, compile_seconds) = self.cache.borrow_mut().get_or_compile(&exe.path, || {
+        let (_, compile_seconds) = self.cache.lock().unwrap().get_or_compile(&exe.path, || {
             let proto = xla::HloModuleProto::from_text_file(&full)
                 .map_err(xerr)
                 .with_context(|| format!("parsing HLO text {}", full.display()))?;
@@ -86,11 +88,11 @@ impl Backend for PjrtBackend {
     }
 
     fn is_compiled(&self, key: &str) -> bool {
-        self.cache.borrow().is_cached(key)
+        self.cache.lock().unwrap().is_cached(key)
     }
 
     fn compile_records(&self) -> Vec<CompileRecord> {
-        self.cache.borrow().records().to_vec()
+        self.cache.lock().unwrap().records().to_vec()
     }
 
     fn run_accum(
@@ -99,18 +101,16 @@ impl Backend for PjrtBackend {
         meta: &ModelMeta,
         params: &Tensor,
         acc: &Tensor,
-        x: &[f32],
-        y: &[i32],
-        mask: &[f32],
+        args: &AccumArgs<'_>,
     ) -> Result<AccumOut> {
         let exe = self.lookup(prep)?;
-        let b = y.len();
+        let b = args.batch();
         let img = meta.image as i64;
-        let xs = xla::Literal::vec1(x)
+        let xs = xla::Literal::vec1(args.x)
             .reshape(&[b as i64, img, img, meta.channels as i64])
             .map_err(xerr)?;
-        let ys = xla::Literal::vec1(y);
-        let ms = xla::Literal::vec1(mask);
+        let ys = xla::Literal::vec1(args.y);
+        let ms = xla::Literal::vec1(args.mask);
         let ps = xla::Literal::vec1(params.as_slice());
         let ac = xla::Literal::vec1(acc.as_slice());
         let out = exe.execute(&[&ps, &ac, &xs, &ys, &ms]).map_err(xerr)?[0][0]
@@ -130,10 +130,7 @@ impl Backend for PjrtBackend {
         _meta: &ModelMeta,
         params: &Tensor,
         acc: &Tensor,
-        seed: u64,
-        denom: f32,
-        lr: f32,
-        noise_mult: f32,
+        args: &ApplyArgs,
     ) -> Result<Tensor> {
         let exe = self.lookup(prep)?;
         let ps = xla::Literal::vec1(params.as_slice());
@@ -142,10 +139,10 @@ impl Backend for PjrtBackend {
             .execute(&[
                 &ps,
                 &ac,
-                &xla::Literal::vec1(&[Self::fold_seed(seed)]),
-                &xla::Literal::vec1(&[denom]),
-                &xla::Literal::vec1(&[lr]),
-                &xla::Literal::vec1(&[noise_mult]),
+                &xla::Literal::vec1(&[Self::fold_seed(args.seed)]),
+                &xla::Literal::vec1(&[args.denom]),
+                &xla::Literal::vec1(&[args.lr]),
+                &xla::Literal::vec1(&[args.noise_mult]),
             ])
             .map_err(xerr)?[0][0]
             .to_literal_sync()

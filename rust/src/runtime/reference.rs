@@ -21,14 +21,19 @@
 //! The kernels are written for steady-state speed without giving up
 //! bitwise determinism:
 //!
-//! * **Buffer donation** — the backend implements the `run_*_into`
-//!   forms natively: the gradient accumulator and the parameter vector
-//!   are updated in place, never cloned per call. The copying forms are
-//!   the trait defaults (clone + donate), so both are identical by
-//!   construction.
+//! * **Bound buffers / donation** — the backend implements the
+//!   `run_*_into` forms natively: the gradient accumulator and the
+//!   parameter vector are updated in place, never cloned per call, so
+//!   the default session ([`Backend::open_session`]) drives these
+//!   in-place kernels directly — the session's bound `Tensor`s are the
+//!   working buffers. The copying forms are clone + donate, so all
+//!   entry points are identical by construction.
 //! * **Scratch arena** — per-call working sets (dlogits, clip scales,
 //!   losses, the apply noise vector) live in one reusable arena instead
-//!   of per-example `Vec` allocations.
+//!   of per-example `Vec` allocations. The arena sits behind a `Mutex`
+//!   (the backend is `Send + Sync` for `Arc<dyn Backend + Send + Sync>`
+//!   sharing); concurrent sessions serialize on it — a per-session
+//!   arena is future work once sessions actually run on worker threads.
 //! * **Blocked matvec** — logits come from an 8-lane unrolled dot
 //!   product with a fixed reduction tree; each weight row stays hot
 //!   across the lane loop.
@@ -36,29 +41,24 @@
 //!   index partitions. Phase 1 (per-example dlogits/norms/scales) is
 //!   parallel over *example ranges*; phase 2 (the `acc +=` update) is
 //!   parallel over *class-row ranges* with every worker scanning
-//!   examples in batch order. No float addition chain ever depends on
-//!   the thread count, so results are bitwise-reproducible for any
-//!   parallelism — and identical to a sequential run. This is also what
-//!   keeps Algorithm-2 padding exactly update-neutral across different
-//!   physical chunkings of the same example stream.
+//!   examples in order, so bits never depend on thread count or
+//!   physical chunking — padding-neutrality stays exact.
+//!   `ReferenceBackend::with_threads` exposes the knob (wired to
+//!   `dpshort --threads`).
 //!
 //! "Compilation" is a spec decode, timed through the same
 //! [`CompileCache`] as PJRT so the masked-vs-naive compile-count
 //! invariants (Fig. A.2) are observable on this backend too.
 
-// The ABI methods carry the full flat-param call (8-9 args by design).
-#![allow(clippy::too_many_arguments)]
-
-use super::backend::{AccumOut, AccumStats, Backend, Prepared};
+use super::backend::{AccumArgs, AccumOut, AccumStats, ApplyArgs, Backend, Prepared};
 use super::compile_cache::{CompileCache, CompileRecord};
 use super::manifest::{ExecutableMeta, Manifest, ModelMeta};
 use super::tensor::Tensor;
 use crate::util::rng::ChaChaRng;
 use anyhow::{anyhow, Result};
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Name of the synthetic reference model in [`ReferenceBackend::manifest`].
 pub const REFERENCE_MODEL: &str = "ref-linear";
@@ -118,9 +118,11 @@ impl Scratch {
     }
 }
 
-/// The pure-Rust reference CPU backend.
+/// The pure-Rust reference CPU backend. `Send + Sync`: the compile
+/// cache and the scratch arena sit behind `Mutex`es so the backend can
+/// be shared as `Arc<dyn Backend + Send + Sync>` across sessions.
 pub struct ReferenceBackend {
-    cache: RefCell<CompileCache<RefExec>>,
+    cache: Mutex<CompileCache<RefExec>>,
     /// Seed for the synthesized initial parameters.
     init_seed: u64,
     /// Worker-thread budget for the accum kernels (resolved at
@@ -129,7 +131,7 @@ pub struct ReferenceBackend {
     /// `with_threads(_, n > 0)`: use exactly `threads` workers instead
     /// of the work-size heuristic (tests and explicit operator control).
     forced_threads: bool,
-    scratch: RefCell<Scratch>,
+    scratch: Mutex<Scratch>,
 }
 
 impl ReferenceBackend {
@@ -153,11 +155,11 @@ impl ReferenceBackend {
                 .min(MAX_AUTO_THREADS)
         };
         Self {
-            cache: RefCell::new(CompileCache::new()),
+            cache: Mutex::new(CompileCache::new()),
             init_seed,
             threads,
             forced_threads: forced,
-            scratch: RefCell::new(Scratch::default()),
+            scratch: Mutex::new(Scratch::default()),
         }
     }
 
@@ -228,7 +230,8 @@ impl ReferenceBackend {
 
     fn spec(&self, prep: &Prepared) -> Result<Arc<RefExec>> {
         self.cache
-            .borrow()
+            .lock()
+            .unwrap()
             .get_cached(&prep.key)
             .ok_or_else(|| anyhow!("executable {} was not prepared", prep.key))
     }
@@ -445,16 +448,16 @@ impl Backend for ReferenceBackend {
             other => return Err(anyhow!("unknown executable kind {other:?} for {}", exe.path)),
         };
         let (_, compile_seconds) =
-            self.cache.borrow_mut().get_or_compile(&exe.path, || Ok(spec))?;
+            self.cache.lock().unwrap().get_or_compile(&exe.path, || Ok(spec))?;
         Ok(Prepared { key: exe.path.clone(), compile_seconds })
     }
 
     fn is_compiled(&self, key: &str) -> bool {
-        self.cache.borrow().is_cached(key)
+        self.cache.lock().unwrap().is_cached(key)
     }
 
     fn compile_records(&self) -> Vec<CompileRecord> {
-        self.cache.borrow().records().to_vec()
+        self.cache.lock().unwrap().records().to_vec()
     }
 
     /// Synthesized deterministic init: small Gaussian weights, zero
@@ -479,12 +482,10 @@ impl Backend for ReferenceBackend {
         meta: &ModelMeta,
         params: &Tensor,
         acc: &Tensor,
-        x: &[f32],
-        y: &[i32],
-        mask: &[f32],
+        args: &AccumArgs<'_>,
     ) -> Result<AccumOut> {
         let mut donated = acc.clone();
-        let stats = self.run_accum_into(prep, meta, params, &mut donated, x, y, mask)?;
+        let stats = self.run_accum_into(prep, meta, params, &mut donated, args)?;
         Ok(AccumOut { acc: donated, loss_sum: stats.loss_sum, sq_norms: stats.sq_norms })
     }
 
@@ -495,34 +496,31 @@ impl Backend for ReferenceBackend {
         meta: &ModelMeta,
         params: &Tensor,
         acc: &Tensor,
-        seed: u64,
-        denom: f32,
-        lr: f32,
-        noise_mult: f32,
+        args: &ApplyArgs,
     ) -> Result<Tensor> {
         let mut donated = params.clone();
-        self.run_apply_into(prep, meta, &mut donated, acc, seed, denom, lr, noise_mult)?;
+        self.run_apply_into(prep, meta, &mut donated, acc, args)?;
         Ok(donated)
     }
 
     /// Native donating accum: `acc` is updated in place through the
     /// scratch arena + deterministic-threading kernel described in the
-    /// module docs.
+    /// module docs. This is also the session hot path (the default
+    /// session binds its buffers to this kernel).
     fn run_accum_into(
         &self,
         prep: &Prepared,
         meta: &ModelMeta,
         params: &Tensor,
         acc: &mut Tensor,
-        x: &[f32],
-        y: &[i32],
-        mask: &[f32],
+        args: &AccumArgs<'_>,
     ) -> Result<AccumStats> {
         let spec = self.spec(prep)?;
         let (variant, batch) = match spec.as_ref() {
             RefExec::Accum { variant, batch } => (variant.as_str(), *batch),
             _ => return Err(anyhow!("{} is not an accum executable", prep.key)),
         };
+        let (x, y, mask) = (args.x, args.y, args.mask);
         let b = y.len();
         if b != batch {
             return Err(anyhow!("accum batch mismatch: executable {batch}, got {b}"));
@@ -545,7 +543,7 @@ impl Backend for ReferenceBackend {
         };
         let mut sq_norms = vec![0.0f32; b];
 
-        let mut scratch = self.scratch.borrow_mut();
+        let mut scratch = self.scratch.lock().unwrap();
         let (dlogits, scale, losses) = scratch.accum(b, ncls);
 
         // Phase 1: per-example dlogits / losses / norms / scales,
@@ -601,29 +599,27 @@ impl Backend for ReferenceBackend {
 
     /// Native donating apply: in-place SGD step with bulk ChaCha20
     /// Gaussian noise (`fill_normals` over the arena's noise buffer).
-    /// The copying `run_apply` is the trait default.
+    /// The copying `run_apply` is clone + this.
     fn run_apply_into(
         &self,
         prep: &Prepared,
         meta: &ModelMeta,
         params: &mut Tensor,
         acc: &Tensor,
-        seed: u64,
-        denom: f32,
-        lr: f32,
-        noise_mult: f32,
+        args: &ApplyArgs,
     ) -> Result<()> {
         let spec = self.spec(prep)?;
         if !matches!(spec.as_ref(), RefExec::Apply) {
             return Err(anyhow!("{} is not an apply executable", prep.key));
         }
         Self::check_model_vectors(meta, params, Some(acc))?;
+        let ApplyArgs { seed, denom, lr, noise_mult } = *args;
         if !denom.is_finite() || denom <= 0.0 {
             return Err(anyhow!("apply denom must be positive, got {denom}"));
         }
         let out = params.as_mut_slice();
         if noise_mult != 0.0 {
-            let mut scratch = self.scratch.borrow_mut();
+            let mut scratch = self.scratch.lock().unwrap();
             let noise = scratch.noise(out.len());
             let mut rng = ChaChaRng::from_seed_stream(seed, 0, b"applynse");
             rng.fill_normals(noise);
@@ -695,7 +691,12 @@ mod tests {
         (backend, meta)
     }
 
-    fn prepare_accum(b: &ReferenceBackend, meta: &ModelMeta, variant: &str, batch: usize) -> Prepared {
+    fn prepare_accum(
+        b: &ReferenceBackend,
+        meta: &ModelMeta,
+        variant: &str,
+        batch: usize,
+    ) -> Prepared {
         let exe = meta.find_accum(variant, batch, "f32").expect("lowered").clone();
         b.prepare(Path::new("."), meta, &exe).unwrap()
     }
@@ -743,17 +744,29 @@ mod tests {
         // must equal the same two live examples run at batch 2.
         let prep4 = prepare_accum(&b, &meta, "masked", 4);
         let padded = b
-            .run_accum(&prep4, &meta, &params, &acc, &x, &y, &[1.0, 1.0, 0.0, 0.0])
+            .run_accum(
+                &prep4,
+                &meta,
+                &params,
+                &acc,
+                &AccumArgs { x: &x, y: &y, mask: &[1.0, 1.0, 0.0, 0.0] },
+            )
             .unwrap();
         let prep2 = prepare_accum(&b, &meta, "masked", 2);
         let live = b
-            .run_accum(&prep2, &meta, &params, &acc, &x[..2 * d], &y[..2], &[1.0, 1.0])
+            .run_accum(
+                &prep2,
+                &meta,
+                &params,
+                &acc,
+                &AccumArgs { x: &x[..2 * d], y: &y[..2], mask: &[1.0, 1.0] },
+            )
             .unwrap();
         assert_eq!(padded.acc, live.acc);
         assert_eq!(padded.loss_sum, live.loss_sum);
         // All-masked batch: accumulator unchanged, loss zero.
         let none = b
-            .run_accum(&prep4, &meta, &params, &acc, &x, &y, &[0.0; 4])
+            .run_accum(&prep4, &meta, &params, &acc, &AccumArgs { x: &x, y: &y, mask: &[0.0; 4] })
             .unwrap();
         assert_eq!(none.acc, acc);
         assert_eq!(none.loss_sum, 0.0);
@@ -769,7 +782,7 @@ mod tests {
         let acc = Tensor::zeros(meta.n_params);
         let (x, y) = batch_of(&meta, 8);
         let out = b
-            .run_accum(&prep, &meta, &params, &acc, &x, &y, &[1.0; 8])
+            .run_accum(&prep, &meta, &params, &acc, &AccumArgs { x: &x, y: &y, mask: &[1.0; 8] })
             .unwrap();
         let norm: f32 = out
             .acc
@@ -792,7 +805,7 @@ mod tests {
         let acc = Tensor::zeros(meta.n_params);
         let (x, y) = batch_of(&meta, 2);
         let out = b
-            .run_accum(&prep, &meta, &params, &acc, &x, &y, &[1.0, 1.0])
+            .run_accum(&prep, &meta, &params, &acc, &AccumArgs { x: &x, y: &y, mask: &[1.0, 1.0] })
             .unwrap();
         assert_eq!(out.sq_norms, vec![0.0, 0.0]);
         let norm: f32 = out.acc.as_slice().iter().map(|v| v * v).sum::<f32>().sqrt();
@@ -807,10 +820,11 @@ mod tests {
         let params = b.init_params(Path::new("."), &meta).unwrap();
         let acc = Tensor::zeros(meta.n_params);
         let (x, y) = batch_of(&meta, 4);
+        let args = AccumArgs { x: &x, y: &y, mask: &[1.0; 4] };
         let masked = prepare_accum(&b, &meta, "masked", 4);
         let ghost = prepare_accum(&b, &meta, "ghost", 4);
-        let a = b.run_accum(&masked, &meta, &params, &acc, &x, &y, &[1.0; 4]).unwrap();
-        let g = b.run_accum(&ghost, &meta, &params, &acc, &x, &y, &[1.0; 4]).unwrap();
+        let a = b.run_accum(&masked, &meta, &params, &acc, &args).unwrap();
+        let g = b.run_accum(&ghost, &meta, &params, &acc, &args).unwrap();
         assert_eq!(a.acc, g.acc);
         assert_eq!(a.sq_norms, g.sq_norms);
     }
@@ -825,12 +839,11 @@ mod tests {
         for variant in ["masked", "nonprivate", "ghost"] {
             let prep = prepare_accum(&b, &meta, variant, 8);
             let mask = [1.0, 1.0, 0.0, 1.0, 1.0, 1.0, 0.0, 1.0];
-            let copied = b
-                .run_accum(&prep, &meta, &params, &acc_init, &x, &y, &mask)
-                .unwrap();
+            let args = AccumArgs { x: &x, y: &y, mask: &mask };
+            let copied = b.run_accum(&prep, &meta, &params, &acc_init, &args).unwrap();
             let mut donated = acc_init.clone();
             let stats = b
-                .run_accum_into(&prep, &meta, &params, &mut donated, &x, &y, &mask)
+                .run_accum_into(&prep, &meta, &params, &mut donated, &args)
                 .unwrap();
             assert_eq!(copied.acc, donated, "{variant}: acc diverged");
             assert_eq!(copied.loss_sum.to_bits(), stats.loss_sum.to_bits());
@@ -854,7 +867,9 @@ mod tests {
             let prep = prepare_accum(&b, &meta, "masked", 32);
             let params = b.init_params(Path::new("."), &meta).unwrap();
             let acc = Tensor::zeros(meta.n_params);
-            let out = b.run_accum(&prep, &meta, &params, &acc, &x, &y, &mask).unwrap();
+            let out = b
+                .run_accum(&prep, &meta, &params, &acc, &AccumArgs { x: &x, y: &y, mask: &mask })
+                .unwrap();
             if let Some(want) = &reference_out {
                 assert_eq!(want.acc, out.acc, "threads={threads}: acc diverged");
                 assert_eq!(want.loss_sum.to_bits(), out.loss_sum.to_bits());
@@ -873,16 +888,16 @@ mod tests {
         let params = b.init_params(Path::new("."), &meta).unwrap();
         let mut acc = Tensor::zeros(meta.n_params);
         acc.as_mut_slice()[0] = 2.0;
-        let out = b
-            .run_apply(&prep, &meta, &params, &acc, 42, 4.0, 0.1, 0.0)
-            .unwrap();
+        let plain = ApplyArgs { seed: 42, denom: 4.0, lr: 0.1, noise_mult: 0.0 };
+        let out = b.run_apply(&prep, &meta, &params, &acc, &plain).unwrap();
         let want = params.as_slice()[0] - 0.1 * 2.0 / 4.0;
         assert!((out.as_slice()[0] - want).abs() < 1e-7);
         assert_eq!(out.as_slice()[1], params.as_slice()[1]);
         // Noise: deterministic per seed, different across seeds.
-        let n1 = b.run_apply(&prep, &meta, &params, &acc, 7, 4.0, 0.1, 1.0).unwrap();
-        let n2 = b.run_apply(&prep, &meta, &params, &acc, 7, 4.0, 0.1, 1.0).unwrap();
-        let n3 = b.run_apply(&prep, &meta, &params, &acc, 8, 4.0, 0.1, 1.0).unwrap();
+        let noisy = |seed| ApplyArgs { seed, denom: 4.0, lr: 0.1, noise_mult: 1.0 };
+        let n1 = b.run_apply(&prep, &meta, &params, &acc, &noisy(7)).unwrap();
+        let n2 = b.run_apply(&prep, &meta, &params, &acc, &noisy(7)).unwrap();
+        let n3 = b.run_apply(&prep, &meta, &params, &acc, &noisy(8)).unwrap();
         assert_eq!(n1, n2);
         assert_ne!(n1, n3);
         assert_ne!(n1, out);
@@ -897,14 +912,47 @@ mod tests {
         let mut acc = Tensor::zeros(meta.n_params);
         acc.as_mut_slice()[5] = -1.5;
         for noise_mult in [0.0f32, 1.3] {
-            let copied = b
-                .run_apply(&prep, &meta, &params, &acc, 99, 8.0, 0.2, noise_mult)
-                .unwrap();
+            let args = ApplyArgs { seed: 99, denom: 8.0, lr: 0.2, noise_mult };
+            let copied = b.run_apply(&prep, &meta, &params, &acc, &args).unwrap();
             let mut donated = params.clone();
-            b.run_apply_into(&prep, &meta, &mut donated, &acc, 99, 8.0, 0.2, noise_mult)
-                .unwrap();
+            b.run_apply_into(&prep, &meta, &mut donated, &acc, &args).unwrap();
             assert_eq!(copied, donated, "noise_mult={noise_mult}");
         }
+    }
+
+    #[test]
+    fn session_binds_buffers_to_the_in_place_kernels() {
+        // The default session over the reference backend must follow the
+        // exact legacy call sequence bitwise: two accums, an apply, a
+        // zero_acc, another accum.
+        let (b, meta) = setup();
+        let prep = prepare_accum(&b, &meta, "masked", 8);
+        let apply_meta = meta.find_apply().unwrap().clone();
+        let apply_prep = b.prepare(Path::new("."), &meta, &apply_meta).unwrap();
+        let params = b.init_params(Path::new("."), &meta).unwrap();
+        let (x, y) = batch_of(&meta, 8);
+        let mask = [1.0, 0.0, 1.0, 1.0, 1.0, 1.0, 0.0, 1.0];
+        let args = AccumArgs { x: &x, y: &y, mask: &mask };
+        let apply = ApplyArgs { seed: 11, denom: 6.0, lr: 0.1, noise_mult: 1.0 };
+
+        let mut sess = b.open_session(Path::new("."), &meta, params.clone()).unwrap();
+        let mut acc = Tensor::zeros(meta.n_params);
+        let mut p = params.clone();
+        for _ in 0..2 {
+            let s = sess.accum(&prep, &args).unwrap();
+            let l = b.run_accum_into(&prep, &meta, &p, &mut acc, &args).unwrap();
+            assert_eq!(s.loss_sum.to_bits(), l.loss_sum.to_bits());
+        }
+        sess.apply(&apply_prep, &apply).unwrap();
+        b.run_apply_into(&apply_prep, &meta, &mut p, &acc, &apply).unwrap();
+        assert_eq!(sess.read_params().unwrap(), p);
+
+        sess.zero_acc().unwrap();
+        acc.fill(0.0);
+        let s = sess.accum(&prep, &args).unwrap();
+        let l = b.run_accum_into(&prep, &meta, &p, &mut acc, &args).unwrap();
+        assert_eq!(s.loss_sum.to_bits(), l.loss_sum.to_bits());
+        assert_eq!(s.sq_norms, l.sq_norms);
     }
 
     #[test]
@@ -942,7 +990,15 @@ mod tests {
         let acc = Tensor::zeros(meta.n_params);
         let d = image_dim(&meta);
         let x = vec![0.0f32; d];
-        assert!(b.run_accum(&prep, &meta, &params, &acc, &x, &[99], &[1.0]).is_err());
-        assert!(b.run_accum(&prep, &meta, &params, &acc, &x, &[-1], &[1.0]).is_err());
+        let too_big = AccumArgs { x: &x, y: &[99], mask: &[1.0] };
+        assert!(b.run_accum(&prep, &meta, &params, &acc, &too_big).is_err());
+        let negative = AccumArgs { x: &x, y: &[-1], mask: &[1.0] };
+        assert!(b.run_accum(&prep, &meta, &params, &acc, &negative).is_err());
+    }
+
+    #[test]
+    fn backend_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ReferenceBackend>();
     }
 }

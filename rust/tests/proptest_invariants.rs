@@ -6,7 +6,9 @@
 use dp_shortcuts::coordinator::sampler::{Sampler, ShuffleSampler};
 use dp_shortcuts::coordinator::trainer::per_step_noise_seed;
 use dp_shortcuts::privacy::RdpAccountant;
-use dp_shortcuts::runtime::{Backend, ModelMeta, ReferenceBackend, Tensor, REFERENCE_MODEL};
+use dp_shortcuts::runtime::{
+    AccumArgs, ApplyArgs, Backend, ModelMeta, ReferenceBackend, Tensor, REFERENCE_MODEL,
+};
 use dp_shortcuts::util::rng::ChaChaRng;
 use proptest::prelude::*;
 use std::path::Path;
@@ -124,13 +126,14 @@ proptest! {
             .map(|i| if (mask_bits >> (i % 32)) & 1 == 1 { 1.0 } else { 0.0 })
             .collect();
         let acc0 = synth_acc(&meta, acc_seed);
+        let args = AccumArgs { x: &x, y: &y, mask: &mask };
 
         let copied = backend
-            .run_accum(&prep, &meta, &params, &acc0, &x, &y, &mask)
+            .run_accum(&prep, &meta, &params, &acc0, &args)
             .unwrap();
         let mut donated = acc0.clone();
         let stats = backend
-            .run_accum_into(&prep, &meta, &params, &mut donated, &x, &y, &mask)
+            .run_accum_into(&prep, &meta, &params, &mut donated, &args)
             .unwrap();
 
         prop_assert_eq!(bits(copied.acc.as_slice()), bits(donated.as_slice()));
@@ -159,13 +162,14 @@ proptest! {
         let params = backend.init_params(Path::new("."), &meta).unwrap();
         let acc = synth_acc(&meta, acc_seed);
         let noise_mult = if noise_on { 1.1 } else { 0.0 };
+        let args = ApplyArgs { seed: noise_seed, denom, lr, noise_mult };
 
         let copied = backend
-            .run_apply(&prep, &meta, &params, &acc, noise_seed, denom, lr, noise_mult)
+            .run_apply(&prep, &meta, &params, &acc, &args)
             .unwrap();
         let mut donated = params.clone();
         backend
-            .run_apply_into(&prep, &meta, &mut donated, &acc, noise_seed, denom, lr, noise_mult)
+            .run_apply_into(&prep, &meta, &mut donated, &acc, &args)
             .unwrap();
         prop_assert_eq!(bits(copied.as_slice()), bits(donated.as_slice()));
     }
@@ -191,8 +195,9 @@ proptest! {
             let prep = backend.prepare(Path::new("."), &meta, &exe).unwrap();
             let params = backend.init_params(Path::new("."), &meta).unwrap();
             let mut acc = Tensor::zeros(meta.n_params);
+            let args = AccumArgs { x: &x, y: &y, mask: &mask };
             let stats = backend
-                .run_accum_into(&prep, &meta, &params, &mut acc, &x, &y, &mask)
+                .run_accum_into(&prep, &meta, &params, &mut acc, &args)
                 .unwrap();
             (acc, stats)
         };

@@ -287,6 +287,30 @@ fn report_serializes_to_json() {
 }
 
 #[test]
+fn every_compile_is_attributed_including_eval() {
+    // Regression for the eval attribution hole: prepare_eval used to
+    // run on *every* eval batch and its compile_seconds were never
+    // added to SectionTimes.compile. Now the eval loop prepares once
+    // and attributes it like accum/apply, so the compile section must
+    // equal the sum of every compilation this run caused.
+    let rt = Runtime::reference();
+    let cfg = base_config("masked", BatchingMode::Masked);
+    assert!(cfg.eval_examples > 0, "test needs the eval path");
+    let rep = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    assert!(
+        rep.compiles.iter().any(|(p, _)| p.contains("_eval_")),
+        "eval executable should have compiled: {:?}",
+        rep.compiles
+    );
+    let total: f64 = rep.compiles.iter().map(|(_, s)| s).sum();
+    assert!(
+        (rep.sections.compile - total).abs() < 1e-9,
+        "compile section {} != sum of compiles {total}",
+        rep.sections.compile
+    );
+}
+
+#[test]
 fn checkpoint_roundtrip_through_reference_model() {
     let rt = Runtime::reference();
     let m = rt.model(REFERENCE_MODEL).unwrap();

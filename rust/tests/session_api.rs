@@ -1,0 +1,311 @@
+//! Session-API invariants: the bound-buffer [`ExecSession`] path and
+//! the step-driven [`TrainSession`] must be bitwise-identical to the
+//! legacy entry points and to an uninterrupted [`Trainer::run`] — the
+//! acceptance gate of the session redesign. Determinism here is a
+//! DP-correctness property, not hygiene: the accumulator and the
+//! seeded noise feed the privacy accounting.
+
+use dp_shortcuts::coordinator::batcher::BatchingMode;
+use dp_shortcuts::coordinator::config::TrainConfig;
+use dp_shortcuts::coordinator::trainer::{
+    per_step_noise_seed, TrainCheckpoint, TrainSession, Trainer,
+};
+use dp_shortcuts::runtime::{
+    AccumArgs, ApplyArgs, Backend, ModelMeta, ReferenceBackend, Runtime, Tensor,
+    REFERENCE_MODEL,
+};
+use dp_shortcuts::util::rng::ChaChaRng;
+use proptest::prelude::*;
+use std::path::Path;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+fn reference_meta() -> ModelMeta {
+    ReferenceBackend::manifest(0).models[REFERENCE_MODEL].clone()
+}
+
+/// Deterministic batch (x, y) for the reference model from a seed.
+fn synth_batch(meta: &ModelMeta, batch: usize, data_seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let d = meta.image * meta.image * meta.channels;
+    let mut rng = ChaChaRng::from_seed_stream(data_seed, 0, b"sessdata");
+    let x: Vec<f32> = (0..batch * d).map(|_| rng.next_normal() as f32).collect();
+    let y: Vec<i32> = (0..batch)
+        .map(|_| (rng.next_u32() % meta.num_classes as u32) as i32)
+        .collect();
+    (x, y)
+}
+
+fn train_config(variant: &str, mode: BatchingMode, seed: u64) -> TrainConfig {
+    TrainConfig {
+        model: REFERENCE_MODEL.into(),
+        variant: variant.into(),
+        mode,
+        dataset_size: 48,
+        sampling_rate: 0.25,
+        physical_batch: 4,
+        steps: 4,
+        lr: 0.05,
+        noise_multiplier: Some(1.1),
+        eval_examples: 0,
+        seed,
+        ..Default::default()
+    }
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(32))]
+
+    /// A session driven through a multi-call sequence — accum, accum,
+    /// apply, zero_acc, accum — is bitwise-identical to the same
+    /// sequence through the legacy donating entry points with
+    /// host-held buffers, across clipping variants, batch sizes, mask
+    /// patterns (including all-masked), data, and noise seeds.
+    #[test]
+    fn session_sequence_bitwise_matches_legacy(
+        variant_idx in 0usize..4,
+        batch_idx in 0usize..4,
+        mask_bits in prop_oneof![Just(0u32), Just(u32::MAX), proptest::num::u32::ANY],
+        data_seed in proptest::num::u64::ANY,
+        noise_seed in proptest::num::u64::ANY,
+    ) {
+        let variant = ["nonprivate", "masked", "ghost", "bk"][variant_idx];
+        let batch = [1usize, 2, 8, 16][batch_idx];
+        let backend = ReferenceBackend::new(0);
+        let meta = reference_meta();
+        let exe = meta.find_accum(variant, batch, "f32").unwrap().clone();
+        let prep = backend.prepare(Path::new("."), &meta, &exe).unwrap();
+        let apply_exe = meta.find_apply().unwrap().clone();
+        let apply_prep = backend.prepare(Path::new("."), &meta, &apply_exe).unwrap();
+        let params = backend.init_params(Path::new("."), &meta).unwrap();
+        let (x, y) = synth_batch(&meta, batch, data_seed);
+        let mask: Vec<f32> = (0..batch)
+            .map(|i| if (mask_bits >> (i % 32)) & 1 == 1 { 1.0 } else { 0.0 })
+            .collect();
+        let args = AccumArgs { x: &x, y: &y, mask: &mask };
+        let apply = ApplyArgs { seed: noise_seed, denom: 6.0, lr: 0.1, noise_mult: 1.1 };
+
+        let mut sess = backend
+            .open_session(Path::new("."), &meta, params.clone())
+            .unwrap();
+        // Legacy side: host-held buffers through the donating forms.
+        let mut p = params.clone();
+        let mut acc = Tensor::zeros(meta.n_params);
+
+        for _ in 0..2 {
+            let s = sess.accum(&prep, &args).unwrap();
+            let l = backend
+                .run_accum_into(&prep, &meta, &p, &mut acc, &args)
+                .unwrap();
+            prop_assert_eq!(s.loss_sum.to_bits(), l.loss_sum.to_bits());
+            prop_assert_eq!(bits(&s.sq_norms), bits(&l.sq_norms));
+        }
+        sess.apply(&apply_prep, &apply).unwrap();
+        backend
+            .run_apply_into(&apply_prep, &meta, &mut p, &acc, &apply)
+            .unwrap();
+        prop_assert_eq!(
+            bits(sess.read_params().unwrap().as_slice()),
+            bits(p.as_slice())
+        );
+
+        // zero_acc resets the bound accumulator to a fresh-step state.
+        sess.zero_acc().unwrap();
+        acc.fill(0.0);
+        let s = sess.accum(&prep, &args).unwrap();
+        let l = backend
+            .run_accum_into(&prep, &meta, &p, &mut acc, &args)
+            .unwrap();
+        prop_assert_eq!(s.loss_sum.to_bits(), l.loss_sum.to_bits());
+
+        // And one more apply so the accumulated state is observable in
+        // the parameters.
+        let apply2 = ApplyArgs { seed: noise_seed ^ 1, ..apply };
+        sess.apply(&apply_prep, &apply2).unwrap();
+        backend
+            .run_apply_into(&apply_prep, &meta, &mut p, &acc, &apply2)
+            .unwrap();
+        prop_assert_eq!(
+            bits(sess.read_params().unwrap().as_slice()),
+            bits(p.as_slice())
+        );
+    }
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(10))]
+
+    /// A TrainSession driven step-by-step — including a checkpoint →
+    /// JSON round-trip → drop → resume on a *fresh* runtime at a
+    /// mid-run step — finishes bitwise-identical to one uninterrupted
+    /// `Trainer::run()`, for both batching modes and across seeds.
+    #[test]
+    fn stepped_and_resumed_session_matches_uninterrupted_run(
+        seed in 0u64..1_000,
+        masked in proptest::bool::ANY,
+        split_at in 1u64..4,
+    ) {
+        let (variant, mode) = if masked {
+            ("masked", BatchingMode::Masked)
+        } else {
+            ("naive", BatchingMode::Variable)
+        };
+        let cfg = train_config(variant, mode, seed);
+
+        let uninterrupted = {
+            let rt = Runtime::reference();
+            Trainer::new(&rt, cfg.clone()).unwrap().run().unwrap()
+        };
+
+        // Step-driven with a save → drop → load → resume round-trip.
+        let ckpt_json = {
+            let rt = Runtime::reference();
+            let mut s = TrainSession::new(&rt, cfg.clone()).unwrap();
+            for _ in 0..split_at {
+                s.step().unwrap();
+            }
+            s.checkpoint().unwrap().to_json().unwrap()
+            // session and runtime dropped here
+        };
+        let rt2 = Runtime::reference();
+        let ckpt = TrainCheckpoint::from_json(&ckpt_json).unwrap();
+        let mut resumed = TrainSession::resume(&rt2, cfg.clone(), ckpt).unwrap();
+        while !resumed.done() {
+            resumed.step().unwrap();
+        }
+        let rep = resumed.finish().unwrap();
+
+        prop_assert_eq!(
+            bits(&rep.final_params),
+            bits(&uninterrupted.final_params),
+            "resume diverged from the uninterrupted run"
+        );
+        prop_assert_eq!(rep.steps.len(), uninterrupted.steps.len());
+        for (a, b) in rep.steps.iter().zip(&uninterrupted.steps) {
+            prop_assert_eq!(a.step, b.step);
+            prop_assert_eq!(a.logical_batch, b.logical_batch);
+            prop_assert_eq!(a.computed_examples, b.computed_examples);
+            prop_assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        }
+        // The accountant replay reproduces the composition exactly.
+        prop_assert_eq!(
+            rep.epsilon_spent.to_bits(),
+            uninterrupted.epsilon_spent.to_bits()
+        );
+    }
+}
+
+#[test]
+fn step_driven_session_matches_thin_run_wrapper() {
+    // Trainer::run is a thin loop over TrainSession — driving the
+    // session by hand must land on the identical parameter trajectory
+    // and step logs.
+    let cfg = train_config("masked", BatchingMode::Masked, 7);
+    let rt = Runtime::reference();
+    let report = Trainer::new(&rt, cfg.clone()).unwrap().run().unwrap();
+
+    let rt2 = Runtime::reference();
+    let mut session = TrainSession::new(&rt2, cfg.clone()).unwrap();
+    let mut last = None;
+    while !session.done() {
+        last = Some(session.step().unwrap());
+    }
+    let log = last.unwrap();
+    assert_eq!(log.step, cfg.steps - 1);
+    let params = session.read_params().unwrap();
+    assert_eq!(bits(params.as_slice()), bits(&report.final_params));
+    // Spot-check the seed layout is what the backends fold.
+    let s = per_step_noise_seed(cfg.seed, 3);
+    assert_eq!(s & 0xffff_ffff, 3);
+}
+
+#[test]
+fn mid_run_eval_does_not_perturb_training() {
+    // Eval cadence: running held-out evaluation between steps must not
+    // change a single bit of the training trajectory (eval is
+    // forward-only on the bound params).
+    let mut cfg = train_config("masked", BatchingMode::Masked, 3);
+    cfg.eval_examples = 64;
+
+    let plain = {
+        let rt = Runtime::reference();
+        Trainer::new(&rt, cfg.clone()).unwrap().run().unwrap()
+    };
+    let rt = Runtime::reference();
+    let mut s = TrainSession::new(&rt, cfg.clone()).unwrap();
+    let mut evals = Vec::new();
+    while !s.done() {
+        s.step().unwrap();
+        evals.push(s.eval().unwrap());
+    }
+    let rep = s.finish().unwrap();
+    assert_eq!(bits(&rep.final_params), bits(&plain.final_params));
+    // Every mid-run eval covered the full requested batches, and the
+    // final eval matches the uninterrupted run's.
+    for (loss, acc, covered) in &evals {
+        assert_eq!(*covered, 64);
+        assert!(loss.unwrap().is_finite() && acc.unwrap() >= 0.0);
+    }
+    assert_eq!(rep.eval_loss, plain.eval_loss);
+    assert_eq!(rep.eval_accuracy, plain.eval_accuracy);
+    assert_eq!(rep.eval_covered, plain.eval_covered);
+}
+
+#[test]
+fn resume_rejects_corrupt_or_mismatched_checkpoints() {
+    let cfg = train_config("masked", BatchingMode::Masked, 0);
+    let rt = Runtime::reference();
+    let good = {
+        let mut s = TrainSession::new(&rt, cfg.clone()).unwrap();
+        s.step().unwrap();
+        s.checkpoint().unwrap()
+    };
+    // The genuine checkpoint resumes fine.
+    assert!(TrainSession::resume(&rt, cfg.clone(), good.clone()).is_ok());
+    // Wrong parameter length.
+    let mut bad = good.clone();
+    bad.params = vec![0.0; 3];
+    assert!(TrainSession::resume(&rt, cfg.clone(), bad).is_err());
+    // Step counter disagreeing with the logs — a truncated/hand-edited
+    // checkpoint must not resume silently.
+    let mut truncated = good.clone();
+    truncated.steps.clear();
+    assert!(TrainSession::resume(&rt, cfg.clone(), truncated).is_err());
+    // A config that shapes a different trajectory (different seed →
+    // different sampling + noise) must be rejected: replaying the
+    // accountant under it would mis-report epsilon.
+    let mut other_cfg = cfg.clone();
+    other_cfg.seed += 1;
+    assert!(TrainSession::resume(&rt, other_cfg, good.clone()).is_err());
+    // A checkpoint already past the configured step count is stale.
+    let mut short_cfg = cfg.clone();
+    short_cfg.steps = 0;
+    // (fingerprint does not cover `steps`, so this exercises the
+    // step-count guard, not the fingerprint.)
+    assert!(TrainSession::resume(&rt, short_cfg, good).is_err());
+}
+
+#[test]
+fn warm_start_via_write_params_matches_checkpoint_file_roundtrip() {
+    // --save-params / --load-params seam: params written through
+    // ModelRuntime::save_params and loaded back into a fresh session
+    // reproduce the exact trajectory of a continued run.
+    let cfg = train_config("masked", BatchingMode::Masked, 11);
+    let rt = Runtime::reference();
+    let mut s = TrainSession::new(&rt, cfg.clone()).unwrap();
+    s.step().unwrap();
+    let params = s.read_params().unwrap();
+    let path = std::env::temp_dir().join("dpshort_session_warm_start.bin");
+    s.model().save_params(&params, &path).unwrap();
+
+    let rt2 = Runtime::reference();
+    let mut warm = TrainSession::new(&rt2, cfg).unwrap();
+    let loaded = warm.model().load_params(&path).unwrap();
+    warm.write_params(loaded).unwrap();
+    assert_eq!(
+        bits(warm.read_params().unwrap().as_slice()),
+        bits(params.as_slice())
+    );
+    let _ = std::fs::remove_file(&path);
+}
