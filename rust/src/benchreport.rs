@@ -3,13 +3,15 @@
 //!
 //! Runs the steady-state accum/apply sweep over the active backend's
 //! manifest (the paper's Figures 1/2/4/6 estimator: medians with seeded
-//! bootstrap 95% CIs) and emits `BENCH_throughput.json`, so every PR
-//! records the measured perf trajectory instead of printing text that
-//! evaporates. The schema (DESIGN.md §6):
+//! bootstrap 95% CIs), measures data-parallel training throughput per
+//! worker count (the measured side of the paper's Figure 7 scaling
+//! study), and emits `BENCH_throughput.json`, so every PR records the
+//! measured perf trajectory instead of printing text that evaporates.
+//! The schema (version 2, DESIGN.md §6):
 //!
 //! ```json
 //! {
-//!   "schema_version": 1,
+//!   "schema_version": 2,
 //!   "backend": "reference",
 //!   "seed": 0,
 //!   "quick": true,
@@ -21,24 +23,44 @@
 //!      "secs_total": ..},
 //!     {"kind": "apply", "model": "ref-linear", "variant": null,
 //!      "batch": null, "repeats": 30, "unit": "calls_per_sec", ...}
+//!   ],
+//!   "workers": [
+//!     {"workers": 1, "model": "ref-linear", "steps": 4,
+//!      "throughput": 1.0e5, "unit": "examples_per_sec", "secs_total": ..},
+//!     {"workers": 2, ...}, {"workers": 4, ...}
 //!   ]
 //! }
 //! ```
 //!
-//! [`BenchReport::validate`] is the schema gate CI runs against the
-//! emitted file (`dpshort bench --check`).
+//! `workers` entries time the *wall clock* of a short masked training
+//! run at each worker count over the data-parallel executor
+//! (DESIGN.md §8) — identical logical work per entry, since the
+//! trajectory is bitwise worker-count-invariant — so the ratios are a
+//! directly measured scaling curve that `examples/scaling_study.rs`
+//! overlays against the `cluster::simulator` Amdahl predictions.
+//!
+//! Version 1 files (no `workers` field) remain valid:
+//! [`BenchReport::validate`] — the schema gate CI runs against the
+//! emitted file (`dpshort bench --check`) — accepts both versions.
 
 use crate::coordinator::batcher::BatchingMode;
 use crate::coordinator::config::TrainConfig;
-use crate::coordinator::trainer::{SectionTimes, Trainer};
+use crate::coordinator::trainer::{SectionTimes, TrainSession, Trainer};
 use crate::metrics::summary_with_ci;
 use crate::runtime::Runtime;
 use anyhow::{anyhow, Context, Result};
 use serde::{Deserialize, Serialize};
 use std::path::Path;
+use std::time::Instant;
 
-/// Version stamp of the `BENCH_throughput.json` schema.
-pub const SCHEMA_VERSION: u32 = 1;
+/// Version stamp of the `BENCH_throughput.json` schema this build
+/// emits. v2 added the per-worker-count `workers` scaling entries;
+/// [`BenchReport::validate`] still accepts v1 files (which predate the
+/// field).
+pub const SCHEMA_VERSION: u32 = 2;
+
+/// Oldest schema version [`BenchReport::validate`] accepts.
+pub const MIN_SCHEMA_VERSION: u32 = 1;
 
 /// Default output file name (repo-root convention; empty until a sweep
 /// has run on a machine).
@@ -73,17 +95,47 @@ pub struct BenchEntry {
     pub secs_total: f64,
 }
 
+/// One point of the measured data-parallel scaling curve (schema v2):
+/// wall-clock training throughput of a short masked run at a given
+/// worker count. The run's *results* are bitwise-identical across
+/// entries (the §8 determinism contract), so only the wall clock moves.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+pub struct WorkerEntry {
+    /// Data-parallel worker sessions of this run.
+    pub workers: usize,
+    /// Model the run trained.
+    pub model: String,
+    /// Optimizer steps timed.
+    pub steps: u64,
+    /// Real (sampled) examples per wall-clock second over the step
+    /// loop, compile excluded.
+    pub throughput: f64,
+    /// Always "examples_per_sec".
+    pub unit: String,
+    /// Wall-clock seconds of the timed step loop.
+    pub secs_total: f64,
+}
+
 /// The full document written to `BENCH_throughput.json`.
 #[derive(Debug, Serialize, Deserialize)]
 pub struct BenchReport {
+    /// Schema version of this document (see [`SCHEMA_VERSION`]).
     pub schema_version: u32,
+    /// Active backend name ("reference" | "pjrt").
     pub backend: String,
+    /// Seed driving data, bootstrap resampling, and the sections run.
     pub seed: u64,
+    /// Whether the `--quick` smoke subset produced this report.
     pub quick: bool,
     /// Per-section wall-clock of a short masked training run on the
     /// first swept model (the Table-2 analogue for this checkout).
     pub sections: Option<SectionTimes>,
+    /// Measured accum/apply configurations.
     pub entries: Vec<BenchEntry>,
+    /// Measured data-parallel scaling curve (schema v2; absent in v1
+    /// files and when the worker sweep is skipped).
+    #[serde(default, skip_serializing_if = "Option::is_none")]
+    pub workers: Option<Vec<WorkerEntry>>,
 }
 
 impl BenchReport {
@@ -112,16 +164,51 @@ impl BenchReport {
         Ok(report)
     }
 
-    /// Schema invariants beyond what deserialization enforces.
+    /// Schema invariants beyond what deserialization enforces. Accepts
+    /// every version in `MIN_SCHEMA_VERSION..=SCHEMA_VERSION`: v1 files
+    /// (written before the worker scaling sweep) must not carry a
+    /// `workers` field; v2 files may.
     pub fn validate(&self) -> Result<()> {
-        if self.schema_version != SCHEMA_VERSION {
+        if self.schema_version < MIN_SCHEMA_VERSION || self.schema_version > SCHEMA_VERSION {
             return Err(anyhow!(
-                "schema_version {} != supported {SCHEMA_VERSION}",
+                "schema_version {} outside supported {MIN_SCHEMA_VERSION}..={SCHEMA_VERSION}",
                 self.schema_version
             ));
         }
+        if self.schema_version < 2 && self.workers.is_some() {
+            return Err(anyhow!("v1 reports cannot carry a `workers` scaling curve"));
+        }
         if self.backend.is_empty() {
             return Err(anyhow!("backend must be non-empty"));
+        }
+        if let Some(workers) = &self.workers {
+            if workers.is_empty() {
+                return Err(anyhow!("workers scaling curve must be absent, not empty"));
+            }
+            for (i, w) in workers.iter().enumerate() {
+                let ctx = |msg: &str| anyhow!("workers entry {i} (n={}): {msg}", w.workers);
+                if w.workers == 0 {
+                    return Err(ctx("worker count must be positive"));
+                }
+                if w.unit != "examples_per_sec" {
+                    return Err(ctx("unit must be examples_per_sec"));
+                }
+                if !(w.throughput.is_finite() && w.throughput > 0.0) {
+                    return Err(ctx("throughput must be finite and positive"));
+                }
+                if !(w.secs_total.is_finite() && w.secs_total >= 0.0) {
+                    return Err(ctx("secs_total must be finite and non-negative"));
+                }
+                if w.steps == 0 || w.model.is_empty() {
+                    return Err(ctx("steps must be positive and model non-empty"));
+                }
+            }
+            let mut counts: Vec<usize> = workers.iter().map(|w| w.workers).collect();
+            counts.sort_unstable();
+            counts.dedup();
+            if counts.len() != workers.len() {
+                return Err(anyhow!("workers scaling curve repeats a worker count"));
+            }
         }
         if self.entries.is_empty() {
             return Err(anyhow!("bench report has no entries"));
@@ -177,22 +264,28 @@ impl BenchReport {
 /// What to sweep. `None` filters mean "everything the manifest lowers".
 #[derive(Debug, Clone)]
 pub struct SweepOptions {
+    /// Restrict to one model (default: every manifest model).
     pub model: Option<String>,
+    /// Restrict to one clipping variant.
     pub variant: Option<String>,
+    /// Restrict to one physical batch size.
     pub batch: Option<usize>,
     /// Timed repeats per configuration.
     pub repeats: usize,
-    /// Smoke mode: restrict batches to [`QUICK_BATCHES`].
+    /// Smoke mode: restrict batches to the quick subset (16 / 64).
     pub quick: bool,
     /// Seed for data, bootstrap, and the sections run.
     pub seed: u64,
     /// Also time a short training run for the per-section breakdown.
     pub with_sections: bool,
+    /// Worker counts for the data-parallel scaling sweep (schema v2
+    /// `workers`); empty skips it (the report then omits the field).
+    pub worker_counts: Vec<usize>,
 }
 
 impl SweepOptions {
     /// Defaults: full ladder at 30 repeats, or the quick smoke subset
-    /// at 5.
+    /// at 5; data-parallel scaling measured at 1/2/4 workers.
     pub fn new(quick: bool) -> Self {
         Self {
             model: None,
@@ -202,12 +295,18 @@ impl SweepOptions {
             quick,
             seed: 0,
             with_sections: true,
+            worker_counts: vec![1, 2, 4],
         }
     }
 }
 
 /// Run the accum/apply sweep and assemble the validated report.
 pub fn run_sweep(rt: &Runtime, opts: &SweepOptions) -> Result<BenchReport> {
+    // Reject malformed worker counts before minutes of sweep work run
+    // only to be discarded by the scaling pass at the end.
+    if opts.worker_counts.contains(&0) {
+        return Err(anyhow!("--workers counts must be positive"));
+    }
     let models: Vec<String> = rt
         .manifest()
         .models
@@ -293,6 +392,14 @@ pub fn run_sweep(rt: &Runtime, opts: &SweepOptions) -> Result<BenchReport> {
             return Err(anyhow!("--batch {want} matches no lowered accum executable"));
         }
     }
+    let workers = if opts.worker_counts.is_empty() {
+        None
+    } else {
+        let curve = worker_scaling(rt, &models[0], opts)?;
+        // An unmeasurable curve (no masked variant, degenerate clock)
+        // omits the field rather than emitting an invalid empty list.
+        (!curve.is_empty()).then_some(curve)
+    };
     let report = BenchReport {
         schema_version: SCHEMA_VERSION,
         backend: rt.backend_name().to_string(),
@@ -300,9 +407,75 @@ pub fn run_sweep(rt: &Runtime, opts: &SweepOptions) -> Result<BenchReport> {
         quick: opts.quick,
         sections,
         entries,
+        workers,
     };
     report.validate()?;
     Ok(report)
+}
+
+/// Measured data-parallel scaling: one short masked training run per
+/// worker count, identical logical work (same seed → same sampled
+/// batches, and the §8 contract makes the results bitwise-identical),
+/// timed over the step loop's wall clock. Session construction — and
+/// with it every compile — happens outside the timed region, the same
+/// discount the steady-state sweep applies.
+fn worker_scaling(rt: &Runtime, model: &str, opts: &SweepOptions) -> Result<Vec<WorkerEntry>> {
+    let meta = rt.manifest().model(model)?.clone();
+    let variants = meta.variants();
+    if !variants.iter().any(|v| v == "masked") {
+        // No fixed-shape variant lowered: the scaling sweep is
+        // meaningless (variable shapes recompile), skip it.
+        return Ok(Vec::new());
+    }
+    let batches = meta.accum_batches("masked", "f32");
+    let batch = batches
+        .iter()
+        .copied()
+        .filter(|b| *b <= 16)
+        .max()
+        .or_else(|| batches.first().copied())
+        .ok_or_else(|| anyhow!("model {model} lowers no masked batches"))?;
+    let mut counts = opts.worker_counts.clone();
+    counts.sort_unstable();
+    counts.dedup();
+    let mut out = Vec::with_capacity(counts.len());
+    for &workers in &counts {
+        let cfg = TrainConfig {
+            model: model.to_string(),
+            variant: "masked".into(),
+            mode: BatchingMode::Masked,
+            physical_batch: batch,
+            dataset_size: 512,
+            sampling_rate: 0.5,
+            steps: if opts.quick { 2 } else { 4 },
+            noise_multiplier: Some(1.0),
+            eval_examples: 0,
+            seed: opts.seed,
+            workers,
+            ..Default::default()
+        };
+        let steps = cfg.steps;
+        let mut session = TrainSession::new(rt, cfg)?;
+        let t = Instant::now();
+        while !session.done() {
+            session.step()?;
+        }
+        let secs_total = t.elapsed().as_secs_f64();
+        let report = session.finish()?;
+        let real: f64 = report.steps.iter().map(|s| s.logical_batch as f64).sum();
+        if secs_total <= 0.0 {
+            continue; // clock too coarse to time this run
+        }
+        out.push(WorkerEntry {
+            workers,
+            model: model.to_string(),
+            steps,
+            throughput: real / secs_total,
+            unit: "examples_per_sec".into(),
+            secs_total,
+        });
+    }
+    Ok(out)
 }
 
 fn entry_from(
@@ -380,6 +553,7 @@ mod tests {
         opts.repeats = 3;
         opts.variant = Some("masked".to_string());
         opts.batch = Some(16);
+        opts.worker_counts = vec![1, 2];
         run_sweep(&rt, &opts).unwrap()
     }
 
@@ -387,16 +561,68 @@ mod tests {
     fn sweep_emits_valid_schema_and_roundtrips() {
         let report = quick_report();
         report.validate().unwrap();
+        assert_eq!(report.schema_version, SCHEMA_VERSION);
         assert_eq!(report.backend, "reference");
         assert!(report.accum_entry("ref-linear", "masked", 16).is_some());
         assert!(report.entries.iter().any(|e| e.kind == "apply"));
         let sections = report.sections.expect("sections run");
         assert!(sections.accum > 0.0);
+        // The v2 worker scaling curve: one entry per requested count.
+        let workers = report.workers.as_ref().expect("worker scaling curve");
+        assert_eq!(
+            workers.iter().map(|w| w.workers).collect::<Vec<_>>(),
+            vec![1, 2]
+        );
+        assert!(workers.iter().all(|w| w.throughput > 0.0 && w.unit == "examples_per_sec"));
         // JSON roundtrip preserves the schema.
         let text = report.to_json().unwrap();
         let parsed = BenchReport::from_json(&text).unwrap();
         parsed.validate().unwrap();
         assert_eq!(parsed.entries.len(), report.entries.len());
+        assert_eq!(parsed.workers.unwrap().len(), 2);
+    }
+
+    #[test]
+    fn v1_reports_without_workers_field_still_validate() {
+        // A file emitted by the schema-v1 harness: no `workers` key at
+        // all. --check must keep accepting it.
+        let mut report = quick_report();
+        report.schema_version = 1;
+        report.workers = None;
+        report.validate().unwrap();
+        let text = report.to_json().unwrap();
+        assert!(!text.contains("\"workers\""), "v1 serialization must omit the field");
+        let parsed = BenchReport::from_json(&text).unwrap();
+        parsed.validate().unwrap();
+        // ...but a v1 report *carrying* a scaling curve is malformed.
+        let mut bad = quick_report();
+        bad.schema_version = 1;
+        assert!(bad.workers.is_some());
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn worker_curve_schema_violations_are_rejected() {
+        let broken = |f: fn(&mut WorkerEntry)| {
+            let mut report = quick_report();
+            f(&mut report.workers.as_mut().unwrap()[0]);
+            report.validate()
+        };
+        assert!(broken(|w| w.workers = 0).is_err());
+        assert!(broken(|w| w.throughput = f64::NAN).is_err());
+        assert!(broken(|w| w.throughput = -1.0).is_err());
+        assert!(broken(|w| w.unit = "calls_per_sec".into()).is_err());
+        assert!(broken(|w| w.steps = 0).is_err());
+        // Duplicate worker counts are one measurement pretending to be
+        // a curve.
+        let mut report = quick_report();
+        let dup = report.workers.as_ref().unwrap()[0].clone();
+        report.workers.as_mut().unwrap().push(dup);
+        assert!(report.validate().is_err());
+        // Empty curve must be expressed as an absent field.
+        let mut report = quick_report();
+        report.workers = Some(Vec::new());
+        assert!(report.validate().is_err());
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! Simulated multi-GPU cluster: the substrate for the paper's scaling
-//! study (Section 7, Figures 7 / A.4 / A.5).
+//! Multi-GPU cluster substrate: the paper's scaling study (Section 7,
+//! Figures 7 / A.4 / A.5), both **simulated** and **executed**.
 //!
 //! The paper's result — **DP-SGD scales better than SGD** (69.2% vs
 //! 53.3% of ideal at 80 V100s; Amdahl parallel fractions 99.5% vs
@@ -7,16 +7,30 @@
 //! longer per example, so the fixed-size gradient all-reduce is a
 //! smaller fraction of each step and the interconnect saturates later.
 //!
-//! We reproduce the mechanism with a discrete model: data-parallel
-//! workers, hierarchical ring all-reduce (fast intra-node links, slow
-//! inter-node links, 4 GPUs per node as on the paper's HPC system), and
-//! per-step compute times taken from *measured* single-worker runs of
-//! the real AOT executables.
+//! Two substrates reproduce it:
+//!
+//! * **Model** ([`simulator`], [`allreduce`], [`amdahl`]) — a discrete
+//!   cost model: data-parallel workers, hierarchical ring all-reduce
+//!   (fast intra-node links, slow inter-node links, 4 GPUs per node as
+//!   on the paper's HPC system), per-step compute times taken from
+//!   *measured* single-worker runs of the real executables.
+//! * **Execution** ([`parallel`]) — a real data-parallel driver:
+//!   worker threads each owning an
+//!   [`ExecSession`](crate::runtime::ExecSession), one global Poisson
+//!   draw sharded across ranks, and a fixed-shape binary-tree
+//!   reduction that keeps N-worker runs bitwise-identical to the
+//!   single-session trainer (DESIGN.md §8). `dpshort bench --workers`
+//!   measures its scaling so the simulator's Amdahl predictions can be
+//!   overlaid with reality (`examples/scaling_study.rs`).
+
+#![warn(missing_docs)]
 
 pub mod allreduce;
 pub mod amdahl;
+pub mod parallel;
 pub mod simulator;
 
-pub use allreduce::{Interconnect, ring_allreduce_seconds};
+pub use allreduce::{ring_allreduce_seconds, Interconnect};
 pub use amdahl::{amdahl_speedup, fit_parallel_fraction};
+pub use parallel::{plan_groups, reduce_fixed_tree, run_groups, shard_ranges, GroupPlan};
 pub use simulator::{ClusterSim, ScalingPoint};

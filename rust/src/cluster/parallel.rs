@@ -1,0 +1,391 @@
+//! Data-parallel multi-session execution: the *real* counterpart of the
+//! scaling study that [`super::simulator`] only models (DESIGN.md §8).
+//!
+//! One optimizer step is decomposed into **accumulation groups** —
+//! contiguous, `physical_batch`-aligned slices of the globally sampled
+//! logical batch. Groups are the unit of everything:
+//!
+//! * **Sharding** — worker `r` executes a contiguous range of groups
+//!   ([`shard_ranges`]) on its own [`ExecSession`]; there is exactly
+//!   one global sampler draw per step, never per-rank subsampling
+//!   (shard-local Poisson would silently change the privacy
+//!   amplification the accountant assumes — the Chua et al. shortcut).
+//! * **Reduction** — each group yields a partial gradient accumulator
+//!   (folded from zero over the group's examples), and the step's
+//!   accumulator is the fixed-shape binary-tree combine of those
+//!   partials ([`reduce_fixed_tree`]). The tree's pairing depends only
+//!   on the group count — a pure function of the sampled batch and the
+//!   physical batch size — so the reduced sum is **bitwise-identical
+//!   for every worker count**, extending the kernel-level thread-count
+//!   determinism contract (DESIGN.md §3) one level up to whole
+//!   sessions.
+//! * **Mode neutrality** — a group's partial is a sequential
+//!   per-example fold, which the reference kernels keep invariant to
+//!   how the group is chunked into executable calls. Masked mode runs
+//!   a group as one padded fixed-shape call; Variable mode decomposes
+//!   the same examples into lowered sizes ([`plan_groups`]) — both
+//!   land on the same partial bits, so Algorithm-2 padding neutrality
+//!   survives the data-parallel redesign.
+//!
+//! The driver ([`run_groups`]) spawns one scoped thread per worker;
+//! each worker owns its session (`ExecSession: Send`) opened from the
+//! shared `Arc<dyn Backend>`. Results are written into disjoint
+//! per-rank slices, then combined by the coordinator strictly in group
+//! order, so timing jitter can never reorder anything that feeds the
+//! model state, the loss log, or the privacy accounting.
+//!
+//! Memory profile: the coordinator holds one P-length partial per
+//! group (`k = ceil(E[L] / B)`) until the reduction — ~2 MB at this
+//! repo's reference scale, deliberate and documented. A device-resident
+//! backend replaces the whole read/reduce/write round-trip with an
+//! in-fabric collective honoring the same pairing order (see
+//! [`ExecSession`]'s `read_acc` docs), which is also where a
+//! paper-scale model's partials would live.
+
+use crate::coordinator::batcher::{BatchMemoryManager, BatchingMode, PhysicalBatch};
+use crate::runtime::{ExecSession, Tensor};
+use anyhow::{anyhow, Result};
+use std::ops::Range;
+
+/// One accumulation group: the executable chunks covering one
+/// `physical_batch`-aligned slice of the logical batch. In Masked mode
+/// this is a single padded fixed-shape call; in Variable mode it is the
+/// naive decomposition of the same examples into lowered batch sizes.
+#[derive(Debug, Clone)]
+pub struct GroupPlan {
+    /// Executable calls of this group, run in order on one session
+    /// without re-zeroing the accumulator between them.
+    pub chunks: Vec<PhysicalBatch>,
+}
+
+impl GroupPlan {
+    /// Examples computed by this group, including mask padding.
+    pub fn computed(&self) -> usize {
+        self.chunks.iter().map(|c| c.indices.len()).sum()
+    }
+}
+
+/// Decompose one globally sampled logical batch into accumulation
+/// groups — the worker-count-independent unit of sharding and
+/// reduction.
+///
+/// Group `g` covers logical examples `[g*B, (g+1)*B)` (`B` =
+/// `physical_batch`), so the group count — and therefore the reduction
+/// tree of [`reduce_fixed_tree`] — depends only on the sampler draw
+/// and the configuration, never on how many workers execute it:
+///
+/// * [`BatchingMode::Masked`] — one group per Algorithm-2 physical
+///   batch (full shape, padding masked); the existing
+///   [`BatchMemoryManager::split`] decomposition *is* the group grid.
+/// * [`BatchingMode::Variable`] — the naive decomposition
+///   ([`BatchMemoryManager::split_naive`]) applied **per group**, so
+///   no chunk ever crosses a group boundary (and, as a side effect, no
+///   chunk ever exceeds the configured physical batch — the memory
+///   budget the physical batch models).
+///
+/// An empty logical batch (possible under Poisson) yields exactly one
+/// group in both modes: the noise-only step still happens, and both
+/// modes reduce the same all-zero partial.
+pub fn plan_groups(
+    logical: &[u32],
+    physical_batch: usize,
+    mode: BatchingMode,
+    available: &[usize],
+) -> Vec<GroupPlan> {
+    match mode {
+        BatchingMode::Masked => BatchMemoryManager::new(physical_batch, mode)
+            .split(logical)
+            .into_iter()
+            .map(|pb| GroupPlan { chunks: vec![pb] })
+            .collect(),
+        BatchingMode::Variable => {
+            if logical.is_empty() {
+                return vec![GroupPlan {
+                    chunks: BatchMemoryManager::split_naive(logical, available),
+                }];
+            }
+            logical
+                .chunks(physical_batch)
+                .map(|group| GroupPlan {
+                    chunks: BatchMemoryManager::split_naive(group, available),
+                })
+                .collect()
+        }
+    }
+}
+
+/// Contiguous near-even assignment of `items` work units to `workers`
+/// ranks: the first `items % workers` ranks take one extra unit.
+/// Deterministic, order-preserving, and exhaustive; ranks beyond the
+/// work count receive empty ranges.
+pub fn shard_ranges(items: usize, workers: usize) -> Vec<Range<usize>> {
+    let workers = workers.max(1);
+    let base = items / workers;
+    let extra = items % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for r in 0..workers {
+        let len = base + usize::from(r < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, items);
+    out
+}
+
+/// `dst += src`, elementwise (one edge of the reduction tree).
+fn add_into(dst: &mut Tensor, src: &Tensor) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.as_mut_slice().iter_mut().zip(src.as_slice()) {
+        *d += s;
+    }
+}
+
+/// Fixed-shape binary-tree reduction of partial accumulators: adjacent
+/// pairs combine per round until one tensor remains (an odd tail is
+/// carried up unmodified).
+///
+/// The association depends **only on `partials.len()`** — the schedule
+/// a real all-reduce would follow for that many leaves — so any
+/// assignment of the leaves to workers produces the same bits. This is
+/// the determinism contract that makes N-worker training
+/// bitwise-identical to the single-session run (DESIGN.md §8).
+///
+/// Returns `None` for an empty input.
+pub fn reduce_fixed_tree(mut partials: Vec<Tensor>) -> Option<Tensor> {
+    while partials.len() > 1 {
+        let mut next = Vec::with_capacity(partials.len().div_ceil(2));
+        let mut it = partials.into_iter();
+        while let Some(mut left) = it.next() {
+            if let Some(right) = it.next() {
+                add_into(&mut left, &right);
+            }
+            next.push(left);
+        }
+        partials = next;
+    }
+    partials.pop()
+}
+
+/// Timed outcome of one executable chunk within a group.
+#[derive(Debug, Clone)]
+pub struct ChunkRun {
+    /// Masked per-example loss sum reported by the accum call.
+    pub loss_sum: f32,
+    /// Real (unmasked) examples of the chunk.
+    pub real: usize,
+    /// Examples computed including Algorithm-2 padding.
+    pub computed: usize,
+    /// Seconds materializing the chunk's data.
+    pub data_secs: f64,
+    /// Seconds inside the accum executable.
+    pub accum_secs: f64,
+}
+
+/// One group's execution result: the partial accumulator read back
+/// through the session's all-reduce seam, plus per-chunk statistics in
+/// chunk order.
+#[derive(Debug)]
+pub struct GroupRun {
+    /// Partial gradient accumulator (folded from zero over the group).
+    pub partial: Tensor,
+    /// Per-chunk outcomes, in the group's chunk order.
+    pub chunks: Vec<ChunkRun>,
+}
+
+/// Execute one group on `sess`: zero the bound accumulator, run the
+/// chunks in order (the in-group fold), and read the partial back out.
+fn run_one_group(
+    sess: &mut dyn ExecSession,
+    group: &GroupPlan,
+    exec_chunk: &(dyn Fn(&mut dyn ExecSession, &PhysicalBatch) -> Result<ChunkRun> + Sync),
+) -> Result<GroupRun> {
+    sess.zero_acc()?;
+    let mut chunks = Vec::with_capacity(group.chunks.len());
+    for pb in &group.chunks {
+        chunks.push(exec_chunk(sess, pb)?);
+    }
+    Ok(GroupRun { partial: sess.read_acc()?, chunks })
+}
+
+/// Run every group across the worker sessions and return the results
+/// **in group order** (independent of which rank ran what, or when).
+///
+/// `sessions[0]` is rank 0 (the session that will later apply the
+/// update); `sessions[r]` executes the `r`-th contiguous shard of
+/// `groups` ([`shard_ranges`]). With a single session everything runs
+/// inline on the calling thread; otherwise one scoped thread per rank
+/// drives that rank's session (`ExecSession: Send` is exactly this).
+/// `exec_chunk` performs one accum call (data fetch + execution +
+/// timing) and must be `Sync` — it is shared read-only across ranks.
+///
+/// On error, the first failing group (in group order) is reported;
+/// groups after a rank's failure are skipped on that rank only.
+pub fn run_groups(
+    sessions: Vec<&mut dyn ExecSession>,
+    groups: &[GroupPlan],
+    exec_chunk: &(dyn Fn(&mut dyn ExecSession, &PhysicalBatch) -> Result<ChunkRun> + Sync),
+) -> Result<Vec<GroupRun>> {
+    if sessions.is_empty() {
+        return Err(anyhow!("run_groups needs at least one session"));
+    }
+    let mut slots: Vec<Option<Result<GroupRun>>> = Vec::with_capacity(groups.len());
+    slots.resize_with(groups.len(), || None);
+
+    if sessions.len() == 1 || groups.len() <= 1 {
+        // Single-rank fast path: no thread spawn, same group walk.
+        let mut sessions = sessions;
+        let sess = &mut *sessions[0];
+        for (slot, group) in slots.iter_mut().zip(groups) {
+            *slot = Some(run_one_group(sess, group, exec_chunk));
+            if matches!(slot, Some(Err(_))) {
+                break;
+            }
+        }
+    } else {
+        let ranges = shard_ranges(groups.len(), sessions.len());
+        std::thread::scope(|scope| {
+            let mut rest: &mut [Option<Result<GroupRun>>] = &mut slots;
+            for (sess, range) in sessions.into_iter().zip(&ranges) {
+                let (mine, tail) = rest.split_at_mut(range.len());
+                rest = tail;
+                if range.is_empty() {
+                    continue; // more workers than groups this step
+                }
+                let shard = &groups[range.start..range.end];
+                scope.spawn(move || {
+                    for (slot, group) in mine.iter_mut().zip(shard) {
+                        *slot = Some(run_one_group(sess, group, exec_chunk));
+                        if matches!(slot, Some(Err(_))) {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    let mut out = Vec::with_capacity(groups.len());
+    let mut first_err = None;
+    for slot in slots {
+        match slot {
+            Some(Ok(run)) => out.push(run),
+            Some(Err(e)) => {
+                first_err = Some(e);
+                break;
+            }
+            None => break, // skipped after an earlier failure on that rank
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    if out.len() != groups.len() {
+        // Only reachable when a rank failed and its error slot was
+        // consumed above — keep the invariant airtight anyway.
+        return Err(anyhow!(
+            "data-parallel step incomplete: {} of {} groups ran",
+            out.len(),
+            groups.len()
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: &[f32]) -> Tensor {
+        Tensor::vec1(v)
+    }
+
+    #[test]
+    fn shard_ranges_cover_contiguously() {
+        for (items, workers) in [(0, 1), (1, 4), (7, 3), (8, 4), (64, 5), (3, 8)] {
+            let ranges = shard_ranges(items, workers);
+            assert_eq!(ranges.len(), workers);
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next, "{items}/{workers}");
+                next = r.end;
+            }
+            assert_eq!(next, items);
+            let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+            let (min, max) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(max - min <= 1, "near-even: {lens:?}");
+        }
+    }
+
+    #[test]
+    fn tree_shape_depends_only_on_leaf_count() {
+        // Values chosen so float association is observable: summing
+        // left-to-right vs tree differs in the last bits.
+        let vals = [1.0e8f32, 1.0, -1.0e8, 1.0, 3.0, -7.5, 0.25, 1.0e7];
+        for n in 1..=vals.len() {
+            let leaves: Vec<Tensor> = vals[..n].iter().map(|&v| t(&[v])).collect();
+            let reduced = reduce_fixed_tree(leaves.clone()).unwrap();
+            // Any re-run over the same leaves gives the same bits.
+            let again = reduce_fixed_tree(leaves).unwrap();
+            assert_eq!(reduced, again, "n={n}");
+        }
+        // And the 4-leaf tree is ((a+b)+(c+d)), not sequential.
+        let leaves = vec![t(&[1.0e8]), t(&[1.0]), t(&[-1.0e8]), t(&[1.0])];
+        let tree = reduce_fixed_tree(leaves).unwrap();
+        let want = (1.0e8f32 + 1.0) + (-1.0e8 + 1.0);
+        assert_eq!(tree.as_slice()[0].to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn tree_of_one_is_identity_and_empty_is_none() {
+        let x = t(&[1.5, -2.0]);
+        assert_eq!(reduce_fixed_tree(vec![x.clone()]).unwrap(), x);
+        assert!(reduce_fixed_tree(Vec::new()).is_none());
+    }
+
+    #[test]
+    fn plan_groups_has_mode_independent_group_count() {
+        let available = [1usize, 2, 4, 8, 16];
+        for tl in [0usize, 1, 7, 8, 9, 23, 32] {
+            let logical: Vec<u32> = (0..tl as u32).collect();
+            let masked = plan_groups(&logical, 8, BatchingMode::Masked, &available);
+            let naive = plan_groups(&logical, 8, BatchingMode::Variable, &available);
+            assert_eq!(masked.len(), naive.len(), "tl={tl}");
+            assert_eq!(masked.len(), tl.div_ceil(8).max(1));
+            // Masked groups are exactly one full-shape chunk each.
+            assert!(masked.iter().all(|g| g.chunks.len() == 1));
+            assert!(masked.iter().all(|g| g.chunks[0].indices.len() == 8));
+            // Variable chunks never cross a group boundary and never
+            // exceed the physical batch.
+            for g in &naive {
+                assert!(g.chunks.iter().all(|c| c.indices.len() <= 8));
+            }
+            // Both modes cover exactly the logical examples (mask 1.0).
+            let real = |groups: &[GroupPlan]| -> Vec<u32> {
+                groups
+                    .iter()
+                    .flat_map(|g| &g.chunks)
+                    .flat_map(|c| {
+                        c.indices
+                            .iter()
+                            .zip(&c.mask)
+                            .filter(|(_, &m)| m > 0.0)
+                            .map(|(&i, _)| i)
+                    })
+                    .collect()
+            };
+            assert_eq!(real(&masked), logical, "tl={tl}");
+            assert_eq!(real(&naive), logical, "tl={tl}");
+        }
+    }
+
+    #[test]
+    fn empty_logical_batch_plans_one_noise_only_group() {
+        for mode in [BatchingMode::Masked, BatchingMode::Variable] {
+            let groups = plan_groups(&[], 8, mode, &[2, 4, 8]);
+            assert_eq!(groups.len(), 1);
+            assert_eq!(groups[0].chunks.len(), 1);
+            assert_eq!(groups[0].chunks[0].real_count(), 0);
+        }
+    }
+}

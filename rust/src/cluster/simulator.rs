@@ -14,6 +14,7 @@ use super::allreduce::{ring_allreduce_seconds, Interconnect};
 /// One point of the scaling curve.
 #[derive(Debug, Clone, Copy)]
 pub struct ScalingPoint {
+    /// Worker (GPU) count of this point.
     pub gpus: usize,
     /// Achieved examples/second over the whole cluster.
     pub throughput: f64,
@@ -38,6 +39,7 @@ pub struct ClusterSim {
     /// Serial per-step seconds that never parallelize (host sampling,
     /// step bookkeeping, single-process data loading).
     pub serial_overhead: f64,
+    /// Link topology and speeds of the modeled cluster.
     pub interconnect: Interconnect,
 }
 

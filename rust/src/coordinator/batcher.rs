@@ -1,7 +1,7 @@
 //! Virtual batching: the BatchMemoryManager (paper Section 2.1 / Alg. 1-2).
 //!
 //! DP utility wants *logical* batches of thousands of examples (the paper
-//! samples E[L] = 25 000) while the accelerator fits a few hundred — so
+//! samples `E[L]` = 25 000) while the accelerator fits a few hundred — so
 //! logical batches are split into *physical* batches, gradients are
 //! accumulated across them, and the optimizer steps once per logical
 //! batch. This does not change the privacy accounting (same noise, same

@@ -1,7 +1,7 @@
 //! Training-run configuration (the "config system" a launcher consumes).
 //!
 //! Defaults mirror the paper's experimental setup (Section 3): sampling
-//! rate 0.5 over a 50k-example dataset (E[L] = 25k at paper scale —
+//! rate 0.5 over a 50k-example dataset (`E[L]` = 25k at paper scale —
 //! scaled down here), four optimizer steps for benchmarking, eps = 8 /
 //! delta = 2.04e-5 privacy budget, clip norm from Table A2.
 
@@ -39,6 +39,15 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Evaluate on this many held-out examples after training (0 = skip).
     pub eval_examples: u32,
+    /// Data-parallel worker sessions (`dpshort --workers`). Each worker
+    /// thread owns its own execution session; the globally sampled
+    /// batch is sharded across them and gradients combine through the
+    /// fixed-tree reduction (DESIGN.md §8), so the trajectory is
+    /// **bitwise-identical for every value** — this knob moves
+    /// wall-clock only, never bits, and is therefore excluded from the
+    /// checkpoint fingerprint (a checkpoint taken at 4 workers resumes
+    /// correctly at 1). `0` is treated as 1.
+    pub workers: usize,
 }
 
 impl Default for TrainConfig {
@@ -59,12 +68,13 @@ impl Default for TrainConfig {
             delta: 2.04e-5,
             seed: 0,
             eval_examples: 256,
+            workers: 1,
         }
     }
 }
 
 impl TrainConfig {
-    /// Expected logical batch size E[L] = q * N.
+    /// Expected logical batch size `E[L] = q * N`.
     pub fn expected_logical_batch(&self) -> f64 {
         self.sampling_rate * self.dataset_size as f64
     }

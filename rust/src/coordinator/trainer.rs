@@ -1,41 +1,67 @@
 //! The training-loop driver: virtual-batching DP-SGD (Algorithms 1 & 2)
 //! over any execution [`Backend`](crate::runtime::Backend), with
-//! per-section timing.
+//! per-section timing and optional data-parallel execution.
 //!
 //! The hot loop lives in one place: the step-driven [`TrainSession`].
-//! A session binds an [`ExecSession`] (params + gradient accumulator
-//! owned by the backend session for the whole run — the
+//! A session binds one [`ExecSession`] per worker (params + gradient
+//! accumulator owned by each backend session for the whole run — the
 //! `donate_argnums` analogue) and exposes:
 //!
 //! * [`TrainSession::step`] — one optimizer step:
-//!   1. **sample**  — Poisson-sample the logical batch ([`PoissonSampler`])
-//!   2. **split**   — into physical batches + masks ([`BatchMemoryManager`];
-//!                    masked mode = Algorithm 2, variable mode = naive JAX)
-//!   3. **accum**   — per physical batch: fetch data, run the `accum`
-//!                    executable (fwd + per-example bwd + clip + accumulate)
-//!   4. **apply**   — at the step boundary: run `apply` (noise + SGD step)
-//!   5. **account** — record the (q, sigma) step in the RDP accountant
+//!   1. **sample**  — one *global* Poisson draw ([`PoissonSampler`]);
+//!                    never per-rank subsampling, whatever `workers` is
+//!   2. **plan**    — decompose into accumulation groups
+//!                    ([`plan_groups`]): `physical_batch`-aligned
+//!                    slices of the logical batch (masked mode =
+//!                    Algorithm 2 full shapes, variable mode = naive
+//!                    JAX chunking *within* each group)
+//!   3. **accum**   — shard the groups contiguously across the worker
+//!                    sessions ([`run_groups`]); each group folds a
+//!                    partial accumulator from zero (fwd + per-example
+//!                    bwd + clip + accumulate)
+//!   4. **reduce**  — combine the partials with the fixed-shape binary
+//!                    tree ([`reduce_fixed_tree`]) whose pairing
+//!                    depends only on the group count, and install the
+//!                    sum on rank 0 (`write_acc`)
+//!   5. **apply**   — rank 0 runs `apply` (noise + SGD step) and
+//!                    broadcasts the new parameters to the other ranks
+//!                    through the `read_params`/`write_params` seam
+//!   6. **account** — record the (q, sigma) step in the RDP accountant
 //! * [`TrainSession::eval`] — held-out evaluation at the current
-//!   parameters (mid-run cadence or final).
+//!   parameters (mid-run cadence or final; rank 0 only).
 //! * [`TrainSession::checkpoint`] / [`TrainSession::resume`] — the
 //!   save → drop → load → resume seam; a resumed session is
 //!   bitwise-identical to an uninterrupted run (property-tested in
 //!   `rust/tests/session_api.rs`).
 //! * [`TrainSession::finish`] — close out into a [`TrainReport`].
 //!
+//! Because the group decomposition and the reduction tree are pure
+//! functions of the sampled batch and the configuration — never of the
+//! worker count — the whole trajectory (parameters, losses, epsilon)
+//! is **bitwise-identical for every `workers` value** (DESIGN.md §8;
+//! property-tested in `rust/tests/parallel_train.rs`). `workers` is
+//! therefore a wall-clock knob like the kernel thread count, and is
+//! excluded from the checkpoint fingerprint.
+//!
 //! [`Trainer::run`] is a thin loop over a session; the bench entry
 //! points (`bench_accum`/`bench_apply`) and `benchreport.rs` drive the
 //! same session hot path, so there is exactly one copy of the loop.
 //!
-//! The per-section wall-clock breakdown is this codebase's analogue of
-//! the paper's Nsight profile (Table 2); compile time is tracked
+//! The per-section breakdown is this codebase's analogue of the
+//! paper's Nsight profile (Table 2); compile time is tracked
 //! separately (Fig. A.2) and excluded from throughput, mirroring how the
 //! paper discounts JAX compilation when comparing steady-state rates.
 //! Every compile this loop causes — accum, apply, *and eval* — is
 //! attributed to `SectionTimes::compile` from the single
-//! `Prepared::compile_seconds` lookup.
+//! `Prepared::compile_seconds` lookup. Section times sum each call's
+//! seconds across workers, so with `workers > 1` they are aggregate
+//! worker-seconds (the `time(1)` "user" view), not wall-clock —
+//! wall-clock scaling is what `dpshort bench --workers` measures.
 
-use crate::coordinator::batcher::{BatchMemoryManager, BatchingMode, PhysicalBatch};
+#![warn(missing_docs)]
+
+use crate::cluster::parallel::{plan_groups, reduce_fixed_tree, run_groups, ChunkRun};
+use crate::coordinator::batcher::{BatchingMode, PhysicalBatch};
 use crate::coordinator::config::TrainConfig;
 use crate::coordinator::sampler::{PoissonSampler, Sampler};
 use crate::data::SyntheticDataset;
@@ -48,6 +74,7 @@ use crate::runtime::{
 use crate::util::rng::ChaChaRng;
 use anyhow::{anyhow, Result};
 use serde::{Deserialize, Serialize};
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// Full-width per-step noise seed: the high 32 bits are a per-experiment
@@ -74,6 +101,11 @@ pub fn per_step_noise_seed(experiment_seed: u64, step: u64) -> u64 {
 }
 
 /// Wall-clock seconds per pipeline section (the Table-2 analogue).
+///
+/// Each call's seconds are summed wherever it ran, so with
+/// data-parallel `workers > 1` the `data`/`accum` sections are
+/// aggregate worker-seconds (the `time(1)` "user" view), not elapsed
+/// wall-clock.
 #[derive(Debug, Clone, Copy, Default, Serialize, Deserialize)]
 pub struct SectionTimes {
     /// Poisson sampling + batch splitting (host).
@@ -89,6 +121,8 @@ pub struct SectionTimes {
 }
 
 impl SectionTimes {
+    /// Total training-loop seconds (every section except compile —
+    /// the throughput denominator).
     pub fn training_total(&self) -> f64 {
         self.sampling + self.data + self.accum + self.apply
     }
@@ -97,6 +131,7 @@ impl SectionTimes {
 /// One optimizer step's log entry.
 #[derive(Debug, Clone, Serialize, Deserialize)]
 pub struct StepLog {
+    /// Step index (0-based).
     pub step: u64,
     /// True sampled logical batch size (varies under Poisson!).
     pub logical_batch: usize,
@@ -111,13 +146,21 @@ pub struct StepLog {
 /// Result of a training run.
 #[derive(Debug, Serialize)]
 pub struct TrainReport {
+    /// Model name the run trained.
     pub model: String,
+    /// Clipping variant (nonprivate | naive | masked | ghost | bk).
     pub variant: String,
+    /// Batching mode the run used (Algorithm 2 vs naive).
     pub mode: BatchingMode,
+    /// Resolved noise multiplier sigma (0 for the non-private baseline).
     pub noise_multiplier: f64,
+    /// Epsilon spent over the run's compositions at `delta`.
     pub epsilon_spent: f64,
+    /// Privacy parameter delta of the accounting.
     pub delta: f64,
+    /// Per-step logs, in step order (resumed steps included).
     pub steps: Vec<StepLog>,
+    /// Per-section timing breakdown (see [`SectionTimes`]).
     pub sections: SectionTimes,
     /// Real examples per second over sample+data+accum+apply time.
     pub throughput: f64,
@@ -131,7 +174,9 @@ pub struct TrainReport {
     /// Median + bootstrap 95% CI over the per-accum-call samples
     /// (`None` when no accum call produced a timed sample).
     pub accum_throughput: Option<Summary>,
+    /// Mean held-out loss, when evaluation ran.
     pub eval_loss: Option<f64>,
+    /// Held-out accuracy in [0, 1], when evaluation ran.
     pub eval_accuracy: Option<f64>,
     /// Held-out examples the eval metrics actually averaged over. The
     /// eval executable has a fixed AOT batch size, so a request that is
@@ -179,10 +224,13 @@ pub struct TrainCheckpoint {
 }
 
 impl TrainCheckpoint {
+    /// Serialize to compact JSON (exact: serde's ryu formatting
+    /// round-trips every finite float bit-for-bit).
     pub fn to_json(&self) -> serde_json::Result<String> {
         serde_json::to_string(self)
     }
 
+    /// Parse a checkpoint serialized by [`Self::to_json`].
     pub fn from_json(text: &str) -> serde_json::Result<Self> {
         serde_json::from_str(text)
     }
@@ -217,9 +265,17 @@ fn dtype_of(config: &TrainConfig) -> &'static str {
 /// The trajectory-shaping identity of a run, for checkpoint/resume
 /// validation. `{:?}` on the floats is the shortest round-trip (ryu)
 /// form, so distinct values never collide through formatting.
+///
+/// Deliberately **excludes** `workers` (and the kernel thread count):
+/// both are wall-clock knobs whose trajectories are bitwise-identical,
+/// so a checkpoint taken at 4 workers must resume at 1 (and vice
+/// versa). The leading tag is `v2` because this PR changed the step's
+/// accumulation semantics (fixed-tree group reduction, DESIGN.md §8):
+/// a `v1` checkpoint's parameters came from a different — sequential —
+/// fold and must not silently continue under the new one.
 fn config_fingerprint(config: &TrainConfig, sigma: f64) -> String {
     format!(
-        "v1|{}|{}|{:?}|{}|N={}|q={:?}|B={}|lr={:?}|C={:?}|sigma={:?}|seed={}",
+        "v2|{}|{}|{:?}|{}|N={}|q={:?}|B={}|lr={:?}|C={:?}|sigma={:?}|seed={}",
         config.model,
         config.variant,
         config.mode,
@@ -265,12 +321,15 @@ pub struct Trainer<'rt> {
 }
 
 impl<'rt> Trainer<'rt> {
+    /// Build a trainer for `config` over `runtime` (resolves the model
+    /// view and synthesizes the training dataset).
     pub fn new(runtime: &'rt Runtime, config: TrainConfig) -> Result<Self> {
         let model = runtime.model(&config.model)?;
         let dataset = training_dataset(&config, &model);
         Ok(Self { runtime, model, config, dataset })
     }
 
+    /// The model view this trainer drives.
     pub fn model(&self) -> &ModelRuntime {
         &self.model
     }
@@ -379,9 +438,14 @@ pub struct TrainSession<'rt> {
     /// (mid-run eval cadence must not re-generate the class patterns
     /// per call).
     held_out: Option<SyntheticDataset>,
+    /// Rank 0: the session that applies the noisy update and serves
+    /// eval/checkpoint.
     exec: Box<dyn ExecSession + 'rt>,
+    /// Ranks 1..workers — each is owned by one worker thread during the
+    /// accumulation phase of a step and receives the parameter
+    /// broadcast after every apply.
+    peers: Vec<Box<dyn ExecSession + 'rt>>,
     sampler: PoissonSampler,
-    bmm: BatchMemoryManager,
     /// Batch sizes lowered for (variant, dtype) — the Variable-mode
     /// chunking menu.
     available: Vec<usize>,
@@ -438,8 +502,13 @@ impl<'rt> TrainSession<'rt> {
         start: Option<TrainCheckpoint>,
     ) -> Result<Self> {
         let sigma = resolve_sigma(&config)?;
+        // The group grid divides the logical batch by this (previously
+        // asserted by the BatchMemoryManager constructor): fail at
+        // session construction, not with a panic mid-step.
+        if config.physical_batch == 0 {
+            return Err(anyhow!("physical batch size must be positive"));
+        }
         let sampler = PoissonSampler::new(config.dataset_size, config.sampling_rate, config.seed);
-        let bmm = BatchMemoryManager::new(config.physical_batch, config.mode);
         let available = model.accum_batches(&config.variant, dtype_of(&config));
         if available.is_empty() {
             return Err(anyhow!(
@@ -517,9 +586,16 @@ impl<'rt> TrainSession<'rt> {
                 (ckpt.step, ckpt.steps, Tensor::from_vec(ckpt.params))
             }
         };
-        // The session owns params + accumulator from here on (the
-        // donate_argnums analogue): the hot loop never copies the
-        // P-length vectors.
+        // The sessions own params + accumulator from here on (the
+        // donate_argnums analogue). Rank 0 is the apply/eval/checkpoint
+        // session; ranks 1.. are the data-parallel peers, opened from
+        // the same shared backend with the same starting parameters
+        // (the step loop re-broadcasts after every apply).
+        let workers = config.workers.max(1);
+        let mut peers = Vec::with_capacity(workers - 1);
+        for _ in 1..workers {
+            peers.push(runtime.open_session(&config.model, params.clone())?);
+        }
         let exec = runtime.open_session(&config.model, params)?;
 
         // denom = E[L] (Algorithm 1's 1/|L| with the expected batch — the
@@ -538,8 +614,8 @@ impl<'rt> TrainSession<'rt> {
             dataset,
             held_out: None,
             exec,
+            peers,
             sampler,
-            bmm,
             available,
             apply_prep,
             accountant,
@@ -561,6 +637,7 @@ impl<'rt> TrainSession<'rt> {
         &self.model
     }
 
+    /// The configuration this session runs.
     pub fn config(&self) -> &TrainConfig {
         &self.config
     }
@@ -607,8 +684,19 @@ impl<'rt> TrainSession<'rt> {
     }
 
     /// Replace the session's parameters (the resume/warm-start seam).
+    /// Broadcast to every rank, so a warm start behaves identically at
+    /// any worker count.
     pub fn write_params(&mut self, params: Tensor) -> Result<()> {
+        for peer in &mut self.peers {
+            peer.write_params(params.clone())?;
+        }
         self.exec.write_params(params)
+    }
+
+    /// Number of data-parallel worker sessions this run drives
+    /// (`config.workers`, floored at 1).
+    pub fn workers(&self) -> usize {
+        self.peers.len() + 1
     }
 
     /// Snapshot the resumable state: step counter, parameters, and the
@@ -640,41 +728,86 @@ impl<'rt> TrainSession<'rt> {
         })
     }
 
-    /// Take one optimizer step (see the module docs for the anatomy).
+    /// Take one optimizer step (see the module docs for the anatomy:
+    /// sample → plan → accum → reduce → apply → account). With
+    /// `workers > 1` the accumulation groups run concurrently, one
+    /// worker thread per peer session; results are recombined strictly
+    /// in group order, so the log, the reduced accumulator, and the
+    /// parameter trajectory are bitwise-identical for every worker
+    /// count.
     pub fn step(&mut self) -> Result<StepLog> {
         let t0 = Instant::now();
         let logical = self.sampler.sample(self.step);
-        let batches: Vec<PhysicalBatch> = match self.config.mode {
-            BatchingMode::Masked => self.bmm.split(&logical),
-            BatchingMode::Variable => BatchMemoryManager::split_naive(&logical, &self.available),
-        };
+        let groups = plan_groups(
+            &logical,
+            self.config.physical_batch,
+            self.config.mode,
+            &self.available,
+        );
         self.sections.sampling += t0.elapsed().as_secs_f64();
 
-        self.exec.zero_acc()?;
+        // One cache lookup per distinct chunk shape, *before* the
+        // workers fan out: compiles on first use of a size (the
+        // naive-JAX recompile cost, Fig A.2) are attributed here, so
+        // concurrent ranks can never race a compilation or double-count
+        // its seconds.
+        let dtype = dtype_of(&self.config);
+        let mut preps: BTreeMap<usize, Prepared> = BTreeMap::new();
+        for pb in groups.iter().flat_map(|g| &g.chunks) {
+            let b = pb.indices.len();
+            if !preps.contains_key(&b) {
+                let prep = self.model.prepare_accum(&self.config.variant, b, dtype)?;
+                self.sections.compile += prep.compile_seconds.unwrap_or(0.0);
+                preps.insert(b, prep);
+            }
+        }
+
+        // Shard the groups across the rank sessions and fold each
+        // group's partial accumulator (concurrently when peers exist).
+        let dataset = &self.dataset;
+        let exec_chunk = |sess: &mut dyn ExecSession, pb: &PhysicalBatch| -> Result<ChunkRun> {
+            let prep = &preps[&pb.indices.len()];
+            let t = Instant::now();
+            let (x, y) = dataset.batch(&pb.indices);
+            let data_secs = t.elapsed().as_secs_f64();
+            let t = Instant::now();
+            let stats = sess.accum(prep, &AccumArgs { x: &x, y: &y, mask: &pb.mask })?;
+            Ok(ChunkRun {
+                loss_sum: stats.loss_sum,
+                real: pb.real_count(),
+                computed: pb.indices.len(),
+                data_secs,
+                accum_secs: t.elapsed().as_secs_f64(),
+            })
+        };
+        let mut sessions: Vec<&mut dyn ExecSession> = Vec::with_capacity(1 + self.peers.len());
+        sessions.push(self.exec.as_mut());
+        for peer in &mut self.peers {
+            sessions.push(peer.as_mut());
+        }
+        let runs = run_groups(sessions, &groups, &exec_chunk)?;
+
+        // Deterministic recombination in group/chunk order: the loss
+        // log, the meter samples, and — through the fixed tree — the
+        // reduced accumulator never depend on rank timing.
         let mut loss_sum = 0.0f64;
         let mut computed = 0usize;
-        for pb in &batches {
-            let b = pb.indices.len();
-            // One cache lookup: compiles on first use of this size
-            // (the naive-JAX recompile cost, Fig A.2) and reports
-            // the compile time it spent, if any, so the attribution
-            // cannot drift from the execution.
-            let prep =
-                self.model.prepare_accum(&self.config.variant, b, dtype_of(&self.config))?;
-            self.sections.compile += prep.compile_seconds.unwrap_or(0.0);
-
-            let t = Instant::now();
-            let (x, y) = self.dataset.batch(&pb.indices);
-            self.sections.data += t.elapsed().as_secs_f64();
-
-            let t = Instant::now();
-            let stats = self.exec.accum(&prep, &AccumArgs { x: &x, y: &y, mask: &pb.mask })?;
-            let dt = t.elapsed().as_secs_f64();
-            self.sections.accum += dt;
-            self.meter.record_secs(pb.real_count(), dt);
-            loss_sum += stats.loss_sum as f64;
-            computed += b;
+        let mut physical_batches = 0usize;
+        let mut partials = Vec::with_capacity(runs.len());
+        for run in runs {
+            for c in &run.chunks {
+                loss_sum += c.loss_sum as f64;
+                computed += c.computed;
+                physical_batches += 1;
+                self.sections.data += c.data_secs;
+                self.sections.accum += c.accum_secs;
+                self.meter.record_secs(c.real, c.accum_secs);
+            }
+            partials.push(run.partial);
         }
+        let reduced = reduce_fixed_tree(partials)
+            .ok_or_else(|| anyhow!("step produced no accumulation groups"))?;
+        self.exec.write_acc(reduced)?;
 
         let t = Instant::now();
         let args = ApplyArgs {
@@ -686,13 +819,22 @@ impl<'rt> TrainSession<'rt> {
         self.exec.apply(&self.apply_prep, &args)?;
         self.sections.apply += t.elapsed().as_secs_f64();
 
+        // Parameter broadcast: rank 0 applied the update; the peers'
+        // next accum calls must see the same parameters.
+        if !self.peers.is_empty() {
+            let params = self.exec.read_params()?;
+            for peer in &mut self.peers {
+                peer.write_params(params.clone())?;
+            }
+        }
+
         if self.config.is_private() && self.sigma > 0.0 {
             self.accountant.record_step(self.config.sampling_rate, self.sigma);
         }
         let log = StepLog {
             step: self.step,
             logical_batch: logical.len(),
-            physical_batches: batches.len(),
+            physical_batches,
             computed_examples: computed,
             loss: loss_sum / logical.len().max(1) as f64,
         };

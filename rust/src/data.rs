@@ -94,8 +94,8 @@ impl SyntheticDataset {
         }
     }
 
-    /// Gather a batch: images [b, image, image, channels] row-major and
-    /// labels [b]. `indices` may repeat (Algorithm-2 padding does).
+    /// Gather a batch: images `[b, image, image, channels]` row-major
+    /// and labels `[b]`. `indices` may repeat (Algorithm-2 padding does).
     pub fn batch(&self, indices: &[u32]) -> (Vec<f32>, Vec<i32>) {
         let d = self.image_dim();
         let mut xs = vec![0.0f32; indices.len() * d];

@@ -6,21 +6,65 @@
 //! fixed-batch shortcut), virtual batching, optimized clipping methods
 //! (per-example / ghost / Book Keeping), the paper's masked fixed-shape
 //! JAX variant (Algorithm 2), an RDP privacy accountant, an analytic
-//! memory planner, and a multi-GPU cluster simulator for the scaling
-//! study.
+//! memory planner, and the multi-GPU scaling study both **simulated**
+//! ([`cluster::simulator`]) and **executed** ([`cluster::parallel`]: a
+//! data-parallel multi-session trainer whose trajectory is
+//! bitwise-identical for every worker count).
 //!
-//! Architecture (see DESIGN.md): Python/JAX/Pallas exist only at build
-//! time (`make artifacts`); this crate owns the entire training loop and
-//! executes models through a pluggable [`runtime::Backend`] — the
-//! pure-Rust reference executor by default, or the AOT-lowered HLO via
-//! the PJRT C API behind the `pjrt` feature.
+//! Architecture (see DESIGN.md; quickstart in README.md): Python/JAX/
+//! Pallas exist only at build time (`make artifacts`); this crate owns
+//! the entire training loop and executes models through a pluggable
+//! [`runtime::Backend`] — the pure-Rust reference executor by default,
+//! or the AOT-lowered HLO via the PJRT C API behind the `pjrt` feature.
 //!
 //! ```text
-//! L3 (this crate)   sampler -> batcher -> session.accum ->
-//!                   session.apply -> accountant.step()
+//! L3 (this crate)   sampler -> group planner -> [session.accum x N workers]
+//!                   -> tree-reduce -> session.apply -> accountant.step()
 //! L2 (jax, AOT)     model fwd/bwd variants, flat-param ABI
 //! L1 (pallas, AOT)  clip-mask-accumulate / ghost-norm / noisy-step
 //! ```
+//!
+//! ## Worked example
+//!
+//! Train the offline reference model for two DP-SGD steps, once with
+//! two data-parallel workers and once single-session — the paper's
+//! scaling setup in miniature. The determinism contract (DESIGN.md §8)
+//! makes the two trajectories bit-for-bit identical; only wall-clock
+//! differs:
+//!
+//! ```
+//! use dp_shortcuts::runtime::REFERENCE_MODEL;
+//! use dp_shortcuts::{Runtime, TrainConfig, Trainer};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let rt = Runtime::reference(); // pure-Rust backend, no artifacts
+//! let cfg = TrainConfig {
+//!     model: REFERENCE_MODEL.into(),   // "ref-linear"
+//!     dataset_size: 64,
+//!     sampling_rate: 0.25,             // E[L] = 16, Poisson-sampled
+//!     physical_batch: 8,               // Algorithm-2 masked shapes
+//!     steps: 2,
+//!     noise_multiplier: Some(1.0),
+//!     eval_examples: 0,
+//!     workers: 2,                      // data-parallel sessions
+//!     ..TrainConfig::default()
+//! };
+//! let parallel = Trainer::new(&rt, cfg.clone())?.run()?;
+//! assert_eq!(parallel.steps.len(), 2);
+//! assert!(parallel.epsilon_spent > 0.0); // RDP accounting ran
+//!
+//! // Same run, one worker: bitwise-identical parameters.
+//! let solo_cfg = TrainConfig { workers: 1, ..cfg };
+//! let solo = Trainer::new(&Runtime::reference(), solo_cfg)?.run()?;
+//! assert_eq!(solo.final_params, parallel.final_params);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Longer-running entry points: `dpshort train --workers N` (the CLI
+//! over [`TrainSession`]), `dpshort bench --workers 1,2,4` (measured
+//! scaling curve, DESIGN.md §6), and `examples/scaling_study.rs`
+//! (measured curve overlaid on the cluster simulator's prediction).
 
 pub mod benchreport;
 pub mod clipping;

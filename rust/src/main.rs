@@ -37,7 +37,10 @@ const USAGE: &str = "usage: dpshort <list|train|bench|plan|account|scale|report>
   train/bench:  --model NAME --variant V --batch B --steps N --rate Q
                 --dataset N --lr LR --sigma S --epsilon E --delta D
                 --seed S --bf16 --naive-mode --eval N --json
-  train:        --load-params FILE  warm-start from saved parameters
+  train:        --workers N  data-parallel worker sessions (wall-clock
+                             only: the trajectory is bitwise-identical
+                             for every N; default 1)
+                --load-params FILE  warm-start from saved parameters
                                     (fresh step counter and privacy
                                     accounting; exact resume is the
                                     TrainCheckpoint API)
@@ -45,6 +48,9 @@ const USAGE: &str = "usage: dpshort <list|train|bench|plan|account|scale|report>
   bench:        accum/apply throughput sweep -> BENCH_throughput.json
                 --repeats R --quick --out FILE (default BENCH_throughput.json)
                 --model/--variant/--batch restrict the sweep
+                --workers LIST  worker counts for the data-parallel
+                                training-throughput scaling sweep
+                                (default 1,2,4; schema v2 `workers`)
                 --check FILE  validate an emitted file's schema and exit
   account:      --rate Q --steps N --delta D [--sigma S | --epsilon E]
   scale:        --model NAME --gpus LIST (e.g. 1,4,8,16,32,80)
@@ -76,6 +82,7 @@ fn config_from(args: &Args, rt: &Runtime) -> Result<TrainConfig> {
     c.delta = args.get_parse_or("delta", c.delta).map_err(|e| anyhow!(e))?;
     c.seed = args.get_parse_or("seed", c.seed).map_err(|e| anyhow!(e))?;
     c.eval_examples = args.get_parse_or("eval", c.eval_examples).map_err(|e| anyhow!(e))?;
+    c.workers = args.get_parse_or("workers", c.workers).map_err(|e| anyhow!(e))?;
     if args.get_bool("naive-mode") || c.variant == "naive" {
         c.mode = BatchingMode::Variable;
     }
@@ -121,7 +128,7 @@ fn cmd_list(rt: &Runtime) -> Result<()> {
 fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
     let cfg = config_from(args, rt)?;
     println!(
-        "train: backend={} model={} variant={} mode={:?} B={} q={} steps={} E[L]={}",
+        "train: backend={} model={} variant={} mode={:?} B={} q={} steps={} E[L]={} workers={}",
         rt.backend_name(),
         cfg.model,
         cfg.variant,
@@ -129,7 +136,8 @@ fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
         cfg.physical_batch,
         cfg.sampling_rate,
         cfg.steps,
-        cfg.expected_logical_batch()
+        cfg.expected_logical_batch(),
+        cfg.workers.max(1)
     );
     // Step-driven session: the same hot loop Trainer::run wraps, but
     // with the checkpoint seam exposed for --load-params/--save-params.
@@ -210,6 +218,12 @@ fn cmd_bench(rt: &Runtime, args: &Args) -> Result<()> {
     opts.batch = args.get_parse("batch").map_err(|e| anyhow!(e))?;
     opts.seed = args.get_parse_or("seed", opts.seed).map_err(|e| anyhow!(e))?;
     opts.repeats = args.get_parse_or("repeats", opts.repeats).map_err(|e| anyhow!(e))?;
+    if let Some(list) = args.get("workers") {
+        opts.worker_counts = list
+            .split(',')
+            .map(|s| s.trim().parse::<usize>().map_err(|e| anyhow!("bad worker count: {e}")))
+            .collect::<Result<_>>()?;
+    }
     let report = benchreport::run_sweep(rt, &opts)?;
     for e in &report.entries {
         match e.kind.as_str() {
@@ -234,6 +248,19 @@ fn cmd_bench(rt: &Runtime, args: &Args) -> Result<()> {
             "sections (s): sampling={:.3} data={:.3} accum={:.3} apply={:.3} compile={:.3}",
             s.sampling, s.data, s.accum, s.apply, s.compile
         );
+    }
+    if let Some(curve) = &report.workers {
+        println!("data-parallel scaling (wall clock, bitwise-identical results):");
+        let base = curve.iter().find(|w| w.workers == 1).map(|w| w.throughput);
+        for w in curve {
+            let speedup = base
+                .map(|b| format!("  {:.2}x vs 1 worker", w.throughput / b))
+                .unwrap_or_default();
+            println!(
+                "  workers={:<3} {:>10.1} ex/s over {} steps{speedup}",
+                w.workers, w.throughput, w.steps
+            );
+        }
     }
     let out = PathBuf::from(args.get_or("out", benchreport::DEFAULT_OUT));
     report.write(&out)?;

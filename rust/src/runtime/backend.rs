@@ -51,8 +51,12 @@
 //! `rust/tests/session_api.rs` enforce it.
 //!
 //! The trait is object-safe; the runtime facade holds
-//! `Arc<dyn Backend + Send + Sync>` so sessions can later be driven
-//! from worker threads.
+//! `Arc<dyn Backend + Send + Sync>` and the data-parallel executor
+//! ([`crate::cluster::parallel`]) drives one session per worker thread
+//! — `ExecSession: Send` plus the `read_acc`/`write_acc` all-reduce
+//! seam are what make that possible.
+
+#![warn(missing_docs)]
 
 use super::compile_cache::CompileRecord;
 use super::manifest::{ExecutableMeta, ModelMeta};
@@ -168,6 +172,20 @@ pub trait ExecSession: Send {
     /// transfer for a device-resident backend). Fails if the length
     /// does not match the model.
     fn write_params(&mut self, params: Tensor) -> Result<()>;
+
+    /// Copy the bound gradient accumulator out — the **all-reduce
+    /// seam** (DESIGN.md §8): the data-parallel driver reads each
+    /// rank's partial accumulator here before the deterministic tree
+    /// reduction. A device-resident backend implements this as a
+    /// device-to-host transfer (or, with real collectives, replaces
+    /// the read/reduce/write round-trip with an in-fabric all-reduce
+    /// that honors the same fixed pairing order).
+    fn read_acc(&self) -> Result<Tensor>;
+
+    /// Replace the bound gradient accumulator — the reduced sum is
+    /// installed here on rank 0 before its `apply` call. Fails if the
+    /// length does not match the model.
+    fn write_acc(&mut self, acc: Tensor) -> Result<()>;
 }
 
 /// Host-buffered [`ExecSession`] over a backend's donating entry
@@ -215,6 +233,22 @@ impl<B: Backend + ?Sized> ExecSession for HostSession<'_, B> {
             ));
         }
         self.params = params;
+        Ok(())
+    }
+
+    fn read_acc(&self) -> Result<Tensor> {
+        Ok(self.acc.clone())
+    }
+
+    fn write_acc(&mut self, acc: Tensor) -> Result<()> {
+        if acc.len() != self.meta.n_params {
+            return Err(anyhow!(
+                "write_acc length {} != n_params {}",
+                acc.len(),
+                self.meta.n_params
+            ));
+        }
+        self.acc = acc;
         Ok(())
     }
 }
@@ -510,6 +544,34 @@ mod tests {
         let before = sess.read_params().unwrap();
         sess.apply(&prep, &apply).unwrap();
         assert_eq!(sess.read_params().unwrap(), before);
+    }
+
+    #[test]
+    fn session_acc_seam_reads_and_writes_the_bound_accumulator() {
+        // The all-reduce seam: read_acc exposes the bound accumulator,
+        // write_acc installs a (reduced) replacement that the next
+        // apply consumes.
+        let b = CopyOnly;
+        let meta = toy_meta();
+        let prep = toy_prep();
+        let mut sess = b
+            .open_session(Path::new("."), &meta, Tensor::vec1(&[1.0, 2.0, 3.0]))
+            .unwrap();
+        assert_eq!(sess.read_acc().unwrap(), Tensor::zeros(3), "fresh session acc is zero");
+
+        let (x, y, mask) = (vec![0.0f32; 2], vec![0, 1], vec![1.0f32, 1.0]);
+        sess.accum(&prep, &AccumArgs { x: &x, y: &y, mask: &mask }).unwrap();
+        assert_eq!(sess.read_acc().unwrap().as_slice()[0], 2.0);
+
+        // Install a "reduced" accumulator and apply: the step must use it.
+        sess.write_acc(Tensor::vec1(&[4.0, 0.0, 0.0])).unwrap();
+        let apply = ApplyArgs { seed: 1, denom: 2.0, lr: 0.5, noise_mult: 0.0 };
+        sess.apply(&prep, &apply).unwrap();
+        assert_eq!(sess.read_params().unwrap().as_slice()[0], 1.0 - 0.5 * 4.0 / 2.0);
+
+        // Length mismatch is rejected without touching the binding.
+        assert!(sess.write_acc(Tensor::zeros(1)).is_err());
+        assert_eq!(sess.read_acc().unwrap(), Tensor::vec1(&[4.0, 0.0, 0.0]));
     }
 
     #[test]

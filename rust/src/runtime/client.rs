@@ -296,8 +296,15 @@ impl ModelRuntime {
     }
 
     /// One gradient-accumulation call (the Algorithm 1/2 inner loop),
-    /// copying form. Legacy migration shim — hot loops drive an
-    /// [`ExecSession`] instead.
+    /// copying form.
+    ///
+    /// **Deprecated (migration shim)** — as if
+    /// `#[deprecated(note = "open an ExecSession via open_session();
+    /// the bound-buffer accum is the hot path")]`: the attribute is
+    /// withheld only so the bitwise-equivalence proptests can keep
+    /// exercising this path warning-free until it is deleted (planned
+    /// once the PJRT backend grows a device-resident session; see
+    /// CHANGES.md). New code must not call it.
     pub fn run_accum(
         &self,
         prep: &Prepared,
@@ -314,6 +321,10 @@ impl ModelRuntime {
     /// updated in place (the `donate_argnums` analogue — no P-length
     /// copy per physical batch). Bitwise-identical to
     /// [`Self::run_accum`] and to the session path.
+    ///
+    /// **Deprecated (migration shim)** — same guidance as
+    /// [`Self::run_accum`]: sessions bind the donated buffer once for
+    /// the whole run instead of threading it through every call.
     pub fn run_accum_into(
         &self,
         prep: &Prepared,
@@ -328,8 +339,12 @@ impl ModelRuntime {
 
     /// The once-per-logical-batch noise + SGD step, copying form, on an
     /// executable from [`Self::prepare_apply`] (same single-lookup
-    /// compile attribution as the accum path). Legacy migration shim —
-    /// hot loops drive an [`ExecSession`] instead.
+    /// compile attribution as the accum path).
+    ///
+    /// **Deprecated (migration shim)** — as if
+    /// `#[deprecated(note = "drive ExecSession::apply(); the session
+    /// owns the parameter buffer")]`; kept attribute-free for the
+    /// equivalence proptests only (deletion plan in CHANGES.md).
     pub fn run_apply(
         &self,
         prep: &Prepared,
@@ -343,6 +358,9 @@ impl ModelRuntime {
     /// Donating form of the apply call: `params` is the donated buffer,
     /// updated in place. Bitwise-identical to [`Self::run_apply`] and
     /// to the session path.
+    ///
+    /// **Deprecated (migration shim)** — same guidance as
+    /// [`Self::run_apply`].
     pub fn run_apply_into(
         &self,
         prep: &Prepared,
@@ -368,11 +386,13 @@ impl ModelRuntime {
     }
 
     /// Forward-only evaluation: `(loss_sum, ncorrect)` over the eval
-    /// batch (whose size is fixed by the lowered artifact). Legacy
-    /// convenience shim: prepares per call and drops the compile-time
-    /// attribution — loops should prepare once
-    /// ([`Self::prepare_eval`]) and use [`Self::run_eval_prepared`] or
-    /// a session.
+    /// batch (whose size is fixed by the lowered artifact).
+    ///
+    /// **Deprecated (migration shim)** — as if
+    /// `#[deprecated(note = "prepare once (prepare_eval) and use
+    /// run_eval_prepared or ExecSession::eval")]`: this form prepares
+    /// per call and drops the compile-time attribution. Deletion plan
+    /// in CHANGES.md.
     pub fn run_eval(&self, params: &Tensor, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
         let want = self
             .meta

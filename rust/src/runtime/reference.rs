@@ -28,12 +28,16 @@
 //!   in-place kernels directly — the session's bound `Tensor`s are the
 //!   working buffers. The copying forms are clone + donate, so all
 //!   entry points are identical by construction.
-//! * **Scratch arena** — per-call working sets (dlogits, clip scales,
-//!   losses, the apply noise vector) live in one reusable arena instead
-//!   of per-example `Vec` allocations. The arena sits behind a `Mutex`
-//!   (the backend is `Send + Sync` for `Arc<dyn Backend + Send + Sync>`
-//!   sharing); concurrent sessions serialize on it — a per-session
-//!   arena is future work once sessions actually run on worker threads.
+//! * **Scratch arenas** — per-call working sets (dlogits, clip scales,
+//!   losses, the apply noise vector) live in reusable arenas instead
+//!   of per-example `Vec` allocations. Arenas are pooled behind a
+//!   `Mutex<Vec<_>>`: a call pops one (or creates a fresh one on first
+//!   concurrent use) and returns it afterwards, so the lock is held
+//!   only for the pop/push — concurrent sessions driven by the
+//!   data-parallel executor (`cluster::parallel`) run their kernels
+//!   genuinely in parallel instead of serializing on a shared arena,
+//!   and the steady state still allocates nothing (one arena per
+//!   concurrently active session).
 //! * **Blocked matvec** — logits come from an 8-lane unrolled dot
 //!   product with a fixed reduction tree; each weight row stays hot
 //!   across the lane loop.
@@ -119,8 +123,9 @@ impl Scratch {
 }
 
 /// The pure-Rust reference CPU backend. `Send + Sync`: the compile
-/// cache and the scratch arena sit behind `Mutex`es so the backend can
-/// be shared as `Arc<dyn Backend + Send + Sync>` across sessions.
+/// cache and the scratch-arena pool sit behind `Mutex`es so the backend
+/// can be shared as `Arc<dyn Backend + Send + Sync>` across sessions —
+/// including sessions driven concurrently from worker threads.
 pub struct ReferenceBackend {
     cache: Mutex<CompileCache<RefExec>>,
     /// Seed for the synthesized initial parameters.
@@ -131,7 +136,34 @@ pub struct ReferenceBackend {
     /// `with_threads(_, n > 0)`: use exactly `threads` workers instead
     /// of the work-size heuristic (tests and explicit operator control).
     forced_threads: bool,
-    scratch: Mutex<Scratch>,
+    /// Scratch-arena pool: popped per call, pushed back afterwards, so
+    /// concurrent sessions never serialize on a shared arena.
+    scratch: Mutex<Vec<Scratch>>,
+}
+
+/// RAII checkout of one scratch arena from the backend's pool.
+struct PooledScratch<'a> {
+    pool: &'a Mutex<Vec<Scratch>>,
+    scratch: Option<Scratch>,
+}
+
+impl<'a> PooledScratch<'a> {
+    fn take(pool: &'a Mutex<Vec<Scratch>>) -> Self {
+        let scratch = pool.lock().unwrap().pop().unwrap_or_default();
+        Self { pool, scratch: Some(scratch) }
+    }
+
+    fn get(&mut self) -> &mut Scratch {
+        self.scratch.as_mut().expect("scratch present until drop")
+    }
+}
+
+impl Drop for PooledScratch<'_> {
+    fn drop(&mut self) {
+        if let Some(s) = self.scratch.take() {
+            self.pool.lock().unwrap().push(s);
+        }
+    }
 }
 
 impl ReferenceBackend {
@@ -159,7 +191,7 @@ impl ReferenceBackend {
             init_seed,
             threads,
             forced_threads: forced,
-            scratch: Mutex::new(Scratch::default()),
+            scratch: Mutex::new(vec![Scratch::default()]),
         }
     }
 
@@ -543,8 +575,8 @@ impl Backend for ReferenceBackend {
         };
         let mut sq_norms = vec![0.0f32; b];
 
-        let mut scratch = self.scratch.lock().unwrap();
-        let (dlogits, scale, losses) = scratch.accum(b, ncls);
+        let mut pooled = PooledScratch::take(&self.scratch);
+        let (dlogits, scale, losses) = pooled.get().accum(b, ncls);
 
         // Phase 1: per-example dlogits / losses / norms / scales,
         // parallel over fixed contiguous example partitions.
@@ -619,8 +651,8 @@ impl Backend for ReferenceBackend {
         }
         let out = params.as_mut_slice();
         if noise_mult != 0.0 {
-            let mut scratch = self.scratch.lock().unwrap();
-            let noise = scratch.noise(out.len());
+            let mut pooled = PooledScratch::take(&self.scratch);
+            let noise = pooled.get().noise(out.len());
             let mut rng = ChaChaRng::from_seed_stream(seed, 0, b"applynse");
             rng.fill_normals(noise);
             for ((pj, &aj), &z) in out.iter_mut().zip(acc.as_slice()).zip(noise.iter()) {

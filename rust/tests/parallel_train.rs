@@ -1,0 +1,261 @@
+//! Data-parallel determinism invariants — the acceptance gate of the
+//! multi-session executor (DESIGN.md §8): a `TrainSession` at any
+//! worker count must be **bitwise-identical** (parameters, losses,
+//! epsilon) to every other worker count and to the plain
+//! single-session `Trainer::run`, across batching modes, masks
+//! (including empty Poisson batches), and seeds — and a checkpoint
+//! taken at 4 workers must resume at 1 worker (and vice versa) exactly
+//! as if the worker count had never changed.
+
+use dp_shortcuts::cluster::parallel::{plan_groups, reduce_fixed_tree, shard_ranges};
+use dp_shortcuts::coordinator::batcher::BatchingMode;
+use dp_shortcuts::coordinator::config::TrainConfig;
+use dp_shortcuts::coordinator::trainer::{TrainCheckpoint, TrainSession, Trainer};
+use dp_shortcuts::runtime::{Runtime, Tensor, REFERENCE_MODEL};
+use proptest::prelude::*;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+fn config(variant: &str, mode: BatchingMode, seed: u64, workers: usize) -> TrainConfig {
+    TrainConfig {
+        model: REFERENCE_MODEL.into(),
+        variant: variant.into(),
+        mode,
+        dataset_size: 48,
+        sampling_rate: 0.4,
+        physical_batch: 4,
+        steps: 4,
+        lr: 0.05,
+        noise_multiplier: Some(1.1),
+        eval_examples: 0,
+        seed,
+        workers,
+        ..Default::default()
+    }
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(12))]
+
+    /// The headline contract: 1-, 2-, and 4-worker runs land on the
+    /// same bits as the legacy single-session `Trainer::run` path, in
+    /// both batching modes, across seeds and sampling rates (including
+    /// rates that produce empty logical batches).
+    #[test]
+    fn worker_count_never_changes_the_bits(
+        seed in 0u64..1_000,
+        masked in proptest::bool::ANY,
+        rate_idx in 0usize..3,
+    ) {
+        let (variant, mode) = if masked {
+            ("masked", BatchingMode::Masked)
+        } else {
+            ("naive", BatchingMode::Variable)
+        };
+        let mut reference: Option<dp_shortcuts::TrainReport> = None;
+        for workers in [1usize, 2, 4] {
+            let mut cfg = config(variant, mode, seed, workers);
+            cfg.sampling_rate = [0.0, 0.2, 0.5][rate_idx];
+            let rt = Runtime::reference();
+            let rep = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+            if let Some(want) = &reference {
+                prop_assert_eq!(
+                    bits(&rep.final_params),
+                    bits(&want.final_params),
+                    "workers={} diverged from workers=1 ({variant})",
+                    workers
+                );
+                prop_assert_eq!(rep.steps.len(), want.steps.len());
+                for (a, b) in rep.steps.iter().zip(&want.steps) {
+                    prop_assert_eq!(a.logical_batch, b.logical_batch);
+                    prop_assert_eq!(a.physical_batches, b.physical_batches);
+                    prop_assert_eq!(a.computed_examples, b.computed_examples);
+                    prop_assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "workers={}", workers);
+                }
+                prop_assert_eq!(rep.epsilon_spent.to_bits(), want.epsilon_spent.to_bits());
+            } else {
+                reference = Some(rep);
+            }
+        }
+    }
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(8))]
+
+    /// Checkpoint portability across worker counts: train at 4
+    /// workers, checkpoint mid-run, resume at 1 worker (and the
+    /// reverse) — both finish bitwise-identical to an uninterrupted
+    /// single-worker run. `workers` is deliberately outside the
+    /// checkpoint fingerprint.
+    #[test]
+    fn checkpoint_resumes_across_worker_counts(
+        seed in 0u64..1_000,
+        masked in proptest::bool::ANY,
+        split_at in 1u64..4,
+    ) {
+        let (variant, mode) = if masked {
+            ("masked", BatchingMode::Masked)
+        } else {
+            ("naive", BatchingMode::Variable)
+        };
+        let uninterrupted = {
+            let rt = Runtime::reference();
+            let cfg = config(variant, mode, seed, 1);
+            Trainer::new(&rt, cfg).unwrap().run().unwrap()
+        };
+
+        for (train_workers, resume_workers) in [(4usize, 1usize), (1, 4)] {
+            let ckpt_json = {
+                let rt = Runtime::reference();
+                let cfg = config(variant, mode, seed, train_workers);
+                let mut s = TrainSession::new(&rt, cfg).unwrap();
+                for _ in 0..split_at {
+                    s.step().unwrap();
+                }
+                s.checkpoint().unwrap().to_json().unwrap()
+            };
+            let rt = Runtime::reference();
+            let cfg = config(variant, mode, seed, resume_workers);
+            let ckpt = TrainCheckpoint::from_json(&ckpt_json).unwrap();
+            let mut resumed = TrainSession::resume(&rt, cfg, ckpt).unwrap();
+            while !resumed.done() {
+                resumed.step().unwrap();
+            }
+            let rep = resumed.finish().unwrap();
+            prop_assert_eq!(
+                bits(&rep.final_params),
+                bits(&uninterrupted.final_params),
+                "checkpoint at {} workers did not resume at {} workers",
+                train_workers,
+                resume_workers
+            );
+            prop_assert_eq!(
+                rep.epsilon_spent.to_bits(),
+                uninterrupted.epsilon_spent.to_bits()
+            );
+        }
+    }
+}
+
+/// Masked and naive-variable runs stay bitwise-identical under
+/// data-parallel execution: the accumulation-group grid — not the
+/// executable chunking — defines the reduction, so Algorithm-2 padding
+/// neutrality survives at every worker count.
+#[test]
+fn padding_neutrality_holds_at_every_worker_count() {
+    for workers in [1usize, 2, 4] {
+        let masked = {
+            let rt = Runtime::reference();
+            let cfg = config("masked", BatchingMode::Masked, 7, workers);
+            Trainer::new(&rt, cfg).unwrap().run().unwrap()
+        };
+        let naive = {
+            let rt = Runtime::reference();
+            let cfg = config("naive", BatchingMode::Variable, 7, workers);
+            Trainer::new(&rt, cfg).unwrap().run().unwrap()
+        };
+        assert_eq!(
+            bits(&masked.final_params),
+            bits(&naive.final_params),
+            "workers={workers}: Algorithm-2 padding changed the update"
+        );
+    }
+}
+
+/// More workers than accumulation groups (and a worker count that does
+/// not divide the group count) must be handled — surplus ranks idle,
+/// bits unchanged.
+#[test]
+fn surplus_and_ragged_worker_counts_are_exact() {
+    let base = {
+        let rt = Runtime::reference();
+        Trainer::new(&rt, config("masked", BatchingMode::Masked, 3, 1))
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    for workers in [3usize, 7, 32] {
+        let rt = Runtime::reference();
+        let rep = Trainer::new(&rt, config("masked", BatchingMode::Masked, 3, workers))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(bits(&rep.final_params), bits(&base.final_params), "workers={workers}");
+    }
+}
+
+/// A zero physical batch must fail at session construction with a
+/// clear error, not panic inside the first step's group planner (the
+/// guard the old BatchMemoryManager constructor used to assert).
+#[test]
+fn zero_physical_batch_is_a_construction_error() {
+    for (variant, mode) in [("masked", BatchingMode::Masked), ("naive", BatchingMode::Variable)] {
+        let rt = Runtime::reference();
+        let mut cfg = config(variant, mode, 0, 1);
+        cfg.physical_batch = 0;
+        let err = TrainSession::new(&rt, cfg).err().expect("must not construct");
+        assert!(err.to_string().contains("physical batch"), "{err:#}");
+    }
+}
+
+/// `workers: 0` is floored to one session, not an error (the CLI
+/// default path).
+#[test]
+fn zero_workers_means_one() {
+    let rt = Runtime::reference();
+    let zero = Trainer::new(&rt, config("masked", BatchingMode::Masked, 5, 0))
+        .unwrap()
+        .run()
+        .unwrap();
+    let one = Trainer::new(&Runtime::reference(), config("masked", BatchingMode::Masked, 5, 1))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(bits(&zero.final_params), bits(&one.final_params));
+}
+
+/// A warm start written through `TrainSession::write_params` reaches
+/// every rank: the broadcast keeps multi-worker warm starts identical
+/// to single-worker ones.
+#[test]
+fn warm_start_broadcasts_to_all_ranks() {
+    let rt = Runtime::reference();
+    let mut donor = TrainSession::new(&rt, config("masked", BatchingMode::Masked, 9, 1)).unwrap();
+    donor.step().unwrap();
+    let warm = donor.read_params().unwrap();
+
+    let run_from = |workers: usize, params: Tensor| {
+        let rt = Runtime::reference();
+        let mut s = TrainSession::new(&rt, config("masked", BatchingMode::Masked, 9, workers))
+            .unwrap();
+        s.write_params(params).unwrap();
+        while !s.done() {
+            s.step().unwrap();
+        }
+        s.finish().unwrap()
+    };
+    let solo = run_from(1, warm.clone());
+    let fleet = run_from(4, warm);
+    assert_eq!(bits(&solo.final_params), bits(&fleet.final_params));
+}
+
+/// Unit-level spot checks of the building blocks exposed through
+/// `cluster::parallel` (the proptest-heavy coverage lives in the
+/// module's own tests; this pins the public seam).
+#[test]
+fn parallel_building_blocks_are_exposed_and_deterministic() {
+    let ranges = shard_ranges(10, 4);
+    assert_eq!(ranges.iter().map(|r| r.len()).sum::<usize>(), 10);
+    let groups = plan_groups(&(0..10u32).collect::<Vec<_>>(), 4, BatchingMode::Masked, &[4]);
+    assert_eq!(groups.len(), 3);
+    let reduced = reduce_fixed_tree(vec![
+        Tensor::vec1(&[1.0, 2.0]),
+        Tensor::vec1(&[10.0, 20.0]),
+        Tensor::vec1(&[100.0, 200.0]),
+    ])
+    .unwrap();
+    assert_eq!(reduced.as_slice(), &[111.0, 222.0]);
+}
