@@ -2,9 +2,10 @@
 //! measures real single-worker throughput of the private and non-private
 //! executables, simulates data-parallel scaling over a 4-GPU-per-node
 //! cluster with hierarchical ring all-reduce — and, when a
-//! `BENCH_throughput.json` (schema v2, `dpshort bench --workers`) is
-//! present, overlays the *measured* data-parallel worker curve from the
-//! real multi-session executor (DESIGN.md §8) against the simulation.
+//! `BENCH_throughput.json` (schema v3, `dpshort bench --workers`) is
+//! present, overlays the *measured* data-parallel worker curves from
+//! the real multi-session executor (DESIGN.md §8) — one series per
+//! (model, clip method) — against the simulation.
 //!
 //! ```bash
 //! cargo run --release --example scaling_study -- [model] [gpus,...] [bench.json]
@@ -19,10 +20,12 @@ use dp_shortcuts::report::print_scaling_study;
 use dp_shortcuts::runtime::Runtime;
 use std::path::Path;
 
-/// Print the measured data-parallel curve from a schema-v2 bench file,
-/// if one exists and carries it. Returns whether the overlay (or its
-/// file-specific guidance) was printed — `false` only when no bench
-/// file exists at all, so the caller prints exactly one fallback line.
+/// Print the measured data-parallel curves from a bench file, if one
+/// exists and carries them — one series per (model, clip method) in a
+/// schema-v3 file; v2 files hold a single unkeyed series. Returns
+/// whether the overlay (or its file-specific guidance) was printed —
+/// `false` only when no bench file exists at all, so the caller prints
+/// exactly one fallback line.
 fn print_measured_overlay(path: &Path) -> anyhow::Result<bool> {
     if !path.exists() {
         return Ok(false);
@@ -39,51 +42,70 @@ fn print_measured_overlay(path: &Path) -> anyhow::Result<bool> {
         );
         return Ok(true);
     };
-    let Some(base) = curve.iter().find(|w| w.workers == 1) else {
-        println!(
-            "\n(measured overlay: {} has no 1-worker baseline entry — add 1 to \
-             the bench --workers list for speedup normalization)",
-            path.display()
-        );
-        return Ok(true);
-    };
-    println!(
-        "\n== measured data-parallel scaling ({}, backend {}, model {}) ==",
-        path.display(),
-        report.backend,
-        base.model
-    );
-    println!(
-        "  {:>7} {:>12} {:>9} {:>7}",
-        "workers", "ex/s (wall)", "speedup", "eff"
-    );
-    let mut points = Vec::new();
+    // Series in first-appearance order; v2 files yield exactly one
+    // (their rows carry an empty clip_method).
+    let mut series: Vec<(&str, &str)> = Vec::new();
     for w in curve {
-        let speedup = w.throughput / base.throughput;
-        println!(
-            "  {:>7} {:>12.1} {:>8.2}x {:>6.1}%",
-            w.workers,
-            w.throughput,
-            speedup,
-            100.0 * speedup / w.workers as f64
-        );
-        if w.workers > 1 {
-            points.push((w.workers as f64, speedup));
+        let key = (w.model.as_str(), w.clip_method.as_str());
+        if !series.contains(&key) {
+            series.push(key);
         }
     }
-    if !points.is_empty() {
-        let frac = fit_parallel_fraction(&points);
+    let mut printed_any = false;
+    for (model, method) in series {
+        let rows: Vec<_> = curve
+            .iter()
+            .filter(|w| w.model == model && w.clip_method == method)
+            .collect();
+        let Some(base) = rows.iter().find(|w| w.workers == 1) else {
+            println!(
+                "\n(measured overlay: {model}/{method} has no 1-worker baseline row — \
+                 add 1 to the bench --workers list for speedup normalization)"
+            );
+            printed_any = true;
+            continue;
+        };
+        let label = if method.is_empty() { "(v2 file)" } else { method };
         println!(
-            "  Amdahl parallel fraction (measured): {:.2}% \
-             (paper: private 99.5%, non-private 98.9%)",
-            frac * 100.0
+            "\n== measured data-parallel scaling ({}, backend {}, model {model}, clip {label}) ==",
+            path.display(),
+            report.backend,
+        );
+        println!(
+            "  {:>7} {:>12} {:>9} {:>7}",
+            "workers", "ex/s (wall)", "speedup", "eff"
+        );
+        let mut points = Vec::new();
+        for w in &rows {
+            let speedup = w.throughput / base.throughput;
+            println!(
+                "  {:>7} {:>12.1} {:>8.2}x {:>6.1}%",
+                w.workers,
+                w.throughput,
+                speedup,
+                100.0 * speedup / w.workers as f64
+            );
+            if w.workers > 1 {
+                points.push((w.workers as f64, speedup));
+            }
+        }
+        if !points.is_empty() {
+            let frac = fit_parallel_fraction(&points);
+            println!(
+                "  Amdahl parallel fraction (measured): {:.2}% \
+                 (paper: private 99.5%, non-private 98.9%)",
+                frac * 100.0
+            );
+        }
+        printed_any = true;
+    }
+    if printed_any {
+        println!(
+            "  NOTE: reference-backend workers share one CPU, so measured efficiency\n\
+             \x20 sits below the simulated multi-GPU curve; compare the *shape* (the\n\
+             \x20 Amdahl fraction), as the paper's Figure 7 does."
         );
     }
-    println!(
-        "  NOTE: reference-backend workers share one CPU, so measured efficiency\n\
-         \x20 sits below the simulated multi-GPU curve; compare the *shape* (the\n\
-         \x20 Amdahl fraction), as the paper's Figure 7 does."
-    );
     Ok(true)
 }
 

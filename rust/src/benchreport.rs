@@ -4,17 +4,20 @@
 //! Runs the steady-state accum/apply sweep over the active backend's
 //! manifest (the paper's Figures 1/2/4/6 estimator: medians with seeded
 //! bootstrap 95% CIs), measures data-parallel training throughput per
-//! worker count (the measured side of the paper's Figure 7 scaling
-//! study), and emits `BENCH_throughput.json`, so every PR records the
-//! measured perf trajectory instead of printing text that evaporates.
-//! The schema (version 2, DESIGN.md §6):
+//! (model, clip method, worker count) — the measured side of the
+//! paper's Figure 7 scaling study, across the executable clipping
+//! methods — and emits `BENCH_throughput.json`, so every PR records
+//! the measured perf trajectory instead of printing text that
+//! evaporates. The schema (version 3, DESIGN.md §6):
 //!
 //! ```json
 //! {
-//!   "schema_version": 2,
+//!   "schema_version": 3,
 //!   "backend": "reference",
 //!   "seed": 0,
 //!   "quick": true,
+//!   "models": ["mlp-small", "ref-linear"],
+//!   "clip_methods": ["per-example", "ghost"],
 //!   "sections": {"sampling": .., "data": .., "accum": .., "apply": .., "compile": ..},
 //!   "entries": [
 //!     {"kind": "accum", "model": "ref-linear", "variant": "masked",
@@ -25,23 +28,30 @@
 //!      "batch": null, "repeats": 30, "unit": "calls_per_sec", ...}
 //!   ],
 //!   "workers": [
-//!     {"workers": 1, "model": "ref-linear", "steps": 4,
-//!      "throughput": 1.0e5, "unit": "examples_per_sec", "secs_total": ..},
+//!     {"workers": 1, "model": "ref-linear", "clip_method": "ghost",
+//!      "steps": 4, "throughput": 1.0e5, "unit": "examples_per_sec",
+//!      "secs_total": ..},
 //!     {"workers": 2, ...}, {"workers": 4, ...}
 //!   ]
 //! }
 //! ```
 //!
-//! `workers` entries time the *wall clock* of a short masked training
-//! run at each worker count over the data-parallel executor
-//! (DESIGN.md §8) — identical logical work per entry, since the
-//! trajectory is bitwise worker-count-invariant — so the ratios are a
-//! directly measured scaling curve that `examples/scaling_study.rs`
-//! overlays against the `cluster::simulator` Amdahl predictions.
+//! `workers` rows are keyed by `(model, clip_method, workers)`: each
+//! times the *wall clock* of a short fixed-shape training run of that
+//! model under that clipping method at that worker count, over the
+//! data-parallel executor (DESIGN.md §8) — identical logical work per
+//! row, since the trajectory is bitwise worker-count- *and*
+//! clip-method-invariant — so the ratios are directly measured scaling
+//! curves that `examples/scaling_study.rs` overlays against the
+//! `cluster::simulator` Amdahl predictions. `models` / `clip_methods`
+//! echo the run configuration; [`BenchReport::validate`] — the schema
+//! gate CI runs against the emitted file (`dpshort bench --check`) —
+//! rejects a v3 file whose rows name a model or clip method absent
+//! from that configuration (unknown keys used to pass `--check`
+//! silently).
 //!
-//! Version 1 files (no `workers` field) remain valid:
-//! [`BenchReport::validate`] — the schema gate CI runs against the
-//! emitted file (`dpshort bench --check`) — accepts both versions.
+//! Version 1 (no `workers`) and version 2 (worker curve without
+//! `clip_method` keys) files remain valid.
 
 use crate::coordinator::batcher::BatchingMode;
 use crate::coordinator::config::TrainConfig;
@@ -54,10 +64,12 @@ use std::path::Path;
 use std::time::Instant;
 
 /// Version stamp of the `BENCH_throughput.json` schema this build
-/// emits. v2 added the per-worker-count `workers` scaling entries;
-/// [`BenchReport::validate`] still accepts v1 files (which predate the
-/// field).
-pub const SCHEMA_VERSION: u32 = 2;
+/// emits. v2 added the per-worker-count `workers` scaling entries; v3
+/// keys those rows by `(model, clip_method, workers)` and echoes the
+/// run config (`models` / `clip_methods`) so `--check` can reject rows
+/// naming unknown keys. [`BenchReport::validate`] still accepts v1/v2
+/// files (which predate the fields).
+pub const SCHEMA_VERSION: u32 = 3;
 
 /// Oldest schema version [`BenchReport::validate`] accepts.
 pub const MIN_SCHEMA_VERSION: u32 = 1;
@@ -105,6 +117,10 @@ pub struct WorkerEntry {
     pub workers: usize,
     /// Model the run trained.
     pub model: String,
+    /// Clipping method of this run (schema v3; one of the report's
+    /// `clip_methods`). Empty in v1/v2 files, which predate the key.
+    #[serde(default, skip_serializing_if = "String::is_empty")]
+    pub clip_method: String,
     /// Optimizer steps timed.
     pub steps: u64,
     /// Real (sampled) examples per wall-clock second over the step
@@ -127,6 +143,15 @@ pub struct BenchReport {
     pub seed: u64,
     /// Whether the `--quick` smoke subset produced this report.
     pub quick: bool,
+    /// Run config echo (schema v3): the models this sweep covered.
+    /// Every entry/worker row must name one of them — the validator's
+    /// defense against rows citing models the run never measured.
+    #[serde(default, skip_serializing_if = "Vec::is_empty")]
+    pub models: Vec<String>,
+    /// Run config echo (schema v3): the clip methods of the worker
+    /// scaling sweep. Every worker row's `clip_method` must be one.
+    #[serde(default, skip_serializing_if = "Vec::is_empty")]
+    pub clip_methods: Vec<String>,
     /// Per-section wall-clock of a short masked training run on the
     /// first swept model (the Table-2 analogue for this checkout).
     pub sections: Option<SectionTimes>,
@@ -167,7 +192,10 @@ impl BenchReport {
     /// Schema invariants beyond what deserialization enforces. Accepts
     /// every version in `MIN_SCHEMA_VERSION..=SCHEMA_VERSION`: v1 files
     /// (written before the worker scaling sweep) must not carry a
-    /// `workers` field; v2 files may.
+    /// `workers` field; v2 files may; v3 files must also echo the run
+    /// config (`models` / `clip_methods`) and every row must reference
+    /// it — a row naming a model or clip method the run never measured
+    /// is rejected instead of passing `--check` silently.
     pub fn validate(&self) -> Result<()> {
         if self.schema_version < MIN_SCHEMA_VERSION || self.schema_version > SCHEMA_VERSION {
             return Err(anyhow!(
@@ -181,9 +209,29 @@ impl BenchReport {
         if self.backend.is_empty() {
             return Err(anyhow!("backend must be non-empty"));
         }
+        let v3 = self.schema_version >= 3;
+        if v3 {
+            if self.models.is_empty() {
+                return Err(anyhow!("v3 reports must echo the swept `models`"));
+            }
+            for m in &self.clip_methods {
+                if !crate::clipping::is_clip_method(m) {
+                    return Err(anyhow!("clip_methods names unknown method {m:?}"));
+                }
+            }
+        } else if !self.models.is_empty() || !self.clip_methods.is_empty() {
+            return Err(anyhow!(
+                "pre-v3 reports cannot carry `models`/`clip_methods` config echoes"
+            ));
+        }
         if let Some(workers) = &self.workers {
             if workers.is_empty() {
                 return Err(anyhow!("workers scaling curve must be absent, not empty"));
+            }
+            if v3 && self.clip_methods.is_empty() {
+                return Err(anyhow!(
+                    "v3 reports with a worker curve must echo the swept `clip_methods`"
+                ));
             }
             for (i, w) in workers.iter().enumerate() {
                 let ctx = |msg: &str| anyhow!("workers entry {i} (n={}): {msg}", w.workers);
@@ -202,12 +250,29 @@ impl BenchReport {
                 if w.steps == 0 || w.model.is_empty() {
                     return Err(ctx("steps must be positive and model non-empty"));
                 }
+                if v3 {
+                    if !self.models.contains(&w.model) {
+                        return Err(ctx("row names a model absent from the run config"));
+                    }
+                    if !self.clip_methods.contains(&w.clip_method) {
+                        return Err(ctx("row names a clip_method absent from the run config"));
+                    }
+                } else if !w.clip_method.is_empty() {
+                    return Err(ctx("pre-v3 rows cannot carry a clip_method"));
+                }
             }
-            let mut counts: Vec<usize> = workers.iter().map(|w| w.workers).collect();
-            counts.sort_unstable();
-            counts.dedup();
-            if counts.len() != workers.len() {
-                return Err(anyhow!("workers scaling curve repeats a worker count"));
+            // One measurement pretending to be several: rows are keyed
+            // by (model, clip_method, workers) and must be unique.
+            let mut keys: Vec<(&str, &str, usize)> = workers
+                .iter()
+                .map(|w| (w.model.as_str(), w.clip_method.as_str(), w.workers))
+                .collect();
+            keys.sort_unstable();
+            keys.dedup();
+            if keys.len() != workers.len() {
+                return Err(anyhow!(
+                    "workers scaling curve repeats a (model, clip_method, workers) row"
+                ));
             }
         }
         if self.entries.is_empty() {
@@ -246,6 +311,9 @@ impl BenchReport {
             if !(e.secs_total.is_finite() && e.secs_total >= 0.0) {
                 return Err(ctx("secs_total must be finite and non-negative"));
             }
+            if self.schema_version >= 3 && !self.models.contains(&e.model) {
+                return Err(ctx("entry names a model absent from the run config"));
+            }
         }
         Ok(())
     }
@@ -278,14 +346,19 @@ pub struct SweepOptions {
     pub seed: u64,
     /// Also time a short training run for the per-section breakdown.
     pub with_sections: bool,
-    /// Worker counts for the data-parallel scaling sweep (schema v2
+    /// Worker counts for the data-parallel scaling sweep (schema v3
     /// `workers`); empty skips it (the report then omits the field).
     pub worker_counts: Vec<usize>,
+    /// Clip methods for the scaling sweep (CLI names, see
+    /// [`crate::clipping::CLI_CLIP_METHODS`]); the curve gets one row
+    /// per (model, clip method, worker count).
+    pub clip_methods: Vec<String>,
 }
 
 impl SweepOptions {
     /// Defaults: full ladder at 30 repeats, or the quick smoke subset
-    /// at 5; data-parallel scaling measured at 1/2/4 workers.
+    /// at 5; data-parallel scaling measured at 1/2/4 workers under
+    /// per-example and ghost clipping.
     pub fn new(quick: bool) -> Self {
         Self {
             model: None,
@@ -296,16 +369,26 @@ impl SweepOptions {
             seed: 0,
             with_sections: true,
             worker_counts: vec![1, 2, 4],
+            clip_methods: vec!["per-example".into(), "ghost".into()],
         }
     }
 }
 
 /// Run the accum/apply sweep and assemble the validated report.
 pub fn run_sweep(rt: &Runtime, opts: &SweepOptions) -> Result<BenchReport> {
-    // Reject malformed worker counts before minutes of sweep work run
-    // only to be discarded by the scaling pass at the end.
+    // Reject malformed worker counts / clip methods before minutes of
+    // sweep work run only to be discarded by the scaling pass at the
+    // end.
     if opts.worker_counts.contains(&0) {
         return Err(anyhow!("--workers counts must be positive"));
+    }
+    for m in &opts.clip_methods {
+        if crate::clipping::clip_method_variant(m).is_none() {
+            return Err(anyhow!("--clip-methods names unknown method {m:?}"));
+        }
+    }
+    if !opts.worker_counts.is_empty() && opts.clip_methods.is_empty() {
+        return Err(anyhow!("the worker scaling sweep needs at least one clip method"));
     }
     let models: Vec<String> = rt
         .manifest()
@@ -395,9 +478,17 @@ pub fn run_sweep(rt: &Runtime, opts: &SweepOptions) -> Result<BenchReport> {
     let workers = if opts.worker_counts.is_empty() {
         None
     } else {
-        let curve = worker_scaling(rt, &models[0], opts)?;
-        // An unmeasurable curve (no masked variant, degenerate clock)
-        // omits the field rather than emitting an invalid empty list.
+        // One scaling series per (model, clip method) — the schema-v3
+        // `(model, clip_method, workers)` row key.
+        let mut curve = Vec::new();
+        for model in &models {
+            for method in &opts.clip_methods {
+                curve.extend(worker_scaling(rt, model, method, opts)?);
+            }
+        }
+        // An unmeasurable curve (no fixed-shape variants lowered,
+        // degenerate clock) omits the field rather than emitting an
+        // invalid empty list.
         (!curve.is_empty()).then_some(curve)
     };
     let report = BenchReport {
@@ -405,6 +496,8 @@ pub fn run_sweep(rt: &Runtime, opts: &SweepOptions) -> Result<BenchReport> {
         backend: rt.backend_name().to_string(),
         seed: opts.seed,
         quick: opts.quick,
+        models,
+        clip_methods: opts.clip_methods.clone(),
         sections,
         entries,
         workers,
@@ -413,28 +506,35 @@ pub fn run_sweep(rt: &Runtime, opts: &SweepOptions) -> Result<BenchReport> {
     Ok(report)
 }
 
-/// Measured data-parallel scaling: one short masked training run per
-/// worker count, identical logical work (same seed → same sampled
-/// batches, and the §8 contract makes the results bitwise-identical),
-/// timed over the step loop's wall clock. Session construction — and
-/// with it every compile — happens outside the timed region, the same
-/// discount the steady-state sweep applies.
-fn worker_scaling(rt: &Runtime, model: &str, opts: &SweepOptions) -> Result<Vec<WorkerEntry>> {
+/// Measured data-parallel scaling for one (model, clip method): a
+/// short fixed-shape training run per worker count, identical logical
+/// work (same seed → same sampled batches, and the §8 contract makes
+/// the results bitwise-identical), timed over the step loop's wall
+/// clock. Session construction — and with it every compile — happens
+/// outside the timed region, the same discount the steady-state sweep
+/// applies. Returns no rows when the model does not lower the method's
+/// variant (e.g. artifact catalogs without the `perex`/`mix` graphs).
+fn worker_scaling(
+    rt: &Runtime,
+    model: &str,
+    clip_method: &str,
+    opts: &SweepOptions,
+) -> Result<Vec<WorkerEntry>> {
+    let variant = crate::clipping::clip_method_variant(clip_method)
+        .ok_or_else(|| anyhow!("unknown clip method {clip_method:?}"))?;
     let meta = rt.manifest().model(model)?.clone();
-    let variants = meta.variants();
-    if !variants.iter().any(|v| v == "masked") {
-        // No fixed-shape variant lowered: the scaling sweep is
-        // meaningless (variable shapes recompile), skip it.
-        return Ok(Vec::new());
-    }
-    let batches = meta.accum_batches("masked", "f32");
+    let batches = meta.accum_batches(variant, "f32");
     let batch = batches
         .iter()
         .copied()
         .filter(|b| *b <= 16)
         .max()
-        .or_else(|| batches.first().copied())
-        .ok_or_else(|| anyhow!("model {model} lowers no masked batches"))?;
+        .or_else(|| batches.first().copied());
+    let Some(batch) = batch else {
+        // Variant not lowered for this model: skip the series, the
+        // report simply carries no rows for it.
+        return Ok(Vec::new());
+    };
     let mut counts = opts.worker_counts.clone();
     counts.sort_unstable();
     counts.dedup();
@@ -442,7 +542,7 @@ fn worker_scaling(rt: &Runtime, model: &str, opts: &SweepOptions) -> Result<Vec<
     for &workers in &counts {
         let cfg = TrainConfig {
             model: model.to_string(),
-            variant: "masked".into(),
+            variant: variant.into(),
             mode: BatchingMode::Masked,
             physical_batch: batch,
             dataset_size: 512,
@@ -469,6 +569,7 @@ fn worker_scaling(rt: &Runtime, model: &str, opts: &SweepOptions) -> Result<Vec<
         out.push(WorkerEntry {
             workers,
             model: model.to_string(),
+            clip_method: clip_method.to_string(),
             steps,
             throughput: real / secs_total,
             unit: "examples_per_sec".into(),
@@ -564,41 +665,131 @@ mod tests {
         assert_eq!(report.schema_version, SCHEMA_VERSION);
         assert_eq!(report.backend, "reference");
         assert!(report.accum_entry("ref-linear", "masked", 16).is_some());
+        assert!(report.accum_entry("mlp-small", "masked", 16).is_some());
         assert!(report.entries.iter().any(|e| e.kind == "apply"));
         let sections = report.sections.expect("sections run");
         assert!(sections.accum > 0.0);
-        // The v2 worker scaling curve: one entry per requested count.
+        // The run-config echo covers the whole CPU ladder + methods.
+        assert!(report.models.contains(&"ref-linear".to_string()));
+        assert!(report.models.contains(&"mlp-small".to_string()));
+        assert_eq!(report.clip_methods, vec!["per-example", "ghost"]);
+        // The v3 worker scaling curve: one row per
+        // (model, clip_method, workers) — at least two models × two
+        // clip methods (the acceptance gate), each series over the
+        // requested counts.
         let workers = report.workers.as_ref().expect("worker scaling curve");
-        assert_eq!(
-            workers.iter().map(|w| w.workers).collect::<Vec<_>>(),
-            vec![1, 2]
-        );
+        let mut series: Vec<(&str, &str)> = workers
+            .iter()
+            .map(|w| (w.model.as_str(), w.clip_method.as_str()))
+            .collect();
+        series.sort_unstable();
+        series.dedup();
+        assert!(series.len() >= 4, "series: {series:?}");
+        assert!(series.contains(&("mlp-small", "ghost")));
+        assert!(series.contains(&("ref-linear", "per-example")));
+        for (model, method) in series {
+            let counts: Vec<usize> = workers
+                .iter()
+                .filter(|w| w.model == model && w.clip_method == method)
+                .map(|w| w.workers)
+                .collect();
+            assert_eq!(counts, vec![1, 2], "{model}/{method}");
+        }
         assert!(workers.iter().all(|w| w.throughput > 0.0 && w.unit == "examples_per_sec"));
         // JSON roundtrip preserves the schema.
         let text = report.to_json().unwrap();
         let parsed = BenchReport::from_json(&text).unwrap();
         parsed.validate().unwrap();
         assert_eq!(parsed.entries.len(), report.entries.len());
-        assert_eq!(parsed.workers.unwrap().len(), 2);
+        assert_eq!(parsed.workers.unwrap().len(), report.workers.as_ref().unwrap().len());
     }
 
     #[test]
     fn v1_reports_without_workers_field_still_validate() {
-        // A file emitted by the schema-v1 harness: no `workers` key at
-        // all. --check must keep accepting it.
+        // A file emitted by the schema-v1 harness: no `workers` key, no
+        // config echoes. --check must keep accepting it.
         let mut report = quick_report();
         report.schema_version = 1;
         report.workers = None;
+        report.models = Vec::new();
+        report.clip_methods = Vec::new();
         report.validate().unwrap();
         let text = report.to_json().unwrap();
         assert!(!text.contains("\"workers\""), "v1 serialization must omit the field");
+        assert!(!text.contains("\"models\""), "v1 serialization must omit the echo");
         let parsed = BenchReport::from_json(&text).unwrap();
         parsed.validate().unwrap();
         // ...but a v1 report *carrying* a scaling curve is malformed.
         let mut bad = quick_report();
         bad.schema_version = 1;
+        bad.models = Vec::new();
+        bad.clip_methods = Vec::new();
         assert!(bad.workers.is_some());
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn v2_reports_with_unkeyed_worker_rows_still_validate() {
+        // A file emitted by the schema-v2 harness: worker rows without
+        // clip_method keys, no config echoes.
+        let mut report = quick_report();
+        report.schema_version = 2;
+        report.models = Vec::new();
+        report.clip_methods = Vec::new();
+        let rows = report.workers.as_mut().unwrap();
+        // v2 had one series; keep one model's per-example rows.
+        rows.retain(|w| w.model == "ref-linear" && w.clip_method == "per-example");
+        for w in rows.iter_mut() {
+            w.clip_method = String::new();
+        }
+        report.validate().unwrap();
+        let text = report.to_json().unwrap();
+        assert!(!text.contains("\"clip_method\""), "v2 rows carry no clip_method");
+        BenchReport::from_json(&text).unwrap().validate().unwrap();
+        // A v2 row *carrying* a clip_method is malformed...
+        let mut bad = BenchReport::from_json(&text).unwrap();
+        bad.workers.as_mut().unwrap()[0].clip_method = "ghost".into();
+        assert!(bad.validate().is_err());
+        // ...as is a v2 report carrying the v3 config echoes.
+        let mut bad = BenchReport::from_json(&text).unwrap();
+        bad.models = vec!["ref-linear".into()];
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn v3_rejects_rows_naming_unknown_models_or_clip_methods() {
+        // Regression (schema-v3 gate): rows citing a clip_method or
+        // model absent from the run config used to pass --check
+        // silently.
+        let mut report = quick_report();
+        report.workers.as_mut().unwrap()[0].clip_method = "mystery".into();
+        let err = report.validate().unwrap_err().to_string();
+        assert!(err.contains("clip_method"), "{err}");
+
+        let mut report = quick_report();
+        report.workers.as_mut().unwrap()[0].model = "ghost-net".into();
+        let err = report.validate().unwrap_err().to_string();
+        assert!(err.contains("model"), "{err}");
+
+        // A clip method the sweep ran but the echo dropped.
+        let mut report = quick_report();
+        report.clip_methods = vec!["per-example".into()];
+        assert!(report.validate().is_err());
+
+        // An accum entry citing an unswept model.
+        let mut report = quick_report();
+        report.entries[0].model = "vit-galaxy".into();
+        assert!(report.validate().is_err());
+
+        // The echo itself naming a non-method.
+        let mut report = quick_report();
+        report.clip_methods.push("masked".into());
+        assert!(report.validate().is_err(), "variant names are not clip methods");
+
+        // And an empty echo on a v3 report.
+        let mut report = quick_report();
+        report.models = Vec::new();
+        assert!(report.validate().is_err());
     }
 
     #[test]
@@ -613,8 +804,8 @@ mod tests {
         assert!(broken(|w| w.throughput = -1.0).is_err());
         assert!(broken(|w| w.unit = "calls_per_sec".into()).is_err());
         assert!(broken(|w| w.steps = 0).is_err());
-        // Duplicate worker counts are one measurement pretending to be
-        // a curve.
+        // Duplicate (model, clip_method, workers) rows are one
+        // measurement pretending to be a curve.
         let mut report = quick_report();
         let dup = report.workers.as_ref().unwrap()[0].clone();
         report.workers.as_mut().unwrap().push(dup);
@@ -623,6 +814,16 @@ mod tests {
         let mut report = quick_report();
         report.workers = Some(Vec::new());
         assert!(report.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_clip_methods_are_rejected_before_the_sweep() {
+        let rt = Runtime::reference();
+        let mut opts = SweepOptions::new(true);
+        opts.repeats = 2;
+        opts.with_sections = false;
+        opts.clip_methods = vec!["bogus".into()];
+        assert!(run_sweep(&rt, &opts).is_err());
     }
 
     #[test]

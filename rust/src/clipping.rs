@@ -59,16 +59,20 @@ impl ClippingMethod {
     ];
 
     /// Name of the AOT variant implementing this method (the paper's
-    /// Table A1 "which library implements what", mapped onto our five
-    /// lowered graphs).
+    /// Table A1 "which library implements what", mapped onto the
+    /// lowered graphs — see `runtime::reference::ACCUM_VARIANTS`).
+    /// `perex` is the materializing per-example graph, `mix` the
+    /// per-layer decision-rule graph; both are executed for real by the
+    /// reference backend (`runtime::layers::executed_choices`).
     pub fn variant(&self) -> &'static str {
         match self {
             ClippingMethod::NonPrivate => "nonprivate",
-            ClippingMethod::PerExample => "masked", // per-example graph; masks all-ones
-            ClippingMethod::Ghost | ClippingMethod::MixGhost => "ghost",
-            ClippingMethod::BkGhost
+            ClippingMethod::PerExample => "perex", // materializing per-example grads
+            ClippingMethod::Ghost => "ghost",
+            ClippingMethod::MixGhost
             | ClippingMethod::BkMixGhost
-            | ClippingMethod::BkMixOpt => "bk",
+            | ClippingMethod::BkMixOpt => "mix", // per-layer decision rule, executed
+            ClippingMethod::BkGhost => "bk",
             ClippingMethod::NaiveJax => "naive",
             ClippingMethod::MaskedJax => "masked",
         }
@@ -105,6 +109,34 @@ impl ClippingMethod {
             ClippingMethod::MaskedJax => "JAX masked DP-SGD (Alg. 2)",
         }
     }
+}
+
+/// The `--clip-method` names the CLI accepts, each paired with the
+/// executable accum variant that implements it. This is the *executed*
+/// subset of the Table-A1 registry: every name here maps onto a graph
+/// the reference backend actually runs (and whose per-layer branch
+/// `runtime::layers::executed_choices` resolves).
+pub const CLI_CLIP_METHODS: &[(&str, &str)] = &[
+    ("nonprivate", "nonprivate"),
+    ("per-example", "perex"),
+    ("ghost", "ghost"),
+    ("bk", "bk"),
+    ("mix", "mix"),
+];
+
+/// Resolve a CLI `--clip-method` name to its executable accum variant
+/// (`None` for unknown names — the caller owns the error message).
+pub fn clip_method_variant(name: &str) -> Option<&'static str> {
+    CLI_CLIP_METHODS
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, v)| *v)
+}
+
+/// True iff `name` is a CLI clip-method name ([`CLI_CLIP_METHODS`]) —
+/// the schema-v3 bench validator's notion of "known method".
+pub fn is_clip_method(name: &str) -> bool {
+    clip_method_variant(name).is_some()
 }
 
 /// Which norm method the mix-ghost rule picks for one layer.
@@ -290,5 +322,21 @@ mod tests {
         assert!(!ClippingMethod::Ghost.supports(Family::BiTResNet));
         assert!(ClippingMethod::PerExample.supports(Family::BiTResNet));
         assert!(ClippingMethod::BkMixOpt.supports(Family::ViT));
+    }
+
+    #[test]
+    fn cli_clip_methods_map_to_lowered_variants() {
+        assert_eq!(clip_method_variant("per-example"), Some("perex"));
+        assert_eq!(clip_method_variant("ghost"), Some("ghost"));
+        assert_eq!(clip_method_variant("mix"), Some("mix"));
+        assert_eq!(clip_method_variant("nonprivate"), Some("nonprivate"));
+        assert_eq!(clip_method_variant("bk"), Some("bk"));
+        assert_eq!(clip_method_variant("opacus"), None);
+        assert!(is_clip_method("ghost") && !is_clip_method("masked"));
+        // Every CLI name's variant agrees with the Table-A1 registry's
+        // mapping for the corresponding method.
+        assert_eq!(clip_method_variant("per-example"), Some(ClippingMethod::PerExample.variant()));
+        assert_eq!(clip_method_variant("ghost"), Some(ClippingMethod::Ghost.variant()));
+        assert_eq!(clip_method_variant("mix"), Some(ClippingMethod::MixGhost.variant()));
     }
 }

@@ -12,7 +12,12 @@ use crate::coordinator::batcher::BatchingMode;
 pub struct TrainConfig {
     /// Model ladder name (must exist in artifacts/manifest.json).
     pub model: String,
-    /// AOT step variant: nonprivate | naive | masked | ghost | bk.
+    /// AOT step variant: nonprivate | naive | masked | ghost | bk |
+    /// perex | mix (the CLI's `--clip-method` resolves to one of these
+    /// via `clipping::clip_method_variant`). Every variant's
+    /// *trajectory* is bitwise-identical; they differ in executed
+    /// accumulate strategy — wall-clock and memory traffic only
+    /// (DESIGN.md §9).
     pub variant: String,
     /// Use the bf16 ("TF32-substitute") accum executables if present.
     pub bf16: bool,

@@ -148,7 +148,8 @@ pub struct StepLog {
 pub struct TrainReport {
     /// Model name the run trained.
     pub model: String,
-    /// Clipping variant (nonprivate | naive | masked | ghost | bk).
+    /// Clipping variant
+    /// (nonprivate | naive | masked | ghost | bk | perex | mix).
     pub variant: String,
     /// Batching mode the run used (Algorithm 2 vs naive).
     pub mode: BatchingMode,
@@ -269,13 +270,16 @@ fn dtype_of(config: &TrainConfig) -> &'static str {
 /// Deliberately **excludes** `workers` (and the kernel thread count):
 /// both are wall-clock knobs whose trajectories are bitwise-identical,
 /// so a checkpoint taken at 4 workers must resume at 1 (and vice
-/// versa). The leading tag is `v2` because this PR changed the step's
-/// accumulation semantics (fixed-tree group reduction, DESIGN.md §8):
-/// a `v1` checkpoint's parameters came from a different — sequential —
-/// fold and must not silently continue under the new one.
+/// versa). Tag history: `v2` redefined the step's accumulation
+/// semantics (fixed-tree group reduction, DESIGN.md §8); `v3` is the
+/// layered model IR (DESIGN.md §9) — the flat parameter vector is now
+/// laid out by the model's `LayerPlan` (per-layer `[W | b]` blocks)
+/// and the variant set grew the executed `perex`/`mix` graphs, so a
+/// `v2` checkpoint's params may describe a different layout and must
+/// not silently continue under the new one.
 fn config_fingerprint(config: &TrainConfig, sigma: f64) -> String {
     format!(
-        "v2|{}|{}|{:?}|{}|N={}|q={:?}|B={}|lr={:?}|C={:?}|sigma={:?}|seed={}",
+        "v3|{}|{}|{:?}|{}|N={}|q={:?}|B={}|lr={:?}|C={:?}|sigma={:?}|seed={}",
         config.model,
         config.variant,
         config.mode,

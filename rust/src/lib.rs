@@ -16,6 +16,12 @@
 //! the entire training loop and executes models through a pluggable
 //! [`runtime::Backend`] — the pure-Rust reference executor by default,
 //! or the AOT-lowered HLO via the PJRT C API behind the `pjrt` feature.
+//! Models are described in a **layered IR** ([`models::LayerSpec`] →
+//! [`runtime::LayerPlan`], DESIGN.md §9): the reference backend
+//! executes real multi-layer networks (`--model mlp-small`) with
+//! per-example gradients across all layers, global-norm clipping, and
+//! executable ghost / per-example / mix clipping branches
+//! (`--clip-method`) that are bitwise-identical in trajectory.
 //!
 //! ```text
 //! L3 (this crate)   sampler -> group planner -> [session.accum x N workers]

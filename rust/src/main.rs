@@ -20,6 +20,7 @@
 
 use anyhow::{anyhow, Result};
 use dp_shortcuts::benchreport::{self, BenchReport, SweepOptions};
+use dp_shortcuts::clipping::{clip_method_variant, CLI_CLIP_METHODS};
 use dp_shortcuts::coordinator::batcher::BatchingMode;
 use dp_shortcuts::coordinator::config::TrainConfig;
 use dp_shortcuts::coordinator::trainer::TrainSession;
@@ -37,6 +38,12 @@ const USAGE: &str = "usage: dpshort <list|train|bench|plan|account|scale|report>
   train/bench:  --model NAME --variant V --batch B --steps N --rate Q
                 --dataset N --lr LR --sigma S --epsilon E --delta D
                 --seed S --bf16 --naive-mode --eval N --json
+                --clip-method per-example|ghost|mix|bk|nonprivate
+                             clipping method (resolves to the lowered
+                             accum variant; conflicts with --variant;
+                             all methods are bitwise-identical in
+                             trajectory — they move wall-clock/memory
+                             traffic only)
   train:        --workers N  data-parallel worker sessions (wall-clock
                              only: the trajectory is bitwise-identical
                              for every N; default 1)
@@ -50,7 +57,11 @@ const USAGE: &str = "usage: dpshort <list|train|bench|plan|account|scale|report>
                 --model/--variant/--batch restrict the sweep
                 --workers LIST  worker counts for the data-parallel
                                 training-throughput scaling sweep
-                                (default 1,2,4; schema v2 `workers`)
+                                (default 1,2,4; schema v3 `workers`
+                                rows keyed by (model, clip_method,
+                                workers))
+                --clip-methods LIST  clip methods for the scaling sweep
+                                (default per-example,ghost)
                 --check FILE  validate an emitted file's schema and exit
   account:      --rate Q --steps N --delta D [--sigma S | --epsilon E]
   scale:        --model NAME --gpus LIST (e.g. 1,4,8,16,32,80)
@@ -69,6 +80,25 @@ fn config_from(args: &Args, rt: &Runtime) -> Result<TrainConfig> {
     }
     if let Some(v) = args.get("variant") {
         c.variant = v.to_string();
+    }
+    if let Some(method) = args.get("clip-method") {
+        if args.get("variant").is_some() {
+            return Err(anyhow!(
+                "--clip-method and --variant both name the accum graph; pass one"
+            ));
+        }
+        c.variant = clip_method_variant(method)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown clip method {method:?} (have: {})",
+                    CLI_CLIP_METHODS
+                        .iter()
+                        .map(|(n, _)| *n)
+                        .collect::<Vec<_>>()
+                        .join("|")
+                )
+            })?
+            .to_string();
     }
     c.bf16 = args.get_bool("bf16");
     c.dataset_size = args.get_parse_or("dataset", c.dataset_size).map_err(|e| anyhow!(e))?;
@@ -224,6 +254,13 @@ fn cmd_bench(rt: &Runtime, args: &Args) -> Result<()> {
             .map(|s| s.trim().parse::<usize>().map_err(|e| anyhow!("bad worker count: {e}")))
             .collect::<Result<_>>()?;
     }
+    if let Some(list) = args.get("clip-methods") {
+        opts.clip_methods = list.split(',').map(|s| s.trim().to_string()).collect();
+    } else if let Some(method) = args.get("clip-method") {
+        // The singular train-style flag restricts the bench scaling
+        // sweep to that one method (it must not be silently ignored).
+        opts.clip_methods = vec![method.to_string()];
+    }
     let report = benchreport::run_sweep(rt, &opts)?;
     for e in &report.entries {
         match e.kind.as_str() {
@@ -251,14 +288,20 @@ fn cmd_bench(rt: &Runtime, args: &Args) -> Result<()> {
     }
     if let Some(curve) = &report.workers {
         println!("data-parallel scaling (wall clock, bitwise-identical results):");
-        let base = curve.iter().find(|w| w.workers == 1).map(|w| w.throughput);
         for w in curve {
+            // Speedup is relative to the same (model, clip method) at
+            // one worker — the v3 curve carries one row per
+            // (model, clip_method, workers).
+            let base = curve
+                .iter()
+                .find(|c| c.workers == 1 && c.model == w.model && c.clip_method == w.clip_method)
+                .map(|c| c.throughput);
             let speedup = base
                 .map(|b| format!("  {:.2}x vs 1 worker", w.throughput / b))
                 .unwrap_or_default();
             println!(
-                "  workers={:<3} {:>10.1} ex/s over {} steps{speedup}",
-                w.workers, w.throughput, w.steps
+                "  {:<12} {:<12} workers={:<3} {:>10.1} ex/s over {} steps{speedup}",
+                w.model, w.clip_method, w.workers, w.throughput, w.steps
             );
         }
     }

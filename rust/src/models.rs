@@ -1,13 +1,161 @@
 //! Model architecture tables: the paper's ladder (Table 1) at full scale
 //! for the analytic studies (memory planner, mix-ghost decision rule,
-//! FLOP/roofline models), and the CPU-executable ladder that `make
-//! artifacts` actually lowers.
+//! FLOP/roofline models), the **layer IR** ([`LayerSpec`]) every
+//! executable model is described in, and the CPU-executable ladder
+//! ([`cpu_ladder`]) the reference backend runs end-to-end.
 //!
 //! Paper-scale dims follow the standard ViT (Dosovitskiy et al. 2021,
 //! timm checkpoints) and BiT-ResNet (Kolesnikov et al. 2020) recipes at
 //! 224x224 input; parameter counts are validated against Table 1 in unit
 //! tests.
 
+/// Element-wise activation of a dense layer in the executable layer IR.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    /// Identity (the head layer feeding softmax-xent is always `None`).
+    None,
+    /// `max(0, x)` — the only nonlinearity the CPU ladder needs.
+    Relu,
+}
+
+impl Activation {
+    /// Manifest-string form ("none" | "relu").
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Activation::None => "none",
+            Activation::Relu => "relu",
+        }
+    }
+
+    /// Parse the manifest-string form.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "none" => Some(Activation::None),
+            "relu" => Some(Activation::Relu),
+            _ => None,
+        }
+    }
+}
+
+/// One dense layer of the executable layer IR: `z = W a + b` with
+/// `W: [d_out, d_in]` row-major, followed by [`Activation`]. A model is
+/// a chain of these; the last layer must use `Activation::None` and its
+/// `d_out` is the class count — the softmax-xent head consumes its
+/// logits directly (see `runtime::layers::LayerPlan`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerSpec {
+    /// Input width (first layer: the flattened image dim `H*W*C`).
+    pub d_in: usize,
+    /// Output width (last layer: `num_classes`).
+    pub d_out: usize,
+    /// Element-wise activation applied to `z`.
+    pub activation: Activation,
+}
+
+impl LayerSpec {
+    /// Dense layer with no activation (head layers).
+    pub fn dense(d_in: usize, d_out: usize) -> Self {
+        Self { d_in, d_out, activation: Activation::None }
+    }
+
+    /// Dense layer followed by ReLU (hidden layers).
+    pub fn dense_relu(d_in: usize, d_out: usize) -> Self {
+        Self { d_in, d_out, activation: Activation::Relu }
+    }
+
+    /// Flat parameters of this layer: `d_in * d_out` weights + `d_out`
+    /// biases.
+    pub fn params(&self) -> usize {
+        self.d_in * self.d_out + self.d_out
+    }
+
+    /// The ghost-clipping view of this layer (effective sequence length
+    /// 1: the CPU ladder has no token/spatial axis), for the mix-ghost
+    /// decision rule ([`crate::clipping::mix_ghost_choice`]).
+    pub fn linear_dims(&self) -> LinearDims {
+        LinearDims { t: 1, d_in: self.d_in, d_out: self.d_out }
+    }
+}
+
+/// One CPU-executable model: the layer IR plus the dataset geometry the
+/// synthetic pipeline needs. [`crate::runtime::ReferenceBackend`]'s
+/// in-memory manifest is generated from [`cpu_ladder`].
+#[derive(Debug, Clone)]
+pub struct CpuModel {
+    /// Manifest name (`--model` key).
+    pub name: &'static str,
+    /// Architecture family label for the manifest.
+    pub family: &'static str,
+    /// Square input image side.
+    pub image: usize,
+    /// Input channels.
+    pub channels: usize,
+    /// Classes (== `d_out` of the last layer).
+    pub num_classes: usize,
+    /// Clipping norm C baked into the lowered accum graphs.
+    pub clip_norm: f64,
+    /// The executable layer chain.
+    pub layers: Vec<LayerSpec>,
+}
+
+impl CpuModel {
+    /// Total flat parameters over all layers.
+    pub fn params(&self) -> usize {
+        self.layers.iter().map(LayerSpec::params).sum()
+    }
+
+    /// Forward FLOPs per example (2 * MACs over the dense chain).
+    pub fn fwd_flops_per_example(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| 2.0 * l.d_in as f64 * l.d_out as f64)
+            .sum()
+    }
+}
+
+/// The CPU-executable model ladder: every model the reference backend
+/// lowers in its in-memory manifest. `ref-linear` is the seed's
+/// single-layer model (its one-dense-layer IR reproduces the original
+/// hardcoded linear+softmax kernel bitwise — pinned by the oracle
+/// proptest in `rust/tests/layered_models.rs`); `mlp-small` is the
+/// first genuinely deep rung (two ReLU hidden layers), where ghost
+/// clipping and the mixed decision rule become observable.
+pub fn cpu_ladder() -> Vec<CpuModel> {
+    let d = 16 * 16 * 3;
+    vec![
+        CpuModel {
+            name: "ref-linear",
+            family: "linear",
+            image: 16,
+            channels: 3,
+            num_classes: 10,
+            clip_norm: 1.0,
+            layers: vec![LayerSpec::dense(d, 10)],
+        },
+        CpuModel {
+            name: "mlp-small",
+            family: "mlp",
+            image: 16,
+            channels: 3,
+            num_classes: 10,
+            clip_norm: 1.0,
+            layers: vec![
+                LayerSpec::dense_relu(d, 64),
+                LayerSpec::dense_relu(64, 32),
+                LayerSpec::dense(32, 10),
+            ],
+        },
+        CpuModel {
+            name: "mlp-wide",
+            family: "mlp",
+            image: 16,
+            channels: 3,
+            num_classes: 10,
+            clip_norm: 1.0,
+            layers: vec![LayerSpec::dense_relu(d, 128), LayerSpec::dense(128, 10)],
+        },
+    ]
+}
 
 /// One linear (or linear-equivalent) layer, as seen by ghost clipping:
 /// an effective sequence length `t` (tokens for ViT, spatial positions
@@ -235,5 +383,43 @@ mod tests {
         let r101x1 = bit_resnet("r101x1", &[3, 4, 23, 3], 1);
         let r50x3 = bit_resnet("r50x3", &[3, 4, 6, 3], 3);
         assert!(r50x3.params() > 3 * r101x1.params());
+    }
+
+    #[test]
+    fn cpu_ladder_is_well_formed() {
+        let ladder = cpu_ladder();
+        assert!(ladder.iter().any(|m| m.name == "ref-linear"));
+        assert!(ladder.iter().any(|m| m.name == "mlp-small"));
+        for m in &ladder {
+            let d = m.image * m.image * m.channels;
+            assert_eq!(m.layers.first().unwrap().d_in, d, "{}", m.name);
+            assert_eq!(m.layers.last().unwrap().d_out, m.num_classes, "{}", m.name);
+            assert_eq!(m.layers.last().unwrap().activation, Activation::None, "{}", m.name);
+            for w in m.layers.windows(2) {
+                assert_eq!(w[0].d_out, w[1].d_in, "{}: layer chain broken", m.name);
+            }
+            assert_eq!(
+                m.params(),
+                m.layers.iter().map(|l| l.d_in * l.d_out + l.d_out).sum::<usize>()
+            );
+            assert!(m.fwd_flops_per_example() > 0.0);
+        }
+        // The seed model keeps its exact shape (and therefore its exact
+        // flat layout [W | b]).
+        let lin = ladder.iter().find(|m| m.name == "ref-linear").unwrap();
+        assert_eq!(lin.layers.len(), 1);
+        assert_eq!(lin.params(), 10 * 16 * 16 * 3 + 10);
+        // mlp-small is genuinely deep: two hidden ReLU layers + head.
+        let mlp = ladder.iter().find(|m| m.name == "mlp-small").unwrap();
+        assert_eq!(mlp.layers.len(), 3);
+        assert!(mlp.layers[..2].iter().all(|l| l.activation == Activation::Relu));
+    }
+
+    #[test]
+    fn activation_roundtrips_through_manifest_strings() {
+        for a in [Activation::None, Activation::Relu] {
+            assert_eq!(Activation::parse(a.as_str()), Some(a));
+        }
+        assert_eq!(Activation::parse("gelu"), None);
     }
 }

@@ -471,6 +471,7 @@ mod tests {
             flops_fwd_per_example: 1.0,
             init_params: "toy.bin".into(),
             executables: Vec::new(),
+            layers: Vec::new(),
         }
     }
 

@@ -130,10 +130,15 @@ impl Runtime {
 
     /// The shared "no `--model` given" default: `vit-micro` when the
     /// manifest has it (the artifact ladder's canonical rung, keeping
-    /// paper-figure commands stable), otherwise the first model.
+    /// paper-figure commands stable), then the reference ladder's
+    /// canonical rung (`ref-linear` — the CPU manifest now carries
+    /// several models and BTreeMap order would otherwise silently move
+    /// the default), otherwise the first model.
     pub fn default_model(&self) -> Option<&str> {
-        if self.manifest.models.contains_key("vit-micro") {
-            return Some("vit-micro");
+        for canonical in ["vit-micro", super::reference::REFERENCE_MODEL] {
+            if self.manifest.models.contains_key(canonical) {
+                return Some(canonical);
+            }
         }
         self.manifest.models.keys().next().map(String::as_str)
     }

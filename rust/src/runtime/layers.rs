@@ -1,0 +1,355 @@
+//! The executable layer IR's flat-parameter layout: [`LayerPlan`].
+//!
+//! A model is a chain of dense layers ([`crate::models::LayerSpec`])
+//! ending in a softmax-xent head. The plan resolves that chain against
+//! a [`ModelMeta`] into everything the reference kernels need to
+//! execute it over one flat f32 parameter vector:
+//!
+//! * **Parameter layout** — layer blocks in chain order, each
+//!   `[W row-major | b]`:
+//!
+//!   ```text
+//!   params = [ W0[d_out0, d_in0] | b0[d_out0] | W1[...] | b1[...] | ... ]
+//!   ```
+//!
+//!   For a single-layer model this degenerates to `[W | b]` — exactly
+//!   the seed `ref-linear` layout, which is what makes the one-layer IR
+//!   model bitwise-compatible with the original hardcoded kernel
+//!   (checkpoints included).
+//!
+//! * **Forward-tape layout** — per example, the backward pass needs
+//!   each layer's *input* activations. The input image is borrowed from
+//!   the batch; hidden activations (post-activation, one slot per
+//!   hidden layer) are stored at `act_off` in a per-example tape window
+//!   of [`LayerPlan::tape_stride`] floats. Storing post-activations is
+//!   enough for ReLU backward: `a > 0 ⟺ z > 0`.
+//!
+//! * **dz layout** — per example, per layer, the gradient w.r.t. the
+//!   layer's pre-activation output lives at `dz_off` in a window of
+//!   [`LayerPlan::dz_stride`] floats. Layer slots are contiguous in
+//!   chain order, so the backward pass can split one window into
+//!   "already-final dz of layer l" and "da being built for layer l-1".
+//!
+//! * **Executed clipping branch** — [`executed_choices`] maps an accum
+//!   variant onto a per-layer [`LayerChoice`]: ghost-style layers fold
+//!   the clipped gradient with a fused reweighted `axpy` (never
+//!   materializing a per-example weight gradient), per-example layers
+//!   materialize each example's layer gradient first (the Opacus-style
+//!   memory traffic the paper's Table 2 profiles). The `mix` variant
+//!   applies the Bu et al. decision rule
+//!   ([`crate::clipping::mix_ghost_choice`]) per layer — the executed
+//!   counterpart of the analytic registry in `clipping.rs`.
+
+use super::manifest::ModelMeta;
+use crate::clipping::{mix_ghost_choice, LayerChoice};
+use crate::models::{Activation, LayerSpec};
+use anyhow::{anyhow, Result};
+
+/// One layer of a [`LayerPlan`]: the spec plus every resolved offset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannedLayer {
+    /// The layer's dims + activation.
+    pub spec: LayerSpec,
+    /// Offset of `W` (row-major `[d_out, d_in]`) in the flat params.
+    pub w_off: usize,
+    /// Offset of `b` (`[d_out]`) in the flat params.
+    pub b_off: usize,
+    /// Offset of this layer's *output* activations in the per-example
+    /// tape window. Only meaningful for hidden layers (the head's
+    /// logits live in the dz window instead); for the last layer this
+    /// equals [`LayerPlan::tape_stride`].
+    pub act_off: usize,
+    /// Offset of this layer's dz slot in the per-example dz window.
+    pub dz_off: usize,
+}
+
+/// Flat-parameter + scratch layout of one executable layered model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerPlan {
+    /// Layers in chain order (input → head).
+    pub layers: Vec<PlannedLayer>,
+    /// Total flat parameters (must equal `ModelMeta::n_params`).
+    pub n_params: usize,
+    /// Flattened input dim `H*W*C` (== `d_in` of the first layer).
+    pub input_dim: usize,
+    /// Classes (== `d_out` of the last layer).
+    pub num_classes: usize,
+    /// Per-example tape floats (sum of hidden-layer widths).
+    pub tape_stride: usize,
+    /// Per-example dz floats (sum of all layer widths).
+    pub dz_stride: usize,
+    /// Largest layer width (eval ping-pong buffer bound).
+    pub max_width: usize,
+    /// Largest layer input dim (materialized-row scratch bound).
+    pub max_d_in: usize,
+}
+
+impl LayerPlan {
+    /// Resolve `meta`'s layer chain into a plan, validating the chain
+    /// against the model geometry (input dim, class count, head
+    /// activation, parameter count). A meta without an explicit layer
+    /// list resolves to the legacy single dense layer
+    /// (`ModelMeta::layer_specs`), so pre-IR manifests keep executing.
+    pub fn build(meta: &ModelMeta) -> Result<Self> {
+        let specs = meta.layer_specs();
+        let input_dim = meta.image * meta.image * meta.channels;
+        let first = specs.first().expect("layer_specs is never empty");
+        if first.d_in != input_dim {
+            return Err(anyhow!(
+                "layer 0 d_in {} != image dim {input_dim} ({}x{}x{})",
+                first.d_in,
+                meta.image,
+                meta.image,
+                meta.channels
+            ));
+        }
+        let mut layers = Vec::with_capacity(specs.len());
+        let (mut off, mut tape, mut dz) = (0usize, 0usize, 0usize);
+        let (mut max_width, mut max_d_in) = (0usize, 0usize);
+        for (l, spec) in specs.iter().enumerate() {
+            if spec.d_in == 0 || spec.d_out == 0 {
+                return Err(anyhow!("layer {l}: zero-width dense layer"));
+            }
+            if l > 0 && specs[l - 1].d_out != spec.d_in {
+                return Err(anyhow!(
+                    "layer chain broken at {l}: d_out {} feeds d_in {}",
+                    specs[l - 1].d_out,
+                    spec.d_in
+                ));
+            }
+            let last = l == specs.len() - 1;
+            if last && spec.activation != Activation::None {
+                return Err(anyhow!("head layer must not carry an activation"));
+            }
+            let w_off = off;
+            let b_off = off + spec.d_in * spec.d_out;
+            off = b_off + spec.d_out;
+            let act_off = tape;
+            if !last {
+                tape += spec.d_out;
+            }
+            layers.push(PlannedLayer { spec: *spec, w_off, b_off, act_off, dz_off: dz });
+            dz += spec.d_out;
+            max_width = max_width.max(spec.d_out);
+            max_d_in = max_d_in.max(spec.d_in);
+        }
+        let head = layers.last().expect("non-empty");
+        if head.spec.d_out != meta.num_classes {
+            return Err(anyhow!(
+                "head d_out {} != num_classes {}",
+                head.spec.d_out,
+                meta.num_classes
+            ));
+        }
+        if off != meta.n_params {
+            return Err(anyhow!(
+                "layer chain lays out {off} params but the manifest says {}",
+                meta.n_params
+            ));
+        }
+        Ok(Self {
+            layers,
+            n_params: off,
+            input_dim,
+            num_classes: meta.num_classes,
+            tape_stride: tape,
+            dz_stride: dz,
+            max_width,
+            max_d_in,
+        })
+    }
+
+    /// Multiply-adds of one forward pass per example (the threading
+    /// work gate's unit).
+    pub fn macs_per_example(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.spec.d_in * l.spec.d_out)
+            .sum()
+    }
+
+    /// Total accumulator row units (sum of layer widths) — the phase-2
+    /// parallel partitioning domain.
+    pub fn total_rows(&self) -> usize {
+        self.dz_stride
+    }
+}
+
+/// Per-layer executed clipping branch for one accum `variant`:
+///
+/// * `nonprivate` / `naive` / `masked` / `ghost` / `bk` — every layer
+///   folds fused ([`LayerChoice::Ghost`]): the vmapped graphs fuse
+///   clip+accumulate, and the ghost/BK graphs never materialize
+///   per-example weight grads by construction.
+/// * `perex` — every layer materializes ([`LayerChoice::PerExample`]):
+///   the Opacus-style hook cost, observable as extra memory traffic.
+/// * `mix` — the Bu et al. (2022) rule per layer, at the CPU ladder's
+///   effective sequence length t = 1.
+///
+/// All branches produce **bitwise-identical** accumulators and norms
+/// (the per-example norm is computed once, in the shared Gram form, and
+/// the materialized fold adds exactly the same addends in the same
+/// order) — property-tested in `rust/tests/layered_models.rs`. The
+/// branch choice moves memory traffic and wall-clock only.
+pub fn executed_choices(variant: &str, plan: &LayerPlan) -> Result<Vec<LayerChoice>> {
+    match variant {
+        "nonprivate" | "naive" | "masked" | "ghost" | "bk" => {
+            Ok(vec![LayerChoice::Ghost; plan.layers.len()])
+        }
+        "perex" => Ok(vec![LayerChoice::PerExample; plan.layers.len()]),
+        "mix" => Ok(plan
+            .layers
+            .iter()
+            .map(|l| mix_ghost_choice(&l.spec.linear_dims()))
+            .collect()),
+        other => Err(anyhow!("unknown accum variant {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta_of(layers: Vec<LayerSpec>, image: usize, channels: usize, ncls: usize) -> ModelMeta {
+        ModelMeta {
+            family: "test".into(),
+            n_params: layers.iter().map(LayerSpec::params).sum(),
+            image,
+            channels,
+            num_classes: ncls,
+            clip_norm: 1.0,
+            flops_fwd_per_example: 1.0,
+            init_params: "test.bin".into(),
+            executables: Vec::new(),
+            layers,
+        }
+    }
+
+    #[test]
+    fn single_layer_plan_is_the_seed_layout() {
+        let meta = meta_of(vec![LayerSpec::dense(16 * 16 * 3, 10)], 16, 3, 10);
+        let plan = LayerPlan::build(&meta).unwrap();
+        assert_eq!(plan.layers.len(), 1);
+        assert_eq!(plan.layers[0].w_off, 0);
+        assert_eq!(plan.layers[0].b_off, 10 * 768);
+        assert_eq!(plan.n_params, 10 * 768 + 10);
+        assert_eq!(plan.tape_stride, 0, "no hidden layers, no tape");
+        assert_eq!(plan.dz_stride, 10);
+        assert_eq!(plan.max_d_in, 768);
+    }
+
+    #[test]
+    fn legacy_meta_without_layers_resolves_to_one_dense() {
+        let mut meta = meta_of(vec![LayerSpec::dense(48, 4)], 4, 3, 4);
+        meta.layers = Vec::new(); // pre-IR manifest
+        let plan = LayerPlan::build(&meta).unwrap();
+        assert_eq!(plan.layers.len(), 1);
+        assert_eq!(plan.layers[0].spec, LayerSpec::dense(48, 4));
+    }
+
+    #[test]
+    fn multi_layer_offsets_chain() {
+        let meta = meta_of(
+            vec![
+                LayerSpec::dense_relu(12, 5),
+                LayerSpec::dense_relu(5, 4),
+                LayerSpec::dense(4, 3),
+            ],
+            2,
+            3,
+            3,
+        );
+        let plan = LayerPlan::build(&meta).unwrap();
+        assert_eq!(plan.layers[0].w_off, 0);
+        assert_eq!(plan.layers[0].b_off, 60);
+        assert_eq!(plan.layers[1].w_off, 65);
+        assert_eq!(plan.layers[1].b_off, 65 + 20);
+        assert_eq!(plan.layers[2].w_off, 89);
+        assert_eq!(plan.n_params, meta.n_params);
+        // Tape holds the two hidden outputs; dz every layer's output.
+        assert_eq!(plan.tape_stride, 5 + 4);
+        assert_eq!(plan.dz_stride, 5 + 4 + 3);
+        assert_eq!(plan.layers[0].act_off, 0);
+        assert_eq!(plan.layers[1].act_off, 5);
+        assert_eq!(plan.layers[0].dz_off, 0);
+        assert_eq!(plan.layers[1].dz_off, 5);
+        assert_eq!(plan.layers[2].dz_off, 9);
+        assert_eq!(plan.max_width, 5);
+        assert_eq!(plan.max_d_in, 12);
+        assert_eq!(plan.total_rows(), 12);
+        assert_eq!(plan.macs_per_example(), 12 * 5 + 5 * 4 + 4 * 3);
+    }
+
+    #[test]
+    fn malformed_chains_are_rejected() {
+        // Broken chain.
+        let meta = meta_of(vec![LayerSpec::dense_relu(12, 5), LayerSpec::dense(6, 3)], 2, 3, 3);
+        assert!(LayerPlan::build(&meta).is_err());
+        // Head activation.
+        let meta = meta_of(vec![LayerSpec::dense_relu(12, 3)], 2, 3, 3);
+        assert!(LayerPlan::build(&meta).is_err());
+        // Wrong head width.
+        let meta = meta_of(vec![LayerSpec::dense(12, 4)], 2, 3, 3);
+        assert!(LayerPlan::build(&meta).is_err());
+        // Wrong input dim.
+        let meta = meta_of(vec![LayerSpec::dense(10, 3)], 2, 3, 3);
+        assert!(LayerPlan::build(&meta).is_err());
+        // n_params mismatch.
+        let mut meta = meta_of(vec![LayerSpec::dense(12, 3)], 2, 3, 3);
+        meta.n_params += 1;
+        assert!(LayerPlan::build(&meta).is_err());
+        // Zero-width layer.
+        let meta = meta_of(vec![LayerSpec::dense_relu(12, 0), LayerSpec::dense(0, 3)], 2, 3, 3);
+        assert!(LayerPlan::build(&meta).is_err());
+    }
+
+    #[test]
+    fn executed_choices_map_variants_onto_branches() {
+        let meta = meta_of(
+            vec![LayerSpec::dense_relu(12, 5), LayerSpec::dense(5, 3)],
+            2,
+            3,
+            3,
+        );
+        let plan = LayerPlan::build(&meta).unwrap();
+        for fused in ["nonprivate", "naive", "masked", "ghost", "bk"] {
+            assert_eq!(
+                executed_choices(fused, &plan).unwrap(),
+                vec![LayerChoice::Ghost; 2],
+                "{fused}"
+            );
+        }
+        assert_eq!(
+            executed_choices("perex", &plan).unwrap(),
+            vec![LayerChoice::PerExample; 2]
+        );
+        assert!(executed_choices("mystery", &plan).is_err());
+    }
+
+    #[test]
+    fn mix_choices_follow_the_decision_rule_per_layer() {
+        // At t = 1 the rule is: ghost iff 2 <= d_in * d_out. A 1x1
+        // hidden layer is the one executable shape where per-example
+        // wins.
+        let meta = meta_of(
+            vec![
+                LayerSpec::dense_relu(3, 1),
+                LayerSpec::dense_relu(1, 1), // 2*1 > 1: per-example
+                LayerSpec::dense(1, 2),      // 2 <= 2: ghost
+            ],
+            1,
+            3,
+            2,
+        );
+        let plan = LayerPlan::build(&meta).unwrap();
+        let choices = executed_choices("mix", &plan).unwrap();
+        assert_eq!(
+            choices,
+            vec![LayerChoice::Ghost, LayerChoice::PerExample, LayerChoice::Ghost]
+        );
+        // And each choice equals the analytic registry's call.
+        for (c, l) in choices.iter().zip(&plan.layers) {
+            assert_eq!(*c, mix_ghost_choice(&l.spec.linear_dims()));
+        }
+    }
+}

@@ -1,6 +1,7 @@
 //! artifacts/manifest.json schema — written by python/compile/aot.py,
 //! the single source of truth about what was lowered.
 
+use crate::models::{Activation, LayerSpec};
 use crate::util::json::{self, Value};
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
@@ -39,9 +40,29 @@ pub struct ModelMeta {
     pub flops_fwd_per_example: f64,
     pub init_params: String,
     pub executables: Vec<ExecutableMeta>,
+    /// Executable layer IR (manifest key `"layers"`): the dense chain
+    /// the flat parameter vector lays out, in order. Empty for pre-IR
+    /// manifests — [`ModelMeta::layer_specs`] then resolves the legacy
+    /// single dense layer `image² * channels -> num_classes` (exactly
+    /// the seed `ref-linear` shape), so old artifact catalogs keep
+    /// loading and executing unchanged.
+    pub layers: Vec<LayerSpec>,
 }
 
 impl ModelMeta {
+    /// The executable layer chain: the explicit `layers` list, or the
+    /// legacy single-dense fallback when the manifest predates the
+    /// layer IR. Never empty.
+    pub fn layer_specs(&self) -> Vec<LayerSpec> {
+        if self.layers.is_empty() {
+            vec![LayerSpec::dense(
+                self.image * self.image * self.channels,
+                self.num_classes,
+            )]
+        } else {
+            self.layers.clone()
+        }
+    }
     /// Find the accum executable for (variant, batch, dtype).
     pub fn find_accum(&self, variant: &str, batch: usize, dtype: &str) -> Option<&ExecutableMeta> {
         self.executables.iter().find(|e| {
@@ -131,6 +152,19 @@ impl ExecutableMeta {
     }
 }
 
+fn layer_from_value(v: &Value) -> Result<LayerSpec> {
+    let activation = match v.get("activation").and_then(|a| a.as_str()) {
+        None => Activation::None,
+        Some(s) => Activation::parse(s)
+            .ok_or_else(|| anyhow!("manifest: unknown activation {s:?} (none|relu)"))?,
+    };
+    Ok(LayerSpec {
+        d_in: need_usize(v, "d_in")?,
+        d_out: need_usize(v, "d_out")?,
+        activation,
+    })
+}
+
 impl ModelMeta {
     fn from_value(v: &Value) -> Result<Self> {
         let executables = need(v, "executables")?
@@ -139,6 +173,17 @@ impl ModelMeta {
             .iter()
             .map(ExecutableMeta::from_value)
             .collect::<Result<Vec<_>>>()?;
+        // Optional: absent in pre-IR manifests (layer_specs() falls
+        // back to the legacy single dense layer).
+        let layers = match v.get("layers") {
+            None => Vec::new(),
+            Some(lv) => lv
+                .as_arr()
+                .ok_or_else(|| anyhow!("manifest: layers not an array"))?
+                .iter()
+                .map(layer_from_value)
+                .collect::<Result<Vec<_>>>()?,
+        };
         Ok(Self {
             family: need_str(v, "family")?,
             n_params: need_usize(v, "n_params")?,
@@ -149,6 +194,7 @@ impl ModelMeta {
             flops_fwd_per_example: need_f64(v, "flops_fwd_per_example")?,
             init_params: need_str(v, "init_params")?,
             executables,
+            layers,
         })
     }
 }
@@ -230,5 +276,49 @@ mod tests {
     #[test]
     fn missing_model_is_an_error() {
         assert!(sample().model("nope").is_err());
+    }
+
+    #[test]
+    fn pre_ir_manifests_fall_back_to_one_dense_layer() {
+        let m = sample();
+        let mm = m.model("m").unwrap();
+        assert!(mm.layers.is_empty(), "sample manifest predates the layer IR");
+        let specs = mm.layer_specs();
+        assert_eq!(specs, vec![LayerSpec::dense(32 * 32 * 3, 100)]);
+    }
+
+    #[test]
+    fn layered_manifests_parse_the_layer_chain() {
+        let m = Manifest::parse(
+            r#"{
+            "version": 2, "seed": 0,
+            "models": {"mlp": {
+              "family": "mlp", "n_params": 100, "image": 2, "channels": 3,
+              "num_classes": 4, "clip_norm": 1.0,
+              "flops_fwd_per_example": 1.0, "init_params": "mlp_init.bin",
+              "layers": [
+                {"d_in": 12, "d_out": 6, "activation": "relu"},
+                {"d_in": 6, "d_out": 4}
+              ],
+              "executables": []}}}"#,
+        )
+        .unwrap();
+        let specs = m.model("mlp").unwrap().layer_specs();
+        assert_eq!(
+            specs,
+            vec![LayerSpec::dense_relu(12, 6), LayerSpec::dense(6, 4)]
+        );
+        // Unknown activations are a parse error, not a silent identity.
+        assert!(Manifest::parse(
+            r#"{
+            "version": 2, "seed": 0,
+            "models": {"m": {
+              "family": "mlp", "n_params": 1, "image": 1, "channels": 1,
+              "num_classes": 1, "clip_norm": 1.0,
+              "flops_fwd_per_example": 1.0, "init_params": "i.bin",
+              "layers": [{"d_in": 1, "d_out": 1, "activation": "gelu"}],
+              "executables": []}}}"#,
+        )
+        .is_err());
     }
 }

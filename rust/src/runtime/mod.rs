@@ -34,6 +34,7 @@ pub mod backend;
 pub mod client;
 pub mod compile_cache;
 pub mod hlo_analysis;
+pub mod layers;
 pub mod manifest;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
@@ -46,6 +47,7 @@ pub use backend::{
 pub use client::{ModelRuntime, Runtime};
 pub use compile_cache::{CompileCache, CompileRecord};
 pub use hlo_analysis::{analyze, analyze_file, HloStats};
+pub use layers::{executed_choices, LayerPlan, PlannedLayer};
 pub use manifest::{ExecutableMeta, Manifest, ModelMeta};
 pub use reference::{ReferenceBackend, REFERENCE_MODEL};
 pub use tensor::Tensor;

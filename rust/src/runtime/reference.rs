@@ -1,22 +1,46 @@
 //! Pure-Rust reference backend: the default, dependency-free executor.
 //!
-//! Ports the linear+softmax reference model and the kernel oracles of
-//! `python/compile/kernels/ref.py` to Rust so the entire sampler →
-//! batcher → trainer → accountant → report pipeline runs end-to-end
-//! offline, with the exact Algorithm 1/2 semantics:
+//! Executes the **layered model IR** ([`super::layers::LayerPlan`]):
+//! any chain of dense(+ReLU) layers ending in a softmax-xent head, with
+//! the exact Algorithm 1/2 semantics, so the entire sampler → batcher →
+//! trainer → accountant → report pipeline runs end-to-end offline on
+//! every model of [`crate::models::cpu_ladder`] (`ref-linear`,
+//! `mlp-small`, `mlp-wide`, ...):
 //!
-//! * per-example gradients of softmax cross-entropy over one linear
-//!   layer (`logits = W x + b`, flat params `[W row-major | b]`),
-//! * per-example squared grad norms via the closed form
-//!   `||g_i||^2 = ||dlogits_i||^2 * (||x_i||^2 + 1)` (weight ⊗ input
-//!   outer product plus the bias row — for a single linear layer this
-//!   equals the ghost-norm trick, which is why the `ghost`/`bk`
-//!   variants share the per-example path here),
-//! * masked clip-and-accumulate `acc += mask_i * min(1, C/||g_i||) g_i`,
+//! * **forward tape** — per example, hidden activations are recorded
+//!   (post-activation) so the backward pass can revisit every layer's
+//!   input;
+//! * **per-example backward across all layers** — `dz` per layer via
+//!   `W^T dz` + the ReLU mask, per-example squared norms per layer via
+//!   the Gram products `‖dz‖² · (‖a‖² + 1)` (weights ⊗ input plus the
+//!   bias row; at the CPU ladder's effective sequence length t = 1 the
+//!   ghost-norm T×T Gram matrices degenerate to these scalars, and the
+//!   identity is exact for dense layers);
+//! * **global-norm clipping** — the per-example norm is the sum of the
+//!   per-layer squared norms over the *whole* network (never clipped
+//!   per layer), then the masked clip-and-accumulate
+//!   `acc += mask_i * min(1, C/‖g_i‖) g_i`;
+//! * **executed clipping branches** — ghost-style layers fold the
+//!   clipped gradient with a fused reweighted `axpy` (per-example
+//!   weight grads never materialize); `perex` layers materialize each
+//!   example's layer gradient first (the Opacus hook cost, observable
+//!   as memory traffic); the `mix` variant picks per layer via the
+//!   Bu et al. decision rule ([`super::layers::executed_choices`]).
+//!   The norm is computed once, in the shared Gram form, and the
+//!   materialized fold adds bit-identical addends in the same order —
+//!   so **every variant is bitwise-identical** in accumulator, loss,
+//!   and norms; the branch moves memory traffic and wall-clock only
+//!   (property-tested in `rust/tests/layered_models.rs`);
 //! * the noisy step `params - lr * (acc + sigma*C*z) / denom` with
 //!   ChaCha20-seeded Gaussian noise from the 64-bit per-step seed.
 //!
-//! ## Hot-path implementation (DESIGN.md §3)
+//! For a single dense layer all of this degenerates to the seed's
+//! hardcoded linear+softmax kernel — same `[W | b]` layout, same dot
+//! products, same clip — and the `ref-linear` trajectory is pinned
+//! bitwise against a port of that original kernel by the oracle
+//! proptest in `rust/tests/layered_models.rs`.
+//!
+//! ## Hot-path implementation (DESIGN.md §3, §9)
 //!
 //! The kernels are written for steady-state speed without giving up
 //! bitwise determinism:
@@ -25,47 +49,60 @@
 //!   `run_*_into` forms natively: the gradient accumulator and the
 //!   parameter vector are updated in place, never cloned per call, so
 //!   the default session ([`Backend::open_session`]) drives these
-//!   in-place kernels directly — the session's bound `Tensor`s are the
-//!   working buffers. The copying forms are clone + donate, so all
-//!   entry points are identical by construction.
-//! * **Scratch arenas** — per-call working sets (dlogits, clip scales,
-//!   losses, the apply noise vector) live in reusable arenas instead
-//!   of per-example `Vec` allocations. Arenas are pooled behind a
-//!   `Mutex<Vec<_>>`: a call pops one (or creates a fresh one on first
-//!   concurrent use) and returns it afterwards, so the lock is held
-//!   only for the pop/push — concurrent sessions driven by the
-//!   data-parallel executor (`cluster::parallel`) run their kernels
-//!   genuinely in parallel instead of serializing on a shared arena,
-//!   and the steady state still allocates nothing (one arena per
-//!   concurrently active session).
-//! * **Blocked matvec** — logits come from an 8-lane unrolled dot
-//!   product with a fixed reduction tree; each weight row stays hot
-//!   across the lane loop.
+//!   in-place kernels directly.
+//! * **Scratch arenas** — per-call working sets (the dz tape, the
+//!   activation tape, clip scales, losses, the apply noise vector)
+//!   live in pooled reusable arenas (popped per call, returned after),
+//!   so concurrent sessions never serialize and the steady state
+//!   allocates only the per-call `sq_norms` output and the phase-2 row
+//!   units.
+//! * **Blocked matvec** — every layer's forward uses the 8-lane
+//!   unrolled dot with a fixed reduction tree.
 //! * **Deterministic threading** — `std::thread::scope` with fixed
-//!   index partitions. Phase 1 (per-example dlogits/norms/scales) is
+//!   index partitions. Phase 1 (per-example forward/backward) is
 //!   parallel over *example ranges*; phase 2 (the `acc +=` update) is
-//!   parallel over *class-row ranges* with every worker scanning
-//!   examples in order, so bits never depend on thread count or
-//!   physical chunking — padding-neutrality stays exact.
+//!   parallel over *accumulator row units* — one unit per (layer,
+//!   output row) — with every worker scanning examples in order, so
+//!   bits never depend on thread count or physical chunking and
+//!   Algorithm-2 padding neutrality stays exact.
 //!   `ReferenceBackend::with_threads` exposes the knob (wired to
 //!   `dpshort --threads`).
 //!
-//! "Compilation" is a spec decode, timed through the same
+//! "Compilation" is a spec decode — the accum specs embed the resolved
+//! [`LayerPlan`] and per-layer branch choices — timed through the same
 //! [`CompileCache`] as PJRT so the masked-vs-naive compile-count
 //! invariants (Fig. A.2) are observable on this backend too.
 
 use super::backend::{AccumArgs, AccumOut, AccumStats, ApplyArgs, Backend, Prepared};
 use super::compile_cache::{CompileCache, CompileRecord};
+use super::layers::{executed_choices, LayerPlan};
 use super::manifest::{ExecutableMeta, Manifest, ModelMeta};
 use super::tensor::Tensor;
+use crate::clipping::LayerChoice;
+use crate::models::{cpu_ladder, Activation, LayerSpec};
 use crate::util::rng::ChaChaRng;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
-/// Name of the synthetic reference model in [`ReferenceBackend::manifest`].
+/// Name of the canonical (seed) reference model: the single dense
+/// layer. The in-memory manifest carries the whole CPU-executable
+/// ladder ([`cpu_ladder`]); this one stays the default rung.
 pub const REFERENCE_MODEL: &str = "ref-linear";
+
+/// Accum variants the in-memory manifest lowers for every CPU model.
+/// `perex` is the materializing per-example graph, `mix` the per-layer
+/// decision-rule graph; the rest keep their PR-1 meanings (and all of
+/// them agree bitwise — see the module docs).
+pub const ACCUM_VARIANTS: &[&str] =
+    &["nonprivate", "naive", "masked", "ghost", "bk", "perex", "mix"];
+
+/// Physical batch ladder lowered per (model, variant).
+const ACCUM_BATCHES: &[usize] = &[1, 2, 4, 8, 16, 32, 64];
+
+/// Eval executable batch size (fixed at "AOT" time, like real artifacts).
+const EVAL_BATCH: usize = 32;
 
 /// Minimum inner-loop multiply-adds a worker thread must amortize
 /// before auto-threading spawns it: scoped-thread spawn costs tens of
@@ -75,25 +112,41 @@ pub const REFERENCE_MODEL: &str = "ref-linear";
 const MIN_WORK_PER_WORKER: usize = 200_000;
 
 /// Cap for auto-detected worker threads (diminishing returns beyond the
-/// row count of the reference model).
+/// row count of the reference models).
 const MAX_AUTO_THREADS: usize = 8;
 
 /// Decoded executable spec (the reference backend's "compiled" form).
+/// Accum/eval specs embed the resolved [`LayerPlan`] (and, for accum,
+/// the per-layer fused/materialized branch), so the hot loop never
+/// re-derives the layout.
 #[derive(Debug, Clone)]
 enum RefExec {
-    Accum { variant: String, batch: usize },
+    Accum {
+        variant: String,
+        batch: usize,
+        plan: LayerPlan,
+        /// Per layer: `true` = fused ghost-style accumulate,
+        /// `false` = materialized per-example accumulate.
+        fused: Vec<bool>,
+    },
     Apply,
-    Eval { batch: usize },
+    Eval {
+        batch: usize,
+        plan: LayerPlan,
+    },
 }
 
 /// Reusable per-call working buffers — the scratch arena. Sized on
-/// first use, reused (and regrown, never shrunk below need) afterwards,
-/// so the steady-state hot loop performs no heap allocation beyond the
-/// per-call `sq_norms` output.
+/// first use, reused afterwards, so the steady-state hot loop performs
+/// no heap allocation beyond the per-call `sq_norms` output and the
+/// phase-2 row-unit table.
 #[derive(Debug, Default)]
 struct Scratch {
-    /// `[B, ncls]`: logits, transformed in place into dlogits.
-    dlogits: Vec<f32>,
+    /// `[B, dz_stride]`: per-example, per-layer pre-activation grads
+    /// (the head slot holds logits, transformed in place into dz).
+    dz: Vec<f32>,
+    /// `[B, tape_stride]`: per-example hidden activations (forward tape).
+    tape: Vec<f32>,
     /// `[B]`: accumulate scale `mask_i * min(1, C/||g_i||)`.
     scale: Vec<f32>,
     /// `[B]`: unmasked per-example losses.
@@ -103,13 +156,20 @@ struct Scratch {
 }
 
 impl Scratch {
-    /// Hand out the accum buffers `(dlogits[B*ncls], scale[B], losses[B])`.
-    fn accum(&mut self, b: usize, ncls: usize) -> (&mut [f32], &mut [f32], &mut [f32]) {
-        self.dlogits.resize(b * ncls, 0.0);
+    /// Hand out the accum buffers
+    /// `(dz[B*dz_stride], tape[B*tape_stride], scale[B], losses[B])`.
+    fn accum(
+        &mut self,
+        b: usize,
+        plan: &LayerPlan,
+    ) -> (&mut [f32], &mut [f32], &mut [f32], &mut [f32]) {
+        self.dz.resize(b * plan.dz_stride, 0.0);
+        self.tape.resize(b * plan.tape_stride, 0.0);
         self.scale.resize(b, 0.0);
         self.losses.resize(b, 0.0);
         (
-            &mut self.dlogits[..b * ncls],
+            &mut self.dz[..b * plan.dz_stride],
+            &mut self.tape[..b * plan.tape_stride],
             &mut self.scale[..b],
             &mut self.losses[..b],
         )
@@ -209,55 +269,55 @@ impl ReferenceBackend {
         }
     }
 
-    /// In-memory manifest for the reference model: every clipping
-    /// variant at a ladder of physical batch sizes, plus apply/eval —
-    /// the same catalog shape `python/compile/aot.py` writes for real
-    /// artifacts, so the trainer cannot tell the backends apart.
+    /// In-memory manifest for the CPU-executable ladder
+    /// ([`cpu_ladder`]): every model's layer IR, every clipping variant
+    /// at a ladder of physical batch sizes, plus apply/eval — the same
+    /// catalog shape `python/compile/aot.py` writes for real artifacts,
+    /// so the trainer cannot tell the backends apart.
     pub fn manifest(seed: u64) -> Manifest {
-        let image = 16;
-        let channels = 3;
-        let num_classes = 10;
-        let d = image * image * channels;
-        let mut executables = Vec::new();
-        for variant in ["nonprivate", "naive", "masked", "ghost", "bk"] {
-            for batch in [1usize, 2, 4, 8, 16, 32, 64] {
-                executables.push(ExecutableMeta {
-                    path: format!("{REFERENCE_MODEL}_accum_{variant}_b{batch}_f32.ref"),
-                    kind: "accum".into(),
-                    variant: Some(variant.into()),
-                    batch: Some(batch),
-                    dtype: Some("f32".into()),
-                });
-            }
-        }
-        executables.push(ExecutableMeta {
-            path: format!("{REFERENCE_MODEL}_apply.ref"),
-            kind: "apply".into(),
-            variant: None,
-            batch: None,
-            dtype: None,
-        });
-        executables.push(ExecutableMeta {
-            path: format!("{REFERENCE_MODEL}_eval_b32.ref"),
-            kind: "eval".into(),
-            variant: None,
-            batch: Some(32),
-            dtype: None,
-        });
-        let meta = ModelMeta {
-            family: "linear".into(),
-            n_params: num_classes * d + num_classes,
-            image,
-            channels,
-            num_classes,
-            clip_norm: 1.0,
-            flops_fwd_per_example: (2 * num_classes * d) as f64,
-            init_params: format!("{REFERENCE_MODEL}_init.synthetic"),
-            executables,
-        };
         let mut models = BTreeMap::new();
-        models.insert(REFERENCE_MODEL.to_string(), meta);
-        Manifest { version: 1, seed, models }
+        for m in cpu_ladder() {
+            let mut executables = Vec::new();
+            for variant in ACCUM_VARIANTS {
+                for &batch in ACCUM_BATCHES {
+                    executables.push(ExecutableMeta {
+                        path: format!("{}_accum_{variant}_b{batch}_f32.ref", m.name),
+                        kind: "accum".into(),
+                        variant: Some((*variant).into()),
+                        batch: Some(batch),
+                        dtype: Some("f32".into()),
+                    });
+                }
+            }
+            executables.push(ExecutableMeta {
+                path: format!("{}_apply.ref", m.name),
+                kind: "apply".into(),
+                variant: None,
+                batch: None,
+                dtype: None,
+            });
+            executables.push(ExecutableMeta {
+                path: format!("{}_eval_b{EVAL_BATCH}.ref", m.name),
+                kind: "eval".into(),
+                variant: None,
+                batch: Some(EVAL_BATCH),
+                dtype: None,
+            });
+            let meta = ModelMeta {
+                family: m.family.into(),
+                n_params: m.params(),
+                image: m.image,
+                channels: m.channels,
+                num_classes: m.num_classes,
+                clip_norm: m.clip_norm,
+                flops_fwd_per_example: m.fwd_flops_per_example(),
+                init_params: format!("{}_init.synthetic", m.name),
+                executables,
+                layers: m.layers.clone(),
+            };
+            models.insert(m.name.to_string(), meta);
+        }
+        Manifest { version: 2, seed, models }
     }
 
     fn spec(&self, prep: &Prepared) -> Result<Arc<RefExec>> {
@@ -354,11 +414,22 @@ fn logsumexp(lg: &[f32]) -> f32 {
     max + z.ln()
 }
 
+/// `out[r] = dot(W[r, :], a) + b[r]` — one dense layer's forward, the
+/// blocked matvec shared by accum and eval.
+#[inline]
+fn dense_forward(out: &mut [f32], w: &[f32], bias: &[f32], a_in: &[f32]) {
+    let d_in = a_in.len();
+    for (r, slot) in out.iter_mut().enumerate() {
+        *slot = dot(&w[r * d_in..(r + 1) * d_in], a_in) + bias[r];
+    }
+}
+
 /// Read-only inputs shared by every accum kernel worker.
 #[derive(Clone, Copy)]
 struct AccumCtx<'a> {
-    meta: &'a ModelMeta,
+    plan: &'a LayerPlan,
     nonprivate: bool,
+    clip_norm: f32,
     params: &'a [f32],
     x: &'a [f32],
     y: &'a [i32],
@@ -366,34 +437,75 @@ struct AccumCtx<'a> {
 }
 
 /// Accum phase 1: for the examples of one partition (`start` onward,
-/// one slot per element of `scale`), compute dlogits (softmax − onehot,
-/// in place over the logits), the unmasked loss, the squared grad norm,
-/// and the accumulate scale. Examples are independent — this is the
-/// parallel-over-examples section. Output slices are the partition's
-/// disjoint windows (local index 0 = example `start`).
+/// one slot per element of `scale`), run the layered forward (hidden
+/// activations onto the tape, head logits into the dz slot), transform
+/// the logits into dz (softmax − onehot) with the unmasked loss, then
+/// backpropagate dz through every layer (`W^T dz` + the ReLU mask)
+/// while accumulating the per-layer Gram-form squared norms into the
+/// **global** per-example norm, and finally the accumulate scale.
+/// Examples are independent — this is the parallel-over-examples
+/// section. Output slices are the partition's disjoint windows (local
+/// index 0 = example `start`).
 fn accum_examples(
     ctx: AccumCtx<'_>,
     start: usize,
-    dlogits: &mut [f32],
+    dz: &mut [f32],
+    tape: &mut [f32],
     scale: &mut [f32],
     losses: &mut [f32],
     sq_norms: &mut [f32],
 ) {
-    let AccumCtx { meta, nonprivate, params, x, y, mask } = ctx;
-    let d = image_dim(meta);
-    let ncls = meta.num_classes;
-    let (w, rest) = params.split_at(ncls * d);
-    let bias = &rest[..ncls];
+    let plan = ctx.plan;
+    let d = plan.input_dim;
+    let ts = plan.tape_stride;
+    let dzs = plan.dz_stride;
+    let nlayers = plan.layers.len();
     for k in 0..scale.len() {
         let i = start + k;
-        let xi = &x[i * d..(i + 1) * d];
-        let dl = &mut dlogits[k * ncls..(k + 1) * ncls];
-        // Blocked matvec: logits land in the dlogits slot and are
-        // transformed in place below.
-        for (cls, slot) in dl.iter_mut().enumerate() {
-            *slot = dot(&w[cls * d..(cls + 1) * d], xi) + bias[cls];
+        let xi = &ctx.x[i * d..(i + 1) * d];
+        let tape_w = &mut tape[k * ts..(k + 1) * ts];
+        let dz_w = &mut dz[k * dzs..(k + 1) * dzs];
+
+        // Forward: hidden layers write (post-activation) onto the
+        // tape; the head writes its logits into its dz slot, where the
+        // softmax transform below turns them into dz in place.
+        for l in 0..nlayers {
+            let pl = plan.layers[l];
+            let (d_in, d_out) = (pl.spec.d_in, pl.spec.d_out);
+            let w = &ctx.params[pl.w_off..pl.w_off + d_in * d_out];
+            let bias = &ctx.params[pl.b_off..pl.b_off + d_out];
+            if l + 1 == nlayers {
+                let a_in: &[f32] = if l == 0 {
+                    xi
+                } else {
+                    &tape_w[plan.layers[l - 1].act_off..][..d_in]
+                };
+                dense_forward(&mut dz_w[pl.dz_off..pl.dz_off + d_out], w, bias, a_in);
+            } else {
+                let (lo, hi) = tape_w.split_at_mut(pl.act_off);
+                let a_in: &[f32] = if l == 0 {
+                    xi
+                } else {
+                    &lo[plan.layers[l - 1].act_off..][..d_in]
+                };
+                let out = &mut hi[..d_out];
+                dense_forward(out, w, bias, a_in);
+                if pl.spec.activation == Activation::Relu {
+                    for v in out.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+            }
         }
-        let yi = y[i] as usize;
+
+        // Head: softmax − onehot in place over the logits, plus the
+        // unmasked loss (identical arithmetic to the eval path's
+        // logsumexp).
+        let head = plan.layers[nlayers - 1];
+        let dl = &mut dz_w[head.dz_off..head.dz_off + head.spec.d_out];
+        let yi = ctx.y[i] as usize;
         let ly = dl[yi];
         let max = dl.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut z = 0.0f32;
@@ -406,51 +518,157 @@ fn accum_examples(
             *v /= z;
         }
         dl[yi] -= 1.0;
-        if nonprivate {
+
+        // Backward: per-layer Gram norms into the global per-example
+        // norm, and dz for the next layer down (`W^T dz`, ReLU-masked).
+        let mut sq_total = 0.0f32;
+        for l in (0..nlayers).rev() {
+            let pl = plan.layers[l];
+            let (d_in, d_out) = (pl.spec.d_in, pl.spec.d_out);
+            if !ctx.nonprivate {
+                let a_in: &[f32] = if l == 0 {
+                    xi
+                } else {
+                    &tape_w[plan.layers[l - 1].act_off..][..d_in]
+                };
+                let dz_l = &dz_w[pl.dz_off..pl.dz_off + d_out];
+                let dlsq = dot(dz_l, dz_l);
+                let asq = dot(a_in, a_in);
+                sq_total += dlsq * (asq + 1.0);
+            }
+            if l > 0 {
+                let prev = plan.layers[l - 1];
+                let (lo, hi) = dz_w.split_at_mut(pl.dz_off);
+                let dz_l = &hi[..d_out];
+                let da = &mut lo[prev.dz_off..prev.dz_off + prev.spec.d_out];
+                da.fill(0.0);
+                let w = &ctx.params[pl.w_off..pl.w_off + d_in * d_out];
+                for (r, &g) in dz_l.iter().enumerate() {
+                    axpy(da, &w[r * d_in..(r + 1) * d_in], g);
+                }
+                if prev.spec.activation == Activation::Relu {
+                    let a_prev = &tape_w[prev.act_off..prev.act_off + prev.spec.d_out];
+                    for (dv, &av) in da.iter_mut().zip(a_prev) {
+                        if av <= 0.0 {
+                            *dv = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+
+        if ctx.nonprivate {
             // Batched-gradient baseline: no clipping, norms reported
             // as zeros (matching `_accum_nonprivate` in model.py).
             sq_norms[k] = 0.0;
-            scale[k] = mask[i];
+            scale[k] = ctx.mask[i];
         } else {
-            let xsq = dot(xi, xi);
-            let dlsq = dot(dl, dl);
-            let sq = dlsq * (xsq + 1.0);
-            sq_norms[k] = sq;
-            let norm = sq.max(0.0).sqrt().max(1e-12);
-            scale[k] = ((meta.clip_norm as f32) / norm).min(1.0) * mask[i];
+            sq_norms[k] = sq_total;
+            let norm = sq_total.max(0.0).sqrt().max(1e-12);
+            scale[k] = (ctx.clip_norm / norm).min(1.0) * ctx.mask[i];
         }
     }
 }
 
-/// Accum phase 2: `acc += scale_i * (dlogits_i ⊗ x_i, dlogits_i)` for
-/// the class rows `[c0, c0 + b_rows.len())`, scanning examples in batch
-/// order. Parallelism partitions *rows* (coordinates), never examples,
-/// so every accumulator coordinate sees the exact addition chain of a
-/// sequential per-example run — for any thread count and any physical
-/// chunking of the same example stream (Algorithm-2 padding neutrality
-/// stays bitwise-exact).
+/// One phase-2 work unit: a single accumulator output row — its weight
+/// row and bias slot, plus everything needed to locate its inputs per
+/// example. Units partition the accumulator disjointly, so threads
+/// own non-overlapping `&mut` slices.
+struct RowUnit<'a> {
+    /// Input width of the owning layer.
+    d_in: usize,
+    /// Tape offset of the owning layer's input activations (`None` =
+    /// the layer reads the batch input `x`).
+    in_tape: Option<usize>,
+    /// Index of this row's dz value in the per-example dz window.
+    dz_idx: usize,
+    /// Fused ghost-style accumulate (vs materialize-then-add).
+    fused: bool,
+    /// This row's weight slice of the accumulator.
+    w: &'a mut [f32],
+    /// This row's bias slot of the accumulator.
+    b: &'a mut f32,
+}
+
+/// Decompose the flat accumulator into per-row [`RowUnit`]s in layout
+/// order (layer-major, then output row).
+fn build_row_units<'a>(
+    plan: &LayerPlan,
+    fused: &[bool],
+    acc: &'a mut [f32],
+) -> Vec<RowUnit<'a>> {
+    let mut units = Vec::with_capacity(plan.total_rows());
+    let mut rest: &'a mut [f32] = acc;
+    for (l, pl) in plan.layers.iter().enumerate() {
+        let (d_in, d_out) = (pl.spec.d_in, pl.spec.d_out);
+        let (w_region, tail) = rest.split_at_mut(d_in * d_out);
+        let (b_region, tail) = tail.split_at_mut(d_out);
+        rest = tail;
+        let in_tape = if l == 0 { None } else { Some(plan.layers[l - 1].act_off) };
+        for ((r, w), b) in w_region.chunks_mut(d_in).enumerate().zip(b_region.iter_mut()) {
+            units.push(RowUnit {
+                d_in,
+                in_tape,
+                dz_idx: pl.dz_off + r,
+                fused: fused[l],
+                w,
+                b,
+            });
+        }
+    }
+    units
+}
+
+/// Accum phase 2: `acc_row += scale_i * dz_i[row] * a_i` for every row
+/// unit of one partition, scanning examples in batch order. Parallelism
+/// partitions *rows* (accumulator coordinates), never examples, so
+/// every coordinate sees the exact addition chain of a sequential
+/// per-example run — for any thread count and any physical chunking of
+/// the same example stream (Algorithm-2 padding neutrality stays
+/// bitwise-exact). Fused units fold with `axpy`; materialized units
+/// write the example's scaled gradient row first (the Opacus-style
+/// memory traffic) and then add the bit-identical addends.
 fn accum_update(
     ctx: AccumCtx<'_>,
-    c0: usize,
-    w_rows: &mut [f32],
-    b_rows: &mut [f32],
-    dlogits: &[f32],
+    units: &mut [RowUnit<'_>],
+    dz: &[f32],
+    tape: &[f32],
     scale: &[f32],
 ) {
-    let d = image_dim(ctx.meta);
-    let ncls = ctx.meta.num_classes;
-    let x = ctx.x;
-    let rows = b_rows.len();
+    let d = ctx.plan.input_dim;
+    let ts = ctx.plan.tape_stride;
+    let dzs = ctx.plan.dz_stride;
+    let m_len = units
+        .iter()
+        .map(|u| if u.fused { 0 } else { u.d_in })
+        .max()
+        .unwrap_or(0);
+    let mut m_row = vec![0.0f32; m_len];
     for (i, &sc) in scale.iter().enumerate() {
         if sc == 0.0 {
             continue;
         }
-        let xi = &x[i * d..(i + 1) * d];
-        let dl = &dlogits[i * ncls..(i + 1) * ncls];
-        for r in 0..rows {
-            let g = sc * dl[c0 + r];
-            axpy(&mut w_rows[r * d..(r + 1) * d], xi, g);
-            b_rows[r] += g;
+        let xi = &ctx.x[i * d..(i + 1) * d];
+        let tape_w = &tape[i * ts..(i + 1) * ts];
+        let dz_w = &dz[i * dzs..(i + 1) * dzs];
+        for u in units.iter_mut() {
+            let a_in: &[f32] = match u.in_tape {
+                None => xi,
+                Some(off) => &tape_w[off..off + u.d_in],
+            };
+            let g = sc * dz_w[u.dz_idx];
+            if u.fused {
+                axpy(u.w, a_in, g);
+            } else {
+                let m = &mut m_row[..u.d_in];
+                for (mv, &av) in m.iter_mut().zip(a_in) {
+                    *mv = g * av;
+                }
+                for (wv, &mv) in u.w.iter_mut().zip(m.iter()) {
+                    *wv += mv;
+                }
+            }
+            *u.b += g;
         }
     }
 }
@@ -460,22 +678,29 @@ impl Backend for ReferenceBackend {
         "reference"
     }
 
-    fn prepare(&self, _dir: &Path, _meta: &ModelMeta, exe: &ExecutableMeta) -> Result<Prepared> {
+    fn prepare(&self, _dir: &Path, meta: &ModelMeta, exe: &ExecutableMeta) -> Result<Prepared> {
         let spec = match exe.kind.as_str() {
-            "accum" => RefExec::Accum {
-                variant: exe
+            "accum" => {
+                let variant = exe
                     .variant
                     .clone()
-                    .ok_or_else(|| anyhow!("accum artifact {} missing variant", exe.path))?,
-                batch: exe
+                    .ok_or_else(|| anyhow!("accum artifact {} missing variant", exe.path))?;
+                let batch = exe
                     .batch
-                    .ok_or_else(|| anyhow!("accum artifact {} missing batch", exe.path))?,
-            },
+                    .ok_or_else(|| anyhow!("accum artifact {} missing batch", exe.path))?;
+                let plan = LayerPlan::build(meta)?;
+                let fused = executed_choices(&variant, &plan)?
+                    .iter()
+                    .map(|c| *c == LayerChoice::Ghost)
+                    .collect();
+                RefExec::Accum { variant, batch, plan, fused }
+            }
             "apply" => RefExec::Apply,
             "eval" => RefExec::Eval {
                 batch: exe
                     .batch
                     .ok_or_else(|| anyhow!("eval artifact {} missing batch", exe.path))?,
+                plan: LayerPlan::build(meta)?,
             },
             other => return Err(anyhow!("unknown executable kind {other:?} for {}", exe.path)),
         };
@@ -492,17 +717,27 @@ impl Backend for ReferenceBackend {
         self.cache.lock().unwrap().records().to_vec()
     }
 
-    /// Synthesized deterministic init: small Gaussian weights, zero
-    /// biases (no artifact file to read).
+    /// Synthesized deterministic init, laid out by the layer plan:
+    /// small Gaussian weights, zero biases, drawn layer by layer from
+    /// one ChaCha stream (for the single-layer model this is exactly
+    /// the seed's `[W Gaussians | b zeros]` sequence).
     fn init_params(&self, _dir: &Path, meta: &ModelMeta) -> Result<Tensor> {
-        let d = image_dim(meta);
-        let ncls = meta.num_classes;
+        let specs = meta.layer_specs();
+        let n: usize = specs.iter().map(LayerSpec::params).sum();
+        if n != meta.n_params {
+            return Err(anyhow!(
+                "layer chain lays out {n} params but the manifest says {}",
+                meta.n_params
+            ));
+        }
         let mut rng = ChaChaRng::from_seed_stream(self.init_seed, 0, b"refinit\0");
         let mut v = Vec::with_capacity(meta.n_params);
-        for _ in 0..ncls * d {
-            v.push((0.05 * rng.next_normal()) as f32);
+        for spec in &specs {
+            for _ in 0..spec.d_in * spec.d_out {
+                v.push((0.05 * rng.next_normal()) as f32);
+            }
+            v.resize(v.len() + spec.d_out, 0.0);
         }
-        v.resize(meta.n_params, 0.0);
         Ok(Tensor::from_vec(v))
     }
 
@@ -536,9 +771,9 @@ impl Backend for ReferenceBackend {
     }
 
     /// Native donating accum: `acc` is updated in place through the
-    /// scratch arena + deterministic-threading kernel described in the
-    /// module docs. This is also the session hot path (the default
-    /// session binds its buffers to this kernel).
+    /// scratch arena + deterministic-threading layered kernel described
+    /// in the module docs. This is also the session hot path (the
+    /// default session binds its buffers to this kernel).
     fn run_accum_into(
         &self,
         prep: &Prepared,
@@ -548,8 +783,10 @@ impl Backend for ReferenceBackend {
         args: &AccumArgs<'_>,
     ) -> Result<AccumStats> {
         let spec = self.spec(prep)?;
-        let (variant, batch) = match spec.as_ref() {
-            RefExec::Accum { variant, batch } => (variant.as_str(), *batch),
+        let (variant, batch, plan, fused) = match spec.as_ref() {
+            RefExec::Accum { variant, batch, plan, fused } => {
+                (variant.as_str(), *batch, plan, fused.as_slice())
+            }
             _ => return Err(anyhow!("{} is not an accum executable", prep.key)),
         };
         let (x, y, mask) = (args.x, args.y, args.mask);
@@ -560,42 +797,77 @@ impl Backend for ReferenceBackend {
         if mask.len() != b {
             return Err(anyhow!("mask length {} != batch {b}", mask.len()));
         }
+        if plan.n_params != meta.n_params {
+            return Err(anyhow!(
+                "executable {} was prepared for a {}-param model, got {}",
+                prep.key,
+                plan.n_params,
+                meta.n_params
+            ));
+        }
         Self::check_model_vectors(meta, params, Some(acc))?;
         Self::check_batch(meta, x, y)?;
 
-        let d = image_dim(meta);
-        let ncls = meta.num_classes;
         let ctx = AccumCtx {
-            meta,
+            plan,
             nonprivate: variant == "nonprivate",
+            clip_norm: meta.clip_norm as f32,
             params: params.as_slice(),
             x,
             y,
             mask,
         };
+        let (ts, dzs) = (plan.tape_stride, plan.dz_stride);
         let mut sq_norms = vec![0.0f32; b];
 
         let mut pooled = PooledScratch::take(&self.scratch);
-        let (dlogits, scale, losses) = pooled.get().accum(b, ncls);
+        let (dz, tape, scale, losses) = pooled.get().accum(b, plan);
 
-        // Phase 1: per-example dlogits / losses / norms / scales,
-        // parallel over fixed contiguous example partitions.
-        let nthreads = self.workers(b * ncls * d, b);
+        // Phase 1: per-example forward tape + backward dz / losses /
+        // norms / scales, parallel over fixed contiguous example
+        // partitions. Partitions are cut first (handles the
+        // tape_stride = 0 single-layer case cleanly), then each runs on
+        // its own scoped thread.
+        let work = b * plan.macs_per_example();
+        let nthreads = self.workers(work, b);
         if nthreads > 1 {
             let per = b.div_ceil(nthreads);
+            type Part<'p> =
+                (usize, &'p mut [f32], &'p mut [f32], &'p mut [f32], &'p mut [f32], &'p mut [f32]);
+            let mut parts: Vec<Part<'_>> = Vec::with_capacity(nthreads);
+            {
+                // Explicit reborrows: the partition cursors consume the
+                // reborrow, not the bindings (which the single-thread
+                // branch and the loss fold still use).
+                let mut dz_rest: &mut [f32] = &mut dz[..];
+                let mut tape_rest: &mut [f32] = &mut tape[..];
+                let mut scale_rest: &mut [f32] = &mut scale[..];
+                let mut losses_rest: &mut [f32] = &mut losses[..];
+                let mut sq_rest: &mut [f32] = &mut sq_norms[..];
+                let mut start = 0usize;
+                while start < b {
+                    let count = per.min(b - start);
+                    let (dz_c, r) = dz_rest.split_at_mut(count * dzs);
+                    dz_rest = r;
+                    let (tp_c, r) = tape_rest.split_at_mut(count * ts);
+                    tape_rest = r;
+                    let (sc_c, r) = scale_rest.split_at_mut(count);
+                    scale_rest = r;
+                    let (ls_c, r) = losses_rest.split_at_mut(count);
+                    losses_rest = r;
+                    let (sq_c, r) = sq_rest.split_at_mut(count);
+                    sq_rest = r;
+                    parts.push((start, dz_c, tp_c, sc_c, ls_c, sq_c));
+                    start += count;
+                }
+            }
             std::thread::scope(|sc| {
-                for (ti, (((dl, sl), ls), sq)) in dlogits
-                    .chunks_mut(per * ncls)
-                    .zip(scale.chunks_mut(per))
-                    .zip(losses.chunks_mut(per))
-                    .zip(sq_norms.chunks_mut(per))
-                    .enumerate()
-                {
-                    sc.spawn(move || accum_examples(ctx, ti * per, dl, sl, ls, sq));
+                for (s0, dz_c, tp_c, sc_c, ls_c, sq_c) in parts {
+                    sc.spawn(move || accum_examples(ctx, s0, dz_c, tp_c, sc_c, ls_c, sq_c));
                 }
             });
         } else {
-            accum_examples(ctx, 0, dlogits, scale, losses, &mut sq_norms);
+            accum_examples(ctx, 0, dz, tape, scale, losses, &mut sq_norms);
         }
 
         // Masked loss sum in example order (the sequential association).
@@ -605,26 +877,37 @@ impl Backend for ReferenceBackend {
         }
 
         // Phase 2: the in-place accumulator update, parallel over fixed
-        // class-row partitions (examples always scanned in order).
-        let dlogits: &[f32] = dlogits;
+        // row-unit partitions (examples always scanned in order). A
+        // unit's cost is ~its weight-row width, and widths differ by an
+        // order of magnitude across layers (768 vs 32 on mlp-small), so
+        // partitions are cut by *cumulative cost*, not unit count —
+        // equal-count chunks would hand one thread nearly all the work.
+        // Cuts stay contiguous and every unit still scans examples in
+        // order, so the partitioning moves wall-clock only, never bits.
+        let dz: &[f32] = dz;
+        let tape: &[f32] = tape;
         let scale: &[f32] = scale;
-        let acc_s = acc.as_mut_slice();
-        let (w_acc, rest) = acc_s.split_at_mut(ncls * d);
-        let bias_acc = &mut rest[..ncls];
-        let t2 = self.workers(b * ncls * d, ncls);
+        let mut units = build_row_units(plan, fused, acc.as_mut_slice());
+        let t2 = self.workers(work, units.len());
         if t2 > 1 {
-            let rows_per = ncls.div_ceil(t2);
+            let total: usize = units.iter().map(|u| u.d_in + 1).sum();
+            let target = total.div_ceil(t2);
             std::thread::scope(|sc| {
-                for (ti, (wc, bc)) in w_acc
-                    .chunks_mut(rows_per * d)
-                    .zip(bias_acc.chunks_mut(rows_per))
-                    .enumerate()
-                {
-                    sc.spawn(move || accum_update(ctx, ti * rows_per, wc, bc, dlogits, scale));
+                let mut rest: &mut [RowUnit<'_>] = &mut units[..];
+                while !rest.is_empty() {
+                    let mut cut = 0usize;
+                    let mut cost = 0usize;
+                    while cut < rest.len() && (cut == 0 || cost < target) {
+                        cost += rest[cut].d_in + 1;
+                        cut += 1;
+                    }
+                    let (chunk, tail) = rest.split_at_mut(cut);
+                    rest = tail;
+                    sc.spawn(move || accum_update(ctx, chunk, dz, tape, scale));
                 }
             });
         } else {
-            accum_update(ctx, 0, w_acc, bias_acc, dlogits, scale);
+            accum_update(ctx, &mut units, dz, tape, scale);
         }
         Ok(AccumStats { loss_sum, sq_norms })
     }
@@ -675,29 +958,51 @@ impl Backend for ReferenceBackend {
         y: &[i32],
     ) -> Result<(f32, f32)> {
         let spec = self.spec(prep)?;
-        let batch = match spec.as_ref() {
-            RefExec::Eval { batch } => *batch,
+        let (batch, plan) = match spec.as_ref() {
+            RefExec::Eval { batch, plan } => (*batch, plan),
             _ => return Err(anyhow!("{} is not an eval executable", prep.key)),
         };
         if y.len() != batch {
             return Err(anyhow!("eval batch must be exactly {batch}, got {}", y.len()));
         }
+        if plan.n_params != meta.n_params {
+            return Err(anyhow!(
+                "executable {} was prepared for a {}-param model, got {}",
+                prep.key,
+                plan.n_params,
+                meta.n_params
+            ));
+        }
         Self::check_model_vectors(meta, params, None)?;
         Self::check_batch(meta, x, y)?;
-        let d = image_dim(meta);
-        let ncls = meta.num_classes;
+        let d = plan.input_dim;
+        let ncls = plan.num_classes;
         let p = params.as_slice();
-        let (w, rest) = p.split_at(ncls * d);
-        let bias = &rest[..ncls];
-        let mut lg = vec![0.0f32; ncls];
+        // Ping-pong activation buffers over the layered forward.
+        let mut cur = vec![0.0f32; plan.max_width];
+        let mut nxt = vec![0.0f32; plan.max_width];
         let mut loss_sum = 0.0f32;
         let mut ncorrect = 0.0f32;
         for (i, &yi) in y.iter().enumerate() {
             let xi = &x[i * d..(i + 1) * d];
-            for (cls, slot) in lg.iter_mut().enumerate() {
-                *slot = dot(&w[cls * d..(cls + 1) * d], xi) + bias[cls];
+            for (l, pl) in plan.layers.iter().enumerate() {
+                let (d_in, d_out) = (pl.spec.d_in, pl.spec.d_out);
+                let w = &p[pl.w_off..pl.w_off + d_in * d_out];
+                let bias = &p[pl.b_off..pl.b_off + d_out];
+                let a_in: &[f32] = if l == 0 { xi } else { &cur[..d_in] };
+                let out = &mut nxt[..d_out];
+                dense_forward(out, w, bias, a_in);
+                if pl.spec.activation == Activation::Relu {
+                    for v in out.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+                std::mem::swap(&mut cur, &mut nxt);
             }
-            loss_sum += logsumexp(&lg) - lg[yi as usize];
+            let lg = &cur[..ncls];
+            loss_sum += logsumexp(lg) - lg[yi as usize];
             let mut best = 0usize;
             for (j, &v) in lg.iter().enumerate() {
                 if v > lg[best] {
@@ -723,6 +1028,10 @@ mod tests {
         (backend, meta)
     }
 
+    fn mlp_meta() -> ModelMeta {
+        ReferenceBackend::manifest(0).models["mlp-small"].clone()
+    }
+
     fn prepare_accum(
         b: &ReferenceBackend,
         meta: &ModelMeta,
@@ -744,89 +1053,123 @@ mod tests {
     #[test]
     fn manifest_is_complete() {
         let m = ReferenceBackend::manifest(0);
-        let meta = m.model(REFERENCE_MODEL).unwrap();
-        assert!(meta.find_apply().is_some());
-        assert_eq!(meta.find_eval().and_then(|e| e.batch), Some(32));
-        assert_eq!(meta.accum_batches("masked", "f32"), vec![1, 2, 4, 8, 16, 32, 64]);
-        assert_eq!(meta.n_params, 10 * 16 * 16 * 3 + 10);
-        assert!(meta.variants().contains(&"nonprivate".to_string()));
+        // The whole CPU ladder is lowered, not just the seed model.
+        for name in ["ref-linear", "mlp-small", "mlp-wide"] {
+            let meta = m.model(name).unwrap();
+            assert!(meta.find_apply().is_some(), "{name}");
+            assert_eq!(meta.find_eval().and_then(|e| e.batch), Some(32), "{name}");
+            assert_eq!(
+                meta.accum_batches("masked", "f32"),
+                vec![1, 2, 4, 8, 16, 32, 64],
+                "{name}"
+            );
+            let variants = meta.variants();
+            for v in ACCUM_VARIANTS {
+                assert!(variants.contains(&v.to_string()), "{name} missing {v}");
+            }
+            assert!(!meta.layers.is_empty(), "{name}: manifest carries the layer IR");
+            LayerPlan::build(meta).unwrap();
+        }
+        let lin = m.model(REFERENCE_MODEL).unwrap();
+        assert_eq!(lin.n_params, 10 * 16 * 16 * 3 + 10);
+        let mlp = m.model("mlp-small").unwrap();
+        assert_eq!(mlp.layers.len(), 3);
     }
 
     #[test]
     fn init_params_deterministic_and_nondegenerate() {
-        let (b, meta) = setup();
-        let p1 = b.init_params(Path::new("."), &meta).unwrap();
-        let p2 = b.init_params(Path::new("."), &meta).unwrap();
-        assert_eq!(p1, p2);
-        assert_eq!(p1.len(), meta.n_params);
-        let nonzero = p1.as_slice().iter().filter(|v| **v != 0.0).count();
-        assert!(nonzero > meta.n_params / 2);
-        let other = ReferenceBackend::new(1).init_params(Path::new("."), &meta).unwrap();
-        assert_ne!(p1, other);
+        for meta in [setup().1, mlp_meta()] {
+            let b = ReferenceBackend::new(0);
+            let p1 = b.init_params(Path::new("."), &meta).unwrap();
+            let p2 = b.init_params(Path::new("."), &meta).unwrap();
+            assert_eq!(p1, p2);
+            assert_eq!(p1.len(), meta.n_params);
+            let nonzero = p1.as_slice().iter().filter(|v| **v != 0.0).count();
+            assert!(nonzero > meta.n_params / 2);
+            let other = ReferenceBackend::new(1).init_params(Path::new("."), &meta).unwrap();
+            assert_ne!(p1, other);
+            // Biases land zeroed at every layer's b_off block.
+            let plan = LayerPlan::build(&meta).unwrap();
+            for pl in &plan.layers {
+                assert!(p1.as_slice()[pl.b_off..pl.b_off + pl.spec.d_out]
+                    .iter()
+                    .all(|v| *v == 0.0));
+            }
+        }
     }
 
     #[test]
     fn masked_examples_contribute_nothing() {
-        let (b, meta) = setup();
-        let params = b.init_params(Path::new("."), &meta).unwrap();
-        let acc = Tensor::zeros(meta.n_params);
-        let d = image_dim(&meta);
-        let (x, y) = batch_of(&meta, 4);
-        // Batch of 4 with the last two slots masked out (Alg. 2 padding)
-        // must equal the same two live examples run at batch 2.
-        let prep4 = prepare_accum(&b, &meta, "masked", 4);
-        let padded = b
-            .run_accum(
-                &prep4,
-                &meta,
-                &params,
-                &acc,
-                &AccumArgs { x: &x, y: &y, mask: &[1.0, 1.0, 0.0, 0.0] },
-            )
-            .unwrap();
-        let prep2 = prepare_accum(&b, &meta, "masked", 2);
-        let live = b
-            .run_accum(
-                &prep2,
-                &meta,
-                &params,
-                &acc,
-                &AccumArgs { x: &x[..2 * d], y: &y[..2], mask: &[1.0, 1.0] },
-            )
-            .unwrap();
-        assert_eq!(padded.acc, live.acc);
-        assert_eq!(padded.loss_sum, live.loss_sum);
-        // All-masked batch: accumulator unchanged, loss zero.
-        let none = b
-            .run_accum(&prep4, &meta, &params, &acc, &AccumArgs { x: &x, y: &y, mask: &[0.0; 4] })
-            .unwrap();
-        assert_eq!(none.acc, acc);
-        assert_eq!(none.loss_sum, 0.0);
-        // Norms are still reported for every slot (B of them).
-        assert_eq!(none.sq_norms.len(), 4);
+        for meta in [setup().1, mlp_meta()] {
+            let b = ReferenceBackend::new(0);
+            let params = b.init_params(Path::new("."), &meta).unwrap();
+            let acc = Tensor::zeros(meta.n_params);
+            let d = image_dim(&meta);
+            let (x, y) = batch_of(&meta, 4);
+            // Batch of 4 with the last two slots masked out (Alg. 2
+            // padding) must equal the same two live examples at batch 2.
+            let prep4 = prepare_accum(&b, &meta, "masked", 4);
+            let padded = b
+                .run_accum(
+                    &prep4,
+                    &meta,
+                    &params,
+                    &acc,
+                    &AccumArgs { x: &x, y: &y, mask: &[1.0, 1.0, 0.0, 0.0] },
+                )
+                .unwrap();
+            let prep2 = prepare_accum(&b, &meta, "masked", 2);
+            let live = b
+                .run_accum(
+                    &prep2,
+                    &meta,
+                    &params,
+                    &acc,
+                    &AccumArgs { x: &x[..2 * d], y: &y[..2], mask: &[1.0, 1.0] },
+                )
+                .unwrap();
+            assert_eq!(padded.acc, live.acc);
+            assert_eq!(padded.loss_sum, live.loss_sum);
+            // All-masked batch: accumulator unchanged, loss zero.
+            let none = b
+                .run_accum(
+                    &prep4,
+                    &meta,
+                    &params,
+                    &acc,
+                    &AccumArgs { x: &x, y: &y, mask: &[0.0; 4] },
+                )
+                .unwrap();
+            assert_eq!(none.acc, acc);
+            assert_eq!(none.loss_sum, 0.0);
+            // Norms are still reported for every slot (B of them).
+            assert_eq!(none.sq_norms.len(), 4);
+        }
     }
 
     #[test]
     fn clipped_accumulator_norm_bounded_by_batch_times_clip() {
-        let (b, meta) = setup();
-        let prep = prepare_accum(&b, &meta, "masked", 8);
-        let params = b.init_params(Path::new("."), &meta).unwrap();
-        let acc = Tensor::zeros(meta.n_params);
-        let (x, y) = batch_of(&meta, 8);
-        let out = b
-            .run_accum(&prep, &meta, &params, &acc, &AccumArgs { x: &x, y: &y, mask: &[1.0; 8] })
-            .unwrap();
-        let norm: f32 = out
-            .acc
-            .as_slice()
-            .iter()
-            .map(|v| v * v)
-            .sum::<f32>()
-            .sqrt();
-        // Triangle inequality: ||sum of clipped grads|| <= B * C.
-        assert!(norm <= 8.0 * meta.clip_norm as f32 + 1e-4, "norm {norm}");
-        assert!(out.loss_sum > 0.0);
-        assert!(out.sq_norms.iter().all(|s| *s >= 0.0 && s.is_finite()));
+        for meta in [setup().1, mlp_meta()] {
+            let b = ReferenceBackend::new(0);
+            let prep = prepare_accum(&b, &meta, "masked", 8);
+            let params = b.init_params(Path::new("."), &meta).unwrap();
+            let acc = Tensor::zeros(meta.n_params);
+            let (x, y) = batch_of(&meta, 8);
+            let out = b
+                .run_accum(
+                    &prep,
+                    &meta,
+                    &params,
+                    &acc,
+                    &AccumArgs { x: &x, y: &y, mask: &[1.0; 8] },
+                )
+                .unwrap();
+            let norm: f32 = out.acc.as_slice().iter().map(|v| v * v).sum::<f32>().sqrt();
+            // Triangle inequality: ||sum of clipped grads|| <= B * C.
+            assert!(norm <= 8.0 * meta.clip_norm as f32 + 1e-4, "norm {norm}");
+            assert!(out.loss_sum > 0.0);
+            assert!(out.sq_norms.iter().all(|s| *s >= 0.0 && s.is_finite()));
+        }
     }
 
     #[test]
@@ -845,20 +1188,80 @@ mod tests {
     }
 
     #[test]
-    fn ghost_variant_matches_per_example_path() {
-        // Single linear layer: the ghost-norm trick is exact, so ghost
-        // and masked produce identical accumulators.
-        let (b, meta) = setup();
+    fn ghost_and_materializing_per_example_paths_agree_bitwise() {
+        // The ghost (fused) and perex (materialized) branches execute
+        // different accumulate code but must land on identical bits —
+        // norms *and* accumulator — on every model. The generated-stack
+        // proptest lives in rust/tests/layered_models.rs; this is the
+        // fast in-module spot check.
+        for meta in [setup().1, mlp_meta()] {
+            let b = ReferenceBackend::new(0);
+            let params = b.init_params(Path::new("."), &meta).unwrap();
+            let acc = Tensor::zeros(meta.n_params);
+            let (x, y) = batch_of(&meta, 4);
+            let args = AccumArgs { x: &x, y: &y, mask: &[1.0, 0.0, 1.0, 1.0] };
+            let mut outs = Vec::new();
+            for variant in ["masked", "ghost", "perex", "mix", "bk"] {
+                let prep = prepare_accum(&b, &meta, variant, 4);
+                outs.push((variant, b.run_accum(&prep, &meta, &params, &acc, &args).unwrap()));
+            }
+            let (_, first) = &outs[0];
+            for (variant, o) in &outs[1..] {
+                assert_eq!(first.acc, o.acc, "{variant}: acc diverged");
+                assert_eq!(first.sq_norms, o.sq_norms, "{variant}: norms diverged");
+                assert_eq!(first.loss_sum.to_bits(), o.loss_sum.to_bits(), "{variant}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_layer_gradient_reaches_every_layer() {
+        // The backward pass must put gradient mass in every layer's
+        // weight and bias block (ReLU nets with Gaussian init and data
+        // cannot have an all-dead hidden layer at width 64/32).
+        let b = ReferenceBackend::new(0);
+        let meta = mlp_meta();
+        let plan = LayerPlan::build(&meta).unwrap();
+        let prep = prepare_accum(&b, &meta, "masked", 8);
         let params = b.init_params(Path::new("."), &meta).unwrap();
         let acc = Tensor::zeros(meta.n_params);
-        let (x, y) = batch_of(&meta, 4);
-        let args = AccumArgs { x: &x, y: &y, mask: &[1.0; 4] };
-        let masked = prepare_accum(&b, &meta, "masked", 4);
-        let ghost = prepare_accum(&b, &meta, "ghost", 4);
-        let a = b.run_accum(&masked, &meta, &params, &acc, &args).unwrap();
-        let g = b.run_accum(&ghost, &meta, &params, &acc, &args).unwrap();
-        assert_eq!(a.acc, g.acc);
-        assert_eq!(a.sq_norms, g.sq_norms);
+        let (x, y) = batch_of(&meta, 8);
+        let out = b
+            .run_accum(&prep, &meta, &params, &acc, &AccumArgs { x: &x, y: &y, mask: &[1.0; 8] })
+            .unwrap();
+        for (l, pl) in plan.layers.iter().enumerate() {
+            let w = &out.acc.as_slice()[pl.w_off..pl.w_off + pl.spec.d_in * pl.spec.d_out];
+            let bias = &out.acc.as_slice()[pl.b_off..pl.b_off + pl.spec.d_out];
+            assert!(w.iter().any(|v| *v != 0.0), "layer {l}: no weight gradient");
+            assert!(bias.iter().any(|v| *v != 0.0), "layer {l}: no bias gradient");
+        }
+    }
+
+    #[test]
+    fn accum_loss_equals_eval_loss_bitwise() {
+        // The accum head and the eval forward share their arithmetic:
+        // with an all-ones mask the masked loss sum must equal the eval
+        // loss sum bit for bit, on every model.
+        for meta in [setup().1, mlp_meta()] {
+            let b = ReferenceBackend::new(0);
+            let params = b.init_params(Path::new("."), &meta).unwrap();
+            let acc = Tensor::zeros(meta.n_params);
+            let (x, y) = batch_of(&meta, EVAL_BATCH);
+            let prep = prepare_accum(&b, &meta, "masked", EVAL_BATCH);
+            let out = b
+                .run_accum(
+                    &prep,
+                    &meta,
+                    &params,
+                    &acc,
+                    &AccumArgs { x: &x, y: &y, mask: &[1.0; EVAL_BATCH] },
+                )
+                .unwrap();
+            let eval_exe = meta.find_eval().unwrap().clone();
+            let eval_prep = b.prepare(Path::new("."), &meta, &eval_exe).unwrap();
+            let (loss, _) = b.run_eval(&eval_prep, &meta, &params, &x, &y).unwrap();
+            assert_eq!(out.loss_sum.to_bits(), loss.to_bits());
+        }
     }
 
     #[test]
@@ -868,7 +1271,7 @@ mod tests {
         let (x, y) = batch_of(&meta, 8);
         let mut acc_init = Tensor::zeros(meta.n_params);
         acc_init.as_mut_slice()[3] = 0.25;
-        for variant in ["masked", "nonprivate", "ghost"] {
+        for variant in ["masked", "nonprivate", "ghost", "perex", "mix"] {
             let prep = prepare_accum(&b, &meta, variant, 8);
             let mask = [1.0, 1.0, 0.0, 1.0, 1.0, 1.0, 0.0, 1.0];
             let args = AccumArgs { x: &x, y: &y, mask: &mask };
@@ -887,27 +1290,35 @@ mod tests {
     fn thread_count_never_changes_the_bits() {
         // The determinism contract: outputs are a pure function of the
         // inputs, not of the parallelism. Exercise a batch above the
-        // threading gate with every thread count 1..=4.
-        let meta = ReferenceBackend::manifest(0).models[REFERENCE_MODEL].clone();
-        let (x, y) = batch_of(&meta, 32);
-        let mut mask = vec![1.0f32; 32];
-        mask[7] = 0.0;
-        mask[31] = 0.0;
-        let mut reference_out: Option<AccumOut> = None;
-        for threads in 1..=4 {
-            let b = ReferenceBackend::with_threads(0, threads);
-            let prep = prepare_accum(&b, &meta, "masked", 32);
-            let params = b.init_params(Path::new("."), &meta).unwrap();
-            let acc = Tensor::zeros(meta.n_params);
-            let out = b
-                .run_accum(&prep, &meta, &params, &acc, &AccumArgs { x: &x, y: &y, mask: &mask })
-                .unwrap();
-            if let Some(want) = &reference_out {
-                assert_eq!(want.acc, out.acc, "threads={threads}: acc diverged");
-                assert_eq!(want.loss_sum.to_bits(), out.loss_sum.to_bits());
-                assert_eq!(want.sq_norms, out.sq_norms);
-            } else {
-                reference_out = Some(out);
+        // threading gate with every thread count 1..=4, on both the
+        // single-layer and the multi-layer model.
+        for meta in [setup().1, mlp_meta()] {
+            let (x, y) = batch_of(&meta, 32);
+            let mut mask = vec![1.0f32; 32];
+            mask[7] = 0.0;
+            mask[31] = 0.0;
+            let mut reference_out: Option<AccumOut> = None;
+            for threads in 1..=4 {
+                let b = ReferenceBackend::with_threads(0, threads);
+                let prep = prepare_accum(&b, &meta, "mix", 32);
+                let params = b.init_params(Path::new("."), &meta).unwrap();
+                let acc = Tensor::zeros(meta.n_params);
+                let out = b
+                    .run_accum(
+                        &prep,
+                        &meta,
+                        &params,
+                        &acc,
+                        &AccumArgs { x: &x, y: &y, mask: &mask },
+                    )
+                    .unwrap();
+                if let Some(want) = &reference_out {
+                    assert_eq!(want.acc, out.acc, "threads={threads}: acc diverged");
+                    assert_eq!(want.loss_sum.to_bits(), out.loss_sum.to_bits());
+                    assert_eq!(want.sq_norms, out.sq_norms);
+                } else {
+                    reference_out = Some(out);
+                }
             }
         }
     }
@@ -956,9 +1367,10 @@ mod tests {
     fn session_binds_buffers_to_the_in_place_kernels() {
         // The default session over the reference backend must follow the
         // exact legacy call sequence bitwise: two accums, an apply, a
-        // zero_acc, another accum.
-        let (b, meta) = setup();
-        let prep = prepare_accum(&b, &meta, "masked", 8);
+        // zero_acc, another accum — on the multi-layer model.
+        let b = ReferenceBackend::new(0);
+        let meta = mlp_meta();
+        let prep = prepare_accum(&b, &meta, "ghost", 8);
         let apply_meta = meta.find_apply().unwrap().clone();
         let apply_prep = b.prepare(Path::new("."), &meta, &apply_meta).unwrap();
         let params = b.init_params(Path::new("."), &meta).unwrap();
@@ -989,17 +1401,19 @@ mod tests {
 
     #[test]
     fn eval_counts_and_losses_are_sane() {
-        let (b, meta) = setup();
-        let eval_meta = meta.find_eval().unwrap().clone();
-        let prep = b.prepare(Path::new("."), &meta, &eval_meta).unwrap();
-        let params = b.init_params(Path::new("."), &meta).unwrap();
-        let (x, y) = batch_of(&meta, 32);
-        let (loss, ncorrect) = b.run_eval(&prep, &meta, &params, &x, &y).unwrap();
-        assert!(loss.is_finite() && loss > 0.0);
-        assert!((0.0..=32.0).contains(&ncorrect));
-        // Wrong batch size is a clean error.
-        let (x2, y2) = batch_of(&meta, 8);
-        assert!(b.run_eval(&prep, &meta, &params, &x2, &y2).is_err());
+        for meta in [setup().1, mlp_meta()] {
+            let b = ReferenceBackend::new(0);
+            let eval_meta = meta.find_eval().unwrap().clone();
+            let prep = b.prepare(Path::new("."), &meta, &eval_meta).unwrap();
+            let params = b.init_params(Path::new("."), &meta).unwrap();
+            let (x, y) = batch_of(&meta, 32);
+            let (loss, ncorrect) = b.run_eval(&prep, &meta, &params, &x, &y).unwrap();
+            assert!(loss.is_finite() && loss > 0.0);
+            assert!((0.0..=32.0).contains(&ncorrect));
+            // Wrong batch size is a clean error.
+            let (x2, y2) = batch_of(&meta, 8);
+            assert!(b.run_eval(&prep, &meta, &params, &x2, &y2).is_err());
+        }
     }
 
     #[test]

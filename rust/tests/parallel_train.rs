@@ -3,9 +3,11 @@
 //! worker count must be **bitwise-identical** (parameters, losses,
 //! epsilon) to every other worker count and to the plain
 //! single-session `Trainer::run`, across batching modes, masks
-//! (including empty Poisson batches), and seeds — and a checkpoint
-//! taken at 4 workers must resume at 1 worker (and vice versa) exactly
-//! as if the worker count had never changed.
+//! (including empty Poisson batches), seeds, **and models** (the
+//! layered-IR `mlp-small` as well as the seed single-layer model —
+//! the PR-4 contracts must survive the multi-layer refactor) — and a
+//! checkpoint taken at 4 workers must resume at 1 worker (and vice
+//! versa) exactly as if the worker count had never changed.
 
 use dp_shortcuts::cluster::parallel::{plan_groups, reduce_fixed_tree, shard_ranges};
 use dp_shortcuts::coordinator::batcher::BatchingMode;
@@ -18,9 +20,21 @@ fn bits(v: &[f32]) -> Vec<u32> {
     v.iter().map(|f| f.to_bits()).collect()
 }
 
-fn config(variant: &str, mode: BatchingMode, seed: u64, workers: usize) -> TrainConfig {
+/// `model` is one of the CPU ladder's executable models: the PR-4
+/// contracts (worker-count invariance, padding neutrality, checkpoint
+/// portability) must hold for multi-layer models too, so the proptests
+/// sample over both the seed single-layer model and `mlp-small`.
+const MODELS: &[&str] = &[REFERENCE_MODEL, "mlp-small"];
+
+fn config(
+    model: &str,
+    variant: &str,
+    mode: BatchingMode,
+    seed: u64,
+    workers: usize,
+) -> TrainConfig {
     TrainConfig {
-        model: REFERENCE_MODEL.into(),
+        model: model.into(),
         variant: variant.into(),
         mode,
         dataset_size: 48,
@@ -48,15 +62,17 @@ proptest! {
         seed in 0u64..1_000,
         masked in proptest::bool::ANY,
         rate_idx in 0usize..3,
+        model_idx in 0usize..2,
     ) {
         let (variant, mode) = if masked {
             ("masked", BatchingMode::Masked)
         } else {
             ("naive", BatchingMode::Variable)
         };
+        let model = MODELS[model_idx];
         let mut reference: Option<dp_shortcuts::TrainReport> = None;
         for workers in [1usize, 2, 4] {
-            let mut cfg = config(variant, mode, seed, workers);
+            let mut cfg = config(model, variant, mode, seed, workers);
             cfg.sampling_rate = [0.0, 0.2, 0.5][rate_idx];
             let rt = Runtime::reference();
             let rep = Trainer::new(&rt, cfg).unwrap().run().unwrap();
@@ -95,22 +111,24 @@ proptest! {
         seed in 0u64..1_000,
         masked in proptest::bool::ANY,
         split_at in 1u64..4,
+        model_idx in 0usize..2,
     ) {
         let (variant, mode) = if masked {
             ("masked", BatchingMode::Masked)
         } else {
             ("naive", BatchingMode::Variable)
         };
+        let model = MODELS[model_idx];
         let uninterrupted = {
             let rt = Runtime::reference();
-            let cfg = config(variant, mode, seed, 1);
+            let cfg = config(model, variant, mode, seed, 1);
             Trainer::new(&rt, cfg).unwrap().run().unwrap()
         };
 
         for (train_workers, resume_workers) in [(4usize, 1usize), (1, 4)] {
             let ckpt_json = {
                 let rt = Runtime::reference();
-                let cfg = config(variant, mode, seed, train_workers);
+                let cfg = config(model, variant, mode, seed, train_workers);
                 let mut s = TrainSession::new(&rt, cfg).unwrap();
                 for _ in 0..split_at {
                     s.step().unwrap();
@@ -118,7 +136,7 @@ proptest! {
                 s.checkpoint().unwrap().to_json().unwrap()
             };
             let rt = Runtime::reference();
-            let cfg = config(variant, mode, seed, resume_workers);
+            let cfg = config(model, variant, mode, seed, resume_workers);
             let ckpt = TrainCheckpoint::from_json(&ckpt_json).unwrap();
             let mut resumed = TrainSession::resume(&rt, cfg, ckpt).unwrap();
             while !resumed.done() {
@@ -146,22 +164,24 @@ proptest! {
 /// neutrality survives at every worker count.
 #[test]
 fn padding_neutrality_holds_at_every_worker_count() {
-    for workers in [1usize, 2, 4] {
-        let masked = {
-            let rt = Runtime::reference();
-            let cfg = config("masked", BatchingMode::Masked, 7, workers);
-            Trainer::new(&rt, cfg).unwrap().run().unwrap()
-        };
-        let naive = {
-            let rt = Runtime::reference();
-            let cfg = config("naive", BatchingMode::Variable, 7, workers);
-            Trainer::new(&rt, cfg).unwrap().run().unwrap()
-        };
-        assert_eq!(
-            bits(&masked.final_params),
-            bits(&naive.final_params),
-            "workers={workers}: Algorithm-2 padding changed the update"
-        );
+    for model in MODELS {
+        for workers in [1usize, 2, 4] {
+            let masked = {
+                let rt = Runtime::reference();
+                let cfg = config(model, "masked", BatchingMode::Masked, 7, workers);
+                Trainer::new(&rt, cfg).unwrap().run().unwrap()
+            };
+            let naive = {
+                let rt = Runtime::reference();
+                let cfg = config(model, "naive", BatchingMode::Variable, 7, workers);
+                Trainer::new(&rt, cfg).unwrap().run().unwrap()
+            };
+            assert_eq!(
+                bits(&masked.final_params),
+                bits(&naive.final_params),
+                "{model} workers={workers}: Algorithm-2 padding changed the update"
+            );
+        }
     }
 }
 
@@ -172,17 +192,15 @@ fn padding_neutrality_holds_at_every_worker_count() {
 fn surplus_and_ragged_worker_counts_are_exact() {
     let base = {
         let rt = Runtime::reference();
-        Trainer::new(&rt, config("masked", BatchingMode::Masked, 3, 1))
+        Trainer::new(&rt, config("mlp-small", "masked", BatchingMode::Masked, 3, 1))
             .unwrap()
             .run()
             .unwrap()
     };
     for workers in [3usize, 7, 32] {
         let rt = Runtime::reference();
-        let rep = Trainer::new(&rt, config("masked", BatchingMode::Masked, 3, workers))
-            .unwrap()
-            .run()
-            .unwrap();
+        let cfg = config("mlp-small", "masked", BatchingMode::Masked, 3, workers);
+        let rep = Trainer::new(&rt, cfg).unwrap().run().unwrap();
         assert_eq!(bits(&rep.final_params), bits(&base.final_params), "workers={workers}");
     }
 }
@@ -194,7 +212,7 @@ fn surplus_and_ragged_worker_counts_are_exact() {
 fn zero_physical_batch_is_a_construction_error() {
     for (variant, mode) in [("masked", BatchingMode::Masked), ("naive", BatchingMode::Variable)] {
         let rt = Runtime::reference();
-        let mut cfg = config(variant, mode, 0, 1);
+        let mut cfg = config(REFERENCE_MODEL, variant, mode, 0, 1);
         cfg.physical_batch = 0;
         let err = TrainSession::new(&rt, cfg).err().expect("must not construct");
         assert!(err.to_string().contains("physical batch"), "{err:#}");
@@ -206,11 +224,12 @@ fn zero_physical_batch_is_a_construction_error() {
 #[test]
 fn zero_workers_means_one() {
     let rt = Runtime::reference();
-    let zero = Trainer::new(&rt, config("masked", BatchingMode::Masked, 5, 0))
+    let zero = Trainer::new(&rt, config(REFERENCE_MODEL, "masked", BatchingMode::Masked, 5, 0))
         .unwrap()
         .run()
         .unwrap();
-    let one = Trainer::new(&Runtime::reference(), config("masked", BatchingMode::Masked, 5, 1))
+    let one_cfg = config(REFERENCE_MODEL, "masked", BatchingMode::Masked, 5, 1);
+    let one = Trainer::new(&Runtime::reference(), one_cfg)
         .unwrap()
         .run()
         .unwrap();
@@ -223,14 +242,16 @@ fn zero_workers_means_one() {
 #[test]
 fn warm_start_broadcasts_to_all_ranks() {
     let rt = Runtime::reference();
-    let mut donor = TrainSession::new(&rt, config("masked", BatchingMode::Masked, 9, 1)).unwrap();
+    let mut donor =
+        TrainSession::new(&rt, config("mlp-small", "masked", BatchingMode::Masked, 9, 1)).unwrap();
     donor.step().unwrap();
     let warm = donor.read_params().unwrap();
 
     let run_from = |workers: usize, params: Tensor| {
         let rt = Runtime::reference();
-        let mut s = TrainSession::new(&rt, config("masked", BatchingMode::Masked, 9, workers))
-            .unwrap();
+        let mut s =
+            TrainSession::new(&rt, config("mlp-small", "masked", BatchingMode::Masked, 9, workers))
+                .unwrap();
         s.write_params(params).unwrap();
         while !s.done() {
             s.step().unwrap();

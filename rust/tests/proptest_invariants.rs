@@ -95,26 +95,34 @@ proptest! {
     }
 }
 
-// Donation + determinism invariants of the execution ABI. Determinism
-// here is a DP-correctness property, not hygiene: the accumulator and
-// the seeded noise feed the privacy accounting, so the donated
-// (`run_*_into`) hot path and the copying path must agree *bitwise*,
+// Donation + determinism invariants of the execution ABI, driven
+// through the **session API** (`Backend::open_session`) — per the PR-4
+// deprecation plan, first-party tests no longer call the legacy
+// donating shims (`run_accum_into`/`run_apply_into`); the only
+// remaining legacy call sites are `rust/tests/session_api.rs`, whose
+// explicit job is the session-vs-legacy equivalence gate. The copying
+// forms exercised here are the trait's required primitives, giving an
+// independent second path to compare against. Determinism is a
+// DP-correctness property, not hygiene: the accumulator and the seeded
+// noise feed the privacy accounting, so the session hot path (the
+// native in-place kernels) and the copying path must agree *bitwise*,
 // and threading must never perturb a single bit.
 proptest! {
     #![proptest_config(ProptestConfig::with_cases(48))]
 
-    /// The donated accum path is bitwise-identical to the copying path
-    /// across every clipping variant, batch size, mask pattern
+    /// The session accum path is bitwise-identical to the copying
+    /// primitive across every clipping variant (the executed
+    /// per-example/ghost/mix graphs included), batch size, mask pattern
     /// (including all-masked), data, and accumulator state.
     #[test]
-    fn donated_accum_bitwise_matches_copying(
-        variant_idx in 0usize..4,
+    fn session_accum_bitwise_matches_copying(
+        variant_idx in 0usize..6,
         batch_idx in 0usize..5,
         mask_bits in prop_oneof![Just(0u32), Just(u32::MAX), proptest::num::u32::ANY],
         data_seed in proptest::num::u64::ANY,
         acc_seed in proptest::num::u64::ANY,
     ) {
-        let variant = ["nonprivate", "masked", "ghost", "bk"][variant_idx];
+        let variant = ["nonprivate", "masked", "ghost", "bk", "perex", "mix"][variant_idx];
         let batch = [1usize, 2, 4, 8, 16][batch_idx];
         let backend = ReferenceBackend::new(0);
         let meta = reference_meta();
@@ -131,24 +139,30 @@ proptest! {
         let copied = backend
             .run_accum(&prep, &meta, &params, &acc0, &args)
             .unwrap();
-        let mut donated = acc0.clone();
-        let stats = backend
-            .run_accum_into(&prep, &meta, &params, &mut donated, &args)
+        // Session side: bind the params, install the mid-logical-batch
+        // accumulator through the all-reduce seam, run the bound-buffer
+        // accum.
+        let mut sess = backend
+            .open_session(Path::new("."), &meta, params.clone())
             .unwrap();
+        sess.write_acc(acc0.clone()).unwrap();
+        let stats = sess.accum(&prep, &args).unwrap();
+        let session_acc = sess.read_acc().unwrap();
 
-        prop_assert_eq!(bits(copied.acc.as_slice()), bits(donated.as_slice()));
+        prop_assert_eq!(bits(copied.acc.as_slice()), bits(session_acc.as_slice()));
         prop_assert_eq!(copied.loss_sum.to_bits(), stats.loss_sum.to_bits());
         prop_assert_eq!(bits(&copied.sq_norms), bits(&stats.sq_norms));
         // All-masked batches must leave the accumulator untouched.
         if mask.iter().all(|m| *m == 0.0) {
-            prop_assert_eq!(bits(donated.as_slice()), bits(acc0.as_slice()));
+            prop_assert_eq!(bits(session_acc.as_slice()), bits(acc0.as_slice()));
         }
     }
 
-    /// The donated apply path is bitwise-identical to the copying path
-    /// across noise seeds, with and without the Gaussian path.
+    /// The session apply path is bitwise-identical to the copying
+    /// primitive across noise seeds, with and without the Gaussian
+    /// path.
     #[test]
-    fn donated_apply_bitwise_matches_copying(
+    fn session_apply_bitwise_matches_copying(
         noise_seed in proptest::num::u64::ANY,
         acc_seed in proptest::num::u64::ANY,
         noise_on in proptest::bool::ANY,
@@ -167,16 +181,21 @@ proptest! {
         let copied = backend
             .run_apply(&prep, &meta, &params, &acc, &args)
             .unwrap();
-        let mut donated = params.clone();
-        backend
-            .run_apply_into(&prep, &meta, &mut donated, &acc, &args)
+        let mut sess = backend
+            .open_session(Path::new("."), &meta, params.clone())
             .unwrap();
-        prop_assert_eq!(bits(copied.as_slice()), bits(donated.as_slice()));
+        sess.write_acc(acc.clone()).unwrap();
+        sess.apply(&prep, &args).unwrap();
+        prop_assert_eq!(
+            bits(copied.as_slice()),
+            bits(sess.read_params().unwrap().as_slice())
+        );
     }
 
-    /// Threaded accum is bitwise-reproducible: the worker-thread count
-    /// is a wall-clock knob only. Batch 32 sits above the threading
-    /// gate, so 1-vs-N genuinely compares sequential to parallel.
+    /// Threaded session accum is bitwise-reproducible: the
+    /// worker-thread count is a wall-clock knob only. Batch 32 sits
+    /// above the threading gate, so 1-vs-N genuinely compares
+    /// sequential to parallel.
     #[test]
     fn accum_bits_independent_of_thread_count(
         threads in 2usize..5,
@@ -194,12 +213,12 @@ proptest! {
             let exe = meta.find_accum("masked", batch, "f32").unwrap().clone();
             let prep = backend.prepare(Path::new("."), &meta, &exe).unwrap();
             let params = backend.init_params(Path::new("."), &meta).unwrap();
-            let mut acc = Tensor::zeros(meta.n_params);
             let args = AccumArgs { x: &x, y: &y, mask: &mask };
-            let stats = backend
-                .run_accum_into(&prep, &meta, &params, &mut acc, &args)
+            let mut sess = backend
+                .open_session(Path::new("."), &meta, params)
                 .unwrap();
-            (acc, stats)
+            let stats = sess.accum(&prep, &args).unwrap();
+            (sess.read_acc().unwrap(), stats)
         };
         let (acc_seq, stats_seq) = run(1);
         let (acc_par, stats_par) = run(threads);
