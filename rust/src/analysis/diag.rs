@@ -1,0 +1,374 @@
+//! Diagnostic types + the rule catalog for the static plan audit.
+//!
+//! Every finding the auditor can emit is declared here, with a stable
+//! rule ID and a fixed severity, so `dpshort audit --json` output is
+//! schema-checkable ([`AuditReport::validate`]) and DESIGN.md §10 can
+//! document exactly what each rule proves. Severities:
+//!
+//! * **Deny** — the plan violates the DP or determinism contract;
+//!   `TrainSession::new` refuses to run it (opt out: `--allow-unsound`,
+//!   which stamps the report and every checkpoint `unaudited`).
+//! * **Warn** — the plan is executable but carries no (or a weakened)
+//!   guarantee; surfaced, never blocking.
+//! * **Info** — advisory only.
+
+use anyhow::{anyhow, Result};
+use serde::Serialize;
+use std::fmt;
+
+/// Version of the `dpshort audit --json` diagnostic schema.
+pub const AUDIT_SCHEMA_VERSION: u32 = 1;
+
+/// Stable rule identifiers. The catalog entry for each is in [`RULES`].
+pub mod rule {
+    /// Per-example gradient reaches a shared accumulator unclipped.
+    pub const CLIP_MISSING: &str = "clip.missing";
+    /// Clip factor derives from a strict subset of the layer norms.
+    pub const CLIP_PER_LAYER: &str = "clip.per-layer";
+    /// The nonprivate baseline aggregates unclipped gradients by design.
+    pub const CLIP_NONPRIVATE: &str = "clip.nonprivate";
+    /// No Gaussian noise site although sigma > 0 on a private variant.
+    pub const NOISE_MISSING: &str = "noise.missing";
+    /// More than one Gaussian noise site in the plan.
+    pub const NOISE_DOUBLE: &str = "noise.double";
+    /// Noise injected before the gradient aggregation completes.
+    pub const NOISE_PRE_AGGREGATION: &str = "noise.pre-aggregation";
+    /// Noise stddev differs from the calibrated `sigma * C`.
+    pub const NOISE_SCALE: &str = "noise.scale";
+    /// Private variant with sigma == 0: no guarantee (epsilon infinite).
+    pub const NOISE_ZERO_SIGMA: &str = "noise.zero-sigma";
+    /// Two RNG stream uses share a `(seed, stream, label)` tuple.
+    pub const STREAM_COLLISION: &str = "stream.collision";
+    /// A stream's statically-predicted draw exceeds its keystream capacity.
+    pub const STREAM_EXHAUSTION: &str = "stream.exhaustion";
+    /// Draw exceeds the pre-widening 32-bit-counter capacity (2^38 bytes).
+    pub const STREAM_LEGACY_EXHAUSTION: &str = "stream.legacy-exhaustion";
+    /// Sampler provides no Poisson rate but the accountant assumes one.
+    pub const SHORTCUT_EPSILON: &str = "accountant.shortcut-epsilon";
+    /// Plan subsamples per rank instead of one global draw per step.
+    pub const SAMPLER_PER_RANK: &str = "sampler.per-rank";
+    /// Reduction is not the schedule-invariant fixed binary tree.
+    pub const REDUCE_SCHEDULE: &str = "reduce.schedule";
+    /// A no-materialization variant materializes per-example grads.
+    pub const MATERIALIZED_PER_EXAMPLE: &str = "memory.materialized-per-example";
+    /// An executable declares a dtype the memory model does not know.
+    pub const DTYPE_UNKNOWN: &str = "dtype.unknown";
+}
+
+/// How severe a diagnostic is. Ordered most-severe-first so sorting a
+/// report puts Deny findings at the top.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Serialize)]
+#[serde(rename_all = "lowercase")]
+pub enum Severity {
+    /// Violates the DP/determinism contract; refuses to run.
+    Deny,
+    /// Executable but guarantee-free or weakened; surfaced only.
+    Warn,
+    /// Advisory.
+    Info,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Deny => write!(f, "deny"),
+            Severity::Warn => write!(f, "warn"),
+            Severity::Info => write!(f, "info"),
+        }
+    }
+}
+
+/// One catalog entry: the fixed (id, severity) binding plus a summary
+/// of what the rule proves (DESIGN.md §10 is generated from this list's
+/// content, kept in sync by hand).
+#[derive(Debug, Clone, Copy)]
+pub struct RuleInfo {
+    /// Stable identifier (see [`rule`]).
+    pub id: &'static str,
+    /// The severity every diagnostic with this id carries.
+    pub severity: Severity,
+    /// One-line summary of the property checked.
+    pub summary: &'static str,
+}
+
+/// The full rule catalog.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: rule::CLIP_MISSING,
+        severity: Severity::Deny,
+        summary: "per-example-tainted values cross into a shared accumulator without any clip",
+    },
+    RuleInfo {
+        id: rule::CLIP_PER_LAYER,
+        severity: Severity::Deny,
+        summary: "clip factor covers a strict subset of layers (per-layer clipping, wrong sensitivity)",
+    },
+    RuleInfo {
+        id: rule::CLIP_NONPRIVATE,
+        severity: Severity::Warn,
+        summary: "nonprivate baseline: unclipped aggregation by design, no DP guarantee",
+    },
+    RuleInfo {
+        id: rule::NOISE_MISSING,
+        severity: Severity::Deny,
+        summary: "no Gaussian noise site although the run claims sigma > 0",
+    },
+    RuleInfo {
+        id: rule::NOISE_DOUBLE,
+        severity: Severity::Deny,
+        summary: "noise added more than once (miscalibrated total variance)",
+    },
+    RuleInfo {
+        id: rule::NOISE_PRE_AGGREGATION,
+        severity: Severity::Deny,
+        summary: "noise injected before aggregation completes (per-rank/per-group noise)",
+    },
+    RuleInfo {
+        id: rule::NOISE_SCALE,
+        severity: Severity::Deny,
+        summary: "noise stddev differs from the calibrated sigma * C",
+    },
+    RuleInfo {
+        id: rule::NOISE_ZERO_SIGMA,
+        severity: Severity::Warn,
+        summary: "private variant with sigma = 0: epsilon is infinite",
+    },
+    RuleInfo {
+        id: rule::STREAM_COLLISION,
+        severity: Severity::Deny,
+        summary: "two RNG uses share one (seed, stream, label) ChaCha tuple",
+    },
+    RuleInfo {
+        id: rule::STREAM_EXHAUSTION,
+        severity: Severity::Deny,
+        summary: "a single stream's predicted draw exceeds its keystream capacity",
+    },
+    RuleInfo {
+        id: rule::STREAM_LEGACY_EXHAUSTION,
+        severity: Severity::Warn,
+        summary: "draw exceeds the old 32-bit-counter capacity (silently corrupted before the widening)",
+    },
+    RuleInfo {
+        id: rule::SHORTCUT_EPSILON,
+        severity: Severity::Deny,
+        summary: "non-Poisson sampler under Poisson (RDP/PLD) accounting — the shortcut epsilon",
+    },
+    RuleInfo {
+        id: rule::SAMPLER_PER_RANK,
+        severity: Severity::Deny,
+        summary: "per-rank subsampling instead of one global draw per step",
+    },
+    RuleInfo {
+        id: rule::REDUCE_SCHEDULE,
+        severity: Severity::Deny,
+        summary: "reduction is not the fixed tree whose shape depends only on the group count",
+    },
+    RuleInfo {
+        id: rule::MATERIALIZED_PER_EXAMPLE,
+        severity: Severity::Deny,
+        summary: "a ghost/BK-contract variant materializes the [B, P] per-example gradient",
+    },
+    RuleInfo {
+        id: rule::DTYPE_UNKNOWN,
+        severity: Severity::Warn,
+        summary: "unknown executable dtype; byte accounting would silently assume 4 bytes",
+    },
+];
+
+/// Look a rule up in the catalog.
+pub fn catalog(id: &str) -> Option<&'static RuleInfo> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// One audit finding.
+#[derive(Debug, Clone, Serialize)]
+pub struct Diagnostic {
+    /// Catalog rule id (see [`rule`]).
+    pub rule: &'static str,
+    /// Severity (always the catalog severity for `rule`).
+    pub severity: Severity,
+    /// Plan location, e.g. `layer[2].accumulate` or `plan.sampler`.
+    pub location: String,
+    /// Human explanation of the finding.
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// Build a diagnostic; severity is looked up from the catalog.
+    pub fn new(
+        rule_id: &'static str,
+        location: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Self {
+        let severity = catalog(rule_id).map(|r| r.severity).unwrap_or(Severity::Deny);
+        Self { rule: rule_id, severity, location: location.into(), message: message.into() }
+    }
+}
+
+/// The structured result of auditing one lowered run plan.
+#[derive(Debug, Clone, Serialize)]
+pub struct AuditReport {
+    /// [`AUDIT_SCHEMA_VERSION`] at emission time.
+    pub schema_version: u32,
+    /// Model the plan trains.
+    pub model: String,
+    /// Accum variant the plan executes.
+    pub variant: String,
+    /// Sampler name (`poisson` | `shuffle`).
+    pub sampler: String,
+    /// Accountant name (`rdp` | `pld`).
+    pub accountant: String,
+    /// Data-parallel worker count of the plan.
+    pub workers: usize,
+    /// Optimizer steps the plan takes.
+    pub steps: u64,
+    /// Resolved noise multiplier.
+    pub sigma: f64,
+    /// Findings, most severe first.
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl AuditReport {
+    /// Sort diagnostics most-severe-first, then by rule and location
+    /// (stable, deterministic output).
+    pub fn sort(&mut self) {
+        self.diagnostics.sort_by(|a, b| {
+            (a.severity, a.rule, &a.location).cmp(&(b.severity, b.rule, &b.location))
+        });
+    }
+
+    /// Append diagnostics (e.g. from an HLO-text pass) and re-sort.
+    pub fn push_all(&mut self, diags: Vec<Diagnostic>) {
+        self.diagnostics.extend(diags);
+        self.sort();
+    }
+
+    /// No Deny-severity findings?
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.iter().all(|d| d.severity != Severity::Deny)
+    }
+
+    /// Distinct rule ids of the Deny findings, in report order.
+    pub fn deny_rules(&self) -> Vec<&'static str> {
+        let mut out: Vec<&'static str> = self
+            .diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Deny)
+            .map(|d| d.rule)
+            .collect();
+        out.dedup();
+        out
+    }
+
+    /// (deny, warn, info) counts.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for d in &self.diagnostics {
+            match d.severity {
+                Severity::Deny => c.0 += 1,
+                Severity::Warn => c.1 += 1,
+                Severity::Info => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// Serialize for `dpshort audit --json`.
+    pub fn to_json(&self) -> serde_json::Result<String> {
+        serde_json::to_string_pretty(self)
+    }
+
+    /// Schema check: version matches, every rule is cataloged, and each
+    /// diagnostic carries its catalog severity. Run before emitting
+    /// `--json` output and by the fixture tests.
+    pub fn validate(&self) -> Result<()> {
+        if self.schema_version != AUDIT_SCHEMA_VERSION {
+            return Err(anyhow!(
+                "audit report schema v{} (expected v{AUDIT_SCHEMA_VERSION})",
+                self.schema_version
+            ));
+        }
+        for d in &self.diagnostics {
+            let info = catalog(d.rule)
+                .ok_or_else(|| anyhow!("diagnostic names unknown rule {:?}", d.rule))?;
+            if info.severity != d.severity {
+                return Err(anyhow!(
+                    "rule {:?} carries severity {} (catalog says {})",
+                    d.rule,
+                    d.severity,
+                    info.severity
+                ));
+            }
+            if d.location.is_empty() || d.message.is_empty() {
+                return Err(anyhow!("rule {:?}: empty location or message", d.rule));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(diags: Vec<Diagnostic>) -> AuditReport {
+        AuditReport {
+            schema_version: AUDIT_SCHEMA_VERSION,
+            model: "m".into(),
+            variant: "masked".into(),
+            sampler: "poisson".into(),
+            accountant: "rdp".into(),
+            workers: 1,
+            steps: 4,
+            sigma: 1.0,
+            diagnostics: diags,
+        }
+    }
+
+    #[test]
+    fn catalog_ids_are_unique_and_resolvable() {
+        for (i, r) in RULES.iter().enumerate() {
+            assert!(RULES[i + 1..].iter().all(|o| o.id != r.id), "duplicate {}", r.id);
+            assert_eq!(catalog(r.id).unwrap().severity, r.severity);
+        }
+        assert!(catalog("no.such.rule").is_none());
+    }
+
+    #[test]
+    fn sort_puts_deny_first() {
+        let mut r = report(vec![
+            Diagnostic::new(rule::DTYPE_UNKNOWN, "x", "warn thing"),
+            Diagnostic::new(rule::CLIP_MISSING, "y", "deny thing"),
+        ]);
+        r.sort();
+        assert_eq!(r.diagnostics[0].rule, rule::CLIP_MISSING);
+        assert_eq!(r.counts(), (1, 1, 0));
+        assert!(!r.is_clean());
+        assert_eq!(r.deny_rules(), vec![rule::CLIP_MISSING]);
+    }
+
+    #[test]
+    fn validate_rejects_unknown_rules_and_wrong_severity() {
+        let ok = report(vec![Diagnostic::new(rule::NOISE_SCALE, "noise[0]", "off by 2x")]);
+        ok.validate().unwrap();
+        let mut bad = ok.clone();
+        bad.diagnostics[0].rule = "made.up";
+        assert!(bad.validate().is_err());
+        let mut wrong = ok.clone();
+        wrong.diagnostics[0].severity = Severity::Info;
+        assert!(wrong.validate().is_err());
+        let mut stale = ok;
+        stale.schema_version = 99;
+        assert!(stale.validate().is_err());
+    }
+
+    #[test]
+    fn json_is_parseable_and_lowercase_severities() {
+        let r = report(vec![Diagnostic::new(rule::SHORTCUT_EPSILON, "plan.sampler", "shuffle")]);
+        let text = r.to_json().unwrap();
+        let v: serde_json::Value = serde_json::from_str(&text).unwrap();
+        assert_eq!(v["schema_version"], AUDIT_SCHEMA_VERSION);
+        assert_eq!(v["diagnostics"][0]["severity"], "deny");
+        assert_eq!(v["diagnostics"][0]["rule"], rule::SHORTCUT_EPSILON);
+    }
+}

@@ -1,0 +1,62 @@
+//! Static privacy & determinism auditing (`dpshort audit`,
+//! `dpshort lint --source`) — the "verify before you run" layer.
+//!
+//! The paper's thesis is that DP-SGD implementations silently take
+//! shortcuts (wrong subsampling, wrong clipping granularity), and the
+//! follow-ups arXiv 2403.17673 / 2411.04205 show those shortcuts cost
+//! real epsilon. This module makes the contract *statically checkable*
+//! before a step runs:
+//!
+//! 1. [`plan::RunPlan::lower`] resolves (manifest, config, sigma) into
+//!    the same lowered description `TrainSession::new` executes;
+//! 2. [`taint::Graph::lower`] builds the step dataflow and
+//!    [`taint::propagate`] runs the per-example taint fixpoint;
+//! 3. [`rules::audit_plan`] judges the plan against the rule catalog
+//!    in [`diag`] (clipping coverage, noise placement/scale, RNG
+//!    stream injectivity + exhaustion, sampler↔accountant match,
+//!    reduction schedule-invariance, materialization, dtypes);
+//! 4. [`source_lint::lint_source`] is the companion source-level pass.
+//!
+//! `TrainSession::new` runs the plan audit and refuses Deny
+//! diagnostics unless `--allow-unsound` is set (which stamps the
+//! TrainReport and every checkpoint `unaudited`). DESIGN.md §10
+//! documents what each rule proves and does not prove.
+
+pub mod diag;
+pub mod plan;
+pub mod rules;
+pub mod source_lint;
+pub mod streams;
+pub mod taint;
+
+pub use diag::{
+    catalog, rule, AuditReport, Diagnostic, RuleInfo, Severity, AUDIT_SCHEMA_VERSION, RULES,
+};
+pub use plan::{
+    test_plan, variant_claims_no_materialization, ClipKind, ClipSpec, NoiseSite, NoiseStage,
+    ReductionSpec, RunPlan, SamplerInfo,
+};
+pub use rules::{audit_hlo, audit_plan, audit_plan_graph};
+pub use source_lint::{
+    lint_source, parse_allowlist, AllowEntry, LintFinding, LintReport, LintRule, LINT_RULES,
+};
+pub use streams::{enumerate as enumerate_streams, find_collisions, StreamUse};
+pub use taint::{propagate, Graph, NodeKind, Taint, TaintAnalysis};
+
+use crate::coordinator::config::TrainConfig;
+use crate::runtime::ModelMeta;
+use anyhow::Result;
+
+/// Lower a configured run into its [`RunPlan`] and audit it — the one
+/// call `TrainSession::new` and `dpshort audit` share. `manifest_seed`
+/// keys the parameter-init stream; `sigma` is the resolved noise
+/// multiplier (see `resolve_sigma`).
+pub fn audit_run(
+    meta: &ModelMeta,
+    manifest_seed: u64,
+    config: &TrainConfig,
+    sigma: f64,
+) -> Result<AuditReport> {
+    let plan = RunPlan::lower(meta, manifest_seed, config, sigma)?;
+    Ok(audit_plan(&plan))
+}

@@ -1,0 +1,310 @@
+//! [`RunPlan`]: the audited, fully-lowered description of one training
+//! run — everything the static rules need, decoupled from the live
+//! runtime objects so adversarial fixtures can mutate it freely.
+//!
+//! [`RunPlan::lower`] is the canonical constructor: it resolves a
+//! `ModelMeta` + `TrainConfig` the same way `TrainSession::new` does
+//! (layer plan, executed clipping branches, resolved sigma, sampler,
+//! reduction topology, RNG stream enumeration). Every field is public
+//! on purpose: the fixture suite builds "what a buggy implementation
+//! *would* have lowered" by mutating a clean plan, and the rules must
+//! flag exactly those mutations.
+
+use crate::analysis::streams::{self, StreamUse};
+use crate::clipping::LayerChoice;
+use crate::coordinator::config::TrainConfig;
+use crate::coordinator::sampler::SamplerChoice;
+use crate::privacy::AccountantKind;
+use crate::runtime::{executed_choices, LayerPlan, ModelMeta};
+use anyhow::Result;
+
+/// How the plan clips per-example gradients before aggregation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClipKind {
+    /// One factor from the global norm over all layers (the contract).
+    Global,
+    /// Each layer clipped by its own norm — wrong sensitivity.
+    PerLayer,
+    /// No clipping (nonprivate baseline, or a dropped-clip bug).
+    Unclipped,
+}
+
+/// Clipping specification.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClipSpec {
+    /// Granularity of the clip.
+    pub kind: ClipKind,
+    /// Clip norm `C`.
+    pub norm: f64,
+}
+
+/// Where in the dataflow a noise site injects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NoiseStage {
+    /// After the cross-group reduction (the contract).
+    PostAggregation,
+    /// Into a group partial before reduction (per-rank noise bug).
+    PreAggregation,
+}
+
+/// One Gaussian noise injection site.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NoiseSite {
+    /// Placement relative to aggregation.
+    pub stage: NoiseStage,
+    /// Noise stddev; must equal `sigma * C`.
+    pub scale: f64,
+}
+
+/// Sampler facts the accounting rules judge.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplerInfo {
+    /// Which scheme the run uses.
+    pub choice: SamplerChoice,
+    /// The Poisson rate the scheme actually provides (`None` = the
+    /// shuffle shortcut; accounting over it is invalid).
+    pub poisson_rate: Option<f64>,
+    /// Whether each rank draws its own subsample (must be false: one
+    /// global draw per step, sharded deterministically).
+    pub per_rank: bool,
+}
+
+/// Reduction topology facts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReductionSpec {
+    /// Fixed binary tree whose shape is a function of group count only.
+    pub fixed_tree: bool,
+    /// Whether the combine order depends on the worker schedule.
+    pub worker_dependent: bool,
+}
+
+/// The audited description of one run.
+#[derive(Debug, Clone)]
+pub struct RunPlan {
+    /// Model name.
+    pub model: String,
+    /// Accum variant name.
+    pub variant: String,
+    /// Whether the run claims a DP guarantee.
+    pub private: bool,
+    /// Flat parameter count.
+    pub n_params: usize,
+    /// Flattened input dim of the first layer.
+    pub input_dim: usize,
+    /// Dataset size `N`.
+    pub dataset_size: u64,
+    /// `(d_in, d_out)` per layer, chain order.
+    pub layer_dims: Vec<(usize, usize)>,
+    /// Executed clipping branch per layer.
+    pub choices: Vec<LayerChoice>,
+    /// Clip specification.
+    pub clip: ClipSpec,
+    /// Gaussian noise sites (exactly one, post-aggregation, in a
+    /// canonical private plan; empty when sigma == 0 or nonprivate).
+    pub noise: Vec<NoiseSite>,
+    /// Sampler facts.
+    pub sampler: SamplerInfo,
+    /// Accountant the run reports epsilon with.
+    pub accountant: AccountantKind,
+    /// Reduction topology.
+    pub reduction: ReductionSpec,
+    /// Statically enumerated RNG stream uses.
+    pub streams: Vec<StreamUse>,
+    /// Data-parallel worker count.
+    pub workers: usize,
+    /// Optimizer steps.
+    pub steps: u64,
+    /// Resolved noise multiplier.
+    pub sigma: f64,
+    /// ChaCha block-counter width in bits of the generator the run
+    /// uses (64 since the widening; fixtures set 32 to model the old
+    /// wrapping generator).
+    pub rng_counter_bits: u32,
+    /// Distinct executable dtypes the manifest declares for this model.
+    pub dtypes: Vec<String>,
+}
+
+/// Variants whose contract says per-example weight gradients are never
+/// materialized (the `[B, P]` footprint ghost/BK exist to avoid; the
+/// vmapped fused graphs share the property).
+pub fn variant_claims_no_materialization(variant: &str) -> bool {
+    matches!(variant, "nonprivate" | "naive" | "masked" | "ghost" | "bk")
+}
+
+impl RunPlan {
+    /// Lower `(meta, config, sigma)` into the canonical plan — exactly
+    /// what the trainer will execute. `manifest_seed` keys the
+    /// parameter-init stream.
+    pub fn lower(
+        meta: &ModelMeta,
+        manifest_seed: u64,
+        config: &TrainConfig,
+        sigma: f64,
+    ) -> Result<RunPlan> {
+        let lp = LayerPlan::build(meta)?;
+        let choices = executed_choices(&config.variant, &lp)?;
+        let private = config.is_private();
+        let clip = ClipSpec {
+            kind: if private { ClipKind::Global } else { ClipKind::Unclipped },
+            norm: config.clip_norm,
+        };
+        let noise = if private && sigma > 0.0 {
+            vec![NoiseSite { stage: NoiseStage::PostAggregation, scale: sigma * config.clip_norm }]
+        } else {
+            Vec::new()
+        };
+        let sampler = SamplerInfo {
+            choice: config.sampler,
+            poisson_rate: match config.sampler {
+                SamplerChoice::Poisson => Some(config.sampling_rate),
+                SamplerChoice::Shuffle => None,
+            },
+            per_rank: false,
+        };
+        let streams = streams::enumerate(config, meta, manifest_seed, !noise.is_empty());
+        let mut dtypes: Vec<String> = meta
+            .executables
+            .iter()
+            .map(|e| e.dtype_or_f32().to_string())
+            .collect();
+        dtypes.sort();
+        dtypes.dedup();
+        Ok(RunPlan {
+            model: config.model.clone(),
+            variant: config.variant.clone(),
+            private,
+            n_params: lp.n_params,
+            input_dim: lp.input_dim,
+            dataset_size: u64::from(config.dataset_size),
+            layer_dims: lp.layers.iter().map(|l| (l.spec.d_in, l.spec.d_out)).collect(),
+            choices,
+            clip,
+            noise,
+            sampler,
+            accountant: config.accountant,
+            reduction: ReductionSpec { fixed_tree: true, worker_dependent: false },
+            streams,
+            workers: config.workers.max(1),
+            steps: config.steps,
+            sigma,
+            rng_counter_bits: 64,
+            dtypes,
+        })
+    }
+}
+
+/// A small clean `k`-layer private plan for tests and adversarial
+/// fixtures: masked variant, global clip C = 1, sigma = 1, one
+/// post-aggregation noise site, Poisson sampler, RDP accountant. Every
+/// fixture in the suite starts from this and mutates one aspect.
+pub fn test_plan(k: usize) -> RunPlan {
+    let sigma = 1.0;
+    let layer_dims: Vec<(usize, usize)> = (0..k).map(|l| (8 - l, 8 - l - 1)).collect();
+    RunPlan {
+        model: "fixture".into(),
+        variant: "masked".into(),
+        private: true,
+        n_params: layer_dims.iter().map(|(i, o)| i * o + o).sum(),
+        input_dim: layer_dims.first().map_or(0, |(i, _)| *i),
+        dataset_size: 64,
+        layer_dims,
+        choices: vec![LayerChoice::Ghost; k],
+        clip: ClipSpec { kind: ClipKind::Global, norm: 1.0 },
+        noise: vec![NoiseSite { stage: NoiseStage::PostAggregation, scale: sigma }],
+        sampler: SamplerInfo {
+            choice: SamplerChoice::Poisson,
+            poisson_rate: Some(0.25),
+            per_rank: false,
+        },
+        accountant: AccountantKind::Rdp,
+        reduction: ReductionSpec { fixed_tree: true, worker_dependent: false },
+        streams: Vec::new(),
+        workers: 1,
+        steps: 4,
+        sigma,
+        rng_counter_bits: 64,
+        dtypes: vec!["f32".into()],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::LayerSpec;
+
+    fn meta() -> ModelMeta {
+        let layers = vec![LayerSpec::dense_relu(12, 5), LayerSpec::dense(5, 3)];
+        ModelMeta {
+            family: "test".into(),
+            n_params: layers.iter().map(LayerSpec::params).sum(),
+            image: 2,
+            channels: 3,
+            num_classes: 3,
+            clip_norm: 1.0,
+            flops_fwd_per_example: 1.0,
+            init_params: "t.bin".into(),
+            executables: Vec::new(),
+            layers,
+        }
+    }
+
+    #[test]
+    fn lowering_matches_the_trainer_contract() {
+        let config = TrainConfig {
+            model: "t".into(),
+            variant: "masked".into(),
+            steps: 3,
+            ..Default::default()
+        };
+        let plan = RunPlan::lower(&meta(), 7, &config, 2.0).unwrap();
+        assert!(plan.private);
+        assert_eq!(plan.clip.kind, ClipKind::Global);
+        assert_eq!(plan.noise.len(), 1);
+        assert_eq!(plan.noise[0].stage, NoiseStage::PostAggregation);
+        assert!((plan.noise[0].scale - 2.0 * config.clip_norm).abs() < 1e-12);
+        assert_eq!(plan.layer_dims, vec![(12, 5), (5, 3)]);
+        assert_eq!(plan.choices, vec![LayerChoice::Ghost; 2]);
+        assert_eq!(plan.sampler.poisson_rate, Some(config.sampling_rate));
+        assert!(plan.reduction.fixed_tree);
+        assert_eq!(plan.rng_counter_bits, 64);
+        assert!(!plan.streams.is_empty());
+        // The init stream is keyed by the MANIFEST seed, not run seed.
+        assert!(plan
+            .streams
+            .iter()
+            .any(|s| s.purpose == "init.params" && s.seed == 7));
+    }
+
+    #[test]
+    fn nonprivate_lowers_unclipped_and_noiseless() {
+        let config = TrainConfig {
+            model: "t".into(),
+            variant: "nonprivate".into(),
+            ..Default::default()
+        };
+        let plan = RunPlan::lower(&meta(), 0, &config, 0.0).unwrap();
+        assert!(!plan.private);
+        assert_eq!(plan.clip.kind, ClipKind::Unclipped);
+        assert!(plan.noise.is_empty());
+        assert!(!plan.streams.iter().any(|s| s.purpose.starts_with("noise")));
+    }
+
+    #[test]
+    fn unknown_variant_fails_lowering() {
+        let config = TrainConfig {
+            model: "t".into(),
+            variant: "mystery".into(),
+            ..Default::default()
+        };
+        assert!(RunPlan::lower(&meta(), 0, &config, 1.0).is_err());
+    }
+
+    #[test]
+    fn materialization_contract_per_variant() {
+        for v in ["nonprivate", "naive", "masked", "ghost", "bk"] {
+            assert!(variant_claims_no_materialization(v), "{v}");
+        }
+        assert!(!variant_claims_no_materialization("perex"));
+        assert!(!variant_claims_no_materialization("mix"));
+    }
+}

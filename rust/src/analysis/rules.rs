@@ -1,0 +1,375 @@
+//! The audit rule engine: judge a lowered [`RunPlan`] (and optionally
+//! an HLO-text dump) against the catalog in [`crate::analysis::diag`].
+
+use crate::analysis::diag::{rule, AuditReport, Diagnostic, AUDIT_SCHEMA_VERSION};
+use crate::analysis::plan::{variant_claims_no_materialization, ClipKind, NoiseStage, RunPlan};
+use crate::analysis::streams;
+use crate::analysis::taint::{propagate, Graph, NodeKind, Taint};
+use crate::runtime::hlo_analysis::{dtype_bytes, HloStats};
+use crate::util::rng::LEGACY_STREAM_CAPACITY_BYTES;
+use std::collections::BTreeSet;
+
+/// Audit a plan end to end (lowers the canonical taint graph itself).
+pub fn audit_plan(plan: &RunPlan) -> AuditReport {
+    audit_plan_graph(plan, &Graph::lower(plan))
+}
+
+/// Audit a plan against an explicitly supplied dataflow graph (the
+/// fixture suite mutates graphs directly to model miscompiled steps).
+pub fn audit_plan_graph(plan: &RunPlan, g: &Graph) -> AuditReport {
+    let mut d = Vec::new();
+    check_clipping(plan, g, &mut d);
+    check_noise(plan, g, &mut d);
+    check_streams(plan, &mut d);
+    check_accounting(plan, &mut d);
+    check_topology(plan, g, &mut d);
+    check_materialization(plan, g, &mut d);
+    check_dtypes(plan, &mut d);
+    let mut report = AuditReport {
+        schema_version: AUDIT_SCHEMA_VERSION,
+        model: plan.model.clone(),
+        variant: plan.variant.clone(),
+        sampler: plan.sampler.choice.as_str().to_string(),
+        accountant: plan.accountant.as_str().to_string(),
+        workers: plan.workers,
+        steps: plan.steps,
+        sigma: plan.sigma,
+        diagnostics: d,
+    };
+    report.sort();
+    report
+}
+
+/// (a) Per-example taint must cross into shared accumulators only
+/// through exactly one global-norm clip.
+fn check_clipping(plan: &RunPlan, g: &Graph, d: &mut Vec<Diagnostic>) {
+    let analysis = propagate(g);
+    let all: BTreeSet<usize> = (0..plan.layer_dims.len()).collect();
+    let mut nonprivate_flagged = false;
+    for (node, taint) in &analysis.crossings {
+        let NodeKind::Accumulate { layer } = g.nodes[*node] else { continue };
+        let Taint::PerExample { cover } = taint else { continue };
+        if *cover == all {
+            continue; // clipped by the global norm over every layer
+        }
+        if cover.is_empty() {
+            if plan.private {
+                d.push(Diagnostic::new(
+                    rule::CLIP_MISSING,
+                    format!("layer[{layer}].accumulate"),
+                    format!(
+                        "per-example gradient of layer {layer} reaches the shared accumulator \
+                         without passing any clip; DP-SGD requires exactly one global-norm clip \
+                         before aggregation"
+                    ),
+                ));
+            } else if !nonprivate_flagged {
+                nonprivate_flagged = true;
+                d.push(Diagnostic::new(
+                    rule::CLIP_NONPRIVATE,
+                    "plan.clip",
+                    format!(
+                        "variant {:?} aggregates unclipped per-example gradients by design: \
+                         the run carries no differential-privacy guarantee (epsilon = infinity)",
+                        plan.variant
+                    ),
+                ));
+            }
+        } else {
+            let missing: Vec<usize> = all.difference(cover).copied().collect();
+            d.push(Diagnostic::new(
+                rule::CLIP_PER_LAYER,
+                format!("layer[{layer}].accumulate"),
+                format!(
+                    "layer {layer}'s gradient is scaled by a clip factor derived from the norms \
+                     of layers {:?} only (missing {missing:?}); per-layer clipping changes the \
+                     mechanism's sensitivity and voids the global-norm accounting",
+                    cover.iter().collect::<Vec<_>>()
+                ),
+            ));
+        }
+    }
+}
+
+fn approx_eq(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * b.abs().max(1.0)
+}
+
+/// (b) Gaussian noise: exactly once, post-aggregation, scale sigma·C.
+fn check_noise(plan: &RunPlan, g: &Graph, d: &mut Vec<Diagnostic>) {
+    let noise_nodes: Vec<usize> = (0..g.nodes.len())
+        .filter(|&i| matches!(g.nodes[i], NodeKind::Noise { .. }))
+        .collect();
+    if plan.private && plan.sigma <= 0.0 {
+        d.push(Diagnostic::new(
+            rule::NOISE_ZERO_SIGMA,
+            "plan.noise",
+            "private variant with sigma = 0: no Gaussian noise is added, so the run has no \
+             finite epsilon (useful for mechanics benches only)",
+        ));
+    }
+    let expected = plan.private && plan.sigma > 0.0;
+    if expected && noise_nodes.is_empty() {
+        d.push(Diagnostic::new(
+            rule::NOISE_MISSING,
+            "plan.noise",
+            format!(
+                "the run claims sigma = {} but the plan contains no Gaussian noise site after \
+                 the reduction; the reported epsilon would be fiction",
+                plan.sigma
+            ),
+        ));
+    }
+    if expected && noise_nodes.len() > 1 {
+        d.push(Diagnostic::new(
+            rule::NOISE_DOUBLE,
+            "plan.noise",
+            format!(
+                "{} Gaussian noise sites in the plan; noise must be added exactly once \
+                 (injecting per rank or per site multiplies the total variance and breaks the \
+                 sigma*C calibration)",
+                noise_nodes.len()
+            ),
+        ));
+    }
+    if !expected {
+        return;
+    }
+    let want = plan.sigma * plan.clip.norm;
+    for &i in &noise_nodes {
+        let NodeKind::Noise { site } = g.nodes[i] else { continue };
+        // Pre-aggregation: the noise value flows INTO an aggregation
+        // node instead of being added after the final reduce.
+        let feeds_aggregation = (0..g.nodes.len()).any(|j| {
+            matches!(
+                g.nodes[j],
+                NodeKind::Accumulate { .. } | NodeKind::Partial | NodeKind::Reduce { .. }
+            ) && g.reaches(i, j)
+        });
+        if feeds_aggregation {
+            d.push(Diagnostic::new(
+                rule::NOISE_PRE_AGGREGATION,
+                format!("noise[{site}]"),
+                "noise is injected before aggregation completes (per-group/per-rank noise); \
+                 the mechanism analysed adds one draw to the final aggregated gradient",
+            ));
+        }
+        if let Some(ns) = plan.noise.get(site) {
+            if !approx_eq(ns.scale, want) {
+                d.push(Diagnostic::new(
+                    rule::NOISE_SCALE,
+                    format!("noise[{site}]"),
+                    format!(
+                        "noise stddev {} != sigma * C = {} * {} = {want}; the accountant prices \
+                         exactly sigma*C",
+                        ns.scale, plan.sigma, plan.clip.norm
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Upper bound (bytes) on the largest single-stream draw of the run,
+/// with the purpose of the stream that attains it. 16 bytes per drawn
+/// value is a generous over-estimate (normal draws consume two u64s).
+fn max_stream_draw_bytes(plan: &RunPlan) -> (u128, &'static str) {
+    let candidates: [(u128, &'static str); 3] = [
+        (16 * plan.n_params as u128, "noise.apply"),
+        (16 * u128::from(plan.dataset_size), "sampler"),
+        (16 * plan.input_dim as u128, "data.example"),
+    ];
+    candidates
+        .into_iter()
+        .max_by_key(|(b, _)| *b)
+        .expect("non-empty candidate list")
+}
+
+/// (b, continued) Stream hygiene: `(seed, stream, label)` injectivity
+/// plus statically-predictable keystream exhaustion.
+fn check_streams(plan: &RunPlan, d: &mut Vec<Diagnostic>) {
+    for (a, b) in streams::find_collisions(&plan.streams) {
+        d.push(Diagnostic::new(
+            rule::STREAM_COLLISION,
+            format!("stream[{}]", a.label_str()),
+            format!(
+                "{} and {} construct the same ChaCha key (seed={}, stream={}, label={:?}): \
+                 correlated draws across consumers (e.g. noise correlated with sampling) void \
+                 the Gaussian-mechanism analysis",
+                a.purpose,
+                b.purpose,
+                a.seed,
+                a.stream,
+                a.label_str()
+            ),
+        ));
+    }
+    // 64 bytes per block, 2^counter_bits blocks.
+    let capacity: u128 = 64u128 << plan.rng_counter_bits.min(120);
+    let (draw, purpose) = max_stream_draw_bytes(plan);
+    if draw > capacity {
+        d.push(Diagnostic::new(
+            rule::STREAM_EXHAUSTION,
+            format!("stream[{purpose}]"),
+            format!(
+                "the {purpose} stream draws up to {draw} bytes but a {}-bit block counter \
+                 yields only {capacity} keystream bytes; the generator would reuse (or abort \
+                 on) exhausted keystream mid-run",
+                plan.rng_counter_bits
+            ),
+        ));
+    } else if draw > LEGACY_STREAM_CAPACITY_BYTES {
+        d.push(Diagnostic::new(
+            rule::STREAM_LEGACY_EXHAUSTION,
+            format!("stream[{purpose}]"),
+            format!(
+                "the {purpose} stream draws up to {draw} bytes, past the 2^38-byte capacity of \
+                 the pre-widening 32-bit block counter; runs at this scale silently reused \
+                 keystream before the counter was widened to 64 bits"
+            ),
+        ));
+    }
+}
+
+/// (c) The accountant must match the sampler.
+fn check_accounting(plan: &RunPlan, d: &mut Vec<Diagnostic>) {
+    if plan.private && plan.sampler.poisson_rate.is_none() {
+        d.push(Diagnostic::new(
+            rule::SHORTCUT_EPSILON,
+            "plan.sampler",
+            format!(
+                "sampler {:?} provides no Poisson rate, but the {} accountant analyses the \
+                 Poisson-subsampled Gaussian mechanism; reporting its epsilon for this run is \
+                 the \"shortcut epsilon\" of arXiv 2403.17673 / 2411.04205, not a guarantee",
+                plan.sampler.choice.as_str(),
+                plan.accountant.as_str()
+            ),
+        ));
+    }
+    if plan.sampler.per_rank {
+        d.push(Diagnostic::new(
+            rule::SAMPLER_PER_RANK,
+            "plan.sampler",
+            "each rank draws its own subsample; the sampled mechanism requires ONE global draw \
+             per step, sharded deterministically across ranks",
+        ));
+    }
+}
+
+/// (d) The reduction must be schedule-invariant.
+fn check_topology(plan: &RunPlan, g: &Graph, d: &mut Vec<Diagnostic>) {
+    if plan.reduction.worker_dependent {
+        d.push(Diagnostic::new(
+            rule::REDUCE_SCHEDULE,
+            "plan.reduce",
+            "the reduction order depends on the worker schedule; gradients must combine through \
+             the fixed binary tree whose shape is a function of the group count only (the \
+             bitwise-determinism contract)",
+        ));
+    }
+    for (i, k) in g.nodes.iter().enumerate() {
+        if matches!(k, NodeKind::Reduce { fixed_tree: false }) {
+            d.push(Diagnostic::new(
+                rule::REDUCE_SCHEDULE,
+                format!("reduce[{i}]"),
+                "a reduce node is not the fixed-tree combine; float addition is not \
+                 associative, so any schedule-dependent order breaks bitwise reproducibility",
+            ));
+        }
+    }
+}
+
+/// Satellite: the `[B, P]` materialization contract, judged on the
+/// lowered layer graph (the HLO-text form is [`audit_hlo`]).
+fn check_materialization(plan: &RunPlan, g: &Graph, d: &mut Vec<Diagnostic>) {
+    if !variant_claims_no_materialization(&plan.variant) {
+        return;
+    }
+    for k in &g.nodes {
+        if let NodeKind::LayerGrad { layer, materialized: true } = k {
+            d.push(Diagnostic::new(
+                rule::MATERIALIZED_PER_EXAMPLE,
+                format!("layer[{layer}].grad"),
+                format!(
+                    "variant {:?} promises per-example weight gradients are never materialized, \
+                     but layer {layer} materializes its [B, d_out*d_in] gradient (the memory \
+                     footprint ghost/BK exist to avoid)",
+                    plan.variant
+                ),
+            ));
+        }
+    }
+}
+
+/// Satellite: unknown executable dtypes would silently be priced at 4
+/// bytes by the memory model.
+fn check_dtypes(plan: &RunPlan, d: &mut Vec<Diagnostic>) {
+    for ty in &plan.dtypes {
+        if dtype_bytes(ty).is_none() {
+            d.push(Diagnostic::new(
+                rule::DTYPE_UNKNOWN,
+                format!("executables.dtype={ty}"),
+                format!(
+                    "executable dtype {ty:?} is unknown to the memory model; byte accounting \
+                     would silently assume 4 bytes per element"
+                ),
+            ));
+        }
+    }
+}
+
+/// Audit an HLO-text dump against the structural rules: unknown dtypes
+/// plus the `[B, P]` per-example-materialization tensor under a variant
+/// whose contract forbids it.
+pub fn audit_hlo(
+    stats: &HloStats,
+    batch: usize,
+    n_params: usize,
+    variant: &str,
+) -> Vec<Diagnostic> {
+    let mut d = Vec::new();
+    for ty in &stats.unknown_dtypes {
+        d.push(Diagnostic::new(
+            rule::DTYPE_UNKNOWN,
+            format!("hlo.dtype={ty}"),
+            format!(
+                "HLO declares tensors of unknown dtype {ty:?}; byte accounting assumed 4 bytes \
+                 per element for them"
+            ),
+        ));
+    }
+    let materialized = stats.has_tensor(&[batch as u64, n_params as u64]);
+    if variant_claims_no_materialization(variant) && materialized {
+        d.push(Diagnostic::new(
+            rule::MATERIALIZED_PER_EXAMPLE,
+            format!("hlo.tensor[{batch},{n_params}]"),
+            format!(
+                "the HLO materializes a [{batch}, {n_params}] per-example gradient tensor, but \
+                 variant {variant:?} promises it never exists"
+            ),
+        ));
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::plan::test_plan;
+
+    #[test]
+    fn clean_fixture_plan_audits_clean() {
+        let plan = test_plan(3);
+        let report = audit_plan(&plan);
+        report.validate().unwrap();
+        assert!(report.is_clean(), "diags: {:?}", report.diagnostics);
+        assert_eq!(report.counts(), (0, 0, 0));
+    }
+
+    #[test]
+    fn approx_eq_tolerates_rounding_only() {
+        assert!(approx_eq(1.0 + 1e-12, 1.0));
+        assert!(!approx_eq(1.5, 1.0));
+        assert!(!approx_eq(2e-9, 1e-9 * 0.5));
+    }
+}

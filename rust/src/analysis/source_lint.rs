@@ -1,0 +1,323 @@
+//! `dpshort lint --source`: a small pattern lint over `rust/src`
+//! enforcing the determinism house rules that used to live as ad-hoc
+//! greps in CI.
+//!
+//! Rules (each a substring scan, deliberately dumb and fast):
+//!
+//! * `lint.hash-iteration` — `HashMap`/`HashSet` in kernel/reduce
+//!   paths: hash iteration order is unspecified, so any fold over it
+//!   breaks bitwise determinism. Elsewhere (caches keyed for lookup
+//!   only) they are fine.
+//! * `lint.nondet-rng` — RNG construction that is not a seeded ChaCha
+//!   stream (thread/entropy-seeded generators, the `rand` crate,
+//!   OS randomness, hash-randomized state) anywhere outside
+//!   `util/rng.rs`.
+//! * `lint.float-accum` — unordered float accumulation (turbofish f32
+//!   sums, f32 folds) in kernel/reduce paths; sums there must go
+//!   through the fixed-order helpers.
+//! * `lint.clippy-allow` — new clippy attribute escape hatches
+//!   anywhere (replaces the old CI grep for `too_many_arguments`).
+//!
+//! False positives are suppressed either by an inline `lint:allow`
+//! marker on the offending line or by an entry in the checked-in
+//! allowlist (`lint-allowlist.txt`): `rule path-substring line-needle`,
+//! `#` comments allowed. The pattern literals below are built with
+//! `concat!` so this file does not flag itself.
+
+use anyhow::{Context, Result};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Where a lint rule applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    /// Only the kernel/reduce files in [`KERNEL_PATHS`].
+    KernelPaths,
+    /// Every `.rs` file under the scanned root.
+    Everywhere,
+    /// Every file except those whose path contains the given fragment.
+    EverywhereExcept(&'static str),
+}
+
+/// One lint rule: an id, the substrings that trigger it, and a scope.
+#[derive(Debug, Clone, Copy)]
+pub struct LintRule {
+    /// Stable rule id (`lint.*` namespace).
+    pub id: &'static str,
+    /// Substrings that trigger the rule.
+    pub patterns: &'static [&'static str],
+    /// Which files the rule scans.
+    pub scope: Scope,
+    /// Why the pattern is forbidden.
+    pub why: &'static str,
+}
+
+/// Path fragments of the kernel/reduce hot paths (bitwise-determinism
+/// critical): the reference kernels, the layer executor, and the
+/// multi-session reduction.
+pub const KERNEL_PATHS: &[&str] = &[
+    "runtime/reference.rs",
+    "runtime/layers.rs",
+    "cluster/parallel.rs",
+];
+
+// Pattern literals are split with concat! so the lint never matches its
+// own source.
+const P_HASHMAP: &str = concat!("Hash", "Map");
+const P_HASHSET: &str = concat!("Hash", "Set");
+const P_THREAD_RNG: &str = concat!("thread", "_rng");
+const P_FROM_ENTROPY: &str = concat!("from_", "entropy");
+const P_RAND_CRATE: &str = concat!("rand", "::");
+const P_GETRANDOM: &str = concat!("get", "random");
+const P_RANDOM_STATE: &str = concat!("Random", "State");
+const P_SUM_F32: &str = concat!("sum::<", "f32>()");
+const P_FOLD_F32: &str = concat!("fold(0.0", "f32");
+const P_CLIPPY_ALLOW: &str = concat!("#[allow(", "clippy::");
+const ALLOW_MARKER: &str = concat!("lint:", "allow");
+
+/// The shipped lint rules.
+pub const LINT_RULES: &[LintRule] = &[
+    LintRule {
+        id: "lint.hash-iteration",
+        patterns: &[P_HASHMAP, P_HASHSET],
+        scope: Scope::KernelPaths,
+        why: "hash iteration order is unspecified; kernel/reduce paths must use BTree or Vec",
+    },
+    LintRule {
+        id: "lint.nondet-rng",
+        patterns: &[P_THREAD_RNG, P_FROM_ENTROPY, P_RAND_CRATE, P_GETRANDOM, P_RANDOM_STATE],
+        scope: Scope::EverywhereExcept("util/rng.rs"),
+        why: "all randomness must come from the seeded ChaCha streams in util/rng.rs",
+    },
+    LintRule {
+        id: "lint.float-accum",
+        patterns: &[P_SUM_F32, P_FOLD_F32],
+        scope: Scope::KernelPaths,
+        why: "float accumulation in kernel paths must use the fixed-order helpers",
+    },
+    LintRule {
+        id: "lint.clippy-allow",
+        patterns: &[P_CLIPPY_ALLOW],
+        scope: Scope::Everywhere,
+        why: "clippy escape hatches are banned; fix the lint or add a justified allowlist entry",
+    },
+];
+
+/// One allowlist entry: `rule path-substring line-needle` (the needle
+/// may be empty, matching any line in the file).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AllowEntry {
+    /// Rule id the entry applies to.
+    pub rule: String,
+    /// Path substring the entry applies to.
+    pub path: String,
+    /// Substring the offending line must contain ("" = any line).
+    pub needle: String,
+}
+
+/// Parse `lint-allowlist.txt` text (whitespace-separated triples, `#`
+/// comments and blank lines skipped).
+pub fn parse_allowlist(text: &str) -> Vec<AllowEntry> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .filter_map(|l| {
+            let mut parts = l.splitn(3, ' ');
+            let rule = parts.next()?.to_string();
+            let path = parts.next()?.to_string();
+            let needle = parts.next().unwrap_or("").to_string();
+            Some(AllowEntry { rule, path, needle })
+        })
+        .collect()
+}
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct LintFinding {
+    /// Rule id.
+    pub rule: &'static str,
+    /// Path relative to the scanned root (normalized to `/`).
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// The offending line's text.
+    pub text: String,
+    /// The rule's rationale.
+    pub why: &'static str,
+}
+
+/// The lint pass result.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    /// Findings that survived the allowlist and inline markers.
+    pub findings: Vec<LintFinding>,
+    /// Count of matches suppressed by allowlist entries.
+    pub allowed: usize,
+    /// Count of matches suppressed by inline markers.
+    pub suppressed: usize,
+    /// `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+/// Recursively collect `.rs` files under `root`, sorted for
+/// deterministic output.
+fn rs_files(root: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<PathBuf> = fs::read_dir(&dir)
+            .with_context(|| format!("reading {}", dir.display()))?
+            .map(|e| e.map(|e| e.path()))
+            .collect::<std::io::Result<_>>()?;
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn in_scope(scope: Scope, rel: &str) -> bool {
+    match scope {
+        Scope::KernelPaths => KERNEL_PATHS.iter().any(|k| rel.contains(k)),
+        Scope::Everywhere => true,
+        Scope::EverywhereExcept(frag) => !rel.contains(frag),
+    }
+}
+
+/// Run the lint over every `.rs` file under `root`.
+pub fn lint_source(root: &Path, allow: &[AllowEntry]) -> Result<LintReport> {
+    let mut report = LintReport::default();
+    for file in rs_files(root)? {
+        report.files_scanned += 1;
+        let rel = file
+            .strip_prefix(root)
+            .unwrap_or(&file)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text =
+            fs::read_to_string(&file).with_context(|| format!("reading {}", file.display()))?;
+        for (idx, line) in text.lines().enumerate() {
+            for r in LINT_RULES {
+                if !in_scope(r.scope, &rel) || !r.patterns.iter().any(|p| line.contains(p)) {
+                    continue;
+                }
+                if line.contains(ALLOW_MARKER) {
+                    report.suppressed += 1;
+                } else if allow.iter().any(|a| {
+                    a.rule == r.id
+                        && rel.contains(&a.path)
+                        && (a.needle.is_empty() || line.contains(&a.needle))
+                }) {
+                    report.allowed += 1;
+                } else {
+                    report.findings.push(LintFinding {
+                        rule: r.id,
+                        path: rel.clone(),
+                        line: idx + 1,
+                        text: line.to_string(),
+                        why: r.why,
+                    });
+                }
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write(dir: &Path, rel: &str, text: &str) {
+        let p = dir.join(rel);
+        fs::create_dir_all(p.parent().unwrap()).unwrap();
+        fs::write(p, text).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("dpshort-lint-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn flags_forbidden_patterns_in_scope_only() {
+        let d = tmpdir("scope");
+        // Kernel path: hash container + float accumulation are findings.
+        write(
+            &d,
+            "runtime/reference.rs",
+            &format!("use std::collections::{P_HASHMAP};\nlet s: f32 = xs.iter().{P_SUM_F32};\n"),
+        );
+        // Non-kernel path: the same hash use is fine; clippy allow is not.
+        write(
+            &d,
+            "runtime/compile_cache.rs",
+            &format!("use std::collections::{P_HASHMAP};\n{P_CLIPPY_ALLOW}foo)]\n"),
+        );
+        // Nondet RNG is allowed only inside util/rng.rs.
+        write(&d, "util/rng.rs", &format!("// mentions {P_THREAD_RNG} freely\n"));
+        write(&d, "coordinator/trainer.rs", &format!("let r = {P_THREAD_RNG}();\n"));
+        let rep = lint_source(&d, &[]).unwrap();
+        let mut got: Vec<(&str, String)> =
+            rep.findings.iter().map(|f| (f.rule, f.path.clone())).collect();
+        got.sort();
+        assert_eq!(
+            got,
+            vec![
+                ("lint.clippy-allow", "runtime/compile_cache.rs".to_string()),
+                ("lint.float-accum", "runtime/reference.rs".to_string()),
+                ("lint.hash-iteration", "runtime/reference.rs".to_string()),
+                ("lint.nondet-rng", "coordinator/trainer.rs".to_string()),
+            ]
+        );
+        assert_eq!(rep.files_scanned, 4);
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn allowlist_and_inline_marker_suppress() {
+        let d = tmpdir("allow");
+        write(
+            &d,
+            "runtime/layers.rs",
+            &format!(
+                "let a: f32 = xs.iter().{P_SUM_F32}; // {ALLOW_MARKER}: test-only\nlet b: f32 = ys.iter().{P_SUM_F32};\n"
+            ),
+        );
+        let allow = parse_allowlist(&format!(
+            "# comment line\n\nlint.float-accum runtime/layers.rs ys.iter()\nlint.float-accum other.rs {P_SUM_F32}\n"
+        ));
+        assert_eq!(allow.len(), 2);
+        assert_eq!(allow[0].needle, "ys.iter()");
+        let rep = lint_source(&d, &allow).unwrap();
+        assert!(rep.findings.is_empty(), "findings: {:?}", rep.findings);
+        assert_eq!(rep.suppressed, 1);
+        assert_eq!(rep.allowed, 1);
+        // Without the allowlist, the unmarked line is a finding.
+        let rep2 = lint_source(&d, &[]).unwrap();
+        assert_eq!(rep2.findings.len(), 1);
+        assert_eq!(rep2.findings[0].line, 2);
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn needleless_entries_cover_whole_files() {
+        let entries = parse_allowlist("lint.hash-iteration runtime/compile_cache.rs");
+        assert_eq!(
+            entries,
+            vec![AllowEntry {
+                rule: "lint.hash-iteration".into(),
+                path: "runtime/compile_cache.rs".into(),
+                needle: String::new(),
+            }]
+        );
+    }
+}

@@ -1,0 +1,189 @@
+//! Static enumeration of every ChaCha `(seed, stream, label)` tuple a
+//! run will construct, plus the injectivity / exhaustion checks over
+//! that set.
+//!
+//! Every random draw in this codebase goes through
+//! [`crate::util::rng::ChaChaRng::from_seed_stream`], whose key is the
+//! `(seed, stream, label)` tuple — so "two consumers share a keystream"
+//! (the PR-1 noise-seed-collision bug class) is a *statically decidable*
+//! property of the run plan: enumerate the tuples, sort, look for
+//! duplicates. Labels are 8-byte purpose tags (`b"poisson\0"`,
+//! `b"noisesd\0"`, ...), so a collision requires either a label reuse in
+//! code or a degenerate seed derivation, both of which this pass
+//! catches before a step runs.
+//!
+//! Unbounded index families (per-step sampler streams, per-example data
+//! streams) are enumerated up to [`ENUM_CAP`] entries plus the final
+//! boundary element; capping cannot mask a collision *within* one
+//! family (each family is injective in its index by construction — the
+//! index IS the stream word), only cross-family collisions matter, and
+//! those are index-independent because labels differ per family.
+
+use crate::coordinator::config::TrainConfig;
+use crate::coordinator::sampler::SamplerChoice;
+use crate::coordinator::trainer::per_step_noise_seed;
+use crate::runtime::ModelMeta;
+
+/// Max enumerated tuples per index family (the last index is always
+/// appended on top, so boundary behaviour is still covered).
+pub const ENUM_CAP: u64 = 4096;
+
+/// One static use of a ChaCha stream.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct StreamUse {
+    /// 8-byte purpose label baked into the key.
+    pub label: [u8; 8],
+    /// Seed word of the key.
+    pub seed: u64,
+    /// Stream word of the key.
+    pub stream: u64,
+    /// Human name of the consumer (for diagnostics).
+    pub purpose: &'static str,
+}
+
+impl StreamUse {
+    /// Build a stream use record.
+    pub fn new(purpose: &'static str, seed: u64, stream: u64, label: &[u8; 8]) -> Self {
+        Self { label: *label, seed, stream, purpose }
+    }
+
+    /// The key identity: collides iff another use has the same triple.
+    pub fn key(&self) -> (u64, u64, [u8; 8]) {
+        (self.seed, self.stream, self.label)
+    }
+
+    /// Printable label (non-ASCII bytes escaped).
+    pub fn label_str(&self) -> String {
+        self.label
+            .iter()
+            .map(|&b| {
+                if b.is_ascii_graphic() {
+                    (b as char).to_string()
+                } else {
+                    format!("\\x{b:02x}")
+                }
+            })
+            .collect()
+    }
+}
+
+/// `0..n` capped at [`ENUM_CAP`] entries, always keeping the last index.
+fn capped_indices(n: u64) -> Vec<u64> {
+    if n <= ENUM_CAP {
+        (0..n).collect()
+    } else {
+        let mut v: Vec<u64> = (0..ENUM_CAP).collect();
+        v.push(n - 1);
+        v
+    }
+}
+
+/// Enumerate every `(seed, stream, label)` tuple the configured run
+/// constructs: sampler streams (per step or per epoch), the noise seed
+/// derivation + per-step apply-noise streams (when `with_noise`), the
+/// parameter-init stream (keyed by the *manifest* seed), the synthetic
+/// dataset's class/example streams, and the metrics bootstrap stream.
+pub fn enumerate(
+    config: &TrainConfig,
+    meta: &ModelMeta,
+    manifest_seed: u64,
+    with_noise: bool,
+) -> Vec<StreamUse> {
+    let mut out = Vec::new();
+    let seed = config.seed;
+    let n = u64::from(config.dataset_size);
+
+    // Sampler: one stream per step (Poisson) or per epoch (shuffle).
+    match config.sampler {
+        SamplerChoice::Poisson => {
+            for t in capped_indices(config.steps) {
+                out.push(StreamUse::new("sampler.poisson", seed, t, b"poisson\0"));
+            }
+        }
+        SamplerChoice::Shuffle => {
+            // Mirror AnySampler::from_config's batch derivation.
+            let batch = ((n as f64 * config.sampling_rate).round() as u64).clamp(1, n.max(1));
+            let steps_per_epoch = n.div_ceil(batch).max(1);
+            let epochs = config.steps.div_ceil(steps_per_epoch).max(1);
+            for e in capped_indices(epochs) {
+                out.push(StreamUse::new("sampler.shuffle", seed, e, b"shuffle\0"));
+            }
+        }
+    }
+
+    if with_noise {
+        // The derivation stream per_step_noise_seed() reads once...
+        out.push(StreamUse::new("noise.derive", seed, 0, b"noisesd\0"));
+        // ...and the per-step apply streams keyed by the folded seed.
+        for t in capped_indices(config.steps) {
+            out.push(StreamUse::new(
+                "noise.apply",
+                per_step_noise_seed(seed, t),
+                0,
+                b"applynse",
+            ));
+        }
+    }
+
+    // Parameter init: keyed by the manifest seed, not the run seed.
+    out.push(StreamUse::new("init.params", manifest_seed, 0, b"refinit\0"));
+
+    // Synthetic data: class patterns + per-example streams. Train and
+    // held-out sets share these tuples BY DESIGN (same underlying
+    // distribution), so enumerate the union once.
+    for c in capped_indices(meta.num_classes as u64) {
+        out.push(StreamUse::new("data.class", seed, c, b"classpat"));
+    }
+    let examples = n + u64::from(config.eval_examples);
+    for i in capped_indices(examples) {
+        out.push(StreamUse::new("data.example", seed, i, b"example\0"));
+    }
+
+    // Metrics bootstrap CIs.
+    out.push(StreamUse::new("metrics.bootstrap", seed, 0, b"bootstrp"));
+
+    out
+}
+
+/// All pairs of distinct uses sharing one `(seed, stream, label)` key.
+pub fn find_collisions(streams: &[StreamUse]) -> Vec<(StreamUse, StreamUse)> {
+    let mut sorted: Vec<&StreamUse> = streams.iter().collect();
+    sorted.sort_by_key(|s| s.key());
+    sorted
+        .windows(2)
+        .filter(|w| w[0].key() == w[1].key())
+        .map(|w| (w[0].clone(), w[1].clone()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capped_enumeration_keeps_the_boundary() {
+        assert_eq!(capped_indices(3), vec![0, 1, 2]);
+        let big = capped_indices(1 << 40);
+        assert_eq!(big.len() as u64, ENUM_CAP + 1);
+        assert_eq!(*big.last().unwrap(), (1 << 40) - 1);
+        // No duplicate introduced by the cap (last > cap range).
+        assert!(big.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn collisions_found_regardless_of_order() {
+        let a = StreamUse::new("x", 1, 2, b"labelone");
+        let b = StreamUse::new("y", 1, 2, b"labelone");
+        let c = StreamUse::new("z", 1, 3, b"labelone");
+        assert!(find_collisions(&[a.clone(), c.clone()]).is_empty());
+        let hits = find_collisions(&[c, a.clone(), b]);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].0.key(), a.key());
+    }
+
+    #[test]
+    fn label_str_escapes_non_ascii() {
+        let s = StreamUse::new("x", 0, 0, b"poisson\0");
+        assert_eq!(s.label_str(), "poisson\\x00");
+    }
+}

@@ -1,0 +1,399 @@
+//! Per-example taint analysis over the lowered step dataflow.
+//!
+//! The lattice has two levels. `Shared` (bottom) marks values that are
+//! functions of the whole batch/run only; `PerExample { cover }` marks
+//! values carrying information about *individual* examples, where
+//! `cover` records which layers' Gram norms have been folded into the
+//! value's scaling so far. The join is `Shared ⊔ x = x` and
+//! `PerExample{a} ⊔ PerExample{b} = PerExample{a ∪ b}` — finite and
+//! monotone, so fixpoint propagation over the (acyclic) step graph
+//! terminates.
+//!
+//! The DP contract is then a statement about **accumulate nodes** (the
+//! example-crossing points where per-example contributions fold into a
+//! shared sum): the incoming taint must either be `Shared`, or be
+//! `PerExample` with `cover == {all layers}` — i.e. the value was
+//! scaled by a clip factor derived from the **global** norm over every
+//! layer. `cover == ∅` means no clip at all (the `clip.missing` /
+//! `clip.nonprivate` rules); a strict subset means per-layer clipping
+//! (`clip.per-layer`), which changes the mechanism's sensitivity.
+
+use crate::analysis::plan::{ClipKind, NoiseStage, RunPlan};
+use crate::clipping::LayerChoice;
+use std::collections::BTreeSet;
+
+/// Node kinds of the lowered step dataflow graph.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NodeKind {
+    /// The batch of example inputs (taint source).
+    ExampleInput,
+    /// Layer `l`'s forward tape (activations).
+    Tape {
+        /// Layer index.
+        layer: usize,
+    },
+    /// Layer `l`'s backward pre-activation gradients (dz).
+    Backward {
+        /// Layer index.
+        layer: usize,
+    },
+    /// Layer `l`'s per-example squared gradient norm (Gram form).
+    GramNorm {
+        /// Layer index.
+        layer: usize,
+    },
+    /// The total per-example norm (sum of Gram norms feeding the clip).
+    NormTotal,
+    /// The per-example clip factor `min(1, C / ||g_i||)`.
+    ClipFactor,
+    /// Layer `l`'s (possibly reweighted) per-example gradient.
+    LayerGrad {
+        /// Layer index.
+        layer: usize,
+        /// Whether the `[B, d_out * d_in]` per-example weight gradient
+        /// is materialized (per-example branch) or folded fused (ghost).
+        materialized: bool,
+    },
+    /// Layer `l`'s shared accumulator — an example-crossing point.
+    Accumulate {
+        /// Layer index.
+        layer: usize,
+    },
+    /// One group's partial gradient sum.
+    Partial,
+    /// The cross-group reduction combining partials.
+    Reduce {
+        /// Whether the reduction is the fixed binary tree whose shape
+        /// depends only on the group count.
+        fixed_tree: bool,
+    },
+    /// Gaussian noise injection for plan noise site `site`.
+    Noise {
+        /// Index into [`RunPlan::noise`].
+        site: usize,
+    },
+    /// The optimizer update consuming the final gradient.
+    Update,
+}
+
+/// The step dataflow graph (adjacency as an edge list; fields public so
+/// adversarial fixtures can mutate the lowered graph directly).
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    /// Node kinds, indexed by node id.
+    pub nodes: Vec<NodeKind>,
+    /// Directed `(from, to)` dataflow edges.
+    pub edges: Vec<(usize, usize)>,
+}
+
+impl Graph {
+    /// Append a node, returning its id.
+    pub fn push(&mut self, kind: NodeKind) -> usize {
+        self.nodes.push(kind);
+        self.nodes.len() - 1
+    }
+
+    /// Add a dataflow edge.
+    pub fn edge(&mut self, from: usize, to: usize) {
+        self.edges.push((from, to));
+    }
+
+    /// Is `to` reachable from `from` along dataflow edges?
+    pub fn reaches(&self, from: usize, to: usize) -> bool {
+        let n = self.nodes.len();
+        let mut seen = vec![false; n];
+        let mut stack = vec![from];
+        while let Some(i) = stack.pop() {
+            if i == to {
+                return true;
+            }
+            if i >= n || seen[i] {
+                continue;
+            }
+            seen[i] = true;
+            for &(f, t) in &self.edges {
+                if f == i && !seen.get(t).copied().unwrap_or(true) {
+                    stack.push(t);
+                }
+            }
+        }
+        false
+    }
+
+    /// Lower a [`RunPlan`] to its canonical step dataflow: input →
+    /// forward tapes → backward chain → per-layer Gram norms → clip
+    /// factor (per the plan's [`ClipKind`]) → reweighted layer grads →
+    /// per-layer accumulators → group partial → fixed-tree reduce →
+    /// noise (per the plan's sites) → update.
+    pub fn lower(plan: &RunPlan) -> Graph {
+        let mut g = Graph::default();
+        let k = plan.layer_dims.len();
+        let input = g.push(NodeKind::ExampleInput);
+
+        // Forward tapes chain input → tape_0 → ... → tape_{k-1}.
+        let mut tapes = Vec::with_capacity(k);
+        let mut prev = input;
+        for l in 0..k {
+            let t = g.push(NodeKind::Tape { layer: l });
+            g.edge(prev, t);
+            tapes.push(t);
+            prev = t;
+        }
+
+        // Backward chain head → 0; each dz_l reads the tape above it.
+        let mut backs = vec![0usize; k];
+        let mut prev_back: Option<usize> = None;
+        for l in (0..k).rev() {
+            let b = g.push(NodeKind::Backward { layer: l });
+            g.edge(tapes[l], b);
+            if let Some(pb) = prev_back {
+                g.edge(pb, b);
+            }
+            backs[l] = b;
+            prev_back = Some(b);
+        }
+
+        // Per-layer Gram norms (tape ⊗ dz), then the clip factor.
+        let mut grams = Vec::with_capacity(k);
+        for l in 0..k {
+            let gn = g.push(NodeKind::GramNorm { layer: l });
+            g.edge(tapes[l], gn);
+            g.edge(backs[l], gn);
+            grams.push(gn);
+        }
+        // factor_for[l]: the clip factor scaling layer l's gradient.
+        let factor_for: Vec<Option<usize>> = match plan.clip.kind {
+            ClipKind::Global => {
+                let total = g.push(NodeKind::NormTotal);
+                for &gn in &grams {
+                    g.edge(gn, total);
+                }
+                let f = g.push(NodeKind::ClipFactor);
+                g.edge(total, f);
+                vec![Some(f); k]
+            }
+            ClipKind::PerLayer => (0..k)
+                .map(|l| {
+                    // Each layer clipped by ITS OWN norm only — the
+                    // wrong-sensitivity shortcut the audit flags.
+                    let f = g.push(NodeKind::ClipFactor);
+                    g.edge(grams[l], f);
+                    Some(f)
+                })
+                .collect(),
+            ClipKind::Unclipped => vec![None; k],
+        };
+
+        // Reweighted layer grads → per-layer accumulators.
+        let mut accs = Vec::with_capacity(k);
+        for l in 0..k {
+            let materialized = plan
+                .choices
+                .get(l)
+                .is_some_and(|c| *c == LayerChoice::PerExample);
+            let lg = g.push(NodeKind::LayerGrad { layer: l, materialized });
+            g.edge(tapes[l], lg);
+            g.edge(backs[l], lg);
+            if let Some(f) = factor_for[l] {
+                g.edge(f, lg);
+            }
+            let a = g.push(NodeKind::Accumulate { layer: l });
+            g.edge(lg, a);
+            accs.push(a);
+        }
+
+        // Group partial → cross-group reduce → noise site(s) → update.
+        let partial = g.push(NodeKind::Partial);
+        for &a in &accs {
+            g.edge(a, partial);
+        }
+        let reduce = g.push(NodeKind::Reduce { fixed_tree: plan.reduction.fixed_tree });
+        g.edge(partial, reduce);
+        let update = g.push(NodeKind::Update);
+        let mut tail = reduce;
+        for (site, ns) in plan.noise.iter().enumerate() {
+            let nz = g.push(NodeKind::Noise { site });
+            match ns.stage {
+                NoiseStage::PostAggregation => {
+                    g.edge(tail, nz);
+                    tail = nz;
+                }
+                NoiseStage::PreAggregation => {
+                    // Noise injected into each group's partial — the
+                    // per-rank-noise miscalibration shape.
+                    g.edge(nz, partial);
+                }
+            }
+        }
+        g.edge(tail, update);
+        g
+    }
+}
+
+/// Taint lattice value.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Taint {
+    /// Function of the batch/run as a whole (bottom).
+    Shared,
+    /// Carries per-example information; `cover` is the set of layers
+    /// whose Gram norms have been folded into the value's scaling.
+    PerExample {
+        /// Layers covered by the clip this value passed through.
+        cover: BTreeSet<usize>,
+    },
+}
+
+/// Lattice join.
+fn join(a: &Taint, b: &Taint) -> Taint {
+    match (a, b) {
+        (Taint::Shared, x) | (x, Taint::Shared) => x.clone(),
+        (Taint::PerExample { cover: ca }, Taint::PerExample { cover: cb }) => Taint::PerExample {
+            cover: ca.union(cb).cloned().collect(),
+        },
+    }
+}
+
+/// Per-node transfer function over the joined input taint.
+fn transfer(kind: &NodeKind, input: &Taint) -> Taint {
+    match kind {
+        NodeKind::ExampleInput => Taint::PerExample { cover: BTreeSet::new() },
+        NodeKind::GramNorm { layer } => match input {
+            Taint::PerExample { cover } => {
+                let mut c = cover.clone();
+                c.insert(*layer);
+                Taint::PerExample { cover: c }
+            }
+            Taint::Shared => Taint::Shared,
+        },
+        // Example-crossing / group-crossing aggregations output shared
+        // values; the *incoming* taint is what the rules inspect.
+        NodeKind::Accumulate { .. } | NodeKind::Reduce { .. } => Taint::Shared,
+        _ => input.clone(),
+    }
+}
+
+/// Fixpoint result: the out-taint of every node plus the joined
+/// *incoming* taint at each accumulate node (the crossing evidence the
+/// clipping rules judge).
+#[derive(Debug, Clone)]
+pub struct TaintAnalysis {
+    /// Out-taint per node id.
+    pub taints: Vec<Taint>,
+    /// `(accumulate node id, joined incoming taint)` per crossing.
+    pub crossings: Vec<(usize, Taint)>,
+}
+
+/// Run the taint fixpoint over `g`.
+pub fn propagate(g: &Graph) -> TaintAnalysis {
+    let n = g.nodes.len();
+    let mut ins: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for &(f, t) in &g.edges {
+        if f < n && t < n {
+            ins[t].push(f);
+        }
+    }
+    let mut taints = vec![Taint::Shared; n];
+    // The lattice is finite and the transfer monotone; n + 1 sweeps
+    // bound any chain through an acyclic graph (and terminate even on
+    // adversarially cyclic fixture graphs).
+    for _sweep in 0..=n {
+        let mut changed = false;
+        for i in 0..n {
+            let joined = ins[i]
+                .iter()
+                .fold(Taint::Shared, |acc, &p| join(&acc, &taints[p]));
+            let out = transfer(&g.nodes[i], &joined);
+            if out != taints[i] {
+                taints[i] = out;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let crossings = (0..n)
+        .filter(|&i| matches!(g.nodes[i], NodeKind::Accumulate { .. }))
+        .map(|i| {
+            let joined = ins[i]
+                .iter()
+                .fold(Taint::Shared, |acc, &p| join(&acc, &taints[p]));
+            (i, joined)
+        })
+        .collect();
+    TaintAnalysis { taints, crossings }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cover(layers: &[usize]) -> Taint {
+        Taint::PerExample { cover: layers.iter().copied().collect() }
+    }
+
+    #[test]
+    fn join_is_commutative_union() {
+        assert_eq!(join(&Taint::Shared, &cover(&[1])), cover(&[1]));
+        assert_eq!(join(&cover(&[0]), &cover(&[1])), cover(&[0, 1]));
+        assert_eq!(join(&Taint::Shared, &Taint::Shared), Taint::Shared);
+    }
+
+    #[test]
+    fn global_clip_covers_all_layers_at_every_crossing() {
+        use crate::analysis::plan::test_plan;
+        let plan = test_plan(3);
+        let g = Graph::lower(&plan);
+        let analysis = propagate(&g);
+        let all: BTreeSet<usize> = (0..3).collect();
+        assert_eq!(analysis.crossings.len(), 3);
+        for (node, taint) in &analysis.crossings {
+            assert!(matches!(g.nodes[*node], NodeKind::Accumulate { .. }));
+            assert_eq!(*taint, Taint::PerExample { cover: all.clone() });
+        }
+        // Post-reduce values are shared; the noise node sees Shared in.
+        let update = g
+            .nodes
+            .iter()
+            .position(|k| *k == NodeKind::Update)
+            .unwrap();
+        assert_eq!(analysis.taints[update], Taint::Shared);
+    }
+
+    #[test]
+    fn unclipped_crossings_have_empty_cover() {
+        use crate::analysis::plan::{test_plan, ClipKind};
+        let mut plan = test_plan(2);
+        plan.clip.kind = ClipKind::Unclipped;
+        let g = Graph::lower(&plan);
+        for (_, taint) in propagate(&g).crossings {
+            assert_eq!(taint, cover(&[]));
+        }
+    }
+
+    #[test]
+    fn per_layer_clip_covers_only_its_own_layer() {
+        use crate::analysis::plan::{test_plan, ClipKind};
+        let mut plan = test_plan(2);
+        plan.clip.kind = ClipKind::PerLayer;
+        let g = Graph::lower(&plan);
+        let analysis = propagate(&g);
+        for (node, taint) in analysis.crossings {
+            let NodeKind::Accumulate { layer } = g.nodes[node] else {
+                panic!("crossing at a non-accumulate node")
+            };
+            assert_eq!(taint, cover(&[layer]), "layer {layer}");
+        }
+    }
+
+    #[test]
+    fn reachability_follows_edges() {
+        use crate::analysis::plan::test_plan;
+        let plan = test_plan(2);
+        let g = Graph::lower(&plan);
+        let input = 0;
+        let update = g.nodes.iter().position(|k| *k == NodeKind::Update).unwrap();
+        assert!(g.reaches(input, update));
+        assert!(!g.reaches(update, input));
+    }
+}

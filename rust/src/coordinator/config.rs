@@ -6,6 +6,8 @@
 //! delta = 2.04e-5 privacy budget, clip norm from Table A2.
 
 use crate::coordinator::batcher::BatchingMode;
+use crate::coordinator::sampler::SamplerChoice;
+use crate::privacy::AccountantKind;
 
 /// Everything needed to launch one training/benchmark run.
 #[derive(Debug, Clone)]
@@ -53,6 +55,19 @@ pub struct TrainConfig {
     /// checkpoint fingerprint (a checkpoint taken at 4 workers resumes
     /// correctly at 1). `0` is treated as 1.
     pub workers: usize,
+    /// Subsampling scheme (`--sampler poisson|shuffle`). Shuffle is the
+    /// studied shortcut: the plan audit denies it under Poisson
+    /// accounting unless `allow_unsound` is set. Changes the sampled
+    /// batches, so it IS part of the checkpoint fingerprint.
+    pub sampler: SamplerChoice,
+    /// Accountant reporting epsilon (`--accountant rdp|pld`). Reporting
+    /// only — never changes the trajectory, so it is excluded from the
+    /// checkpoint fingerprint.
+    pub accountant: AccountantKind,
+    /// Run even when the plan audit raises Deny diagnostics
+    /// (`--allow-unsound`); the TrainReport and every checkpoint are
+    /// then stamped `unaudited`.
+    pub allow_unsound: bool,
 }
 
 impl Default for TrainConfig {
@@ -74,6 +89,9 @@ impl Default for TrainConfig {
             seed: 0,
             eval_examples: 256,
             workers: 1,
+            sampler: SamplerChoice::Poisson,
+            accountant: AccountantKind::Rdp,
+            allow_unsound: false,
         }
     }
 }
@@ -102,6 +120,9 @@ mod tests {
         assert_eq!(c.target_epsilon, 8.0);
         assert!(c.is_private());
         assert_eq!(c.expected_logical_batch(), 1024.0);
+        assert_eq!(c.sampler, SamplerChoice::Poisson);
+        assert_eq!(c.accountant, AccountantKind::Rdp);
+        assert!(!c.allow_unsound);
     }
 
     #[test]

@@ -18,6 +18,38 @@
 //! batch sizes" (Section 2.1).
 
 use crate::util::rng::ChaChaRng;
+use anyhow::{anyhow, Result};
+
+/// Which subsampling scheme a run uses (`dpshort train --sampler`).
+/// Shuffle is the studied shortcut: executable for the ablation, but
+/// the plan audit raises a Deny-severity `accountant.shortcut-epsilon`
+/// diagnostic when it is paired with Poisson (RDP/PLD) accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplerChoice {
+    /// Exact Poisson subsampling (the accounted mechanism; default).
+    Poisson,
+    /// Shuffle-once-per-epoch fixed-size batches (the shortcut).
+    Shuffle,
+}
+
+impl SamplerChoice {
+    /// Parse a CLI name (`poisson` | `shuffle`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "poisson" => Some(Self::Poisson),
+            "shuffle" => Some(Self::Shuffle),
+            _ => None,
+        }
+    }
+
+    /// The CLI / report name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Poisson => "poisson",
+            Self::Shuffle => "shuffle",
+        }
+    }
+}
 
 /// A subsampling scheme producing the logical batch for each step.
 pub trait Sampler {
@@ -160,6 +192,58 @@ impl Sampler for ShuffleSampler {
     }
 }
 
+/// The configured sampler as one concrete type the trainer can own.
+#[derive(Debug, Clone)]
+pub enum AnySampler {
+    /// Exact Poisson subsampling.
+    Poisson(PoissonSampler),
+    /// The shuffle shortcut.
+    Shuffle(ShuffleSampler),
+}
+
+impl AnySampler {
+    /// Build the configured sampler from the run parameters: `n`
+    /// dataset size, `q` sampling rate, `seed` the experiment seed. The
+    /// shuffle batch size is `round(q * n)` clamped to `[1, n]` — the
+    /// same expected logical batch the Poisson path targets, which is
+    /// exactly what makes the shortcut comparison apples-to-apples.
+    pub fn from_config(choice: SamplerChoice, n: u32, q: f64, seed: u64) -> Result<Self> {
+        match choice {
+            SamplerChoice::Poisson => Ok(Self::Poisson(PoissonSampler::new(n, q, seed))),
+            SamplerChoice::Shuffle => {
+                if n == 0 {
+                    return Err(anyhow!("shuffle sampler needs a non-empty dataset"));
+                }
+                let batch = ((f64::from(n) * q).round() as u32).clamp(1, n);
+                Ok(Self::Shuffle(ShuffleSampler::new(n, batch, seed)))
+            }
+        }
+    }
+}
+
+impl Sampler for AnySampler {
+    fn sample(&self, step: u64) -> Vec<u32> {
+        match self {
+            Self::Poisson(s) => s.sample(step),
+            Self::Shuffle(s) => s.sample(step),
+        }
+    }
+
+    fn expected_batch_size(&self) -> f64 {
+        match self {
+            Self::Poisson(s) => s.expected_batch_size(),
+            Self::Shuffle(s) => s.expected_batch_size(),
+        }
+    }
+
+    fn poisson_rate(&self) -> Option<f64> {
+        match self {
+            Self::Poisson(s) => s.poisson_rate(),
+            Self::Shuffle(s) => s.poisson_rate(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -245,6 +329,31 @@ mod tests {
         assert_eq!(s.sample(10).len(), 5);
         assert_eq!(s.sample(11).len(), 10); // next epoch restarts
         assert!((s.expected_batch_size() - 105.0 / 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampler_choice_round_trips() {
+        for c in [SamplerChoice::Poisson, SamplerChoice::Shuffle] {
+            assert_eq!(SamplerChoice::parse(c.as_str()), Some(c));
+        }
+        assert_eq!(SamplerChoice::parse("sequential"), None);
+    }
+
+    #[test]
+    fn any_sampler_delegates_to_the_chosen_scheme() {
+        let p = AnySampler::from_config(SamplerChoice::Poisson, 1000, 0.3, 1).unwrap();
+        assert_eq!(p.sample(0), PoissonSampler::new(1000, 0.3, 1).sample(0));
+        assert_eq!(p.poisson_rate(), Some(0.3));
+
+        let s = AnySampler::from_config(SamplerChoice::Shuffle, 100, 0.1, 5).unwrap();
+        assert_eq!(s.sample(3), ShuffleSampler::new(100, 10, 5).sample(3));
+        assert!(s.poisson_rate().is_none());
+        assert_eq!(s.expected_batch_size(), 10.0);
+
+        // Batch derivation clamps to [1, n]; empty datasets are an error.
+        let tiny = AnySampler::from_config(SamplerChoice::Shuffle, 4, 0.01, 0).unwrap();
+        assert_eq!(tiny.sample(0).len(), 1);
+        assert!(AnySampler::from_config(SamplerChoice::Shuffle, 0, 0.5, 0).is_err());
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //! `donate_argnums` analogue) and exposes:
 //!
 //! * [`TrainSession::step`] — one optimizer step:
-//!   1. **sample**  — one *global* Poisson draw ([`PoissonSampler`]);
-//!                    never per-rank subsampling, whatever `workers` is
+//!   1. **sample**  — one *global* draw from the configured
+//!                    [`AnySampler`] (Poisson by default); never
+//!                    per-rank subsampling, whatever `workers` is
 //!   2. **plan**    — decompose into accumulation groups
 //!                    ([`plan_groups`]): `physical_batch`-aligned
 //!                    slices of the logical batch (masked mode =
@@ -26,7 +27,9 @@
 //!   5. **apply**   — rank 0 runs `apply` (noise + SGD step) and
 //!                    broadcasts the new parameters to the other ranks
 //!                    through the `read_params`/`write_params` seam
-//!   6. **account** — record the (q, sigma) step in the RDP accountant
+//!   6. **account** — record the (q, sigma) step; epsilon is reported
+//!                    by the configured accountant (RDP streaming, or
+//!                    PLD priced at finish)
 //! * [`TrainSession::eval`] — held-out evaluation at the current
 //!   parameters (mid-run cadence or final; rank 0 only).
 //! * [`TrainSession::checkpoint`] / [`TrainSession::resume`] — the
@@ -63,11 +66,11 @@
 use crate::cluster::parallel::{plan_groups, reduce_fixed_tree, run_groups, ChunkRun};
 use crate::coordinator::batcher::{BatchingMode, PhysicalBatch};
 use crate::coordinator::config::TrainConfig;
-use crate::coordinator::sampler::{PoissonSampler, Sampler};
+use crate::coordinator::sampler::{AnySampler, Sampler};
 use crate::data::SyntheticDataset;
 use crate::metrics::{Summary, ThroughputMeter};
 use crate::privacy::rdp::StreamingAccountant;
-use crate::privacy::{calibrate_sigma, RdpAccountant};
+use crate::privacy::{calibrate_sigma, pld_epsilon, AccountantKind, RdpAccountant};
 use crate::runtime::{
     AccumArgs, ApplyArgs, ExecSession, ModelRuntime, Prepared, Runtime, Tensor,
 };
@@ -159,6 +162,8 @@ pub struct TrainReport {
     pub epsilon_spent: f64,
     /// Privacy parameter delta of the accounting.
     pub delta: f64,
+    /// Accountant that priced `epsilon_spent` (`rdp` | `pld`).
+    pub accountant: String,
     /// Per-step logs, in step order (resumed steps included).
     pub steps: Vec<StepLog>,
     /// Per-section timing breakdown (see [`SectionTimes`]).
@@ -187,6 +192,10 @@ pub struct TrainReport {
     pub eval_covered: u32,
     /// (artifact, seconds) for every compilation this run caused.
     pub compiles: Vec<(String, f64)>,
+    /// True when the run executed with `--allow-unsound` past Deny
+    /// audit diagnostics (or resumed from a checkpoint that did): the
+    /// reported epsilon carries no static-audit backing.
+    pub unaudited: bool,
     /// Flat parameter vector after the final step (checkpointable via
     /// [`ModelRuntime::save_params`]).
     pub final_params: Vec<f32>,
@@ -222,6 +231,13 @@ pub struct TrainCheckpoint {
     /// Per-step logs of the completed steps (so the finished report is
     /// identical to an uninterrupted run's).
     pub steps: Vec<StepLog>,
+    /// The run that took this checkpoint executed past Deny audit
+    /// diagnostics (`--allow-unsound`). Sticky: resuming propagates it
+    /// into the session and the final report. `serde(default)` keeps
+    /// pre-audit checkpoints loading (they audited clean or predate
+    /// the auditor).
+    #[serde(default)]
+    pub unaudited: bool,
 }
 
 impl TrainCheckpoint {
@@ -238,8 +254,10 @@ impl TrainCheckpoint {
 }
 
 /// Resolve the noise multiplier for a config: explicit, or calibrated
-/// to the (epsilon, delta) target (paper Table A2 style).
-fn resolve_sigma(config: &TrainConfig) -> Result<f64> {
+/// to the (epsilon, delta) target (paper Table A2 style). Public so
+/// `dpshort audit` prices the plan with exactly the sigma the trainer
+/// will execute.
+pub fn resolve_sigma(config: &TrainConfig) -> Result<f64> {
     if !config.is_private() {
         return Ok(0.0);
     }
@@ -270,16 +288,20 @@ fn dtype_of(config: &TrainConfig) -> &'static str {
 /// Deliberately **excludes** `workers` (and the kernel thread count):
 /// both are wall-clock knobs whose trajectories are bitwise-identical,
 /// so a checkpoint taken at 4 workers must resume at 1 (and vice
-/// versa). Tag history: `v2` redefined the step's accumulation
-/// semantics (fixed-tree group reduction, DESIGN.md §8); `v3` is the
-/// layered model IR (DESIGN.md §9) — the flat parameter vector is now
-/// laid out by the model's `LayerPlan` (per-layer `[W | b]` blocks)
-/// and the variant set grew the executed `perex`/`mix` graphs, so a
-/// `v2` checkpoint's params may describe a different layout and must
-/// not silently continue under the new one.
+/// versa). The accountant is likewise excluded: it changes the
+/// *reported* epsilon, never a sampled batch or parameter bit. Tag
+/// history: `v2` redefined the step's accumulation semantics
+/// (fixed-tree group reduction, DESIGN.md §8); `v3` is the layered
+/// model IR (DESIGN.md §9) — the flat parameter vector is now laid out
+/// by the model's `LayerPlan` (per-layer `[W | b]` blocks) and the
+/// variant set grew the executed `perex`/`mix` graphs, so a `v2`
+/// checkpoint's params may describe a different layout and must not
+/// silently continue under the new one; `v4` adds the sampler choice —
+/// shuffle and Poisson draw *different logical batches* from the same
+/// seed, so a checkpoint must never resume under the other scheme.
 fn config_fingerprint(config: &TrainConfig, sigma: f64) -> String {
     format!(
-        "v3|{}|{}|{:?}|{}|N={}|q={:?}|B={}|lr={:?}|C={:?}|sigma={:?}|seed={}",
+        "v4|{}|{}|{:?}|{}|N={}|q={:?}|B={}|lr={:?}|C={:?}|sigma={:?}|seed={}|sampler={}",
         config.model,
         config.variant,
         config.mode,
@@ -291,6 +313,7 @@ fn config_fingerprint(config: &TrainConfig, sigma: f64) -> String {
         config.clip_norm,
         sigma,
         config.seed,
+        config.sampler.as_str(),
     )
 }
 
@@ -449,10 +472,15 @@ pub struct TrainSession<'rt> {
     /// accumulation phase of a step and receives the parameter
     /// broadcast after every apply.
     peers: Vec<Box<dyn ExecSession + 'rt>>,
-    sampler: PoissonSampler,
+    sampler: AnySampler,
     /// Batch sizes lowered for (variant, dtype) — the Variable-mode
     /// chunking menu.
     available: Vec<usize>,
+    /// True when the plan audit raised Deny diagnostics and the run was
+    /// forced through with `allow_unsound`, or when resuming from a
+    /// checkpoint that was stamped unaudited. Sticky: propagated into
+    /// every checkpoint and the final report.
+    unaudited: bool,
     apply_prep: Prepared,
     accountant: StreamingAccountant,
     sections: SectionTimes,
@@ -512,7 +540,12 @@ impl<'rt> TrainSession<'rt> {
         if config.physical_batch == 0 {
             return Err(anyhow!("physical batch size must be positive"));
         }
-        let sampler = PoissonSampler::new(config.dataset_size, config.sampling_rate, config.seed);
+        let sampler = AnySampler::from_config(
+            config.sampler,
+            config.dataset_size,
+            config.sampling_rate,
+            config.seed,
+        )?;
         let available = model.accum_batches(&config.variant, dtype_of(&config));
         if available.is_empty() {
             return Err(anyhow!(
@@ -522,6 +555,27 @@ impl<'rt> TrainSession<'rt> {
                 dtype_of(&config)
             ));
         }
+
+        // Static plan audit (DESIGN.md §10): the run must prove — before
+        // any example is touched — that per-example gradients cross into
+        // shared state only through the global clip, that noise lands
+        // exactly once post-aggregation at sigma*C, that RNG streams are
+        // disjoint, and that the accountant matches the sampler. Deny
+        // diagnostics abort construction unless `--allow-unsound`, which
+        // instead stamps the report and every checkpoint.
+        let audit =
+            crate::analysis::audit_run(model.meta(), runtime.manifest().seed, &config, sigma)?;
+        let audit_unaudited = if audit.deny_rules().is_empty() {
+            false
+        } else if config.allow_unsound {
+            true
+        } else {
+            return Err(anyhow!(
+                "plan audit rejected this run ({}); run `dpshort audit` for details \
+                 or pass --allow-unsound to proceed with an unaudited stamp",
+                audit.deny_rules().join(", ")
+            ));
+        };
 
         let mut sections = SectionTimes::default();
         let compiled_before = runtime.compile_records().len();
@@ -538,12 +592,12 @@ impl<'rt> TrainSession<'rt> {
         sections.compile += apply_prep.compile_seconds.unwrap_or(0.0);
 
         let mut accountant = StreamingAccountant::new(RdpAccountant::default());
-        let (step, steps_log, params) = match start {
+        let (step, steps_log, params, restored_unaudited) = match start {
             None => {
                 let t0 = Instant::now();
                 let p = model.init_params()?;
                 sections.data += t0.elapsed().as_secs_f64();
-                (0, Vec::new(), p)
+                (0, Vec::new(), p, false)
             }
             Some(ckpt) => {
                 let want = config_fingerprint(&config, sigma);
@@ -587,7 +641,7 @@ impl<'rt> TrainSession<'rt> {
                         accountant.record_step(config.sampling_rate, sigma);
                     }
                 }
-                (ckpt.step, ckpt.steps, Tensor::from_vec(ckpt.params))
+                (ckpt.step, ckpt.steps, Tensor::from_vec(ckpt.params), ckpt.unaudited)
             }
         };
         // The sessions own params + accumulator from here on (the
@@ -621,6 +675,7 @@ impl<'rt> TrainSession<'rt> {
             peers,
             sampler,
             available,
+            unaudited: audit_unaudited || restored_unaudited,
             apply_prep,
             accountant,
             sections,
@@ -670,15 +725,40 @@ impl<'rt> TrainSession<'rt> {
     }
 
     /// Epsilon spent so far at the configured delta (mid-run budget
-    /// monitoring). Matches the finished report's accounting.
+    /// monitoring). Matches the finished report's accounting: the RDP
+    /// accountant composes streamingly; PLD re-prices the completed
+    /// step count on every call (both analyse the same
+    /// Poisson-subsampled Gaussian mechanism, so the step counts agree
+    /// by construction).
     pub fn epsilon_spent(&self) -> f64 {
         if !self.config.is_private() {
-            0.0
-        } else if self.sigma > 0.0 {
-            self.accountant.epsilon(self.config.delta)
-        } else {
-            f64::INFINITY
+            return 0.0;
         }
+        if self.sigma <= 0.0 {
+            return f64::INFINITY;
+        }
+        match self.config.accountant {
+            AccountantKind::Rdp => self.accountant.epsilon(self.config.delta),
+            AccountantKind::Pld => {
+                let steps = self.accountant.steps();
+                if steps == 0 {
+                    0.0
+                } else {
+                    pld_epsilon(
+                        self.config.sampling_rate,
+                        self.sigma,
+                        steps as u32,
+                        self.config.delta,
+                    )
+                }
+            }
+        }
+    }
+
+    /// Was this run (or any run in its checkpoint chain) forced past a
+    /// Deny-severity plan audit with `--allow-unsound`?
+    pub fn unaudited(&self) -> bool {
+        self.unaudited
     }
 
     /// Copy the current parameters out of the session (the checkpoint
@@ -729,6 +809,7 @@ impl<'rt> TrainSession<'rt> {
             step: self.step,
             params,
             steps: self.steps_log.clone(),
+            unaudited: self.unaudited,
         })
     }
 
@@ -928,6 +1009,7 @@ impl<'rt> TrainSession<'rt> {
             // there, never 0.
             epsilon_spent,
             delta: self.config.delta,
+            accountant: self.config.accountant.as_str().to_string(),
             steps: self.steps_log,
             sections: self.sections,
             throughput: if total > 0.0 { real / total } else { 0.0 },
@@ -943,6 +1025,7 @@ impl<'rt> TrainSession<'rt> {
             eval_accuracy,
             eval_covered,
             compiles,
+            unaudited: self.unaudited,
             final_params,
         })
     }
@@ -1044,10 +1127,16 @@ mod tests {
                 computed_examples: 24,
                 loss: 2.302_585_092_994_046,
             }],
+            unaudited: false,
         };
         let json = ckpt.to_json().unwrap();
         let back = TrainCheckpoint::from_json(&json).unwrap();
         assert_eq!(back.step, ckpt.step);
+        assert!(!back.unaudited);
+        // Pre-audit checkpoints (no `unaudited` key) still load.
+        let legacy: TrainCheckpoint =
+            serde_json::from_str(&json.replace(",\"unaudited\":false", "")).unwrap();
+        assert!(!legacy.unaudited);
         // serde_json uses ryu shortest-roundtrip formatting: every f32
         // and f64 must come back bit-exact (the resume contract).
         let bits: Vec<u32> = ckpt.params.iter().map(|f| f.to_bits()).collect();

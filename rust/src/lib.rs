@@ -72,6 +72,7 @@
 //! scaling curve, DESIGN.md §6), and `examples/scaling_study.rs`
 //! (measured curve overlaid on the cluster simulator's prediction).
 
+pub mod analysis;
 pub mod benchreport;
 pub mod clipping;
 pub mod cluster;
@@ -86,13 +87,16 @@ pub mod report;
 pub mod runtime;
 pub mod util;
 
+pub use analysis::{audit_run, AuditReport, Diagnostic, Severity};
 pub use coordinator::batcher::{BatchMemoryManager, BatchingMode, PhysicalBatch};
 pub use coordinator::config::TrainConfig;
-pub use coordinator::sampler::{PoissonSampler, Sampler, ShuffleSampler};
+pub use coordinator::sampler::{
+    AnySampler, PoissonSampler, Sampler, SamplerChoice, ShuffleSampler,
+};
 pub use coordinator::trainer::{
     SectionTimes, TrainCheckpoint, TrainReport, TrainSession, Trainer,
 };
-pub use privacy::{DpParams, RdpAccountant};
+pub use privacy::{AccountantKind, DpParams, RdpAccountant};
 pub use runtime::{
     AccumArgs, ApplyArgs, Backend, ExecSession, ReferenceBackend, Runtime, Tensor,
 };

@@ -8,6 +8,8 @@
 //! dpshort bench   [flags]              steady-state throughput sweep
 //! dpshort plan    [flags]              analytic max-batch memory planner (Fig 3 / Tab 3)
 //! dpshort account [flags]              privacy accounting / sigma calibration
+//! dpshort audit   [flags]              static plan audit (taint + rule catalog, pre-run)
+//! dpshort lint    --source             determinism source lint over rust/src
 //! dpshort scale   [flags]              multi-GPU scaling simulation (Fig 7 / A.4 / A.5)
 //! dpshort report  <fig1|fig2|fig3|table1|table2|table3|fig4|fig5|fig6|figA1|figA2|fig7|figA5|all>
 //! ```
@@ -19,14 +21,16 @@
 //! a fresh offline checkout.
 
 use anyhow::{anyhow, Result};
+use dp_shortcuts::analysis::{self, audit_hlo, lint_source, parse_allowlist};
 use dp_shortcuts::benchreport::{self, BenchReport, SweepOptions};
 use dp_shortcuts::clipping::{clip_method_variant, CLI_CLIP_METHODS};
 use dp_shortcuts::coordinator::batcher::BatchingMode;
 use dp_shortcuts::coordinator::config::TrainConfig;
-use dp_shortcuts::coordinator::trainer::TrainSession;
-use dp_shortcuts::privacy::{calibrate_sigma, RdpAccountant};
+use dp_shortcuts::coordinator::sampler::SamplerChoice;
+use dp_shortcuts::coordinator::trainer::{resolve_sigma, TrainSession};
+use dp_shortcuts::privacy::{calibrate_sigma, AccountantKind, RdpAccountant};
 use dp_shortcuts::report;
-use dp_shortcuts::runtime::Runtime;
+use dp_shortcuts::runtime::{hlo_analysis, Runtime};
 use dp_shortcuts::util::cli::Args;
 use std::path::{Path, PathBuf};
 
@@ -63,7 +67,23 @@ const USAGE: &str = "usage: dpshort <list|train|bench|plan|account|scale|report>
                 --clip-methods LIST  clip methods for the scaling sweep
                                 (default per-example,ghost)
                 --check FILE  validate an emitted file's schema and exit
+  train/audit:  --sampler poisson|shuffle  subsampling scheme (shuffle is
+                             the studied shortcut; Deny-audited under
+                             Poisson accounting)
+                --accountant rdp|pld  accountant reporting epsilon
+                             (reporting only, never the trajectory)
+                --allow-unsound  run past Deny audit diagnostics; the
+                             report and checkpoints are stamped unaudited
   account:      --rate Q --steps N --delta D [--sigma S | --epsilon E]
+  audit:        static plan audit, no example is ever touched
+                train-style flags pick the run; --json for the
+                machine-readable report; --hlo FILE folds an HLO text
+                dump into the materialization/dtype rules;
+                --ladder audits every shipped model x clip-method x
+                accountant x worker-count combination
+  lint:         --source (required) determinism lint over --root
+                (default rust/src) with --allowlist
+                (default lint-allowlist.txt)
   scale:        --model NAME --gpus LIST (e.g. 1,4,8,16,32,80)
   report:       <figure-or-table id> [--quick]";
 
@@ -113,6 +133,15 @@ fn config_from(args: &Args, rt: &Runtime) -> Result<TrainConfig> {
     c.seed = args.get_parse_or("seed", c.seed).map_err(|e| anyhow!(e))?;
     c.eval_examples = args.get_parse_or("eval", c.eval_examples).map_err(|e| anyhow!(e))?;
     c.workers = args.get_parse_or("workers", c.workers).map_err(|e| anyhow!(e))?;
+    if let Some(s) = args.get("sampler") {
+        c.sampler = SamplerChoice::parse(s)
+            .ok_or_else(|| anyhow!("unknown sampler {s:?} (poisson|shuffle)"))?;
+    }
+    if let Some(a) = args.get("accountant") {
+        c.accountant = AccountantKind::parse(a)
+            .ok_or_else(|| anyhow!("unknown accountant {a:?} (rdp|pld)"))?;
+    }
+    c.allow_unsound = args.get_bool("allow-unsound");
     if args.get_bool("naive-mode") || c.variant == "naive" {
         c.mode = BatchingMode::Variable;
     }
@@ -194,10 +223,16 @@ fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
         println!("{}", rep.to_json()?);
         return Ok(());
     }
+    if rep.unaudited {
+        eprintln!(
+            "WARNING: this run executed past Deny audit diagnostics (--allow-unsound); \
+             the reported epsilon carries no static-audit backing"
+        );
+    }
     if cfg.is_private() {
         println!(
-            "privacy: sigma={:.4}  spent eps={:.3} at delta={:.2e}",
-            rep.noise_multiplier, rep.epsilon_spent, rep.delta
+            "privacy: sigma={:.4}  spent eps={:.3} at delta={:.2e} ({} accountant)",
+            rep.noise_multiplier, rep.epsilon_spent, rep.delta, rep.accountant
         );
     }
     for s in &rep.steps {
@@ -346,6 +381,147 @@ fn cmd_account(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `dpshort audit`: statically audit the configured run before any
+/// example is touched — lower the plan exactly as `TrainSession::new`
+/// would, run the taint/rule pass, and print structured diagnostics.
+/// Exit is non-zero when any Deny-severity finding survives.
+fn cmd_audit(rt: &Runtime, args: &Args) -> Result<()> {
+    if args.get_bool("ladder") {
+        return cmd_audit_ladder(rt, args);
+    }
+    let cfg = config_from(args, rt)?;
+    let model = rt.model(&cfg.model)?;
+    let sigma = resolve_sigma(&cfg)?;
+    let mut report = analysis::audit_run(model.meta(), rt.manifest().seed, &cfg, sigma)?;
+    if let Some(hlo) = args.get("hlo") {
+        let stats = hlo_analysis::analyze_file(Path::new(hlo))?;
+        report.push_all(audit_hlo(
+            &stats,
+            cfg.physical_batch,
+            model.meta().n_params,
+            &cfg.variant,
+        ));
+    }
+    report.validate()?;
+    if args.get_bool("json") {
+        println!("{}", report.to_json()?);
+    } else {
+        println!(
+            "audit: model={} variant={} sampler={} accountant={} workers={} steps={} sigma={:.4}",
+            report.model,
+            report.variant,
+            report.sampler,
+            report.accountant,
+            report.workers,
+            report.steps,
+            report.sigma
+        );
+        for d in &report.diagnostics {
+            println!("  [{}] {} at {}: {}", d.severity, d.rule, d.location, d.message);
+        }
+    }
+    let (deny, warn, info) = report.counts();
+    if report.is_clean() {
+        // Keep --json output strictly machine-readable.
+        if !args.get_bool("json") {
+            println!("audit clean: 0 deny, {warn} warn, {info} info");
+        }
+        Ok(())
+    } else {
+        Err(anyhow!(
+            "audit rejected the plan: {deny} deny ({}), {warn} warn; \
+             `dpshort train --allow-unsound` runs it anyway with an unaudited stamp",
+            report.deny_rules().join(", ")
+        ))
+    }
+}
+
+/// `dpshort audit --ladder`: every shipped model x clip method x
+/// accountant x worker count must lower to a Deny-free plan (the CI
+/// gate that keeps the catalog and the trainer in lockstep).
+fn cmd_audit_ladder(rt: &Runtime, args: &Args) -> Result<()> {
+    let models: Vec<String> = rt.manifest().models.keys().cloned().collect();
+    let mut audited = 0usize;
+    let mut rejected = Vec::new();
+    for model_name in &models {
+        let model = rt.model(model_name)?;
+        for (method, variant) in CLI_CLIP_METHODS {
+            for accountant in [AccountantKind::Rdp, AccountantKind::Pld] {
+                for workers in [1usize, 2] {
+                    let cfg = TrainConfig {
+                        model: model_name.clone(),
+                        variant: (*variant).to_string(),
+                        accountant,
+                        workers,
+                        ..config_from(args, rt)?
+                    };
+                    let sigma = resolve_sigma(&cfg)?;
+                    let report =
+                        analysis::audit_run(model.meta(), rt.manifest().seed, &cfg, sigma)?;
+                    report.validate()?;
+                    audited += 1;
+                    if !report.is_clean() {
+                        rejected.push(format!(
+                            "{model_name}/{method}/{}/w{workers}: {}",
+                            accountant.as_str(),
+                            report.deny_rules().join(", ")
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    if rejected.is_empty() {
+        println!(
+            "ladder audit clean: {audited} combinations over {} models",
+            models.len()
+        );
+        Ok(())
+    } else {
+        Err(anyhow!(
+            "ladder audit rejected {} combinations:\n  {}",
+            rejected.len(),
+            rejected.join("\n  ")
+        ))
+    }
+}
+
+/// `dpshort lint --source`: the determinism lint over the crate source
+/// (see `analysis::source_lint`). Exit is non-zero on any finding that
+/// survives the allowlist.
+fn cmd_lint(args: &Args) -> Result<()> {
+    if !args.get_bool("source") {
+        return Err(anyhow!("lint needs --source (the only implemented pass)"));
+    }
+    let root = args.get_or("root", "rust/src").to_string();
+    let allow_path = args.get_or("allowlist", "lint-allowlist.txt").to_string();
+    // A missing allowlist is an empty one (fresh checkouts stay usable).
+    let allow = match std::fs::read_to_string(&allow_path) {
+        Ok(text) => parse_allowlist(&text),
+        Err(_) => Vec::new(),
+    };
+    let rep = lint_source(Path::new(&root), &allow)?;
+    for f in &rep.findings {
+        println!("  [{}] {}:{}: {}", f.rule, f.path, f.line, f.text.trim());
+        println!("      {}", f.why);
+    }
+    println!(
+        "lint: {} files, {} findings, {} allowlisted, {} inline-suppressed",
+        rep.files_scanned,
+        rep.findings.len(),
+        rep.allowed,
+        rep.suppressed
+    );
+    if rep.findings.is_empty() {
+        Ok(())
+    } else {
+        Err(anyhow!(
+            "{} lint finding(s); fix them or add a justified entry to {allow_path}",
+            rep.findings.len()
+        ))
+    }
+}
+
 fn cmd_scale(rt: &Runtime, args: &Args) -> Result<()> {
     let gpus: Vec<usize> = args
         .get_or("gpus", "1,2,4,8,16,32,64,80")
@@ -362,8 +538,11 @@ fn cmd_scale(rt: &Runtime, args: &Args) -> Result<()> {
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&raw, &["bf16", "naive-mode", "quick", "help", "json"])
-        .map_err(|e| anyhow!(e))?;
+    let args = Args::parse(
+        &raw,
+        &["bf16", "naive-mode", "quick", "help", "json", "allow-unsound", "source", "ladder"],
+    )
+    .map_err(|e| anyhow!(e))?;
     if args.positional.is_empty() || args.get_bool("help") {
         println!("{USAGE}");
         return Ok(());
@@ -374,6 +553,7 @@ fn main() -> Result<()> {
     // Commands that don't need the runtime:
     match cmd {
         "account" => return cmd_account(&args),
+        "lint" => return cmd_lint(&args),
         "bench" if args.get("check").is_some() => {
             return cmd_bench_check(args.get("check").unwrap())
         }
@@ -389,6 +569,7 @@ fn main() -> Result<()> {
     match cmd {
         "list" => cmd_list(&rt),
         "train" => cmd_train(&rt, &args),
+        "audit" => cmd_audit(&rt, &args),
         "bench" => cmd_bench(&rt, &args),
         "scale" => cmd_scale(&rt, &args),
         "report" => {

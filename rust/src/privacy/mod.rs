@@ -24,6 +24,42 @@ pub use calibrate::calibrate_sigma;
 pub use pld::{pld_epsilon, Pld};
 pub use rdp::RdpAccountant;
 
+/// Which accountant reports epsilon for a run (`dpshort train
+/// --accountant rdp|pld`). Both analyse the *Poisson*-subsampled
+/// Gaussian mechanism, so the sampler↔accountant audit rule
+/// (`accountant.shortcut-epsilon`) rejects either of them over a
+/// shuffle sampler. Deliberately excluded from the checkpoint
+/// fingerprint: the accountant changes the *reported* epsilon, never
+/// the trajectory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccountantKind {
+    /// Rényi-DP composition + the Balle et al. conversion (the
+    /// Opacus / TensorFlow-Privacy default pipeline).
+    Rdp,
+    /// Privacy-loss-distribution (Fourier) accounting — tighter bounds
+    /// for the same mechanism, priced once at `finish()`.
+    Pld,
+}
+
+impl AccountantKind {
+    /// Parse a CLI name (`rdp` | `pld`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rdp" => Some(Self::Rdp),
+            "pld" => Some(Self::Pld),
+            _ => None,
+        }
+    }
+
+    /// The CLI / report name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Rdp => "rdp",
+            Self::Pld => "pld",
+        }
+    }
+}
+
 /// The (mechanism-level) parameters of one DP-SGD run.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DpParams {

@@ -16,7 +16,7 @@
 //! result dtype/shape of each instruction.
 
 use anyhow::{Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
 
 /// Summary of one HLO module's tensor population.
@@ -31,21 +31,30 @@ pub struct HloStats {
     pub largest_tensor_shape: String,
     /// All distinct result shapes (dims only) and their counts.
     pub shapes: BTreeMap<Vec<u64>, usize>,
+    /// Dtypes [`dtype_bytes`] did not recognize. Their tensors are
+    /// priced at 4 bytes/element in the totals; `dpshort audit` turns
+    /// a non-empty set into a `dtype.unknown` diagnostic instead of
+    /// letting the assumption stay silent.
+    pub unknown_dtypes: BTreeSet<String>,
 }
 
-fn dtype_bytes(ty: &str) -> u64 {
+/// Element width of an HLO dtype, or `None` for dtypes the memory
+/// model does not know (callers decide how to surface the gap; the
+/// analyzer's totals fall back to 4 bytes and record the name in
+/// [`HloStats::unknown_dtypes`]).
+pub fn dtype_bytes(ty: &str) -> Option<u64> {
     match ty {
-        "f64" | "s64" | "u64" | "c64" => 8,
-        "f32" | "s32" | "u32" => 4,
-        "f16" | "bf16" | "s16" | "u16" => 2,
-        "s8" | "u8" | "pred" => 1,
-        _ => 4,
+        "f64" | "s64" | "u64" | "c64" => Some(8),
+        "f32" | "s32" | "u32" => Some(4),
+        "f16" | "bf16" | "s16" | "u16" => Some(2),
+        "s8" | "u8" | "pred" => Some(1),
+        _ => None,
     }
 }
 
-/// Parse ` f32[16,120100]{...}` -> (elem_bytes, dims). Returns None for
-/// tuple/opaque/token results.
-fn parse_shape(s: &str) -> Option<(u64, Vec<u64>)> {
+/// Parse ` f32[16,120100]{...}` -> (elem_bytes, dims, dtype). Returns
+/// None for tuple/opaque/token results.
+fn parse_shape(s: &str) -> Option<(u64, Vec<u64>, String)> {
     let s = s.trim_start();
     let bracket = s.find('[')?;
     let ty = &s[..bracket];
@@ -62,7 +71,7 @@ fn parse_shape(s: &str) -> Option<(u64, Vec<u64>)> {
             .map(|d| d.trim().parse::<u64>().ok())
             .collect::<Option<_>>()?
     };
-    Some((dtype_bytes(ty), dims))
+    Some((dtype_bytes(ty).unwrap_or(4), dims, ty.to_string()))
 }
 
 /// Analyze an HLO text module.
@@ -73,6 +82,7 @@ pub fn analyze(text: &str) -> HloStats {
         largest_tensor_bytes: 0,
         largest_tensor_shape: String::new(),
         shapes: BTreeMap::new(),
+        unknown_dtypes: BTreeSet::new(),
     };
     for line in text.lines() {
         let line = line.trim_start();
@@ -93,7 +103,10 @@ pub fn analyze(text: &str) -> HloStats {
             continue;
         }
         let rhs = &rest[eq + 3..];
-        let Some((bytes_per, dims)) = parse_shape(rhs) else { continue };
+        let Some((bytes_per, dims, ty)) = parse_shape(rhs) else { continue };
+        if dtype_bytes(&ty).is_none() {
+            stats.unknown_dtypes.insert(ty);
+        }
         // opcode: token after the shape's layout annotation
         let after_shape = rhs
             .find(' ')
@@ -189,5 +202,23 @@ ENTRY main.5 {
     fn ignores_non_instruction_lines() {
         let s = analyze("HloModule foo\n\nsome comment\n");
         assert_eq!(s.total_tensor_bytes, 0);
+    }
+
+    #[test]
+    fn known_dtypes_leave_the_unknown_set_empty() {
+        assert!(analyze(SAMPLE).unknown_dtypes.is_empty());
+        assert_eq!(dtype_bytes("bf16"), Some(2));
+        assert_eq!(dtype_bytes("q8"), None);
+    }
+
+    #[test]
+    fn unknown_dtypes_are_recorded_not_silently_priced() {
+        let s = analyze("ENTRY e {\n  %q = q8[8]{0} custom-call(%p)\n  %f = f32[2]{0} add(%a, %b)\n}\n");
+        assert_eq!(
+            s.unknown_dtypes.iter().collect::<Vec<_>>(),
+            vec![&"q8".to_string()]
+        );
+        // Totals still count the unknown tensor at the 4-byte fallback.
+        assert_eq!(s.total_tensor_bytes, 8 * 4 + 2 * 4);
     }
 }

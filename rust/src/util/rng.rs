@@ -5,14 +5,34 @@
 //! the design translates directly).
 //!
 //! The implementation follows RFC 7539's block function; we use the
-//! 32-byte seed as the key, a zero nonce, and the 32-bit block counter,
-//! giving 2^38 bytes per stream — far beyond any run here.
+//! 32-byte seed as the key and widen the block counter to 64 bits by
+//! also occupying the first nonce word (words 12 and 13 of the state;
+//! the remaining nonce words stay zero), giving
+//! [`STREAM_CAPACITY_BYTES`] = 2^70 bytes per stream. The counter
+//! originally stopped at 32 bits and `refill()` *wrapped*, silently
+//! replaying the keystream after [`LEGACY_STREAM_CAPACITY_BYTES`] =
+//! 2^38 bytes — enough for every shipped ladder model, but a silent
+//! correctness cliff at scale. Exhausting even the widened counter is
+//! now a hard panic instead of a wrap, and `dpshort audit` flags runs
+//! whose largest statically-predicted stream draw crosses either bound
+//! (`stream.exhaustion` / `stream.legacy-exhaustion`). Streams with
+//! counter < 2^32 emit bitwise-identical keystream to the old
+//! generator (word 13 was always zero there), so every pinned seeded
+//! artifact is unchanged.
+
+/// Keystream bytes one `(seed, stream, label)` key can produce with the
+/// 64-bit block counter: 2^64 blocks of 64 bytes.
+pub const STREAM_CAPACITY_BYTES: u128 = (u64::MAX as u128 + 1) * 64;
+
+/// Keystream bytes before the pre-widening 32-bit counter wrapped
+/// (2^32 blocks of 64 bytes = 2^38): the old silent-replay bound.
+pub const LEGACY_STREAM_CAPACITY_BYTES: u128 = (u32::MAX as u128 + 1) * 64;
 
 /// ChaCha20-based deterministic RNG.
 #[derive(Debug, Clone)]
 pub struct ChaChaRng {
     key: [u32; 8],
-    counter: u32,
+    counter: u64,
     buf: [u32; 16],
     /// Next unread word in `buf` (16 = exhausted).
     pos: usize,
@@ -66,8 +86,11 @@ impl ChaChaRng {
         let mut state = [0u32; 16];
         state[..4].copy_from_slice(&Self::SIGMA);
         state[4..12].copy_from_slice(&self.key);
-        state[12] = self.counter;
-        // words 13..16 are the zero nonce
+        state[12] = self.counter as u32;
+        // Counter high word lives in the first nonce word; words 14..16
+        // stay zero. For counter < 2^32 this is bitwise-identical to
+        // the original 32-bit-counter + zero-nonce layout.
+        state[13] = (self.counter >> 32) as u32;
         let initial = state;
         for _ in 0..10 {
             // column rounds
@@ -85,7 +108,12 @@ impl ChaChaRng {
             *o = o.wrapping_add(i);
         }
         self.buf = state;
-        self.counter = self.counter.wrapping_add(1);
+        // Exhaustion is a hard error, never a silent keystream replay
+        // (the pre-widening u32 counter wrapped here after 2^38 bytes).
+        self.counter = self
+            .counter
+            .checked_add(1)
+            .expect("ChaCha stream exhausted: 2^70 bytes drawn from one (seed, stream, label)");
         self.pos = 0;
     }
 
@@ -318,6 +346,33 @@ mod tests {
         let var = buf.iter().map(|&z| (z as f64) * (z as f64)).sum::<f64>() / n - mean * mean;
         assert!(mean.abs() < 0.02, "mean {mean}");
         assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn counter_widening_preserves_low_blocks_and_fixes_the_wrap() {
+        // Below 2^32 blocks the widened counter must emit the exact
+        // keystream the old 32-bit-counter generator did (state word 13
+        // is zero there) — pinned by the zero-key known answer above
+        // and by cross-block continuity here.
+        let mut a = ChaChaRng::from_seed_stream(17, 4, b"widen\0\0\0");
+        let first_block: Vec<u32> = (0..16).map(|_| a.next_u32()).collect();
+
+        // Regression: the old refill() wrapped the u32 counter, so
+        // block index 2^32 replayed block 0's keystream byte for byte.
+        // With the widened counter it must differ (and not panic).
+        let mut b = ChaChaRng::from_seed_stream(17, 4, b"widen\0\0\0");
+        b.counter = u64::from(u32::MAX) + 1; // the first once-wrapped block
+        b.pos = 16; // force a refill on the next draw
+        let wrapped_block: Vec<u32> = (0..16).map(|_| b.next_u32()).collect();
+        assert_ne!(
+            first_block, wrapped_block,
+            "block 2^32 replayed block 0: the counter wrapped"
+        );
+        assert_eq!(b.counter, u64::from(u32::MAX) + 2, "counter advanced past 2^32");
+
+        // Capacity constants match the counter widths.
+        assert_eq!(STREAM_CAPACITY_BYTES, 1u128 << 70);
+        assert_eq!(LEGACY_STREAM_CAPACITY_BYTES, 1u128 << 38);
     }
 
     #[test]
