@@ -47,6 +47,8 @@ pub mod rule {
     pub const SHORTCUT_EPSILON: &str = "accountant.shortcut-epsilon";
     /// Plan subsamples per rank instead of one global draw per step.
     pub const SAMPLER_PER_RANK: &str = "sampler.per-rank";
+    /// Retry policy re-samples the mask or re-draws noise on step retry.
+    pub const RETRY_FRESH_DRAW: &str = "retry.fresh-draw";
     /// Reduction is not the schedule-invariant fixed binary tree.
     pub const REDUCE_SCHEDULE: &str = "reduce.schedule";
     /// A no-materialization variant materializes per-example grads.
@@ -157,6 +159,11 @@ pub const RULES: &[RuleInfo] = &[
         id: rule::SAMPLER_PER_RANK,
         severity: Severity::Deny,
         summary: "per-rank subsampling instead of one global draw per step",
+    },
+    RuleInfo {
+        id: rule::RETRY_FRESH_DRAW,
+        severity: Severity::Deny,
+        summary: "step retry re-samples the Poisson mask or advances the noise stream (conditions the draw on failures, breaking both the accounted sampling distribution and bitwise recovery)",
     },
     RuleInfo {
         id: rule::REDUCE_SCHEDULE,

@@ -34,7 +34,7 @@ pub use diag::{
 };
 pub use plan::{
     test_plan, variant_claims_no_materialization, ClipKind, ClipSpec, NoiseSite, NoiseStage,
-    ReductionSpec, RunPlan, SamplerInfo,
+    ReductionSpec, RetrySpec, RunPlan, SamplerInfo,
 };
 pub use rules::{audit_hlo, audit_plan, audit_plan_graph};
 pub use source_lint::{

@@ -78,6 +78,20 @@ pub struct ReductionSpec {
     pub worker_dependent: bool,
 }
 
+/// What a failed step's retry replays (DESIGN.md §11). The contract:
+/// a retry recomputes the *same* step — same Poisson mask, same noise
+/// `(seed, stream)` tuple — so recovery is bitwise-identical and the
+/// accounted sampling distribution is untouched. Re-drawing either on
+/// retry conditions the published draw on failure events, which breaks
+/// both properties (the retry analogue of the shuffle shortcut).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetrySpec {
+    /// Whether a retry re-samples the per-step Poisson mask.
+    pub resample_on_retry: bool,
+    /// Whether a retry advances to a fresh noise stream.
+    pub fresh_noise_on_retry: bool,
+}
+
 /// The audited description of one run.
 #[derive(Debug, Clone)]
 pub struct RunPlan {
@@ -108,6 +122,8 @@ pub struct RunPlan {
     pub accountant: AccountantKind,
     /// Reduction topology.
     pub reduction: ReductionSpec,
+    /// What a step retry replays.
+    pub retry: RetrySpec,
     /// Statically enumerated RNG stream uses.
     pub streams: Vec<StreamUse>,
     /// Data-parallel worker count.
@@ -183,6 +199,13 @@ impl RunPlan {
             sampler,
             accountant: config.accountant,
             reduction: ReductionSpec { fixed_tree: true, worker_dependent: false },
+            // The executor always replays the same draw on retry; the
+            // unsound knob below exists so the auditor has something
+            // real to deny (mirrors `--sampler shuffle`).
+            retry: RetrySpec {
+                resample_on_retry: config.retry.fresh_draw_on_retry,
+                fresh_noise_on_retry: config.retry.fresh_draw_on_retry,
+            },
             streams,
             workers: config.workers.max(1),
             steps: config.steps,
@@ -218,6 +241,7 @@ pub fn test_plan(k: usize) -> RunPlan {
         },
         accountant: AccountantKind::Rdp,
         reduction: ReductionSpec { fixed_tree: true, worker_dependent: false },
+        retry: RetrySpec { resample_on_retry: false, fresh_noise_on_retry: false },
         streams: Vec::new(),
         workers: 1,
         steps: 4,
@@ -273,6 +297,20 @@ mod tests {
             .streams
             .iter()
             .any(|s| s.purpose == "init.params" && s.seed == 7));
+    }
+
+    #[test]
+    fn retry_spec_lowers_from_the_config_knob() {
+        let sound = TrainConfig { model: "t".into(), ..Default::default() };
+        let plan = RunPlan::lower(&meta(), 0, &sound, 1.0).unwrap();
+        assert!(!plan.retry.resample_on_retry);
+        assert!(!plan.retry.fresh_noise_on_retry);
+
+        let mut unsound = sound;
+        unsound.retry.fresh_draw_on_retry = true;
+        let plan = RunPlan::lower(&meta(), 0, &unsound, 1.0).unwrap();
+        assert!(plan.retry.resample_on_retry);
+        assert!(plan.retry.fresh_noise_on_retry);
     }
 
     #[test]

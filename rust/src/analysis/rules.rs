@@ -22,6 +22,7 @@ pub fn audit_plan_graph(plan: &RunPlan, g: &Graph) -> AuditReport {
     check_noise(plan, g, &mut d);
     check_streams(plan, &mut d);
     check_accounting(plan, &mut d);
+    check_retry(plan, &mut d);
     check_topology(plan, g, &mut d);
     check_materialization(plan, g, &mut d);
     check_dtypes(plan, &mut d);
@@ -256,6 +257,34 @@ fn check_accounting(plan: &RunPlan, d: &mut Vec<Diagnostic>) {
     }
 }
 
+/// (c, continued) A step retry must replay the step it failed on: same
+/// Poisson mask, same noise `(seed, stream)` tuple (DESIGN.md §11).
+/// Re-drawing either conditions the published randomness on failure
+/// events — the accounted sampling distribution no longer holds (the
+/// retry analogue of the shortcut epsilon) and recovery stops being
+/// bitwise-identical to the fault-free run.
+fn check_retry(plan: &RunPlan, d: &mut Vec<Diagnostic>) {
+    if plan.retry.resample_on_retry {
+        d.push(Diagnostic::new(
+            rule::RETRY_FRESH_DRAW,
+            "plan.retry",
+            "the retry policy re-samples the per-step Poisson mask on step retry; the \
+             accountant prices one draw per step, so conditioning a fresh draw on a failure \
+             changes the sampling distribution it analysed (and the recovered trajectory \
+             diverges from the fault-free run)",
+        ));
+    }
+    if plan.retry.fresh_noise_on_retry {
+        d.push(Diagnostic::new(
+            rule::RETRY_FRESH_DRAW,
+            "plan.retry.noise",
+            "the retry policy advances the noise stream on step retry; a retried step must \
+             reuse the same (seed, stream) noise tuple or the epsilon spend no longer \
+             describes the mechanism that ran (one noise draw priced, two consumed)",
+        ));
+    }
+}
+
 /// (d) The reduction must be schedule-invariant.
 fn check_topology(plan: &RunPlan, g: &Graph, d: &mut Vec<Diagnostic>) {
     if plan.reduction.worker_dependent {
@@ -364,6 +393,20 @@ mod tests {
         report.validate().unwrap();
         assert!(report.is_clean(), "diags: {:?}", report.diagnostics);
         assert_eq!(report.counts(), (0, 0, 0));
+    }
+
+    #[test]
+    fn fresh_draw_on_retry_is_denied() {
+        let mut plan = test_plan(2);
+        plan.retry.resample_on_retry = true;
+        let report = audit_plan(&plan);
+        report.validate().unwrap();
+        assert!(report.deny_rules().contains(&rule::RETRY_FRESH_DRAW));
+
+        let mut noise = test_plan(2);
+        noise.retry.fresh_noise_on_retry = true;
+        let report = audit_plan(&noise);
+        assert!(report.deny_rules().contains(&rule::RETRY_FRESH_DRAW));
     }
 
     #[test]

@@ -32,5 +32,8 @@ pub mod simulator;
 
 pub use allreduce::{ring_allreduce_seconds, Interconnect};
 pub use amdahl::{amdahl_speedup, fit_parallel_fraction};
-pub use parallel::{plan_groups, reduce_fixed_tree, run_groups, shard_ranges, GroupPlan};
+pub use parallel::{
+    plan_groups, reduce_fixed_tree, run_groups, shard_ranges, GroupPlan, RecoveryEvent, StepRuns,
+    WorkerFailure, WorkerFailureKind,
+};
 pub use simulator::{ClusterSim, ScalingPoint};

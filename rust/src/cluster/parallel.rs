@@ -34,6 +34,24 @@
 //! order, so timing jitter can never reorder anything that feeds the
 //! model state, the loss log, or the privacy accounting.
 //!
+//! ## Fault tolerance (DESIGN.md §11)
+//!
+//! Worker failures never propagate as panics: each group runs under
+//! `catch_unwind`, and both panics and errors surface as a typed
+//! [`WorkerFailure`] carrying the failing rank, step, and group. A
+//! failed group is then **re-run on a surviving session** under the
+//! configured [`RetryPolicy`] (bounded attempts, exponential backoff).
+//! Recovery is bitwise-lossless because a group's partial is a pure
+//! function of the step's parameters and the group's examples — every
+//! session holds identical parameters during the accumulation phase,
+//! so *any* rank reproduces the exact bits — and the fixed-tree
+//! reduction pairs by group index, not by rank. A rank whose thread
+//! panicked is treated as **permanently lost** ([`StepRuns::lost_ranks`]):
+//! the trainer drops its session and continues on the smaller pool,
+//! again bitwise-identically. Only when every rank is lost, or a
+//! group's retry budget is exhausted, does the step abort — with the
+//! typed failure, never a panic.
+//!
 //! Memory profile: the coordinator holds one P-length partial per
 //! group (`k = ceil(E[L] / B)`) until the reduction — ~2 MB at this
 //! repo's reference scale, deliberate and documented. A device-resident
@@ -43,9 +61,13 @@
 //! paper-scale model's partials would live.
 
 use crate::coordinator::batcher::{BatchMemoryManager, BatchingMode, PhysicalBatch};
+use crate::coordinator::config::RetryPolicy;
 use crate::runtime::{ExecSession, Tensor};
 use anyhow::{anyhow, Result};
+use serde::Serialize;
+use std::collections::BTreeSet;
 use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 
 /// One accumulation group: the executable chunks covering one
 /// `physical_batch`-aligned slice of the logical batch. In Masked mode
@@ -193,6 +215,95 @@ pub struct GroupRun {
     pub chunks: Vec<ChunkRun>,
 }
 
+/// How a worker failed executing one accumulation group.
+#[derive(Debug, Clone)]
+pub enum WorkerFailureKind {
+    /// The worker's thread panicked; the payload is rendered to a
+    /// string. The rank's session is considered permanently lost.
+    Panic(String),
+    /// The session returned a typed error; the rank survives and the
+    /// group is retryable.
+    Error(String),
+}
+
+/// Typed failure of one worker executing one accumulation group:
+/// carries the failing rank, optimizer step, and group index so the
+/// coordinator (and the operator reading the abort message) knows
+/// exactly which unit of work died. This is what `run_groups` reports
+/// instead of propagating a worker panic or a bare error.
+#[derive(Debug, Clone)]
+pub struct WorkerFailure {
+    /// Failing worker rank (`0` = the session that applies the update).
+    pub rank: usize,
+    /// Optimizer step being executed.
+    pub step: u64,
+    /// Index of the failed accumulation group within the step.
+    pub group: usize,
+    /// Panic or typed error.
+    pub kind: WorkerFailureKind,
+}
+
+impl std::fmt::Display for WorkerFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.kind {
+            WorkerFailureKind::Panic(msg) => write!(
+                f,
+                "worker rank {} panicked at step {} group {}: {msg}",
+                self.rank, self.step, self.group
+            ),
+            WorkerFailureKind::Error(msg) => write!(
+                f,
+                "worker rank {} failed at step {} group {}: {msg}",
+                self.rank, self.step, self.group
+            ),
+        }
+    }
+}
+
+impl std::error::Error for WorkerFailure {}
+
+/// One recovery action taken by the fault-tolerant executor or the
+/// trainer; collected into `TrainReport::recovery_events`.
+#[derive(Debug, Clone, Serialize)]
+pub struct RecoveryEvent {
+    /// Optimizer step during which the action happened.
+    pub step: u64,
+    /// Worker rank the action concerns.
+    pub rank: usize,
+    /// Accumulation group index, when the action is about a group.
+    pub group: Option<usize>,
+    /// What happened: `group-failed`, `rank-lost`, `group-recovered`,
+    /// or (from the trainer) `apply-retried`.
+    pub action: String,
+    /// Human-readable context (the failure message, or where the group
+    /// was re-run).
+    pub detail: String,
+}
+
+/// Everything one fault-tolerant step execution produced.
+#[derive(Debug)]
+pub struct StepRuns {
+    /// Per-group results in group order (independent of which rank ran
+    /// what, or when, or after how many retries).
+    pub runs: Vec<GroupRun>,
+    /// Recovery actions taken; empty in a clean step.
+    pub recoveries: Vec<RecoveryEvent>,
+    /// Ranks whose worker thread panicked this step. Their sessions
+    /// must be dropped by the caller — the pool continues degraded.
+    pub lost_ranks: Vec<usize>,
+}
+
+/// Render a panic payload (the `Box<dyn Any>` from `catch_unwind`).
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Execute one group on `sess`: zero the bound accumulator, run the
 /// chunks in order (the in-group fold), and read the partial back out.
 fn run_one_group(
@@ -208,8 +319,60 @@ fn run_one_group(
     Ok(GroupRun { partial: sess.read_acc()?, chunks })
 }
 
-/// Run every group across the worker sessions and return the results
-/// **in group order** (independent of which rank ran what, or when).
+/// [`run_one_group`] with both failure modes converted to a typed
+/// [`WorkerFailure`]: a panic anywhere in the group (session call or
+/// `exec_chunk`) is caught instead of unwinding across the scope.
+///
+/// `AssertUnwindSafe` is sound here: after a panic the session is never
+/// reused (the rank is reported lost and the caller drops it), and on a
+/// plain error the backend contract guarantees the bound buffers are
+/// left unmodified — a retry re-zeros the accumulator anyway.
+fn run_one_group_caught(
+    sess: &mut dyn ExecSession,
+    group: &GroupPlan,
+    exec_chunk: &(dyn Fn(&mut dyn ExecSession, &PhysicalBatch) -> Result<ChunkRun> + Sync),
+    rank: usize,
+    step: u64,
+    group_idx: usize,
+) -> Result<GroupRun, WorkerFailure> {
+    match catch_unwind(AssertUnwindSafe(|| run_one_group(sess, group, exec_chunk))) {
+        Ok(Ok(run)) => Ok(run),
+        Ok(Err(e)) => Err(WorkerFailure {
+            rank,
+            step,
+            group: group_idx,
+            kind: WorkerFailureKind::Error(format!("{e:#}")),
+        }),
+        Err(payload) => Err(WorkerFailure {
+            rank,
+            step,
+            group: group_idx,
+            kind: WorkerFailureKind::Panic(panic_message(payload)),
+        }),
+    }
+}
+
+/// Record a failure: a panic permanently retires the rank.
+fn note_failure(f: &WorkerFailure, lost: &mut BTreeSet<usize>, recoveries: &mut Vec<RecoveryEvent>) {
+    let (action, detail) = match &f.kind {
+        WorkerFailureKind::Panic(msg) => {
+            lost.insert(f.rank);
+            ("rank-lost", msg.clone())
+        }
+        WorkerFailureKind::Error(msg) => ("group-failed", msg.clone()),
+    };
+    recoveries.push(RecoveryEvent {
+        step: f.step,
+        rank: f.rank,
+        group: Some(f.group),
+        action: action.to_string(),
+        detail,
+    });
+}
+
+/// Run every group across the worker sessions, recovering from worker
+/// failures, and return the results **in group order** (independent of
+/// which rank ran what, when, or after how many retries).
 ///
 /// `sessions[0]` is rank 0 (the session that will later apply the
 /// update); `sessions[r]` executes the `r`-th contiguous shard of
@@ -219,45 +382,63 @@ fn run_one_group(
 /// `exec_chunk` performs one accum call (data fetch + execution +
 /// timing) and must be `Sync` — it is shared read-only across ranks.
 ///
-/// On error, the first failing group (in group order) is reported;
-/// groups after a rank's failure are skipped on that rank only.
+/// Failures are handled per the module-level fault-tolerance contract:
+/// every failed (or skipped-after-failure) group is re-run in group
+/// order on the lowest-numbered surviving rank, each group bounded by
+/// `retry.max_attempts` total attempts with exponential backoff
+/// between them. Panicked ranks are retired and reported in
+/// [`StepRuns::lost_ranks`]. The step aborts — with the typed
+/// [`WorkerFailure`] as the error source — only when a group exhausts
+/// its attempts or no rank survives.
 pub fn run_groups(
-    sessions: Vec<&mut dyn ExecSession>,
+    mut sessions: Vec<&mut dyn ExecSession>,
     groups: &[GroupPlan],
     exec_chunk: &(dyn Fn(&mut dyn ExecSession, &PhysicalBatch) -> Result<ChunkRun> + Sync),
-) -> Result<Vec<GroupRun>> {
+    step: u64,
+    retry: &RetryPolicy,
+) -> Result<StepRuns> {
     if sessions.is_empty() {
         return Err(anyhow!("run_groups needs at least one session"));
     }
-    let mut slots: Vec<Option<Result<GroupRun>>> = Vec::with_capacity(groups.len());
+    let nranks = sessions.len();
+    let max_attempts = retry.max_attempts.max(1);
+    let mut slots: Vec<Option<Result<GroupRun, WorkerFailure>>> = Vec::with_capacity(groups.len());
     slots.resize_with(groups.len(), || None);
 
-    if sessions.len() == 1 || groups.len() <= 1 {
+    if nranks == 1 || groups.len() <= 1 {
         // Single-rank fast path: no thread spawn, same group walk.
-        let mut sessions = sessions;
         let sess = &mut *sessions[0];
-        for (slot, group) in slots.iter_mut().zip(groups) {
-            *slot = Some(run_one_group(sess, group, exec_chunk));
+        for (g, (slot, group)) in slots.iter_mut().zip(groups).enumerate() {
+            *slot = Some(run_one_group_caught(sess, group, exec_chunk, 0, step, g));
             if matches!(slot, Some(Err(_))) {
                 break;
             }
         }
     } else {
-        let ranges = shard_ranges(groups.len(), sessions.len());
+        let ranges = shard_ranges(groups.len(), nranks);
         std::thread::scope(|scope| {
-            let mut rest: &mut [Option<Result<GroupRun>>] = &mut slots;
-            for (sess, range) in sessions.into_iter().zip(&ranges) {
+            let mut rest: &mut [Option<Result<GroupRun, WorkerFailure>>] = &mut slots;
+            for (rank, (sess, range)) in sessions.iter_mut().zip(&ranges).enumerate() {
                 let (mine, tail) = rest.split_at_mut(range.len());
                 rest = tail;
                 if range.is_empty() {
                     continue; // more workers than groups this step
                 }
                 let shard = &groups[range.start..range.end];
+                let base = range.start;
                 scope.spawn(move || {
-                    for (slot, group) in mine.iter_mut().zip(shard) {
-                        *slot = Some(run_one_group(sess, group, exec_chunk));
+                    let sess: &mut dyn ExecSession = &mut **sess;
+                    for (i, (slot, group)) in mine.iter_mut().zip(shard).enumerate() {
+                        *slot = Some(run_one_group_caught(
+                            sess,
+                            group,
+                            exec_chunk,
+                            rank,
+                            step,
+                            base + i,
+                        ));
                         if matches!(slot, Some(Err(_))) {
-                            break;
+                            break; // this rank's later groups go to recovery
                         }
                     }
                 });
@@ -265,31 +446,82 @@ pub fn run_groups(
         });
     }
 
-    let mut out = Vec::with_capacity(groups.len());
-    let mut first_err = None;
-    for slot in slots {
+    // Recovery pass: sweep first-pass failures, then re-run every
+    // not-yet-successful group in group order on a surviving rank.
+    let mut recoveries: Vec<RecoveryEvent> = Vec::new();
+    let mut lost: BTreeSet<usize> = BTreeSet::new();
+    let mut attempts: Vec<u32> = vec![0; groups.len()];
+    for (g, slot) in slots.iter_mut().enumerate() {
         match slot {
-            Some(Ok(run)) => out.push(run),
-            Some(Err(e)) => {
-                first_err = Some(e);
-                break;
+            Some(Ok(_)) => attempts[g] = 1,
+            Some(Err(f)) => {
+                attempts[g] = 1;
+                note_failure(f, &mut lost, &mut recoveries);
+                *slot = None; // pending re-run
             }
-            None => break, // skipped after an earlier failure on that rank
+            None => {} // skipped after an earlier failure on its rank
         }
     }
-    if let Some(e) = first_err {
-        return Err(e);
+
+    for g in 0..groups.len() {
+        while !matches!(slots[g], Some(Ok(_))) {
+            let Some(rank) = (0..nranks).find(|r| !lost.contains(r)) else {
+                return Err(anyhow!(
+                    "step {step}: all {nranks} worker ranks lost; group {g} cannot be re-run"
+                ));
+            };
+            if attempts[g] >= max_attempts {
+                // The last failure of this group is the abort cause.
+                let f = WorkerFailure {
+                    rank,
+                    step,
+                    group: g,
+                    kind: WorkerFailureKind::Error(format!(
+                        "retry budget exhausted after {} attempts",
+                        attempts[g]
+                    )),
+                };
+                return Err(anyhow::Error::new(f)
+                    .context(format!("step {step}: group {g} failed permanently")));
+            }
+            if attempts[g] > 0 {
+                std::thread::sleep(retry.backoff_before(attempts[g] - 1));
+            }
+            attempts[g] += 1;
+            match run_one_group_caught(&mut *sessions[rank], &groups[g], exec_chunk, rank, step, g)
+            {
+                Ok(run) => {
+                    recoveries.push(RecoveryEvent {
+                        step,
+                        rank,
+                        group: Some(g),
+                        action: "group-recovered".to_string(),
+                        detail: format!("group {g} re-run on rank {rank}"),
+                    });
+                    slots[g] = Some(Ok(run));
+                }
+                Err(f) => {
+                    note_failure(&f, &mut lost, &mut recoveries);
+                    if matches!(f.kind, WorkerFailureKind::Error(_)) && attempts[g] >= max_attempts
+                    {
+                        return Err(anyhow::Error::new(f)
+                            .context(format!("step {step}: group {g} failed permanently")));
+                    }
+                }
+            }
+        }
     }
-    if out.len() != groups.len() {
-        // Only reachable when a rank failed and its error slot was
-        // consumed above — keep the invariant airtight anyway.
-        return Err(anyhow!(
-            "data-parallel step incomplete: {} of {} groups ran",
-            out.len(),
-            groups.len()
-        ));
+
+    let mut runs = Vec::with_capacity(groups.len());
+    for slot in slots {
+        match slot {
+            Some(Ok(run)) => runs.push(run),
+            // Unreachable: the recovery loop either fills every slot
+            // with Ok or returns the typed failure above.
+            _ => return Err(anyhow!("data-parallel step incomplete after recovery")),
+        }
     }
-    Ok(out)
+    Ok(StepRuns { runs, recoveries, lost_ranks: lost.into_iter().collect() })
 }
 
 #[cfg(test)]

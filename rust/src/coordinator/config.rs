@@ -9,6 +9,51 @@ use crate::coordinator::batcher::BatchingMode;
 use crate::coordinator::sampler::SamplerChoice;
 use crate::privacy::AccountantKind;
 
+/// Fault-tolerance retry policy for the data-parallel executor and the
+/// trainer (DESIGN.md §11).
+///
+/// Failed accumulation groups are re-run on a surviving session, and a
+/// failed apply call is re-issued on the same session, up to
+/// `max_attempts` total attempts per unit with exponential backoff.
+/// Retries are **bitwise-lossless**: a group's partial is a pure
+/// function of the step's parameters and the sampled batch, and a step
+/// retry replays the *same* per-step Poisson draw and noise
+/// `(seed, stream)` tuple (both are pure functions of
+/// `(experiment seed, step)`), so a recovered trajectory is identical
+/// to the fault-free one. Like `workers`, this knob moves wall-clock
+/// only — never bits — and is excluded from the checkpoint fingerprint.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts per failed unit (group or apply call), counting
+    /// the first. `1` disables retries; `0` is treated as 1.
+    pub max_attempts: u32,
+    /// Backoff before the second attempt, in milliseconds; doubles on
+    /// each further attempt (capped at `backoff_ms << 6`).
+    pub backoff_ms: u64,
+    /// UNSOUND (audit-demo knob, `--retry-fresh-draw`): declare a
+    /// policy that re-draws the Poisson mask and noise on step retry
+    /// instead of replaying the same tuple. The executor never
+    /// implements this — redrawing on retry is the silent sampling
+    /// shortcut of arXiv 2411.04205 — but declaring it lets the static
+    /// auditor demonstrate the `retry.fresh-draw` Deny, exactly like
+    /// `--sampler shuffle`.
+    pub fresh_draw_on_retry: bool,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { max_attempts: 3, backoff_ms: 10, fresh_draw_on_retry: false }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before attempt `attempt + 1` (0-based failed attempt):
+    /// `backoff_ms * 2^attempt`, exponent capped at 6.
+    pub fn backoff_before(&self, attempt: u32) -> std::time::Duration {
+        std::time::Duration::from_millis(self.backoff_ms << attempt.min(6))
+    }
+}
+
 /// Everything needed to launch one training/benchmark run.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -68,6 +113,9 @@ pub struct TrainConfig {
     /// (`--allow-unsound`); the TrainReport and every checkpoint are
     /// then stamped `unaudited`.
     pub allow_unsound: bool,
+    /// Fault-tolerance retry policy (`--retries`, `--retry-backoff-ms`).
+    /// Wall-clock only — excluded from the checkpoint fingerprint.
+    pub retry: RetryPolicy,
 }
 
 impl Default for TrainConfig {
@@ -92,6 +140,7 @@ impl Default for TrainConfig {
             sampler: SamplerChoice::Poisson,
             accountant: AccountantKind::Rdp,
             allow_unsound: false,
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -123,6 +172,18 @@ mod tests {
         assert_eq!(c.sampler, SamplerChoice::Poisson);
         assert_eq!(c.accountant, AccountantKind::Rdp);
         assert!(!c.allow_unsound);
+        assert_eq!(c.retry, RetryPolicy::default());
+        assert!(!c.retry.fresh_draw_on_retry, "sound retries by default");
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RetryPolicy { max_attempts: 8, backoff_ms: 10, fresh_draw_on_retry: false };
+        assert_eq!(p.backoff_before(0).as_millis(), 10);
+        assert_eq!(p.backoff_before(1).as_millis(), 20);
+        assert_eq!(p.backoff_before(3).as_millis(), 80);
+        // Exponent cap: no unbounded sleep however many attempts.
+        assert_eq!(p.backoff_before(40).as_millis(), 10 * 64);
     }
 
     #[test]

@@ -63,11 +63,14 @@
 
 #![warn(missing_docs)]
 
-use crate::cluster::parallel::{plan_groups, reduce_fixed_tree, run_groups, ChunkRun};
+use crate::cluster::parallel::{
+    plan_groups, reduce_fixed_tree, run_groups, ChunkRun, RecoveryEvent,
+};
 use crate::coordinator::batcher::{BatchingMode, PhysicalBatch};
 use crate::coordinator::config::TrainConfig;
 use crate::coordinator::sampler::{AnySampler, Sampler};
 use crate::data::SyntheticDataset;
+use crate::fault::FaultPlan;
 use crate::metrics::{Summary, ThroughputMeter};
 use crate::privacy::rdp::StreamingAccountant;
 use crate::privacy::{calibrate_sigma, pld_epsilon, AccountantKind, RdpAccountant};
@@ -75,9 +78,10 @@ use crate::runtime::{
     AccumArgs, ApplyArgs, ExecSession, ModelRuntime, Prepared, Runtime, Tensor,
 };
 use crate::util::rng::ChaChaRng;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 use serde::{Deserialize, Serialize};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Full-width per-step noise seed: the high 32 bits are a per-experiment
@@ -196,6 +200,16 @@ pub struct TrainReport {
     /// audit diagnostics (or resumed from a checkpoint that did): the
     /// reported epsilon carries no static-audit backing.
     pub unaudited: bool,
+    /// Every fault-recovery action the run took (failed groups re-run
+    /// on surviving ranks, apply retries, permanently lost ranks —
+    /// DESIGN.md §11). Empty for a clean run; recovery never changes
+    /// the trajectory, so a non-empty log with the same final params is
+    /// the expected signature of a survived fault.
+    pub recovery_events: Vec<RecoveryEvent>,
+    /// Worker sessions still alive at finish: `config.workers` minus
+    /// permanently lost ranks (a degraded-but-completed run reports
+    /// fewer than it started with).
+    pub final_workers: usize,
     /// Flat parameter vector after the final step (checkpointable via
     /// [`ModelRuntime::save_params`]).
     pub final_params: Vec<f32>,
@@ -238,6 +252,24 @@ pub struct TrainCheckpoint {
     /// the auditor).
     #[serde(default)]
     pub unaudited: bool,
+    /// FNV-1a-64 content checksum (hex) over every other field — the
+    /// crash-consistency seal (fingerprint `v5`, DESIGN.md §11). A torn
+    /// or bit-rotted file that still parses as JSON fails this check at
+    /// resume instead of silently continuing a corrupted trajectory.
+    /// [`TrainSession::checkpoint`] always seals; `serde(default)`
+    /// (empty = unsealed) keeps hand-built and pre-`v5` checkpoints
+    /// loading. After mutating a checkpoint in tests, re-seal with
+    /// [`Self::seal`].
+    #[serde(default)]
+    pub checksum: String,
+}
+
+/// One FNV-1a-64 absorption step.
+fn fnv1a64(hash: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *hash ^= b as u64;
+        *hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+    }
 }
 
 impl TrainCheckpoint {
@@ -250,6 +282,43 @@ impl TrainCheckpoint {
     /// Parse a checkpoint serialized by [`Self::to_json`].
     pub fn from_json(text: &str) -> serde_json::Result<Self> {
         serde_json::from_str(text)
+    }
+
+    /// Compute the content checksum over every field except `checksum`
+    /// itself: fingerprint, step counter, parameter bits, step logs,
+    /// and the unaudited stamp, each length-prefixed or separated so
+    /// distinct contents can never collide by concatenation.
+    pub fn content_checksum(&self) -> String {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        fnv1a64(&mut h, self.fingerprint.as_bytes());
+        fnv1a64(&mut h, &[0xff]);
+        fnv1a64(&mut h, &self.step.to_le_bytes());
+        fnv1a64(&mut h, &(self.params.len() as u64).to_le_bytes());
+        for p in &self.params {
+            fnv1a64(&mut h, &p.to_bits().to_le_bytes());
+        }
+        fnv1a64(&mut h, &(self.steps.len() as u64).to_le_bytes());
+        for s in &self.steps {
+            fnv1a64(&mut h, &s.step.to_le_bytes());
+            fnv1a64(&mut h, &(s.logical_batch as u64).to_le_bytes());
+            fnv1a64(&mut h, &(s.physical_batches as u64).to_le_bytes());
+            fnv1a64(&mut h, &(s.computed_examples as u64).to_le_bytes());
+            fnv1a64(&mut h, &s.loss.to_bits().to_le_bytes());
+        }
+        fnv1a64(&mut h, &[u8::from(self.unaudited)]);
+        format!("{h:016x}")
+    }
+
+    /// Stamp `checksum` with the current content checksum.
+    pub fn seal(&mut self) {
+        self.checksum = self.content_checksum();
+    }
+
+    /// Does the stored checksum match the content? Unsealed checkpoints
+    /// (empty checksum: hand-built, or pre-`v5` — which the fingerprint
+    /// check rejects anyway) pass vacuously.
+    pub fn checksum_ok(&self) -> bool {
+        self.checksum.is_empty() || self.checksum == self.content_checksum()
     }
 }
 
@@ -298,10 +367,18 @@ fn dtype_of(config: &TrainConfig) -> &'static str {
 /// checkpoint's params may describe a different layout and must not
 /// silently continue under the new one; `v4` adds the sampler choice —
 /// shuffle and Poisson draw *different logical batches* from the same
-/// seed, so a checkpoint must never resume under the other scheme.
-fn config_fingerprint(config: &TrainConfig, sigma: f64) -> String {
+/// seed, so a checkpoint must never resume under the other scheme;
+/// `v5` is the crash-consistency generation — checkpoints carry a
+/// content checksum ([`TrainCheckpoint::seal`]) and are written
+/// atomically (`crate::fault::checkpoint`), so a `v4` file, which no
+/// checksum ever protected, does not resume under the new contract.
+///
+/// Public so the `--resume-latest` scanner and the audit tooling can
+/// compute the fingerprint a config will demand without opening a
+/// session.
+pub fn config_fingerprint(config: &TrainConfig, sigma: f64) -> String {
     format!(
-        "v4|{}|{}|{:?}|{}|N={}|q={:?}|B={}|lr={:?}|C={:?}|sigma={:?}|seed={}|sampler={}",
+        "v5|{}|{}|{:?}|{}|N={}|q={:?}|B={}|lr={:?}|C={:?}|sigma={:?}|seed={}|sampler={}",
         config.model,
         config.variant,
         config.mode,
@@ -381,6 +458,7 @@ impl<'rt> Trainer<'rt> {
             self.config.clone(),
             self.model.clone(),
             self.dataset.clone(),
+            None,
             None,
         )
     }
@@ -499,6 +577,14 @@ pub struct TrainSession<'rt> {
     /// session). Those steps carry no section time in this process, so
     /// throughput denominators must exclude them.
     restored_steps: usize,
+    /// Deterministic fault-injection plan, when this session runs over
+    /// a fault-wrapped runtime ([`crate::fault::faulty_runtime`]). The
+    /// session's only duty is announcing the step counter to the plan
+    /// so injection sites fire at their planned `(step, rank, call)`.
+    fault_plan: Option<Arc<FaultPlan>>,
+    /// Recovery actions this process took (group re-runs, apply
+    /// retries, lost ranks); drained into the final report.
+    recovery: Vec<RecoveryEvent>,
 }
 
 impl<'rt> TrainSession<'rt> {
@@ -507,7 +593,23 @@ impl<'rt> TrainSession<'rt> {
     pub fn new(runtime: &'rt Runtime, config: TrainConfig) -> Result<Self> {
         let model = runtime.model(&config.model)?;
         let dataset = training_dataset(&config, &model);
-        Self::build(runtime, config, model, dataset, None)
+        Self::build(runtime, config, model, dataset, None, None)
+    }
+
+    /// Open a fresh session over a fault-wrapped runtime
+    /// ([`crate::fault::faulty_runtime`] built from the same `plan`).
+    /// The session announces each step to the plan so injection sites
+    /// fire at their planned `(step, rank, call)` coordinates. Rank ids
+    /// follow session-open order (rank 0 = the apply session), so build
+    /// at most one session per fault-wrapped runtime.
+    pub fn with_faults(
+        runtime: &'rt Runtime,
+        config: TrainConfig,
+        plan: Arc<FaultPlan>,
+    ) -> Result<Self> {
+        let model = runtime.model(&config.model)?;
+        let dataset = training_dataset(&config, &model);
+        Self::build(runtime, config, model, dataset, None, Some(plan))
     }
 
     /// Reopen a session from a [`TrainCheckpoint`]: parameters are
@@ -523,7 +625,20 @@ impl<'rt> TrainSession<'rt> {
     ) -> Result<Self> {
         let model = runtime.model(&config.model)?;
         let dataset = training_dataset(&config, &model);
-        Self::build(runtime, config, model, dataset, Some(checkpoint))
+        Self::build(runtime, config, model, dataset, Some(checkpoint), None)
+    }
+
+    /// [`Self::resume`] over a fault-wrapped runtime (see
+    /// [`Self::with_faults`]).
+    pub fn resume_with_faults(
+        runtime: &'rt Runtime,
+        config: TrainConfig,
+        checkpoint: TrainCheckpoint,
+        plan: Arc<FaultPlan>,
+    ) -> Result<Self> {
+        let model = runtime.model(&config.model)?;
+        let dataset = training_dataset(&config, &model);
+        Self::build(runtime, config, model, dataset, Some(checkpoint), Some(plan))
     }
 
     fn build(
@@ -532,6 +647,7 @@ impl<'rt> TrainSession<'rt> {
         model: ModelRuntime,
         dataset: SyntheticDataset,
         start: Option<TrainCheckpoint>,
+        fault_plan: Option<Arc<FaultPlan>>,
     ) -> Result<Self> {
         let sigma = resolve_sigma(&config)?;
         // The group grid divides the logical batch by this (previously
@@ -600,6 +716,17 @@ impl<'rt> TrainSession<'rt> {
                 (0, Vec::new(), p, false)
             }
             Some(ckpt) => {
+                // Checksum before anything else: a torn or bit-rotted
+                // file must surface as corruption, not as whichever
+                // downstream validation its damage happens to trip.
+                if !ckpt.checksum_ok() {
+                    return Err(anyhow!(
+                        "checkpoint failed its content checksum (stored {}, computed {}): \
+                         torn or corrupted file",
+                        ckpt.checksum,
+                        ckpt.content_checksum()
+                    ));
+                }
                 let want = config_fingerprint(&config, sigma);
                 if ckpt.fingerprint != want {
                     return Err(anyhow!(
@@ -648,13 +775,15 @@ impl<'rt> TrainSession<'rt> {
         // donate_argnums analogue). Rank 0 is the apply/eval/checkpoint
         // session; ranks 1.. are the data-parallel peers, opened from
         // the same shared backend with the same starting parameters
-        // (the step loop re-broadcasts after every apply).
+        // (the step loop re-broadcasts after every apply). Open order
+        // is rank order: a fault-wrapped backend assigns injection
+        // rank ids as sessions open, and rank 0 must be `exec`.
         let workers = config.workers.max(1);
+        let exec = runtime.open_session(&config.model, params.clone())?;
         let mut peers = Vec::with_capacity(workers - 1);
         for _ in 1..workers {
             peers.push(runtime.open_session(&config.model, params.clone())?);
         }
-        let exec = runtime.open_session(&config.model, params)?;
 
         // denom = E[L] (Algorithm 1's 1/|L| with the expected batch — the
         // standard Opacus convention). Only the degenerate q = 0 case is
@@ -687,6 +816,8 @@ impl<'rt> TrainSession<'rt> {
             step,
             compiled_before,
             restored_steps,
+            fault_plan,
+            recovery: Vec::new(),
         })
     }
 
@@ -778,9 +909,48 @@ impl<'rt> TrainSession<'rt> {
     }
 
     /// Number of data-parallel worker sessions this run drives
-    /// (`config.workers`, floored at 1).
+    /// (`config.workers` floored at 1, minus permanently lost ranks).
     pub fn workers(&self) -> usize {
         self.peers.len() + 1
+    }
+
+    /// Recovery actions taken so far (group re-runs, apply retries,
+    /// lost ranks); the final report carries the same list.
+    pub fn recovery_events(&self) -> &[RecoveryEvent] {
+        &self.recovery
+    }
+
+    /// Retire permanently lost ranks and continue on the smaller pool.
+    /// Bitwise-sound mid-step: during the accumulation phase every
+    /// session holds the identical pre-apply parameters (the broadcast
+    /// invariant), and the reduced accumulator is installed through
+    /// `write_acc` before apply — so when rank 0 itself is lost, the
+    /// first surviving peer is promoted and produces exactly the bits
+    /// rank 0 would have.
+    fn degrade(&mut self, lost: &[usize]) -> Result<()> {
+        let lost: std::collections::BTreeSet<usize> = lost.iter().copied().collect();
+        let peers = std::mem::take(&mut self.peers);
+        let mut survivors: Vec<Box<dyn ExecSession + 'rt>> = Vec::with_capacity(peers.len());
+        for (i, p) in peers.into_iter().enumerate() {
+            if !lost.contains(&(i + 1)) {
+                survivors.push(p);
+            }
+        }
+        if lost.contains(&0) {
+            // run_groups only returns Ok while at least one rank
+            // survives, so a promotion candidate exists; keep the
+            // invariant checked anyway.
+            if survivors.is_empty() {
+                return Err(anyhow!(
+                    "rank 0 lost at step {} with no surviving peer to promote",
+                    self.step
+                ));
+            }
+            let promoted = survivors.remove(0);
+            drop(std::mem::replace(&mut self.exec, promoted));
+        }
+        self.peers = survivors;
+        Ok(())
     }
 
     /// Snapshot the resumable state: step counter, parameters, and the
@@ -804,13 +974,16 @@ impl<'rt> TrainSession<'rt> {
                  JSON cannot represent NaN/inf"
             ));
         }
-        Ok(TrainCheckpoint {
+        let mut ckpt = TrainCheckpoint {
             fingerprint: config_fingerprint(&self.config, self.sigma),
             step: self.step,
             params,
             steps: self.steps_log.clone(),
             unaudited: self.unaudited,
-        })
+            checksum: String::new(),
+        };
+        ckpt.seal();
+        Ok(ckpt)
     }
 
     /// Take one optimizer step (see the module docs for the anatomy:
@@ -821,6 +994,12 @@ impl<'rt> TrainSession<'rt> {
     /// parameter trajectory are bitwise-identical for every worker
     /// count.
     pub fn step(&mut self) -> Result<StepLog> {
+        // Announce the step to the fault plan (injection sites are
+        // addressed by (step, rank, call)). Doing this before sampling
+        // keeps the addressing aligned with the sampler's step index.
+        if let Some(plan) = &self.fault_plan {
+            plan.begin_step(self.step);
+        }
         let t0 = Instant::now();
         let logical = self.sampler.sample(self.step);
         let groups = plan_groups(
@@ -870,7 +1049,12 @@ impl<'rt> TrainSession<'rt> {
         for peer in &mut self.peers {
             sessions.push(peer.as_mut());
         }
-        let runs = run_groups(sessions, &groups, &exec_chunk)?;
+        let outcome = run_groups(sessions, &groups, &exec_chunk, self.step, &self.config.retry)?;
+        self.recovery.extend(outcome.recoveries);
+        if !outcome.lost_ranks.is_empty() {
+            self.degrade(&outcome.lost_ranks)?;
+        }
+        let runs = outcome.runs;
 
         // Deterministic recombination in group/chunk order: the loss
         // log, the meter samples, and — through the fixed tree — the
@@ -901,7 +1085,35 @@ impl<'rt> TrainSession<'rt> {
             lr: self.config.lr as f32,
             noise_mult: self.noise_mult,
         };
-        self.exec.apply(&self.apply_prep, &args)?;
+        // Apply with bounded retries. The backend contract leaves the
+        // bound buffers unmodified on error and `args` is reused
+        // verbatim, so a retry replays the *same* noise (seed, stream)
+        // tuple for the *same* reduced gradient — never a fresh draw
+        // (the retry.fresh-draw audit contract, DESIGN.md §11).
+        let max_attempts = self.config.retry.max_attempts.max(1);
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            match self.exec.apply(&self.apply_prep, &args) {
+                Ok(()) => break,
+                Err(e) if attempt < max_attempts => {
+                    self.recovery.push(RecoveryEvent {
+                        step: self.step,
+                        rank: 0,
+                        group: None,
+                        action: "apply-retried".to_string(),
+                        detail: format!("attempt {attempt} failed: {e:#}"),
+                    });
+                    std::thread::sleep(self.config.retry.backoff_before(attempt - 1));
+                }
+                Err(e) => {
+                    return Err(e.context(format!(
+                        "apply failed at step {} after {attempt} attempts",
+                        self.step
+                    )));
+                }
+            }
+        }
         self.sections.apply += t.elapsed().as_secs_f64();
 
         // Parameter broadcast: rank 0 applied the update; the peers'
@@ -1026,6 +1238,8 @@ impl<'rt> TrainSession<'rt> {
             eval_covered,
             compiles,
             unaudited: self.unaudited,
+            recovery_events: self.recovery,
+            final_workers: self.peers.len() + 1,
             final_params,
         })
     }
@@ -1114,9 +1328,8 @@ mod tests {
         }
     }
 
-    #[test]
-    fn checkpoint_json_roundtrip_is_exact() {
-        let ckpt = TrainCheckpoint {
+    fn test_checkpoint() -> TrainCheckpoint {
+        let mut ckpt = TrainCheckpoint {
             fingerprint: "v1|test".into(),
             step: 3,
             params: vec![0.1f32, -2.5e-8, 3.0, f32::MIN_POSITIVE],
@@ -1128,11 +1341,20 @@ mod tests {
                 loss: 2.302_585_092_994_046,
             }],
             unaudited: false,
+            checksum: String::new(),
         };
+        ckpt.seal();
+        ckpt
+    }
+
+    #[test]
+    fn checkpoint_json_roundtrip_is_exact() {
+        let ckpt = test_checkpoint();
         let json = ckpt.to_json().unwrap();
         let back = TrainCheckpoint::from_json(&json).unwrap();
         assert_eq!(back.step, ckpt.step);
         assert!(!back.unaudited);
+        assert!(back.checksum_ok(), "seal survives the JSON roundtrip");
         // Pre-audit checkpoints (no `unaudited` key) still load.
         let legacy: TrainCheckpoint =
             serde_json::from_str(&json.replace(",\"unaudited\":false", "")).unwrap();
@@ -1143,5 +1365,35 @@ mod tests {
         let back_bits: Vec<u32> = back.params.iter().map(|f| f.to_bits()).collect();
         assert_eq!(bits, back_bits);
         assert_eq!(back.steps[0].loss.to_bits(), ckpt.steps[0].loss.to_bits());
+    }
+
+    #[test]
+    fn checkpoint_checksum_detects_every_field() {
+        // Unsealed (hand-built / pre-v5) passes vacuously.
+        let mut unsealed = test_checkpoint();
+        unsealed.checksum.clear();
+        assert!(unsealed.checksum_ok());
+
+        // Any single-field mutation after sealing is detected...
+        let base = test_checkpoint();
+        assert!(base.checksum_ok());
+        let mut c = base.clone();
+        c.step += 1;
+        assert!(!c.checksum_ok(), "step covered");
+        let mut c = base.clone();
+        c.params[1] = f32::from_bits(c.params[1].to_bits() ^ 1);
+        assert!(!c.checksum_ok(), "a single flipped param bit is covered");
+        let mut c = base.clone();
+        c.steps[0].loss += 1e-9;
+        assert!(!c.checksum_ok(), "step-log losses covered");
+        let mut c = base.clone();
+        c.unaudited = true;
+        assert!(!c.checksum_ok(), "the unaudited stamp is covered");
+        let mut c = base.clone();
+        c.fingerprint.push('x');
+        assert!(!c.checksum_ok(), "fingerprint covered");
+        // ...and re-sealing accepts the new content.
+        c.seal();
+        assert!(c.checksum_ok());
     }
 }

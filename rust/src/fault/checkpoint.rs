@@ -1,0 +1,250 @@
+//! Crash-consistent checkpoint files: atomic writes, typed load
+//! errors, and newest-valid-first scanning (DESIGN.md §11).
+//!
+//! The write protocol is the classic temp-file+rename: serialize,
+//! write to a `.tmp` sibling, rename into place. A crash mid-write
+//! leaves either the previous file or a `.tmp` the scanner ignores —
+//! never a torn file under the final name. On top of that,
+//! [`TrainCheckpoint`] carries a content checksum (sealed by
+//! `TrainSession::checkpoint`), so corruption that slips past the
+//! filesystem (bit rot, a torn write under a non-atomic filesystem)
+//! still surfaces as a typed [`CheckpointError`] at load instead of a
+//! silently wrong resume.
+//!
+//! [`write_checkpoint`] optionally consults a [`FaultPlan`]: a
+//! `ckpt-truncate` or `ckpt-flip` site armed at the checkpoint's step
+//! makes the writer *deliberately* produce the corresponding torn or
+//! bit-rotted file (bypassing the atomic protocol), which is how the
+//! chaos suite and the CI chaos-smoke job exercise the load-side
+//! defenses end to end.
+
+use super::plan::{FaultKind, FaultPlan};
+use crate::coordinator::trainer::TrainCheckpoint;
+use anyhow::{Context, Result};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Why a checkpoint file failed to load. Every variant is a defense:
+/// resume must reject damage with a typed error, never panic, and
+/// never silently continue a corrupted trajectory.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// The file could not be read at all.
+    Io {
+        /// Offending path.
+        path: PathBuf,
+        /// Underlying I/O error, rendered.
+        detail: String,
+    },
+    /// The file is not valid checkpoint JSON — the signature of a torn
+    /// (truncated/interleaved) write.
+    Torn {
+        /// Offending path.
+        path: PathBuf,
+        /// Parser error, rendered.
+        detail: String,
+    },
+    /// The JSON parsed but the content does not match its seal —
+    /// bit rot, or a hand-edited file.
+    Checksum {
+        /// Offending path.
+        path: PathBuf,
+        /// Checksum stored in the file.
+        stored: String,
+        /// Checksum recomputed from the content.
+        computed: String,
+    },
+    /// The checkpoint was taken under a different trajectory-shaping
+    /// configuration (or a pre-`v5` format) than the resume expects.
+    Fingerprint {
+        /// Offending path.
+        path: PathBuf,
+        /// Fingerprint the resume config demands.
+        want: String,
+        /// Fingerprint stored in the file.
+        found: String,
+    },
+}
+
+impl CheckpointError {
+    /// The file the error concerns.
+    pub fn path(&self) -> &Path {
+        match self {
+            CheckpointError::Io { path, .. }
+            | CheckpointError::Torn { path, .. }
+            | CheckpointError::Checksum { path, .. }
+            | CheckpointError::Fingerprint { path, .. } => path,
+        }
+    }
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Io { path, detail } => {
+                write!(f, "checkpoint {}: unreadable: {detail}", path.display())
+            }
+            CheckpointError::Torn { path, detail } => {
+                write!(f, "checkpoint {}: torn/unparseable JSON: {detail}", path.display())
+            }
+            CheckpointError::Checksum { path, stored, computed } => write!(
+                f,
+                "checkpoint {}: content checksum mismatch (stored {stored}, computed \
+                 {computed}): corrupted file",
+                path.display()
+            ),
+            CheckpointError::Fingerprint { path, want, found } => write!(
+                f,
+                "checkpoint {}: fingerprint {found:?} does not match this configuration \
+                 ({want:?})",
+                path.display()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+/// Checkpoint file name for a step counter: `ckpt_step00000042.json`.
+/// Zero-padded so lexicographic order is step order.
+pub fn checkpoint_file_name(step: u64) -> String {
+    format!("ckpt_step{step:08}.json")
+}
+
+/// Atomically write `ckpt` into `dir` (created if missing) as
+/// [`checkpoint_file_name`]`(ckpt.step)`, via the temp-file+rename
+/// protocol. When `faults` has a checkpoint-corruption site armed at
+/// `ckpt.step`, the writer instead simulates the corresponding crash:
+/// `ckpt-truncate` writes only the first half of the JSON straight to
+/// the final name (a torn write), `ckpt-flip` flips the low bit of a
+/// parameter digit after sealing (bit rot). Returns the final path.
+pub fn write_checkpoint(
+    dir: &Path,
+    ckpt: &TrainCheckpoint,
+    faults: Option<&FaultPlan>,
+) -> Result<PathBuf> {
+    fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+    let path = dir.join(checkpoint_file_name(ckpt.step));
+    let mut json = ckpt.to_json().context("serializing checkpoint")?;
+    match faults.and_then(|p| p.take_checkpoint(ckpt.step)) {
+        Some(FaultKind::CheckpointTruncate) => {
+            // A crash mid-write under a filesystem without atomic
+            // rename: half the payload lands under the final name.
+            json.truncate(json.len() / 2);
+            fs::write(&path, json)
+                .with_context(|| format!("writing torn checkpoint {}", path.display()))?;
+            return Ok(path);
+        }
+        Some(FaultKind::CheckpointBitFlip) => {
+            // Flip the low bit of a digit inside the params array: for
+            // ASCII digits this always yields another digit, so the
+            // JSON stays parseable and only the checksum can object.
+            let mut bytes = json.into_bytes();
+            let start = bytes
+                .windows(10)
+                .position(|w| w == b"\"params\":[")
+                .map(|p| p + 10)
+                .unwrap_or(0);
+            if let Some(pos) =
+                bytes[start..].iter().position(|b| b.is_ascii_digit()).map(|p| p + start)
+            {
+                bytes[pos] ^= 1;
+            }
+            fs::write(&path, bytes)
+                .with_context(|| format!("writing bit-flipped checkpoint {}", path.display()))?;
+            return Ok(path);
+        }
+        _ => {}
+    }
+    let tmp = dir.join(format!("{}.tmp", checkpoint_file_name(ckpt.step)));
+    fs::write(&tmp, json).with_context(|| format!("writing {}", tmp.display()))?;
+    fs::rename(&tmp, &path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(path)
+}
+
+/// Load and validate one checkpoint file: readable → parses → checksum
+/// holds → (when `expect_fingerprint` is given) fingerprint matches.
+/// Every failure is a typed [`CheckpointError`]; nothing panics.
+pub fn load_checkpoint(
+    path: &Path,
+    expect_fingerprint: Option<&str>,
+) -> Result<TrainCheckpoint, CheckpointError> {
+    let text = fs::read_to_string(path).map_err(|e| CheckpointError::Io {
+        path: path.to_path_buf(),
+        detail: e.to_string(),
+    })?;
+    let ckpt = TrainCheckpoint::from_json(&text).map_err(|e| CheckpointError::Torn {
+        path: path.to_path_buf(),
+        detail: e.to_string(),
+    })?;
+    if !ckpt.checksum_ok() {
+        return Err(CheckpointError::Checksum {
+            path: path.to_path_buf(),
+            stored: ckpt.checksum.clone(),
+            computed: ckpt.content_checksum(),
+        });
+    }
+    if let Some(want) = expect_fingerprint {
+        if ckpt.fingerprint != want {
+            return Err(CheckpointError::Fingerprint {
+                path: path.to_path_buf(),
+                want: want.to_string(),
+                found: ckpt.fingerprint,
+            });
+        }
+    }
+    Ok(ckpt)
+}
+
+/// Outcome of a `--resume-latest` scan.
+#[derive(Debug)]
+pub struct ScanOutcome {
+    /// Newest (highest-step) valid checkpoint, when one exists.
+    pub found: Option<(PathBuf, TrainCheckpoint)>,
+    /// Files that looked like checkpoints but failed validation, each
+    /// with its typed rejection — surfaced so an operator sees the
+    /// damage instead of a silent skip.
+    pub skipped: Vec<(PathBuf, CheckpointError)>,
+}
+
+/// Scan `dir` for the newest valid checkpoint: candidate files
+/// (`ckpt_step*.json`, `.tmp` leftovers ignored) are tried
+/// newest-first; torn, corrupt, or fingerprint-mismatched files are
+/// recorded in [`ScanOutcome::skipped`] and the scan falls back to the
+/// next-newest. A missing directory is an empty scan, not an error.
+pub fn latest_valid(dir: &Path, expect_fingerprint: &str) -> Result<ScanOutcome> {
+    let mut candidates: Vec<PathBuf> = Vec::new();
+    match fs::read_dir(dir) {
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(ScanOutcome { found: None, skipped: Vec::new() })
+        }
+        Err(e) => {
+            return Err(anyhow::Error::new(e)
+                .context(format!("scanning checkpoint dir {}", dir.display())))
+        }
+        Ok(entries) => {
+            for entry in entries {
+                let entry = entry
+                    .with_context(|| format!("scanning checkpoint dir {}", dir.display()))?;
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                if name.starts_with("ckpt_step") && name.ends_with(".json") {
+                    candidates.push(entry.path());
+                }
+            }
+        }
+    }
+    // Zero-padded names: lexicographic descending == newest first.
+    candidates.sort();
+    candidates.reverse();
+    let mut skipped = Vec::new();
+    for path in candidates {
+        match load_checkpoint(&path, Some(expect_fingerprint)) {
+            Ok(ckpt) => return Ok(ScanOutcome { found: Some((path, ckpt)), skipped }),
+            Err(e) => skipped.push((path, e)),
+        }
+    }
+    Ok(ScanOutcome { found: None, skipped })
+}

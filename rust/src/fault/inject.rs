@@ -1,0 +1,250 @@
+//! The fault injector: a decorator over `Arc<dyn Backend>` whose
+//! sessions consume a [`FaultPlan`] at the exact `(step, rank, call)`
+//! sites the plan arms.
+//!
+//! [`FaultyBackend`] assigns injection **rank ids in session-open
+//! order** — the trainer opens its apply session first, so rank 0 is
+//! always the session that applies updates; open at most one
+//! `TrainSession` per fault-wrapped runtime so ids stay aligned.
+//! [`FaultySession`] intercepts `accum` (accum errors, worker panics,
+//! slow-worker stalls) and `apply` (apply errors); all other calls
+//! pass through. A session that took an injected panic marks itself
+//! **dead**: every later call returns a typed [`InjectedFault`] — the
+//! same observable behaviour as a worker whose process is gone, which
+//! is what lets the recovery layer treat "panicked rank" as
+//! "permanently lost rank" without special-casing the injector.
+//!
+//! Only the session path is faulted: the legacy copying entry points
+//! (`run_accum`/`run_apply`) pass through untouched, because the
+//! fault-tolerant executor (`cluster::parallel::run_groups`) drives
+//! sessions exclusively.
+
+use super::plan::{FaultKind, FaultPlan};
+use crate::runtime::{
+    AccumArgs, AccumOut, AccumStats, ApplyArgs, Backend, ExecSession, Prepared, Runtime, Tensor,
+};
+use crate::runtime::{ExecutableMeta, ModelMeta};
+use anyhow::Result;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Typed error for an injected failure (or a call on a session the
+/// injector already killed). Downcastable from the `anyhow` chain, so
+/// tests and operators can tell injected faults from real ones.
+#[derive(Debug, Clone)]
+pub struct InjectedFault {
+    /// Optimizer step the fault fired at.
+    pub step: u64,
+    /// Rank of the faulted session.
+    pub rank: usize,
+    /// Which call was faulted ("accum error", "apply error", or
+    /// "session lost to an injected panic").
+    pub what: &'static str,
+}
+
+impl std::fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "injected {} (step {}, rank {})", self.what, self.step, self.rank)
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// [`Backend`] decorator that wraps every opened session in a
+/// [`FaultySession`] sharing one [`FaultPlan`].
+pub struct FaultyBackend {
+    inner: Arc<dyn Backend + Send + Sync>,
+    plan: Arc<FaultPlan>,
+    next_rank: AtomicUsize,
+}
+
+impl FaultyBackend {
+    /// Decorate `inner` with the fault plan.
+    pub fn new(inner: Arc<dyn Backend + Send + Sync>, plan: Arc<FaultPlan>) -> Self {
+        Self { inner, plan, next_rank: AtomicUsize::new(0) }
+    }
+}
+
+impl Backend for FaultyBackend {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn prepare(&self, dir: &Path, meta: &ModelMeta, exe: &ExecutableMeta) -> Result<Prepared> {
+        self.inner.prepare(dir, meta, exe)
+    }
+
+    fn is_compiled(&self, key: &str) -> bool {
+        self.inner.is_compiled(key)
+    }
+
+    fn compile_records(&self) -> Vec<crate::runtime::CompileRecord> {
+        self.inner.compile_records()
+    }
+
+    fn init_params(&self, dir: &Path, meta: &ModelMeta) -> Result<Tensor> {
+        self.inner.init_params(dir, meta)
+    }
+
+    fn open_session(
+        &self,
+        dir: &Path,
+        meta: &ModelMeta,
+        params: Tensor,
+    ) -> Result<Box<dyn ExecSession + '_>> {
+        let rank = self.next_rank.fetch_add(1, Ordering::SeqCst);
+        let inner = self.inner.open_session(dir, meta, params)?;
+        Ok(Box::new(FaultySession {
+            inner,
+            plan: Arc::clone(&self.plan),
+            rank,
+            last_step: u64::MAX,
+            calls: 0,
+            dead: false,
+        }))
+    }
+
+    fn run_accum(
+        &self,
+        prep: &Prepared,
+        meta: &ModelMeta,
+        params: &Tensor,
+        acc: &Tensor,
+        args: &AccumArgs<'_>,
+    ) -> Result<AccumOut> {
+        self.inner.run_accum(prep, meta, params, acc, args)
+    }
+
+    fn run_apply(
+        &self,
+        prep: &Prepared,
+        meta: &ModelMeta,
+        params: &Tensor,
+        acc: &Tensor,
+        args: &ApplyArgs,
+    ) -> Result<Tensor> {
+        self.inner.run_apply(prep, meta, params, acc, args)
+    }
+
+    fn run_eval(
+        &self,
+        prep: &Prepared,
+        meta: &ModelMeta,
+        params: &Tensor,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f32, f32)> {
+        self.inner.run_eval(prep, meta, params, x, y)
+    }
+}
+
+/// [`ExecSession`] decorator that fires the plan's sites for its rank.
+pub struct FaultySession<'a> {
+    inner: Box<dyn ExecSession + 'a>,
+    plan: Arc<FaultPlan>,
+    rank: usize,
+    /// Step counter at the last accum call (resets the call index).
+    last_step: u64,
+    /// Accum calls this session has issued within `last_step`.
+    calls: u64,
+    /// True after an injected panic: the session is permanently lost.
+    dead: bool,
+}
+
+impl FaultySession<'_> {
+    fn check_alive(&self) -> Result<()> {
+        if self.dead {
+            return Err(InjectedFault {
+                step: self.plan.current_step(),
+                rank: self.rank,
+                what: "session lost to an injected panic",
+            }
+            .into());
+        }
+        Ok(())
+    }
+}
+
+impl ExecSession for FaultySession<'_> {
+    fn accum(&mut self, prep: &Prepared, args: &AccumArgs<'_>) -> Result<AccumStats> {
+        self.check_alive()?;
+        let step = self.plan.current_step();
+        if step != self.last_step {
+            self.last_step = step;
+            self.calls = 0;
+        }
+        let call = self.calls;
+        self.calls += 1;
+        match self.plan.take_worker(self.rank, call) {
+            Some(FaultKind::SlowWorker { millis }) => {
+                // A straggler, not a failure: stall, then run normally.
+                std::thread::sleep(std::time::Duration::from_millis(millis));
+            }
+            Some(FaultKind::AccumError) => {
+                return Err(InjectedFault { step, rank: self.rank, what: "accum error" }.into());
+            }
+            Some(FaultKind::WorkerPanic) => {
+                self.dead = true;
+                panic!("injected worker panic (step {step}, rank {})", self.rank);
+            }
+            _ => {}
+        }
+        self.inner.accum(prep, args)
+    }
+
+    fn apply(&mut self, prep: &Prepared, args: &ApplyArgs) -> Result<()> {
+        self.check_alive()?;
+        if self.plan.take_apply().is_some() {
+            return Err(InjectedFault {
+                step: self.plan.current_step(),
+                rank: self.rank,
+                what: "apply error",
+            }
+            .into());
+        }
+        self.inner.apply(prep, args)
+    }
+
+    fn zero_acc(&mut self) -> Result<()> {
+        self.check_alive()?;
+        self.inner.zero_acc()
+    }
+
+    fn eval(&self, prep: &Prepared, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        self.check_alive()?;
+        self.inner.eval(prep, x, y)
+    }
+
+    fn read_params(&self) -> Result<Tensor> {
+        self.check_alive()?;
+        self.inner.read_params()
+    }
+
+    fn write_params(&mut self, params: Tensor) -> Result<()> {
+        self.check_alive()?;
+        self.inner.write_params(params)
+    }
+
+    fn read_acc(&self) -> Result<Tensor> {
+        self.check_alive()?;
+        self.inner.read_acc()
+    }
+
+    fn write_acc(&mut self, acc: Tensor) -> Result<()> {
+        self.check_alive()?;
+        self.inner.write_acc(acc)
+    }
+}
+
+/// Re-assemble `runtime` around a fault-wrapped copy of its backend.
+/// The artifacts directory and manifest are shared; only the backend
+/// seam is decorated, so the faulty runtime drives the same compiled
+/// executables and produces the same bits wherever no fault fires.
+pub fn faulty_runtime(runtime: &Runtime, plan: Arc<FaultPlan>) -> Runtime {
+    Runtime::with_backend(
+        runtime.artifacts_dir().to_path_buf(),
+        runtime.manifest().clone(),
+        Arc::new(FaultyBackend::new(runtime.backend_handle(), plan)),
+    )
+}

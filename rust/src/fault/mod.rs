@@ -1,0 +1,35 @@
+//! Fault-tolerant training runtime: deterministic fault injection,
+//! bitwise-exact recovery, and crash-consistent checkpoints
+//! (DESIGN.md §11).
+//!
+//! Three layers, composed but independently usable:
+//!
+//! 1. **Injection** ([`plan`], [`inject`]): a seeded or hand-written
+//!    [`FaultPlan`] arms typed failures — accum/apply errors, worker
+//!    panics, slow-worker stalls, checkpoint truncation and bit
+//!    flips — at exact `(step, rank, call)` sites, and
+//!    [`faulty_runtime`] wraps any [`crate::runtime::Runtime`] so its
+//!    sessions fire them. Exposed as `dpshort train --inject-faults`.
+//! 2. **Recovery** (`cluster::parallel::run_groups` +
+//!    `coordinator::trainer`): per-worker panics and errors are caught
+//!    and the failed shard's group partials are recomputed on a
+//!    surviving session under the `RetryPolicy`; permanent rank loss
+//!    degrades to a smaller pool. The fixed-tree reduction contract
+//!    makes every recovered trajectory bitwise-identical to the
+//!    fault-free one, and the epsilon spend commits exactly once per
+//!    completed step.
+//! 3. **Durability** ([`checkpoint`]): atomic temp-file+rename
+//!    checkpoint writes with a content checksum; `--resume-latest`
+//!    skips torn/corrupt/mismatched files with typed errors and
+//!    resumes from the newest valid one.
+
+pub mod checkpoint;
+pub mod inject;
+pub mod plan;
+
+pub use checkpoint::{
+    checkpoint_file_name, latest_valid, load_checkpoint, write_checkpoint, CheckpointError,
+    ScanOutcome,
+};
+pub use inject::{faulty_runtime, FaultyBackend, FaultySession, InjectedFault};
+pub use plan::{FaultKind, FaultPlan, FaultSite};

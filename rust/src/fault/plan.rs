@@ -1,0 +1,370 @@
+//! Deterministic fault schedules: what fails, where, and when.
+//!
+//! A [`FaultPlan`] is a finite list of [`FaultSite`]s, each addressed
+//! by `(step, rank, call)` — the optimizer step, the worker rank
+//! (session-open order; rank 0 is the apply session), and the 0-based
+//! accum-call index the rank has issued within that step. Sites fire
+//! **at most once**: the injector consumes a site the first time its
+//! coordinates come up, so a retried group or apply call sails through
+//! — exactly the transient-fault shape the recovery layer is built
+//! for. Plans are either written explicitly (the
+//! `--inject-faults` spec grammar, [`FaultPlan::from_spec`]) or drawn
+//! from a dedicated ChaCha stream ([`FaultPlan::seeded`]), so every
+//! chaos schedule is reproducible from a seed — the property the
+//! `fault_recovery` proptest suite leans on.
+//!
+//! The fault stream uses its own domain-separation label
+//! (`b"faultpln"`), so it can never collide with the sampling or noise
+//! streams — injection timing is independent of everything the privacy
+//! analysis consumes.
+
+use crate::util::rng::ChaChaRng;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// What a fault site does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The accum call returns a typed error (transient worker fault;
+    /// the bound buffers are untouched, per the backend contract).
+    AccumError,
+    /// The apply call returns a typed error (the parameters are
+    /// untouched; the trainer retries with the *same* noise tuple).
+    ApplyError,
+    /// The worker thread panics mid-accum; the rank's session is
+    /// permanently lost and the pool degrades.
+    WorkerPanic,
+    /// The accum call stalls for `millis` before proceeding normally —
+    /// a straggler, not a failure; recovery must not engage and the
+    /// bits must not move.
+    SlowWorker {
+        /// Injected delay in milliseconds.
+        millis: u64,
+    },
+    /// The checkpoint file for the matching `TrainCheckpoint::step` is
+    /// written torn: truncated mid-JSON, bypassing the atomic
+    /// temp-file+rename protocol (simulating a crash mid-write).
+    CheckpointTruncate,
+    /// One bit of a parameter digit in the checkpoint JSON is flipped
+    /// after sealing (simulating bit rot; the file still parses, the
+    /// content checksum catches it).
+    CheckpointBitFlip,
+}
+
+impl FaultKind {
+    /// The spec-grammar name of this kind.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::AccumError => "accum-err",
+            FaultKind::ApplyError => "apply-err",
+            FaultKind::WorkerPanic => "panic",
+            FaultKind::SlowWorker { .. } => "slow",
+            FaultKind::CheckpointTruncate => "ckpt-truncate",
+            FaultKind::CheckpointBitFlip => "ckpt-flip",
+        }
+    }
+}
+
+/// One planned failure: a [`FaultKind`] armed at `(step, rank, call)`.
+///
+/// For [`FaultKind::ApplyError`] the `rank`/`call` coordinates are
+/// ignored (apply runs once per step on the apply session); for the
+/// checkpoint kinds, `step` addresses the checkpoint's step counter
+/// and `rank`/`call` are ignored.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSite {
+    /// Optimizer step (or checkpoint step counter) the site arms at.
+    pub step: u64,
+    /// Worker rank (session-open order; rank 0 = the apply session).
+    pub rank: usize,
+    /// 0-based accum-call index within `(step, rank)`.
+    pub call: u64,
+    /// What happens when the site fires.
+    pub kind: FaultKind,
+}
+
+impl std::fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}@s{}.r{}.c{}",
+            self.kind.name(),
+            self.step,
+            self.rank,
+            self.call
+        )?;
+        if let FaultKind::SlowWorker { millis } = self.kind {
+            write!(f, ".ms{millis}")?;
+        }
+        Ok(())
+    }
+}
+
+/// A reproducible fault schedule plus its firing state. Shared as
+/// `Arc<FaultPlan>` between the fault-wrapped backend (which consumes
+/// sites), the trainer (which announces the step counter), and the
+/// checkpoint writer (which consumes the checkpoint kinds).
+#[derive(Debug)]
+pub struct FaultPlan {
+    sites: Vec<FaultSite>,
+    /// Parallel to `sites`: true once a site has fired.
+    fired: Mutex<Vec<bool>>,
+    /// Step counter announced by the trainer before each step.
+    current_step: AtomicU64,
+}
+
+/// Lock with poison recovery: a `Vec<bool>` of fire flags has no
+/// invariant a panicking holder could break mid-update.
+fn lock_fired(m: &Mutex<Vec<bool>>) -> std::sync::MutexGuard<'_, Vec<bool>> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+impl FaultPlan {
+    /// A plan over an explicit site list.
+    pub fn new(sites: Vec<FaultSite>) -> Self {
+        let fired = Mutex::new(vec![false; sites.len()]);
+        Self { sites, fired, current_step: AtomicU64::new(0) }
+    }
+
+    /// Draw `count` worker-phase sites (accum errors, panics, slow
+    /// workers, apply errors) from a dedicated ChaCha stream, over
+    /// `steps` optimizer steps and `workers` ranks. Same
+    /// `(seed, count, steps, workers)` → same schedule, always.
+    pub fn seeded(seed: u64, count: usize, steps: u64, workers: usize) -> Self {
+        let mut rng = ChaChaRng::from_seed_stream(seed, 0, b"faultpln");
+        let steps = steps.max(1);
+        let workers = workers.max(1);
+        let mut sites = Vec::with_capacity(count);
+        for _ in 0..count {
+            let step = rng.gen_range(steps as usize) as u64;
+            let rank = rng.gen_range(workers);
+            let call = rng.gen_range(2) as u64;
+            let kind = match rng.gen_range(4) {
+                0 => FaultKind::AccumError,
+                1 => FaultKind::WorkerPanic,
+                2 => FaultKind::SlowWorker { millis: 1 + rng.gen_range(20) as u64 },
+                _ => FaultKind::ApplyError,
+            };
+            sites.push(FaultSite { step, rank, call, kind });
+        }
+        Self::new(sites)
+    }
+
+    /// Parse an `--inject-faults` spec: comma-separated entries, each
+    ///
+    /// ```text
+    /// KIND@sSTEP[.rRANK][.cCALL][.msMILLIS]
+    /// random.seedN.countM
+    /// ```
+    ///
+    /// where `KIND` is one of `accum-err`, `apply-err`, `panic`,
+    /// `slow` (with optional `.msMILLIS`, default 20), `ckpt-truncate`,
+    /// `ckpt-flip`; `rRANK` and `cCALL` default to 0. A `random.` entry
+    /// appends a [`Self::seeded`] schedule drawn over `steps` ×
+    /// `workers`.
+    ///
+    /// Examples: `panic@s1.r2`, `slow@s0.r1.c0.ms50`,
+    /// `accum-err@s2.r0.c1,apply-err@s3`, `random.seed7.count4`.
+    pub fn from_spec(spec: &str, steps: u64, workers: usize) -> Result<Self> {
+        let mut sites = Vec::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            if let Some(rest) = entry.strip_prefix("random.") {
+                let (mut seed, mut count) = (None, None);
+                for tok in rest.split('.') {
+                    if let Some(v) = tok.strip_prefix("seed") {
+                        seed = Some(v.parse::<u64>().map_err(|_| bad_token(entry, tok))?);
+                    } else if let Some(v) = tok.strip_prefix("count") {
+                        count = Some(v.parse::<usize>().map_err(|_| bad_token(entry, tok))?);
+                    } else {
+                        return Err(bad_token(entry, tok));
+                    }
+                }
+                let seed = seed.ok_or_else(|| anyhow!("`{entry}`: missing seedN"))?;
+                let count = count.ok_or_else(|| anyhow!("`{entry}`: missing countM"))?;
+                sites.extend(Self::seeded(seed, count, steps, workers).sites);
+                continue;
+            }
+            let (kind_name, coords) = entry
+                .split_once('@')
+                .ok_or_else(|| anyhow!("`{entry}`: expected KIND@sSTEP[...]"))?;
+            let (mut step, mut rank, mut call, mut millis) = (None, 0usize, 0u64, 20u64);
+            for tok in coords.split('.') {
+                if let Some(v) = tok.strip_prefix("ms") {
+                    millis = v.parse().map_err(|_| bad_token(entry, tok))?;
+                } else if let Some(v) = tok.strip_prefix('s') {
+                    step = Some(v.parse::<u64>().map_err(|_| bad_token(entry, tok))?);
+                } else if let Some(v) = tok.strip_prefix('r') {
+                    rank = v.parse().map_err(|_| bad_token(entry, tok))?;
+                } else if let Some(v) = tok.strip_prefix('c') {
+                    call = v.parse().map_err(|_| bad_token(entry, tok))?;
+                } else {
+                    return Err(bad_token(entry, tok));
+                }
+            }
+            let step = step.ok_or_else(|| anyhow!("`{entry}`: missing sSTEP"))?;
+            let kind = match kind_name {
+                "accum-err" => FaultKind::AccumError,
+                "apply-err" => FaultKind::ApplyError,
+                "panic" => FaultKind::WorkerPanic,
+                "slow" => FaultKind::SlowWorker { millis },
+                "ckpt-truncate" => FaultKind::CheckpointTruncate,
+                "ckpt-flip" => FaultKind::CheckpointBitFlip,
+                other => {
+                    return Err(anyhow!(
+                        "`{entry}`: unknown fault kind `{other}` (expected accum-err, \
+                         apply-err, panic, slow, ckpt-truncate, or ckpt-flip)"
+                    ))
+                }
+            };
+            sites.push(FaultSite { step, rank, call, kind });
+        }
+        if sites.is_empty() {
+            return Err(anyhow!("fault spec `{spec}` contains no sites"));
+        }
+        Ok(Self::new(sites))
+    }
+
+    /// Announce the optimizer step about to execute; injection sites
+    /// are matched against this counter.
+    pub fn begin_step(&self, step: u64) {
+        self.current_step.store(step, Ordering::SeqCst);
+    }
+
+    /// The step counter most recently announced via [`Self::begin_step`].
+    pub fn current_step(&self) -> u64 {
+        self.current_step.load(Ordering::SeqCst)
+    }
+
+    /// Consume the first un-fired worker-phase site (accum error,
+    /// panic, slow worker) armed at `(current step, rank, call)`.
+    pub fn take_worker(&self, rank: usize, call: u64) -> Option<FaultKind> {
+        let step = self.current_step();
+        self.take(|s| {
+            matches!(
+                s.kind,
+                FaultKind::AccumError | FaultKind::WorkerPanic | FaultKind::SlowWorker { .. }
+            ) && s.step == step
+                && s.rank == rank
+                && s.call == call
+        })
+    }
+
+    /// Consume the first un-fired apply-error site armed at the current
+    /// step (rank/call are ignored: apply runs once per step).
+    pub fn take_apply(&self) -> Option<FaultKind> {
+        let step = self.current_step();
+        self.take(|s| s.kind == FaultKind::ApplyError && s.step == step)
+    }
+
+    /// Consume the first un-fired checkpoint-corruption site whose
+    /// `step` matches the checkpoint's step counter.
+    pub fn take_checkpoint(&self, ckpt_step: u64) -> Option<FaultKind> {
+        self.take(|s| {
+            matches!(s.kind, FaultKind::CheckpointTruncate | FaultKind::CheckpointBitFlip)
+                && s.step == ckpt_step
+        })
+    }
+
+    fn take(&self, matches: impl Fn(&FaultSite) -> bool) -> Option<FaultKind> {
+        let mut fired = lock_fired(&self.fired);
+        for (i, site) in self.sites.iter().enumerate() {
+            if !fired[i] && matches(site) {
+                fired[i] = true;
+                return Some(site.kind);
+            }
+        }
+        None
+    }
+
+    /// Every planned site, fired or not.
+    pub fn sites(&self) -> &[FaultSite] {
+        &self.sites
+    }
+
+    /// The sites that have fired so far, in plan order.
+    pub fn fired(&self) -> Vec<FaultSite> {
+        let fired = lock_fired(&self.fired);
+        self.sites
+            .iter()
+            .zip(fired.iter())
+            .filter(|(_, &f)| f)
+            .map(|(s, _)| *s)
+            .collect()
+    }
+}
+
+fn bad_token(entry: &str, tok: &str) -> anyhow::Error {
+    anyhow!("`{entry}`: bad token `{tok}`")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_roundtrip_and_defaults() {
+        let plan =
+            FaultPlan::from_spec("panic@s1.r2, slow@s0.r1.c0.ms50,accum-err@s2.c1", 4, 4).unwrap();
+        assert_eq!(
+            plan.sites(),
+            &[
+                FaultSite { step: 1, rank: 2, call: 0, kind: FaultKind::WorkerPanic },
+                FaultSite { step: 0, rank: 1, call: 0, kind: FaultKind::SlowWorker { millis: 50 } },
+                FaultSite { step: 2, rank: 0, call: 1, kind: FaultKind::AccumError },
+            ]
+        );
+        // Display renders back into parseable spec entries.
+        for site in plan.sites() {
+            let re = FaultPlan::from_spec(&site.to_string(), 4, 4).unwrap();
+            assert_eq!(re.sites()[0], *site);
+        }
+    }
+
+    #[test]
+    fn spec_rejects_garbage() {
+        assert!(FaultPlan::from_spec("", 4, 1).is_err());
+        assert!(FaultPlan::from_spec("panic", 4, 1).is_err(), "missing @");
+        assert!(FaultPlan::from_spec("panic@r1", 4, 1).is_err(), "missing step");
+        assert!(FaultPlan::from_spec("explode@s1", 4, 1).is_err(), "unknown kind");
+        assert!(FaultPlan::from_spec("panic@s1.x9", 4, 1).is_err(), "bad token");
+        assert!(FaultPlan::from_spec("random.seed1", 4, 1).is_err(), "missing count");
+    }
+
+    #[test]
+    fn seeded_schedules_are_reproducible_and_in_range() {
+        let a = FaultPlan::seeded(7, 16, 5, 4);
+        let b = FaultPlan::seeded(7, 16, 5, 4);
+        assert_eq!(a.sites(), b.sites());
+        assert_ne!(a.sites(), FaultPlan::seeded(8, 16, 5, 4).sites());
+        for s in a.sites() {
+            assert!(s.step < 5);
+            assert!(s.rank < 4);
+        }
+    }
+
+    #[test]
+    fn sites_fire_at_most_once_and_only_at_their_address() {
+        let plan = FaultPlan::from_spec("accum-err@s1.r1.c0,apply-err@s1", 4, 2).unwrap();
+        plan.begin_step(0);
+        assert_eq!(plan.take_worker(1, 0), None, "wrong step");
+        assert_eq!(plan.take_apply(), None);
+        plan.begin_step(1);
+        assert_eq!(plan.take_worker(0, 0), None, "wrong rank");
+        assert_eq!(plan.take_worker(1, 1), None, "wrong call");
+        assert_eq!(plan.take_worker(1, 0), Some(FaultKind::AccumError));
+        assert_eq!(plan.take_worker(1, 0), None, "consumed: the retry passes");
+        assert_eq!(plan.take_apply(), Some(FaultKind::ApplyError));
+        assert_eq!(plan.take_apply(), None);
+        assert_eq!(plan.fired().len(), 2);
+    }
+
+    #[test]
+    fn checkpoint_sites_address_the_checkpoint_step() {
+        let plan = FaultPlan::from_spec("ckpt-truncate@s2,ckpt-flip@s3", 4, 1).unwrap();
+        assert_eq!(plan.take_checkpoint(1), None);
+        assert_eq!(plan.take_checkpoint(2), Some(FaultKind::CheckpointTruncate));
+        assert_eq!(plan.take_checkpoint(2), None, "consumed");
+        assert_eq!(plan.take_checkpoint(3), Some(FaultKind::CheckpointBitFlip));
+    }
+}

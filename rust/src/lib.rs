@@ -78,6 +78,7 @@ pub mod clipping;
 pub mod cluster;
 pub mod coordinator;
 pub mod data;
+pub mod fault;
 pub mod memory;
 pub mod metrics;
 pub mod models;
@@ -88,8 +89,10 @@ pub mod runtime;
 pub mod util;
 
 pub use analysis::{audit_run, AuditReport, Diagnostic, Severity};
+pub use cluster::parallel::{RecoveryEvent, WorkerFailure};
 pub use coordinator::batcher::{BatchMemoryManager, BatchingMode, PhysicalBatch};
-pub use coordinator::config::TrainConfig;
+pub use coordinator::config::{RetryPolicy, TrainConfig};
+pub use fault::{faulty_runtime, CheckpointError, FaultPlan, InjectedFault};
 pub use coordinator::sampler::{
     AnySampler, PoissonSampler, Sampler, SamplerChoice, ShuffleSampler,
 };

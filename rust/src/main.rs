@@ -27,7 +27,8 @@ use dp_shortcuts::clipping::{clip_method_variant, CLI_CLIP_METHODS};
 use dp_shortcuts::coordinator::batcher::BatchingMode;
 use dp_shortcuts::coordinator::config::TrainConfig;
 use dp_shortcuts::coordinator::sampler::SamplerChoice;
-use dp_shortcuts::coordinator::trainer::{resolve_sigma, TrainSession};
+use dp_shortcuts::coordinator::trainer::{config_fingerprint, resolve_sigma, TrainSession};
+use dp_shortcuts::fault::{self, FaultPlan};
 use dp_shortcuts::privacy::{calibrate_sigma, AccountantKind, RdpAccountant};
 use dp_shortcuts::report;
 use dp_shortcuts::runtime::{hlo_analysis, Runtime};
@@ -56,6 +57,23 @@ const USAGE: &str = "usage: dpshort <list|train|bench|plan|account|scale|report>
                                     accounting; exact resume is the
                                     TrainCheckpoint API)
                 --save-params FILE  write the final parameters
+                --retries N --retry-backoff-ms MS  per-step recovery
+                             budget (a retry replays the SAME Poisson
+                             draw and noise tuple; wall-clock only,
+                             DESIGN.md §11)
+                --autosave N        checkpoint every N steps (atomic
+                             temp-file+rename write with a content
+                             checksum) into --checkpoint-dir DIR
+                             (default checkpoints)
+                --resume-latest     resume from the newest valid
+                             checkpoint in --checkpoint-dir; torn,
+                             corrupt, or mismatched files are skipped
+                             with typed errors
+                --inject-faults SPEC  deterministic fault injection:
+                             comma-separated KIND@sSTEP[.rRANK][.cCALL]
+                             [.msMILLIS] with KIND one of accum-err|
+                             apply-err|panic|slow|ckpt-truncate|
+                             ckpt-flip, or random.seedN.countM
   bench:        accum/apply throughput sweep -> BENCH_throughput.json
                 --repeats R --quick --out FILE (default BENCH_throughput.json)
                 --model/--variant/--batch restrict the sweep
@@ -74,6 +92,10 @@ const USAGE: &str = "usage: dpshort <list|train|bench|plan|account|scale|report>
                              (reporting only, never the trajectory)
                 --allow-unsound  run past Deny audit diagnostics; the
                              report and checkpoints are stamped unaudited
+                --retry-fresh-draw  declare a retry policy that re-draws
+                             the mask/noise on step retry; never
+                             executed — the audit denies it
+                             (retry.fresh-draw)
   account:      --rate Q --steps N --delta D [--sigma S | --epsilon E]
   audit:        static plan audit, no example is ever touched
                 train-style flags pick the run; --json for the
@@ -142,6 +164,11 @@ fn config_from(args: &Args, rt: &Runtime) -> Result<TrainConfig> {
             .ok_or_else(|| anyhow!("unknown accountant {a:?} (rdp|pld)"))?;
     }
     c.allow_unsound = args.get_bool("allow-unsound");
+    c.retry.max_attempts =
+        args.get_parse_or("retries", c.retry.max_attempts).map_err(|e| anyhow!(e))?;
+    c.retry.backoff_ms =
+        args.get_parse_or("retry-backoff-ms", c.retry.backoff_ms).map_err(|e| anyhow!(e))?;
+    c.retry.fresh_draw_on_retry = args.get_bool("retry-fresh-draw");
     if args.get_bool("naive-mode") || c.variant == "naive" {
         c.mode = BatchingMode::Variable;
     }
@@ -186,6 +213,26 @@ fn cmd_list(rt: &Runtime) -> Result<()> {
 
 fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
     let cfg = config_from(args, rt)?;
+    // Fault injection wraps the backend BEFORE any session opens, so
+    // injection rank ids line up with the trainer's open order.
+    let fault_plan: Option<std::sync::Arc<FaultPlan>> = match args.get("inject-faults") {
+        Some(spec) => Some(std::sync::Arc::new(FaultPlan::from_spec(
+            spec,
+            cfg.steps,
+            cfg.workers.max(1),
+        )?)),
+        None => None,
+    };
+    let faulted;
+    let rt = match &fault_plan {
+        Some(plan) => {
+            faulted = fault::faulty_runtime(rt, std::sync::Arc::clone(plan));
+            &faulted
+        }
+        None => rt,
+    };
+    let autosave: u64 = args.get_parse_or("autosave", 0).map_err(|e| anyhow!(e))?;
+    let ckpt_dir = PathBuf::from(args.get_or("checkpoint-dir", "checkpoints"));
     println!(
         "train: backend={} model={} variant={} mode={:?} B={} q={} steps={} E[L]={} workers={}",
         rt.backend_name(),
@@ -199,8 +246,41 @@ fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
         cfg.workers.max(1)
     );
     // Step-driven session: the same hot loop Trainer::run wraps, but
-    // with the checkpoint seam exposed for --load-params/--save-params.
-    let mut session = TrainSession::new(rt, cfg.clone())?;
+    // with the checkpoint seam exposed for --load-params/--save-params
+    // and the crash-consistent --autosave/--resume-latest store.
+    // `--resume-latest`: scan for the newest checkpoint that survives
+    // the typed validation chain, surfacing every rejected file.
+    let mut start = None;
+    if args.get_bool("resume-latest") {
+        let fingerprint = config_fingerprint(&cfg, resolve_sigma(&cfg)?);
+        let scan = fault::latest_valid(&ckpt_dir, &fingerprint)?;
+        for (path, err) in &scan.skipped {
+            eprintln!("resume-latest: skipping {}: {err}", path.display());
+        }
+        match scan.found {
+            Some((path, ckpt)) => {
+                eprintln!("resuming from {} (step {})", path.display(), ckpt.step);
+                start = Some(ckpt);
+            }
+            None => eprintln!(
+                "resume-latest: no valid checkpoint in {}; starting fresh",
+                ckpt_dir.display()
+            ),
+        }
+    }
+    let mut session = match (start, &fault_plan) {
+        (Some(ckpt), Some(plan)) => TrainSession::resume_with_faults(
+            rt,
+            cfg.clone(),
+            ckpt,
+            std::sync::Arc::clone(plan),
+        )?,
+        (Some(ckpt), None) => TrainSession::resume(rt, cfg.clone(), ckpt)?,
+        (None, Some(plan)) => {
+            TrainSession::with_faults(rt, cfg.clone(), std::sync::Arc::clone(plan))?
+        }
+        (None, None) => TrainSession::new(rt, cfg.clone())?,
+    };
     if let Some(p) = args.get("load-params") {
         let params = session.model().load_params(Path::new(p))?;
         session.write_params(params)?;
@@ -211,6 +291,11 @@ fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
     }
     while !session.done() {
         session.step()?;
+        if autosave > 0 && session.step_index() % autosave == 0 {
+            let ckpt = session.checkpoint()?;
+            let path = fault::write_checkpoint(&ckpt_dir, &ckpt, fault_plan.as_deref())?;
+            eprintln!("autosaved {}", path.display());
+        }
     }
     if let Some(p) = args.get("save-params") {
         // The session's own checkpoint seam: read_params is the exact
@@ -227,6 +312,19 @@ fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
         eprintln!(
             "WARNING: this run executed past Deny audit diagnostics (--allow-unsound); \
              the reported epsilon carries no static-audit backing"
+        );
+    }
+    if !rep.recovery_events.is_empty() {
+        println!("recovery events ({}):", rep.recovery_events.len());
+        for e in &rep.recovery_events {
+            let group = e.group.map(|g| format!(" group {g}")).unwrap_or_default();
+            println!("  step {:>3} rank {}{group}: {}: {}", e.step, e.rank, e.action, e.detail);
+        }
+        println!(
+            "worker pool: finished with {} of {} sessions (bitwise-identical by the \
+             fixed-tree contract)",
+            rep.final_workers,
+            cfg.workers.max(1)
         );
     }
     if cfg.is_private() {
@@ -540,7 +638,18 @@ fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(
         &raw,
-        &["bf16", "naive-mode", "quick", "help", "json", "allow-unsound", "source", "ladder"],
+        &[
+            "bf16",
+            "naive-mode",
+            "quick",
+            "help",
+            "json",
+            "allow-unsound",
+            "source",
+            "ladder",
+            "resume-latest",
+            "retry-fresh-draw",
+        ],
     )
     .map_err(|e| anyhow!(e))?;
     if args.positional.is_empty() || args.get_bool("help") {

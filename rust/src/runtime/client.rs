@@ -128,6 +128,20 @@ impl Runtime {
         &self.manifest
     }
 
+    /// The shared backend handle. For wrappers that re-assemble a
+    /// runtime around a decorated backend via [`Runtime::with_backend`]
+    /// (the fault injector, `crate::fault::faulty_runtime`, is the
+    /// in-tree example).
+    pub fn backend_handle(&self) -> Arc<dyn Backend + Send + Sync> {
+        Arc::clone(&self.backend)
+    }
+
+    /// Artifacts directory this runtime resolves executables from
+    /// (`"."` for the artifact-free reference backend).
+    pub fn artifacts_dir(&self) -> &std::path::Path {
+        &self.dir
+    }
+
     /// The shared "no `--model` given" default: `vit-micro` when the
     /// manifest has it (the artifact ladder's canonical rung, keeping
     /// paper-figure commands stable), then the reference ladder's

@@ -74,7 +74,13 @@ impl Backend for PjrtBackend {
     fn prepare(&self, dir: &Path, _meta: &ModelMeta, exe: &ExecutableMeta) -> Result<Prepared> {
         let full = dir.join(&exe.path);
         let client = &self.client;
-        let (_, compile_seconds) = self.cache.lock().unwrap().get_or_compile(&exe.path, || {
+        // Append-only cache: recover a lock poisoned by a panicking
+        // worker (same rationale as the reference backend).
+        let (_, compile_seconds) = self
+            .cache
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .get_or_compile(&exe.path, || {
             let proto = xla::HloModuleProto::from_text_file(&full)
                 .map_err(xerr)
                 .with_context(|| format!("parsing HLO text {}", full.display()))?;
@@ -88,11 +94,11 @@ impl Backend for PjrtBackend {
     }
 
     fn is_compiled(&self, key: &str) -> bool {
-        self.cache.lock().unwrap().is_cached(key)
+        self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner).is_cached(key)
     }
 
     fn compile_records(&self) -> Vec<CompileRecord> {
-        self.cache.lock().unwrap().records().to_vec()
+        self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner).records().to_vec()
     }
 
     fn run_accum(

@@ -209,7 +209,15 @@ struct PooledScratch<'a> {
 
 impl<'a> PooledScratch<'a> {
     fn take(pool: &'a Mutex<Vec<Scratch>>) -> Self {
-        let scratch = pool.lock().unwrap().pop().unwrap_or_default();
+        // Recover from poisoning: a panicking worker (e.g. an injected
+        // fault, DESIGN.md §11) may die holding this lock, but scratch
+        // buffers are resized before every use, so a half-written one
+        // is still safe to reuse.
+        let scratch = pool
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .pop()
+            .unwrap_or_default();
         Self { pool, scratch: Some(scratch) }
     }
 
@@ -221,7 +229,7 @@ impl<'a> PooledScratch<'a> {
 impl Drop for PooledScratch<'_> {
     fn drop(&mut self) {
         if let Some(s) = self.scratch.take() {
-            self.pool.lock().unwrap().push(s);
+            self.pool.lock().unwrap_or_else(std::sync::PoisonError::into_inner).push(s);
         }
     }
 }
@@ -321,9 +329,11 @@ impl ReferenceBackend {
     }
 
     fn spec(&self, prep: &Prepared) -> Result<Arc<RefExec>> {
+        // The compile cache is append-only, so a lock poisoned by a
+        // panicking worker still holds a consistent map — recover it.
         self.cache
             .lock()
-            .unwrap()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
             .get_cached(&prep.key)
             .ok_or_else(|| anyhow!("executable {} was not prepared", prep.key))
     }
@@ -704,17 +714,20 @@ impl Backend for ReferenceBackend {
             },
             other => return Err(anyhow!("unknown executable kind {other:?} for {}", exe.path)),
         };
-        let (_, compile_seconds) =
-            self.cache.lock().unwrap().get_or_compile(&exe.path, || Ok(spec))?;
+        let (_, compile_seconds) = self
+            .cache
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .get_or_compile(&exe.path, || Ok(spec))?;
         Ok(Prepared { key: exe.path.clone(), compile_seconds })
     }
 
     fn is_compiled(&self, key: &str) -> bool {
-        self.cache.lock().unwrap().is_cached(key)
+        self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner).is_cached(key)
     }
 
     fn compile_records(&self) -> Vec<CompileRecord> {
-        self.cache.lock().unwrap().records().to_vec()
+        self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner).records().to_vec()
     }
 
     /// Synthesized deterministic init, laid out by the layer plan:

@@ -103,6 +103,17 @@ fn deny_fixtures() -> Vec<(&'static str, RunPlan)> {
     p.reduction.worker_dependent = true;
     out.push((rule::REDUCE_SCHEDULE, p));
 
+    // Step retry re-samples the Poisson mask — the retry analogue of
+    // the shortcut epsilon (DESIGN.md §11).
+    let mut p = test_plan(3);
+    p.retry.resample_on_retry = true;
+    out.push((rule::RETRY_FRESH_DRAW, p));
+
+    // Step retry advances the noise stream instead of replaying it.
+    let mut p = test_plan(3);
+    p.retry.fresh_noise_on_retry = true;
+    out.push((rule::RETRY_FRESH_DRAW, p));
+
     // A no-materialization variant materializing [B, P] grads.
     let mut p = test_plan(3);
     p.choices = vec![LayerChoice::PerExample; 3];
@@ -360,6 +371,7 @@ fn the_unaudited_stamp_is_sticky_across_resume() {
     let mut ckpt = session.checkpoint().unwrap();
     assert!(!ckpt.unaudited);
     ckpt.unaudited = true; // as if an earlier segment ran --allow-unsound
+    ckpt.seal(); // the stamp is covered by the content checksum
     let resumed = TrainSession::resume(&rt, e2e_config(), ckpt).unwrap();
     assert!(resumed.unaudited());
 }

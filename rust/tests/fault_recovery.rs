@@ -1,0 +1,466 @@
+//! Chaos suite for the fault-tolerant training runtime (DESIGN.md §11):
+//! for **any** injected fault schedule, a run either recovers to a
+//! trajectory bitwise-identical to the fault-free run — parameters,
+//! per-step losses, and epsilon — or aborts with a *typed* error.
+//! Never a panic across the API boundary, never an epsilon overspend,
+//! never a noise stream reused for a different draw (the bit-equality
+//! of the recovered trajectory is exactly that property: a retry that
+//! redrew the mask or advanced the noise stream could not reproduce
+//! the fault-free bits).
+
+use dp_shortcuts::cluster::parallel::WorkerFailure;
+use dp_shortcuts::coordinator::batcher::BatchingMode;
+use dp_shortcuts::coordinator::config::TrainConfig;
+use dp_shortcuts::coordinator::trainer::{
+    config_fingerprint, resolve_sigma, TrainCheckpoint, TrainReport, TrainSession, Trainer,
+};
+use dp_shortcuts::fault::{
+    checkpoint_file_name, faulty_runtime, latest_valid, load_checkpoint, write_checkpoint,
+    CheckpointError, FaultPlan,
+};
+use dp_shortcuts::runtime::{Runtime, REFERENCE_MODEL};
+use proptest::prelude::*;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+/// Injected worker panics are *expected* here; silence their default
+/// hook output so chaos runs don't spam the test log. Everything else
+/// still prints through the previous hook.
+fn quiet_injected_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let msg = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| info.payload().downcast_ref::<&str>().copied())
+                .unwrap_or("");
+            if !msg.contains("injected worker panic") {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Small-but-multi-group config: E[L] = 24 over physical batch 4, so
+/// every step has ~6 accumulation groups to shard, fail, and re-run.
+fn chaos_config(variant: &str, workers: usize, seed: u64) -> TrainConfig {
+    TrainConfig {
+        model: REFERENCE_MODEL.into(),
+        variant: variant.into(),
+        mode: BatchingMode::Masked,
+        dataset_size: 48,
+        sampling_rate: 0.5,
+        physical_batch: 4,
+        steps: 3,
+        lr: 0.05,
+        noise_multiplier: Some(1.0),
+        eval_examples: 0,
+        seed,
+        workers,
+        ..Default::default()
+    }
+}
+
+/// The fault-free trajectory every recovered run must reproduce.
+/// Runs single-worker: the fixed-tree contract says worker count never
+/// moves bits, so this is also the N-worker fault-free trajectory.
+fn baseline(cfg: &TrainConfig) -> TrainReport {
+    let mut c = cfg.clone();
+    c.workers = 1;
+    let rt = Runtime::reference();
+    Trainer::new(&rt, c).unwrap().run().unwrap()
+}
+
+/// Drive a full run over a fault-wrapped runtime.
+fn chaos_run(cfg: &TrainConfig, plan: Arc<FaultPlan>) -> anyhow::Result<TrainReport> {
+    let rt = Runtime::reference();
+    let frt = faulty_runtime(&rt, Arc::clone(&plan));
+    let mut s = TrainSession::with_faults(&frt, cfg.clone(), plan)?;
+    while !s.done() {
+        s.step()?;
+    }
+    s.finish()
+}
+
+fn assert_matches_baseline(rep: &TrainReport, base: &TrainReport) {
+    assert_eq!(
+        bits(&rep.final_params),
+        bits(&base.final_params),
+        "recovered run diverged from the fault-free trajectory"
+    );
+    assert_eq!(rep.steps.len(), base.steps.len());
+    for (a, b) in rep.steps.iter().zip(&base.steps) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.logical_batch, b.logical_batch, "step {}", a.step);
+        assert_eq!(a.computed_examples, b.computed_examples, "step {}", a.step);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {}", a.step);
+    }
+    assert_eq!(rep.epsilon_spent.to_bits(), base.epsilon_spent.to_bits());
+}
+
+/// Fresh scratch dir under the system temp root, cleaned on entry so a
+/// crashed previous run can't leak stale files into the assertions.
+fn scratch_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dpshort_fault_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+// ---------------------------------------------------------------------
+// Deterministic single-fault scenarios
+// ---------------------------------------------------------------------
+
+#[test]
+fn worker_panic_degrades_the_pool_and_recovers_bitwise() {
+    quiet_injected_panics();
+    let cfg = chaos_config("masked", 2, 7);
+    let base = baseline(&cfg);
+    // Sanity: the step really has multiple groups, so rank 1 owns work.
+    assert!(base.steps[1].logical_batch > cfg.physical_batch);
+
+    let plan = Arc::new(FaultPlan::from_spec("panic@s1.r1.c0", cfg.steps, 2).unwrap());
+    let rep = chaos_run(&cfg, plan).unwrap();
+    assert_matches_baseline(&rep, &base);
+    // The pool degraded: rank 1 is gone, the run finished on rank 0.
+    assert_eq!(rep.final_workers, 1);
+    let actions: Vec<&str> = rep.recovery_events.iter().map(|e| e.action.as_str()).collect();
+    assert!(actions.contains(&"rank-lost"), "events: {actions:?}");
+    assert!(actions.contains(&"group-recovered"), "events: {actions:?}");
+    let lost = rep.recovery_events.iter().find(|e| e.action == "rank-lost").unwrap();
+    assert_eq!((lost.step, lost.rank), (1, 1));
+}
+
+#[test]
+fn rank_zero_panic_promotes_a_peer_bitwise() {
+    quiet_injected_panics();
+    let cfg = chaos_config("ghost", 2, 11);
+    let base = baseline(&cfg);
+
+    // The apply session itself dies; a surviving peer is promoted and
+    // must produce exactly the bits rank 0 would have (the broadcast
+    // invariant: every session holds identical pre-apply params).
+    let plan = Arc::new(FaultPlan::from_spec("panic@s0.r0.c0", cfg.steps, 2).unwrap());
+    let rep = chaos_run(&cfg, plan).unwrap();
+    assert_matches_baseline(&rep, &base);
+    assert_eq!(rep.final_workers, 1);
+    let lost = rep.recovery_events.iter().find(|e| e.action == "rank-lost").unwrap();
+    assert_eq!((lost.step, lost.rank), (0, 0));
+}
+
+#[test]
+fn transient_accum_error_is_rerun_without_losing_the_rank() {
+    let cfg = chaos_config("masked", 2, 3);
+    let base = baseline(&cfg);
+
+    let plan = Arc::new(FaultPlan::from_spec("accum-err@s1.r0.c0", cfg.steps, 2).unwrap());
+    let rep = chaos_run(&cfg, plan).unwrap();
+    assert_matches_baseline(&rep, &base);
+    // An error is transient: the rank survives, nothing degrades.
+    assert_eq!(rep.final_workers, 2);
+    let actions: Vec<&str> = rep.recovery_events.iter().map(|e| e.action.as_str()).collect();
+    assert!(actions.contains(&"group-failed"), "events: {actions:?}");
+    assert!(actions.contains(&"group-recovered"), "events: {actions:?}");
+    assert!(!actions.contains(&"rank-lost"), "events: {actions:?}");
+}
+
+#[test]
+fn apply_error_retries_with_the_same_noise_tuple() {
+    let cfg = chaos_config("masked", 1, 5);
+    let base = baseline(&cfg);
+
+    // The retried apply reuses the identical ApplyArgs — same per-step
+    // noise seed — so bit-equality with the baseline proves the noise
+    // stream was not advanced by the failure.
+    let plan = Arc::new(FaultPlan::from_spec("apply-err@s2", cfg.steps, 1).unwrap());
+    let rep = chaos_run(&cfg, plan).unwrap();
+    assert_matches_baseline(&rep, &base);
+    let retried = rep.recovery_events.iter().find(|e| e.action == "apply-retried").unwrap();
+    assert_eq!(retried.step, 2);
+}
+
+#[test]
+fn slow_worker_is_a_straggler_not_a_failure() {
+    let cfg = chaos_config("masked", 2, 9);
+    let base = baseline(&cfg);
+
+    let plan = Arc::new(FaultPlan::from_spec("slow@s0.r1.c0.ms30", cfg.steps, 2).unwrap());
+    let rep = chaos_run(&cfg, plan).unwrap();
+    assert_matches_baseline(&rep, &base);
+    // No recovery engaged: a stall moves wall-clock, never bits.
+    assert!(rep.recovery_events.is_empty(), "events: {:?}", rep.recovery_events);
+    assert_eq!(rep.final_workers, 2);
+    // The site actually fired (the test exercised something).
+    assert_eq!(plan.fired().len(), 1);
+}
+
+#[test]
+fn exhausted_retry_budget_is_a_typed_error_and_the_step_is_replayable() {
+    let mut cfg = chaos_config("masked", 1, 13);
+    cfg.retry.max_attempts = 1; // retries disabled
+    let base = baseline(&cfg);
+
+    let plan = Arc::new(FaultPlan::from_spec("accum-err@s0.r0.c0", cfg.steps, 1).unwrap());
+    let rt = Runtime::reference();
+    let frt = faulty_runtime(&rt, Arc::clone(&plan));
+    let mut s = TrainSession::with_faults(&frt, cfg.clone(), Arc::clone(&plan)).unwrap();
+
+    let eps_before = s.epsilon_spent();
+    let err = s.step().unwrap_err();
+    assert!(
+        err.downcast_ref::<WorkerFailure>().is_some(),
+        "expected a typed WorkerFailure, got: {err:#}"
+    );
+    // The failed step committed nothing: epsilon records only after a
+    // successful apply, and the step counter did not advance.
+    assert_eq!(s.epsilon_spent().to_bits(), eps_before.to_bits());
+    assert_eq!(s.step_index(), 0);
+
+    // The fault site is consumed, so driving the session again replays
+    // the *same* step — same draw, same noise — and the whole run still
+    // lands on the fault-free bits. A failure can delay a step, never
+    // change it.
+    while !s.done() {
+        s.step().unwrap();
+    }
+    let rep = s.finish().unwrap();
+    assert_matches_baseline(&rep, &base);
+}
+
+#[test]
+fn losing_every_rank_aborts_typed_never_panics() {
+    quiet_injected_panics();
+    let cfg = chaos_config("masked", 1, 17);
+    let plan = Arc::new(FaultPlan::from_spec("panic@s0.r0.c0", cfg.steps, 1).unwrap());
+
+    let outcome = catch_unwind(AssertUnwindSafe(|| chaos_run(&cfg, plan)));
+    let err = outcome.expect("the injected panic must not cross the API").unwrap_err();
+    assert!(format!("{err:#}").contains("worker ranks lost"), "got: {err:#}");
+}
+
+// ---------------------------------------------------------------------
+// Crash-consistent checkpoints
+// ---------------------------------------------------------------------
+
+/// A sealed checkpoint a few steps into a run, plus its fingerprint.
+fn sealed_checkpoint(cfg: &TrainConfig, steps: u64) -> (TrainCheckpoint, String) {
+    let rt = Runtime::reference();
+    let mut s = TrainSession::new(&rt, cfg.clone()).unwrap();
+    for _ in 0..steps {
+        s.step().unwrap();
+    }
+    let fp = config_fingerprint(cfg, resolve_sigma(cfg).unwrap());
+    (s.checkpoint().unwrap(), fp)
+}
+
+#[test]
+fn checkpoint_write_is_atomic_and_roundtrips() {
+    let cfg = chaos_config("masked", 1, 21);
+    let (ckpt, fp) = sealed_checkpoint(&cfg, 2);
+    let dir = scratch_dir("roundtrip");
+
+    let path = write_checkpoint(&dir, &ckpt, None).unwrap();
+    assert_eq!(path.file_name().unwrap().to_str().unwrap(), checkpoint_file_name(2));
+    // The temp-file+rename protocol leaves no .tmp behind.
+    let leftovers: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().is_some_and(|x| x == "tmp"))
+        .collect();
+    assert!(leftovers.is_empty(), "leaked temp files: {leftovers:?}");
+
+    let loaded = load_checkpoint(&path, Some(&fp)).unwrap();
+    assert_eq!(loaded.step, ckpt.step);
+    assert_eq!(bits(&loaded.params), bits(&ckpt.params));
+    assert_eq!(loaded.checksum, ckpt.checksum);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn torn_and_bitrotted_checkpoints_load_as_typed_errors() {
+    let cfg = chaos_config("masked", 1, 23);
+    let (ckpt, fp) = sealed_checkpoint(&cfg, 2);
+    let dir = scratch_dir("corrupt");
+
+    // A torn write (simulated crash mid-write) is unparseable JSON.
+    let plan = FaultPlan::from_spec("ckpt-truncate@s2", cfg.steps, 1).unwrap();
+    let torn = write_checkpoint(&dir, &ckpt, Some(&plan)).unwrap();
+    assert!(matches!(
+        load_checkpoint(&torn, Some(&fp)),
+        Err(CheckpointError::Torn { .. })
+    ));
+
+    // Bit rot keeps the JSON parseable; the content checksum objects.
+    let plan = FaultPlan::from_spec("ckpt-flip@s2", cfg.steps, 1).unwrap();
+    let rotted = write_checkpoint(&dir, &ckpt, Some(&plan)).unwrap();
+    assert!(matches!(
+        load_checkpoint(&rotted, Some(&fp)),
+        Err(CheckpointError::Checksum { .. })
+    ));
+
+    // An intact file under the wrong configuration is a fingerprint
+    // mismatch, not a resume.
+    let good = write_checkpoint(&dir, &ckpt, None).unwrap();
+    assert!(matches!(
+        load_checkpoint(&good, Some("v5|something-else")),
+        Err(CheckpointError::Fingerprint { .. })
+    ));
+    // And a missing file is a typed I/O rejection.
+    assert!(matches!(
+        load_checkpoint(&dir.join("ckpt_step99999999.json"), Some(&fp)),
+        Err(CheckpointError::Io { .. })
+    ));
+    // Hand-truncated JSON (no injector involved) is equally torn.
+    let hand = dir.join(checkpoint_file_name(7));
+    let json = ckpt.to_json().unwrap();
+    std::fs::write(&hand, &json[..json.len() / 3]).unwrap();
+    assert!(matches!(load_checkpoint(&hand, Some(&fp)), Err(CheckpointError::Torn { .. })));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn resume_latest_skips_damage_down_to_the_newest_valid_file() {
+    let cfg = chaos_config("masked", 1, 25);
+    let dir = scratch_dir("scan");
+
+    // A missing directory is an empty scan, not an error.
+    let empty = latest_valid(&dir, "v5|x").unwrap();
+    assert!(empty.found.is_none() && empty.skipped.is_empty());
+
+    // Valid at step 1; corrupted at steps 2 and 3 (the newest files).
+    let rt = Runtime::reference();
+    let mut s = TrainSession::new(&rt, cfg.clone()).unwrap();
+    let fp = config_fingerprint(&cfg, resolve_sigma(&cfg).unwrap());
+    let plan = FaultPlan::from_spec("ckpt-flip@s2,ckpt-truncate@s3", cfg.steps, 1).unwrap();
+    s.step().unwrap();
+    write_checkpoint(&dir, &s.checkpoint().unwrap(), None).unwrap();
+    s.step().unwrap();
+    write_checkpoint(&dir, &s.checkpoint().unwrap(), Some(&plan)).unwrap();
+    s.step().unwrap();
+    write_checkpoint(&dir, &s.checkpoint().unwrap(), Some(&plan)).unwrap();
+    // A .tmp leftover must never be considered a candidate.
+    std::fs::write(dir.join("ckpt_step00000009.json.tmp"), "{").unwrap();
+
+    let scan = latest_valid(&dir, &fp).unwrap();
+    let (path, found) = scan.found.expect("the step-1 checkpoint is valid");
+    assert_eq!(found.step, 1);
+    assert_eq!(path.file_name().unwrap().to_str().unwrap(), checkpoint_file_name(1));
+    // Both damaged files were tried first (newest-first) and recorded.
+    assert_eq!(scan.skipped.len(), 2);
+    assert!(matches!(scan.skipped[0].1, CheckpointError::Torn { .. }), "step 3 torn first");
+    assert!(matches!(scan.skipped[1].1, CheckpointError::Checksum { .. }));
+
+    // The survivor resumes to the fault-free trajectory.
+    let base = baseline(&cfg);
+    let rt2 = Runtime::reference();
+    let mut resumed = TrainSession::resume(&rt2, cfg.clone(), found).unwrap();
+    while !resumed.done() {
+        resumed.step().unwrap();
+    }
+    assert_matches_baseline(&resumed.finish().unwrap(), &base);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn mid_run_kill_after_apply_cannot_double_spend_epsilon() {
+    let cfg = chaos_config("masked", 1, 27);
+    let base = baseline(&cfg);
+    let dir = scratch_dir("kill");
+
+    // Checkpoint after step 0, then take step 1 — apply ran and the
+    // accountant committed — and "crash" (drop without checkpointing).
+    {
+        let rt = Runtime::reference();
+        let mut s = TrainSession::new(&rt, cfg.clone()).unwrap();
+        s.step().unwrap();
+        write_checkpoint(&dir, &s.checkpoint().unwrap(), None).unwrap();
+        s.step().unwrap();
+        assert!(s.epsilon_spent() > 0.0);
+        // killed here: step 1's spend dies with the process.
+    }
+
+    // Resume replays step 1 with the same draw and the same noise
+    // tuple, and the accountant replay prices exactly one composition
+    // per completed step — the pre-crash execution of step 1 leaves no
+    // trace, so there is no double-spend and no trajectory fork.
+    let fp = config_fingerprint(&cfg, resolve_sigma(&cfg).unwrap());
+    let scan = latest_valid(&dir, &fp).unwrap();
+    let (_, ckpt) = scan.found.expect("the step-0 checkpoint survived the crash");
+    assert_eq!(ckpt.step, 1);
+    let rt = Runtime::reference();
+    let mut resumed = TrainSession::resume(&rt, cfg.clone(), ckpt).unwrap();
+    while !resumed.done() {
+        resumed.step().unwrap();
+    }
+    let rep = resumed.finish().unwrap();
+    assert_matches_baseline(&rep, &base);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Chaos property: any schedule → bitwise recovery or typed abort
+// ---------------------------------------------------------------------
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(16))]
+
+    /// For seeded fault schedules across clipping variants and worker
+    /// counts: every step call either succeeds or returns a typed
+    /// error — never a panic and never an epsilon overspend — and a
+    /// run that completes is bitwise-identical to the fault-free one.
+    #[test]
+    fn any_fault_schedule_recovers_bitwise_or_aborts_typed(
+        fault_seed in 0u64..1_000,
+        run_seed in 0u64..1_000,
+        nsites in 1usize..5,
+        workers_idx in 0usize..3,
+        variant_idx in 0usize..2,
+    ) {
+        quiet_injected_panics();
+        let workers = [1usize, 2, 4][workers_idx];
+        let variant = ["masked", "ghost"][variant_idx];
+        let cfg = chaos_config(variant, workers, run_seed);
+        let base = baseline(&cfg);
+
+        let plan = Arc::new(FaultPlan::seeded(fault_seed, nsites, cfg.steps, workers));
+        let rt = Runtime::reference();
+        let frt = faulty_runtime(&rt, Arc::clone(&plan));
+        let mut s = TrainSession::with_faults(&frt, cfg.clone(), Arc::clone(&plan)).unwrap();
+
+        let mut aborted = false;
+        while !s.done() {
+            // Nothing may unwind across the session API, whatever the
+            // schedule throws at it.
+            let stepped = catch_unwind(AssertUnwindSafe(|| s.step()));
+            match stepped {
+                Ok(Ok(_)) => {}
+                Ok(Err(_)) => { aborted = true; break; }
+                Err(_) => prop_assert!(false, "a panic crossed the session API"),
+            }
+        }
+        if aborted {
+            // A typed abort spends only what completed steps committed:
+            // never more than the full fault-free composition, and the
+            // failed step itself committed nothing.
+            prop_assert!(s.epsilon_spent() <= base.epsilon_spent);
+            prop_assert!(s.step_index() < cfg.steps);
+        } else {
+            let rep = s.finish().unwrap();
+            prop_assert_eq!(bits(&rep.final_params), bits(&base.final_params));
+            for (a, b) in rep.steps.iter().zip(&base.steps) {
+                prop_assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            }
+            prop_assert_eq!(rep.epsilon_spent.to_bits(), base.epsilon_spent.to_bits());
+            prop_assert!(rep.final_workers >= 1 && rep.final_workers <= workers.max(1));
+        }
+        // Whatever fired is a subset of what was planned.
+        prop_assert!(plan.fired().len() <= plan.sites().len());
+    }
+}
