@@ -55,6 +55,8 @@ pub mod rule {
     pub const MATERIALIZED_PER_EXAMPLE: &str = "memory.materialized-per-example";
     /// An executable declares a dtype the memory model does not know.
     pub const DTYPE_UNKNOWN: &str = "dtype.unknown";
+    /// Configured steps would spend more epsilon than the declared budget.
+    pub const BUDGET_OVERSPEND: &str = "budget.overspend";
 }
 
 /// How severe a diagnostic is. Ordered most-severe-first so sorting a
@@ -179,6 +181,11 @@ pub const RULES: &[RuleInfo] = &[
         id: rule::DTYPE_UNKNOWN,
         severity: Severity::Warn,
         summary: "unknown executable dtype; byte accounting would silently assume 4 bytes",
+    },
+    RuleInfo {
+        id: rule::BUDGET_OVERSPEND,
+        severity: Severity::Deny,
+        summary: "the configured steps would spend more epsilon than the declared (epsilon, delta) budget under the chosen accountant",
     },
 ];
 

@@ -92,6 +92,19 @@ pub struct RetrySpec {
     pub fresh_noise_on_retry: bool,
 }
 
+/// A declared `(epsilon, delta)` privacy budget the run promises to
+/// stay within. Optional: standalone `dpshort train` runs declare none
+/// (the target epsilon is a calibration input, not a cap), while serve
+/// tenants always declare one and the auditor refuses admission when
+/// the configured steps would overspend it (`budget.overspend`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BudgetSpec {
+    /// Maximum epsilon the run may spend.
+    pub epsilon: f64,
+    /// The delta the budget's epsilon is quoted at.
+    pub delta: f64,
+}
+
 /// The audited description of one run.
 #[derive(Debug, Clone)]
 pub struct RunPlan {
@@ -138,6 +151,8 @@ pub struct RunPlan {
     pub rng_counter_bits: u32,
     /// Distinct executable dtypes the manifest declares for this model.
     pub dtypes: Vec<String>,
+    /// Declared privacy budget, when the run promises one.
+    pub budget: Option<BudgetSpec>,
 }
 
 /// Variants whose contract says per-example weight gradients are never
@@ -212,6 +227,9 @@ impl RunPlan {
             sigma,
             rng_counter_bits: 64,
             dtypes,
+            budget: config
+                .declared_epsilon
+                .map(|epsilon| BudgetSpec { epsilon, delta: config.delta }),
         })
     }
 }
@@ -248,6 +266,7 @@ pub fn test_plan(k: usize) -> RunPlan {
         sigma,
         rng_counter_bits: 64,
         dtypes: vec!["f32".into()],
+        budget: None,
     }
 }
 

@@ -23,6 +23,7 @@ pub fn audit_plan_graph(plan: &RunPlan, g: &Graph) -> AuditReport {
     check_streams(plan, &mut d);
     check_accounting(plan, &mut d);
     check_retry(plan, &mut d);
+    check_budget(plan, &mut d);
     check_topology(plan, g, &mut d);
     check_materialization(plan, g, &mut d);
     check_dtypes(plan, &mut d);
@@ -285,6 +286,36 @@ fn check_retry(plan: &RunPlan, d: &mut Vec<Diagnostic>) {
     }
 }
 
+/// (c, continued) A declared `(epsilon, delta)` budget must cover the
+/// configured steps — the serve admission contract. Priced with the
+/// plan's own accountant over its Poisson rate; a plan whose sampler
+/// provides no rate is already denied by `accountant.shortcut-epsilon`,
+/// so pricing is skipped there rather than double-flagged.
+fn check_budget(plan: &RunPlan, d: &mut Vec<Diagnostic>) {
+    let Some(budget) = plan.budget else { return };
+    if !plan.private {
+        return;
+    }
+    let Some(q) = plan.sampler.poisson_rate else { return };
+    let spend = plan.accountant.epsilon_after(q, plan.sigma, plan.steps, budget.delta);
+    if spend > budget.epsilon && !approx_eq(spend, budget.epsilon) {
+        d.push(Diagnostic::new(
+            rule::BUDGET_OVERSPEND,
+            "plan.budget",
+            format!(
+                "{} steps at (q={q}, sigma={}) spend epsilon = {spend:.4} under the {} \
+                 accountant, exceeding the declared budget epsilon = {} at delta = {}; admit \
+                 fewer steps or declare a larger budget",
+                plan.steps,
+                plan.sigma,
+                plan.accountant.as_str(),
+                budget.epsilon,
+                budget.delta
+            ),
+        ));
+    }
+}
+
 /// (d) The reduction must be schedule-invariant.
 fn check_topology(plan: &RunPlan, g: &Graph, d: &mut Vec<Diagnostic>) {
     if plan.reduction.worker_dependent {
@@ -407,6 +438,30 @@ mod tests {
         noise.retry.fresh_noise_on_retry = true;
         let report = audit_plan(&noise);
         assert!(report.deny_rules().contains(&rule::RETRY_FRESH_DRAW));
+    }
+
+    #[test]
+    fn declared_budget_gates_on_priced_spend() {
+        use crate::analysis::plan::BudgetSpec;
+        // test_plan(3): q = 0.25, sigma = 1.0, steps = 4, RDP. A budget
+        // above the priced spend stays clean; one below is denied.
+        let plan = test_plan(3);
+        let spend =
+            plan.accountant.epsilon_after(0.25, 1.0, 4, 1e-5);
+        assert!(spend.is_finite() && spend > 0.0);
+
+        let mut roomy = test_plan(3);
+        roomy.budget = Some(BudgetSpec { epsilon: spend * 2.0, delta: 1e-5 });
+        assert!(audit_plan(&roomy).is_clean());
+
+        let mut tight = test_plan(3);
+        tight.budget = Some(BudgetSpec { epsilon: spend * 0.5, delta: 1e-5 });
+        let report = audit_plan(&tight);
+        report.validate().unwrap();
+        assert_eq!(report.deny_rules(), vec![rule::BUDGET_OVERSPEND]);
+
+        // No declared budget: spend is never judged.
+        assert!(audit_plan(&test_plan(3)).is_clean());
     }
 
     #[test]

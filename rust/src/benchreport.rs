@@ -50,26 +50,36 @@
 //! from that configuration (unknown keys used to pass `--check`
 //! silently).
 //!
-//! Version 1 (no `workers`) and version 2 (worker curve without
-//! `clip_method` keys) files remain valid.
+//! Schema v4 adds the `dpshort bench --serve` synthetic-load sweep:
+//! `serve` rows keyed by `(tenants, max_concurrent)` with the
+//! multi-tenant scheduler's aggregate examples/sec and per-slice
+//! p50/p95/p99 latency, plus the `serve_tenants` run-config echo the
+//! validator holds every row's `tenant_names` to.
+//!
+//! Version 1 (no `workers`), version 2 (worker curve without
+//! `clip_method` keys), and version 3 (no `serve` rows) files remain
+//! valid.
 
 use crate::coordinator::batcher::BatchingMode;
 use crate::coordinator::config::TrainConfig;
 use crate::coordinator::trainer::{SectionTimes, TrainSession, Trainer};
 use crate::metrics::summary_with_ci;
 use crate::runtime::Runtime;
+use crate::serve::{admit, run_serve, BudgetLedger, JobSpec, JobsFile, ServeOptions};
 use anyhow::{anyhow, Context, Result};
 use serde::{Deserialize, Serialize};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 /// Version stamp of the `BENCH_throughput.json` schema this build
 /// emits. v2 added the per-worker-count `workers` scaling entries; v3
 /// keys those rows by `(model, clip_method, workers)` and echoes the
 /// run config (`models` / `clip_methods`) so `--check` can reject rows
-/// naming unknown keys. [`BenchReport::validate`] still accepts v1/v2
-/// files (which predate the fields).
-pub const SCHEMA_VERSION: u32 = 3;
+/// naming unknown keys; v4 adds the multi-tenant `serve` load-sweep
+/// rows keyed by `(tenants, max_concurrent)` and their `serve_tenants`
+/// echo. [`BenchReport::validate`] still accepts v1/v2/v3 files (which
+/// predate the fields).
+pub const SCHEMA_VERSION: u32 = 4;
 
 /// Oldest schema version [`BenchReport::validate`] accepts.
 pub const MIN_SCHEMA_VERSION: u32 = 1;
@@ -132,6 +142,40 @@ pub struct WorkerEntry {
     pub secs_total: f64,
 }
 
+/// One point of the multi-tenant synthetic-load sweep (schema v4):
+/// a full `serve` run of `tenants` jobs at one `max_concurrent`
+/// residency cap. Rows are keyed by `(tenants, max_concurrent)`; the
+/// per-tenant *results* are bitwise-identical across rows (cooperative
+/// scheduling moves wall clock and memory only), so the rows measure
+/// pure scheduling overhead: aggregate throughput and the per-slice
+/// latency tail.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+pub struct ServeEntry {
+    /// Tenants of this run (the row key's first half).
+    pub tenants: usize,
+    /// Residency cap of this run (the row key's second half).
+    pub max_concurrent: usize,
+    /// Names of the tenants this row served — each must appear in the
+    /// report's `serve_tenants` run-config echo.
+    pub tenant_names: Vec<String>,
+    /// Optimizer steps each tenant ran.
+    pub steps_per_tenant: u64,
+    /// Scheduler slices the run completed.
+    pub slices: u64,
+    /// Sessions evicted to checkpoint under residency pressure.
+    pub evictions: usize,
+    /// Aggregate real examples per wall-clock second over all slices.
+    pub throughput: f64,
+    /// Nearest-rank per-slice latency quantiles, in seconds.
+    pub p50_latency: f64,
+    pub p95_latency: f64,
+    pub p99_latency: f64,
+    /// Always "examples_per_sec".
+    pub unit: String,
+    /// Total wall-clock seconds across the run's slices.
+    pub secs_total: f64,
+}
+
 /// The full document written to `BENCH_throughput.json`.
 #[derive(Debug, Serialize, Deserialize)]
 pub struct BenchReport {
@@ -161,6 +205,16 @@ pub struct BenchReport {
     /// files and when the worker sweep is skipped).
     #[serde(default, skip_serializing_if = "Option::is_none")]
     pub workers: Option<Vec<WorkerEntry>>,
+    /// Run config echo (schema v4): the tenants of the serve sweep.
+    /// Every serve row's `tenant_names` must be a subset — the
+    /// validator's defense against rows citing tenants the run never
+    /// configured.
+    #[serde(default, skip_serializing_if = "Vec::is_empty")]
+    pub serve_tenants: Vec<String>,
+    /// Multi-tenant synthetic-load sweep (schema v4), one row per
+    /// `(tenants, max_concurrent)`; empty when `--serve` was not run.
+    #[serde(default, skip_serializing_if = "Vec::is_empty")]
+    pub serve: Vec<ServeEntry>,
 }
 
 impl BenchReport {
@@ -195,7 +249,10 @@ impl BenchReport {
     /// `workers` field; v2 files may; v3 files must also echo the run
     /// config (`models` / `clip_methods`) and every row must reference
     /// it — a row naming a model or clip method the run never measured
-    /// is rejected instead of passing `--check` silently.
+    /// is rejected instead of passing `--check` silently. v4 files may
+    /// carry `serve` load-sweep rows, keyed uniquely by
+    /// `(tenants, max_concurrent)` and naming only tenants echoed in
+    /// `serve_tenants`.
     pub fn validate(&self) -> Result<()> {
         if self.schema_version < MIN_SCHEMA_VERSION || self.schema_version > SCHEMA_VERSION {
             return Err(anyhow!(
@@ -223,6 +280,62 @@ impl BenchReport {
             return Err(anyhow!(
                 "pre-v3 reports cannot carry `models`/`clip_methods` config echoes"
             ));
+        }
+        if self.schema_version < 4 && (!self.serve.is_empty() || !self.serve_tenants.is_empty()) {
+            return Err(anyhow!(
+                "pre-v4 reports cannot carry `serve` rows or the `serve_tenants` echo"
+            ));
+        }
+        if !self.serve.is_empty() && self.serve_tenants.is_empty() {
+            return Err(anyhow!("serve rows need the `serve_tenants` run-config echo"));
+        }
+        for (i, s) in self.serve.iter().enumerate() {
+            let ctx = |msg: &str| {
+                anyhow!(
+                    "serve row {i} (tenants={}, max_concurrent={}): {msg}",
+                    s.tenants,
+                    s.max_concurrent
+                )
+            };
+            if s.tenants == 0 || s.max_concurrent == 0 {
+                return Err(ctx("tenants and max_concurrent must be positive"));
+            }
+            if s.tenant_names.len() != s.tenants {
+                return Err(ctx("tenant_names must list exactly `tenants` names"));
+            }
+            for name in &s.tenant_names {
+                if !self.serve_tenants.contains(name) {
+                    return Err(ctx("row names a tenant absent from the run config"));
+                }
+            }
+            if s.unit != "examples_per_sec" {
+                return Err(ctx("unit must be examples_per_sec"));
+            }
+            if !(s.throughput.is_finite() && s.throughput > 0.0) {
+                return Err(ctx("throughput must be finite and positive"));
+            }
+            let lats = [s.p50_latency, s.p95_latency, s.p99_latency];
+            if lats.iter().any(|l| !(l.is_finite() && *l > 0.0)) {
+                return Err(ctx("latency quantiles must be finite and positive"));
+            }
+            if !(s.p50_latency <= s.p95_latency && s.p95_latency <= s.p99_latency) {
+                return Err(ctx("latency quantiles must be non-decreasing p50<=p95<=p99"));
+            }
+            if s.steps_per_tenant == 0 || s.slices == 0 {
+                return Err(ctx("steps_per_tenant and slices must be positive"));
+            }
+            if !(s.secs_total.is_finite() && s.secs_total >= 0.0) {
+                return Err(ctx("secs_total must be finite and non-negative"));
+            }
+        }
+        // Serve rows are keyed by (tenants, max_concurrent) and must be
+        // unique — one run pretending to be several is malformed.
+        let mut serve_keys: Vec<(usize, usize)> =
+            self.serve.iter().map(|s| (s.tenants, s.max_concurrent)).collect();
+        serve_keys.sort_unstable();
+        serve_keys.dedup();
+        if serve_keys.len() != self.serve.len() {
+            return Err(anyhow!("serve sweep repeats a (tenants, max_concurrent) row"));
         }
         if let Some(workers) = &self.workers {
             if workers.is_empty() {
@@ -275,7 +388,9 @@ impl BenchReport {
                 ));
             }
         }
-        if self.entries.is_empty() {
+        // A serve-only report (bench --serve) legitimately carries no
+        // accum/apply entries; anything else must measure something.
+        if self.entries.is_empty() && self.serve.is_empty() {
             return Err(anyhow!("bench report has no entries"));
         }
         for (i, e) in self.entries.iter().enumerate() {
@@ -501,6 +616,154 @@ pub fn run_sweep(rt: &Runtime, opts: &SweepOptions) -> Result<BenchReport> {
         sections,
         entries,
         workers,
+        serve_tenants: Vec::new(),
+        serve: Vec::new(),
+    };
+    report.validate()?;
+    Ok(report)
+}
+
+/// What the multi-tenant synthetic-load sweep runs (`bench --serve`).
+#[derive(Debug, Clone)]
+pub struct ServeSweepOptions {
+    /// Synthetic tenants per run.
+    pub tenants: usize,
+    /// `max_concurrent` residency caps to sweep — one serve row each.
+    pub concurrency: Vec<usize>,
+    /// Optimizer steps per tenant.
+    pub steps: u64,
+    /// Steps per scheduler slice.
+    pub steps_per_slice: u64,
+    /// Seed offsetting each tenant's dataset draw.
+    pub seed: u64,
+    /// Scratch root for checkpoint namespaces + ledger snapshots; each
+    /// concurrency level uses its own subdirectory.
+    pub ckpt_root: PathBuf,
+    /// `--memory-budget-bytes` applied to every run (0 = unlimited).
+    pub memory_budget_bytes: f64,
+}
+
+impl ServeSweepOptions {
+    /// Defaults: 3 tenants for 4 steps in 2-step slices, swept at
+    /// residency caps 1, 2, and `tenants` (the quick subset halves the
+    /// steps).
+    pub fn new(quick: bool, ckpt_root: PathBuf) -> Self {
+        Self {
+            tenants: 3,
+            concurrency: vec![1, 2, 3],
+            steps: if quick { 2 } else { 4 },
+            steps_per_slice: if quick { 1 } else { 2 },
+            seed: 0,
+            ckpt_root,
+            memory_budget_bytes: 0.0,
+        }
+    }
+}
+
+/// The synthetic manifest the load sweep admits: `tenants` jobs over
+/// the default model, cycling clip methods and accountants, each with
+/// its own dataset seed and a budget roomy enough that the sweep
+/// measures scheduling, not hard-stops.
+pub fn synthetic_jobs(tenants: usize, steps: u64, seed: u64) -> JobsFile {
+    const METHODS: [&str; 3] = ["masked", "per-example", "ghost"];
+    let tenants = (0..tenants)
+        .map(|i| JobSpec {
+            name: format!("tenant-{i:02}"),
+            model: None,
+            clip_method: METHODS[i % METHODS.len()].into(),
+            dataset_size: Some(96),
+            seed: Some(seed.wrapping_add(i as u64)),
+            sampling_rate: Some(0.25),
+            physical_batch: Some(8),
+            steps,
+            lr: None,
+            noise_multiplier: Some(1.0),
+            budget_epsilon: 50.0,
+            budget_delta: None,
+            sampler: None,
+            accountant: Some(if i % 2 == 0 { "rdp" } else { "pld" }.into()),
+            workers: None,
+        })
+        .collect();
+    JobsFile { tenants }
+}
+
+/// Run the multi-tenant synthetic-load sweep: admit the synthetic
+/// manifest once, then serve it from scratch at every requested
+/// `max_concurrent`, producing one schema-v4 `serve` row per level.
+pub fn run_serve_sweep(rt: &Runtime, opts: &ServeSweepOptions) -> Result<BenchReport> {
+    if opts.tenants == 0 {
+        return Err(anyhow!("--tenants must be positive"));
+    }
+    let mut levels = opts.concurrency.clone();
+    levels.sort_unstable();
+    levels.dedup();
+    if levels.is_empty() || levels.contains(&0) {
+        return Err(anyhow!("--max-concurrent levels must be a non-empty positive list"));
+    }
+    let jobs = synthetic_jobs(opts.tenants, opts.steps, opts.seed);
+    let (admitted, rejected) = admit(rt, &jobs)?;
+    if !rejected.is_empty() {
+        return Err(anyhow!(
+            "synthetic load manifest was partially rejected at admission: {rejected:?}"
+        ));
+    }
+    let tenant_names: Vec<String> = admitted.iter().map(|t| t.name.clone()).collect();
+    let mut models: Vec<String> = admitted.iter().map(|t| t.config.model.clone()).collect();
+    models.sort_unstable();
+    models.dedup();
+    // The clip_methods echo keeps its v3 meaning (CLI names only);
+    // tenants using a raw variant ("masked") are echoed via
+    // serve_tenants instead.
+    let mut clip_methods: Vec<String> = jobs
+        .tenants
+        .iter()
+        .map(|j| j.clip_method.clone())
+        .filter(|m| crate::clipping::is_clip_method(m))
+        .collect();
+    clip_methods.sort_unstable();
+    clip_methods.dedup();
+    let mut serve_rows = Vec::with_capacity(levels.len());
+    for &mc in &levels {
+        let serve_opts = ServeOptions {
+            max_concurrent: mc,
+            memory_budget_bytes: opts.memory_budget_bytes,
+            steps_per_slice: opts.steps_per_slice,
+            ckpt_root: opts.ckpt_root.join(format!("mc{mc}")),
+            max_slices: None,
+        };
+        let mut ledger = BudgetLedger::new();
+        let run = run_serve(rt, &admitted, &mut ledger, &serve_opts)?;
+        let latency = run
+            .slice_latency
+            .ok_or_else(|| anyhow!("serve run at max_concurrent={mc} completed no slices"))?;
+        serve_rows.push(ServeEntry {
+            tenants: opts.tenants,
+            max_concurrent: mc,
+            tenant_names: tenant_names.clone(),
+            steps_per_tenant: opts.steps,
+            slices: run.slices.len() as u64,
+            evictions: run.evictions,
+            throughput: run.aggregate_examples_per_sec,
+            p50_latency: latency.p50,
+            p95_latency: latency.p95,
+            p99_latency: latency.p99,
+            unit: "examples_per_sec".into(),
+            secs_total: run.slices.iter().map(|s| s.secs).sum(),
+        });
+    }
+    let report = BenchReport {
+        schema_version: SCHEMA_VERSION,
+        backend: rt.backend_name().to_string(),
+        seed: opts.seed,
+        quick: false,
+        models,
+        clip_methods,
+        sections: None,
+        entries: Vec::new(),
+        workers: None,
+        serve_tenants: tenant_names,
+        serve: serve_rows,
     };
     report.validate()?;
     Ok(report)
@@ -813,6 +1076,83 @@ mod tests {
         // Empty curve must be expressed as an absent field.
         let mut report = quick_report();
         report.workers = Some(Vec::new());
+        assert!(report.validate().is_err());
+    }
+
+    /// A small serve sweep in a per-call scratch dir (tests run
+    /// concurrently; a shared dir would race).
+    fn serve_report() -> BenchReport {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static NEXT: AtomicUsize = AtomicUsize::new(0);
+        let rt = Runtime::reference();
+        let root = std::env::temp_dir().join(format!(
+            "dpshort_serve_sweep_test_{}_{}",
+            std::process::id(),
+            NEXT.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&root);
+        let mut opts = ServeSweepOptions::new(true, root.clone());
+        opts.tenants = 2;
+        opts.concurrency = vec![1, 2];
+        let report = run_serve_sweep(&rt, &opts).unwrap();
+        let _ = std::fs::remove_dir_all(&root);
+        report
+    }
+
+    #[test]
+    fn serve_sweep_emits_v4_rows_keyed_by_concurrency() {
+        let report = serve_report();
+        report.validate().unwrap();
+        assert_eq!(report.schema_version, SCHEMA_VERSION);
+        // Serve-only reports legitimately carry no accum/apply entries.
+        assert!(report.entries.is_empty());
+        assert_eq!(report.serve_tenants, vec!["tenant-00", "tenant-01"]);
+        let keys: Vec<(usize, usize)> =
+            report.serve.iter().map(|s| (s.tenants, s.max_concurrent)).collect();
+        assert_eq!(keys, vec![(2, 1), (2, 2)]);
+        for row in &report.serve {
+            assert_eq!(row.tenant_names, report.serve_tenants);
+            assert!(row.throughput > 0.0 && row.unit == "examples_per_sec");
+            assert!(row.p50_latency <= row.p95_latency && row.p95_latency <= row.p99_latency);
+            // 2 tenants x 2 steps in 1-step slices: 4 slices per run.
+            assert_eq!(row.slices, 4);
+        }
+        // A residency cap of 1 with 2 interleaved tenants forces
+        // checkpoint evictions; a cap of 2 keeps both resident.
+        assert!(report.serve[0].evictions > 0, "{:?}", report.serve[0]);
+        assert_eq!(report.serve[1].evictions, 0, "{:?}", report.serve[1]);
+        let text = report.to_json().unwrap();
+        BenchReport::from_json(&text).unwrap().validate().unwrap();
+    }
+
+    #[test]
+    fn v4_rejects_serve_rows_naming_unknown_tenants() {
+        // The acceptance gate: --check must reject v4 rows naming
+        // tenants absent from the run config.
+        let mut report = serve_report();
+        report.serve[0].tenant_names[0] = "stranger".into();
+        let err = report.validate().unwrap_err().to_string();
+        assert!(err.contains("tenant"), "{err}");
+
+        // Pre-v4 files cannot carry serve rows or the echo.
+        let mut report = serve_report();
+        report.schema_version = 3;
+        assert!(report.validate().is_err());
+
+        // Serve rows without the serve_tenants echo are malformed...
+        let mut report = serve_report();
+        report.serve_tenants.clear();
+        assert!(report.validate().is_err());
+
+        // ...as are duplicate (tenants, max_concurrent) keys...
+        let mut report = serve_report();
+        let dup = report.serve[0].clone();
+        report.serve.push(dup);
+        assert!(report.validate().is_err());
+
+        // ...and a disordered latency tail.
+        let mut report = serve_report();
+        report.serve[0].p95_latency = report.serve[0].p99_latency * 2.0 + 1.0;
         assert!(report.validate().is_err());
     }
 

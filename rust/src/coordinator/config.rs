@@ -116,6 +116,17 @@ pub struct TrainConfig {
     /// Fault-tolerance retry policy (`--retries`, `--retry-backoff-ms`).
     /// Wall-clock only — excluded from the checkpoint fingerprint.
     pub retry: RetryPolicy,
+    /// Declared epsilon *budget* (quoted at `delta`), when this run
+    /// promises to stay within one — the serve ledger's admission
+    /// contract. Unlike `target_epsilon` (a calibration input), a
+    /// declared budget is enforced: the `budget.overspend` audit rule
+    /// denies a plan whose configured steps would already overspend it,
+    /// and the ledger hard-stops the run before any step that would.
+    /// `None` (the default, and every standalone `dpshort train` run)
+    /// declares no budget and is never denied for spend. Reporting/
+    /// enforcement only — never changes the trajectory, so it is
+    /// excluded from the checkpoint fingerprint.
+    pub declared_epsilon: Option<f64>,
 }
 
 impl Default for TrainConfig {
@@ -141,6 +152,7 @@ impl Default for TrainConfig {
             accountant: AccountantKind::Rdp,
             allow_unsound: false,
             retry: RetryPolicy::default(),
+            declared_epsilon: None,
         }
     }
 }

@@ -71,7 +71,7 @@ use crate::coordinator::config::TrainConfig;
 use crate::coordinator::sampler::{AnySampler, Sampler};
 use crate::data::SyntheticDataset;
 use crate::fault::FaultPlan;
-use crate::metrics::{Summary, ThroughputMeter};
+use crate::metrics::{Quantiles, Summary, ThroughputMeter};
 use crate::privacy::rdp::StreamingAccountant;
 use crate::privacy::{calibrate_sigma, pld_epsilon, AccountantKind, RdpAccountant};
 use crate::runtime::{
@@ -184,6 +184,10 @@ pub struct TrainReport {
     /// Median + bootstrap 95% CI over the per-accum-call samples
     /// (`None` when no accum call produced a timed sample).
     pub accum_throughput: Option<Summary>,
+    /// Deterministic nearest-rank p50/p95/p99 over the same per-call
+    /// samples (`None` when no sample exists) — the serve bench rows
+    /// report the identical estimator over slice latencies.
+    pub accum_quantiles: Option<Quantiles>,
     /// Mean held-out loss, when evaluation ran.
     pub eval_loss: Option<f64>,
     /// Held-out accuracy in [0, 1], when evaluation ran.
@@ -1232,6 +1236,7 @@ impl<'rt> TrainSession<'rt> {
             } else {
                 Some(self.meter.median_ci(self.config.seed))
             },
+            accum_quantiles: self.meter.quantiles(),
             accum_samples: self.meter.samples().to_vec(),
             eval_loss,
             eval_accuracy,

@@ -111,6 +111,30 @@ pub fn checkpoint_file_name(step: u64) -> String {
     format!("ckpt_step{step:08}.json")
 }
 
+/// Per-tenant checkpoint namespace: `<root>/<sanitized tenant>/`.
+///
+/// Multi-tenant serve co-locates every tenant's checkpoints under one
+/// root; scoping each tenant to its own subdirectory means
+/// [`latest_valid`] can never even *see* another tenant's files, so a
+/// cross-tenant resume is impossible by construction (the config
+/// fingerprint remains the second, content-level defense). Tenant
+/// names are sanitized to `[A-Za-z0-9._-]` (anything else becomes `_`)
+/// so a hostile name like `../other` cannot escape the root.
+pub fn tenant_dir(root: &Path, tenant: &str) -> PathBuf {
+    let sanitized: String = tenant
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') { c } else { '_' })
+        .collect();
+    // A name that sanitizes to dots only ("." / "..") would still walk
+    // the tree; flatten those to underscores too.
+    let sanitized = if sanitized.chars().all(|c| c == '.') {
+        sanitized.replace('.', "_")
+    } else {
+        sanitized
+    };
+    root.join(sanitized)
+}
+
 /// Atomically write `ckpt` into `dir` (created if missing) as
 /// [`checkpoint_file_name`]`(ckpt.step)`, via the temp-file+rename
 /// protocol. When `faults` has a checkpoint-corruption site armed at

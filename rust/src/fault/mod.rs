@@ -28,8 +28,8 @@ pub mod inject;
 pub mod plan;
 
 pub use checkpoint::{
-    checkpoint_file_name, latest_valid, load_checkpoint, write_checkpoint, CheckpointError,
-    ScanOutcome,
+    checkpoint_file_name, latest_valid, load_checkpoint, tenant_dir, write_checkpoint,
+    CheckpointError, ScanOutcome,
 };
 pub use inject::{faulty_runtime, FaultyBackend, FaultySession, InjectedFault};
 pub use plan::{FaultKind, FaultPlan, FaultSite};

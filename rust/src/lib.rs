@@ -86,6 +86,7 @@ pub mod precision;
 pub mod privacy;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use analysis::{audit_run, AuditReport, Diagnostic, Severity};
@@ -102,4 +103,7 @@ pub use coordinator::trainer::{
 pub use privacy::{AccountantKind, DpParams, RdpAccountant};
 pub use runtime::{
     AccumArgs, ApplyArgs, Backend, ExecSession, ReferenceBackend, Runtime, Tensor,
+};
+pub use serve::{
+    run_serve, BudgetLedger, JobsFile, ServeOptions, ServeReport, Tenant, TenantStatus,
 };

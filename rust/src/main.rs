@@ -10,6 +10,7 @@
 //! dpshort account [flags]              privacy accounting / sigma calibration
 //! dpshort audit   [flags]              static plan audit (taint + rule catalog, pre-run)
 //! dpshort lint    --source             determinism source lint over rust/src
+//! dpshort serve   --jobs FILE.json     multi-tenant DP training service (central budget ledger)
 //! dpshort scale   [flags]              multi-GPU scaling simulation (Fig 7 / A.4 / A.5)
 //! dpshort report  <fig1|fig2|fig3|table1|table2|table3|fig4|fig5|fig6|figA1|figA2|fig7|figA5|all>
 //! ```
@@ -32,10 +33,11 @@ use dp_shortcuts::fault::{self, FaultPlan};
 use dp_shortcuts::privacy::{calibrate_sigma, AccountantKind, RdpAccountant};
 use dp_shortcuts::report;
 use dp_shortcuts::runtime::{hlo_analysis, Runtime};
+use dp_shortcuts::serve::{self, BudgetLedger, ServeOptions};
 use dp_shortcuts::util::cli::Args;
 use std::path::{Path, PathBuf};
 
-const USAGE: &str = "usage: dpshort <list|train|bench|plan|account|scale|report> [--flags]
+const USAGE: &str = "usage: dpshort <list|train|bench|serve|plan|account|scale|report> [--flags]
   common flags: --artifacts DIR (default: artifacts)
                 --backend reference|pjrt (default: pjrt if artifacts exist, else reference)
                 --threads N (reference-backend accum workers; 0 = auto;
@@ -85,6 +87,30 @@ const USAGE: &str = "usage: dpshort <list|train|bench|plan|account|scale|report>
                 --clip-methods LIST  clip methods for the scaling sweep
                                 (default per-example,ghost)
                 --check FILE  validate an emitted file's schema and exit
+                --serve  synthetic multi-tenant load sweep instead of the
+                                accum/apply sweep -> schema v4 `serve` rows
+                                keyed by (tenants, max_concurrent) with
+                                aggregate ex/s + per-slice p50/p95/p99;
+                                --tenants N (default 3),
+                                --max-concurrent LIST (default 1,2,N),
+                                --steps-per-slice N, --memory-budget-bytes B
+  serve:        multi-tenant DP training service over the shared backend
+                --jobs FILE.json  job manifest (required); every job is
+                             audited at submission — Deny plans are
+                             rejected before a single step runs
+                --max-concurrent N  resident-session cap (default 2;
+                             wall-clock/memory only, bits never change)
+                --memory-budget-bytes B  analytic residency memory cap
+                             per MemModel::peak_bytes (0 = unlimited)
+                --steps-per-slice N  scheduler slice length (default 2)
+                --ckpt-dir DIR  per-tenant checkpoint namespaces + the
+                             ledger snapshot (default serve-ckpts)
+                --resume     restore the central ledger snapshot before
+                             serving (crash recovery; epsilon is never
+                             double-committed)
+                --max-slices N  stop (as if crashed) after N slices —
+                             the deterministic crash-simulation knob
+                --json       machine-readable ServeReport
   train/audit:  --sampler poisson|shuffle  subsampling scheme (shuffle is
                              the studied shortcut; Deny-audited under
                              Poisson accounting)
@@ -374,6 +400,9 @@ fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
 /// `BENCH_throughput.json` (schema in `benchreport`, DESIGN.md §6) so
 /// the perf trajectory is recorded across PRs.
 fn cmd_bench(rt: &Runtime, args: &Args) -> Result<()> {
+    if args.get_bool("serve") {
+        return cmd_bench_serve(rt, args);
+    }
     let quick = args.get_bool("quick");
     let mut opts = SweepOptions::new(quick);
     opts.model = args.get("model").map(str::to_string);
@@ -446,6 +475,138 @@ fn cmd_bench(rt: &Runtime, args: &Args) -> Result<()> {
         report.entries.len(),
         report.backend
     );
+    Ok(())
+}
+
+/// `dpshort bench --serve`: the synthetic multi-tenant load sweep —
+/// admit a generated manifest once, serve it at every requested
+/// `--max-concurrent` level, and write schema-v4 `serve` rows keyed by
+/// `(tenants, max_concurrent)` with aggregate examples/sec and the
+/// per-slice p50/p95/p99 latency tail.
+fn cmd_bench_serve(rt: &Runtime, args: &Args) -> Result<()> {
+    let quick = args.get_bool("quick");
+    let scratch =
+        std::env::temp_dir().join(format!("dpshort_bench_serve_{}", std::process::id()));
+    let mut opts = benchreport::ServeSweepOptions::new(quick, scratch.clone());
+    opts.tenants = args.get_parse_or("tenants", opts.tenants).map_err(|e| anyhow!(e))?;
+    opts.steps = args.get_parse_or("steps", opts.steps).map_err(|e| anyhow!(e))?;
+    opts.steps_per_slice =
+        args.get_parse_or("steps-per-slice", opts.steps_per_slice).map_err(|e| anyhow!(e))?;
+    opts.seed = args.get_parse_or("seed", opts.seed).map_err(|e| anyhow!(e))?;
+    opts.memory_budget_bytes =
+        args.get_parse_or("memory-budget-bytes", 0.0).map_err(|e| anyhow!(e))?;
+    opts.concurrency = match args.get("max-concurrent") {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().parse::<usize>().map_err(|e| anyhow!("bad concurrency: {e}")))
+            .collect::<Result<_>>()?,
+        // The default ladder: serial, pairwise, and fully resident.
+        None => vec![1, 2, opts.tenants],
+    };
+    let report = benchreport::run_serve_sweep(rt, &opts);
+    let _ = std::fs::remove_dir_all(&scratch);
+    let report = report?;
+    println!("serve load sweep ({} tenants, backend {}):", opts.tenants, report.backend);
+    for s in &report.serve {
+        println!(
+            "  max_concurrent={:<3} {:>10.1} ex/s over {} slices, {} evictions, \
+             slice p50/p95/p99 = {:.4}/{:.4}/{:.4} s",
+            s.max_concurrent,
+            s.throughput,
+            s.slices,
+            s.evictions,
+            s.p50_latency,
+            s.p95_latency,
+            s.p99_latency
+        );
+    }
+    let out = PathBuf::from(args.get_or("out", benchreport::DEFAULT_OUT));
+    report.write(&out)?;
+    println!(
+        "wrote {} ({} serve rows, backend {})",
+        out.display(),
+        report.serve.len(),
+        report.backend
+    );
+    Ok(())
+}
+
+/// `dpshort serve --jobs FILE.json`: the multi-tenant training
+/// service. Jobs are audited (and Deny-rejected) at submission; the
+/// cooperative scheduler time-slices admitted sessions under the
+/// residency caps; the central ledger commits epsilon strictly after
+/// each durable slice and hard-stops any tenant the step before its
+/// declared budget would be exceeded.
+fn cmd_serve(rt: &Runtime, args: &Args) -> Result<()> {
+    let jobs_path =
+        args.get("jobs").ok_or_else(|| anyhow!("serve needs --jobs FILE.json\n{USAGE}"))?;
+    let jobs = serve::load_jobs(Path::new(jobs_path))?;
+    let (tenants, rejections) = serve::admit(rt, &jobs)?;
+    for r in &rejections {
+        eprintln!("rejected {:?}: {}", r.name, r.reason);
+    }
+    if tenants.is_empty() {
+        return Err(anyhow!(
+            "no jobs admitted ({} of {} rejected)",
+            rejections.len(),
+            jobs.tenants.len()
+        ));
+    }
+    let opts = ServeOptions {
+        max_concurrent: args.get_parse_or("max-concurrent", 2).map_err(|e| anyhow!(e))?,
+        memory_budget_bytes: args
+            .get_parse_or("memory-budget-bytes", 0.0)
+            .map_err(|e| anyhow!(e))?,
+        steps_per_slice: args.get_parse_or("steps-per-slice", 2).map_err(|e| anyhow!(e))?,
+        ckpt_root: PathBuf::from(args.get_or("ckpt-dir", "serve-ckpts")),
+        max_slices: args.get_parse("max-slices").map_err(|e| anyhow!(e))?,
+    };
+    // --resume restores the persisted ledger (committed epsilon
+    // survives even if a checkpoint went missing); without it the
+    // ledger still reconciles against each tenant's newest valid
+    // checkpoint, so a crashed serve never double-commits either way.
+    let mut ledger = if args.get_bool("resume") {
+        BudgetLedger::load(&opts.ckpt_root)?.unwrap_or_else(BudgetLedger::new)
+    } else {
+        BudgetLedger::new()
+    };
+    let mut report = serve::run_serve(rt, &tenants, &mut ledger, &opts)?;
+    report.rejections = rejections;
+    if args.get_bool("json") {
+        println!("{}", report.to_json()?);
+        return Ok(());
+    }
+    println!(
+        "serve: {} admitted, {} rejected; max_concurrent={} steps_per_slice={} ckpt={}",
+        report.outcomes.len(),
+        report.rejections.len(),
+        opts.max_concurrent,
+        opts.steps_per_slice,
+        opts.ckpt_root.display()
+    );
+    for o in &report.outcomes {
+        println!(
+            "  {:<14} {:<16} steps={:<5} eps {:.4} of {:.4} budget, {} evictions",
+            o.name, o.status, o.steps_done, o.epsilon_committed, o.budget_epsilon, o.evictions
+        );
+    }
+    if let Some(q) = report.slice_latency {
+        println!(
+            "slices: {} total, {} evictions; latency p50/p95/p99 = {:.4}/{:.4}/{:.4} s",
+            report.slices.len(),
+            report.evictions,
+            q.p50,
+            q.p95,
+            q.p99
+        );
+    }
+    println!("aggregate throughput: {:.1} ex/s", report.aggregate_examples_per_sec);
+    if report.interrupted {
+        println!(
+            "interrupted by --max-slices: every completed slice is checkpointed and \
+             committed; rerun with --resume to continue"
+        );
+    }
     Ok(())
 }
 
@@ -649,6 +810,8 @@ fn main() -> Result<()> {
             "ladder",
             "resume-latest",
             "retry-fresh-draw",
+            "serve",
+            "resume",
         ],
     )
     .map_err(|e| anyhow!(e))?;
@@ -680,6 +843,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&rt, &args),
         "audit" => cmd_audit(&rt, &args),
         "bench" => cmd_bench(&rt, &args),
+        "serve" => cmd_serve(&rt, &args),
         "scale" => cmd_scale(&rt, &args),
         "report" => {
             let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");

@@ -219,4 +219,61 @@ mod tests {
         let a = vit("huge", 32, 1280, 4);
         assert_eq!(m.max_physical_batch(&a, ClippingMethod::PerExample, 1e9), 0);
     }
+
+    // The serve scheduler's eviction policy prices resident sessions
+    // with `peak_bytes` and sizes admissions with `max_physical_batch`;
+    // the three tests below pin the properties it relies on.
+
+    #[test]
+    fn perexample_dominates_masked_dominates_ghost() {
+        // Per-clip-method footprint ordering at any fixed batch:
+        // per-example (hooks + [B,P]) ≥ masked JAX ([B,P], no hooks)
+        // ≥ ghost (T^2 Grams only). Eviction order depends on it.
+        let m = MemModel::default();
+        for a in paper_ladder().iter() {
+            for b in [1usize, 4, 16, 64, 256] {
+                let pe = m.peak_bytes(a, ClippingMethod::PerExample, b);
+                let mk = m.peak_bytes(a, ClippingMethod::MaskedJax, b);
+                let gh = m.peak_bytes(a, ClippingMethod::Ghost, b);
+                assert!(pe >= mk, "{}: b={b} perex {pe} < masked {mk}", a.name);
+                assert!(mk >= gh, "{}: b={b} masked {mk} < ghost {gh}", a.name);
+            }
+        }
+    }
+
+    #[test]
+    fn max_physical_batch_is_monotone_in_budget() {
+        // A larger budget never shrinks the admissible batch, and the
+        // reported batch actually fits while batch+1 does not.
+        let m = MemModel::default();
+        let a = vit_base();
+        for method in ClippingMethod::ALL {
+            let mut prev = 0usize;
+            for budget in [2.0e9, 8.0e9, V100_BYTES, A100_BYTES, 80.0e9] {
+                let b = m.max_physical_batch(&a, *method, budget);
+                assert!(b >= prev, "{method:?}: budget up, batch down ({prev} -> {b})");
+                if b > 0 {
+                    assert!(m.peak_bytes(&a, *method, b) <= budget);
+                    assert!(m.peak_bytes(&a, *method, b + 1) > budget);
+                }
+                prev = b;
+            }
+        }
+    }
+
+    #[test]
+    fn max_physical_batch_is_antitone_in_peak() {
+        // Methods with strictly larger per-example footprints admit no
+        // larger batch under the same budget — the ordering the
+        // `perexample_dominates_masked_dominates_ghost` test pins must
+        // carry through the batch search.
+        let m = MemModel::default();
+        let a = vit_base();
+        for budget in [8.0e9, V100_BYTES, A100_BYTES] {
+            let pe = m.max_physical_batch(&a, ClippingMethod::PerExample, budget);
+            let mk = m.max_physical_batch(&a, ClippingMethod::MaskedJax, budget);
+            let gh = m.max_physical_batch(&a, ClippingMethod::Ghost, budget);
+            assert!(pe <= mk && mk <= gh, "budget {budget}: {pe} {mk} {gh}");
+        }
+    }
 }

@@ -63,6 +63,51 @@ impl ThroughputMeter {
     pub fn median_ci(&self, seed: u64) -> Summary {
         summary_with_ci(&self.samples, seed)
     }
+
+    /// Nearest-rank latency quantiles over the recorded samples.
+    pub fn quantiles(&self) -> Option<Quantiles> {
+        Quantiles::of(&self.samples)
+    }
+}
+
+/// Deterministic nearest-rank p50/p95/p99 quantiles.
+///
+/// Nearest-rank (the `ceil(p·n)`-th order statistic, 1-indexed) always
+/// returns an *observed* sample, so two implementations can never
+/// disagree about interpolation — which matters because serve bench
+/// rows are validated bit-for-bit by `bench --check`.
+#[derive(Debug, Clone, Copy, PartialEq, serde::Serialize, serde::Deserialize)]
+pub struct Quantiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub n: usize,
+}
+
+impl Quantiles {
+    /// Compute nearest-rank quantiles; `None` on an empty sample set.
+    pub fn of(samples: &[f64]) -> Option<Self> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(Self {
+            p50: nearest_rank(&sorted, 0.50),
+            p95: nearest_rank(&sorted, 0.95),
+            p99: nearest_rank(&sorted, 0.99),
+            n: sorted.len(),
+        })
+    }
+}
+
+/// The nearest-rank quantile of an ascending-sorted non-empty slice:
+/// the smallest value with at least `p`-fraction of the samples ≤ it.
+fn nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    let n = sorted.len();
+    debug_assert!(n > 0);
+    let rank = (p * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
 }
 
 /// Median and bootstrap 95% confidence interval.
@@ -144,6 +189,54 @@ mod tests {
         assert_eq!(s.median, 5.0);
         assert_eq!((s.ci_low, s.ci_high), (5.0, 5.0));
         assert!(summary_with_ci(&[], 1).median.is_nan());
+    }
+
+    #[test]
+    fn nearest_rank_semantics_pinned() {
+        // 1..=100: ceil(p*100) picks exactly the 50th/95th/99th order
+        // statistic, i.e. the values 50, 95, 99.
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let q = Quantiles::of(&samples).unwrap();
+        assert_eq!((q.p50, q.p95, q.p99, q.n), (50.0, 95.0, 99.0, 100));
+    }
+
+    #[test]
+    fn quantiles_always_return_observed_samples() {
+        // Nearest-rank never interpolates: every quantile is a member
+        // of the input, even for awkward n.
+        for n in [1usize, 2, 3, 7, 19, 101] {
+            let samples: Vec<f64> = (0..n).map(|i| 3.0 + (i as f64) * 0.25).collect();
+            let q = Quantiles::of(&samples).unwrap();
+            for v in [q.p50, q.p95, q.p99] {
+                assert!(samples.contains(&v), "n={n}: {v} not an observed sample");
+            }
+        }
+        // Single sample: every quantile is that sample.
+        let q = Quantiles::of(&[7.5]).unwrap();
+        assert_eq!((q.p50, q.p95, q.p99), (7.5, 7.5, 7.5));
+    }
+
+    #[test]
+    fn quantiles_are_order_invariant_and_monotone() {
+        let fwd: Vec<f64> = (0..250).map(|i| ((i * 37) % 250) as f64).collect();
+        let mut rev = fwd.clone();
+        rev.reverse();
+        let qf = Quantiles::of(&fwd).unwrap();
+        let qr = Quantiles::of(&rev).unwrap();
+        assert_eq!(qf, qr, "quantiles must not depend on arrival order");
+        assert!(qf.p50 <= qf.p95 && qf.p95 <= qf.p99);
+        assert!(Quantiles::of(&[]).is_none());
+    }
+
+    #[test]
+    fn meter_quantiles_match_free_function() {
+        let mut m = ThroughputMeter::new();
+        for i in 1..=20 {
+            m.record_secs(100, 1.0 / i as f64);
+        }
+        let q = m.quantiles().unwrap();
+        assert_eq!(Some(q), Quantiles::of(m.samples()));
+        assert_eq!(q.n, 20);
     }
 
     #[test]

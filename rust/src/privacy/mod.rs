@@ -58,6 +58,26 @@ impl AccountantKind {
             Self::Pld => "pld",
         }
     }
+
+    /// Price the epsilon this accountant reports after `steps`
+    /// compositions of the Poisson-subsampled Gaussian mechanism at
+    /// `(q, sigma)`, quoted at `delta`. Zero for sigma <= 0 guard-free
+    /// callers is NOT provided: sigma <= 0 means no finite guarantee,
+    /// reported here as infinity. One shared pricing function so the
+    /// `budget.overspend` audit rule and the serve ledger can never
+    /// disagree about what a step costs.
+    pub fn epsilon_after(self, q: f64, sigma: f64, steps: u64, delta: f64) -> f64 {
+        if steps == 0 {
+            return 0.0;
+        }
+        if sigma <= 0.0 {
+            return f64::INFINITY;
+        }
+        match self {
+            Self::Rdp => RdpAccountant::default().epsilon(q, sigma, steps, delta),
+            Self::Pld => pld_epsilon(q, sigma, steps.min(u64::from(u32::MAX)) as u32, delta),
+        }
+    }
 }
 
 /// The (mechanism-level) parameters of one DP-SGD run.

@@ -1,0 +1,344 @@
+//! The central privacy-budget ledger: one authority for every tenant's
+//! committed epsilon.
+//!
+//! The commit protocol reuses the trainer's epsilon-commit discipline
+//! (DESIGN.md §11) at slice granularity: spend is committed **strictly
+//! after** a slice completes and its checkpoint is durable, and a
+//! commit is *idempotent* — [`BudgetLedger::commit_to`] records "this
+//! tenant has completed `step` steps" (monotone max), never "add k
+//! steps". Replaying a commit after a crash therefore cannot
+//! double-spend: however many times a resumed serve re-reconciles a
+//! checkpoint, the committed step count — and with it the priced
+//! epsilon — lands in the same place.
+//!
+//! The hard-stop lives here too: [`BudgetLedger::affordable_steps`]
+//! prices the epsilon *after* each candidate step with the tenant's
+//! own accountant and returns the largest run length that stays within
+//! the declared budget, so the scheduler halts a tenant the step
+//! before its budget would be exceeded — the committed epsilon never
+//! crosses the declared line.
+
+use super::tenant::Tenant;
+use crate::privacy::AccountantKind;
+use anyhow::{anyhow, Context, Result};
+use serde::{Deserialize, Serialize};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Version of the serialized ledger snapshot.
+pub const LEDGER_SCHEMA_VERSION: u32 = 1;
+
+/// File name of the ledger snapshot under the serve checkpoint root.
+pub const LEDGER_FILE: &str = "ledger.json";
+
+/// Relative tolerance for "spend equals budget": pricing is pure
+/// floating-point math, so the boundary case (a budget declared as
+/// exactly k steps' epsilon) must not round into a refusal.
+const BUDGET_REL_TOL: f64 = 1e-9;
+
+/// Terminal/live state of one tenant, as the scheduler reports it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Serialize, Deserialize)]
+pub enum TenantStatus {
+    /// Still has steps to run and budget to spend.
+    Active,
+    /// Ran every configured step within budget.
+    Completed,
+    /// Halted by the ledger: the next step would overspend the
+    /// declared budget.
+    BudgetExhausted,
+}
+
+impl std::fmt::Display for TenantStatus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TenantStatus::Active => write!(f, "Active"),
+            TenantStatus::Completed => write!(f, "Completed"),
+            TenantStatus::BudgetExhausted => write!(f, "BudgetExhausted"),
+        }
+    }
+}
+
+/// One tenant's account: the mechanism parameters its spend is priced
+/// with, the declared budget, and the committed position.
+#[derive(Debug, Clone, PartialEq, Serialize, Deserialize)]
+pub struct LedgerEntry {
+    /// Tenant name (the account key).
+    pub tenant: String,
+    /// Poisson sampling rate q of the tenant's mechanism.
+    pub sampling_rate: f64,
+    /// Resolved noise multiplier sigma.
+    pub sigma: f64,
+    /// Accountant name (`rdp` | `pld`) pricing this account.
+    pub accountant: String,
+    /// Declared epsilon cap.
+    pub budget_epsilon: f64,
+    /// The delta the cap is quoted at.
+    pub budget_delta: f64,
+    /// Completed (checkpoint-durable) steps committed so far.
+    pub committed_steps: u64,
+    /// Epsilon priced at `committed_steps` — the authoritative spend.
+    pub committed_epsilon: f64,
+}
+
+impl LedgerEntry {
+    fn kind(&self) -> AccountantKind {
+        AccountantKind::parse(&self.accountant).unwrap_or(AccountantKind::Rdp)
+    }
+
+    /// Epsilon this account would have spent after `steps` total steps.
+    pub fn price(&self, steps: u64) -> f64 {
+        if self.sigma <= 0.0 {
+            // sigma = 0 carries no finite guarantee; a budgeted tenant
+            // can afford no step of it.
+            return if steps == 0 { 0.0 } else { f64::INFINITY };
+        }
+        self.kind().epsilon_after(self.sampling_rate, self.sigma, steps, self.budget_delta)
+    }
+
+    fn within_budget(&self, epsilon: f64) -> bool {
+        epsilon <= self.budget_epsilon * (1.0 + BUDGET_REL_TOL)
+    }
+}
+
+/// Serializable snapshot of the whole ledger, written atomically after
+/// every commit so a crashed serve resumes without double-spending.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+pub struct LedgerSnapshot {
+    /// [`LEDGER_SCHEMA_VERSION`] at write time.
+    pub schema_version: u32,
+    /// Every account, sorted by tenant name.
+    pub entries: Vec<LedgerEntry>,
+}
+
+/// The central ledger owning every tenant's accountant state.
+#[derive(Debug, Clone, Default)]
+pub struct BudgetLedger {
+    entries: BTreeMap<String, LedgerEntry>,
+}
+
+impl BudgetLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Open an account for an admitted tenant. Re-registering an
+    /// existing account (a crash-resumed serve re-admitting the same
+    /// manifest) is a no-op as long as the mechanism parameters and
+    /// budget agree; a *conflicting* re-registration is refused — a
+    /// changed mechanism would reprice already-committed spend.
+    pub fn register(&mut self, tenant: &Tenant, sigma: f64) -> Result<()> {
+        let fresh = LedgerEntry {
+            tenant: tenant.name.clone(),
+            sampling_rate: tenant.config.sampling_rate,
+            sigma,
+            accountant: tenant.config.accountant.as_str().to_string(),
+            budget_epsilon: tenant.budget.epsilon,
+            budget_delta: tenant.budget.delta,
+            committed_steps: 0,
+            committed_epsilon: 0.0,
+        };
+        if let Some(existing) = self.entries.get(&tenant.name) {
+            let same = existing.sampling_rate == fresh.sampling_rate
+                && existing.sigma == fresh.sigma
+                && existing.accountant == fresh.accountant
+                && existing.budget_epsilon == fresh.budget_epsilon
+                && existing.budget_delta == fresh.budget_delta;
+            if !same {
+                return Err(anyhow!(
+                    "tenant {:?} is already registered with different mechanism/budget \
+                     parameters; refusing to reprice committed spend",
+                    tenant.name
+                ));
+            }
+            return Ok(());
+        }
+        self.entries.insert(tenant.name.clone(), fresh);
+        Ok(())
+    }
+
+    /// The account for `tenant`, when one exists.
+    pub fn entry(&self, tenant: &str) -> Option<&LedgerEntry> {
+        self.entries.get(tenant)
+    }
+
+    /// Committed epsilon of `tenant` (0 for an unknown account).
+    pub fn epsilon(&self, tenant: &str) -> f64 {
+        self.entries.get(tenant).map_or(0.0, |e| e.committed_epsilon)
+    }
+
+    /// Committed steps of `tenant` (0 for an unknown account).
+    pub fn committed_steps(&self, tenant: &str) -> u64 {
+        self.entries.get(tenant).map_or(0, |e| e.committed_steps)
+    }
+
+    /// The largest `k <= want` such that running `k` more steps keeps
+    /// the account within its declared budget — 0 means the very next
+    /// step would overspend and the tenant must hard-stop *now*.
+    pub fn affordable_steps(&self, tenant: &str, want: u64) -> u64 {
+        let Some(e) = self.entries.get(tenant) else { return 0 };
+        let mut k = want;
+        while k > 0 {
+            if e.within_budget(e.price(e.committed_steps + k)) {
+                return k;
+            }
+            k -= 1;
+        }
+        0
+    }
+
+    /// Commit "tenant has completed `step` steps" — the post-slice
+    /// commit and the crash-reconcile are the same idempotent call:
+    /// monotone in `step`, so replays and re-reconciles never add
+    /// spend. Returns the committed epsilon.
+    pub fn commit_to(&mut self, tenant: &str, step: u64) -> Result<f64> {
+        let e = self
+            .entries
+            .get_mut(tenant)
+            .ok_or_else(|| anyhow!("no ledger account for tenant {tenant:?}"))?;
+        if step > e.committed_steps {
+            e.committed_steps = step;
+            e.committed_epsilon = e.price(step);
+        }
+        Ok(e.committed_epsilon)
+    }
+
+    /// Snapshot every account (sorted, schema-stamped).
+    pub fn snapshot(&self) -> LedgerSnapshot {
+        LedgerSnapshot {
+            schema_version: LEDGER_SCHEMA_VERSION,
+            entries: self.entries.values().cloned().collect(),
+        }
+    }
+
+    /// Rebuild a ledger from a snapshot.
+    pub fn restore(snapshot: &LedgerSnapshot) -> Result<Self> {
+        if snapshot.schema_version != LEDGER_SCHEMA_VERSION {
+            return Err(anyhow!(
+                "ledger snapshot schema v{} (expected v{LEDGER_SCHEMA_VERSION})",
+                snapshot.schema_version
+            ));
+        }
+        let mut entries = BTreeMap::new();
+        for e in &snapshot.entries {
+            if entries.insert(e.tenant.clone(), e.clone()).is_some() {
+                return Err(anyhow!("ledger snapshot lists tenant {:?} twice", e.tenant));
+            }
+        }
+        Ok(Self { entries })
+    }
+
+    /// Atomically persist the snapshot as `<dir>/`[`LEDGER_FILE`] via
+    /// the same temp-file+rename protocol the checkpoints use.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating serve state dir {}", dir.display()))?;
+        let path = dir.join(LEDGER_FILE);
+        let tmp = dir.join(format!("{LEDGER_FILE}.tmp"));
+        let json = serde_json::to_string_pretty(&self.snapshot())
+            .context("serializing ledger snapshot")?;
+        std::fs::write(&tmp, json).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming {} into place", tmp.display()))?;
+        Ok(())
+    }
+
+    /// Load the snapshot written by [`BudgetLedger::save`], when one
+    /// exists; `Ok(None)` when the serve root has no ledger yet.
+    pub fn load(dir: &Path) -> Result<Option<Self>> {
+        let path = dir.join(LEDGER_FILE);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(anyhow::Error::new(e)
+                    .context(format!("reading ledger snapshot {}", path.display())))
+            }
+        };
+        let snapshot: LedgerSnapshot = serde_json::from_str(&text)
+            .with_context(|| format!("parsing ledger snapshot {}", path.display()))?;
+        Ok(Some(Self::restore(&snapshot)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::BudgetSpec;
+    use crate::coordinator::config::TrainConfig;
+
+    fn tenant(name: &str, steps_budgeted: u64) -> (Tenant, f64) {
+        let config = TrainConfig {
+            sampling_rate: 0.25,
+            noise_multiplier: Some(1.0),
+            steps: 8,
+            ..TrainConfig::default()
+        };
+        let sigma = 1.0;
+        let budget_epsilon =
+            config.accountant.epsilon_after(0.25, sigma, steps_budgeted, config.delta);
+        let t = Tenant {
+            name: name.into(),
+            config,
+            budget: BudgetSpec { epsilon: budget_epsilon, delta: 2.04e-5 },
+        };
+        (t, sigma)
+    }
+
+    #[test]
+    fn hard_stop_lands_exactly_at_the_budgeted_step() {
+        // Budget = exactly 3 steps' epsilon: affordable from 0 is 3,
+        // and after committing 3 the next step is unaffordable.
+        let (t, sigma) = tenant("a", 3);
+        let mut ledger = BudgetLedger::new();
+        ledger.register(&t, sigma).unwrap();
+        assert_eq!(ledger.affordable_steps("a", 10), 3);
+        ledger.commit_to("a", 3).unwrap();
+        assert_eq!(ledger.affordable_steps("a", 10), 0);
+        assert!(ledger.epsilon("a") <= t.budget.epsilon * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn commit_is_idempotent_and_monotone() {
+        let (t, sigma) = tenant("a", 5);
+        let mut ledger = BudgetLedger::new();
+        ledger.register(&t, sigma).unwrap();
+        let e2 = ledger.commit_to("a", 2).unwrap();
+        // Replaying an old or equal commit never adds spend.
+        assert_eq!(ledger.commit_to("a", 2).unwrap(), e2);
+        assert_eq!(ledger.commit_to("a", 1).unwrap(), e2);
+        assert_eq!(ledger.committed_steps("a"), 2);
+        let e4 = ledger.commit_to("a", 4).unwrap();
+        assert!(e4 > e2);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_and_conflicting_reregistration_is_refused() {
+        let (t, sigma) = tenant("a", 4);
+        let mut ledger = BudgetLedger::new();
+        ledger.register(&t, sigma).unwrap();
+        ledger.commit_to("a", 2).unwrap();
+
+        let restored = BudgetLedger::restore(&ledger.snapshot()).unwrap();
+        assert_eq!(restored.committed_steps("a"), 2);
+        assert_eq!(restored.epsilon("a"), ledger.epsilon("a"));
+
+        // Same parameters: no-op; committed spend survives.
+        let mut again = restored.clone();
+        again.register(&t, sigma).unwrap();
+        assert_eq!(again.committed_steps("a"), 2);
+
+        // Changed budget: refused.
+        let mut conflicting = t.clone();
+        conflicting.budget.epsilon *= 2.0;
+        assert!(again.register(&conflicting, sigma).is_err());
+    }
+
+    #[test]
+    fn sigma_zero_affords_nothing() {
+        let (mut t, _) = tenant("a", 4);
+        t.config.noise_multiplier = Some(0.0);
+        let mut ledger = BudgetLedger::new();
+        ledger.register(&t, 0.0).unwrap();
+        assert_eq!(ledger.affordable_steps("a", 4), 0);
+    }
+}

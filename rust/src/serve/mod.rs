@@ -1,0 +1,43 @@
+//! Multi-tenant DP training service (`dpshort serve`).
+//!
+//! Many independent differentially-private training jobs share one
+//! backend: a **job manifest** (JSON) declares each tenant's model,
+//! clipping method, sampler/accountant, and `(epsilon, delta)` budget;
+//! admission runs every job through the static plan auditor and
+//! refuses Deny verdicts at submission ([`queue`]); a cooperative
+//! scheduler time-slices the admitted sessions ([`scheduler`]); and a
+//! **central privacy-budget ledger** owns every tenant's accountant
+//! state, committing epsilon strictly after each durable slice and
+//! hard-stopping a tenant the step before its budget would be exceeded
+//! ([`ledger`]).
+//!
+//! Tenants are isolated at three layers:
+//!
+//! 1. **Privacy** — the ledger is the single budget authority; a
+//!    tenant's epsilon is priced from its own `(q, sigma, accountant)`
+//!    and can never draw on another tenant's budget.
+//! 2. **State** — checkpoints live in per-tenant namespaces
+//!    (`fault::tenant_dir`) and carry the config fingerprint, so one
+//!    tenant's checkpoint can neither overwrite nor resume as
+//!    another's.
+//! 3. **Memory** — residency is bounded by `--max-concurrent` and an
+//!    analytic `--memory-budget-bytes` priced by `MemModel::peak_bytes`
+//!    ([`tenant::resident_bytes`]); under pressure the coldest session
+//!    is evicted to its checkpoint and later resumed bitwise-exactly.
+//!
+//! Because scheduling is cooperative and each session's trajectory is
+//! a pure function of its own config, every tenant's final parameters,
+//! losses, and epsilon are bitwise-identical to a standalone
+//! `Trainer::run` of the same config — at any concurrency level and
+//! under any eviction schedule. The integration suite
+//! (`rust/tests/serve_multi_tenant.rs`) pins exactly that.
+
+pub mod ledger;
+pub mod queue;
+pub mod scheduler;
+pub mod tenant;
+
+pub use ledger::{BudgetLedger, LedgerEntry, LedgerSnapshot, TenantStatus, LEDGER_FILE};
+pub use queue::{admit, load_jobs, parse_jobs, JobSpec, JobsFile, Rejection};
+pub use scheduler::{run_serve, ServeOptions, ServeReport, SliceRecord, TenantOutcome};
+pub use tenant::{arch_of, method_for_variant, resident_bytes, Tenant};

@@ -1,0 +1,355 @@
+//! The admission queue: parse a job manifest and admit each job
+//! through the static plan auditor *at submission* — a Deny plan is a
+//! rejection with named rules, never a mid-run surprise.
+//!
+//! Manifest format (`dpshort serve --jobs FILE.json`):
+//!
+//! ```json
+//! {
+//!   "tenants": [
+//!     { "name": "acme",
+//!       "model": "mlp-small",
+//!       "clip_method": "ghost",
+//!       "dataset_size": 256, "seed": 7,
+//!       "sampling_rate": 0.25, "physical_batch": 8,
+//!       "steps": 4, "noise_multiplier": 1.0,
+//!       "budget_epsilon": 8.0, "budget_delta": 2.04e-5 }
+//!   ]
+//! }
+//! ```
+//!
+//! Every field except `name`, `steps`, and `budget_epsilon` has a
+//! default; `sampler`/`accountant` accept the CLI names. The declared
+//! budget is wired into the config (`declared_epsilon`), so admission
+//! runs the full rule catalog *including* `budget.overspend`: a job
+//! whose configured steps would already overspend its own budget is
+//! refused before it runs a single step.
+
+use super::tenant::Tenant;
+use crate::analysis::BudgetSpec;
+use crate::clipping::clip_method_variant;
+use crate::coordinator::config::TrainConfig;
+use crate::coordinator::sampler::SamplerChoice;
+use crate::coordinator::trainer::resolve_sigma;
+use crate::privacy::AccountantKind;
+use crate::runtime::Runtime;
+use anyhow::{anyhow, Context, Result};
+use serde::Deserialize;
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// One job in the manifest. Serde-deserialized; unknown fields are
+/// rejected so a typo'd budget key cannot silently admit an
+/// unconstrained job.
+#[derive(Debug, Clone, Deserialize)]
+#[serde(deny_unknown_fields)]
+pub struct JobSpec {
+    /// Unique tenant name (checkpoint namespace + ledger account key).
+    pub name: String,
+    /// Model name; the runtime's default model when omitted.
+    #[serde(default)]
+    pub model: Option<String>,
+    /// CLI clip-method name (`nonprivate|per-example|ghost|bk|mix`) or
+    /// an executable accum variant (`masked`, the Algorithm-2 default).
+    #[serde(default = "default_clip_method")]
+    pub clip_method: String,
+    /// Per-tenant dataset size N.
+    #[serde(default)]
+    pub dataset_size: Option<u32>,
+    /// Per-tenant dataset/experiment seed.
+    #[serde(default)]
+    pub seed: Option<u64>,
+    /// Poisson sampling rate q.
+    #[serde(default)]
+    pub sampling_rate: Option<f64>,
+    /// Physical batch size.
+    #[serde(default)]
+    pub physical_batch: Option<usize>,
+    /// Optimizer steps the tenant wants.
+    pub steps: u64,
+    /// Learning rate.
+    #[serde(default)]
+    pub lr: Option<f64>,
+    /// Noise multiplier sigma; calibrated from the budget when omitted.
+    #[serde(default)]
+    pub noise_multiplier: Option<f64>,
+    /// Declared epsilon budget (the ledger cap).
+    pub budget_epsilon: f64,
+    /// Delta the budget is quoted at; the trainer default when omitted.
+    #[serde(default)]
+    pub budget_delta: Option<f64>,
+    /// Sampler name (`poisson|shuffle`).
+    #[serde(default)]
+    pub sampler: Option<String>,
+    /// Accountant name (`rdp|pld`).
+    #[serde(default)]
+    pub accountant: Option<String>,
+    /// Data-parallel workers for this tenant's sessions.
+    #[serde(default)]
+    pub workers: Option<usize>,
+}
+
+fn default_clip_method() -> String {
+    "masked".into()
+}
+
+/// The manifest file: a list of tenants.
+#[derive(Debug, Clone, Deserialize)]
+#[serde(deny_unknown_fields)]
+pub struct JobsFile {
+    /// Submitted jobs, in manifest order (also the scheduling order).
+    pub tenants: Vec<JobSpec>,
+}
+
+/// A job the auditor (or manifest validation) refused at submission.
+#[derive(Debug, Clone, serde::Serialize)]
+pub struct Rejection {
+    /// Tenant name of the refused job.
+    pub name: String,
+    /// Human-readable refusal.
+    pub reason: String,
+    /// Deny rules that fired, when the auditor did the refusing.
+    pub rules: Vec<String>,
+}
+
+impl JobSpec {
+    /// Lower this job into the [`TrainConfig`] its sessions run. The
+    /// declared budget becomes both the config's `declared_epsilon`
+    /// (static admission audit) and the calibration target when no
+    /// explicit sigma is given.
+    pub fn to_config(&self, rt: &Runtime) -> Result<TrainConfig> {
+        let defaults = TrainConfig::default();
+        let model = match &self.model {
+            Some(m) => m.clone(),
+            None => rt
+                .default_model()
+                .ok_or_else(|| {
+                    anyhow!("job {:?}: no model given and the manifest has none", self.name)
+                })?
+                .to_string(),
+        };
+        // Accept either the CLI clip-method names or a raw executable
+        // variant ("masked" has no CLI alias — it's the config default).
+        let variant = clip_method_variant(&self.clip_method)
+            .or_else(|| {
+                crate::clipping::ClippingMethod::ALL
+                    .iter()
+                    .map(|m| m.variant())
+                    .find(|v| *v == self.clip_method)
+            })
+            .ok_or_else(|| {
+                anyhow!("job {:?}: unknown clip method {:?}", self.name, self.clip_method)
+            })?
+            .to_string();
+        let sampler = match &self.sampler {
+            Some(s) => SamplerChoice::parse(s)
+                .ok_or_else(|| anyhow!("job {:?}: unknown sampler {s:?}", self.name))?,
+            None => defaults.sampler,
+        };
+        let accountant = match &self.accountant {
+            Some(a) => AccountantKind::parse(a)
+                .ok_or_else(|| anyhow!("job {:?}: unknown accountant {a:?}", self.name))?,
+            None => defaults.accountant,
+        };
+        if self.steps == 0 {
+            return Err(anyhow!("job {:?}: steps must be > 0", self.name));
+        }
+        if !(self.budget_epsilon.is_finite() && self.budget_epsilon > 0.0) {
+            return Err(anyhow!(
+                "job {:?}: budget_epsilon must be finite and > 0, got {}",
+                self.name,
+                self.budget_epsilon
+            ));
+        }
+        Ok(TrainConfig {
+            model,
+            variant,
+            dataset_size: self.dataset_size.unwrap_or(256),
+            sampling_rate: self.sampling_rate.unwrap_or(0.25),
+            physical_batch: self.physical_batch.unwrap_or(8),
+            steps: self.steps,
+            lr: self.lr.unwrap_or(defaults.lr),
+            noise_multiplier: self.noise_multiplier,
+            target_epsilon: self.budget_epsilon,
+            delta: self.budget_delta.unwrap_or(defaults.delta),
+            seed: self.seed.unwrap_or(0),
+            eval_examples: 0,
+            workers: self.workers.unwrap_or(1),
+            sampler,
+            accountant,
+            declared_epsilon: Some(self.budget_epsilon),
+            ..defaults
+        })
+    }
+}
+
+/// Parse a manifest from JSON text.
+pub fn parse_jobs(text: &str) -> Result<JobsFile> {
+    serde_json::from_str(text).context("parsing serve job manifest")
+}
+
+/// Read and parse a manifest file.
+pub fn load_jobs(path: &Path) -> Result<JobsFile> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading job manifest {}", path.display()))?;
+    parse_jobs(&text)
+}
+
+/// Admit every job through the PR-6 auditor: a clean plan becomes a
+/// [`Tenant`], a Deny plan (or an unloadable job) becomes a
+/// [`Rejection`] naming its rules. Admission order is manifest order.
+pub fn admit(rt: &Runtime, jobs: &JobsFile) -> Result<(Vec<Tenant>, Vec<Rejection>)> {
+    let mut seen = BTreeSet::new();
+    let mut admitted = Vec::new();
+    let mut rejected = Vec::new();
+    for job in &jobs.tenants {
+        if job.name.is_empty() {
+            rejected.push(Rejection {
+                name: job.name.clone(),
+                reason: "tenant name must be non-empty".into(),
+                rules: Vec::new(),
+            });
+            continue;
+        }
+        if !seen.insert(job.name.clone()) {
+            rejected.push(Rejection {
+                name: job.name.clone(),
+                reason: format!("duplicate tenant name {:?}", job.name),
+                rules: Vec::new(),
+            });
+            continue;
+        }
+        let config = match job.to_config(rt) {
+            Ok(c) => c,
+            Err(e) => {
+                rejected.push(Rejection {
+                    name: job.name.clone(),
+                    reason: e.to_string(),
+                    rules: Vec::new(),
+                });
+                continue;
+            }
+        };
+        let outcome = (|| -> Result<Option<Vec<String>>> {
+            let sigma = resolve_sigma(&config)?;
+            let meta = rt.model(&config.model)?;
+            let report =
+                crate::analysis::audit_run(meta.meta(), rt.manifest().seed, &config, sigma)?;
+            let denies = report.deny_rules();
+            if denies.is_empty() {
+                Ok(None)
+            } else {
+                Ok(Some(denies.iter().map(|r| r.to_string()).collect()))
+            }
+        })();
+        match outcome {
+            Ok(None) => {
+                let budget = BudgetSpec {
+                    epsilon: job.budget_epsilon,
+                    delta: job.budget_delta.unwrap_or(config.delta),
+                };
+                admitted.push(Tenant { name: job.name.clone(), config, budget });
+            }
+            Ok(Some(rules)) => rejected.push(Rejection {
+                name: job.name.clone(),
+                reason: format!("plan audit denied admission ({})", rules.join(", ")),
+                rules,
+            }),
+            Err(e) => rejected.push(Rejection {
+                name: job.name.clone(),
+                reason: e.to_string(),
+                rules: Vec::new(),
+            }),
+        }
+    }
+    Ok((admitted, rejected))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::rule;
+
+    fn manifest(extra: &str) -> String {
+        format!(
+            r#"{{"tenants": [
+                {{"name": "a", "steps": 2, "budget_epsilon": 8.0,
+                  "noise_multiplier": 1.0, "dataset_size": 48,
+                  "physical_batch": 8, "clip_method": "ghost"}}{extra}
+            ]}}"#
+        )
+    }
+
+    #[test]
+    fn a_clean_job_is_admitted_with_its_budget() {
+        let rt = Runtime::reference();
+        let jobs = parse_jobs(&manifest("")).unwrap();
+        let (admitted, rejected) = admit(&rt, &jobs).unwrap();
+        assert!(rejected.is_empty(), "{rejected:#?}");
+        assert_eq!(admitted.len(), 1);
+        let t = &admitted[0];
+        assert_eq!(t.name, "a");
+        assert_eq!(t.config.variant, "ghost");
+        assert_eq!(t.config.declared_epsilon, Some(8.0));
+        assert_eq!(t.budget.epsilon, 8.0);
+        assert_eq!(t.config.eval_examples, 0);
+    }
+
+    #[test]
+    fn a_shuffle_job_is_rejected_at_submission_naming_the_rule() {
+        let rt = Runtime::reference();
+        let jobs = parse_jobs(&manifest(
+            r#", {"name": "b", "steps": 2, "budget_epsilon": 8.0,
+                 "noise_multiplier": 1.0, "sampler": "shuffle"}"#,
+        ))
+        .unwrap();
+        let (admitted, rejected) = admit(&rt, &jobs).unwrap();
+        assert_eq!(admitted.len(), 1);
+        assert_eq!(rejected.len(), 1);
+        assert_eq!(rejected[0].name, "b");
+        assert!(rejected[0].rules.iter().any(|r| r == rule::SHORTCUT_EPSILON));
+    }
+
+    #[test]
+    fn an_overspending_job_is_rejected_by_the_budget_rule() {
+        // 64 steps at sigma = 1, q = 0.25 spend far more than eps 0.01.
+        let rt = Runtime::reference();
+        let jobs = parse_jobs(
+            r#"{"tenants": [{"name": "greedy", "steps": 64,
+                "budget_epsilon": 0.01, "noise_multiplier": 1.0}]}"#,
+        )
+        .unwrap();
+        let (admitted, rejected) = admit(&rt, &jobs).unwrap();
+        assert!(admitted.is_empty());
+        assert_eq!(rejected.len(), 1);
+        assert!(
+            rejected[0].rules.iter().any(|r| r == rule::BUDGET_OVERSPEND),
+            "{rejected:#?}"
+        );
+    }
+
+    #[test]
+    fn duplicates_typos_and_bad_values_are_refused() {
+        let rt = Runtime::reference();
+        let dup = parse_jobs(&manifest(
+            r#", {"name": "a", "steps": 2, "budget_epsilon": 8.0, "noise_multiplier": 1.0}"#,
+        ))
+        .unwrap();
+        let (admitted, rejected) = admit(&rt, &dup).unwrap();
+        assert_eq!((admitted.len(), rejected.len()), (1, 1));
+
+        // Unknown manifest keys are a parse error, not a silent admit.
+        assert!(parse_jobs(
+            r#"{"tenants": [{"name": "x", "steps": 2, "budget_epsilon": 8.0,
+                "budgett_delta": 1e-5}]}"#
+        )
+        .is_err());
+
+        let bad = parse_jobs(
+            r#"{"tenants": [{"name": "x", "steps": 0, "budget_epsilon": 8.0}]}"#,
+        )
+        .unwrap();
+        let (a, r) = admit(&rt, &bad).unwrap();
+        assert!(a.is_empty() && r.len() == 1);
+    }
+}

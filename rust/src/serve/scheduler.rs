@@ -1,0 +1,412 @@
+//! The cooperative serve scheduler: time-slice admitted tenants'
+//! sessions in `--steps-per-slice` chunks, bound residency by
+//! `--max-concurrent` and `--memory-budget-bytes`, and commit epsilon
+//! to the central ledger strictly after each durable slice.
+//!
+//! **Determinism.** The scheduler is deliberately cooperative (one
+//! slice at a time, manifest order): each tenant's trajectory is a
+//! pure function of its own config, so residency limits, eviction, and
+//! `--max-concurrent` move *wall-clock and memory only* — never bits.
+//! Data-parallelism stays where it already is bitwise-proven: inside
+//! each session's own worker pool (DESIGN.md §8). `max_concurrent`
+//! bounds how many sessions stay *resident* between slices; a
+//! non-resident tenant's state lives in its checkpoint namespace and
+//! is resumed (bitwise-exactly, per DESIGN.md §11) when its turn
+//! comes back.
+//!
+//! **Crash consistency.** After every slice, in order: (1) the tenant
+//! checkpoint is written atomically into its namespace, (2) the ledger
+//! commits the checkpointed step (idempotent max), (3) the ledger
+//! snapshot is written atomically. A crash between any two leaves a
+//! resumable state: `run_serve` reconciles the ledger against each
+//! tenant's newest valid checkpoint at startup, and because commits
+//! are monotone-by-step, reconciliation never double-spends.
+
+use super::ledger::{BudgetLedger, TenantStatus};
+use super::queue::Rejection;
+use super::tenant::{resident_bytes, Tenant};
+use crate::coordinator::trainer::{TrainReport, TrainSession};
+use crate::fault::{latest_valid, tenant_dir, write_checkpoint};
+use crate::metrics::Quantiles;
+use crate::runtime::Runtime;
+use anyhow::{anyhow, Context, Result};
+use serde::Serialize;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Scheduler knobs (the `dpshort serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Max resident sessions between slices (>= 1).
+    pub max_concurrent: usize,
+    /// Total resident-session memory budget per `MemModel::peak_bytes`;
+    /// 0 disables the memory-pressure eviction policy.
+    pub memory_budget_bytes: f64,
+    /// Steps each scheduled slice runs (>= 1).
+    pub steps_per_slice: u64,
+    /// Root directory for per-tenant checkpoint namespaces + the
+    /// ledger snapshot.
+    pub ckpt_root: PathBuf,
+    /// Stop (as if crashed) after this many completed slices — the
+    /// deterministic kill switch the crash-resume tests and the CI
+    /// smoke use. `None` runs to completion.
+    pub max_slices: Option<u64>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            max_concurrent: 2,
+            memory_budget_bytes: 0.0,
+            steps_per_slice: 2,
+            ckpt_root: PathBuf::from("serve-ckpts"),
+            max_slices: None,
+        }
+    }
+}
+
+/// One completed slice, for the synthetic-load bench.
+#[derive(Debug, Clone, Serialize)]
+pub struct SliceRecord {
+    /// Tenant the slice ran.
+    pub tenant: String,
+    /// Steps the slice completed.
+    pub steps: u64,
+    /// Real (unpadded) examples the slice processed.
+    pub examples: usize,
+    /// Wall-clock seconds of the slice.
+    pub secs: f64,
+}
+
+/// Final state of one tenant after a serve run.
+#[derive(Debug, Serialize)]
+pub struct TenantOutcome {
+    /// Tenant name.
+    pub name: String,
+    /// Where the tenant ended up (`Active` iff the run was
+    /// interrupted by `max_slices` before it finished).
+    pub status: TenantStatus,
+    /// Steps completed and committed.
+    pub steps_done: u64,
+    /// Ledger-committed epsilon.
+    pub epsilon_committed: f64,
+    /// The declared cap the ledger enforced.
+    pub budget_epsilon: f64,
+    /// Times this tenant's session was evicted while incomplete.
+    pub evictions: usize,
+    /// Full training report, for tenants that completed.
+    pub report: Option<TrainReport>,
+}
+
+/// Everything one `run_serve` produced.
+#[derive(Debug, Serialize)]
+pub struct ServeReport {
+    /// Per-tenant outcomes, in manifest order.
+    pub outcomes: Vec<TenantOutcome>,
+    /// Jobs refused at admission (populated by the CLI layer).
+    pub rejections: Vec<Rejection>,
+    /// Every completed slice, in schedule order.
+    pub slices: Vec<SliceRecord>,
+    /// Aggregate examples/second over all slices.
+    pub aggregate_examples_per_sec: f64,
+    /// Nearest-rank p50/p95/p99 over per-slice wall-clock seconds.
+    pub slice_latency: Option<Quantiles>,
+    /// Total evictions across tenants.
+    pub evictions: usize,
+    /// True when `max_slices` stopped the run before every tenant
+    /// reached a terminal state (the simulated crash).
+    pub interrupted: bool,
+}
+
+impl ServeReport {
+    pub fn to_json(&self) -> Result<String> {
+        serde_json::to_string_pretty(self).context("serializing serve report")
+    }
+}
+
+/// Per-tenant scheduler bookkeeping.
+struct Slot<'rt> {
+    tenant: Tenant,
+    fingerprint: String,
+    bytes: f64,
+    status: TenantStatus,
+    evictions: usize,
+    /// Live session, when resident.
+    session: Option<TrainSession<'rt>>,
+    /// Slice counter at last scheduling (eviction coldness key).
+    last_scheduled: u64,
+    report: Option<TrainReport>,
+}
+
+impl Slot<'_> {
+    fn terminal(&self) -> bool {
+        self.status != TenantStatus::Active
+    }
+}
+
+/// Run the service over `tenants` (already admitted) with `ledger` as
+/// the budget authority. The ledger may carry restored state from a
+/// previous (crashed) serve: accounts are registered idempotently and
+/// reconciled against each tenant's newest valid checkpoint before any
+/// step runs.
+pub fn run_serve(
+    rt: &Runtime,
+    tenants: &[Tenant],
+    ledger: &mut BudgetLedger,
+    opts: &ServeOptions,
+) -> Result<ServeReport> {
+    if tenants.is_empty() {
+        return Err(anyhow!("no admitted tenants to serve"));
+    }
+    let max_concurrent = opts.max_concurrent.max(1);
+    let steps_per_slice = opts.steps_per_slice.max(1);
+
+    // Open slots: resolve sigma/fingerprint/memory price once, open
+    // ledger accounts, and reconcile committed steps with whatever a
+    // previous serve left in each tenant's checkpoint namespace.
+    let mut slots: Vec<Slot> = Vec::with_capacity(tenants.len());
+    for t in tenants {
+        let sigma = t.sigma()?;
+        let fingerprint = t.fingerprint()?;
+        let meta = rt.model(&t.config.model)?;
+        ledger.register(t, sigma)?;
+        let dir = tenant_dir(&opts.ckpt_root, &t.name);
+        let scan = latest_valid(&dir, &fingerprint)?;
+        let mut done_steps = 0;
+        if let Some((_, ckpt)) = &scan.found {
+            // Crash-reconcile: the checkpoint is durable, so its steps
+            // are committed spend even if the crash hit before the
+            // ledger snapshot landed. Idempotent — never adds spend a
+            // snapshot already recorded.
+            ledger.commit_to(&t.name, ckpt.step)?;
+            done_steps = ckpt.step;
+        }
+        let status = if done_steps >= t.config.steps {
+            TenantStatus::Completed
+        } else {
+            TenantStatus::Active
+        };
+        slots.push(Slot {
+            fingerprint,
+            bytes: resident_bytes(t, meta.meta()),
+            tenant: t.clone(),
+            status,
+            evictions: 0,
+            session: None,
+            last_scheduled: 0,
+            report: None,
+        });
+    }
+    ledger.save(&opts.ckpt_root)?;
+
+    let mut slices: Vec<SliceRecord> = Vec::new();
+    let mut slice_counter: u64 = 0;
+    let mut total_evictions = 0usize;
+    let mut interrupted = false;
+
+    'serve: while slots.iter().any(|s| !s.terminal()) {
+        let mut progressed = false;
+        for i in 0..slots.len() {
+            if slots[i].terminal() {
+                continue;
+            }
+            if let Some(max) = opts.max_slices {
+                if slice_counter >= max {
+                    interrupted = true;
+                    break 'serve;
+                }
+            }
+
+            // Budget gate BEFORE any residency work: a tenant whose
+            // next step is unaffordable hard-stops here, one step
+            // short of overspending.
+            let remaining = slots[i]
+                .tenant
+                .config
+                .steps
+                .saturating_sub(ledger.committed_steps(&slots[i].tenant.name));
+            let want = steps_per_slice.min(remaining);
+            let afford = ledger.affordable_steps(&slots[i].tenant.name, want);
+            if afford == 0 {
+                park(&mut slots[i], ledger, opts)?;
+                slots[i].status = TenantStatus::BudgetExhausted;
+                progressed = true;
+                continue;
+            }
+
+            // Make the tenant resident, evicting coldest sessions when
+            // over the concurrency or memory limits.
+            if slots[i].session.is_none() {
+                make_room(&mut slots, i, max_concurrent, opts, ledger, &mut total_evictions)?;
+                slots[i].session = Some(open_session(rt, &slots[i], opts)?);
+            }
+            slots[i].last_scheduled = slice_counter + 1;
+
+            // Run the slice.
+            let started = Instant::now();
+            let mut examples = 0usize;
+            let mut ran = 0u64;
+            {
+                let session = slots[i].session.as_mut().expect("resident session");
+                for _ in 0..afford {
+                    if session.done() {
+                        break;
+                    }
+                    let log = session.step()?;
+                    examples += log.logical_batch;
+                    ran += 1;
+                }
+            }
+            let secs = started.elapsed().as_secs_f64();
+
+            // Durable-then-commit: checkpoint, ledger commit, snapshot.
+            let (step_now, finished) = {
+                let session = slots[i].session.as_ref().expect("resident session");
+                let ckpt = session.checkpoint()?;
+                let dir = tenant_dir(&opts.ckpt_root, &slots[i].tenant.name);
+                write_checkpoint(&dir, &ckpt, None).with_context(|| {
+                    format!("checkpointing tenant {:?} after slice", slots[i].tenant.name)
+                })?;
+                (ckpt.step, session.done())
+            };
+            ledger.commit_to(&slots[i].tenant.name, step_now)?;
+            ledger.save(&opts.ckpt_root)?;
+
+            slice_counter += 1;
+            progressed = true;
+            slices.push(SliceRecord {
+                tenant: slots[i].tenant.name.clone(),
+                steps: ran,
+                examples,
+                secs,
+            });
+
+            if finished {
+                let session = slots[i].session.take().expect("resident session");
+                slots[i].report = Some(session.finish()?);
+                slots[i].status = TenantStatus::Completed;
+            }
+        }
+        if !progressed {
+            // Every non-terminal tenant failed to advance — impossible
+            // by construction (afford == 0 is terminal), but never
+            // spin silently.
+            return Err(anyhow!("serve scheduler made no progress over a full round"));
+        }
+    }
+
+    // Interrupted (simulated crash): drop live sessions on the floor —
+    // every completed slice is already checkpointed and committed, so
+    // a `--resume` loses nothing.
+
+    let meter_examples: f64 = slices.iter().map(|s| s.examples as f64).sum();
+    let meter_secs: f64 = slices.iter().map(|s| s.secs).sum();
+    let latencies: Vec<f64> = slices.iter().map(|s| s.secs).collect();
+
+    let outcomes = slots
+        .into_iter()
+        .map(|s| TenantOutcome {
+            name: s.tenant.name.clone(),
+            status: s.status,
+            steps_done: ledger.committed_steps(&s.tenant.name),
+            epsilon_committed: ledger.epsilon(&s.tenant.name),
+            budget_epsilon: s.tenant.budget.epsilon,
+            evictions: s.evictions,
+            report: s.report,
+        })
+        .collect();
+
+    let throughput = if meter_secs > 0.0 { meter_examples / meter_secs } else { 0.0 };
+    Ok(ServeReport {
+        outcomes,
+        rejections: Vec::new(),
+        aggregate_examples_per_sec: throughput,
+        slice_latency: Quantiles::of(&latencies),
+        slices,
+        evictions: total_evictions,
+        interrupted,
+    })
+}
+
+/// Open (or bitwise-resume) a session for `slot` from its checkpoint
+/// namespace.
+fn open_session<'rt>(
+    rt: &'rt Runtime,
+    slot: &Slot<'rt>,
+    opts: &ServeOptions,
+) -> Result<TrainSession<'rt>> {
+    let dir = tenant_dir(&opts.ckpt_root, &slot.tenant.name);
+    let scan = latest_valid(&dir, &slot.fingerprint)?;
+    match scan.found {
+        Some((_, ckpt)) => TrainSession::resume(rt, slot.tenant.config.clone(), ckpt),
+        None => TrainSession::new(rt, slot.tenant.config.clone()),
+    }
+}
+
+/// Checkpoint-and-drop `slot`'s session (if resident), committing its
+/// durable position first. Used for evictions and the budget
+/// hard-stop.
+fn park(slot: &mut Slot, ledger: &mut BudgetLedger, opts: &ServeOptions) -> Result<()> {
+    if let Some(session) = slot.session.take() {
+        let ckpt = session.checkpoint()?;
+        let dir = tenant_dir(&opts.ckpt_root, &slot.tenant.name);
+        write_checkpoint(&dir, &ckpt, None)
+            .with_context(|| format!("checkpointing tenant {:?} for eviction", slot.tenant.name))?;
+        ledger.commit_to(&slot.tenant.name, ckpt.step)?;
+        ledger.save(&opts.ckpt_root)?;
+    }
+    Ok(())
+}
+
+/// Evict coldest resident sessions (other than `keep`) until both the
+/// concurrency and the memory budget admit `keep`'s session.
+fn make_room(
+    slots: &mut [Slot],
+    keep: usize,
+    max_concurrent: usize,
+    opts: &ServeOptions,
+    ledger: &mut BudgetLedger,
+    total_evictions: &mut usize,
+) -> Result<()> {
+    loop {
+        let resident: Vec<usize> =
+            (0..slots.len()).filter(|&j| j != keep && slots[j].session.is_some()).collect();
+        let over_concurrency = resident.len() + 1 > max_concurrent;
+        let over_memory = opts.memory_budget_bytes > 0.0 && {
+            let held: f64 = resident.iter().map(|&j| slots[j].bytes).sum();
+            held + slots[keep].bytes > opts.memory_budget_bytes
+        };
+        if (!over_concurrency && !over_memory) || resident.is_empty() {
+            return Ok(());
+        }
+        // Coldest = least recently scheduled; ties break on manifest
+        // order for determinism.
+        let coldest = *resident
+            .iter()
+            .min_by_key(|&&j| (slots[j].last_scheduled, j))
+            .expect("non-empty resident set");
+        park(&mut slots[coldest], ledger, opts)?;
+        if !slots[coldest].terminal() {
+            slots[coldest].evictions += 1;
+            *total_evictions += 1;
+        }
+    }
+}
+
+/// Summarize a [`ServeReport`] per (tenant-count, concurrency) for the
+/// bench: `(slices, evictions, aggregate throughput, latency)`.
+pub fn summarize(report: &ServeReport) -> (u64, usize, f64, Option<Quantiles>) {
+    (
+        report.slices.len() as u64,
+        report.evictions,
+        report.aggregate_examples_per_sec,
+        report.slice_latency,
+    )
+}
+
+/// Per-tenant map of committed epsilon, for assertions and the CLI
+/// summary table.
+pub fn committed_epsilons(report: &ServeReport) -> BTreeMap<String, f64> {
+    report.outcomes.iter().map(|o| (o.name.clone(), o.epsilon_committed)).collect()
+}

@@ -1,0 +1,125 @@
+//! One admitted tenant of the multi-tenant training service: its
+//! training configuration, its declared `(epsilon, delta)` budget, and
+//! the analytic memory price the scheduler's eviction policy charges
+//! it while resident.
+
+use crate::analysis::BudgetSpec;
+use crate::clipping::ClippingMethod;
+use crate::coordinator::config::TrainConfig;
+use crate::coordinator::trainer::{config_fingerprint, resolve_sigma};
+use crate::memory::MemModel;
+use crate::models::{Arch, Family};
+use crate::runtime::ModelMeta;
+use anyhow::Result;
+
+/// An admitted job: everything the scheduler and the ledger need.
+///
+/// The budget is carried alongside (not only inside) the config: the
+/// config's `declared_epsilon` drives the *static* `budget.overspend`
+/// admission audit, while `budget` is what the runtime ledger enforces
+/// — the defense-in-depth backstop for spend the static price cannot
+/// see (e.g. a tenant resumed with epsilon already committed).
+#[derive(Debug, Clone)]
+pub struct Tenant {
+    /// Unique tenant name (also the checkpoint-namespace key).
+    pub name: String,
+    /// The run this tenant wants to execute.
+    pub config: TrainConfig,
+    /// The `(epsilon, delta)` budget the ledger holds it to.
+    pub budget: BudgetSpec,
+}
+
+impl Tenant {
+    /// Resolved noise multiplier of this tenant's run.
+    pub fn sigma(&self) -> Result<f64> {
+        resolve_sigma(&self.config)
+    }
+
+    /// The checkpoint fingerprint its sessions write and its resumes
+    /// demand — the content-level cross-tenant defense (the namespace
+    /// directory is the path-level one).
+    pub fn fingerprint(&self) -> Result<String> {
+        Ok(config_fingerprint(&self.config, self.sigma()?))
+    }
+}
+
+/// The [`ClippingMethod`] whose executable variant is `variant` — the
+/// bridge from a tenant's config to the memory model's per-method
+/// branch. Variants shared by several Table-A1 methods (`mix`) resolve
+/// to the first, which prices identically.
+pub fn method_for_variant(variant: &str) -> ClippingMethod {
+    ClippingMethod::ALL
+        .iter()
+        .copied()
+        .find(|m| m.variant() == variant)
+        .unwrap_or(ClippingMethod::MaskedJax)
+}
+
+/// Lift an executable model's layer IR into the analytic [`Arch`] the
+/// memory model prices: one `LinearDims` per dense layer (sequence
+/// length 1 — the CPU ladder has no token axis) and a forward tape of
+/// each layer's input + pre-activation output.
+pub fn arch_of(name: &str, meta: &ModelMeta) -> Arch {
+    let linears = meta.layers.iter().map(|l| l.linear_dims()).collect();
+    let act_floats_per_example = meta.layers.iter().map(|l| l.d_in + l.d_out).sum();
+    Arch {
+        name: name.to_string(),
+        family: Family::ViT,
+        linears,
+        other_params: 0,
+        act_floats_per_example,
+        fwd_flops_per_example: meta.flops_fwd_per_example,
+        tokens: 1,
+    }
+}
+
+/// Bytes a resident session of this tenant holds at its physical batch
+/// size, per [`MemModel::peak_bytes`] — the quantity the scheduler sums
+/// against `--memory-budget-bytes`.
+pub fn resident_bytes(tenant: &Tenant, meta: &ModelMeta) -> f64 {
+    let arch = arch_of(&tenant.config.model, meta);
+    let method = method_for_variant(&tenant.config.variant);
+    MemModel::default().peak_bytes(&arch, method, tenant.config.physical_batch.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_cli_variant_resolves_to_a_priced_method() {
+        for (_, variant) in crate::clipping::CLI_CLIP_METHODS {
+            let m = method_for_variant(variant);
+            assert_eq!(m.variant(), *variant);
+        }
+        // Unknown variants price conservatively as masked, not panic.
+        assert_eq!(method_for_variant("mystery"), ClippingMethod::MaskedJax);
+    }
+
+    #[test]
+    fn arch_bridge_preserves_layer_dims() {
+        use crate::models::LayerSpec;
+        let layers = vec![LayerSpec::dense_relu(12, 5), LayerSpec::dense(5, 3)];
+        let meta = ModelMeta {
+            family: "test".into(),
+            n_params: layers.iter().map(LayerSpec::params).sum(),
+            image: 2,
+            channels: 3,
+            num_classes: 3,
+            clip_norm: 1.0,
+            flops_fwd_per_example: 1.0,
+            init_params: "t.bin".into(),
+            executables: Vec::new(),
+            layers,
+        };
+        let arch = arch_of("t", &meta);
+        assert_eq!(arch.params(), meta.n_params);
+        assert_eq!(arch.linears.len(), 2);
+        assert_eq!(arch.act_floats_per_example, 12 + 5 + 5 + 3);
+        // Footprint is positive and grows with the batch for every method.
+        let mm = MemModel::default();
+        for m in ClippingMethod::ALL {
+            assert!(mm.peak_bytes(&arch, *m, 2) > mm.peak_bytes(&arch, *m, 1) - 1.0);
+        }
+    }
+}

@@ -26,7 +26,8 @@ use std::path::Path;
 
 use dp_shortcuts::analysis::{
     audit_hlo, audit_plan, audit_plan_graph, lint_source, parse_allowlist, rule, test_plan,
-    ClipKind, Graph, NodeKind, NoiseSite, NoiseStage, RunPlan, Severity, StreamUse, RULES,
+    BudgetSpec, ClipKind, Graph, NodeKind, NoiseSite, NoiseStage, RunPlan, Severity, StreamUse,
+    RULES,
 };
 use dp_shortcuts::clipping::{LayerChoice, CLI_CLIP_METHODS};
 use dp_shortcuts::coordinator::trainer::resolve_sigma;
@@ -118,6 +119,21 @@ fn deny_fixtures() -> Vec<(&'static str, RunPlan)> {
     let mut p = test_plan(3);
     p.choices = vec![LayerChoice::PerExample; 3];
     out.push((rule::MATERIALIZED_PER_EXAMPLE, p));
+
+    // A declared (epsilon, delta) budget smaller than what the
+    // configured steps spend under the RDP accountant — the serve
+    // admission contract (a tenant must be refused at submission,
+    // never hard-stopped mid-run for a statically-knowable overspend).
+    let mut p = test_plan(3);
+    p.budget = Some(BudgetSpec { epsilon: 1e-3, delta: 1e-5 });
+    out.push((rule::BUDGET_OVERSPEND, p));
+
+    // Same overspend priced under the PLD accountant: the rule must
+    // judge the plan's own accountant, not assume RDP.
+    let mut p = test_plan(3);
+    p.accountant = AccountantKind::Pld;
+    p.budget = Some(BudgetSpec { epsilon: 1e-3, delta: 1e-5 });
+    out.push((rule::BUDGET_OVERSPEND, p));
 
     out
 }

@@ -1,0 +1,376 @@
+//! Acceptance suite for the multi-tenant training service: per-tenant
+//! trajectories are bitwise-identical to standalone runs at every
+//! residency cap and under eviction, the central ledger hard-stops at
+//! the budgeted step and never exceeds a declared budget, crash-resume
+//! never double-commits epsilon, and checkpoints can never cross
+//! tenant namespaces.
+
+use dp_shortcuts::analysis::BudgetSpec;
+use dp_shortcuts::coordinator::trainer::{config_fingerprint, resolve_sigma};
+use dp_shortcuts::fault::{
+    latest_valid, load_checkpoint, tenant_dir, write_checkpoint, CheckpointError,
+};
+use dp_shortcuts::privacy::AccountantKind;
+use dp_shortcuts::serve::scheduler::TenantOutcome;
+use dp_shortcuts::serve::{run_serve, BudgetLedger, ServeOptions, Tenant, TenantStatus};
+use dp_shortcuts::{Runtime, TrainConfig, TrainReport, Trainer};
+use proptest::prelude::*;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Unique scratch directory per call — tests run concurrently.
+fn scratch(tag: &str) -> PathBuf {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    std::env::temp_dir().join(format!(
+        "dpshort_serve_test_{tag}_{}_{}",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// A mixed 3-tenant fleet: different models, clip variants, seeds,
+/// accountants, and worker counts, each with a roomy budget.
+fn three_tenants(rt: &Runtime, steps: u64) -> Vec<Tenant> {
+    let default_model = rt.default_model().expect("manifest has models").to_string();
+    let base = TrainConfig {
+        model: default_model.clone(),
+        dataset_size: 48,
+        sampling_rate: 0.25,
+        physical_batch: 8,
+        steps,
+        noise_multiplier: Some(1.0),
+        eval_examples: 0,
+        ..TrainConfig::default()
+    };
+    let configs = vec![
+        TrainConfig { variant: "masked".into(), seed: 1, ..base.clone() },
+        TrainConfig {
+            model: "mlp-small".into(),
+            variant: "ghost".into(),
+            seed: 2,
+            accountant: AccountantKind::Pld,
+            ..base.clone()
+        },
+        TrainConfig { variant: "perex".into(), seed: 3, workers: 2, ..base },
+    ];
+    configs
+        .into_iter()
+        .enumerate()
+        .map(|(i, config)| Tenant {
+            name: format!("tenant-{i}"),
+            budget: BudgetSpec { epsilon: 100.0, delta: config.delta },
+            config,
+        })
+        .collect()
+}
+
+fn standalone_reports(rt: &Runtime, tenants: &[Tenant]) -> Vec<TrainReport> {
+    tenants
+        .iter()
+        .map(|t| Trainer::new(rt, t.config.clone()).unwrap().run().unwrap())
+        .collect()
+}
+
+/// Bitwise trajectory equality: final params, per-step losses and
+/// sampled batches, and the session-priced epsilon.
+fn assert_same_trajectory(outcome: &TenantOutcome, standalone: &TrainReport, ctx: &str) {
+    let served = outcome.report.as_ref().unwrap_or_else(|| panic!("{ctx}: no report"));
+    assert_eq!(served.final_params, standalone.final_params, "{ctx}: params diverged");
+    assert_eq!(served.steps.len(), standalone.steps.len(), "{ctx}: step counts");
+    for (a, b) in served.steps.iter().zip(&standalone.steps) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{ctx}: loss bits at step {}", a.step);
+        assert_eq!(a.logical_batch, b.logical_batch, "{ctx}: sampled batch at step {}", a.step);
+    }
+    assert_eq!(
+        served.epsilon_spent.to_bits(),
+        standalone.epsilon_spent.to_bits(),
+        "{ctx}: epsilon diverged"
+    );
+}
+
+#[test]
+fn served_tenants_match_standalone_runs_at_every_concurrency() {
+    let rt = Runtime::reference();
+    let tenants = three_tenants(&rt, 5);
+    let standalone = standalone_reports(&rt, &tenants);
+    for max_concurrent in [1usize, 2, 3] {
+        let root = scratch("parity");
+        let opts = ServeOptions {
+            max_concurrent,
+            memory_budget_bytes: 0.0,
+            steps_per_slice: 2,
+            ckpt_root: root.clone(),
+            max_slices: None,
+        };
+        let mut ledger = BudgetLedger::new();
+        let report = run_serve(&rt, &tenants, &mut ledger, &opts).unwrap();
+        assert!(!report.interrupted);
+        assert_eq!(report.outcomes.len(), 3);
+        for (outcome, solo) in report.outcomes.iter().zip(&standalone) {
+            let ctx = format!("{} @ max_concurrent={max_concurrent}", outcome.name);
+            assert_eq!(outcome.status, TenantStatus::Completed, "{ctx}");
+            assert_eq!(outcome.steps_done, 5, "{ctx}");
+            assert_same_trajectory(outcome, solo, &ctx);
+            // The ledger's independent pricing agrees with the
+            // session's accountant to float tolerance and never
+            // exceeds the declared budget.
+            assert!(
+                (outcome.epsilon_committed - solo.epsilon_spent).abs()
+                    <= 1e-6 * solo.epsilon_spent.max(1.0),
+                "{ctx}: ledger {} vs session {}",
+                outcome.epsilon_committed,
+                solo.epsilon_spent
+            );
+            assert!(outcome.epsilon_committed <= outcome.budget_epsilon, "{ctx}");
+        }
+        // max_concurrent=1 cannot keep 3 tenants resident: evictions
+        // must have happened (and changed nothing, per the asserts
+        // above); full residency needs none.
+        if max_concurrent == 1 {
+            assert!(report.evictions > 0);
+        }
+        if max_concurrent == 3 {
+            assert_eq!(report.evictions, 0);
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}
+
+#[test]
+fn eviction_under_memory_pressure_is_bitwise_invisible() {
+    let rt = Runtime::reference();
+    let tenants = three_tenants(&rt, 4);
+    let standalone = standalone_reports(&rt, &tenants);
+    // Price the fleet and set a budget that fits only the largest
+    // single resident — every tenant switch must evict.
+    let max_bytes = tenants
+        .iter()
+        .map(|t| {
+            let meta = rt.model(&t.config.model).unwrap();
+            dp_shortcuts::serve::resident_bytes(t, meta.meta())
+        })
+        .fold(0.0f64, f64::max);
+    let root = scratch("memory");
+    let opts = ServeOptions {
+        max_concurrent: 3,
+        memory_budget_bytes: max_bytes * 1.5,
+        steps_per_slice: 2,
+        ckpt_root: root.clone(),
+        max_slices: None,
+    };
+    let mut ledger = BudgetLedger::new();
+    let report = run_serve(&rt, &tenants, &mut ledger, &opts).unwrap();
+    assert!(report.evictions > 0, "memory budget {max_bytes:.0}B forced no evictions");
+    for (outcome, solo) in report.outcomes.iter().zip(&standalone) {
+        assert_same_trajectory(outcome, solo, &format!("{} under eviction", outcome.name));
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn budget_exhaustion_halts_exactly_at_the_affordable_step() {
+    let rt = Runtime::reference();
+    let mut tenants = three_tenants(&rt, 6);
+    tenants.truncate(1);
+    let t = &mut tenants[0];
+    // No static declaration (admission would refuse the overspend);
+    // the ledger's runtime backstop is what this test exercises: a
+    // budget worth exactly 3 of the configured 6 steps.
+    t.config.declared_epsilon = None;
+    let sigma = resolve_sigma(&t.config).unwrap();
+    let k_steps = 3u64;
+    let affordable_eps = t.config.accountant.epsilon_after(
+        t.config.sampling_rate,
+        sigma,
+        k_steps,
+        t.config.delta,
+    );
+    t.budget = BudgetSpec { epsilon: affordable_eps, delta: t.config.delta };
+    let root = scratch("budget");
+    let opts = ServeOptions {
+        max_concurrent: 1,
+        memory_budget_bytes: 0.0,
+        steps_per_slice: 2,
+        ckpt_root: root.clone(),
+        max_slices: None,
+    };
+    let mut ledger = BudgetLedger::new();
+    let report = run_serve(&rt, &tenants, &mut ledger, &opts).unwrap();
+    let outcome = &report.outcomes[0];
+    assert_eq!(outcome.status, TenantStatus::BudgetExhausted);
+    // Hard-stopped the step before the budget would be exceeded: step
+    // 4 would overspend, so the tenant halts having committed exactly 3.
+    assert_eq!(outcome.steps_done, k_steps);
+    assert!(outcome.epsilon_committed <= affordable_eps * (1.0 + 1e-9));
+    // The halt is durable: the final checkpoint carries step 3 and the
+    // persisted ledger agrees.
+    let fp = config_fingerprint(&tenants[0].config, sigma);
+    let scan = latest_valid(&tenant_dir(&root, &tenants[0].name), &fp).unwrap();
+    assert_eq!(scan.found.unwrap().1.step, k_steps);
+    let persisted = BudgetLedger::load(&root).unwrap().unwrap();
+    assert_eq!(persisted.committed_steps(&tenants[0].name), k_steps);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn crash_resume_never_double_commits_epsilon() {
+    let rt = Runtime::reference();
+    let tenants = three_tenants(&rt, 4);
+
+    // Uninterrupted baseline.
+    let baseline_root = scratch("crash_base");
+    let opts = |root: PathBuf, max_slices: Option<u64>| ServeOptions {
+        max_concurrent: 2,
+        memory_budget_bytes: 0.0,
+        steps_per_slice: 2,
+        ckpt_root: root,
+        max_slices,
+    };
+    let mut baseline_ledger = BudgetLedger::new();
+    let baseline =
+        run_serve(&rt, &tenants, &mut baseline_ledger, &opts(baseline_root.clone(), None))
+            .unwrap();
+
+    // Crash after 3 slices (mid-fleet), then resume from the persisted
+    // ledger + checkpoints.
+    let root = scratch("crash");
+    let mut ledger = BudgetLedger::new();
+    let first = run_serve(&rt, &tenants, &mut ledger, &opts(root.clone(), Some(3))).unwrap();
+    assert!(first.interrupted);
+    let committed_at_crash: Vec<(String, u64, f64)> = tenants
+        .iter()
+        .map(|t| (t.name.clone(), ledger.committed_steps(&t.name), ledger.epsilon(&t.name)))
+        .collect();
+
+    // The resume path the CLI takes: reload the snapshot from disk.
+    let mut resumed_ledger = BudgetLedger::load(&root).unwrap().expect("persisted ledger");
+    for (name, steps, eps) in &committed_at_crash {
+        assert_eq!(resumed_ledger.committed_steps(name), *steps, "{name}: snapshot drifted");
+        assert_eq!(resumed_ledger.epsilon(name).to_bits(), eps.to_bits(), "{name}");
+    }
+    let second =
+        run_serve(&rt, &tenants, &mut resumed_ledger, &opts(root.clone(), None)).unwrap();
+    assert!(!second.interrupted);
+
+    // Epsilon is committed by step position, never re-added: the
+    // resumed total equals the uninterrupted total exactly, and the
+    // trajectories are bitwise-identical.
+    for (outcome, base) in second.outcomes.iter().zip(&baseline.outcomes) {
+        assert_eq!(outcome.status, TenantStatus::Completed);
+        assert_eq!(outcome.steps_done, base.steps_done);
+        assert_eq!(
+            outcome.epsilon_committed.to_bits(),
+            base.epsilon_committed.to_bits(),
+            "{}: crash-resume double-committed epsilon",
+            outcome.name
+        );
+        assert_eq!(
+            outcome.report.as_ref().unwrap().final_params,
+            base.report.as_ref().unwrap().final_params,
+            "{}: crash-resume diverged",
+            outcome.name
+        );
+    }
+
+    // A second reconcile of the same checkpoints (re-running resume
+    // with the final ledger) is a no-op on epsilon: commits are
+    // idempotent by step.
+    for t in &tenants {
+        let before = resumed_ledger.epsilon(&t.name);
+        let steps = resumed_ledger.committed_steps(&t.name);
+        let after = resumed_ledger.commit_to(&t.name, steps).unwrap();
+        assert_eq!(before.to_bits(), after.to_bits(), "{}", t.name);
+    }
+    let _ = std::fs::remove_dir_all(&baseline_root);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn checkpoints_cannot_cross_tenant_namespaces() {
+    // Regression for the per-tenant checkpoint store: tenant A's
+    // checkpoint must be invisible from B's namespace (path defense)
+    // and must refuse to load as B even if handed over directly
+    // (fingerprint defense).
+    let rt = Runtime::reference();
+    let tenants = three_tenants(&rt, 2);
+    let (a, b) = (&tenants[0], &tenants[1]);
+    let root = scratch("namespace");
+    let dir_a = tenant_dir(&root, &a.name);
+    let dir_b = tenant_dir(&root, &b.name);
+    assert_ne!(dir_a, dir_b);
+
+    let mut session = dp_shortcuts::TrainSession::new(&rt, a.config.clone()).unwrap();
+    session.step().unwrap();
+    let ckpt = session.checkpoint().unwrap();
+    let path_a = write_checkpoint(&dir_a, &ckpt, None).unwrap();
+
+    // Path defense: scanning B's namespace finds nothing.
+    let fp_b = config_fingerprint(&b.config, resolve_sigma(&b.config).unwrap());
+    let scan = latest_valid(&dir_b, &fp_b).unwrap();
+    assert!(scan.found.is_none() && scan.skipped.is_empty());
+
+    // Fingerprint defense: A's file handed to B's loader is a typed
+    // rejection, not a silent cross-tenant resume.
+    let err = load_checkpoint(&path_a, Some(&fp_b)).unwrap_err();
+    assert!(matches!(err, CheckpointError::Fingerprint { .. }), "got {err:?}");
+
+    // Hostile tenant names cannot escape the checkpoint root.
+    let evil = tenant_dir(&root, "../../etc/passwd");
+    assert!(evil.starts_with(&root), "{}", evil.display());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(48))]
+
+    /// The ledger invariant the service stands on: whatever the
+    /// budget, rate, noise, accountant, or commit schedule, committed
+    /// epsilon never exceeds the declared budget (beyond float
+    /// tolerance), and the hard-stop leaves no affordable step behind.
+    #[test]
+    fn ledger_never_exceeds_a_declared_budget(
+        budget_epsilon in 1e-3f64..20.0,
+        q in 0.05f64..0.9,
+        sigma in 0.7f64..4.0,
+        pld in proptest::bool::ANY,
+        slice in 1u64..5,
+        seed in proptest::num::u64::ANY,
+    ) {
+        let accountant = if pld { AccountantKind::Pld } else { AccountantKind::Rdp };
+        let config = TrainConfig {
+            sampling_rate: q,
+            noise_multiplier: Some(sigma),
+            steps: 64,
+            accountant,
+            seed,
+            ..TrainConfig::default()
+        };
+        let tenant = Tenant {
+            name: "prop".into(),
+            budget: BudgetSpec { epsilon: budget_epsilon, delta: config.delta },
+            config,
+        };
+        let mut ledger = BudgetLedger::new();
+        ledger.register(&tenant, sigma).unwrap();
+        // Drive the scheduler's commit protocol until the hard stop.
+        let mut halted = false;
+        for _ in 0..200 {
+            let done = ledger.committed_steps("prop");
+            let want = slice.min(tenant.config.steps - done);
+            if want == 0 { break; }
+            let afford = ledger.affordable_steps("prop", want);
+            if afford == 0 { halted = true; break; }
+            let eps = ledger.commit_to("prop", done + afford).unwrap();
+            prop_assert!(eps <= budget_epsilon * (1.0 + 1e-9),
+                "committed {eps} over budget {budget_epsilon}");
+        }
+        let spent = ledger.epsilon("prop");
+        prop_assert!(spent <= budget_epsilon * (1.0 + 1e-9));
+        if halted {
+            // The stop is exact: one more step would overspend.
+            let next = ledger.committed_steps("prop") + 1;
+            let entry = ledger.entry("prop").unwrap();
+            prop_assert!(entry.price(next) > budget_epsilon * (1.0 - 1e-9));
+        }
+    }
+}
