@@ -33,8 +33,8 @@ pub use diag::{
     catalog, rule, AuditReport, Diagnostic, RuleInfo, Severity, AUDIT_SCHEMA_VERSION, RULES,
 };
 pub use plan::{
-    test_plan, variant_claims_no_materialization, BudgetSpec, ClipKind, ClipSpec, NoiseSite,
-    NoiseStage, ReductionSpec, RetrySpec, RunPlan, SamplerInfo,
+    gram_groups, test_plan, variant_claims_no_materialization, BudgetSpec, ClipKind, ClipSpec,
+    NoiseSite, NoiseStage, ReductionSpec, RetrySpec, RunPlan, SamplerInfo,
 };
 pub use rules::{audit_hlo, audit_plan, audit_plan_graph};
 pub use source_lint::{

@@ -14,6 +14,7 @@ use crate::analysis::streams::{self, StreamUse};
 use crate::clipping::LayerChoice;
 use crate::coordinator::config::TrainConfig;
 use crate::coordinator::sampler::SamplerChoice;
+use crate::models::LayerKind;
 use crate::privacy::AccountantKind;
 use crate::runtime::{executed_choices, LayerPlan, ModelMeta};
 use anyhow::Result;
@@ -122,6 +123,11 @@ pub struct RunPlan {
     pub dataset_size: u64,
     /// `(d_in, d_out)` per layer, chain order.
     pub layer_dims: Vec<(usize, usize)>,
+    /// Layer kind per layer, chain order — the taint lowering emits
+    /// one Gram-norm node per *parameter group* of each kind (see
+    /// [`gram_groups`]), so the clip-coverage rules can judge e.g. an
+    /// attention layer whose norm silently omits one projection.
+    pub layer_kinds: Vec<LayerKind>,
     /// Executed clipping branch per layer.
     pub choices: Vec<LayerChoice>,
     /// Clip specification.
@@ -160,6 +166,20 @@ pub struct RunPlan {
 /// vmapped fused graphs share the property).
 pub fn variant_claims_no_materialization(variant: &str) -> bool {
     matches!(variant, "nonprivate" | "naive" | "masked" | "ghost" | "bk")
+}
+
+/// How many parameter groups a layer kind folds into its Gram-norm
+/// contribution. Attention carries four independent Gram products —
+/// the q/k/v projections against the layer input and the output
+/// projection against the context rows (DESIGN.md §13) — and the
+/// global norm is only the global norm if *all four* flow into the
+/// clip factor. Every other kind contributes a single product
+/// (dense/conv weight+bias; layernorm gamma+beta share one).
+pub fn gram_groups(kind: LayerKind) -> usize {
+    match kind {
+        LayerKind::Attention { .. } => 4,
+        LayerKind::Dense | LayerKind::Conv2d { .. } | LayerKind::LayerNorm => 1,
+    }
 }
 
 impl RunPlan {
@@ -208,6 +228,7 @@ impl RunPlan {
             input_dim: lp.input_dim,
             dataset_size: u64::from(config.dataset_size),
             layer_dims: lp.layers.iter().map(|l| (l.spec.d_in, l.spec.d_out)).collect(),
+            layer_kinds: lp.layers.iter().map(|l| l.spec.kind).collect(),
             choices,
             clip,
             noise,
@@ -249,6 +270,7 @@ pub fn test_plan(k: usize) -> RunPlan {
         input_dim: layer_dims.first().map_or(0, |(i, _)| *i),
         dataset_size: 64,
         layer_dims,
+        layer_kinds: vec![LayerKind::Dense; k],
         choices: vec![LayerChoice::Ghost; k],
         clip: ClipSpec { kind: ClipKind::Global, norm: 1.0 },
         noise: vec![NoiseSite { stage: NoiseStage::PostAggregation, scale: sigma }],
@@ -306,6 +328,7 @@ mod tests {
         assert_eq!(plan.noise[0].stage, NoiseStage::PostAggregation);
         assert!((plan.noise[0].scale - 2.0 * config.clip_norm).abs() < 1e-12);
         assert_eq!(plan.layer_dims, vec![(12, 5), (5, 3)]);
+        assert_eq!(plan.layer_kinds, vec![LayerKind::Dense; 2]);
         assert_eq!(plan.choices, vec![LayerChoice::Ghost; 2]);
         assert_eq!(plan.sampler.poisson_rate, Some(config.sampling_rate));
         assert!(plan.reduction.fixed_tree);
@@ -354,6 +377,44 @@ mod tests {
             ..Default::default()
         };
         assert!(RunPlan::lower(&meta(), 0, &config, 1.0).is_err());
+    }
+
+    #[test]
+    fn non_dense_layers_lower_their_kinds_and_gram_groups() {
+        let layers = vec![
+            LayerSpec::attention(4, 12, 6),
+            LayerSpec::layernorm(48),
+            LayerSpec::dense(48, 10),
+        ];
+        let meta = ModelMeta {
+            family: "attn".into(),
+            n_params: layers.iter().map(LayerSpec::params).sum(),
+            image: 4,
+            channels: 3,
+            num_classes: 10,
+            clip_norm: 1.0,
+            flops_fwd_per_example: 1.0,
+            init_params: "t.bin".into(),
+            executables: Vec::new(),
+            layers,
+        };
+        let config = TrainConfig {
+            model: "attn-tiny".into(),
+            variant: "ghost".into(),
+            ..Default::default()
+        };
+        let plan = RunPlan::lower(&meta, 0, &config, 1.0).unwrap();
+        assert_eq!(
+            plan.layer_kinds,
+            vec![
+                LayerKind::Attention { t: 4, d_model: 12, d_head: 6 },
+                LayerKind::LayerNorm,
+                LayerKind::Dense,
+            ]
+        );
+        let groups: Vec<usize> = plan.layer_kinds.iter().map(|&k| gram_groups(k)).collect();
+        assert_eq!(groups, vec![4, 1, 1]);
+        assert!(crate::analysis::rules::audit_plan(&plan).is_clean());
     }
 
     #[test]

@@ -5,6 +5,7 @@ use crate::analysis::diag::{rule, AuditReport, Diagnostic, AUDIT_SCHEMA_VERSION}
 use crate::analysis::plan::{variant_claims_no_materialization, ClipKind, NoiseStage, RunPlan};
 use crate::analysis::streams;
 use crate::analysis::taint::{propagate, Graph, NodeKind, Taint};
+use crate::models::LayerKind;
 use crate::runtime::hlo_analysis::{dtype_bytes, HloStats};
 use crate::util::rng::LEGACY_STREAM_CAPACITY_BYTES;
 use std::collections::BTreeSet;
@@ -89,6 +90,36 @@ fn check_clipping(plan: &RunPlan, g: &Graph, d: &mut Vec<Diagnostic>) {
                     cover.iter().collect::<Vec<_>>()
                 ),
             ));
+        }
+    }
+    // (a, continued) Group-level norm completeness, judged structurally.
+    // The taint cover is layer-granular: an attention layer whose norm
+    // omits ONE of its four Gram products (q/k/v/o) still inserts its
+    // layer index through the remaining three, so the cover looks
+    // complete. Under a global clip, every Gram node must therefore
+    // *reach* the clip factor along dataflow edges; an orphaned group
+    // means the clip norm under-counts that layer and the sensitivity
+    // bound is void — the same defect class as per-layer clipping.
+    if plan.private && plan.clip.kind == ClipKind::Global {
+        let factors: Vec<usize> = (0..g.nodes.len())
+            .filter(|&i| matches!(g.nodes[i], NodeKind::ClipFactor))
+            .collect();
+        for i in 0..g.nodes.len() {
+            let NodeKind::GramNorm { layer, group } = g.nodes[i] else { continue };
+            if !factors.iter().any(|&f| g.reaches(i, f)) {
+                let kind = plan.layer_kinds.get(layer).copied().unwrap_or(LayerKind::Dense);
+                d.push(Diagnostic::new(
+                    rule::CLIP_PER_LAYER,
+                    format!("layer[{layer}].gram[{group}]"),
+                    format!(
+                        "parameter group {group} of {} layer {layer} computes a per-example \
+                         Gram norm that never flows into the clip factor; the \"global\" norm \
+                         under-counts this layer's gradient and the clip no longer bounds the \
+                         mechanism's sensitivity",
+                        kind.as_str()
+                    ),
+                ));
+            }
         }
     }
 }
@@ -347,14 +378,16 @@ fn check_materialization(plan: &RunPlan, g: &Graph, d: &mut Vec<Diagnostic>) {
     }
     for k in &g.nodes {
         if let NodeKind::LayerGrad { layer, materialized: true } = k {
+            let kind = plan.layer_kinds.get(*layer).copied().unwrap_or(LayerKind::Dense);
             d.push(Diagnostic::new(
                 rule::MATERIALIZED_PER_EXAMPLE,
                 format!("layer[{layer}].grad"),
                 format!(
                     "variant {:?} promises per-example weight gradients are never materialized, \
-                     but layer {layer} materializes its [B, d_out*d_in] gradient (the memory \
-                     footprint ghost/BK exist to avoid)",
-                    plan.variant
+                     but {} layer {layer} materializes its per-example weight-gradient block \
+                     (the [B, P] memory footprint ghost/BK exist to avoid)",
+                    plan.variant,
+                    kind.as_str()
                 ),
             ));
         }

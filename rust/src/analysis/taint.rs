@@ -17,9 +17,18 @@
 //! layer. `cover == ∅` means no clip at all (the `clip.missing` /
 //! `clip.nonprivate` rules); a strict subset means per-layer clipping
 //! (`clip.per-layer`), which changes the mechanism's sensitivity.
+//!
+//! The cover is *layer*-granular, but the lowered graph is finer: each
+//! layer contributes one [`NodeKind::GramNorm`] node per parameter
+//! group (attention contributes four). Dropping a single group's edge
+//! into the norm total leaves the layer-level cover intact — the
+//! remaining groups still insert the layer — so group-level norm
+//! completeness is judged structurally by the clipping rule
+//! (`reaches` from every Gram node to the clip factor), not by taint.
 
-use crate::analysis::plan::{ClipKind, NoiseStage, RunPlan};
+use crate::analysis::plan::{gram_groups, ClipKind, NoiseStage, RunPlan};
 use crate::clipping::LayerChoice;
+use crate::models::LayerKind;
 use std::collections::BTreeSet;
 
 /// Node kinds of the lowered step dataflow graph.
@@ -37,10 +46,17 @@ pub enum NodeKind {
         /// Layer index.
         layer: usize,
     },
-    /// Layer `l`'s per-example squared gradient norm (Gram form).
+    /// One parameter group's per-example squared gradient norm (Gram
+    /// form). Dense/conv/layernorm layers fold a single group; an
+    /// attention layer folds four (q/k/v projections against the layer
+    /// input, output projection against the context rows), and the
+    /// global norm is only complete if every group's node flows into
+    /// the clip factor.
     GramNorm {
         /// Layer index.
         layer: usize,
+        /// Parameter-group index within the layer (`0..gram_groups`).
+        group: usize,
     },
     /// The total per-example norm (sum of Gram norms feeding the clip).
     NormTotal,
@@ -153,19 +169,25 @@ impl Graph {
             prev_back = Some(b);
         }
 
-        // Per-layer Gram norms (tape ⊗ dz), then the clip factor.
-        let mut grams = Vec::with_capacity(k);
+        // Per-layer Gram norms (tape ⊗ dz), one node per parameter
+        // group of the layer's kind, then the clip factor.
+        let mut grams: Vec<Vec<usize>> = Vec::with_capacity(k);
         for l in 0..k {
-            let gn = g.push(NodeKind::GramNorm { layer: l });
-            g.edge(tapes[l], gn);
-            g.edge(backs[l], gn);
-            grams.push(gn);
+            let kind = plan.layer_kinds.get(l).copied().unwrap_or(LayerKind::Dense);
+            let mut groups = Vec::with_capacity(gram_groups(kind));
+            for group in 0..gram_groups(kind) {
+                let gn = g.push(NodeKind::GramNorm { layer: l, group });
+                g.edge(tapes[l], gn);
+                g.edge(backs[l], gn);
+                groups.push(gn);
+            }
+            grams.push(groups);
         }
         // factor_for[l]: the clip factor scaling layer l's gradient.
         let factor_for: Vec<Option<usize>> = match plan.clip.kind {
             ClipKind::Global => {
                 let total = g.push(NodeKind::NormTotal);
-                for &gn in &grams {
+                for &gn in grams.iter().flatten() {
                     g.edge(gn, total);
                 }
                 let f = g.push(NodeKind::ClipFactor);
@@ -177,7 +199,9 @@ impl Graph {
                     // Each layer clipped by ITS OWN norm only — the
                     // wrong-sensitivity shortcut the audit flags.
                     let f = g.push(NodeKind::ClipFactor);
-                    g.edge(grams[l], f);
+                    for &gn in &grams[l] {
+                        g.edge(gn, f);
+                    }
                     Some(f)
                 })
                 .collect(),
@@ -257,7 +281,7 @@ fn join(a: &Taint, b: &Taint) -> Taint {
 fn transfer(kind: &NodeKind, input: &Taint) -> Taint {
     match kind {
         NodeKind::ExampleInput => Taint::PerExample { cover: BTreeSet::new() },
-        NodeKind::GramNorm { layer } => match input {
+        NodeKind::GramNorm { layer, .. } => match input {
             Taint::PerExample { cover } => {
                 let mut c = cover.clone();
                 c.insert(*layer);
@@ -383,6 +407,38 @@ mod tests {
                 panic!("crossing at a non-accumulate node")
             };
             assert_eq!(taint, cover(&[layer]), "layer {layer}");
+        }
+    }
+
+    #[test]
+    fn attention_layers_lower_one_gram_node_per_parameter_group() {
+        use crate::analysis::plan::test_plan;
+        let mut plan = test_plan(2);
+        plan.layer_kinds[0] = LayerKind::Attention { t: 2, d_model: 4, d_head: 2 };
+        let g = Graph::lower(&plan);
+        let att: Vec<usize> = (0..g.nodes.len())
+            .filter(|&i| matches!(g.nodes[i], NodeKind::GramNorm { layer: 0, .. }))
+            .collect();
+        let att_groups: Vec<usize> = att
+            .iter()
+            .map(|&i| match g.nodes[i] {
+                NodeKind::GramNorm { group, .. } => group,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(att_groups, vec![0, 1, 2, 3], "q/k/v/o Gram products");
+        let dense: Vec<usize> = (0..g.nodes.len())
+            .filter(|&i| matches!(g.nodes[i], NodeKind::GramNorm { layer: 1, .. }))
+            .collect();
+        assert_eq!(dense.len(), 1);
+        // Every group feeds the global norm total...
+        let total = g.nodes.iter().position(|k| *k == NodeKind::NormTotal).unwrap();
+        for &gn in att.iter().chain(dense.iter()) {
+            assert!(g.reaches(gn, total));
+        }
+        // ...and the crossing cover stays layer-granular and complete.
+        for (_, taint) in propagate(&g).crossings {
+            assert_eq!(taint, cover(&[0, 1]));
         }
     }
 

@@ -205,6 +205,16 @@ impl TimeModel {
     /// throughput is the reciprocal of this.
     pub fn relative_cost(&self, arch: &Arch, method: ClippingMethod) -> f64 {
         let base = 1.0 + self.bwd_over_fwd; // fwd + bwd
+        self.step_cost(arch, method) / base
+    }
+
+    /// Un-normalized per-example step cost, in units of one non-private
+    /// forward. Kept separate from [`Self::relative_cost`] so the
+    /// mix-ghost arm can combine *raw* ghost / per-example costs —
+    /// recursing through the normalized value would divide by `base`
+    /// twice (and on ViTs mix must degenerate to *exactly* ghost,
+    /// bitwise — cross-checked in `rust/tests/layered_models.rs`).
+    fn step_cost(&self, arch: &Arch, method: ClippingMethod) -> f64 {
         let t = arch.tokens.max(1) as f64;
         // ghost-norm extra flops relative to the whole forward
         let ghost_extra: f64 = arch
@@ -213,8 +223,8 @@ impl TimeModel {
             .map(|l| 2.0 * t * t * (l.d_in + l.d_out) as f64)
             .sum::<f64>()
             / arch.fwd_flops_per_example.max(1.0);
-        let cost = match method {
-            ClippingMethod::NonPrivate => base,
+        match method {
+            ClippingMethod::NonPrivate => 1.0 + self.bwd_over_fwd,
             ClippingMethod::PerExample => {
                 self.dp_fwd_mult + self.bwd_over_fwd * self.perexample_bwd_mult
                     + self.clip_acc_frac
@@ -230,12 +240,12 @@ impl TimeModel {
             ClippingMethod::MixGhost => {
                 // per-layer best of ghost vs per-example; for ViT it
                 // degenerates to exactly ghost (paper Section 5.1).
-                let g = self.relative_cost(arch, ClippingMethod::Ghost);
+                let g = self.step_cost(arch, ClippingMethod::Ghost);
                 if arch.family == Family::ViT {
                     g
                 } else {
                     let frac = ghost_fraction(arch);
-                    let pe = self.relative_cost(arch, ClippingMethod::PerExample);
+                    let pe = self.step_cost(arch, ClippingMethod::PerExample);
                     frac * g + (1.0 - frac) * pe
                 }
             }
@@ -253,8 +263,7 @@ impl TimeModel {
                 // fwd + bwd + fused clip/accumulate.
                 1.0 + self.bwd_over_fwd + self.clip_acc_frac + self.dp_step_frac
             }
-        };
-        cost / base
+        }
     }
 }
 
@@ -285,6 +294,33 @@ mod tests {
             mix_ghost_choice(a.linears.last().unwrap()),
             LayerChoice::Ghost
         );
+    }
+
+    #[test]
+    fn executed_ladder_layers_get_the_expected_mix_choice() {
+        // The decision rule over the *executed* layer kinds' ghost
+        // views (`LayerSpec::linear_dims`), on the shipped non-dense
+        // rungs: cnn-small's convs have big spatial T and small
+        // channels, so both go per-example while the dense head goes
+        // ghost (the first executed split decision); attn-tiny's
+        // attention and layernorm are both firmly ghost.
+        use crate::models::cpu_ladder;
+        let ladder = cpu_ladder();
+        let cnn = ladder.iter().find(|m| m.name == "cnn-small").unwrap();
+        let choices: Vec<LayerChoice> =
+            cnn.layers.iter().map(|l| mix_ghost_choice(&l.linear_dims())).collect();
+        assert_eq!(
+            choices,
+            vec![LayerChoice::PerExample, LayerChoice::PerExample, LayerChoice::Ghost]
+        );
+        let attn = ladder.iter().find(|m| m.name == "attn-tiny").unwrap();
+        for l in &attn.layers {
+            assert_eq!(mix_ghost_choice(&l.linear_dims()), LayerChoice::Ghost, "{:?}", l.kind);
+        }
+        // The conv ghost view is the im2col unfolding: T = spatial
+        // positions, d_in = c_in*kh*kw patch width, d_out = c_out.
+        let dims = cnn.layers[0].linear_dims();
+        assert_eq!((dims.t, dims.d_in, dims.d_out), (64, 27, 4));
     }
 
     #[test]

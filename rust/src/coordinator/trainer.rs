@@ -375,14 +375,18 @@ fn dtype_of(config: &TrainConfig) -> &'static str {
 /// `v5` is the crash-consistency generation — checkpoints carry a
 /// content checksum ([`TrainCheckpoint::seal`]) and are written
 /// atomically (`crate::fault::checkpoint`), so a `v4` file, which no
-/// checksum ever protected, does not resume under the new contract.
+/// checksum ever protected, does not resume under the new contract;
+/// `v6` extends the layer IR to non-dense kinds (conv2d / layernorm /
+/// attention, DESIGN.md §13) — the flat parameter layout of a model
+/// name can now contain kind-shaped blocks a `v5` build never laid
+/// out, so cross-generation resumes must fail the fingerprint check.
 ///
 /// Public so the `--resume-latest` scanner and the audit tooling can
 /// compute the fingerprint a config will demand without opening a
 /// session.
 pub fn config_fingerprint(config: &TrainConfig, sigma: f64) -> String {
     format!(
-        "v5|{}|{}|{:?}|{}|N={}|q={:?}|B={}|lr={:?}|C={:?}|sigma={:?}|seed={}|sampler={}",
+        "v6|{}|{}|{:?}|{}|N={}|q={:?}|B={}|lr={:?}|C={:?}|sigma={:?}|seed={}|sampler={}",
         config.model,
         config.variant,
         config.mode,

@@ -37,43 +37,187 @@ impl Activation {
     }
 }
 
-/// One dense layer of the executable layer IR: `z = W a + b` with
-/// `W: [d_out, d_in]` row-major, followed by [`Activation`]. A model is
-/// a chain of these; the last layer must use `Activation::None` and its
-/// `d_out` is the class count — the softmax-xent head consumes its
-/// logits directly (see `runtime::layers::LayerPlan`).
+/// The structural kind of one layer in the executable IR. Every kind
+/// maps a flat input of width `d_in` to a flat output of width `d_out`;
+/// the kind fixes how the widths factor (channels x spatial for convs,
+/// tokens x features for attention) and which parameters the layer
+/// owns. Flat parameter layouts per kind live in
+/// `runtime::layers::LayerPlan`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// `z = W a + b`, `W: [d_out, d_in]` row-major.
+    Dense,
+    /// Channels-first 2-D convolution: input `[c_in, h_in, w_in]`,
+    /// kernel `[c_out, c_in, kh, kw]`, per-channel bias, zero padding
+    /// `pad` on every side, floor output size (`conv_out_hw`).
+    Conv2d {
+        c_in: usize,
+        h_in: usize,
+        w_in: usize,
+        c_out: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+    },
+    /// LayerNorm over the whole feature vector (`d_in == d_out`):
+    /// `z = gamma * xhat + beta`, `xhat = (x - mean) * rsqrt(var + eps)`.
+    LayerNorm,
+    /// Single-head scaled-dot-product attention over `t` tokens of
+    /// width `d_model` (`d_in == d_out == t * d_model`): q/k/v
+    /// projections to `d_head`, softmax(q k^T / sqrt(d_head)) v, then an
+    /// output projection back to `d_model`.
+    Attention { t: usize, d_model: usize, d_head: usize },
+}
+
+impl LayerKind {
+    /// Manifest-string discriminator.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LayerKind::Dense => "dense",
+            LayerKind::Conv2d { .. } => "conv2d",
+            LayerKind::LayerNorm => "layernorm",
+            LayerKind::Attention { .. } => "attention",
+        }
+    }
+}
+
+/// Floor-semantics convolution output size (one axis): input `n`,
+/// kernel `k`, stride `s`, padding `p` on both sides.
+pub fn conv_out(n: usize, k: usize, s: usize, p: usize) -> usize {
+    (n + 2 * p - k) / s + 1
+}
+
+/// One layer of the executable layer IR: a [`LayerKind`] between flat
+/// widths `d_in -> d_out`, followed by an element-wise [`Activation`].
+/// A model is a chain of these; the last layer must be a `Dense` with
+/// `Activation::None` and its `d_out` is the class count — the
+/// softmax-xent head consumes its logits directly (see
+/// `runtime::layers::LayerPlan`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LayerSpec {
-    /// Input width (first layer: the flattened image dim `H*W*C`).
+    /// Flat input width (first layer: the flattened image dim `H*W*C`,
+    /// channels-first for convs).
     pub d_in: usize,
-    /// Output width (last layer: `num_classes`).
+    /// Flat output width (last layer: `num_classes`).
     pub d_out: usize,
-    /// Element-wise activation applied to `z`.
+    /// Element-wise activation applied to the layer output.
     pub activation: Activation,
+    /// Structural kind (dense / conv2d / layernorm / attention).
+    pub kind: LayerKind,
 }
 
 impl LayerSpec {
     /// Dense layer with no activation (head layers).
     pub fn dense(d_in: usize, d_out: usize) -> Self {
-        Self { d_in, d_out, activation: Activation::None }
+        Self { d_in, d_out, activation: Activation::None, kind: LayerKind::Dense }
     }
 
     /// Dense layer followed by ReLU (hidden layers).
     pub fn dense_relu(d_in: usize, d_out: usize) -> Self {
-        Self { d_in, d_out, activation: Activation::Relu }
+        Self { d_in, d_out, activation: Activation::Relu, kind: LayerKind::Dense }
     }
 
-    /// Flat parameters of this layer: `d_in * d_out` weights + `d_out`
-    /// biases.
+    /// Channels-first conv2d on a square `side x side` input with a
+    /// square `k x k` kernel (rectangular shapes construct the
+    /// [`LayerKind::Conv2d`] fields directly).
+    pub fn conv2d(
+        c_in: usize,
+        side: usize,
+        c_out: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        activation: Activation,
+    ) -> Self {
+        let out = conv_out(side, k, stride, pad);
+        Self {
+            d_in: c_in * side * side,
+            d_out: c_out * out * out,
+            activation,
+            kind: LayerKind::Conv2d {
+                c_in,
+                h_in: side,
+                w_in: side,
+                c_out,
+                kh: k,
+                kw: k,
+                stride,
+                pad,
+            },
+        }
+    }
+
+    /// LayerNorm over a width-`d` feature vector (gamma + beta).
+    pub fn layernorm(d: usize) -> Self {
+        Self { d_in: d, d_out: d, activation: Activation::None, kind: LayerKind::LayerNorm }
+    }
+
+    /// Single-head attention over `t` tokens of width `d_model`.
+    pub fn attention(t: usize, d_model: usize, d_head: usize) -> Self {
+        let d = t * d_model;
+        Self {
+            d_in: d,
+            d_out: d,
+            activation: Activation::None,
+            kind: LayerKind::Attention { t, d_model, d_head },
+        }
+    }
+
+    /// Flat parameters of this layer (layout: `runtime::layers`).
     pub fn params(&self) -> usize {
-        self.d_in * self.d_out + self.d_out
+        match self.kind {
+            LayerKind::Dense => self.d_in * self.d_out + self.d_out,
+            LayerKind::Conv2d { c_in, c_out, kh, kw, .. } => c_out * c_in * kh * kw + c_out,
+            LayerKind::LayerNorm => 2 * self.d_out,
+            // Wq/Wk/Wv: [d_head, d_model] + bias, Wo: [d_model, d_head]
+            // + bias.
+            LayerKind::Attention { d_model, d_head, .. } => {
+                3 * (d_model * d_head + d_head) + d_model * d_head + d_model
+            }
+        }
     }
 
-    /// The ghost-clipping view of this layer (effective sequence length
-    /// 1: the CPU ladder has no token/spatial axis), for the mix-ghost
-    /// decision rule ([`crate::clipping::mix_ghost_choice`]).
+    /// Forward multiply-accumulates per example. Mirrors the analytic
+    /// counts in `python/compile/vit.py` / `resnet.py` (convs via their
+    /// im2col view, attention as qkv + QK^T + AV + proj; layernorm
+    /// counts its two element-wise multiplies) — cross-checked against
+    /// those formulas in `rust/tests/layered_models.rs`.
+    pub fn macs(&self) -> usize {
+        match self.kind {
+            LayerKind::Dense => self.d_in * self.d_out,
+            LayerKind::Conv2d { c_in, h_in, w_in, c_out, kh, kw, stride, pad } => {
+                let t = conv_out(h_in, kh, stride, pad) * conv_out(w_in, kw, stride, pad);
+                t * c_in * kh * kw * c_out
+            }
+            LayerKind::LayerNorm => 2 * self.d_out,
+            LayerKind::Attention { t, d_model, d_head } => {
+                // qkv (3) + output projection (1), then QK^T + AV.
+                4 * t * d_model * d_head + 2 * t * t * d_head
+            }
+        }
+    }
+
+    /// The ghost-clipping view of this layer for the mix-ghost decision
+    /// rule ([`crate::clipping::mix_ghost_choice`]): dense layers have
+    /// effective sequence length 1, convs their im2col view (`t` spatial
+    /// positions x `c_in*kh*kw` unfolded patch), attention the fused qkv
+    /// projection over `t` tokens (the decision-dominant linear, as in
+    /// `python/compile/vit.py`), layernorm a trivially-ghost affine (its
+    /// per-example norm is O(d) either way).
     pub fn linear_dims(&self) -> LinearDims {
-        LinearDims { t: 1, d_in: self.d_in, d_out: self.d_out }
+        match self.kind {
+            LayerKind::Dense => LinearDims { t: 1, d_in: self.d_in, d_out: self.d_out },
+            LayerKind::Conv2d { c_in, h_in, w_in, c_out, kh, kw, stride, pad } => LinearDims {
+                t: conv_out(h_in, kh, stride, pad) * conv_out(w_in, kw, stride, pad),
+                d_in: c_in * kh * kw,
+                d_out: c_out,
+            },
+            LayerKind::LayerNorm => LinearDims { t: 1, d_in: 1, d_out: 2 * self.d_out },
+            LayerKind::Attention { t, d_model, d_head } => {
+                LinearDims { t, d_in: d_model, d_out: 3 * d_head }
+            }
+        }
     }
 }
 
@@ -104,12 +248,9 @@ impl CpuModel {
         self.layers.iter().map(LayerSpec::params).sum()
     }
 
-    /// Forward FLOPs per example (2 * MACs over the dense chain).
+    /// Forward FLOPs per example (2 * MACs over the layer chain).
     pub fn fwd_flops_per_example(&self) -> f64 {
-        self.layers
-            .iter()
-            .map(|l| 2.0 * l.d_in as f64 * l.d_out as f64)
-            .sum()
+        self.layers.iter().map(|l| 2.0 * l.macs() as f64).sum()
     }
 }
 
@@ -119,7 +260,12 @@ impl CpuModel {
 /// hardcoded linear+softmax kernel bitwise — pinned by the oracle
 /// proptest in `rust/tests/layered_models.rs`); `mlp-small` is the
 /// first genuinely deep rung (two ReLU hidden layers), where ghost
-/// clipping and the mixed decision rule become observable.
+/// clipping and the mixed decision rule become observable; `cnn-small`
+/// (two convs: stride 1 and stride 2, both padded) and `attn-tiny`
+/// (attention + layernorm) execute the paper's real layer kinds, where
+/// the mix rule makes its first genuinely split decision (the padded
+/// convs' im2col views are per-example territory, the dense head is
+/// ghost — DESIGN.md §13).
 pub fn cpu_ladder() -> Vec<CpuModel> {
     let d = 16 * 16 * 3;
     vec![
@@ -153,6 +299,34 @@ pub fn cpu_ladder() -> Vec<CpuModel> {
             num_classes: 10,
             clip_norm: 1.0,
             layers: vec![LayerSpec::dense_relu(d, 128), LayerSpec::dense(128, 10)],
+        },
+        CpuModel {
+            name: "cnn-small",
+            family: "cnn",
+            image: 8,
+            channels: 3,
+            num_classes: 10,
+            clip_norm: 1.0,
+            layers: vec![
+                // [3, 8, 8] -> [4, 8, 8] (k3 s1 p1) -> [6, 4, 4] (k3 s2 p1)
+                LayerSpec::conv2d(3, 8, 4, 3, 1, 1, Activation::Relu),
+                LayerSpec::conv2d(4, 8, 6, 3, 2, 1, Activation::Relu),
+                LayerSpec::dense(6 * 4 * 4, 10),
+            ],
+        },
+        CpuModel {
+            name: "attn-tiny",
+            family: "attn",
+            image: 4,
+            channels: 3,
+            num_classes: 10,
+            clip_norm: 1.0,
+            layers: vec![
+                // 48 inputs viewed as 4 tokens x 12 features.
+                LayerSpec::attention(4, 12, 6),
+                LayerSpec::layernorm(48),
+                LayerSpec::dense(48, 10),
+            ],
         },
     ]
 }
@@ -388,20 +562,19 @@ mod tests {
     #[test]
     fn cpu_ladder_is_well_formed() {
         let ladder = cpu_ladder();
-        assert!(ladder.iter().any(|m| m.name == "ref-linear"));
-        assert!(ladder.iter().any(|m| m.name == "mlp-small"));
+        for name in ["ref-linear", "mlp-small", "cnn-small", "attn-tiny"] {
+            assert!(ladder.iter().any(|m| m.name == name), "{name} missing");
+        }
         for m in &ladder {
             let d = m.image * m.image * m.channels;
             assert_eq!(m.layers.first().unwrap().d_in, d, "{}", m.name);
             assert_eq!(m.layers.last().unwrap().d_out, m.num_classes, "{}", m.name);
             assert_eq!(m.layers.last().unwrap().activation, Activation::None, "{}", m.name);
+            assert_eq!(m.layers.last().unwrap().kind, LayerKind::Dense, "{}", m.name);
             for w in m.layers.windows(2) {
                 assert_eq!(w[0].d_out, w[1].d_in, "{}: layer chain broken", m.name);
             }
-            assert_eq!(
-                m.params(),
-                m.layers.iter().map(|l| l.d_in * l.d_out + l.d_out).sum::<usize>()
-            );
+            assert_eq!(m.params(), m.layers.iter().map(LayerSpec::params).sum::<usize>());
             assert!(m.fwd_flops_per_example() > 0.0);
         }
         // The seed model keeps its exact shape (and therefore its exact
@@ -413,6 +586,51 @@ mod tests {
         let mlp = ladder.iter().find(|m| m.name == "mlp-small").unwrap();
         assert_eq!(mlp.layers.len(), 3);
         assert!(mlp.layers[..2].iter().all(|l| l.activation == Activation::Relu));
+        // cnn-small exercises both stride 1 and stride 2, both padded.
+        let cnn = ladder.iter().find(|m| m.name == "cnn-small").unwrap();
+        let strides: Vec<usize> = cnn
+            .layers
+            .iter()
+            .filter_map(|l| match l.kind {
+                LayerKind::Conv2d { stride, pad, .. } => {
+                    assert!(pad > 0);
+                    Some(stride)
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(strides, vec![1, 2]);
+        // K: 4*3*3*3 + 4 = 112, 6*4*3*3 + 6 = 222, dense 96*10 + 10.
+        assert_eq!(cnn.params(), 112 + 222 + 970);
+        // attn-tiny factors its 48-wide input as 4 tokens x 12 features.
+        let attn = ladder.iter().find(|m| m.name == "attn-tiny").unwrap();
+        assert_eq!(attn.layers[0].kind, LayerKind::Attention { t: 4, d_model: 12, d_head: 6 });
+        assert_eq!(attn.layers[1].kind, LayerKind::LayerNorm);
+        // 3*(12*6+6) + 12*6+12 = 318, layernorm 96, dense 48*10+10.
+        assert_eq!(attn.params(), 318 + 96 + 490);
+    }
+
+    #[test]
+    fn layer_kind_params_and_macs_match_hand_counts() {
+        // conv2d: [3, 8, 8] -(k3 s2 p1)-> [4, 4, 4]: T = 16 positions,
+        // patch = 27, so 16*27*4 MACs; params 4*27 + 4.
+        let c = LayerSpec::conv2d(3, 8, 4, 3, 2, 1, Activation::Relu);
+        assert_eq!((c.d_in, c.d_out), (192, 64));
+        assert_eq!(c.params(), 112);
+        assert_eq!(c.macs(), 16 * 27 * 4);
+        assert_eq!(c.linear_dims(), LinearDims { t: 16, d_in: 27, d_out: 4 });
+        // floor semantics: 7x7, k3 s2 p0 -> 3x3.
+        assert_eq!(conv_out(7, 3, 2, 0), 3);
+        // layernorm: gamma + beta.
+        let ln = LayerSpec::layernorm(48);
+        assert_eq!((ln.d_in, ln.d_out, ln.params()), (48, 48, 96));
+        // attention: qkv (3x [6,12]+6) + proj ([12,6]+12) over t=4.
+        let at = LayerSpec::attention(4, 12, 6);
+        assert_eq!((at.d_in, at.d_out), (48, 48));
+        assert_eq!(at.params(), 3 * (72 + 6) + 72 + 12);
+        // 4 projections t*d*dh + QK^T and AV at t^2*dh each.
+        assert_eq!(at.macs(), 4 * 4 * 12 * 6 + 2 * 16 * 6);
+        assert_eq!(at.linear_dims(), LinearDims { t: 4, d_in: 12, d_out: 18 });
     }
 
     #[test]

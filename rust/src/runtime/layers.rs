@@ -1,34 +1,45 @@
 //! The executable layer IR's flat-parameter layout: [`LayerPlan`].
 //!
-//! A model is a chain of dense layers ([`crate::models::LayerSpec`])
-//! ending in a softmax-xent head. The plan resolves that chain against
-//! a [`ModelMeta`] into everything the reference kernels need to
-//! execute it over one flat f32 parameter vector:
+//! A model is a chain of layers ([`crate::models::LayerSpec`]: dense,
+//! conv2d, layernorm, attention) ending in a dense softmax-xent head.
+//! The plan resolves that chain against a [`ModelMeta`] into everything
+//! the reference kernels need to execute it over one flat f32 parameter
+//! vector:
 //!
-//! * **Parameter layout** — layer blocks in chain order, each
-//!   `[W row-major | b]`:
+//! * **Parameter layout** — layer blocks in chain order, sub-layout per
+//!   kind (DESIGN.md §13):
 //!
 //!   ```text
-//!   params = [ W0[d_out0, d_in0] | b0[d_out0] | W1[...] | b1[...] | ... ]
+//!   dense:     [ W[d_out, d_in] | b[d_out] ]
+//!   conv2d:    [ K[c_out, c_in*kh*kw] | b[c_out] ]
+//!   layernorm: [ gamma[d] | beta[d] ]
+//!   attention: [ Wq[dh,d] | bq | Wk[dh,d] | bk | Wv[dh,d] | bv
+//!              | Wo[d,dh] | bo ]
 //!   ```
 //!
-//!   For a single-layer model this degenerates to `[W | b]` — exactly
+//!   For a single dense layer this degenerates to `[W | b]` — exactly
 //!   the seed `ref-linear` layout, which is what makes the one-layer IR
 //!   model bitwise-compatible with the original hardcoded kernel
 //!   (checkpoints included).
 //!
 //! * **Forward-tape layout** — per example, the backward pass needs
 //!   each layer's *input* activations. The input image is borrowed from
-//!   the batch; hidden activations (post-activation, one slot per
-//!   hidden layer) are stored at `act_off` in a per-example tape window
-//!   of [`LayerPlan::tape_stride`] floats. Storing post-activations is
-//!   enough for ReLU backward: `a > 0 ⟺ z > 0`.
+//!   the batch; hidden outputs (post-activation, one slot per hidden
+//!   layer) are stored at `act_off` in a per-example tape window of
+//!   [`LayerPlan::tape_stride`] floats (post-activations are enough for
+//!   ReLU backward: `a > 0 ⟺ z > 0`). Non-dense kinds tape extra
+//!   forward intermediates at `ext_off` ([`tape_extras`]): layernorm
+//!   its `xhat` + `rstd`, attention its `q/k/v`, softmax probabilities,
+//!   and attended context.
 //!
 //! * **dz layout** — per example, per layer, the gradient w.r.t. the
 //!   layer's pre-activation output lives at `dz_off` in a window of
 //!   [`LayerPlan::dz_stride`] floats. Layer slots are contiguous in
 //!   chain order, so the backward pass can split one window into
 //!   "already-final dz of layer l" and "da being built for layer l-1".
+//!   Attention additionally stores its internal projection gradients
+//!   (`dq/dk/dv/dctx`) at `dz_ext_off` ([`dz_extras`]) — phase 2 reads
+//!   them to fold the q/k/v/o parameter gradients.
 //!
 //! * **Executed clipping branch** — [`executed_choices`] maps an accum
 //!   variant onto a per-layer [`LayerChoice`]: ghost-style layers fold
@@ -37,30 +48,100 @@
 //!   materialize each example's layer gradient first (the Opacus-style
 //!   memory traffic the paper's Table 2 profiles). The `mix` variant
 //!   applies the Bu et al. decision rule
-//!   ([`crate::clipping::mix_ghost_choice`]) per layer — the executed
-//!   counterpart of the analytic registry in `clipping.rs`.
+//!   ([`crate::clipping::mix_ghost_choice`]) per layer — over each
+//!   kind's ghost view (convs: im2col; attention: the fused qkv) — the
+//!   executed counterpart of the analytic registry in `clipping.rs`.
 
 use super::manifest::ModelMeta;
 use crate::clipping::{mix_ghost_choice, LayerChoice};
-use crate::models::{Activation, LayerSpec};
+use crate::models::{conv_out, Activation, LayerKind, LayerSpec};
 use anyhow::{anyhow, Result};
+
+/// Per-example tape floats a layer stores *beyond* its output slot
+/// (forward intermediates its backward needs).
+pub fn tape_extras(spec: &LayerSpec) -> usize {
+    match spec.kind {
+        LayerKind::Dense | LayerKind::Conv2d { .. } => 0,
+        // xhat[d] + rstd.
+        LayerKind::LayerNorm => spec.d_out + 1,
+        // q, k, v, ctx ([t, d_head] each) + softmax probs [t, t].
+        LayerKind::Attention { t, d_head, .. } => 4 * t * d_head + t * t,
+    }
+}
+
+/// Per-example dz floats a layer stores beyond its output-grad slot
+/// (backward intermediates phase 2 folds into parameter gradients).
+pub fn dz_extras(spec: &LayerSpec) -> usize {
+    match spec.kind {
+        // dq, dk, dv, dctx ([t, d_head] each).
+        LayerKind::Attention { t, d_head, .. } => 4 * t * d_head,
+        _ => 0,
+    }
+}
+
+/// Accumulator row units this layer contributes to phase 2: dense one
+/// per output row, conv one per output channel, layernorm gamma + beta,
+/// attention one per q/k/v/o projection row.
+pub fn row_units(spec: &LayerSpec) -> usize {
+    match spec.kind {
+        LayerKind::Dense => spec.d_out,
+        LayerKind::Conv2d { c_out, .. } => c_out,
+        LayerKind::LayerNorm => 2,
+        LayerKind::Attention { d_model, d_head, .. } => 3 * d_head + d_model,
+    }
+}
+
+/// Widest phase-2 contribution any of this layer's row units computes
+/// (scratch bound for the canonical position-summed contribution).
+fn unit_width(spec: &LayerSpec) -> usize {
+    match spec.kind {
+        LayerKind::Dense => spec.d_in,
+        LayerKind::Conv2d { c_in, kh, kw, .. } => c_in * kh * kw,
+        LayerKind::LayerNorm => spec.d_out,
+        LayerKind::Attention { d_model, d_head, .. } => d_model.max(d_head),
+    }
+}
+
+/// Phase-1 backward scratch floats this layer needs per worker: convs
+/// unfold the input (im2col patches `[T, c_in*kh*kw]`) and transpose dz
+/// (`[T, c_out]`) for the Gram-norm dot products; attention needs one
+/// `[t]` row for the softmax backward.
+fn bwd_scratch(spec: &LayerSpec) -> usize {
+    match spec.kind {
+        LayerKind::Dense | LayerKind::LayerNorm => 0,
+        LayerKind::Conv2d { c_in, h_in, w_in, c_out, kh, kw, stride, pad } => {
+            let t = conv_out(h_in, kh, stride, pad) * conv_out(w_in, kw, stride, pad);
+            t * (c_in * kh * kw) + t * c_out
+        }
+        LayerKind::Attention { t, .. } => t,
+    }
+}
 
 /// One layer of a [`LayerPlan`]: the spec plus every resolved offset.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PlannedLayer {
-    /// The layer's dims + activation.
+    /// The layer's dims + activation + kind.
     pub spec: LayerSpec,
-    /// Offset of `W` (row-major `[d_out, d_in]`) in the flat params.
+    /// Offset of the layer's parameter block in the flat params (dense:
+    /// `W` row-major `[d_out, d_in]`; conv: `K` as `[c_out, c_in*kh*kw]`
+    /// rows; layernorm: `gamma`; attention: `Wq`).
     pub w_off: usize,
-    /// Offset of `b` (`[d_out]`) in the flat params.
+    /// Offset of the first bias-like block (dense/conv: `b`; layernorm:
+    /// `beta`; attention: `bq` — the remaining attention sub-blocks
+    /// follow the layout in the module doc).
     pub b_off: usize,
     /// Offset of this layer's *output* activations in the per-example
     /// tape window. Only meaningful for hidden layers (the head's
-    /// logits live in the dz window instead); for the last layer this
-    /// equals [`LayerPlan::tape_stride`].
+    /// logits live in the dz window instead).
     pub act_off: usize,
+    /// Offset of this layer's kind-specific forward extras
+    /// ([`tape_extras`]) in the tape window.
+    pub ext_off: usize,
     /// Offset of this layer's dz slot in the per-example dz window.
     pub dz_off: usize,
+    /// Offset of this layer's kind-specific backward extras
+    /// ([`dz_extras`]) in the dz window.
+    pub dz_ext_off: usize,
 }
 
 /// Flat-parameter + scratch layout of one executable layered model.
@@ -74,14 +155,21 @@ pub struct LayerPlan {
     pub input_dim: usize,
     /// Classes (== `d_out` of the last layer).
     pub num_classes: usize,
-    /// Per-example tape floats (sum of hidden-layer widths).
+    /// Per-example tape floats (hidden-layer widths + tape extras).
     pub tape_stride: usize,
-    /// Per-example dz floats (sum of all layer widths).
+    /// Per-example dz floats (all layer widths + dz extras).
     pub dz_stride: usize,
     /// Largest layer width (eval ping-pong buffer bound).
     pub max_width: usize,
-    /// Largest layer input dim (materialized-row scratch bound).
+    /// Largest layer input dim.
     pub max_d_in: usize,
+    /// Widest phase-2 row-unit contribution (scratch bound).
+    pub max_unit_width: usize,
+    /// Phase-1 backward scratch floats per worker ([`bwd_scratch`]).
+    pub bwd_scratch: usize,
+    /// Eval forward scratch floats (largest [`tape_extras`] — eval has
+    /// no tape, so non-dense forward intermediates live here).
+    pub eval_scratch: usize,
 }
 
 impl LayerPlan {
@@ -106,9 +194,10 @@ impl LayerPlan {
         let mut layers = Vec::with_capacity(specs.len());
         let (mut off, mut tape, mut dz) = (0usize, 0usize, 0usize);
         let (mut max_width, mut max_d_in) = (0usize, 0usize);
+        let (mut max_unit, mut scratch, mut eval_scratch) = (0usize, 0usize, 0usize);
         for (l, spec) in specs.iter().enumerate() {
             if spec.d_in == 0 || spec.d_out == 0 {
-                return Err(anyhow!("layer {l}: zero-width dense layer"));
+                return Err(anyhow!("layer {l}: zero-width layer"));
             }
             if l > 0 && specs[l - 1].d_out != spec.d_in {
                 return Err(anyhow!(
@@ -117,21 +206,91 @@ impl LayerPlan {
                     spec.d_in
                 ));
             }
+            match spec.kind {
+                LayerKind::Dense => {}
+                LayerKind::Conv2d { c_in, h_in, w_in, c_out, kh, kw, stride, pad } => {
+                    if c_in == 0 || c_out == 0 || kh == 0 || kw == 0 || stride == 0 {
+                        return Err(anyhow!("layer {l}: degenerate conv2d geometry"));
+                    }
+                    if h_in + 2 * pad < kh || w_in + 2 * pad < kw {
+                        return Err(anyhow!(
+                            "layer {l}: conv2d kernel {kh}x{kw} exceeds padded input"
+                        ));
+                    }
+                    if spec.d_in != c_in * h_in * w_in {
+                        return Err(anyhow!(
+                            "layer {l}: conv2d d_in {} != {c_in}x{h_in}x{w_in}",
+                            spec.d_in
+                        ));
+                    }
+                    let ho = conv_out(h_in, kh, stride, pad);
+                    let wo = conv_out(w_in, kw, stride, pad);
+                    if spec.d_out != c_out * ho * wo {
+                        return Err(anyhow!(
+                            "layer {l}: conv2d d_out {} != {c_out}x{ho}x{wo}",
+                            spec.d_out
+                        ));
+                    }
+                }
+                LayerKind::LayerNorm => {
+                    if spec.d_in != spec.d_out {
+                        return Err(anyhow!("layer {l}: layernorm must preserve width"));
+                    }
+                }
+                LayerKind::Attention { t, d_model, d_head } => {
+                    if t == 0 || d_model == 0 || d_head == 0 {
+                        return Err(anyhow!("layer {l}: degenerate attention geometry"));
+                    }
+                    if spec.d_in != t * d_model || spec.d_out != spec.d_in {
+                        return Err(anyhow!(
+                            "layer {l}: attention d_in {} / d_out {} != {t}x{d_model}",
+                            spec.d_in,
+                            spec.d_out
+                        ));
+                    }
+                }
+            }
             let last = l == specs.len() - 1;
             if last && spec.activation != Activation::None {
                 return Err(anyhow!("head layer must not carry an activation"));
             }
+            if last && spec.kind != LayerKind::Dense {
+                return Err(anyhow!(
+                    "head layer must be dense (softmax-xent consumes dense logits)"
+                ));
+            }
             let w_off = off;
-            let b_off = off + spec.d_in * spec.d_out;
-            off = b_off + spec.d_out;
+            let b_off = match spec.kind {
+                LayerKind::Dense => off + spec.d_in * spec.d_out,
+                LayerKind::Conv2d { c_in, c_out, kh, kw, .. } => off + c_out * c_in * kh * kw,
+                LayerKind::LayerNorm => off + spec.d_out,
+                LayerKind::Attention { d_model, d_head, .. } => off + d_model * d_head,
+            };
+            off += spec.params();
             let act_off = tape;
+            let mut ext_off = act_off;
             if !last {
                 tape += spec.d_out;
+                ext_off = tape;
+                tape += tape_extras(spec);
             }
-            layers.push(PlannedLayer { spec: *spec, w_off, b_off, act_off, dz_off: dz });
-            dz += spec.d_out;
+            let dz_off = dz;
+            let dz_ext_off = dz_off + spec.d_out;
+            dz = dz_ext_off + dz_extras(spec);
+            layers.push(PlannedLayer {
+                spec: *spec,
+                w_off,
+                b_off,
+                act_off,
+                ext_off,
+                dz_off,
+                dz_ext_off,
+            });
             max_width = max_width.max(spec.d_out);
             max_d_in = max_d_in.max(spec.d_in);
+            max_unit = max_unit.max(unit_width(spec));
+            scratch = scratch.max(bwd_scratch(spec));
+            eval_scratch = eval_scratch.max(tape_extras(spec));
         }
         let head = layers.last().expect("non-empty");
         if head.spec.d_out != meta.num_classes {
@@ -156,22 +315,22 @@ impl LayerPlan {
             dz_stride: dz,
             max_width,
             max_d_in,
+            max_unit_width: max_unit,
+            bwd_scratch: scratch,
+            eval_scratch,
         })
     }
 
     /// Multiply-adds of one forward pass per example (the threading
     /// work gate's unit).
     pub fn macs_per_example(&self) -> usize {
-        self.layers
-            .iter()
-            .map(|l| l.spec.d_in * l.spec.d_out)
-            .sum()
+        self.layers.iter().map(|l| l.spec.macs()).sum()
     }
 
-    /// Total accumulator row units (sum of layer widths) — the phase-2
-    /// parallel partitioning domain.
+    /// Total accumulator row units (sum of [`row_units`] per layer) —
+    /// the phase-2 parallel partitioning domain.
     pub fn total_rows(&self) -> usize {
-        self.dz_stride
+        self.layers.iter().map(|l| row_units(&l.spec)).sum()
     }
 }
 
@@ -183,8 +342,10 @@ impl LayerPlan {
 ///   per-example weight grads by construction.
 /// * `perex` — every layer materializes ([`LayerChoice::PerExample`]):
 ///   the Opacus-style hook cost, observable as extra memory traffic.
-/// * `mix` — the Bu et al. (2022) rule per layer, at the CPU ladder's
-///   effective sequence length t = 1.
+/// * `mix` — the Bu et al. (2022) rule per layer, over each kind's
+///   ghost-view dims ([`LayerSpec::linear_dims`]): dense at t = 1,
+///   conv2d at t = ho*wo over im2col patches, attention at its
+///   sequence length.
 ///
 /// All branches produce **bitwise-identical** accumulators and norms
 /// (the per-example norm is computed once, in the shared Gram form, and
@@ -278,6 +439,112 @@ mod tests {
         assert_eq!(plan.max_d_in, 12);
         assert_eq!(plan.total_rows(), 12);
         assert_eq!(plan.macs_per_example(), 12 * 5 + 5 * 4 + 4 * 3);
+    }
+
+    #[test]
+    fn heterogeneous_offsets_cover_every_kind() {
+        // conv [3,4,4] -k3,s2,p1-> [2,2,2] relu -> attention (t=2, d=4,
+        // dh=3) -> layernorm 8 -> dense head.
+        let meta = meta_of(
+            vec![
+                LayerSpec::conv2d(3, 4, 2, 3, 2, 1, Activation::Relu),
+                LayerSpec::attention(2, 4, 3),
+                LayerSpec::layernorm(8),
+                LayerSpec::dense(8, 5),
+            ],
+            4,
+            3,
+            5,
+        );
+        let plan = LayerPlan::build(&meta).unwrap();
+        let &[conv, attn, ln, head] = &plan.layers[..] else { panic!() };
+        // Params: conv K 2*27 + b 2 = 56; attention 3*(12+3)+12+4 = 61;
+        // layernorm 16; head 8*5+5 = 45.
+        assert_eq!(conv.w_off, 0);
+        assert_eq!(conv.b_off, 54);
+        assert_eq!(attn.w_off, 56);
+        assert_eq!(attn.b_off, 56 + 12, "bq follows Wq");
+        assert_eq!(ln.w_off, 117);
+        assert_eq!(ln.b_off, 117 + 8, "beta follows gamma");
+        assert_eq!(head.w_off, 133);
+        assert_eq!(plan.n_params, 133 + 45);
+        // Tape: conv out 8 (no extras) | attn out 8 + extras
+        // (4*2*3 + 4 = 28) | ln out 8 + extras (8 + 1 = 9).
+        assert_eq!(conv.act_off, 0);
+        assert_eq!(conv.ext_off, 8);
+        assert_eq!(attn.act_off, 8);
+        assert_eq!(attn.ext_off, 16);
+        assert_eq!(ln.act_off, 44);
+        assert_eq!(ln.ext_off, 52);
+        assert_eq!(plan.tape_stride, 61);
+        // dz: conv 8 | attn 8 + dq/dk/dv/dctx 24 | ln 8 | head 5.
+        assert_eq!(conv.dz_off, 0);
+        assert_eq!(attn.dz_off, 8);
+        assert_eq!(attn.dz_ext_off, 16);
+        assert_eq!(ln.dz_off, 40);
+        assert_eq!(head.dz_off, 48);
+        assert_eq!(plan.dz_stride, 53);
+        // Row units: conv 2 channels, attn 3*3+4, ln 2, head 5.
+        assert_eq!(plan.total_rows(), 2 + 13 + 2 + 5);
+        assert_eq!(plan.max_unit_width, 27, "conv im2col row");
+        // Conv scratch: patches 4*27 + dzT 4*2 = 116 > attn row 2.
+        assert_eq!(plan.bwd_scratch, 116);
+        assert_eq!(plan.eval_scratch, 28, "attention fwd intermediates");
+        assert_eq!(
+            plan.macs_per_example(),
+            4 * 27 * 2 + (4 * 2 * 4 * 3 + 2 * 2 * 2 * 3) + 2 * 8 + 8 * 5
+        );
+    }
+
+    #[test]
+    fn malformed_kind_geometry_is_rejected() {
+        // conv d_out inconsistent with its geometry.
+        let mut bad = LayerSpec::conv2d(3, 4, 2, 3, 2, 1, Activation::Relu);
+        bad.d_out += 1;
+        let meta = meta_of(vec![bad, LayerSpec::dense(9, 5)], 4, 3, 5);
+        assert!(LayerPlan::build(&meta).is_err());
+        // Kernel exceeds padded input.
+        let meta = meta_of(vec![LayerSpec::conv2d(3, 2, 2, 5, 1, 1, Activation::None)], 2, 3, 8);
+        assert!(LayerPlan::build(&meta).is_err());
+        // Layernorm must preserve width.
+        let mut ln = LayerSpec::layernorm(12);
+        ln.d_out = 10;
+        let meta = meta_of(vec![ln, LayerSpec::dense(10, 3)], 2, 3, 3);
+        assert!(LayerPlan::build(&meta).is_err());
+        // Attention t*d_model mismatch.
+        let mut at = LayerSpec::attention(3, 4, 2);
+        at.d_in = 14;
+        at.d_out = 14;
+        let meta = meta_of(vec![LayerSpec::dense_relu(12, 14), at, LayerSpec::dense(14, 3)], 2, 3, 3);
+        assert!(LayerPlan::build(&meta).is_err());
+        // Head must be dense.
+        let meta = meta_of(vec![LayerSpec::dense_relu(12, 8), LayerSpec::layernorm(8)], 2, 3, 8);
+        assert!(LayerPlan::build(&meta).is_err());
+    }
+
+    #[test]
+    fn shipped_non_dense_models_plan_cleanly() {
+        for name in ["cnn-small", "attn-tiny"] {
+            let model = crate::models::cpu_ladder()
+                .into_iter()
+                .find(|m| m.name == name)
+                .unwrap();
+            let meta = ModelMeta {
+                family: model.family.into(),
+                n_params: model.params(),
+                image: model.image,
+                channels: model.channels,
+                num_classes: model.num_classes,
+                clip_norm: model.clip_norm,
+                flops_fwd_per_example: model.fwd_flops_per_example(),
+                init_params: "x.bin".into(),
+                executables: Vec::new(),
+                layers: model.layers.clone(),
+            };
+            let plan = LayerPlan::build(&meta).unwrap();
+            assert_eq!(plan.n_params, model.params(), "{name}");
+            assert!(plan.bwd_scratch > 0, "{name} has a non-dense layer");
+        }
     }
 
     #[test]

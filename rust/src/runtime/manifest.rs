@@ -1,7 +1,7 @@
 //! artifacts/manifest.json schema — written by python/compile/aot.py,
 //! the single source of truth about what was lowered.
 
-use crate::models::{Activation, LayerSpec};
+use crate::models::{conv_out, Activation, LayerKind, LayerSpec};
 use crate::util::json::{self, Value};
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
@@ -158,11 +158,55 @@ fn layer_from_value(v: &Value) -> Result<LayerSpec> {
         Some(s) => Activation::parse(s)
             .ok_or_else(|| anyhow!("manifest: unknown activation {s:?} (none|relu)"))?,
     };
-    Ok(LayerSpec {
-        d_in: need_usize(v, "d_in")?,
-        d_out: need_usize(v, "d_out")?,
-        activation,
-    })
+    // The "kind" discriminator is optional and defaults to "dense", so
+    // every pre-PR-9 layered manifest parses unchanged. Non-dense kinds
+    // carry their structural fields and derive the flat widths, which
+    // keeps a manifest from lying about `d_in`/`d_out`.
+    match v.get("kind").and_then(|k| k.as_str()).unwrap_or("dense") {
+        "dense" => Ok(LayerSpec {
+            d_in: need_usize(v, "d_in")?,
+            d_out: need_usize(v, "d_out")?,
+            activation,
+            kind: LayerKind::Dense,
+        }),
+        "conv2d" => {
+            let (c_in, h_in, w_in) =
+                (need_usize(v, "c_in")?, need_usize(v, "h_in")?, need_usize(v, "w_in")?);
+            let (c_out, kh, kw) =
+                (need_usize(v, "c_out")?, need_usize(v, "kh")?, need_usize(v, "kw")?);
+            let (stride, pad) = (need_usize(v, "stride")?, need_usize(v, "pad")?);
+            if stride == 0 || kh == 0 || kw == 0 || kh > h_in + 2 * pad || kw > w_in + 2 * pad {
+                return Err(anyhow!(
+                    "manifest: conv2d kernel {kh}x{kw} stride {stride} does not fit \
+                     a {h_in}x{w_in} input with padding {pad}"
+                ));
+            }
+            let (ho, wo) = (conv_out(h_in, kh, stride, pad), conv_out(w_in, kw, stride, pad));
+            Ok(LayerSpec {
+                d_in: c_in * h_in * w_in,
+                d_out: c_out * ho * wo,
+                activation,
+                kind: LayerKind::Conv2d { c_in, h_in, w_in, c_out, kh, kw, stride, pad },
+            })
+        }
+        "layernorm" => {
+            let d = need_usize(v, "d")?;
+            Ok(LayerSpec { d_in: d, d_out: d, activation, kind: LayerKind::LayerNorm })
+        }
+        "attention" => {
+            let (t, d_model, d_head) =
+                (need_usize(v, "t")?, need_usize(v, "d_model")?, need_usize(v, "d_head")?);
+            Ok(LayerSpec {
+                d_in: t * d_model,
+                d_out: t * d_model,
+                activation,
+                kind: LayerKind::Attention { t, d_model, d_head },
+            })
+        }
+        other => Err(anyhow!(
+            "manifest: unknown layer kind {other:?} (dense|conv2d|layernorm|attention)"
+        )),
+    }
 }
 
 impl ModelMeta {
@@ -320,5 +364,65 @@ mod tests {
               "executables": []}}}"#,
         )
         .is_err());
+    }
+
+    fn model_with_layers(layers_json: &str) -> Result<Manifest> {
+        Manifest::parse(&format!(
+            r#"{{
+            "version": 2, "seed": 0,
+            "models": {{"m": {{
+              "family": "resnet", "n_params": 1, "image": 4, "channels": 3,
+              "num_classes": 2, "clip_norm": 1.0,
+              "flops_fwd_per_example": 1.0, "init_params": "i.bin",
+              "layers": [{layers_json}],
+              "executables": []}}}}}}"#
+        ))
+    }
+
+    #[test]
+    fn kind_discriminated_layers_parse_with_derived_widths() {
+        let m = model_with_layers(
+            r#"{"kind": "conv2d", "c_in": 3, "h_in": 4, "w_in": 4, "c_out": 2,
+                "kh": 3, "kw": 3, "stride": 2, "pad": 1, "activation": "relu"},
+               {"kind": "attention", "t": 2, "d_model": 4, "d_head": 3},
+               {"kind": "layernorm", "d": 8},
+               {"d_in": 8, "d_out": 2}"#,
+        )
+        .unwrap();
+        let specs = m.model("m").unwrap().layer_specs();
+        assert_eq!(
+            specs,
+            vec![
+                LayerSpec::conv2d(3, 4, 2, 3, 2, 1, Activation::Relu),
+                LayerSpec::attention(2, 4, 3),
+                LayerSpec::layernorm(8),
+                LayerSpec::dense(8, 2),
+            ]
+        );
+        // Derived flat widths, not manifest-claimed ones.
+        assert_eq!(specs[0].d_in, 48);
+        assert_eq!(specs[0].d_out, 2 * 2 * 2);
+    }
+
+    #[test]
+    fn malformed_layer_kinds_are_parse_errors() {
+        // Unknown discriminator.
+        assert!(model_with_layers(r#"{"kind": "pool", "d_in": 1, "d_out": 1}"#).is_err());
+        // conv2d kernel larger than the padded input (would underflow
+        // the floor output size).
+        assert!(model_with_layers(
+            r#"{"kind": "conv2d", "c_in": 1, "h_in": 2, "w_in": 2, "c_out": 1,
+                "kh": 5, "kw": 5, "stride": 1, "pad": 0}"#
+        )
+        .is_err());
+        // conv2d stride zero.
+        assert!(model_with_layers(
+            r#"{"kind": "conv2d", "c_in": 1, "h_in": 2, "w_in": 2, "c_out": 1,
+                "kh": 1, "kw": 1, "stride": 0, "pad": 0}"#
+        )
+        .is_err());
+        // Non-dense kinds still demand their structural fields.
+        assert!(model_with_layers(r#"{"kind": "attention", "t": 2}"#).is_err());
+        assert!(model_with_layers(r#"{"kind": "layernorm"}"#).is_err());
     }
 }

@@ -1,21 +1,26 @@
 //! Pure-Rust reference backend: the default, dependency-free executor.
 //!
 //! Executes the **layered model IR** ([`super::layers::LayerPlan`]):
-//! any chain of dense(+ReLU) layers ending in a softmax-xent head, with
-//! the exact Algorithm 1/2 semantics, so the entire sampler → batcher →
-//! trainer → accountant → report pipeline runs end-to-end offline on
-//! every model of [`crate::models::cpu_ladder`] (`ref-linear`,
-//! `mlp-small`, `mlp-wide`, ...):
+//! any chain of dense / conv2d / layernorm / attention layers ending in
+//! a dense softmax-xent head, with the exact Algorithm 1/2 semantics,
+//! so the entire sampler → batcher → trainer → accountant → report
+//! pipeline runs end-to-end offline on every model of
+//! [`crate::models::cpu_ladder`] (`ref-linear`, `mlp-small`,
+//! `cnn-small`, `attn-tiny`, ...):
 //!
 //! * **forward tape** — per example, hidden activations are recorded
 //!   (post-activation) so the backward pass can revisit every layer's
-//!   input;
+//!   input; non-dense kinds also tape the forward intermediates their
+//!   backward needs (layernorm `xhat`/`rstd`; attention `q/k/v`,
+//!   softmax probabilities, context — DESIGN.md §13);
 //! * **per-example backward across all layers** — `dz` per layer via
-//!   `W^T dz` + the ReLU mask, per-example squared norms per layer via
-//!   the Gram products `‖dz‖² · (‖a‖² + 1)` (weights ⊗ input plus the
-//!   bias row; at the CPU ladder's effective sequence length t = 1 the
-//!   ghost-norm T×T Gram matrices degenerate to these scalars, and the
-//!   identity is exact for dense layers);
+//!   each kind's input-gradient rule + the ReLU mask, per-example
+//!   squared norms per layer via the ghost Gram products
+//!   `Σ_{s,u} (a_s·a_u + 1)(g_s·g_u)` over the layer's token view
+//!   (dense: t = 1, where the identity degenerates to
+//!   `‖dz‖²·(‖a‖² + 1)`; conv2d: t = spatial positions over im2col
+//!   patches; attention: one Gram per q/k/v/o projection; layernorm:
+//!   the O(d) elementwise norm);
 //! * **global-norm clipping** — the per-example norm is the sum of the
 //!   per-layer squared norms over the *whole* network (never clipped
 //!   per layer), then the masked clip-and-accumulate
@@ -75,11 +80,11 @@
 
 use super::backend::{AccumArgs, AccumOut, AccumStats, ApplyArgs, Backend, Prepared};
 use super::compile_cache::{CompileCache, CompileRecord};
-use super::layers::{executed_choices, LayerPlan};
+use super::layers::{dz_extras, executed_choices, tape_extras, LayerPlan, PlannedLayer};
 use super::manifest::{ExecutableMeta, Manifest, ModelMeta};
 use super::tensor::Tensor;
 use crate::clipping::LayerChoice;
-use crate::models::{cpu_ladder, Activation, LayerSpec};
+use crate::models::{conv_out, cpu_ladder, Activation, LayerKind, LayerSpec};
 use crate::util::rng::ChaChaRng;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
@@ -151,27 +156,33 @@ struct Scratch {
     scale: Vec<f32>,
     /// `[B]`: unmasked per-example losses.
     losses: Vec<f32>,
+    /// `[workers * bwd_scratch]`: per-worker phase-1 backward scratch
+    /// (conv im2col patches + dz transpose, attention softmax row).
+    bwd: Vec<f32>,
     /// `[P]`: Gaussian noise vector for the apply step.
     noise: Vec<f32>,
 }
 
 impl Scratch {
-    /// Hand out the accum buffers
-    /// `(dz[B*dz_stride], tape[B*tape_stride], scale[B], losses[B])`.
+    /// Hand out the accum buffers `(dz[B*dz_stride], tape[B*tape_stride],
+    /// scale[B], losses[B], bwd[workers*bwd_scratch])`.
     fn accum(
         &mut self,
         b: usize,
+        workers: usize,
         plan: &LayerPlan,
-    ) -> (&mut [f32], &mut [f32], &mut [f32], &mut [f32]) {
+    ) -> (&mut [f32], &mut [f32], &mut [f32], &mut [f32], &mut [f32]) {
         self.dz.resize(b * plan.dz_stride, 0.0);
         self.tape.resize(b * plan.tape_stride, 0.0);
         self.scale.resize(b, 0.0);
         self.losses.resize(b, 0.0);
+        self.bwd.resize(workers * plan.bwd_scratch, 0.0);
         (
             &mut self.dz[..b * plan.dz_stride],
             &mut self.tape[..b * plan.tape_stride],
             &mut self.scale[..b],
             &mut self.losses[..b],
+            &mut self.bwd[..workers * plan.bwd_scratch],
         )
     }
 
@@ -434,6 +445,417 @@ fn dense_forward(out: &mut [f32], w: &[f32], bias: &[f32], a_in: &[f32]) {
     }
 }
 
+/// Layernorm epsilon (matches `python/compile/vit.py`).
+const EPS_LN: f32 = 1e-6;
+
+/// Resolved conv2d geometry (channels-first, floor output size).
+#[derive(Clone, Copy)]
+struct ConvGeo {
+    c_in: usize,
+    h_in: usize,
+    w_in: usize,
+    c_out: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    ho: usize,
+    wo: usize,
+}
+
+impl ConvGeo {
+    fn of(kind: LayerKind) -> Self {
+        let LayerKind::Conv2d { c_in, h_in, w_in, c_out, kh, kw, stride, pad } = kind else {
+            unreachable!("ConvGeo::of on a non-conv layer")
+        };
+        let ho = conv_out(h_in, kh, stride, pad);
+        let wo = conv_out(w_in, kw, stride, pad);
+        Self { c_in, h_in, w_in, c_out, kh, kw, stride, pad, ho, wo }
+    }
+
+    /// im2col patch width `c_in * kh * kw`.
+    fn patch(&self) -> usize {
+        self.c_in * self.kh * self.kw
+    }
+
+    /// Spatial output positions `ho * wo` (the ghost token count).
+    fn t(&self) -> usize {
+        self.ho * self.wo
+    }
+}
+
+/// conv2d forward: `out[c, oy, ox] = b[c] + Σ K[c, ·] * patch(oy, ox)`,
+/// channels-first, zero padding, fixed `(c_in, ky, kx)` addition order.
+fn conv_forward(out: &mut [f32], k: &[f32], bias: &[f32], a_in: &[f32], g: ConvGeo) {
+    let (kp, hw) = (g.kh * g.kw, g.h_in * g.w_in);
+    for c in 0..g.c_out {
+        let krow = &k[c * g.patch()..(c + 1) * g.patch()];
+        for oy in 0..g.ho {
+            for ox in 0..g.wo {
+                let mut acc = bias[c];
+                for cc in 0..g.c_in {
+                    for ky in 0..g.kh {
+                        let iy = oy * g.stride + ky;
+                        if iy < g.pad || iy - g.pad >= g.h_in {
+                            continue;
+                        }
+                        let iy = iy - g.pad;
+                        for kx in 0..g.kw {
+                            let ix = ox * g.stride + kx;
+                            if ix < g.pad || ix - g.pad >= g.w_in {
+                                continue;
+                            }
+                            let ix = ix - g.pad;
+                            acc += krow[cc * kp + ky * g.kw + kx]
+                                * a_in[cc * hw + iy * g.w_in + ix];
+                        }
+                    }
+                }
+                out[c * g.t() + oy * g.wo + ox] = acc;
+            }
+        }
+    }
+}
+
+/// conv2d input gradient: scatter `dz[c, s] * K[c, ·]` back onto the
+/// (pre-zeroed) input window — the transpose of [`conv_forward`].
+fn conv_input_grad(da: &mut [f32], k: &[f32], dz_l: &[f32], g: ConvGeo) {
+    let (kp, hw) = (g.kh * g.kw, g.h_in * g.w_in);
+    da.fill(0.0);
+    for c in 0..g.c_out {
+        let krow = &k[c * g.patch()..(c + 1) * g.patch()];
+        for oy in 0..g.ho {
+            for ox in 0..g.wo {
+                let gv = dz_l[c * g.t() + oy * g.wo + ox];
+                for cc in 0..g.c_in {
+                    for ky in 0..g.kh {
+                        let iy = oy * g.stride + ky;
+                        if iy < g.pad || iy - g.pad >= g.h_in {
+                            continue;
+                        }
+                        let iy = iy - g.pad;
+                        for kx in 0..g.kw {
+                            let ix = ox * g.stride + kx;
+                            if ix < g.pad || ix - g.pad >= g.w_in {
+                                continue;
+                            }
+                            let ix = ix - g.pad;
+                            da[cc * hw + iy * g.w_in + ix] += gv * krow[cc * kp + ky * g.kw + kx];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The ghost Gram-norm product over token matrices `a: [t, aw]`,
+/// `g: [t, gw]`: `Σ_{s,u} (a_s·a_u + 1)(g_s·g_u)` — the squared norm of
+/// the layer's weight *and* bias gradient without materializing either
+/// (the `+ 1` is the bias column).
+fn gram_sq(a: &[f32], aw: usize, g: &[f32], gw: usize, t: usize) -> f32 {
+    let mut sq = 0.0f32;
+    for s in 0..t {
+        let (a_s, g_s) = (&a[s * aw..(s + 1) * aw], &g[s * gw..(s + 1) * gw]);
+        for u in 0..t {
+            let ga = dot(a_s, &a[u * aw..(u + 1) * aw]) + 1.0;
+            let gg = dot(g_s, &g[u * gw..(u + 1) * gw]);
+            sq += ga * gg;
+        }
+    }
+    sq
+}
+
+/// conv2d ghost norm: unfold the input into im2col patches `[t, patch]`
+/// and transpose dz to `[t, c_out]` (both in `scratch`), then the Gram
+/// product — `‖dK‖² + ‖db‖²` exactly (DESIGN.md §13).
+fn conv_norm_sq(a_in: &[f32], dz_l: &[f32], g: ConvGeo, scratch: &mut [f32]) -> f32 {
+    let (kp, hw, pw) = (g.kh * g.kw, g.h_in * g.w_in, g.patch());
+    let (patches, rest) = scratch.split_at_mut(g.t() * pw);
+    let dzt = &mut rest[..g.t() * g.c_out];
+    patches.fill(0.0);
+    for oy in 0..g.ho {
+        for ox in 0..g.wo {
+            let row = &mut patches[(oy * g.wo + ox) * pw..(oy * g.wo + ox + 1) * pw];
+            for cc in 0..g.c_in {
+                for ky in 0..g.kh {
+                    let iy = oy * g.stride + ky;
+                    if iy < g.pad || iy - g.pad >= g.h_in {
+                        continue;
+                    }
+                    let iy = iy - g.pad;
+                    for kx in 0..g.kw {
+                        let ix = ox * g.stride + kx;
+                        if ix < g.pad || ix - g.pad >= g.w_in {
+                            continue;
+                        }
+                        let ix = ix - g.pad;
+                        row[cc * kp + ky * g.kw + kx] = a_in[cc * hw + iy * g.w_in + ix];
+                    }
+                }
+            }
+        }
+    }
+    for c in 0..g.c_out {
+        for s in 0..g.t() {
+            dzt[s * g.c_out + c] = dz_l[c * g.t() + s];
+        }
+    }
+    gram_sq(patches, pw, dzt, g.c_out, g.t())
+}
+
+/// layernorm forward: whole-vector mean/variance, `xhat` and `rstd`
+/// onto the tape extras, `out = gamma ∘ xhat + beta`.
+fn ln_forward(out: &mut [f32], gamma: &[f32], beta: &[f32], a_in: &[f32], ext: &mut [f32]) {
+    let d = a_in.len();
+    let mut mu = 0.0f32;
+    for &v in a_in {
+        mu += v;
+    }
+    let mu = mu / d as f32;
+    let mut var = 0.0f32;
+    for &v in a_in {
+        let c = v - mu;
+        var += c * c;
+    }
+    let var = var / d as f32;
+    let rstd = 1.0 / (var + EPS_LN).sqrt();
+    let (xhat, rest) = ext.split_at_mut(d);
+    rest[0] = rstd;
+    for (xh, &v) in xhat.iter_mut().zip(a_in) {
+        *xh = (v - mu) * rstd;
+    }
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = xhat[j] * gamma[j] + beta[j];
+    }
+}
+
+/// layernorm input gradient:
+/// `dx = rstd * (dxhat − mean(dxhat) − xhat * mean(dxhat ∘ xhat))`
+/// with `dxhat = dout ∘ gamma`.
+fn ln_input_grad(da: &mut [f32], gamma: &[f32], xhat: &[f32], rstd: f32, dout: &[f32]) {
+    let d = dout.len();
+    let (mut m1, mut m2) = (0.0f32, 0.0f32);
+    for j in 0..d {
+        let dxh = dout[j] * gamma[j];
+        m1 += dxh;
+        m2 += dxh * xhat[j];
+    }
+    let m1 = m1 / d as f32;
+    let m2 = m2 / d as f32;
+    for (j, dv) in da.iter_mut().enumerate() {
+        *dv = rstd * (dout[j] * gamma[j] - m1 - xhat[j] * m2);
+    }
+}
+
+/// Attention parameter block views
+/// `[Wq | bq | Wk | bk | Wv | bv | Wo | bo]` (shapes in the
+/// `runtime/layers.rs` module docs).
+struct AttnParams<'a> {
+    wq: &'a [f32],
+    bq: &'a [f32],
+    wk: &'a [f32],
+    bk: &'a [f32],
+    wv: &'a [f32],
+    bv: &'a [f32],
+    wo: &'a [f32],
+    bo: &'a [f32],
+}
+
+fn attn_params(p: &[f32], d: usize, dh: usize) -> AttnParams<'_> {
+    let (wq, p) = p.split_at(dh * d);
+    let (bq, p) = p.split_at(dh);
+    let (wk, p) = p.split_at(dh * d);
+    let (bk, p) = p.split_at(dh);
+    let (wv, p) = p.split_at(dh * d);
+    let (bv, p) = p.split_at(dh);
+    let (wo, p) = p.split_at(d * dh);
+    let (bo, _) = p.split_at(d);
+    AttnParams { wq, bq, wk, bk, wv, bv, wo, bo }
+}
+
+/// Single-head scaled-dot-product attention forward over `[t, d]`
+/// tokens: `q/k/v = X W^T + b`, row-max-subtracted softmax of
+/// `q k^T / √dh`, `ctx = A v`, `out = ctx Wo^T + bo`. The intermediates
+/// (`q, k, v, A, ctx`) land in `ext` — the tape extras in accum, a
+/// scratch buffer in eval.
+fn attn_forward(out: &mut [f32], p: &[f32], a_in: &[f32], ext: &mut [f32], t: usize, dh: usize) {
+    let d = a_in.len() / t;
+    let AttnParams { wq, bq, wk, bk, wv, bv, wo, bo } = attn_params(p, d, dh);
+    let (q, ext) = ext.split_at_mut(t * dh);
+    let (k, ext) = ext.split_at_mut(t * dh);
+    let (v, ext) = ext.split_at_mut(t * dh);
+    let (probs, ext) = ext.split_at_mut(t * t);
+    let ctx = &mut ext[..t * dh];
+    for s in 0..t {
+        let xs = &a_in[s * d..(s + 1) * d];
+        dense_forward(&mut q[s * dh..(s + 1) * dh], wq, bq, xs);
+        dense_forward(&mut k[s * dh..(s + 1) * dh], wk, bk, xs);
+        dense_forward(&mut v[s * dh..(s + 1) * dh], wv, bv, xs);
+    }
+    let inv = 1.0 / (dh as f32).sqrt();
+    for s in 0..t {
+        let qs = &q[s * dh..(s + 1) * dh];
+        let row = &mut probs[s * t..(s + 1) * t];
+        for (u, slot) in row.iter_mut().enumerate() {
+            *slot = dot(qs, &k[u * dh..(u + 1) * dh]) * inv;
+        }
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for val in row.iter_mut() {
+            *val = (*val - max).exp();
+            z += *val;
+        }
+        for val in row.iter_mut() {
+            *val /= z;
+        }
+    }
+    for s in 0..t {
+        let cs = &mut ctx[s * dh..(s + 1) * dh];
+        cs.fill(0.0);
+        for u in 0..t {
+            axpy(cs, &v[u * dh..(u + 1) * dh], probs[s * t + u]);
+        }
+    }
+    for s in 0..t {
+        dense_forward(&mut out[s * d..(s + 1) * d], wo, bo, &ctx[s * dh..(s + 1) * dh]);
+    }
+}
+
+/// Attention backward through the softmax: fills the dz extras
+/// `dq/dk/dv/dctx` from `dout` and the taped `q/k/v/A/ctx` (phase 2
+/// folds them into the q/k/v/o parameter gradients; the norm and the
+/// input gradient read them too). `scratch` holds one `[t]` row.
+fn attn_backward(
+    p: &[f32],
+    spec: LayerSpec,
+    tape_ext: &[f32],
+    dout: &[f32],
+    dz_ext: &mut [f32],
+    scratch: &mut [f32],
+) {
+    let LayerKind::Attention { t, d_model: d, d_head: dh } = spec.kind else {
+        unreachable!("attn_backward on a non-attention layer")
+    };
+    let wo = attn_params(p, d, dh).wo;
+    let (q, rest) = tape_ext.split_at(t * dh);
+    let (k, rest) = rest.split_at(t * dh);
+    let (v, rest) = rest.split_at(t * dh);
+    let (probs, _) = rest.split_at(t * t);
+    let (dq, rest) = dz_ext.split_at_mut(t * dh);
+    let (dk, rest) = rest.split_at_mut(t * dh);
+    let (dv, dctx) = rest.split_at_mut(t * dh);
+    // dctx_s = Wo^T dout_s.
+    for s in 0..t {
+        let dcs = &mut dctx[s * dh..(s + 1) * dh];
+        dcs.fill(0.0);
+        let dos = &dout[s * d..(s + 1) * d];
+        for (j, &gv) in dos.iter().enumerate() {
+            axpy(dcs, &wo[j * dh..(j + 1) * dh], gv);
+        }
+    }
+    // dv_u = Σ_s A[s, u] dctx_s (fixed s-major order).
+    dv.fill(0.0);
+    for s in 0..t {
+        let dcs = &dctx[s * dh..(s + 1) * dh];
+        for u in 0..t {
+            axpy(&mut dv[u * dh..(u + 1) * dh], dcs, probs[s * t + u]);
+        }
+    }
+    // Softmax backward per row: dA = dctx v^T, ds = A ∘ (dA − Σ A∘dA),
+    // dq_s = (1/√dh) ds k, dk_u += (1/√dh) ds^T q.
+    let inv = 1.0 / (dh as f32).sqrt();
+    dk.fill(0.0);
+    let da_row = &mut scratch[..t];
+    for s in 0..t {
+        let dcs = &dctx[s * dh..(s + 1) * dh];
+        let arow = &probs[s * t..(s + 1) * t];
+        for (u, slot) in da_row.iter_mut().enumerate() {
+            *slot = dot(dcs, &v[u * dh..(u + 1) * dh]);
+        }
+        let mut rowsum = 0.0f32;
+        for u in 0..t {
+            rowsum += arow[u] * da_row[u];
+        }
+        let dqs = &mut dq[s * dh..(s + 1) * dh];
+        dqs.fill(0.0);
+        let qs = &q[s * dh..(s + 1) * dh];
+        for u in 0..t {
+            let dsu = arow[u] * (da_row[u] - rowsum);
+            axpy(dqs, &k[u * dh..(u + 1) * dh], dsu);
+            axpy(&mut dk[u * dh..(u + 1) * dh], qs, dsu);
+        }
+        for x in dqs.iter_mut() {
+            *x *= inv;
+        }
+    }
+    for x in dk.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// Attention input gradient `dX = dq Wq + dk Wk + dv Wv` (from the
+/// already-filled dz extras).
+fn attn_input_grad(da: &mut [f32], p: &[f32], spec: LayerSpec, dz_ext: &[f32]) {
+    let LayerKind::Attention { t, d_model: d, d_head: dh } = spec.kind else {
+        unreachable!("attn_input_grad on a non-attention layer")
+    };
+    let AttnParams { wq, wk, wv, .. } = attn_params(p, d, dh);
+    let (dq, rest) = dz_ext.split_at(t * dh);
+    let (dk, rest) = rest.split_at(t * dh);
+    let (dv, _) = rest.split_at(t * dh);
+    da.fill(0.0);
+    for s in 0..t {
+        let das = &mut da[s * d..(s + 1) * d];
+        for j in 0..dh {
+            axpy(das, &wq[j * d..(j + 1) * d], dq[s * dh + j]);
+        }
+        for j in 0..dh {
+            axpy(das, &wk[j * d..(j + 1) * d], dk[s * dh + j]);
+        }
+        for j in 0..dh {
+            axpy(das, &wv[j * d..(j + 1) * d], dv[s * dh + j]);
+        }
+    }
+}
+
+/// One layer's forward, dispatched by kind, with the ReLU applied to
+/// `out` in place — the arithmetic shared bit-for-bit by the accum tape
+/// and the eval pass. `ext` receives the kind's forward intermediates
+/// ([`tape_extras`] floats: the tape in accum, scratch in eval).
+fn layer_forward(pl: &PlannedLayer, params: &[f32], a_in: &[f32], out: &mut [f32], ext: &mut [f32]) {
+    let spec = pl.spec;
+    match spec.kind {
+        LayerKind::Dense => {
+            let w = &params[pl.w_off..pl.w_off + spec.d_in * spec.d_out];
+            let bias = &params[pl.b_off..pl.b_off + spec.d_out];
+            dense_forward(out, w, bias, a_in);
+        }
+        LayerKind::Conv2d { .. } => {
+            let g = ConvGeo::of(spec.kind);
+            let k = &params[pl.w_off..pl.w_off + g.c_out * g.patch()];
+            let bias = &params[pl.b_off..pl.b_off + g.c_out];
+            conv_forward(out, k, bias, a_in, g);
+        }
+        LayerKind::LayerNorm => {
+            let gamma = &params[pl.w_off..pl.w_off + spec.d_out];
+            let beta = &params[pl.b_off..pl.b_off + spec.d_out];
+            ln_forward(out, gamma, beta, a_in, ext);
+        }
+        LayerKind::Attention { t, d_head, .. } => {
+            let p = &params[pl.w_off..pl.w_off + spec.params()];
+            attn_forward(out, p, a_in, ext, t, d_head);
+        }
+    }
+    if spec.activation == Activation::Relu {
+        for v in out.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
 /// Read-only inputs shared by every accum kernel worker.
 #[derive(Clone, Copy)]
 struct AccumCtx<'a> {
@@ -446,25 +868,31 @@ struct AccumCtx<'a> {
     mask: &'a [f32],
 }
 
-/// Accum phase 1: for the examples of one partition (`start` onward,
-/// one slot per element of `scale`), run the layered forward (hidden
-/// activations onto the tape, head logits into the dz slot), transform
-/// the logits into dz (softmax − onehot) with the unmasked loss, then
-/// backpropagate dz through every layer (`W^T dz` + the ReLU mask)
-/// while accumulating the per-layer Gram-form squared norms into the
-/// **global** per-example norm, and finally the accumulate scale.
-/// Examples are independent — this is the parallel-over-examples
-/// section. Output slices are the partition's disjoint windows (local
-/// index 0 = example `start`).
-fn accum_examples(
-    ctx: AccumCtx<'_>,
+/// One phase-1 worker's disjoint output windows (local index 0 =
+/// example `start`) plus its private backward scratch
+/// ([`LayerPlan::bwd_scratch`] floats).
+struct AccumPart<'p> {
     start: usize,
-    dz: &mut [f32],
-    tape: &mut [f32],
-    scale: &mut [f32],
-    losses: &mut [f32],
-    sq_norms: &mut [f32],
-) {
+    dz: &'p mut [f32],
+    tape: &'p mut [f32],
+    scale: &'p mut [f32],
+    losses: &'p mut [f32],
+    sq_norms: &'p mut [f32],
+    scratch: &'p mut [f32],
+}
+
+/// Accum phase 1: for the examples of one partition (`part.start`
+/// onward, one slot per element of `part.scale`), run the layered
+/// forward (hidden activations + kind extras onto the tape, head logits
+/// into the dz slot), transform the logits into dz (softmax − onehot)
+/// with the unmasked loss, then backpropagate dz through every layer
+/// (each kind's input-gradient rule + the ReLU mask, attention filling
+/// its dz extras first) while accumulating the per-layer Gram-form
+/// squared norms into the **global** per-example norm, and finally the
+/// accumulate scale. Examples are independent — this is the
+/// parallel-over-examples section.
+fn accum_examples(ctx: AccumCtx<'_>, part: AccumPart<'_>) {
+    let AccumPart { start, dz, tape, scale, losses, sq_norms, scratch } = part;
     let plan = ctx.plan;
     let d = plan.input_dim;
     let ts = plan.tape_stride;
@@ -476,21 +904,21 @@ fn accum_examples(
         let tape_w = &mut tape[k * ts..(k + 1) * ts];
         let dz_w = &mut dz[k * dzs..(k + 1) * dzs];
 
-        // Forward: hidden layers write (post-activation) onto the
-        // tape; the head writes its logits into its dz slot, where the
-        // softmax transform below turns them into dz in place.
+        // Forward: hidden layers write (post-activation output +
+        // extras) onto the tape; the head writes its logits into its
+        // dz slot, where the softmax transform below turns them into
+        // dz in place.
         for l in 0..nlayers {
             let pl = plan.layers[l];
             let (d_in, d_out) = (pl.spec.d_in, pl.spec.d_out);
-            let w = &ctx.params[pl.w_off..pl.w_off + d_in * d_out];
-            let bias = &ctx.params[pl.b_off..pl.b_off + d_out];
             if l + 1 == nlayers {
                 let a_in: &[f32] = if l == 0 {
                     xi
                 } else {
                     &tape_w[plan.layers[l - 1].act_off..][..d_in]
                 };
-                dense_forward(&mut dz_w[pl.dz_off..pl.dz_off + d_out], w, bias, a_in);
+                let out = &mut dz_w[pl.dz_off..pl.dz_off + d_out];
+                layer_forward(&pl, ctx.params, a_in, out, &mut []);
             } else {
                 let (lo, hi) = tape_w.split_at_mut(pl.act_off);
                 let a_in: &[f32] = if l == 0 {
@@ -498,15 +926,9 @@ fn accum_examples(
                 } else {
                     &lo[plan.layers[l - 1].act_off..][..d_in]
                 };
-                let out = &mut hi[..d_out];
-                dense_forward(out, w, bias, a_in);
-                if pl.spec.activation == Activation::Relu {
-                    for v in out.iter_mut() {
-                        if *v < 0.0 {
-                            *v = 0.0;
-                        }
-                    }
-                }
+                let (out, rest) = hi.split_at_mut(d_out);
+                let ext = &mut rest[..tape_extras(&pl.spec)];
+                layer_forward(&pl, ctx.params, a_in, out, ext);
             }
         }
 
@@ -530,11 +952,23 @@ fn accum_examples(
         dl[yi] -= 1.0;
 
         // Backward: per-layer Gram norms into the global per-example
-        // norm, and dz for the next layer down (`W^T dz`, ReLU-masked).
+        // norm, and dz for the next layer down via each kind's
+        // input-gradient rule (ReLU-masked). Attention fills its dz
+        // extras (dq/dk/dv/dctx) first — unconditionally, because
+        // phase 2 folds them into parameter gradients even when the
+        // nonprivate variant skips the norm.
         let mut sq_total = 0.0f32;
         for l in (0..nlayers).rev() {
             let pl = plan.layers[l];
             let (d_in, d_out) = (pl.spec.d_in, pl.spec.d_out);
+            if let LayerKind::Attention { .. } = pl.spec.kind {
+                let p = &ctx.params[pl.w_off..pl.w_off + pl.spec.params()];
+                let tape_ext = &tape_w[pl.ext_off..pl.ext_off + tape_extras(&pl.spec)];
+                let (lo, hi) = dz_w.split_at_mut(pl.dz_ext_off);
+                let dout = &lo[pl.dz_off..pl.dz_off + d_out];
+                let dz_ext = &mut hi[..dz_extras(&pl.spec)];
+                attn_backward(p, pl.spec, tape_ext, dout, dz_ext, scratch);
+            }
             if !ctx.nonprivate {
                 let a_in: &[f32] = if l == 0 {
                     xi
@@ -542,19 +976,69 @@ fn accum_examples(
                     &tape_w[plan.layers[l - 1].act_off..][..d_in]
                 };
                 let dz_l = &dz_w[pl.dz_off..pl.dz_off + d_out];
-                let dlsq = dot(dz_l, dz_l);
-                let asq = dot(a_in, a_in);
-                sq_total += dlsq * (asq + 1.0);
+                match pl.spec.kind {
+                    LayerKind::Dense => {
+                        let dlsq = dot(dz_l, dz_l);
+                        let asq = dot(a_in, a_in);
+                        sq_total += dlsq * (asq + 1.0);
+                    }
+                    LayerKind::Conv2d { .. } => {
+                        let g = ConvGeo::of(pl.spec.kind);
+                        sq_total += conv_norm_sq(a_in, dz_l, g, scratch);
+                    }
+                    LayerKind::LayerNorm => {
+                        // ‖dγ‖² + ‖dβ‖² = Σ (dout·xhat)² + dout².
+                        let xhat = &tape_w[pl.ext_off..pl.ext_off + d_out];
+                        let mut s = 0.0f32;
+                        for (&dv, &xv) in dz_l.iter().zip(xhat) {
+                            let gj = dv * xv;
+                            s += gj * gj + dv * dv;
+                        }
+                        sq_total += s;
+                    }
+                    LayerKind::Attention { t, d_model, d_head } => {
+                        // One Gram per projection: q/k/v against the
+                        // input tokens, o against the context rows.
+                        let tdh = t * d_head;
+                        let ext = &dz_w[pl.dz_ext_off..pl.dz_ext_off + 4 * tdh];
+                        let ctx_rows =
+                            &tape_w[pl.ext_off + 3 * tdh + t * t..pl.ext_off + 4 * tdh + t * t];
+                        sq_total += gram_sq(a_in, d_model, &ext[..tdh], d_head, t);
+                        sq_total += gram_sq(a_in, d_model, &ext[tdh..2 * tdh], d_head, t);
+                        sq_total += gram_sq(a_in, d_model, &ext[2 * tdh..3 * tdh], d_head, t);
+                        sq_total += gram_sq(ctx_rows, d_head, dz_l, d_model, t);
+                    }
+                }
             }
             if l > 0 {
                 let prev = plan.layers[l - 1];
                 let (lo, hi) = dz_w.split_at_mut(pl.dz_off);
                 let dz_l = &hi[..d_out];
                 let da = &mut lo[prev.dz_off..prev.dz_off + prev.spec.d_out];
-                da.fill(0.0);
-                let w = &ctx.params[pl.w_off..pl.w_off + d_in * d_out];
-                for (r, &g) in dz_l.iter().enumerate() {
-                    axpy(da, &w[r * d_in..(r + 1) * d_in], g);
+                match pl.spec.kind {
+                    LayerKind::Dense => {
+                        da.fill(0.0);
+                        let w = &ctx.params[pl.w_off..pl.w_off + d_in * d_out];
+                        for (r, &g) in dz_l.iter().enumerate() {
+                            axpy(da, &w[r * d_in..(r + 1) * d_in], g);
+                        }
+                    }
+                    LayerKind::Conv2d { .. } => {
+                        let g = ConvGeo::of(pl.spec.kind);
+                        let kern = &ctx.params[pl.w_off..pl.w_off + g.c_out * g.patch()];
+                        conv_input_grad(da, kern, dz_l, g);
+                    }
+                    LayerKind::LayerNorm => {
+                        let gamma = &ctx.params[pl.w_off..pl.w_off + d_out];
+                        let xhat = &tape_w[pl.ext_off..pl.ext_off + d_out];
+                        let rstd = tape_w[pl.ext_off + d_out];
+                        ln_input_grad(da, gamma, xhat, rstd, dz_l);
+                    }
+                    LayerKind::Attention { .. } => {
+                        let p = &ctx.params[pl.w_off..pl.w_off + pl.spec.params()];
+                        let dz_ext = &hi[d_out..d_out + dz_extras(&pl.spec)];
+                        attn_input_grad(da, p, pl.spec, dz_ext);
+                    }
                 }
                 if prev.spec.activation == Activation::Relu {
                     let a_prev = &tape_w[prev.act_off..prev.act_off + prev.spec.d_out];
@@ -580,28 +1064,59 @@ fn accum_examples(
     }
 }
 
-/// One phase-2 work unit: a single accumulator output row — its weight
-/// row and bias slot, plus everything needed to locate its inputs per
-/// example. Units partition the accumulator disjointly, so threads
-/// own non-overlapping `&mut` slices.
-struct RowUnit<'a> {
-    /// Input width of the owning layer.
-    d_in: usize,
-    /// Tape offset of the owning layer's input activations (`None` =
-    /// the layer reads the batch input `x`).
-    in_tape: Option<usize>,
-    /// Index of this row's dz value in the per-example dz window.
-    dz_idx: usize,
-    /// Fused ghost-style accumulate (vs materialize-then-add).
-    fused: bool,
-    /// This row's weight slice of the accumulator.
-    w: &'a mut [f32],
-    /// This row's bias slot of the accumulator.
-    b: &'a mut f32,
+/// Where a phase-2 unit reads its `a` tokens: the batch input or a
+/// per-example tape offset.
+#[derive(Clone, Copy)]
+enum ASrc {
+    /// The batch input `x` (layer 0).
+    Batch,
+    /// A per-example tape window offset (a hidden output, or attention
+    /// context rows).
+    Tape(usize),
 }
 
-/// Decompose the flat accumulator into per-row [`RowUnit`]s in layout
-/// order (layer-major, then output row).
+/// The per-kind shape of a phase-2 work unit.
+#[derive(Clone, Copy)]
+enum UnitKind {
+    /// One dense output row: `contrib = dz[row] * a` at t = 1 — the
+    /// seed-exact arithmetic (`g = sc·dz`, then the fused `axpy` /
+    /// materialized copy-then-add fold).
+    Dense { d_in: usize, a: ASrc, dz_idx: usize },
+    /// One conv2d output channel: its K row + bias, the contribution
+    /// summed over spatial positions in row-major order (the position
+    /// sum is computed once, in `contrib`, so fused and materialized
+    /// add bit-identical addends).
+    ConvChannel { geo: ConvGeo, a: ASrc, dz_off: usize, channel: usize },
+    /// One token-matrix projection row (attention q/k/v/o):
+    /// `contrib[c] = Σ_s g[s]·a[s, c]` over `[t, width]` token rows,
+    /// `g[s]` strided out of the dz window.
+    TokenRow { t: usize, width: usize, a: ASrc, g_off: usize, g_stride: usize },
+    /// The layernorm gamma block: `contrib_j = dout_j · xhat_j`.
+    LnGamma { d: usize, dz_off: usize, xhat_off: usize },
+    /// The layernorm beta block: `contrib_j = dout_j`.
+    LnBeta { d: usize, dz_off: usize },
+}
+
+/// One phase-2 work unit: a weight-like slice of the accumulator (plus
+/// its bias slot, when the kind has one) and everything needed to
+/// locate its inputs per example. Units partition the accumulator
+/// disjointly, so threads own non-overlapping `&mut` slices.
+struct RowUnit<'a> {
+    kind: UnitKind,
+    /// Inner-loop cost (partitioning weight).
+    cost: usize,
+    /// Fused ghost-style accumulate (vs materialize-then-add).
+    fused: bool,
+    /// This unit's weight slice of the accumulator.
+    w: &'a mut [f32],
+    /// This unit's bias slot of the accumulator (layernorm has none —
+    /// gamma and beta are both weight-like blocks).
+    b: Option<&'a mut f32>,
+}
+
+/// Decompose the flat accumulator into [`RowUnit`]s in layout order
+/// (layer-major, then per-kind: dense/conv output rows, attention
+/// q/k/v/o projection rows, layernorm gamma + beta).
 fn build_row_units<'a>(
     plan: &LayerPlan,
     fused: &[bool],
@@ -611,33 +1126,147 @@ fn build_row_units<'a>(
     let mut rest: &'a mut [f32] = acc;
     for (l, pl) in plan.layers.iter().enumerate() {
         let (d_in, d_out) = (pl.spec.d_in, pl.spec.d_out);
-        let (w_region, tail) = rest.split_at_mut(d_in * d_out);
-        let (b_region, tail) = tail.split_at_mut(d_out);
-        rest = tail;
-        let in_tape = if l == 0 { None } else { Some(plan.layers[l - 1].act_off) };
-        for ((r, w), b) in w_region.chunks_mut(d_in).enumerate().zip(b_region.iter_mut()) {
-            units.push(RowUnit {
-                d_in,
-                in_tape,
-                dz_idx: pl.dz_off + r,
-                fused: fused[l],
-                w,
-                b,
-            });
+        let a = if l == 0 { ASrc::Batch } else { ASrc::Tape(plan.layers[l - 1].act_off) };
+        match pl.spec.kind {
+            LayerKind::Dense => {
+                let (w_region, tail) = rest.split_at_mut(d_in * d_out);
+                let (b_region, tail) = tail.split_at_mut(d_out);
+                rest = tail;
+                for ((r, w), b) in
+                    w_region.chunks_mut(d_in).enumerate().zip(b_region.iter_mut())
+                {
+                    units.push(RowUnit {
+                        kind: UnitKind::Dense { d_in, a, dz_idx: pl.dz_off + r },
+                        cost: d_in + 1,
+                        fused: fused[l],
+                        w,
+                        b: Some(b),
+                    });
+                }
+            }
+            LayerKind::Conv2d { .. } => {
+                let geo = ConvGeo::of(pl.spec.kind);
+                let (w_region, tail) = rest.split_at_mut(geo.c_out * geo.patch());
+                let (b_region, tail) = tail.split_at_mut(geo.c_out);
+                rest = tail;
+                for ((channel, w), b) in
+                    w_region.chunks_mut(geo.patch()).enumerate().zip(b_region.iter_mut())
+                {
+                    units.push(RowUnit {
+                        kind: UnitKind::ConvChannel { geo, a, dz_off: pl.dz_off, channel },
+                        cost: geo.t() * geo.patch() + 1,
+                        fused: fused[l],
+                        w,
+                        b: Some(b),
+                    });
+                }
+            }
+            LayerKind::LayerNorm => {
+                let (gamma, tail) = rest.split_at_mut(d_out);
+                let (beta, tail) = tail.split_at_mut(d_out);
+                rest = tail;
+                units.push(RowUnit {
+                    kind: UnitKind::LnGamma {
+                        d: d_out,
+                        dz_off: pl.dz_off,
+                        xhat_off: pl.ext_off,
+                    },
+                    cost: d_out + 1,
+                    fused: fused[l],
+                    w: gamma,
+                    b: None,
+                });
+                units.push(RowUnit {
+                    kind: UnitKind::LnBeta { d: d_out, dz_off: pl.dz_off },
+                    cost: d_out + 1,
+                    fused: fused[l],
+                    w: beta,
+                    b: None,
+                });
+            }
+            LayerKind::Attention { t, d_model, d_head } => {
+                let tdh = t * d_head;
+                // q/k/v projections: rows read the input tokens and the
+                // matching dz-extras column.
+                for grp in 0..3 {
+                    let (w_region, tail) = rest.split_at_mut(d_head * d_model);
+                    let (b_region, tail) = tail.split_at_mut(d_head);
+                    rest = tail;
+                    let g_base = pl.dz_ext_off + grp * tdh;
+                    for ((j, w), b) in
+                        w_region.chunks_mut(d_model).enumerate().zip(b_region.iter_mut())
+                    {
+                        units.push(RowUnit {
+                            kind: UnitKind::TokenRow {
+                                t,
+                                width: d_model,
+                                a,
+                                g_off: g_base + j,
+                                g_stride: d_head,
+                            },
+                            cost: t * d_model + 1,
+                            fused: fused[l],
+                            w,
+                            b: Some(b),
+                        });
+                    }
+                }
+                // Wo: rows read the taped context and the dout column.
+                let ctx_off = pl.ext_off + 3 * tdh + t * t;
+                let (w_region, tail) = rest.split_at_mut(d_model * d_head);
+                let (b_region, tail) = tail.split_at_mut(d_model);
+                rest = tail;
+                for ((j, w), b) in
+                    w_region.chunks_mut(d_head).enumerate().zip(b_region.iter_mut())
+                {
+                    units.push(RowUnit {
+                        kind: UnitKind::TokenRow {
+                            t,
+                            width: d_head,
+                            a: ASrc::Tape(ctx_off),
+                            g_off: pl.dz_off + j,
+                            g_stride: d_model,
+                        },
+                        cost: t * d_head + 1,
+                        fused: fused[l],
+                        w,
+                        b: Some(b),
+                    });
+                }
+            }
         }
     }
     units
 }
 
-/// Accum phase 2: `acc_row += scale_i * dz_i[row] * a_i` for every row
+/// Fold one example's (unscaled) contribution row into the accumulator:
+/// fused adds `sc * contrib` in place; materialized writes the scaled
+/// row first (the Opacus-style memory traffic) and then adds the
+/// bit-identical addends — same bits either way, by construction.
+#[inline]
+fn fold_row(w: &mut [f32], contrib: &[f32], sc: f32, fused: bool, m_row: &mut [f32]) {
+    if fused {
+        axpy(w, contrib, sc);
+    } else {
+        let m = &mut m_row[..contrib.len()];
+        for (mv, &cv) in m.iter_mut().zip(contrib) {
+            *mv = sc * cv;
+        }
+        for (wv, &mv) in w.iter_mut().zip(m.iter()) {
+            *wv += mv;
+        }
+    }
+}
+
+/// Accum phase 2: fold every live example's contribution into each row
 /// unit of one partition, scanning examples in batch order. Parallelism
-/// partitions *rows* (accumulator coordinates), never examples, so
+/// partitions *units* (accumulator coordinates), never examples, so
 /// every coordinate sees the exact addition chain of a sequential
 /// per-example run — for any thread count and any physical chunking of
 /// the same example stream (Algorithm-2 padding neutrality stays
-/// bitwise-exact). Fused units fold with `axpy`; materialized units
-/// write the example's scaled gradient row first (the Opacus-style
-/// memory traffic) and then add the bit-identical addends.
+/// bitwise-exact). Units with a position sum (conv channels, attention
+/// projection rows) compute the canonical contribution once, into
+/// `contrib`, so the fused and materialized branches add the same bits.
 fn accum_update(
     ctx: AccumCtx<'_>,
     units: &mut [RowUnit<'_>],
@@ -650,10 +1279,11 @@ fn accum_update(
     let dzs = ctx.plan.dz_stride;
     let m_len = units
         .iter()
-        .map(|u| if u.fused { 0 } else { u.d_in })
+        .map(|u| if u.fused { 0 } else { u.w.len() })
         .max()
         .unwrap_or(0);
     let mut m_row = vec![0.0f32; m_len];
+    let mut contrib = vec![0.0f32; ctx.plan.max_unit_width];
     for (i, &sc) in scale.iter().enumerate() {
         if sc == 0.0 {
             continue;
@@ -661,24 +1291,86 @@ fn accum_update(
         let xi = &ctx.x[i * d..(i + 1) * d];
         let tape_w = &tape[i * ts..(i + 1) * ts];
         let dz_w = &dz[i * dzs..(i + 1) * dzs];
+        let resolve = |a: ASrc, len: usize| -> &[f32] {
+            match a {
+                ASrc::Batch => xi,
+                ASrc::Tape(off) => &tape_w[off..off + len],
+            }
+        };
         for u in units.iter_mut() {
-            let a_in: &[f32] = match u.in_tape {
-                None => xi,
-                Some(off) => &tape_w[off..off + u.d_in],
-            };
-            let g = sc * dz_w[u.dz_idx];
-            if u.fused {
-                axpy(u.w, a_in, g);
-            } else {
-                let m = &mut m_row[..u.d_in];
-                for (mv, &av) in m.iter_mut().zip(a_in) {
-                    *mv = g * av;
+            match u.kind {
+                UnitKind::Dense { d_in, a, dz_idx } => {
+                    let a_in = resolve(a, d_in);
+                    let g = sc * dz_w[dz_idx];
+                    fold_row(u.w, a_in, g, u.fused, &mut m_row);
+                    if let Some(b) = u.b.as_deref_mut() {
+                        *b += g;
+                    }
                 }
-                for (wv, &mv) in u.w.iter_mut().zip(m.iter()) {
-                    *wv += mv;
+                UnitKind::ConvChannel { geo, a, dz_off, channel } => {
+                    let (kp, hw) = (geo.kh * geo.kw, geo.h_in * geo.w_in);
+                    let a_in = resolve(a, geo.c_in * hw);
+                    let c = &mut contrib[..geo.patch()];
+                    c.fill(0.0);
+                    let mut gb = 0.0f32;
+                    for oy in 0..geo.ho {
+                        for ox in 0..geo.wo {
+                            let g = dz_w[dz_off + channel * geo.t() + oy * geo.wo + ox];
+                            gb += g;
+                            for cc in 0..geo.c_in {
+                                for ky in 0..geo.kh {
+                                    let iy = oy * geo.stride + ky;
+                                    if iy < geo.pad || iy - geo.pad >= geo.h_in {
+                                        continue;
+                                    }
+                                    let iy = iy - geo.pad;
+                                    for kx in 0..geo.kw {
+                                        let ix = ox * geo.stride + kx;
+                                        if ix < geo.pad || ix - geo.pad >= geo.w_in {
+                                            continue;
+                                        }
+                                        let ix = ix - geo.pad;
+                                        c[cc * kp + ky * geo.kw + kx] +=
+                                            g * a_in[cc * hw + iy * geo.w_in + ix];
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    fold_row(u.w, c, sc, u.fused, &mut m_row);
+                    if let Some(b) = u.b.as_deref_mut() {
+                        *b += sc * gb;
+                    }
+                }
+                UnitKind::TokenRow { t, width, a, g_off, g_stride } => {
+                    let a_rows = resolve(a, t * width);
+                    let c = &mut contrib[..width];
+                    c.fill(0.0);
+                    let mut gb = 0.0f32;
+                    for s in 0..t {
+                        let g = dz_w[g_off + s * g_stride];
+                        gb += g;
+                        axpy(c, &a_rows[s * width..(s + 1) * width], g);
+                    }
+                    fold_row(u.w, c, sc, u.fused, &mut m_row);
+                    if let Some(b) = u.b.as_deref_mut() {
+                        *b += sc * gb;
+                    }
+                }
+                UnitKind::LnGamma { d, dz_off, xhat_off } => {
+                    let dout = &dz_w[dz_off..dz_off + d];
+                    let xhat = &tape_w[xhat_off..xhat_off + d];
+                    let c = &mut contrib[..d];
+                    for (cv, (&dv, &xv)) in c.iter_mut().zip(dout.iter().zip(xhat)) {
+                        *cv = dv * xv;
+                    }
+                    fold_row(u.w, c, sc, u.fused, &mut m_row);
+                }
+                UnitKind::LnBeta { d, dz_off } => {
+                    let dout = &dz_w[dz_off..dz_off + d];
+                    fold_row(u.w, dout, sc, u.fused, &mut m_row);
                 }
             }
-            *u.b += g;
         }
     }
 }
@@ -745,11 +1437,33 @@ impl Backend for ReferenceBackend {
         }
         let mut rng = ChaChaRng::from_seed_stream(self.init_seed, 0, b"refinit\0");
         let mut v = Vec::with_capacity(meta.n_params);
-        for spec in &specs {
-            for _ in 0..spec.d_in * spec.d_out {
+        // One weight block = `rows * cols` scaled normals followed by
+        // `rows` zero biases, drawn in flat-layout order from the single
+        // b"refinit\0" stream (the dense draw order is the seed's).
+        let mut block = |v: &mut Vec<f32>, rng: &mut ChaChaRng, rows: usize, cols: usize| {
+            for _ in 0..rows * cols {
                 v.push((0.05 * rng.next_normal()) as f32);
             }
-            v.resize(v.len() + spec.d_out, 0.0);
+            v.resize(v.len() + rows, 0.0);
+        };
+        for spec in &specs {
+            match spec.kind {
+                LayerKind::Dense => block(&mut v, &mut rng, spec.d_out, spec.d_in),
+                LayerKind::Conv2d { c_in, c_out, kh, kw, .. } => {
+                    block(&mut v, &mut rng, c_out, c_in * kh * kw);
+                }
+                LayerKind::LayerNorm => {
+                    // gamma = 1, beta = 0: the identity normalizer.
+                    v.resize(v.len() + spec.d_out, 1.0);
+                    v.resize(v.len() + spec.d_out, 0.0);
+                }
+                LayerKind::Attention { d_model, d_head, .. } => {
+                    block(&mut v, &mut rng, d_head, d_model); // Wq | bq
+                    block(&mut v, &mut rng, d_head, d_model); // Wk | bk
+                    block(&mut v, &mut rng, d_head, d_model); // Wv | bv
+                    block(&mut v, &mut rng, d_model, d_head); // Wo | bo
+                }
+            }
         }
         Ok(Tensor::from_vec(v))
     }
@@ -833,21 +1547,23 @@ impl Backend for ReferenceBackend {
         let (ts, dzs) = (plan.tape_stride, plan.dz_stride);
         let mut sq_norms = vec![0.0f32; b];
 
+        // Worker count is resolved before the arena checkout so the
+        // phase-1 backward scratch (`bwd`) can be sized per worker.
+        let work = b * plan.macs_per_example();
+        let nthreads = self.workers(work, b);
         let mut pooled = PooledScratch::take(&self.scratch);
-        let (dz, tape, scale, losses) = pooled.get().accum(b, plan);
+        let (dz, tape, scale, losses, bwd) = pooled.get().accum(b, nthreads, plan);
 
         // Phase 1: per-example forward tape + backward dz / losses /
         // norms / scales, parallel over fixed contiguous example
         // partitions. Partitions are cut first (handles the
         // tape_stride = 0 single-layer case cleanly), then each runs on
-        // its own scoped thread.
-        let work = b * plan.macs_per_example();
-        let nthreads = self.workers(work, b);
+        // its own scoped thread with a private backward-scratch slice
+        // (scratch holds transient per-example intermediates only, so
+        // it moves no bits across partitions).
         if nthreads > 1 {
             let per = b.div_ceil(nthreads);
-            type Part<'p> =
-                (usize, &'p mut [f32], &'p mut [f32], &'p mut [f32], &'p mut [f32], &'p mut [f32]);
-            let mut parts: Vec<Part<'_>> = Vec::with_capacity(nthreads);
+            let mut parts: Vec<AccumPart<'_>> = Vec::with_capacity(nthreads);
             {
                 // Explicit reborrows: the partition cursors consume the
                 // reborrow, not the bindings (which the single-thread
@@ -857,6 +1573,7 @@ impl Backend for ReferenceBackend {
                 let mut scale_rest: &mut [f32] = &mut scale[..];
                 let mut losses_rest: &mut [f32] = &mut losses[..];
                 let mut sq_rest: &mut [f32] = &mut sq_norms[..];
+                let mut bwd_rest: &mut [f32] = &mut bwd[..];
                 let mut start = 0usize;
                 while start < b {
                     let count = per.min(b - start);
@@ -870,17 +1587,40 @@ impl Backend for ReferenceBackend {
                     losses_rest = r;
                     let (sq_c, r) = sq_rest.split_at_mut(count);
                     sq_rest = r;
-                    parts.push((start, dz_c, tp_c, sc_c, ls_c, sq_c));
+                    let (bw_c, r) = bwd_rest.split_at_mut(plan.bwd_scratch);
+                    bwd_rest = r;
+                    parts.push(AccumPart {
+                        start,
+                        dz: dz_c,
+                        tape: tp_c,
+                        scale: sc_c,
+                        losses: ls_c,
+                        sq_norms: sq_c,
+                        scratch: bw_c,
+                    });
                     start += count;
                 }
             }
             std::thread::scope(|sc| {
-                for (s0, dz_c, tp_c, sc_c, ls_c, sq_c) in parts {
-                    sc.spawn(move || accum_examples(ctx, s0, dz_c, tp_c, sc_c, ls_c, sq_c));
+                for part in parts {
+                    sc.spawn(move || accum_examples(ctx, part));
                 }
             });
         } else {
-            accum_examples(ctx, 0, dz, tape, scale, losses, &mut sq_norms);
+            // Explicit reborrows again: the struct field moves would
+            // otherwise consume the bindings the fold and phase 2 use.
+            accum_examples(
+                ctx,
+                AccumPart {
+                    start: 0,
+                    dz: &mut dz[..],
+                    tape: &mut tape[..],
+                    scale: &mut scale[..],
+                    losses: &mut losses[..],
+                    sq_norms: &mut sq_norms,
+                    scratch: &mut bwd[..],
+                },
+            );
         }
 
         // Masked loss sum in example order (the sequential association).
@@ -891,19 +1631,21 @@ impl Backend for ReferenceBackend {
 
         // Phase 2: the in-place accumulator update, parallel over fixed
         // row-unit partitions (examples always scanned in order). A
-        // unit's cost is ~its weight-row width, and widths differ by an
-        // order of magnitude across layers (768 vs 32 on mlp-small), so
-        // partitions are cut by *cumulative cost*, not unit count —
-        // equal-count chunks would hand one thread nearly all the work.
-        // Cuts stay contiguous and every unit still scans examples in
-        // order, so the partitioning moves wall-clock only, never bits.
+        // unit's cost is ~its per-example inner-loop work, and costs
+        // differ by an order of magnitude across layers (768 vs 32 on
+        // mlp-small; conv channels and attention rows carry a position
+        // sum on top), so partitions are cut by *cumulative cost*, not
+        // unit count — equal-count chunks would hand one thread nearly
+        // all the work. Cuts stay contiguous and every unit still scans
+        // examples in order, so the partitioning moves wall-clock only,
+        // never bits.
         let dz: &[f32] = dz;
         let tape: &[f32] = tape;
         let scale: &[f32] = scale;
         let mut units = build_row_units(plan, fused, acc.as_mut_slice());
         let t2 = self.workers(work, units.len());
         if t2 > 1 {
-            let total: usize = units.iter().map(|u| u.d_in + 1).sum();
+            let total: usize = units.iter().map(|u| u.cost).sum();
             let target = total.div_ceil(t2);
             std::thread::scope(|sc| {
                 let mut rest: &mut [RowUnit<'_>] = &mut units[..];
@@ -911,7 +1653,7 @@ impl Backend for ReferenceBackend {
                     let mut cut = 0usize;
                     let mut cost = 0usize;
                     while cut < rest.len() && (cut == 0 || cost < target) {
-                        cost += rest[cut].d_in + 1;
+                        cost += rest[cut].cost;
                         cut += 1;
                     }
                     let (chunk, tail) = rest.split_at_mut(cut);
@@ -991,27 +1733,22 @@ impl Backend for ReferenceBackend {
         let d = plan.input_dim;
         let ncls = plan.num_classes;
         let p = params.as_slice();
-        // Ping-pong activation buffers over the layered forward.
+        // Ping-pong activation buffers over the layered forward. `ext`
+        // is throwaway room for forward-only intermediates (layernorm
+        // xhat/rstd, attention q/k/v/probs/ctx): eval reuses the exact
+        // accum forward kernel so accum loss == eval loss bitwise.
         let mut cur = vec![0.0f32; plan.max_width];
         let mut nxt = vec![0.0f32; plan.max_width];
+        let mut ext = vec![0.0f32; plan.eval_scratch];
         let mut loss_sum = 0.0f32;
         let mut ncorrect = 0.0f32;
         for (i, &yi) in y.iter().enumerate() {
             let xi = &x[i * d..(i + 1) * d];
             for (l, pl) in plan.layers.iter().enumerate() {
                 let (d_in, d_out) = (pl.spec.d_in, pl.spec.d_out);
-                let w = &p[pl.w_off..pl.w_off + d_in * d_out];
-                let bias = &p[pl.b_off..pl.b_off + d_out];
                 let a_in: &[f32] = if l == 0 { xi } else { &cur[..d_in] };
                 let out = &mut nxt[..d_out];
-                dense_forward(out, w, bias, a_in);
-                if pl.spec.activation == Activation::Relu {
-                    for v in out.iter_mut() {
-                        if *v < 0.0 {
-                            *v = 0.0;
-                        }
-                    }
-                }
+                layer_forward(pl, p, a_in, out, &mut ext[..tape_extras(&pl.spec)]);
                 std::mem::swap(&mut cur, &mut nxt);
             }
             let lg = &cur[..ncls];
@@ -1045,6 +1782,16 @@ mod tests {
         ReferenceBackend::manifest(0).models["mlp-small"].clone()
     }
 
+    fn model_meta(name: &str) -> ModelMeta {
+        ReferenceBackend::manifest(0).models[name].clone()
+    }
+
+    /// One model per layer-kind shape: the seed single-dense, the MLP,
+    /// the conv stack, and the attention+layernorm stack.
+    fn kind_ladder() -> Vec<ModelMeta> {
+        ["ref-linear", "mlp-small", "cnn-small", "attn-tiny"].into_iter().map(model_meta).collect()
+    }
+
     fn prepare_accum(
         b: &ReferenceBackend,
         meta: &ModelMeta,
@@ -1066,8 +1813,9 @@ mod tests {
     #[test]
     fn manifest_is_complete() {
         let m = ReferenceBackend::manifest(0);
-        // The whole CPU ladder is lowered, not just the seed model.
-        for name in ["ref-linear", "mlp-small", "mlp-wide"] {
+        // The whole CPU ladder is lowered, not just the seed model —
+        // including the non-dense rungs.
+        for name in ["ref-linear", "mlp-small", "mlp-wide", "cnn-small", "attn-tiny"] {
             let meta = m.model(name).unwrap();
             assert!(meta.find_apply().is_some(), "{name}");
             assert_eq!(meta.find_eval().and_then(|e| e.batch), Some(32), "{name}");
@@ -1091,7 +1839,7 @@ mod tests {
 
     #[test]
     fn init_params_deterministic_and_nondegenerate() {
-        for meta in [setup().1, mlp_meta()] {
+        for meta in kind_ladder() {
             let b = ReferenceBackend::new(0);
             let p1 = b.init_params(Path::new("."), &meta).unwrap();
             let p2 = b.init_params(Path::new("."), &meta).unwrap();
@@ -1101,19 +1849,29 @@ mod tests {
             assert!(nonzero > meta.n_params / 2);
             let other = ReferenceBackend::new(1).init_params(Path::new("."), &meta).unwrap();
             assert_ne!(p1, other);
-            // Biases land zeroed at every layer's b_off block.
+            // The bias block at each layer's b_off lands zeroed — its
+            // length is kind-shaped (dense d_out, conv c_out, layernorm
+            // beta, attention bq) — and layernorm gamma lands all-ones.
             let plan = LayerPlan::build(&meta).unwrap();
             for pl in &plan.layers {
-                assert!(p1.as_slice()[pl.b_off..pl.b_off + pl.spec.d_out]
-                    .iter()
-                    .all(|v| *v == 0.0));
+                let b_len = match pl.spec.kind {
+                    LayerKind::Dense | LayerKind::LayerNorm => pl.spec.d_out,
+                    LayerKind::Conv2d { c_out, .. } => c_out,
+                    LayerKind::Attention { d_head, .. } => d_head,
+                };
+                assert!(p1.as_slice()[pl.b_off..pl.b_off + b_len].iter().all(|v| *v == 0.0));
+                if pl.spec.kind == LayerKind::LayerNorm {
+                    assert!(p1.as_slice()[pl.w_off..pl.w_off + pl.spec.d_out]
+                        .iter()
+                        .all(|v| *v == 1.0));
+                }
             }
         }
     }
 
     #[test]
     fn masked_examples_contribute_nothing() {
-        for meta in [setup().1, mlp_meta()] {
+        for meta in kind_ladder() {
             let b = ReferenceBackend::new(0);
             let params = b.init_params(Path::new("."), &meta).unwrap();
             let acc = Tensor::zeros(meta.n_params);
@@ -1162,7 +1920,7 @@ mod tests {
 
     #[test]
     fn clipped_accumulator_norm_bounded_by_batch_times_clip() {
-        for meta in [setup().1, mlp_meta()] {
+        for meta in kind_ladder() {
             let b = ReferenceBackend::new(0);
             let prep = prepare_accum(&b, &meta, "masked", 8);
             let params = b.init_params(Path::new("."), &meta).unwrap();
@@ -1207,7 +1965,7 @@ mod tests {
         // norms *and* accumulator — on every model. The generated-stack
         // proptest lives in rust/tests/layered_models.rs; this is the
         // fast in-module spot check.
-        for meta in [setup().1, mlp_meta()] {
+        for meta in kind_ladder() {
             let b = ReferenceBackend::new(0);
             let params = b.init_params(Path::new("."), &meta).unwrap();
             let acc = Tensor::zeros(meta.n_params);
@@ -1229,24 +1987,65 @@ mod tests {
 
     #[test]
     fn multi_layer_gradient_reaches_every_layer() {
-        // The backward pass must put gradient mass in every layer's
-        // weight and bias block (ReLU nets with Gaussian init and data
-        // cannot have an all-dead hidden layer at width 64/32).
-        let b = ReferenceBackend::new(0);
-        let meta = mlp_meta();
-        let plan = LayerPlan::build(&meta).unwrap();
-        let prep = prepare_accum(&b, &meta, "masked", 8);
-        let params = b.init_params(Path::new("."), &meta).unwrap();
-        let acc = Tensor::zeros(meta.n_params);
-        let (x, y) = batch_of(&meta, 8);
-        let out = b
-            .run_accum(&prep, &meta, &params, &acc, &AccumArgs { x: &x, y: &y, mask: &[1.0; 8] })
-            .unwrap();
-        for (l, pl) in plan.layers.iter().enumerate() {
-            let w = &out.acc.as_slice()[pl.w_off..pl.w_off + pl.spec.d_in * pl.spec.d_out];
-            let bias = &out.acc.as_slice()[pl.b_off..pl.b_off + pl.spec.d_out];
-            assert!(w.iter().any(|v| *v != 0.0), "layer {l}: no weight gradient");
-            assert!(bias.iter().any(|v| *v != 0.0), "layer {l}: no bias gradient");
+        // The backward pass must put gradient mass in every parameter
+        // block of every layer — per kind: dense/conv weight + bias,
+        // layernorm gamma + beta, and all eight attention sub-blocks
+        // (Wq/bq/Wk/bk/Wv/bv/Wo/bo). Catches a dropped phase-2 unit or
+        // a dz-extras slot phase 2 never folds.
+        for meta in [mlp_meta(), model_meta("cnn-small"), model_meta("attn-tiny")] {
+            let b = ReferenceBackend::new(0);
+            let plan = LayerPlan::build(&meta).unwrap();
+            let prep = prepare_accum(&b, &meta, "masked", 8);
+            let params = b.init_params(Path::new("."), &meta).unwrap();
+            let acc = Tensor::zeros(meta.n_params);
+            let (x, y) = batch_of(&meta, 8);
+            let out = b
+                .run_accum(
+                    &prep,
+                    &meta,
+                    &params,
+                    &acc,
+                    &AccumArgs { x: &x, y: &y, mask: &[1.0; 8] },
+                )
+                .unwrap();
+            let g = out.acc.as_slice();
+            for (l, pl) in plan.layers.iter().enumerate() {
+                // (label, offset, len) per parameter sub-block.
+                let blocks: Vec<(&str, usize, usize)> = match pl.spec.kind {
+                    LayerKind::Dense => vec![
+                        ("W", pl.w_off, pl.spec.d_in * pl.spec.d_out),
+                        ("b", pl.b_off, pl.spec.d_out),
+                    ],
+                    LayerKind::Conv2d { c_in, c_out, kh, kw, .. } => vec![
+                        ("K", pl.w_off, c_out * c_in * kh * kw),
+                        ("b", pl.b_off, c_out),
+                    ],
+                    LayerKind::LayerNorm => vec![
+                        ("gamma", pl.w_off, pl.spec.d_out),
+                        ("beta", pl.b_off, pl.spec.d_out),
+                    ],
+                    LayerKind::Attention { d_model, d_head, .. } => {
+                        let (wlen, step) = (d_head * d_model, d_head * d_model + d_head);
+                        vec![
+                            ("Wq", pl.w_off, wlen),
+                            ("bq", pl.w_off + wlen, d_head),
+                            ("Wk", pl.w_off + step, wlen),
+                            ("bk", pl.w_off + step + wlen, d_head),
+                            ("Wv", pl.w_off + 2 * step, wlen),
+                            ("bv", pl.w_off + 2 * step + wlen, d_head),
+                            ("Wo", pl.w_off + 3 * step, d_model * d_head),
+                            ("bo", pl.w_off + 3 * step + d_model * d_head, d_model),
+                        ]
+                    }
+                };
+                for (label, off, len) in blocks {
+                    assert!(
+                        g[off..off + len].iter().any(|v| *v != 0.0),
+                        "{}: layer {l} block {label} got no gradient",
+                        meta.init_params
+                    );
+                }
+            }
         }
     }
 
@@ -1255,7 +2054,7 @@ mod tests {
         // The accum head and the eval forward share their arithmetic:
         // with an all-ones mask the masked loss sum must equal the eval
         // loss sum bit for bit, on every model.
-        for meta in [setup().1, mlp_meta()] {
+        for meta in kind_ladder() {
             let b = ReferenceBackend::new(0);
             let params = b.init_params(Path::new("."), &meta).unwrap();
             let acc = Tensor::zeros(meta.n_params);
@@ -1304,8 +2103,8 @@ mod tests {
         // The determinism contract: outputs are a pure function of the
         // inputs, not of the parallelism. Exercise a batch above the
         // threading gate with every thread count 1..=4, on both the
-        // single-layer and the multi-layer model.
-        for meta in [setup().1, mlp_meta()] {
+        // single-layer model and every multi-layer kind.
+        for meta in kind_ladder() {
             let (x, y) = batch_of(&meta, 32);
             let mut mask = vec![1.0f32; 32];
             mask[7] = 0.0;
@@ -1414,7 +2213,7 @@ mod tests {
 
     #[test]
     fn eval_counts_and_losses_are_sane() {
-        for meta in [setup().1, mlp_meta()] {
+        for meta in kind_ladder() {
             let b = ReferenceBackend::new(0);
             let eval_meta = meta.find_eval().unwrap().clone();
             let prep = b.prepare(Path::new("."), &meta, &eval_meta).unwrap();

@@ -31,6 +31,7 @@ use dp_shortcuts::analysis::{
 };
 use dp_shortcuts::clipping::{LayerChoice, CLI_CLIP_METHODS};
 use dp_shortcuts::coordinator::trainer::resolve_sigma;
+use dp_shortcuts::models::LayerKind;
 use dp_shortcuts::runtime::{hlo_analysis, REFERENCE_MODEL};
 use dp_shortcuts::{
     audit_run, AccountantKind, Runtime, SamplerChoice, TrainConfig, TrainSession, Trainer,
@@ -118,6 +119,17 @@ fn deny_fixtures() -> Vec<(&'static str, RunPlan)> {
     // A no-materialization variant materializing [B, P] grads.
     let mut p = test_plan(3);
     p.choices = vec![LayerChoice::PerExample; 3];
+    out.push((rule::MATERIALIZED_PER_EXAMPLE, p));
+
+    // The kind-aware form: a ghost-contract variant materializing ONE
+    // conv layer's per-example weight-gradient block (the shape the
+    // mix dispatcher legitimately picks under `variant = "mix"`, but
+    // a contract violation under "ghost").
+    let mut p = test_plan(3);
+    p.variant = "ghost".into();
+    p.layer_kinds[0] =
+        LayerKind::Conv2d { c_in: 3, h_in: 8, w_in: 8, c_out: 4, kh: 3, kw: 3, stride: 1, pad: 1 };
+    p.choices[0] = LayerChoice::PerExample;
     out.push((rule::MATERIALIZED_PER_EXAMPLE, p));
 
     // A declared (epsilon, delta) budget smaller than what the
@@ -236,6 +248,58 @@ fn a_schedule_dependent_reduce_node_is_caught_on_the_graph() {
     let report = audit_plan_graph(&plan, &g);
     report.validate().unwrap();
     assert_eq!(report.deny_rules(), vec![rule::REDUCE_SCHEDULE]);
+}
+
+#[test]
+fn cutting_one_attention_gram_group_from_the_global_norm_is_caught() {
+    // An attention layer folds four Gram products (Wq/Wk/Wv/Wo) into
+    // the global norm. Drop ONE group's edge into NormTotal: the
+    // layer-level taint cover stays complete (the other three groups
+    // still insert the layer), so only the structural completeness
+    // check can see that the clip norm under-counts this layer.
+    let mut plan = test_plan(3);
+    plan.layer_kinds[1] = LayerKind::Attention { t: 4, d_model: 12, d_head: 6 };
+    let clean = Graph::lower(&plan);
+    assert!(audit_plan_graph(&plan, &clean).is_clean());
+
+    let mut g = clean;
+    let groups: Vec<usize> = (0..g.nodes.len())
+        .filter(|&i| matches!(g.nodes[i], NodeKind::GramNorm { layer: 1, .. }))
+        .collect();
+    assert_eq!(groups.len(), 4, "attention must lower one Gram node per parameter group");
+    let total = g.nodes.iter().position(|k| matches!(k, NodeKind::NormTotal)).unwrap();
+    let cut = groups[2];
+    let before = g.edges.len();
+    g.edges.retain(|&(f, t)| !(f == cut && t == total));
+    assert_eq!(g.edges.len(), before - 1, "exactly one edge removed");
+
+    let report = audit_plan_graph(&plan, &g);
+    report.validate().unwrap();
+    assert_eq!(report.deny_rules(), vec![rule::CLIP_PER_LAYER]);
+    let diag = report
+        .diagnostics
+        .iter()
+        .find(|d| d.rule == rule::CLIP_PER_LAYER)
+        .unwrap();
+    assert_eq!(diag.location, "layer[1].gram[2]", "{}", diag.message);
+    assert!(diag.message.contains("attention"), "{}", diag.message);
+}
+
+#[test]
+fn the_materialization_diagnostic_names_the_layer_kind() {
+    let mut plan = test_plan(2);
+    plan.variant = "ghost".into();
+    plan.layer_kinds[0] =
+        LayerKind::Conv2d { c_in: 3, h_in: 8, w_in: 8, c_out: 4, kh: 3, kw: 3, stride: 1, pad: 1 };
+    plan.choices[0] = LayerChoice::PerExample;
+    let report = audit_plan(&plan);
+    report.validate().unwrap();
+    let diag = report
+        .diagnostics
+        .iter()
+        .find(|d| d.rule == rule::MATERIALIZED_PER_EXAMPLE)
+        .unwrap();
+    assert!(diag.message.contains("conv2d"), "{}", diag.message);
 }
 
 #[test]
