@@ -57,6 +57,8 @@ pub mod rule {
     pub const DTYPE_UNKNOWN: &str = "dtype.unknown";
     /// Configured steps would spend more epsilon than the declared budget.
     pub const BUDGET_OVERSPEND: &str = "budget.overspend";
+    /// Reference kernels would run on an ISA outside the bitwise-verified set.
+    pub const KERNEL_UNVERIFIED_ISA: &str = "kernel.unverified-isa";
 }
 
 /// How severe a diagnostic is. Ordered most-severe-first so sorting a
@@ -186,6 +188,11 @@ pub const RULES: &[RuleInfo] = &[
         id: rule::BUDGET_OVERSPEND,
         severity: Severity::Deny,
         summary: "the configured steps would spend more epsilon than the declared (epsilon, delta) budget under the chosen accountant",
+    },
+    RuleInfo {
+        id: rule::KERNEL_UNVERIFIED_ISA,
+        severity: Severity::Warn,
+        summary: "reference kernels target an ISA outside the set whose lane/tree semantics are proven bitwise-equal to scalar (scalar/avx2/neon)",
     },
 ];
 

@@ -157,6 +157,12 @@ pub struct RunPlan {
     pub rng_counter_bits: u32,
     /// Distinct executable dtypes the manifest declares for this model.
     pub dtypes: Vec<String>,
+    /// The instruction-set the reference kernels will execute with
+    /// ("scalar" | "avx2" | "neon" after auto-detection), as reported
+    /// by `runtime::kernels::detected_isa`. Wall-clock only under the
+    /// fixed-tree contract, but the audit warns when the ISA is not in
+    /// the bitwise-verified set (`kernel.unverified-isa`).
+    pub kernel_isa: String,
     /// Declared privacy budget, when the run promises one.
     pub budget: Option<BudgetSpec>,
 }
@@ -248,6 +254,7 @@ impl RunPlan {
             sigma,
             rng_counter_bits: 64,
             dtypes,
+            kernel_isa: crate::runtime::kernels::detected_isa(config.kernel == "scalar").into(),
             budget: config
                 .declared_epsilon
                 .map(|epsilon| BudgetSpec { epsilon, delta: config.delta }),
@@ -288,6 +295,7 @@ pub fn test_plan(k: usize) -> RunPlan {
         sigma,
         rng_counter_bits: 64,
         dtypes: vec!["f32".into()],
+        kernel_isa: "scalar".into(),
         budget: None,
     }
 }

@@ -28,6 +28,7 @@ pub fn audit_plan_graph(plan: &RunPlan, g: &Graph) -> AuditReport {
     check_topology(plan, g, &mut d);
     check_materialization(plan, g, &mut d);
     check_dtypes(plan, &mut d);
+    check_kernel(plan, &mut d);
     let mut report = AuditReport {
         schema_version: AUDIT_SCHEMA_VERSION,
         model: plan.model.clone(),
@@ -411,6 +412,28 @@ fn check_dtypes(plan: &RunPlan, d: &mut Vec<Diagnostic>) {
     }
 }
 
+/// Satellite: the reference kernels' ISA must be one whose lane/tree
+/// semantics are pinned bitwise-equal to scalar by the kernel test
+/// battery (`runtime::kernels::VERIFIED_ISAS`). The kernel choice is a
+/// wall-clock knob, so an unknown ISA is Warn, not Deny — but bits on
+/// such a host carry no cross-ISA reproducibility claim until the
+/// battery covers it.
+fn check_kernel(plan: &RunPlan, d: &mut Vec<Diagnostic>) {
+    use crate::runtime::kernels::VERIFIED_ISAS;
+    if !VERIFIED_ISAS.contains(&plan.kernel_isa.as_str()) {
+        d.push(Diagnostic::new(
+            rule::KERNEL_UNVERIFIED_ISA,
+            "plan.kernel",
+            format!(
+                "reference kernels would execute with ISA {:?}, which is outside the \
+                 bitwise-verified set {VERIFIED_ISAS:?}; run with --kernel scalar (or extend \
+                 the kernel battery) to keep the cross-host determinism claim",
+                plan.kernel_isa
+            ),
+        ));
+    }
+}
+
 /// Audit an HLO-text dump against the structural rules: unknown dtypes
 /// plus the `[B, P]` per-example-materialization tensor under a variant
 /// whose contract forbids it.
@@ -495,6 +518,24 @@ mod tests {
 
         // No declared budget: spend is never judged.
         assert!(audit_plan(&test_plan(3)).is_clean());
+    }
+
+    #[test]
+    fn unverified_kernel_isa_warns_but_never_denies() {
+        let mut plan = test_plan(2);
+        plan.kernel_isa = "avx512".into();
+        let report = audit_plan(&plan);
+        report.validate().unwrap();
+        assert!(report.is_clean(), "wall-clock knob: Warn, not Deny");
+        assert_eq!(report.counts().1, 1, "diags: {:?}", report.diagnostics);
+        assert_eq!(report.diagnostics[0].rule, rule::KERNEL_UNVERIFIED_ISA);
+
+        // Every battery-pinned ISA stays silent.
+        for isa in crate::runtime::kernels::VERIFIED_ISAS {
+            let mut plan = test_plan(2);
+            plan.kernel_isa = (*isa).into();
+            assert_eq!(audit_plan(&plan).counts(), (0, 0, 0), "{isa}");
+        }
     }
 
     #[test]

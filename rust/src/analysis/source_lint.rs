@@ -17,6 +17,9 @@
 //!   through the fixed-order helpers.
 //! * `lint.clippy-allow` — new clippy attribute escape hatches
 //!   anywhere (replaces the old CI grep for `too_many_arguments`).
+//! * `lint.unsafe-code` — compiler-unchecked blocks and `core::arch`
+//!   intrinsics anywhere outside `runtime/kernels/`, the one sanctioned
+//!   home whose SIMD paths the bitwise battery pins against scalar.
 //!
 //! False positives are suppressed either by an inline `lint:allow`
 //! marker on the offending line or by an entry in the checked-in
@@ -58,6 +61,7 @@ pub struct LintRule {
 pub const KERNEL_PATHS: &[&str] = &[
     "runtime/reference.rs",
     "runtime/layers.rs",
+    "runtime/kernels",
     "cluster/parallel.rs",
 ];
 
@@ -73,6 +77,9 @@ const P_RANDOM_STATE: &str = concat!("Random", "State");
 const P_SUM_F32: &str = concat!("sum::<", "f32>()");
 const P_FOLD_F32: &str = concat!("fold(0.0", "f32");
 const P_CLIPPY_ALLOW: &str = concat!("#[allow(", "clippy::");
+const P_UNSAFE: &str = concat!("uns", "afe ");
+const P_UNSAFE_BLOCK: &str = concat!("uns", "afe {");
+const P_CORE_ARCH: &str = concat!("core::", "arch");
 const ALLOW_MARKER: &str = concat!("lint:", "allow");
 
 /// The shipped lint rules.
@@ -100,6 +107,13 @@ pub const LINT_RULES: &[LintRule] = &[
         patterns: &[P_CLIPPY_ALLOW],
         scope: Scope::Everywhere,
         why: "clippy escape hatches are banned; fix the lint or add a justified allowlist entry",
+    },
+    LintRule {
+        id: "lint.unsafe-code",
+        patterns: &[P_UNSAFE, P_UNSAFE_BLOCK, P_CORE_ARCH],
+        scope: Scope::EverywhereExcept("runtime/kernels"),
+        why: "compiler-unchecked code and arch intrinsics live only in runtime/kernels, \
+              where the bitwise battery pins every SIMD path against scalar",
     },
 ];
 
@@ -305,6 +319,30 @@ mod tests {
         let rep2 = lint_source(&d, &[]).unwrap();
         assert_eq!(rep2.findings.len(), 1);
         assert_eq!(rep2.findings[0].line, 2);
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn compiler_unchecked_code_is_confined_to_the_kernels_home() {
+        let d = tmpdir("kernels-home");
+        // Inside runtime/kernels/: intrinsics are the point; no finding.
+        write(
+            &d,
+            "runtime/kernels/mod.rs",
+            &format!("use {P_CORE_ARCH}::x86_64::_mm256_add_ps;\nlet v = {P_UNSAFE_BLOCK} f() }};\n"),
+        );
+        // Anywhere else: both the block form and the fn form are flagged.
+        write(
+            &d,
+            "runtime/reference.rs",
+            &format!("let v = {P_UNSAFE_BLOCK} f() }};\npub {P_UNSAFE}fn g() {{}}\n"),
+        );
+        let rep = lint_source(&d, &[]).unwrap();
+        assert_eq!(rep.findings.len(), 2, "findings: {:?}", rep.findings);
+        assert!(rep
+            .findings
+            .iter()
+            .all(|f| f.rule == "lint.unsafe-code" && f.path == "runtime/reference.rs"));
         let _ = fs::remove_dir_all(&d);
     }
 

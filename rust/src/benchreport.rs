@@ -56,15 +56,24 @@
 //! p50/p95/p99 latency, plus the `serve_tenants` run-config echo the
 //! validator holds every row's `tenant_names` to.
 //!
+//! Schema v5 adds the kernel / param-dtype bench axes: accum and apply
+//! rows carry `kernel` ("scalar" | "simd") and `param_dtype` ("f32" |
+//! "bf16") tags referencing the run-config echoes (`kernels` /
+//! `param_dtypes`), so one file holds the scalar-vs-SIMD and
+//! f32-vs-bf16 measured comparisons side by side (DESIGN.md §14). Both
+//! axes are wall-clock-only for the kernel (bitwise-identical results
+//! by construction) and trajectory-changing for the dtype (bf16
+//! storage, f32 compute).
+//!
 //! Version 1 (no `workers`), version 2 (worker curve without
-//! `clip_method` keys), and version 3 (no `serve` rows) files remain
-//! valid.
+//! `clip_method` keys), version 3 (no `serve` rows), and version 4 (no
+//! kernel/dtype axes) files remain valid.
 
 use crate::coordinator::batcher::BatchingMode;
 use crate::coordinator::config::TrainConfig;
 use crate::coordinator::trainer::{SectionTimes, TrainSession, Trainer};
 use crate::metrics::summary_with_ci;
-use crate::runtime::Runtime;
+use crate::runtime::{Kernel, Runtime};
 use crate::serve::{admit, run_serve, BudgetLedger, JobSpec, JobsFile, ServeOptions};
 use anyhow::{anyhow, Context, Result};
 use serde::{Deserialize, Serialize};
@@ -77,9 +86,11 @@ use std::time::Instant;
 /// run config (`models` / `clip_methods`) so `--check` can reject rows
 /// naming unknown keys; v4 adds the multi-tenant `serve` load-sweep
 /// rows keyed by `(tenants, max_concurrent)` and their `serve_tenants`
-/// echo. [`BenchReport::validate`] still accepts v1/v2/v3 files (which
-/// predate the fields).
-pub const SCHEMA_VERSION: u32 = 4;
+/// echo; v5 adds the kernel / param-dtype axes — accum/apply rows may
+/// carry `kernel` and `param_dtype` tags referencing the `kernels` /
+/// `param_dtypes` run-config echoes. [`BenchReport::validate`] still
+/// accepts v1/v2/v3/v4 files (which predate the fields).
+pub const SCHEMA_VERSION: u32 = 5;
 
 /// Oldest schema version [`BenchReport::validate`] accepts.
 pub const MIN_SCHEMA_VERSION: u32 = 1;
@@ -115,6 +126,16 @@ pub struct BenchEntry {
     pub n: usize,
     /// Total timed seconds this entry consumed.
     pub secs_total: f64,
+    /// Kernel axis of this row (schema v5): "scalar" | "simd", one of
+    /// the report's `kernels` echo. Empty in pre-v5 files (and in v5
+    /// files whose run had no kernel axis, e.g. PJRT sweeps).
+    #[serde(default, skip_serializing_if = "String::is_empty")]
+    pub kernel: String,
+    /// Parameter-storage dtype axis of this row (schema v5): "f32" |
+    /// "bf16", one of the report's `param_dtypes` echo. Empty in pre-v5
+    /// files and axis-less v5 runs.
+    #[serde(default, skip_serializing_if = "String::is_empty")]
+    pub param_dtype: String,
 }
 
 /// One point of the measured data-parallel scaling curve (schema v2):
@@ -196,6 +217,16 @@ pub struct BenchReport {
     /// scaling sweep. Every worker row's `clip_method` must be one.
     #[serde(default, skip_serializing_if = "Vec::is_empty")]
     pub clip_methods: Vec<String>,
+    /// Run config echo (schema v5): the kernel axes this sweep
+    /// measured ("scalar" / "simd"). Non-empty iff the entries carry
+    /// `kernel` tags.
+    #[serde(default, skip_serializing_if = "Vec::is_empty")]
+    pub kernels: Vec<String>,
+    /// Run config echo (schema v5): the parameter-storage dtypes this
+    /// sweep measured ("f32" / "bf16"). Non-empty iff the entries
+    /// carry `param_dtype` tags.
+    #[serde(default, skip_serializing_if = "Vec::is_empty")]
+    pub param_dtypes: Vec<String>,
     /// Per-section wall-clock of a short masked training run on the
     /// first swept model (the Table-2 analogue for this checkout).
     pub sections: Option<SectionTimes>,
@@ -252,7 +283,9 @@ impl BenchReport {
     /// is rejected instead of passing `--check` silently. v4 files may
     /// carry `serve` load-sweep rows, keyed uniquely by
     /// `(tenants, max_concurrent)` and naming only tenants echoed in
-    /// `serve_tenants`.
+    /// `serve_tenants`. v5 files may carry the kernel / param-dtype
+    /// axes: entry `kernel`/`param_dtype` tags and their `kernels` /
+    /// `param_dtypes` echoes must be present together and agree.
     pub fn validate(&self) -> Result<()> {
         if self.schema_version < MIN_SCHEMA_VERSION || self.schema_version > SCHEMA_VERSION {
             return Err(anyhow!(
@@ -285,6 +318,22 @@ impl BenchReport {
             return Err(anyhow!(
                 "pre-v4 reports cannot carry `serve` rows or the `serve_tenants` echo"
             ));
+        }
+        let v5 = self.schema_version >= 5;
+        if !v5 && (!self.kernels.is_empty() || !self.param_dtypes.is_empty()) {
+            return Err(anyhow!(
+                "pre-v5 reports cannot carry `kernels`/`param_dtypes` config echoes"
+            ));
+        }
+        for k in &self.kernels {
+            if k != "scalar" && k != "simd" {
+                return Err(anyhow!("kernels echo names unknown axis {k:?}"));
+            }
+        }
+        for d in &self.param_dtypes {
+            if d != "f32" && d != "bf16" {
+                return Err(anyhow!("param_dtypes echo names unknown dtype {d:?}"));
+            }
         }
         if !self.serve.is_empty() && self.serve_tenants.is_empty() {
             return Err(anyhow!("serve rows need the `serve_tenants` run-config echo"));
@@ -429,17 +478,56 @@ impl BenchReport {
             if self.schema_version >= 3 && !self.models.contains(&e.model) {
                 return Err(ctx("entry names a model absent from the run config"));
             }
+            if !v5 && (!e.kernel.is_empty() || !e.param_dtype.is_empty()) {
+                return Err(ctx("pre-v5 entries cannot carry kernel/param_dtype tags"));
+            }
+            if self.kernels.is_empty() != e.kernel.is_empty() {
+                return Err(ctx("entry kernel tags and the `kernels` echo must appear together"));
+            }
+            if !e.kernel.is_empty() && !self.kernels.contains(&e.kernel) {
+                return Err(ctx("entry names a kernel absent from the run config"));
+            }
+            if self.param_dtypes.is_empty() != e.param_dtype.is_empty() {
+                return Err(ctx(
+                    "entry param_dtype tags and the `param_dtypes` echo must appear together",
+                ));
+            }
+            if !e.param_dtype.is_empty() && !self.param_dtypes.contains(&e.param_dtype) {
+                return Err(ctx("entry names a param_dtype absent from the run config"));
+            }
         }
         Ok(())
     }
 
-    /// The accum entry for (model, variant, batch), if swept.
+    /// The accum entry for (model, variant, batch), if swept. With a
+    /// v5 multi-axis sweep this returns the first combo's row; use
+    /// [`Self::accum_entry_axis`] to pin a (kernel, dtype) point.
     pub fn accum_entry(&self, model: &str, variant: &str, batch: usize) -> Option<&BenchEntry> {
         self.entries.iter().find(|e| {
             e.kind == "accum"
                 && e.model == model
                 && e.variant.as_deref() == Some(variant)
                 && e.batch == Some(batch)
+        })
+    }
+
+    /// The accum entry at one (kernel, param_dtype) axis point (schema
+    /// v5), if swept.
+    pub fn accum_entry_axis(
+        &self,
+        model: &str,
+        variant: &str,
+        batch: usize,
+        kernel: &str,
+        param_dtype: &str,
+    ) -> Option<&BenchEntry> {
+        self.entries.iter().find(|e| {
+            e.kind == "accum"
+                && e.model == model
+                && e.variant.as_deref() == Some(variant)
+                && e.batch == Some(batch)
+                && e.kernel == kernel
+                && e.param_dtype == param_dtype
         })
     }
 }
@@ -468,12 +556,23 @@ pub struct SweepOptions {
     /// [`crate::clipping::CLI_CLIP_METHODS`]); the curve gets one row
     /// per (model, clip method, worker count).
     pub clip_methods: Vec<String>,
+    /// Kernel axis (`bench --kernels`): selections out of
+    /// "scalar" | "simd" | "auto", one accum/apply series per resolved
+    /// axis. Reference backend only; empty means `["auto"]`.
+    pub kernels: Vec<String>,
+    /// Parameter-storage dtype axis (`bench --param-dtypes`):
+    /// selections out of "f32" | "bf16", one accum/apply series each.
+    /// Reference backend only; empty means `["f32"]`.
+    pub param_dtypes: Vec<String>,
+    /// Worker-thread count for the per-kernel reference runtimes the
+    /// axis sweep rebuilds (`0` = auto; the `--threads` knob).
+    pub threads: usize,
 }
 
 impl SweepOptions {
     /// Defaults: full ladder at 30 repeats, or the quick smoke subset
     /// at 5; data-parallel scaling measured at 1/2/4 workers under
-    /// per-example and ghost clipping.
+    /// per-example and ghost clipping; auto kernel, f32 storage.
     pub fn new(quick: bool) -> Self {
         Self {
             model: None,
@@ -485,6 +584,9 @@ impl SweepOptions {
             with_sections: true,
             worker_counts: vec![1, 2, 4],
             clip_methods: vec!["per-example".into(), "ghost".into()],
+            kernels: vec!["auto".into()],
+            param_dtypes: vec!["f32".into()],
+            threads: 0,
         }
     }
 }
@@ -519,59 +621,145 @@ pub fn run_sweep(rt: &Runtime, opts: &SweepOptions) -> Result<BenchReport> {
             rt.manifest().models.keys().collect::<Vec<_>>()
         ));
     }
+    // Resolve the schema-v5 kernel / param-dtype axes up front.
+    let kernel_names: Vec<String> = if opts.kernels.is_empty() {
+        vec!["auto".into()]
+    } else {
+        opts.kernels.clone()
+    };
+    let mut kernel_axes: Vec<(String, Kernel)> = Vec::new();
+    for name in &kernel_names {
+        let k = Kernel::parse(name).ok_or_else(|| {
+            anyhow!("--kernels names unknown kernel {name:?} (scalar | simd | auto)")
+        })?;
+        // Dedup by *resolved* axis: on a host without SIMD support,
+        // "simd"/"auto" fall back to scalar and would duplicate rows.
+        if !kernel_axes.iter().any(|(a, _)| a == k.axis()) {
+            kernel_axes.push((k.axis().to_string(), k));
+        }
+    }
+    let requested_dtypes: Vec<String> = if opts.param_dtypes.is_empty() {
+        vec!["f32".into()]
+    } else {
+        opts.param_dtypes.clone()
+    };
+    let mut dtypes: Vec<String> = Vec::new();
+    for d in &requested_dtypes {
+        if d != "f32" && d != "bf16" {
+            return Err(anyhow!("--param-dtypes names unknown dtype {d:?} (f32 | bf16)"));
+        }
+        if !dtypes.contains(d) {
+            dtypes.push(d.clone());
+        }
+    }
+    // The kernel is a reference-backend construction knob; PJRT owns
+    // its own kernels, so the axes only apply there with the defaults.
+    let reference = rt.backend_name() == "reference";
+    if !reference && (kernel_names != ["auto"] || dtypes != ["f32"]) {
+        return Err(anyhow!(
+            "--kernels/--param-dtypes axes apply to the reference backend only"
+        ));
+    }
+
     let mut entries = Vec::new();
     let mut sections = None;
-    for model in &models {
-        let meta = rt.manifest().model(model)?.clone();
-        for variant in meta.variants() {
-            if let Some(want) = &opts.variant {
-                if *want != variant {
-                    continue;
+    let mut worker_rows: Vec<WorkerEntry> = Vec::new();
+    let mut first_combo = true;
+    for (axis, kern) in &kernel_axes {
+        // Rebuild the reference runtime per kernel axis (same manifest
+        // seed, so the same models and the same init bits — the kernel
+        // moves wall-clock only).
+        let owned;
+        let krt: &Runtime = if reference {
+            owned = Runtime::reference_with_options(rt.manifest().seed, opts.threads, *kern);
+            &owned
+        } else {
+            rt
+        };
+        for dtype in &dtypes {
+            let bf16 = dtype == "bf16";
+            // Rows are tagged (and the echoes emitted) only when the
+            // reference backend executes the axes; PJRT sweeps stay
+            // axis-less.
+            let (ktag, dtag) = if reference {
+                (axis.as_str(), dtype.as_str())
+            } else {
+                ("", "")
+            };
+            for model in &models {
+                let meta = krt.manifest().model(model)?.clone();
+                for variant in meta.variants() {
+                    if let Some(want) = &opts.variant {
+                        if *want != variant {
+                            continue;
+                        }
+                    } else if variant == "naive" {
+                        // "naive" shares the masked accum kernel and only
+                        // differs in Variable-mode chunking; skip unless
+                        // asked.
+                        continue;
+                    }
+                    let mut batches = meta.accum_batches(&variant, dtype);
+                    if let Some(want) = opts.batch {
+                        batches.retain(|b| *b == want);
+                    } else if opts.quick {
+                        let full = batches.clone();
+                        batches.retain(|b| QUICK_BATCHES.contains(b));
+                        if batches.is_empty() {
+                            // Ladder without the canonical rungs: keep the
+                            // largest.
+                            batches = full.last().copied().into_iter().collect();
+                        }
+                    }
+                    for b in batches {
+                        let cfg = TrainConfig {
+                            model: model.clone(),
+                            variant: variant.clone(),
+                            physical_batch: b,
+                            seed: opts.seed,
+                            bf16,
+                            kernel: axis.clone(),
+                            ..Default::default()
+                        };
+                        let trainer = Trainer::new(krt, cfg)?;
+                        let samples = trainer.bench_accum(&variant, b, opts.repeats)?;
+                        entries.push(entry_from(
+                            "accum",
+                            model,
+                            Some(variant.clone()),
+                            Some(b),
+                            opts,
+                            &samples,
+                            (ktag, dtag),
+                        ));
+                    }
                 }
-            } else if variant == "naive" {
-                // "naive" shares the masked accum kernel and only
-                // differs in Variable-mode chunking; skip unless asked.
-                continue;
-            }
-            let mut batches = meta.accum_batches(&variant, "f32");
-            if let Some(want) = opts.batch {
-                batches.retain(|b| *b == want);
-            } else if opts.quick {
-                let full = batches.clone();
-                batches.retain(|b| QUICK_BATCHES.contains(b));
-                if batches.is_empty() {
-                    // Ladder without the canonical rungs: keep the largest.
-                    batches = full.last().copied().into_iter().collect();
-                }
-            }
-            for b in batches {
                 let cfg = TrainConfig {
                     model: model.clone(),
-                    variant: variant.clone(),
-                    physical_batch: b,
                     seed: opts.seed,
+                    bf16,
+                    kernel: axis.clone(),
                     ..Default::default()
                 };
-                let trainer = Trainer::new(rt, cfg)?;
-                let samples = trainer.bench_accum(&variant, b, opts.repeats)?;
-                entries.push(entry_from(
-                    "accum",
-                    model,
-                    Some(variant.clone()),
-                    Some(b),
-                    opts.repeats,
-                    opts.seed,
-                    &samples,
-                ));
-            }
-        }
-        let cfg = TrainConfig { model: model.clone(), seed: opts.seed, ..Default::default() };
-        let trainer = Trainer::new(rt, cfg)?;
-        let samples = trainer.bench_apply(opts.repeats)?;
-        entries.push(entry_from("apply", model, None, None, opts.repeats, opts.seed, &samples));
+                let trainer = Trainer::new(krt, cfg)?;
+                let samples = trainer.bench_apply(opts.repeats)?;
+                entries.push(entry_from("apply", model, None, None, opts, &samples, (ktag, dtag)));
 
-        if opts.with_sections && sections.is_none() {
-            sections = Some(train_sections(rt, model, opts)?);
+                if first_combo && opts.with_sections && sections.is_none() {
+                    sections = Some(train_sections(krt, model, opts)?);
+                }
+            }
+            // The worker scaling curve (and the sections run) measure a
+            // single point of the axis grid — the first combo — so axis
+            // sweeps do not multiply the slowest rows.
+            if first_combo {
+                for model in &models {
+                    for method in &opts.clip_methods {
+                        worker_rows.extend(worker_scaling(krt, model, method, opts)?);
+                    }
+                }
+            }
+            first_combo = false;
         }
     }
     // An explicit filter that matched nothing is an error, not a report
@@ -593,18 +781,10 @@ pub fn run_sweep(rt: &Runtime, opts: &SweepOptions) -> Result<BenchReport> {
     let workers = if opts.worker_counts.is_empty() {
         None
     } else {
-        // One scaling series per (model, clip method) — the schema-v3
-        // `(model, clip_method, workers)` row key.
-        let mut curve = Vec::new();
-        for model in &models {
-            for method in &opts.clip_methods {
-                curve.extend(worker_scaling(rt, model, method, opts)?);
-            }
-        }
         // An unmeasurable curve (no fixed-shape variants lowered,
         // degenerate clock) omits the field rather than emitting an
         // invalid empty list.
-        (!curve.is_empty()).then_some(curve)
+        (!worker_rows.is_empty()).then_some(worker_rows)
     };
     let report = BenchReport {
         schema_version: SCHEMA_VERSION,
@@ -613,6 +793,12 @@ pub fn run_sweep(rt: &Runtime, opts: &SweepOptions) -> Result<BenchReport> {
         quick: opts.quick,
         models,
         clip_methods: opts.clip_methods.clone(),
+        kernels: if reference {
+            kernel_axes.iter().map(|(a, _)| a.clone()).collect()
+        } else {
+            Vec::new()
+        },
+        param_dtypes: if reference { dtypes } else { Vec::new() },
         sections,
         entries,
         workers,
@@ -759,6 +945,8 @@ pub fn run_serve_sweep(rt: &Runtime, opts: &ServeSweepOptions) -> Result<BenchRe
         quick: false,
         models,
         clip_methods,
+        kernels: Vec::new(),
+        param_dtypes: Vec::new(),
         sections: None,
         entries: Vec::new(),
         workers: None,
@@ -842,16 +1030,18 @@ fn worker_scaling(
     Ok(out)
 }
 
+/// `axes` is the `(kernel, param_dtype)` tag pair — `("", "")` on
+/// axis-less (PJRT) sweeps.
 fn entry_from(
     kind: &str,
     model: &str,
     variant: Option<String>,
     batch: Option<usize>,
-    repeats: usize,
-    seed: u64,
+    opts: &SweepOptions,
     samples: &[f64],
+    axes: (&str, &str),
 ) -> BenchEntry {
-    let s = summary_with_ci(samples, seed);
+    let s = summary_with_ci(samples, opts.seed);
     // Samples are rates; invert (scaled by the per-call example count)
     // to recover the timed seconds.
     let per_call = batch.unwrap_or(1) as f64;
@@ -862,12 +1052,14 @@ fn entry_from(
         unit: if kind == "accum" { "examples_per_sec" } else { "calls_per_sec" }.to_string(),
         variant,
         batch,
-        repeats,
+        repeats: opts.repeats,
         median: s.median,
         ci_low: s.ci_low,
         ci_high: s.ci_high,
         n: s.n,
         secs_total,
+        kernel: axes.0.to_string(),
+        param_dtype: axes.1.to_string(),
     }
 }
 
@@ -919,6 +1111,17 @@ mod tests {
         opts.batch = Some(16);
         opts.worker_counts = vec![1, 2];
         run_sweep(&rt, &opts).unwrap()
+    }
+
+    /// Downgrade a v5 report to the pre-v5 shape: no kernel/dtype
+    /// echoes, no entry tags.
+    fn strip_axes(report: &mut BenchReport) {
+        report.kernels.clear();
+        report.param_dtypes.clear();
+        for e in &mut report.entries {
+            e.kernel.clear();
+            e.param_dtype.clear();
+        }
     }
 
     #[test]
@@ -976,6 +1179,7 @@ mod tests {
         report.workers = None;
         report.models = Vec::new();
         report.clip_methods = Vec::new();
+        strip_axes(&mut report);
         report.validate().unwrap();
         let text = report.to_json().unwrap();
         assert!(!text.contains("\"workers\""), "v1 serialization must omit the field");
@@ -987,6 +1191,7 @@ mod tests {
         bad.schema_version = 1;
         bad.models = Vec::new();
         bad.clip_methods = Vec::new();
+        strip_axes(&mut bad);
         assert!(bad.workers.is_some());
         assert!(bad.validate().is_err());
     }
@@ -999,6 +1204,7 @@ mod tests {
         report.schema_version = 2;
         report.models = Vec::new();
         report.clip_methods = Vec::new();
+        strip_axes(&mut report);
         let rows = report.workers.as_mut().unwrap();
         // v2 had one series; keep one model's per-example rows.
         rows.retain(|w| w.model == "ref-linear" && w.clip_method == "per-example");
@@ -1053,6 +1259,98 @@ mod tests {
         let mut report = quick_report();
         report.models = Vec::new();
         assert!(report.validate().is_err());
+    }
+
+    #[test]
+    fn v5_entries_carry_kernel_and_param_dtype_axes() {
+        let report = quick_report();
+        assert_eq!(report.schema_version, 5);
+        // The default sweep resolves "auto" to the detected axis.
+        assert_eq!(report.kernels, vec![Kernel::auto().axis().to_string()]);
+        assert_eq!(report.param_dtypes, vec!["f32".to_string()]);
+        for e in &report.entries {
+            assert_eq!(e.kernel, report.kernels[0], "{}/{:?}", e.model, e.variant);
+            assert_eq!(e.param_dtype, "f32");
+        }
+        // The tags survive the JSON roundtrip.
+        let text = report.to_json().unwrap();
+        let parsed = BenchReport::from_json(&text).unwrap();
+        parsed.validate().unwrap();
+        assert_eq!(parsed.entries[0].kernel, report.entries[0].kernel);
+    }
+
+    #[test]
+    fn kernel_axis_sweep_measures_every_requested_combo() {
+        let rt = Runtime::reference();
+        let mut opts = SweepOptions::new(true);
+        opts.repeats = 2;
+        opts.with_sections = false;
+        opts.worker_counts = Vec::new();
+        opts.model = Some("ref-linear".into());
+        opts.variant = Some("masked".into());
+        opts.batch = Some(16);
+        opts.kernels = vec!["scalar".into(), "simd".into()];
+        opts.param_dtypes = vec!["f32".into(), "bf16".into()];
+        let report = run_sweep(&rt, &opts).unwrap();
+        report.validate().unwrap();
+        assert_eq!(report.param_dtypes, vec!["f32".to_string(), "bf16".to_string()]);
+        // Hosts without SIMD support dedup the kernel axis to scalar
+        // alone; SIMD-capable hosts measure both.
+        assert!(report.kernels.contains(&"scalar".to_string()));
+        for kernel in &report.kernels {
+            for dtype in ["f32", "bf16"] {
+                let e = report
+                    .accum_entry_axis("ref-linear", "masked", 16, kernel, dtype)
+                    .unwrap_or_else(|| panic!("missing {kernel}/{dtype} row"));
+                assert!(e.median > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn v5_rejects_axis_tag_and_echo_mismatches() {
+        // Pre-v5 files cannot carry the axes.
+        let mut report = quick_report();
+        report.schema_version = 4;
+        assert!(report.validate().is_err());
+        // An entry tag naming a kernel the run config never echoed.
+        let mut report = quick_report();
+        let other = if report.kernels[0] == "simd" { "scalar" } else { "simd" };
+        report.entries[0].kernel = other.into();
+        assert!(report.validate().is_err());
+        // ...or a dtype it never echoed.
+        let mut report = quick_report();
+        report.entries[0].param_dtype = "bf16".into();
+        assert!(report.validate().is_err());
+        // Tag and echo must appear together.
+        let mut report = quick_report();
+        report.entries[0].kernel.clear();
+        assert!(report.validate().is_err());
+        let mut report = quick_report();
+        report.entries[0].param_dtype.clear();
+        assert!(report.validate().is_err());
+        // The echoes only admit the known axis names.
+        let mut report = quick_report();
+        report.kernels.push("avx512".into());
+        assert!(report.validate().is_err());
+        let mut report = quick_report();
+        report.param_dtypes.push("fp8".into());
+        assert!(report.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_kernel_and_dtype_axes_are_rejected_before_the_sweep() {
+        let rt = Runtime::reference();
+        let mut opts = SweepOptions::new(true);
+        opts.repeats = 2;
+        opts.with_sections = false;
+        opts.kernels = vec!["avx512".into()];
+        assert!(run_sweep(&rt, &opts).is_err());
+        let mut opts = SweepOptions::new(true);
+        opts.repeats = 2;
+        opts.with_sections = false;
+        opts.param_dtypes = vec!["fp8".into()];
+        assert!(run_sweep(&rt, &opts).is_err());
     }
 
     #[test]

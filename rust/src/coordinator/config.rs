@@ -66,8 +66,17 @@ pub struct TrainConfig {
     /// accumulate strategy — wall-clock and memory traffic only
     /// (DESIGN.md §9).
     pub variant: String,
-    /// Use the bf16 ("TF32-substitute") accum executables if present.
+    /// Use the bf16 param-storage executables (`--param-dtype bf16`):
+    /// bf16 storage, f32 compute, round-to-nearest-even on store
+    /// (DESIGN.md §14). Changes the trajectory, so it is part of the
+    /// checkpoint fingerprint (through the dtype tag).
     pub bf16: bool,
+    /// Reference-kernel selection (`--kernel scalar|simd|auto`). The
+    /// scalar and SIMD paths share the fixed 8-lane reduction tree, so
+    /// this is a wall-clock knob only — bits never change (DESIGN.md
+    /// §14) — and it is excluded from the checkpoint fingerprint like
+    /// `workers`.
+    pub kernel: String,
     /// Dataset size N.
     pub dataset_size: u32,
     /// Poisson sampling rate q (expected logical batch = q * N).
@@ -135,6 +144,7 @@ impl Default for TrainConfig {
             model: "vit-micro".into(),
             variant: "masked".into(),
             bf16: false,
+            kernel: "auto".into(),
             dataset_size: 2048,
             sampling_rate: 0.5,
             physical_batch: 16,
@@ -186,6 +196,8 @@ mod tests {
         assert!(!c.allow_unsound);
         assert_eq!(c.retry, RetryPolicy::default());
         assert!(!c.retry.fresh_draw_on_retry, "sound retries by default");
+        assert_eq!(c.kernel, "auto");
+        assert!(!c.bf16, "f32 param storage by default");
     }
 
     #[test]

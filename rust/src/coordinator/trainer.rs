@@ -379,14 +379,22 @@ fn dtype_of(config: &TrainConfig) -> &'static str {
 /// `v6` extends the layer IR to non-dense kinds (conv2d / layernorm /
 /// attention, DESIGN.md §13) — the flat parameter layout of a model
 /// name can now contain kind-shaped blocks a `v5` build never laid
-/// out, so cross-generation resumes must fail the fingerprint check.
+/// out, so cross-generation resumes must fail the fingerprint check;
+/// `v7` makes `--param-dtype bf16` an *executed* storage mode — the
+/// bf16 apply executable re-quantizes parameter storage after every
+/// update and the session quantizes the initial parameters, so a `v6`
+/// bf16 checkpoint (whose params were full-precision f32 under the
+/// same dtype tag) would continue a different trajectory and must not
+/// resume. The kernel selection (`--kernel`) is excluded like
+/// `workers`: scalar and SIMD paths are bitwise-identical by
+/// construction (DESIGN.md §14).
 ///
 /// Public so the `--resume-latest` scanner and the audit tooling can
 /// compute the fingerprint a config will demand without opening a
 /// session.
 pub fn config_fingerprint(config: &TrainConfig, sigma: f64) -> String {
     format!(
-        "v6|{}|{}|{:?}|{}|N={}|q={:?}|B={}|lr={:?}|C={:?}|sigma={:?}|seed={}|sampler={}",
+        "v7|{}|{}|{:?}|{}|N={}|q={:?}|B={}|lr={:?}|C={:?}|sigma={:?}|seed={}|sampler={}",
         config.model,
         config.variant,
         config.mode,
@@ -519,7 +527,7 @@ impl<'rt> Trainer<'rt> {
     /// exercised (`noise_mult = 1`) and `lr = 0` so the parameters stay
     /// put across repeats. Returns calls/second per call.
     pub fn bench_apply(&self, repeats: usize) -> Result<Vec<f64>> {
-        let prep = self.model.prepare_apply()?;
+        let prep = self.model.prepare_apply_dtype(self.dtype())?;
         let mut sess = self.model.open_session(self.model.init_params()?)?;
         let mut samples = Vec::with_capacity(repeats);
         for r in 0..repeats {
@@ -712,7 +720,10 @@ impl<'rt> TrainSession<'rt> {
                 model.prepare_accum(&config.variant, config.physical_batch, dtype_of(&config))?;
             sections.compile += prep.compile_seconds.unwrap_or(0.0);
         }
-        let apply_prep = model.prepare_apply()?;
+        // The apply executable is dtype-selected: the bf16 variant
+        // re-quantizes parameter storage after the f32 update
+        // (`--param-dtype bf16`, DESIGN.md §14).
+        let apply_prep = model.prepare_apply_dtype(dtype_of(&config))?;
         sections.compile += apply_prep.compile_seconds.unwrap_or(0.0);
 
         let mut accountant = StreamingAccountant::new(RdpAccountant::default());
@@ -779,6 +790,14 @@ impl<'rt> TrainSession<'rt> {
                 (ckpt.step, ckpt.steps, Tensor::from_vec(ckpt.params), ckpt.unaudited)
             }
         };
+        // bf16 storage mode: parameters live quantized from step 0.
+        // A bf16 checkpoint's params are already quantized (the apply
+        // executable re-quantizes every step), so this is a no-op on
+        // resume — quantization is idempotent.
+        let mut params = params;
+        if config.bf16 {
+            params.quantize_bf16();
+        }
         // The sessions own params + accumulator from here on (the
         // donate_argnums analogue). Rank 0 is the apply/eval/checkpoint
         // session; ranks 1.. are the data-parallel peers, opened from

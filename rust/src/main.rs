@@ -32,7 +32,7 @@ use dp_shortcuts::coordinator::trainer::{config_fingerprint, resolve_sigma, Trai
 use dp_shortcuts::fault::{self, FaultPlan};
 use dp_shortcuts::privacy::{calibrate_sigma, AccountantKind, RdpAccountant};
 use dp_shortcuts::report;
-use dp_shortcuts::runtime::{hlo_analysis, Runtime};
+use dp_shortcuts::runtime::{hlo_analysis, Kernel, Runtime};
 use dp_shortcuts::serve::{self, BudgetLedger, ServeOptions};
 use dp_shortcuts::util::cli::Args;
 use std::path::{Path, PathBuf};
@@ -42,9 +42,19 @@ const USAGE: &str = "usage: dpshort <list|train|bench|serve|plan|account|scale|r
                 --backend reference|pjrt (default: pjrt if artifacts exist, else reference)
                 --threads N (reference-backend accum workers; 0 = auto;
                              wall-clock only, bits never change)
+                --kernel scalar|simd|auto (reference-backend inner
+                             kernels; scalar and SIMD share the fixed
+                             8-lane reduction tree, so this is
+                             wall-clock only — bits never change;
+                             default auto)
   train/bench:  --model NAME --variant V --batch B --steps N --rate Q
                 --dataset N --lr LR --sigma S --epsilon E --delta D
                 --seed S --bf16 --naive-mode --eval N --json
+                --param-dtype f32|bf16  parameter STORAGE dtype (bf16
+                             stores round-to-nearest-even, compute
+                             stays f32; changes the trajectory, so it
+                             is in the checkpoint fingerprint;
+                             --bf16 is shorthand for bf16)
                 --clip-method per-example|ghost|mix|bk|nonprivate
                              clipping method (resolves to the lowered
                              accum variant; conflicts with --variant;
@@ -86,6 +96,12 @@ const USAGE: &str = "usage: dpshort <list|train|bench|serve|plan|account|scale|r
                                 workers))
                 --clip-methods LIST  clip methods for the scaling sweep
                                 (default per-example,ghost)
+                --kernels LIST  kernel axes for the reference sweep
+                                (scalar,simd; default auto — one axis);
+                                schema v5 rows carry a `kernel` tag
+                --param-dtypes LIST  param-storage dtype axes for the
+                                reference sweep (f32,bf16; default
+                                f32); rows carry a `param_dtype` tag
                 --check FILE  validate an emitted file's schema and exit
                 --serve  synthetic multi-tenant load sweep instead of the
                                 accum/apply sweep -> schema v4 `serve` rows
@@ -169,6 +185,17 @@ fn config_from(args: &Args, rt: &Runtime) -> Result<TrainConfig> {
             .to_string();
     }
     c.bf16 = args.get_bool("bf16");
+    if let Some(d) = args.get("param-dtype") {
+        match d {
+            "f32" => c.bf16 = false,
+            "bf16" => c.bf16 = true,
+            other => return Err(anyhow!("unknown param dtype {other:?} (f32|bf16)")),
+        }
+    }
+    if let Some(k) = args.get("kernel") {
+        Kernel::parse(k).ok_or_else(|| anyhow!("unknown kernel {k:?} (scalar|simd|auto)"))?;
+        c.kernel = k.to_string();
+    }
     c.dataset_size = args.get_parse_or("dataset", c.dataset_size).map_err(|e| anyhow!(e))?;
     c.sampling_rate = args.get_parse_or("rate", c.sampling_rate).map_err(|e| anyhow!(e))?;
     c.physical_batch = args.get_parse_or("batch", c.physical_batch).map_err(|e| anyhow!(e))?;
@@ -201,20 +228,35 @@ fn config_from(args: &Args, rt: &Runtime) -> Result<TrainConfig> {
     Ok(c)
 }
 
-/// Resolve the runtime from `--backend`/`--artifacts`/`--threads` (see
-/// module docs). `--threads` wires `ReferenceBackend::with_threads` —
-/// a wall-clock knob only (bits never change) — and is rejected on the
-/// PJRT path, where worker threading belongs to the PJRT client.
+/// Resolve the runtime from `--backend`/`--artifacts`/`--threads`/
+/// `--kernel` (see module docs). `--threads` wires
+/// `ReferenceBackend::with_threads` and `--kernel` the SIMD-vs-scalar
+/// inner-kernel choice — both wall-clock knobs only (bits never
+/// change) — and both are rejected on the PJRT path, where threading
+/// and kernels belong to the PJRT client.
 fn load_runtime(args: &Args, artifacts: &str) -> Result<Runtime> {
     let threads: usize = args.get_parse_or("threads", 0).map_err(|e| anyhow!(e))?;
+    let kernel = match args.get("kernel") {
+        Some(k) => Some(
+            Kernel::parse(k).ok_or_else(|| anyhow!("unknown kernel {k:?} (scalar|simd|auto)"))?,
+        ),
+        None => None,
+    };
     match args.get("backend") {
-        Some("reference") => Ok(Runtime::reference_with_threads(0, threads)),
+        Some("reference") => Ok(Runtime::reference_with_options(
+            0,
+            threads,
+            kernel.unwrap_or_else(Kernel::auto),
+        )),
         Some("pjrt") if threads > 0 => {
             Err(anyhow!("--threads applies to the reference backend only"))
         }
+        Some("pjrt") if kernel.is_some() => {
+            Err(anyhow!("--kernel applies to the reference backend only"))
+        }
         Some("pjrt") => Runtime::load(artifacts),
         Some(other) => Err(anyhow!("unknown backend {other:?} (reference|pjrt)")),
-        None => Runtime::auto_with_threads(artifacts, threads),
+        None => Runtime::auto_with_options(artifacts, threads, kernel),
     }
 }
 
@@ -423,22 +465,53 @@ fn cmd_bench(rt: &Runtime, args: &Args) -> Result<()> {
         // sweep to that one method (it must not be silently ignored).
         opts.clip_methods = vec![method.to_string()];
     }
+    if let Some(list) = args.get("kernels") {
+        opts.kernels = list.split(',').map(|s| s.trim().to_string()).collect();
+    } else if let Some(k) = args.get("kernel") {
+        // The singular flag restricts the sweep to that one kernel axis
+        // (the runtime handed to us was already built with it, but
+        // run_sweep rebuilds per axis, so it must be named here too).
+        opts.kernels = vec![k.to_string()];
+    }
+    if let Some(list) = args.get("param-dtypes") {
+        opts.param_dtypes = list.split(',').map(|s| s.trim().to_string()).collect();
+    } else if let Some(d) = args.get("param-dtype") {
+        opts.param_dtypes = vec![d.to_string()];
+    } else if args.get_bool("bf16") {
+        opts.param_dtypes = vec!["bf16".to_string()];
+    }
+    opts.threads = args.get_parse_or("threads", 0).map_err(|e| anyhow!(e))?;
     let report = benchreport::run_sweep(rt, &opts)?;
+    // Axis tags ([kernel/dtype]) appear only on reference-backend
+    // schema-v5 rows; PJRT rows stay axis-less.
+    let axis = |kernel: &str, dtype: &str| {
+        if kernel.is_empty() && dtype.is_empty() {
+            String::new()
+        } else {
+            format!(" [{kernel}/{dtype}]")
+        }
+    };
     for e in &report.entries {
         match e.kind.as_str() {
             "accum" => println!(
-                "{} {} B={}: median {:.1} ex/s (95% CI [{:.1}, {:.1}], n={})",
+                "{} {} B={}{}: median {:.1} ex/s (95% CI [{:.1}, {:.1}], n={})",
                 e.model,
                 e.variant.as_deref().unwrap_or("?"),
                 e.batch.unwrap_or(0),
+                axis(&e.kernel, &e.param_dtype),
                 e.median,
                 e.ci_low,
                 e.ci_high,
                 e.n
             ),
             _ => println!(
-                "{} apply: median {:.1} calls/s (95% CI [{:.1}, {:.1}], n={})",
-                e.model, e.median, e.ci_low, e.ci_high, e.n
+                "{} apply{}: median {:.1} calls/s (95% CI [{:.1}, {:.1}], n={})",
+                e.model,
+                axis(&e.kernel, &e.param_dtype),
+                e.median,
+                e.ci_low,
+                e.ci_high,
+                e.n
             ),
         }
     }

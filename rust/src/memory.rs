@@ -58,9 +58,21 @@ impl Default for MemModel {
 
 impl MemModel {
     /// Static (batch-independent) bytes: weights + summed grads + a
-    /// working copy (optimizer/update).
+    /// working copy (optimizer/update), plus the reference kernels'
+    /// cache-block buffers.
     fn static_bytes(&self, arch: &Arch) -> f64 {
-        12.0 * arch.params() as f64 + self.fixed_overhead
+        12.0 * arch.params() as f64 + Self::block_buffer_bytes(arch) + self.fixed_overhead
+    }
+
+    /// Reference-kernel cache-block buffers (DESIGN.md §14): the
+    /// blocked GEMM keeps two f32 panel buffers per worker, sized by
+    /// the widest per-row unit (`d_in + 1`, the bias column included).
+    /// Priced at the worker-pool cap (8, the reference backend's
+    /// auto-thread ceiling) because the scratch pool is allocated up
+    /// front; batch-independent, so it lands in the static term.
+    fn block_buffer_bytes(arch: &Arch) -> f64 {
+        let widest = arch.linears.iter().map(|l| l.d_in + 1).max().unwrap_or(0);
+        2.0 * 4.0 * widest as f64 * 8.0
     }
 
     /// Book-Keeping per-example extra: cached output-grads sum_l T_l * d_out_l.
@@ -211,6 +223,37 @@ mod tests {
                 prev = p;
             }
         }
+    }
+
+    #[test]
+    fn block_buffers_are_priced_and_monotone_in_layer_width() {
+        // The reference kernels' cache-block buffers are static-term
+        // bytes: two f32 panels per worker at the 8-worker pool cap,
+        // sized by the widest per-row unit (d_in + 1).
+        let m = MemModel::default();
+        for a in paper_ladder().iter() {
+            let bb = MemModel::block_buffer_bytes(a);
+            let widest =
+                a.linears.iter().map(|l| l.d_in + 1).max().unwrap_or(0) as f64;
+            assert_eq!(bb, 2.0 * 4.0 * widest * 8.0, "{}", a.name);
+            assert!(bb > 0.0, "{}: block buffers must be priced", a.name);
+            assert!(
+                m.peak_bytes(a, ClippingMethod::Ghost, 1) > bb,
+                "{}: peak must include the buffers",
+                a.name
+            );
+        }
+        // Monotone in the widest layer: a wider model never prices
+        // smaller panel buffers, and the term is batch-independent.
+        let narrow = vit("narrow", 4, 256, 4);
+        let wide = vit("wide", 4, 1024, 4);
+        assert!(
+            MemModel::block_buffer_bytes(&wide) > MemModel::block_buffer_bytes(&narrow)
+        );
+        let at_1 = m.peak_bytes(&wide, ClippingMethod::Ghost, 1);
+        let at_2 = m.peak_bytes(&wide, ClippingMethod::Ghost, 2);
+        let at_3 = m.peak_bytes(&wide, ClippingMethod::Ghost, 3);
+        assert!((at_3 - at_2 - (at_2 - at_1)).abs() < 1.0, "static term leaks into batch");
     }
 
     #[test]

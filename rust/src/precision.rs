@@ -81,6 +81,51 @@ impl Tf32Model {
     }
 }
 
+/// One measured bf16-vs-f32 throughput comparison (schema-v5 tagged
+/// accum rows at the same `(model, variant, batch, kernel)` point).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DtypeRatio {
+    pub model: String,
+    pub variant: String,
+    pub batch: usize,
+    /// Kernel axis both rows were measured on ("scalar" | "simd").
+    pub kernel: String,
+    /// bf16 median over f32 median (> 1 = bf16 storage ran faster).
+    pub ratio: f64,
+}
+
+/// Measured counterpart of [`Tf32Model::throughput_ratio`]: pair every
+/// f32-tagged accum row of a schema-v5 [`BenchReport`] with the
+/// bf16-tagged row at the same `(model, variant, batch, kernel)` point
+/// and report the throughput ratios. Reports without the dtype axis
+/// (pre-v5 files, axis-less runs) yield no pairs.
+pub fn measured_dtype_ratios(report: &crate::benchreport::BenchReport) -> Vec<DtypeRatio> {
+    let mut out = Vec::new();
+    for e in &report.entries {
+        if e.kind != "accum" || e.param_dtype != "f32" || e.median <= 0.0 {
+            continue;
+        }
+        let pair = report.entries.iter().find(|o| {
+            o.kind == "accum"
+                && o.param_dtype == "bf16"
+                && o.model == e.model
+                && o.variant == e.variant
+                && o.batch == e.batch
+                && o.kernel == e.kernel
+        });
+        if let Some(bf) = pair {
+            out.push(DtypeRatio {
+                model: e.model.clone(),
+                variant: e.variant.clone().unwrap_or_default(),
+                batch: e.batch.unwrap_or(0),
+                kernel: e.kernel.clone(),
+                ratio: bf.median / e.median,
+            });
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,5 +177,63 @@ mod tests {
                 assert!(m.throughput_ratio(&a, method) >= 1.0);
             }
         }
+    }
+
+    #[test]
+    fn measured_dtype_ratios_pair_rows_on_the_full_axis_key() {
+        use crate::benchreport::{BenchEntry, BenchReport, SCHEMA_VERSION};
+        let row = |kernel: &str, dtype: &str, median: f64| BenchEntry {
+            kind: "accum".into(),
+            model: "mlp-wide".into(),
+            variant: Some("masked".into()),
+            batch: Some(16),
+            repeats: 3,
+            unit: "examples_per_sec".into(),
+            median,
+            ci_low: median,
+            ci_high: median,
+            n: 3,
+            secs_total: 1.0,
+            kernel: kernel.into(),
+            param_dtype: dtype.into(),
+        };
+        let report = BenchReport {
+            schema_version: SCHEMA_VERSION,
+            backend: "reference".into(),
+            seed: 0,
+            quick: true,
+            models: vec!["mlp-wide".into()],
+            clip_methods: Vec::new(),
+            kernels: vec!["scalar".into(), "simd".into()],
+            param_dtypes: vec!["f32".into(), "bf16".into()],
+            sections: None,
+            entries: vec![
+                row("scalar", "f32", 100.0),
+                row("scalar", "bf16", 90.0),
+                row("simd", "f32", 250.0),
+                row("simd", "bf16", 240.0),
+            ],
+            workers: None,
+            serve_tenants: Vec::new(),
+            serve: Vec::new(),
+        };
+        report.validate().unwrap();
+        let ratios = measured_dtype_ratios(&report);
+        assert_eq!(ratios.len(), 2, "{ratios:?}");
+        // Pairing respects the kernel axis: scalar pairs with scalar.
+        assert_eq!(ratios[0].kernel, "scalar");
+        assert!((ratios[0].ratio - 0.9).abs() < 1e-12);
+        assert_eq!(ratios[1].kernel, "simd");
+        assert!((ratios[1].ratio - 0.96).abs() < 1e-12);
+
+        // An axis-less (PJRT-style) report yields no pairs.
+        let mut bare = report;
+        bare.kernels.clear();
+        bare.param_dtypes.clear();
+        for e in &mut bare.entries {
+            e.kernel.clear();
+            e.param_dtype.clear();
+        }
+        assert!(measured_dtype_ratios(&bare).is_empty());
     }
 }

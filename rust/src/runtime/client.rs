@@ -75,6 +75,19 @@ impl Runtime {
     /// selecting artifacts with `threads > 0` is an error (PJRT owns
     /// its own threading).
     pub fn auto_with_threads(artifacts_dir: impl Into<PathBuf>, threads: usize) -> Result<Self> {
+        Self::auto_with_options(artifacts_dir, threads, None)
+    }
+
+    /// [`Self::auto_with_threads`] plus an explicit reference-kernel
+    /// request (the `dpshort --kernel` knob). `Some` is an error when
+    /// the policy selects artifacts — PJRT owns its own kernels, like
+    /// its own threading; `None` lets the reference backend
+    /// auto-detect.
+    pub fn auto_with_options(
+        artifacts_dir: impl Into<PathBuf>,
+        threads: usize,
+        kernel: Option<super::kernels::Kernel>,
+    ) -> Result<Self> {
         let dir = artifacts_dir.into();
         if cfg!(feature = "pjrt") && dir.join("manifest.json").exists() {
             if threads > 0 {
@@ -83,9 +96,16 @@ impl Runtime {
                      the PJRT backend manages its own threading"
                 ));
             }
+            if kernel.is_some() {
+                return Err(anyhow!(
+                    "a kernel override applies to the reference backend only; \
+                     the PJRT backend owns its own kernels"
+                ));
+            }
             Self::load(dir)
         } else {
-            Ok(Self::reference_with_threads(0, threads))
+            let kernel = kernel.unwrap_or_else(super::kernels::Kernel::auto);
+            Ok(Self::reference_with_options(0, threads, kernel))
         }
     }
 
@@ -103,10 +123,23 @@ impl Runtime {
     /// accum kernels (`0` = auto-detect; the `dpshort --threads` knob).
     /// Thread count is a wall-clock knob only — bits never change.
     pub fn reference_with_threads(seed: u64, threads: usize) -> Self {
+        Self::reference_with_options(seed, threads, super::kernels::Kernel::auto())
+    }
+
+    /// Reference runtime with explicit worker-thread count *and* kernel
+    /// selection (`dpshort --kernel`, bench `--kernels`). Like the
+    /// thread knob, the kernel is a wall-clock knob only: scalar and
+    /// SIMD paths share the fixed 8-lane reduction tree, so bits never
+    /// change (DESIGN.md §14).
+    pub fn reference_with_options(
+        seed: u64,
+        threads: usize,
+        kernel: super::kernels::Kernel,
+    ) -> Self {
         Self::with_backend(
             PathBuf::from("."),
             ReferenceBackend::manifest(seed),
-            Arc::new(ReferenceBackend::with_threads(seed, threads)),
+            Arc::new(ReferenceBackend::with_options(seed, threads, kernel)),
         )
     }
 
@@ -299,6 +332,17 @@ impl ModelRuntime {
             .meta
             .find_apply()
             .ok_or_else(|| anyhow!("no apply artifact for {}", self.name))?;
+        self.backend.prepare(&self.dir, &self.meta, e)
+    }
+
+    /// Compile (or fetch) the apply executable for a parameter-storage
+    /// dtype (`"f32"` selects the plain apply; `"bf16"` selects the
+    /// variant that re-quantizes parameter storage after the f32
+    /// update, the `--param-dtype bf16` path).
+    pub fn prepare_apply_dtype(&self, dtype: &str) -> Result<Prepared> {
+        let e = self.meta.find_apply_dtype(dtype).ok_or_else(|| {
+            anyhow!("no apply artifact for {} with param dtype {dtype}", self.name)
+        })?;
         self.backend.prepare(&self.dir, &self.meta, e)
     }
 

@@ -1,0 +1,773 @@
+//! SIMD + cache-blocked inner kernels under the bitwise determinism
+//! contract (DESIGN.md §14).
+//!
+//! Every hot inner loop of the reference backend — `dot`, `axpy`, the
+//! dense/attention matvecs, and the ghost Gram products — dispatches
+//! through this module. The contract is absolute: **a kernel switch
+//! never moves a single bit.** The scalar path *is* the specification
+//! (the seed's 8-lane fixed-tree reduction), and the vector paths
+//! reproduce it by construction:
+//!
+//! * **Lane-to-vector mapping.** The scalar `dot` keeps 8 independent
+//!   partial sums (`lanes[j] += a[8i+j] * b[8i+j]`) and folds them
+//!   through one fixed tree. An AVX2 256-bit register holds exactly
+//!   those 8 lanes, so `acc = add(acc, mul(a, b))` per 8-element chunk
+//!   performs the identical per-lane operation sequence — one rounding
+//!   for the multiply, one for the add, never an FMA (a fused
+//!   multiply-add skips the intermediate rounding and would change
+//!   bits). NEON maps the same 8 lanes onto two 128-bit registers
+//!   (lanes 0-3 and 4-7). Both extract the lanes and fold them through
+//!   the *same* tree as the scalar path, then add the same
+//!   sequentially-summed remainder tail ([`dot` handles `len % 8`
+//!   through one shared helper, `dot_tail`]).
+//! * **Cache blocking.** The blocked matvec ([`matvec`]) computes four
+//!   output rows per pass so the shared input vector is streamed once
+//!   per block instead of once per row; each row still owns its private
+//!   8-lane accumulator and tree, so its bits are untouched. The
+//!   blocked transpose-matvec ([`matvec_t`]) folds four `axpy` rows per
+//!   pass; per destination element the operation chain
+//!   `((d + g0*w0) + g1*w1) + ...` is exactly the chain four sequential
+//!   `axpy` calls perform, just without re-loading the destination.
+//!   Blocking stays strictly *within* one accumulation unit (one layer
+//!   row, one example), so the per-(layer, row)-in-example-order
+//!   addition chains of the two-phase accumulator — and with them
+//!   thread/chunk/worker invariance — are untouched.
+//! * **Runtime detection.** [`Kernel::auto`] picks the best verified
+//!   instruction set at backend construction (AVX2 on x86-64, NEON on
+//!   aarch64, scalar elsewhere); `--kernel scalar` and the
+//!   `DPSHORT_FORCE_SCALAR` environment knob force the fallback (the
+//!   cross-ISA CI job runs the whole bitwise-equality suite that way).
+//!   The audit rule `kernel.unverified-isa` warns when a run would
+//!   select an instruction set outside [`VERIFIED_ISAS`] — the set the
+//!   scalar-vs-SIMD proptest matrix actually covers.
+//!
+//! This module is the **one sanctioned home for intrinsics and
+//! bounds-unchecked code** in the crate: `dpshort lint --source`
+//! denies the patterns everywhere else (`lint.unsafe-code`).
+
+/// Instruction sets covered by the bitwise-equality test matrix
+/// (`rust/tests/kernel_bitwise.rs` + the unit tests below). A run that
+/// selects anything else trips the `kernel.unverified-isa` audit rule.
+pub const VERIFIED_ISAS: &[&str] = &["scalar", "avx2", "neon"];
+
+/// Resolved kernel selection for one backend instance. Constructed by
+/// [`Kernel::auto`] / [`Kernel::parse`] only, so a SIMD variant exists
+/// only when its instruction set was actually detected at runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// The portable 8-lane fixed-tree scalar path (the specification).
+    Scalar,
+    /// AVX2: all 8 lanes in one 256-bit register, mul-then-add.
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// NEON: lanes 0-3 / 4-7 in two 128-bit registers, mul-then-add.
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+/// `DPSHORT_FORCE_SCALAR` (any value but `0`) pins auto-detection to
+/// the scalar fallback — the cross-ISA CI job uses it to run the
+/// bitwise-equality suite with SIMD disabled.
+fn force_scalar() -> bool {
+    std::env::var_os("DPSHORT_FORCE_SCALAR").is_some_and(|v| v != "0")
+}
+
+#[cfg(target_arch = "x86_64")]
+fn simd_kernel() -> Kernel {
+    if is_x86_feature_detected!("avx2") {
+        Kernel::Avx2
+    } else {
+        Kernel::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn simd_kernel() -> Kernel {
+    // NEON is baseline on aarch64; no runtime probe needed.
+    Kernel::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn simd_kernel() -> Kernel {
+    Kernel::Scalar
+}
+
+impl Kernel {
+    /// Best verified kernel for this machine (scalar when nothing
+    /// better is available or `DPSHORT_FORCE_SCALAR` is set).
+    pub fn auto() -> Kernel {
+        if force_scalar() {
+            Kernel::Scalar
+        } else {
+            simd_kernel()
+        }
+    }
+
+    /// Parse a `--kernel` value: `scalar` forces the fallback, `simd`
+    /// requests the detected vector path (falling back to scalar when
+    /// the machine has none), `auto` is the default policy.
+    pub fn parse(s: &str) -> Option<Kernel> {
+        match s {
+            "scalar" => Some(Kernel::Scalar),
+            "simd" | "auto" => Some(Kernel::auto()),
+            _ => None,
+        }
+    }
+
+    /// The bench-axis label: `"scalar"` or `"simd"`.
+    pub fn axis(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => "simd",
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => "simd",
+        }
+    }
+
+    /// The concrete instruction-set name (`"scalar"`, `"avx2"`,
+    /// `"neon"`) — what the audit rule checks against
+    /// [`VERIFIED_ISAS`].
+    pub fn isa(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => "neon",
+        }
+    }
+}
+
+/// The instruction set [`Kernel::auto`] resolves to on this machine —
+/// what `RunPlan::lower` records for the `kernel.unverified-isa` rule.
+pub fn detected_isa(forced_scalar: bool) -> &'static str {
+    if forced_scalar {
+        Kernel::Scalar.isa()
+    } else {
+        Kernel::auto().isa()
+    }
+}
+
+/// Shared remainder handling for every `dot` path: the trailing
+/// `len % 8` products summed sequentially, in order — scalar, AVX2 and
+/// NEON all call this exact helper so the tail bits cannot diverge.
+#[inline]
+fn dot_tail(at: &[f32], bt: &[f32]) -> f32 {
+    let mut tail = 0.0f32;
+    for (av, bv) in at.iter().zip(bt) {
+        tail += av * bv;
+    }
+    tail
+}
+
+/// The fixed reduction tree over the 8 lanes plus the sequential tail —
+/// the other half of the shared-semantics contract ([`dot_tail`]).
+#[inline]
+fn lane_tree(l: &[f32; 8], tail: f32) -> f32 {
+    (((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))) + tail
+}
+
+/// The specification `dot`: 8 independent lanes over `chunks_exact(8)`,
+/// the fixed tree, the sequential tail. Byte-for-byte the arithmetic of
+/// the pre-SIMD reference kernel.
+#[inline]
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n8 = a.len() - a.len() % 8;
+    let (a8, at) = a.split_at(n8);
+    let (b8, bt) = b.split_at(n8);
+    let mut lanes = [0.0f32; 8];
+    for (ac, bc) in a8.chunks_exact(8).zip(b8.chunks_exact(8)) {
+        for j in 0..8 {
+            lanes[j] += ac[j] * bc[j];
+        }
+    }
+    lane_tree(&lanes, dot_tail(at, bt))
+}
+
+/// The specification `axpy`: `row += g * xi`, elementwise (one multiply
+/// rounding + one add rounding per element, no cross-element order).
+#[inline]
+fn axpy_scalar(row: &mut [f32], xi: &[f32], g: f32) {
+    for (a, &xv) in row.iter_mut().zip(xi) {
+        *a += g * xv;
+    }
+}
+
+/// Fixed-tree dot product, dispatched on the selected kernel. All paths
+/// are bitwise-equal by construction (module docs).
+#[inline]
+pub fn dot(k: Kernel, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match k {
+        Kernel::Scalar => dot_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the Avx2 variant is only constructed after runtime
+        // detection confirmed AVX2 support.
+        Kernel::Avx2 => unsafe { x86::dot_avx2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        Kernel::Neon => unsafe { arm::dot_neon(a, b) },
+    }
+}
+
+/// `row += g * xi`, dispatched on the selected kernel.
+#[inline]
+pub fn axpy(k: Kernel, row: &mut [f32], xi: &[f32], g: f32) {
+    match k {
+        Kernel::Scalar => axpy_scalar(row, xi, g),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see `dot`.
+        Kernel::Avx2 => unsafe { x86::axpy_avx2(row, xi, g) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: see `dot`.
+        Kernel::Neon => unsafe { arm::axpy_neon(row, xi, g) },
+    }
+}
+
+/// One dense layer's forward matvec:
+/// `out[r] = dot(W[r, :], a) + bias[r]`. The scalar path is the legacy
+/// row-at-a-time loop; the SIMD paths cache-block four output rows per
+/// pass over `a` (each row keeps its private lanes and tree, so the
+/// per-row bits match the scalar path exactly).
+pub fn matvec(k: Kernel, out: &mut [f32], w: &[f32], bias: &[f32], a: &[f32]) {
+    let d_in = a.len();
+    match k {
+        Kernel::Scalar => {
+            for (r, slot) in out.iter_mut().enumerate() {
+                *slot = dot_scalar(&w[r * d_in..(r + 1) * d_in], a) + bias[r];
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see `dot`.
+        Kernel::Avx2 => unsafe {
+            blocked_matvec(out, w, bias, a, x86::dot4_avx2, x86::dot_avx2);
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: see `dot`.
+        Kernel::Neon => unsafe {
+            blocked_matvec(out, w, bias, a, arm::dot4_neon, arm::dot_neon);
+        },
+    }
+}
+
+/// The shared 4-row blocking schedule of the SIMD [`matvec`] paths.
+///
+/// # Safety
+///
+/// `dot4` / `dot1` must be safe to call on this machine (the caller
+/// dispatched on a detected [`Kernel`] variant).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+unsafe fn blocked_matvec(
+    out: &mut [f32],
+    w: &[f32],
+    bias: &[f32],
+    a: &[f32],
+    dot4: unsafe fn(&[f32], &[f32], &[f32], &[f32], &[f32]) -> [f32; 4],
+    dot1: unsafe fn(&[f32], &[f32]) -> f32,
+) {
+    let d_in = a.len();
+    let mut r = 0usize;
+    while r + 4 <= out.len() {
+        let vals = dot4(
+            &w[r * d_in..(r + 1) * d_in],
+            &w[(r + 1) * d_in..(r + 2) * d_in],
+            &w[(r + 2) * d_in..(r + 3) * d_in],
+            &w[(r + 3) * d_in..(r + 4) * d_in],
+            a,
+        );
+        for j in 0..4 {
+            out[r + j] = vals[j] + bias[r + j];
+        }
+        r += 4;
+    }
+    while r < out.len() {
+        out[r] = dot1(&w[r * d_in..(r + 1) * d_in], a) + bias[r];
+        r += 1;
+    }
+}
+
+/// Transpose matvec as a fold of `axpy` rows:
+/// `da += Σ_r gs[r] * W[r, :]` — the dense backward / attention
+/// input-gradient inner loop. The scalar path performs the legacy
+/// sequential `axpy` chain; the SIMD paths fold four rows per pass
+/// (per destination element the identical operation chain, one load
+/// and store per block instead of per row).
+pub fn matvec_t(k: Kernel, da: &mut [f32], w: &[f32], gs: &[f32]) {
+    let d_in = da.len();
+    match k {
+        Kernel::Scalar => {
+            for (r, &g) in gs.iter().enumerate() {
+                axpy_scalar(da, &w[r * d_in..(r + 1) * d_in], g);
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see `dot`.
+        Kernel::Avx2 => unsafe {
+            blocked_matvec_t(da, w, gs, x86::axpy4_avx2, x86::axpy_avx2);
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: see `dot`.
+        Kernel::Neon => unsafe {
+            blocked_matvec_t(da, w, gs, arm::axpy4_neon, arm::axpy_neon);
+        },
+    }
+}
+
+/// The shared 4-row blocking schedule of the SIMD [`matvec_t`] paths.
+///
+/// # Safety
+///
+/// As for [`blocked_matvec`].
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+unsafe fn blocked_matvec_t(
+    da: &mut [f32],
+    w: &[f32],
+    gs: &[f32],
+    axpy4: unsafe fn(&mut [f32], &[f32], &[f32], &[f32], &[f32], [f32; 4]),
+    axpy1: unsafe fn(&mut [f32], &[f32], f32),
+) {
+    let d_in = da.len();
+    let mut r = 0usize;
+    while r + 4 <= gs.len() {
+        axpy4(
+            da,
+            &w[r * d_in..(r + 1) * d_in],
+            &w[(r + 1) * d_in..(r + 2) * d_in],
+            &w[(r + 2) * d_in..(r + 3) * d_in],
+            &w[(r + 3) * d_in..(r + 4) * d_in],
+            [gs[r], gs[r + 1], gs[r + 2], gs[r + 3]],
+        );
+        r += 4;
+    }
+    while r < gs.len() {
+        axpy1(da, &w[r * d_in..(r + 1) * d_in], gs[r]);
+        r += 1;
+    }
+}
+
+/// The ghost Gram-norm product over token matrices `a: [t, aw]`,
+/// `g: [t, gw]`: `Σ_{s,u} (a_s·a_u + 1)(g_s·g_u)` — the outer
+/// accumulation stays strictly s-major/u-inner sequential (it is part
+/// of the determinism contract); only the inner dots dispatch.
+pub fn gram_sq(k: Kernel, a: &[f32], aw: usize, g: &[f32], gw: usize, t: usize) -> f32 {
+    let mut sq = 0.0f32;
+    for s in 0..t {
+        let (a_s, g_s) = (&a[s * aw..(s + 1) * aw], &g[s * gw..(s + 1) * gw]);
+        for u in 0..t {
+            let ga = dot(k, a_s, &a[u * aw..(u + 1) * aw]) + 1.0;
+            let gg = dot(k, g_s, &g[u * gw..(u + 1) * gw]);
+            sq += ga * gg;
+        }
+    }
+    sq
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! AVX2 lowering of the fixed-tree kernels. Every function keeps
+    //! the multiply and the add as separate (separately rounded)
+    //! instructions — `vmulps` + `vaddps`, never `vfmadd` — so each
+    //! lane performs the scalar path's exact operation sequence.
+
+    use super::{dot_tail, lane_tree};
+    use core::arch::x86_64::{
+        __m256, _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps,
+        _mm256_setzero_ps, _mm256_storeu_ps,
+    };
+
+    #[inline]
+    unsafe fn fold_chunk(acc: __m256, a: *const f32, b: *const f32) -> __m256 {
+        _mm256_add_ps(acc, _mm256_mul_ps(_mm256_loadu_ps(a), _mm256_loadu_ps(b)))
+    }
+
+    /// AVX2 `dot`: the 8 scalar lanes live in one `__m256`.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        let n8 = a.len() - a.len() % 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i < n8 {
+            acc = fold_chunk(acc, a.as_ptr().add(i), b.as_ptr().add(i));
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        lane_tree(&lanes, dot_tail(&a[n8..], &b[n8..]))
+    }
+
+    /// Four dots sharing one streamed pass over `a` (the cache-blocked
+    /// matvec inner step); each row keeps a private accumulator.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot4_avx2(r0: &[f32], r1: &[f32], r2: &[f32], r3: &[f32], a: &[f32]) -> [f32; 4] {
+        let n8 = a.len() - a.len() % 8;
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i < n8 {
+            let av = _mm256_loadu_ps(a.as_ptr().add(i));
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_loadu_ps(r0.as_ptr().add(i)), av));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_loadu_ps(r1.as_ptr().add(i)), av));
+            acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(_mm256_loadu_ps(r2.as_ptr().add(i)), av));
+            acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(_mm256_loadu_ps(r3.as_ptr().add(i)), av));
+            i += 8;
+        }
+        let mut out = [0.0f32; 4];
+        for (slot, (acc, row)) in
+            out.iter_mut().zip([(acc0, r0), (acc1, r1), (acc2, r2), (acc3, r3)])
+        {
+            let mut lanes = [0.0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+            *slot = lane_tree(&lanes, dot_tail(&row[n8..], &a[n8..]));
+        }
+        out
+    }
+
+    /// AVX2 `axpy`: per element one multiply rounding + one add
+    /// rounding, exactly the scalar chain.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_avx2(row: &mut [f32], xi: &[f32], g: f32) {
+        let n8 = row.len() - row.len() % 8;
+        let gv = _mm256_set1_ps(g);
+        let mut i = 0usize;
+        while i < n8 {
+            let p = row.as_mut_ptr().add(i);
+            let v = _mm256_add_ps(
+                _mm256_loadu_ps(p),
+                _mm256_mul_ps(gv, _mm256_loadu_ps(xi.as_ptr().add(i))),
+            );
+            _mm256_storeu_ps(p, v);
+            i += 8;
+        }
+        while i < row.len() {
+            row[i] += g * xi[i];
+            i += 1;
+        }
+    }
+
+    /// Four `axpy` rows folded in one pass: per destination element the
+    /// chain `((d + g0*w0) + g1*w1) + ...` — identical bits to four
+    /// sequential `axpy` calls, one destination load/store per block.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy4_avx2(
+        da: &mut [f32],
+        r0: &[f32],
+        r1: &[f32],
+        r2: &[f32],
+        r3: &[f32],
+        g: [f32; 4],
+    ) {
+        let n8 = da.len() - da.len() % 8;
+        let g0 = _mm256_set1_ps(g[0]);
+        let g1 = _mm256_set1_ps(g[1]);
+        let g2 = _mm256_set1_ps(g[2]);
+        let g3 = _mm256_set1_ps(g[3]);
+        let mut i = 0usize;
+        while i < n8 {
+            let p = da.as_mut_ptr().add(i);
+            let mut v = _mm256_loadu_ps(p);
+            v = _mm256_add_ps(v, _mm256_mul_ps(g0, _mm256_loadu_ps(r0.as_ptr().add(i))));
+            v = _mm256_add_ps(v, _mm256_mul_ps(g1, _mm256_loadu_ps(r1.as_ptr().add(i))));
+            v = _mm256_add_ps(v, _mm256_mul_ps(g2, _mm256_loadu_ps(r2.as_ptr().add(i))));
+            v = _mm256_add_ps(v, _mm256_mul_ps(g3, _mm256_loadu_ps(r3.as_ptr().add(i))));
+            _mm256_storeu_ps(p, v);
+            i += 8;
+        }
+        while i < da.len() {
+            let mut v = da[i];
+            v += g[0] * r0[i];
+            v += g[1] * r1[i];
+            v += g[2] * r2[i];
+            v += g[3] * r3[i];
+            da[i] = v;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    //! NEON lowering: scalar lanes 0-3 and 4-7 live in two 128-bit
+    //! registers, multiply and add separately rounded (`fmul` + `fadd`,
+    //! never `fmla`), the same tree and tail as every other path.
+
+    use super::{dot_tail, lane_tree};
+    use core::arch::aarch64::{
+        float32x4_t, vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32,
+    };
+
+    #[inline]
+    unsafe fn fold_pair(
+        lo: float32x4_t,
+        hi: float32x4_t,
+        a: *const f32,
+        b: *const f32,
+    ) -> (float32x4_t, float32x4_t) {
+        let lo = vaddq_f32(lo, vmulq_f32(vld1q_f32(a), vld1q_f32(b)));
+        let hi = vaddq_f32(hi, vmulq_f32(vld1q_f32(a.add(4)), vld1q_f32(b.add(4))));
+        (lo, hi)
+    }
+
+    #[inline]
+    unsafe fn reduce(lo: float32x4_t, hi: float32x4_t, tail: f32) -> f32 {
+        let mut lanes = [0.0f32; 8];
+        vst1q_f32(lanes.as_mut_ptr(), lo);
+        vst1q_f32(lanes.as_mut_ptr().add(4), hi);
+        lane_tree(&lanes, tail)
+    }
+
+    /// NEON `dot` (see module docs).
+    ///
+    /// # Safety
+    ///
+    /// aarch64 only (NEON is baseline there).
+    pub unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+        let n8 = a.len() - a.len() % 8;
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i < n8 {
+            (lo, hi) = fold_pair(lo, hi, a.as_ptr().add(i), b.as_ptr().add(i));
+            i += 8;
+        }
+        reduce(lo, hi, dot_tail(&a[n8..], &b[n8..]))
+    }
+
+    /// Four dots sharing one streamed pass over `a`.
+    ///
+    /// # Safety
+    ///
+    /// aarch64 only.
+    pub unsafe fn dot4_neon(r0: &[f32], r1: &[f32], r2: &[f32], r3: &[f32], a: &[f32]) -> [f32; 4] {
+        [dot_neon(r0, a), dot_neon(r1, a), dot_neon(r2, a), dot_neon(r3, a)]
+    }
+
+    /// NEON `axpy`.
+    ///
+    /// # Safety
+    ///
+    /// aarch64 only.
+    pub unsafe fn axpy_neon(row: &mut [f32], xi: &[f32], g: f32) {
+        let n4 = row.len() - row.len() % 4;
+        let gv = vdupq_n_f32(g);
+        let mut i = 0usize;
+        while i < n4 {
+            let p = row.as_mut_ptr().add(i);
+            let v = vaddq_f32(vld1q_f32(p), vmulq_f32(gv, vld1q_f32(xi.as_ptr().add(i))));
+            vst1q_f32(p, v);
+            i += 4;
+        }
+        while i < row.len() {
+            row[i] += g * xi[i];
+            i += 1;
+        }
+    }
+
+    /// Four `axpy` rows folded per pass (see the AVX2 twin for the
+    /// bitwise argument).
+    ///
+    /// # Safety
+    ///
+    /// aarch64 only.
+    pub unsafe fn axpy4_neon(
+        da: &mut [f32],
+        r0: &[f32],
+        r1: &[f32],
+        r2: &[f32],
+        r3: &[f32],
+        g: [f32; 4],
+    ) {
+        let n4 = da.len() - da.len() % 4;
+        let g0 = vdupq_n_f32(g[0]);
+        let g1 = vdupq_n_f32(g[1]);
+        let g2 = vdupq_n_f32(g[2]);
+        let g3 = vdupq_n_f32(g[3]);
+        let mut i = 0usize;
+        while i < n4 {
+            let p = da.as_mut_ptr().add(i);
+            let mut v = vld1q_f32(p);
+            v = vaddq_f32(v, vmulq_f32(g0, vld1q_f32(r0.as_ptr().add(i))));
+            v = vaddq_f32(v, vmulq_f32(g1, vld1q_f32(r1.as_ptr().add(i))));
+            v = vaddq_f32(v, vmulq_f32(g2, vld1q_f32(r2.as_ptr().add(i))));
+            v = vaddq_f32(v, vmulq_f32(g3, vld1q_f32(r3.as_ptr().add(i))));
+            vst1q_f32(p, v);
+            i += 4;
+        }
+        while i < da.len() {
+            let mut v = da[i];
+            v += g[0] * r0[i];
+            v += g[1] * r1[i];
+            v += g[2] * r2[i];
+            v += g[3] * r3[i];
+            da[i] = v;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::ChaChaRng;
+
+    /// The pre-SIMD reference `dot`, copied verbatim from
+    /// `runtime/reference.rs` as it stood before this module existed —
+    /// the bitwise oracle the shared-tail satellite pins against.
+    fn legacy_dot(a: &[f32], b: &[f32]) -> f32 {
+        let n8 = a.len() - a.len() % 8;
+        let (a8, at) = a.split_at(n8);
+        let (b8, bt) = b.split_at(n8);
+        let mut lanes = [0.0f32; 8];
+        for (ac, bc) in a8.chunks_exact(8).zip(b8.chunks_exact(8)) {
+            for j in 0..8 {
+                lanes[j] += ac[j] * bc[j];
+            }
+        }
+        let mut tail = 0.0f32;
+        for (av, bv) in at.iter().zip(bt) {
+            tail += av * bv;
+        }
+        (((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+            + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7])))
+            + tail
+    }
+
+    fn synth(n: usize, stream: u64) -> Vec<f32> {
+        let mut rng = ChaChaRng::from_seed_stream(7, stream, b"kernels\0");
+        (0..n).map(|_| rng.next_normal() as f32).collect()
+    }
+
+    fn all_kernels() -> Vec<Kernel> {
+        let mut ks = vec![Kernel::Scalar];
+        let auto = Kernel::auto();
+        if auto != Kernel::Scalar {
+            ks.push(auto);
+        }
+        ks
+    }
+
+    #[test]
+    fn dot_is_bitwise_pinned_across_lengths_0_to_33() {
+        // The satellite contract: every kernel's dot — including the
+        // shared remainder-tail handling — reproduces the legacy
+        // implementation bit for bit at every length around the 8-lane
+        // boundary (0, partial tail, exact multiples, full + tail).
+        for len in 0..=33usize {
+            let a = synth(len, 0);
+            let b = synth(len, 1);
+            let want = legacy_dot(&a, &b).to_bits();
+            for k in all_kernels() {
+                let got = dot(k, &a, &b).to_bits();
+                assert_eq!(got, want, "len {len}, kernel {k:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_matches_the_scalar_chain_bitwise() {
+        for len in [0usize, 1, 3, 4, 7, 8, 9, 16, 31, 33, 100] {
+            let xi = synth(len, 2);
+            let base = synth(len, 3);
+            let mut want = base.clone();
+            axpy_scalar(&mut want, &xi, 0.37);
+            for k in all_kernels() {
+                let mut got = base.clone();
+                axpy(k, &mut got, &xi, 0.37);
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "len {len}, kernel {k:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_matvec_is_bitwise_equal_to_row_at_a_time() {
+        // Row counts around the 4-row block boundary x widths around
+        // the 8-lane boundary.
+        for d_out in [1usize, 3, 4, 5, 8, 11] {
+            for d_in in [1usize, 7, 8, 9, 24, 33] {
+                let w = synth(d_out * d_in, 4);
+                let bias = synth(d_out, 5);
+                let a = synth(d_in, 6);
+                let mut want = vec![0.0f32; d_out];
+                matvec(Kernel::Scalar, &mut want, &w, &bias, &a);
+                for (r, slot) in want.iter().enumerate() {
+                    let exp = legacy_dot(&w[r * d_in..(r + 1) * d_in], &a) + bias[r];
+                    assert_eq!(slot.to_bits(), exp.to_bits());
+                }
+                for k in all_kernels() {
+                    let mut got = vec![0.0f32; d_out];
+                    matvec(k, &mut got, &w, &bias, &a);
+                    let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                    let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(gb, wb, "{d_out}x{d_in}, kernel {k:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_matvec_t_is_bitwise_equal_to_sequential_axpy() {
+        for rows in [1usize, 3, 4, 5, 8, 11] {
+            for d_in in [1usize, 7, 8, 9, 24, 33] {
+                let w = synth(rows * d_in, 7);
+                let gs = synth(rows, 8);
+                let base = synth(d_in, 9);
+                let mut want = base.clone();
+                for (r, &g) in gs.iter().enumerate() {
+                    axpy_scalar(&mut want, &w[r * d_in..(r + 1) * d_in], g);
+                }
+                for k in all_kernels() {
+                    let mut got = base.clone();
+                    matvec_t(k, &mut got, &w, &gs);
+                    let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                    let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(gb, wb, "{rows}x{d_in}, kernel {k:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gram_sq_is_bitwise_equal_across_kernels() {
+        let (t, aw, gw) = (5usize, 13usize, 9usize);
+        let a = synth(t * aw, 10);
+        let g = synth(t * gw, 11);
+        let want = gram_sq(Kernel::Scalar, &a, aw, &g, gw, t).to_bits();
+        for k in all_kernels() {
+            assert_eq!(gram_sq(k, &a, aw, &g, gw, t).to_bits(), want, "kernel {k:?}");
+        }
+    }
+
+    #[test]
+    fn kernel_parse_axis_and_isa_are_consistent() {
+        assert_eq!(Kernel::parse("scalar"), Some(Kernel::Scalar));
+        assert_eq!(Kernel::parse("nonsense"), None);
+        let simd = Kernel::parse("simd").unwrap();
+        assert_eq!(Kernel::parse("auto"), Some(Kernel::auto()));
+        assert_eq!(Kernel::Scalar.axis(), "scalar");
+        assert_eq!(Kernel::Scalar.isa(), "scalar");
+        assert!(VERIFIED_ISAS.contains(&simd.isa()), "{}", simd.isa());
+        assert!(VERIFIED_ISAS.contains(&Kernel::auto().isa()));
+        assert_eq!(detected_isa(true), "scalar");
+        assert!(VERIFIED_ISAS.contains(&detected_isa(false)));
+    }
+}

@@ -77,6 +77,13 @@ impl ModelMeta {
         self.executables.iter().find(|e| e.kind == "apply")
     }
 
+    /// Find the apply executable for a parameter dtype (`"f32"` |
+    /// `"bf16"`): the dtype-less legacy entry counts as f32, so old
+    /// manifests keep resolving.
+    pub fn find_apply_dtype(&self, dtype: &str) -> Option<&ExecutableMeta> {
+        self.executables.iter().find(|e| e.kind == "apply" && e.dtype_or_f32() == dtype)
+    }
+
     pub fn find_eval(&self) -> Option<&ExecutableMeta> {
         self.executables.iter().find(|e| e.kind == "eval")
     }

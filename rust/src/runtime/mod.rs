@@ -34,6 +34,7 @@ pub mod backend;
 pub mod client;
 pub mod compile_cache;
 pub mod hlo_analysis;
+pub mod kernels;
 pub mod layers;
 pub mod manifest;
 #[cfg(feature = "pjrt")]
@@ -47,6 +48,7 @@ pub use backend::{
 pub use client::{ModelRuntime, Runtime};
 pub use compile_cache::{CompileCache, CompileRecord};
 pub use hlo_analysis::{analyze, analyze_file, HloStats};
+pub use kernels::Kernel;
 pub use layers::{executed_choices, LayerPlan, PlannedLayer};
 pub use manifest::{ExecutableMeta, Manifest, ModelMeta};
 pub use reference::{ReferenceBackend, REFERENCE_MODEL};

@@ -61,8 +61,12 @@
 //!   so concurrent sessions never serialize and the steady state
 //!   allocates only the per-call `sq_norms` output and the phase-2 row
 //!   units.
-//! * **Blocked matvec** — every layer's forward uses the 8-lane
-//!   unrolled dot with a fixed reduction tree.
+//! * **Dispatched kernels** — every hot inner loop (dot / axpy / the
+//!   dense and attention matvecs / the ghost Gram products) goes
+//!   through [`super::kernels`]: the 8-lane fixed-tree scalar path or
+//!   its bitwise-identical AVX2/NEON + cache-blocked lowering, selected
+//!   once at backend construction (`--kernel`, DESIGN.md §14). Kernel
+//!   choice moves wall-clock only, never bits.
 //! * **Deterministic threading** — `std::thread::scope` with fixed
 //!   index partitions. Phase 1 (per-example forward/backward) is
 //!   parallel over *example ranges*; phase 2 (the `acc +=` update) is
@@ -80,9 +84,10 @@
 
 use super::backend::{AccumArgs, AccumOut, AccumStats, ApplyArgs, Backend, Prepared};
 use super::compile_cache::{CompileCache, CompileRecord};
+use super::kernels::{self, Kernel};
 use super::layers::{dz_extras, executed_choices, tape_extras, LayerPlan, PlannedLayer};
 use super::manifest::{ExecutableMeta, Manifest, ModelMeta};
-use super::tensor::Tensor;
+use super::tensor::{quantize_bf16, Tensor};
 use crate::clipping::LayerChoice;
 use crate::models::{conv_out, cpu_ladder, Activation, LayerKind, LayerSpec};
 use crate::util::rng::ChaChaRng;
@@ -134,7 +139,11 @@ enum RefExec {
         /// `false` = materialized per-example accumulate.
         fused: Vec<bool>,
     },
-    Apply,
+    Apply {
+        /// `--param-dtype bf16`: quantize the parameter storage back to
+        /// bf16 (round-to-nearest-even) after the f32 update.
+        bf16: bool,
+    },
     Eval {
         batch: usize,
         plan: LayerPlan,
@@ -159,30 +168,63 @@ struct Scratch {
     /// `[workers * bwd_scratch]`: per-worker phase-1 backward scratch
     /// (conv im2col patches + dz transpose, attention softmax row).
     bwd: Vec<f32>,
+    /// `[max_unit_width]`: phase-2 materialization row (the
+    /// `perex`-style scaled-copy buffer), pool-owned so the blocked
+    /// update never allocates in the hot loop.
+    m_row: Vec<f32>,
+    /// `[max_unit_width]`: phase-2 canonical contribution block (the
+    /// position-summed conv/attention row), pool-owned like `m_row`.
+    contrib: Vec<f32>,
     /// `[P]`: Gaussian noise vector for the apply step.
     noise: Vec<f32>,
 }
 
+/// The accum working set one arena hands out: phase-1 tapes plus the
+/// phase-2 block buffers, borrowed together so a single pooled checkout
+/// serves both phases of a single-threaded call.
+struct AccumBuffers<'a> {
+    dz: &'a mut [f32],
+    tape: &'a mut [f32],
+    scale: &'a mut [f32],
+    losses: &'a mut [f32],
+    bwd: &'a mut [f32],
+    m_row: &'a mut [f32],
+    contrib: &'a mut [f32],
+}
+
 impl Scratch {
-    /// Hand out the accum buffers `(dz[B*dz_stride], tape[B*tape_stride],
-    /// scale[B], losses[B], bwd[workers*bwd_scratch])`.
-    fn accum(
-        &mut self,
-        b: usize,
-        workers: usize,
-        plan: &LayerPlan,
-    ) -> (&mut [f32], &mut [f32], &mut [f32], &mut [f32], &mut [f32]) {
+    /// Hand out the accum buffers ([`AccumBuffers`]), each resized from
+    /// the [`LayerPlan`]: `dz[B*dz_stride]`, `tape[B*tape_stride]`,
+    /// `scale[B]`, `losses[B]`, `bwd[workers*bwd_scratch]`, and the two
+    /// `[max_unit_width]` phase-2 block buffers.
+    fn accum(&mut self, b: usize, workers: usize, plan: &LayerPlan) -> AccumBuffers<'_> {
         self.dz.resize(b * plan.dz_stride, 0.0);
         self.tape.resize(b * plan.tape_stride, 0.0);
         self.scale.resize(b, 0.0);
         self.losses.resize(b, 0.0);
         self.bwd.resize(workers * plan.bwd_scratch, 0.0);
+        self.m_row.resize(plan.max_unit_width, 0.0);
+        self.contrib.resize(plan.max_unit_width, 0.0);
+        AccumBuffers {
+            dz: &mut self.dz[..b * plan.dz_stride],
+            tape: &mut self.tape[..b * plan.tape_stride],
+            scale: &mut self.scale[..b],
+            losses: &mut self.losses[..b],
+            bwd: &mut self.bwd[..workers * plan.bwd_scratch],
+            m_row: &mut self.m_row[..plan.max_unit_width],
+            contrib: &mut self.contrib[..plan.max_unit_width],
+        }
+    }
+
+    /// Hand out just the two `[max_unit_width]` phase-2 block buffers —
+    /// each spawned phase-2 worker checks out its own arena and takes
+    /// these, so the threaded update allocates nothing per step either.
+    fn blocks(&mut self, plan: &LayerPlan) -> (&mut [f32], &mut [f32]) {
+        self.m_row.resize(plan.max_unit_width, 0.0);
+        self.contrib.resize(plan.max_unit_width, 0.0);
         (
-            &mut self.dz[..b * plan.dz_stride],
-            &mut self.tape[..b * plan.tape_stride],
-            &mut self.scale[..b],
-            &mut self.losses[..b],
-            &mut self.bwd[..workers * plan.bwd_scratch],
+            &mut self.m_row[..plan.max_unit_width],
+            &mut self.contrib[..plan.max_unit_width],
         )
     }
 
@@ -207,6 +249,9 @@ pub struct ReferenceBackend {
     /// `with_threads(_, n > 0)`: use exactly `threads` workers instead
     /// of the work-size heuristic (tests and explicit operator control).
     forced_threads: bool,
+    /// Inner-loop kernel (resolved at construction; bitwise-identical
+    /// for every value — `--kernel` is a wall-clock knob only).
+    kernel: Kernel,
     /// Scratch-arena pool: popped per call, pushed back afterwards, so
     /// concurrent sessions never serialize on a shared arena.
     scratch: Mutex<Vec<Scratch>>,
@@ -256,6 +301,15 @@ impl ReferenceBackend {
     /// The thread count is a wall-clock knob only: outputs are
     /// bitwise-identical for every value, which the proptests assert.
     pub fn with_threads(init_seed: u64, threads: usize) -> Self {
+        Self::with_options(init_seed, threads, Kernel::auto())
+    }
+
+    /// Backend with both wall-clock knobs pinned: worker threads (as in
+    /// [`Self::with_threads`]) and the inner-loop [`Kernel`]. Like the
+    /// thread count, the kernel never moves bits (DESIGN.md §14) — the
+    /// scalar-vs-SIMD proptests in `rust/tests/kernel_bitwise.rs`
+    /// assert it end to end.
+    pub fn with_options(init_seed: u64, threads: usize, kernel: Kernel) -> Self {
         let forced = threads > 0;
         let threads = if forced {
             threads
@@ -270,8 +324,14 @@ impl ReferenceBackend {
             init_seed,
             threads,
             forced_threads: forced,
+            kernel,
             scratch: Mutex::new(vec![Scratch::default()]),
         }
+    }
+
+    /// The inner-loop kernel this backend was constructed with.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
     }
 
     /// Worker count for a parallel section with `work` inner-loop
@@ -297,23 +357,40 @@ impl ReferenceBackend {
         let mut models = BTreeMap::new();
         for m in cpu_ladder() {
             let mut executables = Vec::new();
+            // Both parameter dtypes are lowered for every accum rung:
+            // `bf16` executables run the same f32 compute over
+            // bf16-quantized parameter storage (DESIGN.md §14), and
+            // their presence is what turns the precision figures from
+            // analytic into measured rows.
             for variant in ACCUM_VARIANTS {
                 for &batch in ACCUM_BATCHES {
-                    executables.push(ExecutableMeta {
-                        path: format!("{}_accum_{variant}_b{batch}_f32.ref", m.name),
-                        kind: "accum".into(),
-                        variant: Some((*variant).into()),
-                        batch: Some(batch),
-                        dtype: Some("f32".into()),
-                    });
+                    for dtype in ["f32", "bf16"] {
+                        executables.push(ExecutableMeta {
+                            path: format!("{}_accum_{variant}_b{batch}_{dtype}.ref", m.name),
+                            kind: "accum".into(),
+                            variant: Some((*variant).into()),
+                            batch: Some(batch),
+                            dtype: Some(dtype.into()),
+                        });
+                    }
                 }
             }
+            // The dtype-less apply stays first so `find_apply()` keeps
+            // returning the f32 step; the bf16 apply re-quantizes the
+            // stored parameters after the f32 update.
             executables.push(ExecutableMeta {
                 path: format!("{}_apply.ref", m.name),
                 kind: "apply".into(),
                 variant: None,
                 batch: None,
                 dtype: None,
+            });
+            executables.push(ExecutableMeta {
+                path: format!("{}_apply_bf16.ref", m.name),
+                kind: "apply".into(),
+                variant: None,
+                batch: None,
+                dtype: Some("bf16".into()),
             });
             executables.push(ExecutableMeta {
                 path: format!("{}_eval_b{EVAL_BATCH}.ref", m.name),
@@ -395,54 +472,17 @@ fn image_dim(meta: &ModelMeta) -> usize {
     meta.image * meta.image * meta.channels
 }
 
-/// 8-lane unrolled dot product with a fixed reduction tree — the inner
-/// kernel of the blocked matvec. Lane association is part of the
-/// determinism contract: the same inputs produce the same bits on every
-/// run and thread count (the lanes and their final tree never change).
-#[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n8 = a.len() - a.len() % 8;
-    let (a8, at) = a.split_at(n8);
-    let (b8, bt) = b.split_at(n8);
-    let mut lanes = [0.0f32; 8];
-    for (ac, bc) in a8.chunks_exact(8).zip(b8.chunks_exact(8)) {
-        for j in 0..8 {
-            lanes[j] += ac[j] * bc[j];
-        }
-    }
-    let mut tail = 0.0f32;
-    for (av, bv) in at.iter().zip(bt) {
-        tail += av * bv;
-    }
-    (((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
-        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7])))
-        + tail
-}
-
-/// `row += g * xi` — no cross-iteration dependency, auto-vectorizes.
-#[inline]
-fn axpy(row: &mut [f32], xi: &[f32], g: f32) {
-    for (a, &xv) in row.iter_mut().zip(xi) {
-        *a += g * xv;
-    }
-}
+// The former local `dot` / `axpy` / `dense_forward` / `gram_sq` inner
+// kernels now live in [`super::kernels`] (`dot` / `axpy` / `matvec` /
+// `matvec_t` / `gram_sq`), dispatched on the backend's [`Kernel`] —
+// the scalar path is byte-for-byte the old arithmetic, and the SIMD
+// paths are pinned bitwise against it (DESIGN.md §14).
 
 /// Stable log-sum-exp of the logits.
 fn logsumexp(lg: &[f32]) -> f32 {
     let max = lg.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
     let z: f32 = lg.iter().map(|&l| (l - max).exp()).sum();
     max + z.ln()
-}
-
-/// `out[r] = dot(W[r, :], a) + b[r]` — one dense layer's forward, the
-/// blocked matvec shared by accum and eval.
-#[inline]
-fn dense_forward(out: &mut [f32], w: &[f32], bias: &[f32], a_in: &[f32]) {
-    let d_in = a_in.len();
-    for (r, slot) in out.iter_mut().enumerate() {
-        *slot = dot(&w[r * d_in..(r + 1) * d_in], a_in) + bias[r];
-    }
 }
 
 /// Layernorm epsilon (matches `python/compile/vit.py`).
@@ -549,27 +589,11 @@ fn conv_input_grad(da: &mut [f32], k: &[f32], dz_l: &[f32], g: ConvGeo) {
     }
 }
 
-/// The ghost Gram-norm product over token matrices `a: [t, aw]`,
-/// `g: [t, gw]`: `Σ_{s,u} (a_s·a_u + 1)(g_s·g_u)` — the squared norm of
-/// the layer's weight *and* bias gradient without materializing either
-/// (the `+ 1` is the bias column).
-fn gram_sq(a: &[f32], aw: usize, g: &[f32], gw: usize, t: usize) -> f32 {
-    let mut sq = 0.0f32;
-    for s in 0..t {
-        let (a_s, g_s) = (&a[s * aw..(s + 1) * aw], &g[s * gw..(s + 1) * gw]);
-        for u in 0..t {
-            let ga = dot(a_s, &a[u * aw..(u + 1) * aw]) + 1.0;
-            let gg = dot(g_s, &g[u * gw..(u + 1) * gw]);
-            sq += ga * gg;
-        }
-    }
-    sq
-}
-
 /// conv2d ghost norm: unfold the input into im2col patches `[t, patch]`
 /// and transpose dz to `[t, c_out]` (both in `scratch`), then the Gram
-/// product — `‖dK‖² + ‖db‖²` exactly (DESIGN.md §13).
-fn conv_norm_sq(a_in: &[f32], dz_l: &[f32], g: ConvGeo, scratch: &mut [f32]) -> f32 {
+/// product ([`kernels::gram_sq`]) — `‖dK‖² + ‖db‖²` exactly
+/// (DESIGN.md §13).
+fn conv_norm_sq(kn: Kernel, a_in: &[f32], dz_l: &[f32], g: ConvGeo, scratch: &mut [f32]) -> f32 {
     let (kp, hw, pw) = (g.kh * g.kw, g.h_in * g.w_in, g.patch());
     let (patches, rest) = scratch.split_at_mut(g.t() * pw);
     let dzt = &mut rest[..g.t() * g.c_out];
@@ -601,7 +625,7 @@ fn conv_norm_sq(a_in: &[f32], dz_l: &[f32], g: ConvGeo, scratch: &mut [f32]) -> 
             dzt[s * g.c_out + c] = dz_l[c * g.t() + s];
         }
     }
-    gram_sq(patches, pw, dzt, g.c_out, g.t())
+    kernels::gram_sq(kn, patches, pw, dzt, g.c_out, g.t())
 }
 
 /// layernorm forward: whole-vector mean/variance, `xhat` and `rstd`
@@ -679,7 +703,15 @@ fn attn_params(p: &[f32], d: usize, dh: usize) -> AttnParams<'_> {
 /// `q k^T / √dh`, `ctx = A v`, `out = ctx Wo^T + bo`. The intermediates
 /// (`q, k, v, A, ctx`) land in `ext` — the tape extras in accum, a
 /// scratch buffer in eval.
-fn attn_forward(out: &mut [f32], p: &[f32], a_in: &[f32], ext: &mut [f32], t: usize, dh: usize) {
+fn attn_forward(
+    kn: Kernel,
+    out: &mut [f32],
+    p: &[f32],
+    a_in: &[f32],
+    ext: &mut [f32],
+    t: usize,
+    dh: usize,
+) {
     let d = a_in.len() / t;
     let AttnParams { wq, bq, wk, bk, wv, bv, wo, bo } = attn_params(p, d, dh);
     let (q, ext) = ext.split_at_mut(t * dh);
@@ -689,16 +721,16 @@ fn attn_forward(out: &mut [f32], p: &[f32], a_in: &[f32], ext: &mut [f32], t: us
     let ctx = &mut ext[..t * dh];
     for s in 0..t {
         let xs = &a_in[s * d..(s + 1) * d];
-        dense_forward(&mut q[s * dh..(s + 1) * dh], wq, bq, xs);
-        dense_forward(&mut k[s * dh..(s + 1) * dh], wk, bk, xs);
-        dense_forward(&mut v[s * dh..(s + 1) * dh], wv, bv, xs);
+        kernels::matvec(kn, &mut q[s * dh..(s + 1) * dh], wq, bq, xs);
+        kernels::matvec(kn, &mut k[s * dh..(s + 1) * dh], wk, bk, xs);
+        kernels::matvec(kn, &mut v[s * dh..(s + 1) * dh], wv, bv, xs);
     }
     let inv = 1.0 / (dh as f32).sqrt();
     for s in 0..t {
         let qs = &q[s * dh..(s + 1) * dh];
         let row = &mut probs[s * t..(s + 1) * t];
         for (u, slot) in row.iter_mut().enumerate() {
-            *slot = dot(qs, &k[u * dh..(u + 1) * dh]) * inv;
+            *slot = kernels::dot(kn, qs, &k[u * dh..(u + 1) * dh]) * inv;
         }
         let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut z = 0.0f32;
@@ -710,15 +742,15 @@ fn attn_forward(out: &mut [f32], p: &[f32], a_in: &[f32], ext: &mut [f32], t: us
             *val /= z;
         }
     }
+    // `ctx_s = Σ_u A[s, u] v_u` is the matvec-transpose fold over the
+    // value rows (bit-identical to the former sequential axpy chain).
     for s in 0..t {
         let cs = &mut ctx[s * dh..(s + 1) * dh];
         cs.fill(0.0);
-        for u in 0..t {
-            axpy(cs, &v[u * dh..(u + 1) * dh], probs[s * t + u]);
-        }
+        kernels::matvec_t(kn, cs, v, &probs[s * t..(s + 1) * t]);
     }
     for s in 0..t {
-        dense_forward(&mut out[s * d..(s + 1) * d], wo, bo, &ctx[s * dh..(s + 1) * dh]);
+        kernels::matvec(kn, &mut out[s * d..(s + 1) * d], wo, bo, &ctx[s * dh..(s + 1) * dh]);
     }
 }
 
@@ -727,6 +759,7 @@ fn attn_forward(out: &mut [f32], p: &[f32], a_in: &[f32], ext: &mut [f32], t: us
 /// folds them into the q/k/v/o parameter gradients; the norm and the
 /// input gradient read them too). `scratch` holds one `[t]` row.
 fn attn_backward(
+    kn: Kernel,
     p: &[f32],
     spec: LayerSpec,
     tape_ext: &[f32],
@@ -745,21 +778,19 @@ fn attn_backward(
     let (dq, rest) = dz_ext.split_at_mut(t * dh);
     let (dk, rest) = rest.split_at_mut(t * dh);
     let (dv, dctx) = rest.split_at_mut(t * dh);
-    // dctx_s = Wo^T dout_s.
+    // dctx_s = Wo^T dout_s — the matvec-transpose fold over Wo rows.
     for s in 0..t {
         let dcs = &mut dctx[s * dh..(s + 1) * dh];
         dcs.fill(0.0);
-        let dos = &dout[s * d..(s + 1) * d];
-        for (j, &gv) in dos.iter().enumerate() {
-            axpy(dcs, &wo[j * dh..(j + 1) * dh], gv);
-        }
+        kernels::matvec_t(kn, dcs, wo, &dout[s * d..(s + 1) * d]);
     }
-    // dv_u = Σ_s A[s, u] dctx_s (fixed s-major order).
+    // dv_u = Σ_s A[s, u] dctx_s (fixed s-major order; destinations are
+    // scattered across u, so this stays a per-row axpy).
     dv.fill(0.0);
     for s in 0..t {
         let dcs = &dctx[s * dh..(s + 1) * dh];
         for u in 0..t {
-            axpy(&mut dv[u * dh..(u + 1) * dh], dcs, probs[s * t + u]);
+            kernels::axpy(kn, &mut dv[u * dh..(u + 1) * dh], dcs, probs[s * t + u]);
         }
     }
     // Softmax backward per row: dA = dctx v^T, ds = A ∘ (dA − Σ A∘dA),
@@ -771,7 +802,7 @@ fn attn_backward(
         let dcs = &dctx[s * dh..(s + 1) * dh];
         let arow = &probs[s * t..(s + 1) * t];
         for (u, slot) in da_row.iter_mut().enumerate() {
-            *slot = dot(dcs, &v[u * dh..(u + 1) * dh]);
+            *slot = kernels::dot(kn, dcs, &v[u * dh..(u + 1) * dh]);
         }
         let mut rowsum = 0.0f32;
         for u in 0..t {
@@ -782,8 +813,8 @@ fn attn_backward(
         let qs = &q[s * dh..(s + 1) * dh];
         for u in 0..t {
             let dsu = arow[u] * (da_row[u] - rowsum);
-            axpy(dqs, &k[u * dh..(u + 1) * dh], dsu);
-            axpy(&mut dk[u * dh..(u + 1) * dh], qs, dsu);
+            kernels::axpy(kn, dqs, &k[u * dh..(u + 1) * dh], dsu);
+            kernels::axpy(kn, &mut dk[u * dh..(u + 1) * dh], qs, dsu);
         }
         for x in dqs.iter_mut() {
             *x *= inv;
@@ -796,7 +827,7 @@ fn attn_backward(
 
 /// Attention input gradient `dX = dq Wq + dk Wk + dv Wv` (from the
 /// already-filled dz extras).
-fn attn_input_grad(da: &mut [f32], p: &[f32], spec: LayerSpec, dz_ext: &[f32]) {
+fn attn_input_grad(kn: Kernel, da: &mut [f32], p: &[f32], spec: LayerSpec, dz_ext: &[f32]) {
     let LayerKind::Attention { t, d_model: d, d_head: dh } = spec.kind else {
         unreachable!("attn_input_grad on a non-attention layer")
     };
@@ -807,15 +838,9 @@ fn attn_input_grad(da: &mut [f32], p: &[f32], spec: LayerSpec, dz_ext: &[f32]) {
     da.fill(0.0);
     for s in 0..t {
         let das = &mut da[s * d..(s + 1) * d];
-        for j in 0..dh {
-            axpy(das, &wq[j * d..(j + 1) * d], dq[s * dh + j]);
-        }
-        for j in 0..dh {
-            axpy(das, &wk[j * d..(j + 1) * d], dk[s * dh + j]);
-        }
-        for j in 0..dh {
-            axpy(das, &wv[j * d..(j + 1) * d], dv[s * dh + j]);
-        }
+        kernels::matvec_t(kn, das, wq, &dq[s * dh..(s + 1) * dh]);
+        kernels::matvec_t(kn, das, wk, &dk[s * dh..(s + 1) * dh]);
+        kernels::matvec_t(kn, das, wv, &dv[s * dh..(s + 1) * dh]);
     }
 }
 
@@ -823,13 +848,20 @@ fn attn_input_grad(da: &mut [f32], p: &[f32], spec: LayerSpec, dz_ext: &[f32]) {
 /// `out` in place — the arithmetic shared bit-for-bit by the accum tape
 /// and the eval pass. `ext` receives the kind's forward intermediates
 /// ([`tape_extras`] floats: the tape in accum, scratch in eval).
-fn layer_forward(pl: &PlannedLayer, params: &[f32], a_in: &[f32], out: &mut [f32], ext: &mut [f32]) {
+fn layer_forward(
+    kn: Kernel,
+    pl: &PlannedLayer,
+    params: &[f32],
+    a_in: &[f32],
+    out: &mut [f32],
+    ext: &mut [f32],
+) {
     let spec = pl.spec;
     match spec.kind {
         LayerKind::Dense => {
             let w = &params[pl.w_off..pl.w_off + spec.d_in * spec.d_out];
             let bias = &params[pl.b_off..pl.b_off + spec.d_out];
-            dense_forward(out, w, bias, a_in);
+            kernels::matvec(kn, out, w, bias, a_in);
         }
         LayerKind::Conv2d { .. } => {
             let g = ConvGeo::of(spec.kind);
@@ -844,7 +876,7 @@ fn layer_forward(pl: &PlannedLayer, params: &[f32], a_in: &[f32], out: &mut [f32
         }
         LayerKind::Attention { t, d_head, .. } => {
             let p = &params[pl.w_off..pl.w_off + spec.params()];
-            attn_forward(out, p, a_in, ext, t, d_head);
+            attn_forward(kn, out, p, a_in, ext, t, d_head);
         }
     }
     if spec.activation == Activation::Relu {
@@ -860,6 +892,8 @@ fn layer_forward(pl: &PlannedLayer, params: &[f32], a_in: &[f32], out: &mut [f32
 #[derive(Clone, Copy)]
 struct AccumCtx<'a> {
     plan: &'a LayerPlan,
+    /// Inner-loop kernel (the backend's, resolved at construction).
+    kernel: Kernel,
     nonprivate: bool,
     clip_norm: f32,
     params: &'a [f32],
@@ -894,6 +928,7 @@ struct AccumPart<'p> {
 fn accum_examples(ctx: AccumCtx<'_>, part: AccumPart<'_>) {
     let AccumPart { start, dz, tape, scale, losses, sq_norms, scratch } = part;
     let plan = ctx.plan;
+    let kn = ctx.kernel;
     let d = plan.input_dim;
     let ts = plan.tape_stride;
     let dzs = plan.dz_stride;
@@ -918,7 +953,7 @@ fn accum_examples(ctx: AccumCtx<'_>, part: AccumPart<'_>) {
                     &tape_w[plan.layers[l - 1].act_off..][..d_in]
                 };
                 let out = &mut dz_w[pl.dz_off..pl.dz_off + d_out];
-                layer_forward(&pl, ctx.params, a_in, out, &mut []);
+                layer_forward(kn, &pl, ctx.params, a_in, out, &mut []);
             } else {
                 let (lo, hi) = tape_w.split_at_mut(pl.act_off);
                 let a_in: &[f32] = if l == 0 {
@@ -928,7 +963,7 @@ fn accum_examples(ctx: AccumCtx<'_>, part: AccumPart<'_>) {
                 };
                 let (out, rest) = hi.split_at_mut(d_out);
                 let ext = &mut rest[..tape_extras(&pl.spec)];
-                layer_forward(&pl, ctx.params, a_in, out, ext);
+                layer_forward(kn, &pl, ctx.params, a_in, out, ext);
             }
         }
 
@@ -967,7 +1002,7 @@ fn accum_examples(ctx: AccumCtx<'_>, part: AccumPart<'_>) {
                 let (lo, hi) = dz_w.split_at_mut(pl.dz_ext_off);
                 let dout = &lo[pl.dz_off..pl.dz_off + d_out];
                 let dz_ext = &mut hi[..dz_extras(&pl.spec)];
-                attn_backward(p, pl.spec, tape_ext, dout, dz_ext, scratch);
+                attn_backward(kn, p, pl.spec, tape_ext, dout, dz_ext, scratch);
             }
             if !ctx.nonprivate {
                 let a_in: &[f32] = if l == 0 {
@@ -978,13 +1013,13 @@ fn accum_examples(ctx: AccumCtx<'_>, part: AccumPart<'_>) {
                 let dz_l = &dz_w[pl.dz_off..pl.dz_off + d_out];
                 match pl.spec.kind {
                     LayerKind::Dense => {
-                        let dlsq = dot(dz_l, dz_l);
-                        let asq = dot(a_in, a_in);
+                        let dlsq = kernels::dot(kn, dz_l, dz_l);
+                        let asq = kernels::dot(kn, a_in, a_in);
                         sq_total += dlsq * (asq + 1.0);
                     }
                     LayerKind::Conv2d { .. } => {
                         let g = ConvGeo::of(pl.spec.kind);
-                        sq_total += conv_norm_sq(a_in, dz_l, g, scratch);
+                        sq_total += conv_norm_sq(kn, a_in, dz_l, g, scratch);
                     }
                     LayerKind::LayerNorm => {
                         // ‖dγ‖² + ‖dβ‖² = Σ (dout·xhat)² + dout².
@@ -1003,10 +1038,12 @@ fn accum_examples(ctx: AccumCtx<'_>, part: AccumPart<'_>) {
                         let ext = &dz_w[pl.dz_ext_off..pl.dz_ext_off + 4 * tdh];
                         let ctx_rows =
                             &tape_w[pl.ext_off + 3 * tdh + t * t..pl.ext_off + 4 * tdh + t * t];
-                        sq_total += gram_sq(a_in, d_model, &ext[..tdh], d_head, t);
-                        sq_total += gram_sq(a_in, d_model, &ext[tdh..2 * tdh], d_head, t);
-                        sq_total += gram_sq(a_in, d_model, &ext[2 * tdh..3 * tdh], d_head, t);
-                        sq_total += gram_sq(ctx_rows, d_head, dz_l, d_model, t);
+                        sq_total += kernels::gram_sq(kn, a_in, d_model, &ext[..tdh], d_head, t);
+                        sq_total +=
+                            kernels::gram_sq(kn, a_in, d_model, &ext[tdh..2 * tdh], d_head, t);
+                        sq_total +=
+                            kernels::gram_sq(kn, a_in, d_model, &ext[2 * tdh..3 * tdh], d_head, t);
+                        sq_total += kernels::gram_sq(kn, ctx_rows, d_head, dz_l, d_model, t);
                     }
                 }
             }
@@ -1019,9 +1056,7 @@ fn accum_examples(ctx: AccumCtx<'_>, part: AccumPart<'_>) {
                     LayerKind::Dense => {
                         da.fill(0.0);
                         let w = &ctx.params[pl.w_off..pl.w_off + d_in * d_out];
-                        for (r, &g) in dz_l.iter().enumerate() {
-                            axpy(da, &w[r * d_in..(r + 1) * d_in], g);
-                        }
+                        kernels::matvec_t(kn, da, w, dz_l);
                     }
                     LayerKind::Conv2d { .. } => {
                         let g = ConvGeo::of(pl.spec.kind);
@@ -1037,7 +1072,7 @@ fn accum_examples(ctx: AccumCtx<'_>, part: AccumPart<'_>) {
                     LayerKind::Attention { .. } => {
                         let p = &ctx.params[pl.w_off..pl.w_off + pl.spec.params()];
                         let dz_ext = &hi[d_out..d_out + dz_extras(&pl.spec)];
-                        attn_input_grad(da, p, pl.spec, dz_ext);
+                        attn_input_grad(kn, da, p, pl.spec, dz_ext);
                     }
                 }
                 if prev.spec.activation == Activation::Relu {
@@ -1244,9 +1279,9 @@ fn build_row_units<'a>(
 /// row first (the Opacus-style memory traffic) and then adds the
 /// bit-identical addends — same bits either way, by construction.
 #[inline]
-fn fold_row(w: &mut [f32], contrib: &[f32], sc: f32, fused: bool, m_row: &mut [f32]) {
+fn fold_row(kn: Kernel, w: &mut [f32], contrib: &[f32], sc: f32, fused: bool, m_row: &mut [f32]) {
     if fused {
-        axpy(w, contrib, sc);
+        kernels::axpy(kn, w, contrib, sc);
     } else {
         let m = &mut m_row[..contrib.len()];
         for (mv, &cv) in m.iter_mut().zip(contrib) {
@@ -1273,17 +1308,15 @@ fn accum_update(
     dz: &[f32],
     tape: &[f32],
     scale: &[f32],
+    m_row: &mut [f32],
+    contrib: &mut [f32],
 ) {
+    let kn = ctx.kernel;
     let d = ctx.plan.input_dim;
     let ts = ctx.plan.tape_stride;
     let dzs = ctx.plan.dz_stride;
-    let m_len = units
-        .iter()
-        .map(|u| if u.fused { 0 } else { u.w.len() })
-        .max()
-        .unwrap_or(0);
-    let mut m_row = vec![0.0f32; m_len];
-    let mut contrib = vec![0.0f32; ctx.plan.max_unit_width];
+    debug_assert!(m_row.len() >= ctx.plan.max_unit_width);
+    debug_assert!(contrib.len() >= ctx.plan.max_unit_width);
     for (i, &sc) in scale.iter().enumerate() {
         if sc == 0.0 {
             continue;
@@ -1302,7 +1335,7 @@ fn accum_update(
                 UnitKind::Dense { d_in, a, dz_idx } => {
                     let a_in = resolve(a, d_in);
                     let g = sc * dz_w[dz_idx];
-                    fold_row(u.w, a_in, g, u.fused, &mut m_row);
+                    fold_row(kn, u.w, a_in, g, u.fused, m_row);
                     if let Some(b) = u.b.as_deref_mut() {
                         *b += g;
                     }
@@ -1337,7 +1370,7 @@ fn accum_update(
                             }
                         }
                     }
-                    fold_row(u.w, c, sc, u.fused, &mut m_row);
+                    fold_row(kn, u.w, c, sc, u.fused, m_row);
                     if let Some(b) = u.b.as_deref_mut() {
                         *b += sc * gb;
                     }
@@ -1350,9 +1383,9 @@ fn accum_update(
                     for s in 0..t {
                         let g = dz_w[g_off + s * g_stride];
                         gb += g;
-                        axpy(c, &a_rows[s * width..(s + 1) * width], g);
+                        kernels::axpy(kn, c, &a_rows[s * width..(s + 1) * width], g);
                     }
-                    fold_row(u.w, c, sc, u.fused, &mut m_row);
+                    fold_row(kn, u.w, c, sc, u.fused, m_row);
                     if let Some(b) = u.b.as_deref_mut() {
                         *b += sc * gb;
                     }
@@ -1364,11 +1397,11 @@ fn accum_update(
                     for (cv, (&dv, &xv)) in c.iter_mut().zip(dout.iter().zip(xhat)) {
                         *cv = dv * xv;
                     }
-                    fold_row(u.w, c, sc, u.fused, &mut m_row);
+                    fold_row(kn, u.w, c, sc, u.fused, m_row);
                 }
                 UnitKind::LnBeta { d, dz_off } => {
                     let dout = &dz_w[dz_off..dz_off + d];
-                    fold_row(u.w, dout, sc, u.fused, &mut m_row);
+                    fold_row(kn, u.w, dout, sc, u.fused, m_row);
                 }
             }
         }
@@ -1397,7 +1430,7 @@ impl Backend for ReferenceBackend {
                     .collect();
                 RefExec::Accum { variant, batch, plan, fused }
             }
-            "apply" => RefExec::Apply,
+            "apply" => RefExec::Apply { bf16: exe.dtype.as_deref() == Some("bf16") },
             "eval" => RefExec::Eval {
                 batch: exe
                     .batch
@@ -1537,6 +1570,7 @@ impl Backend for ReferenceBackend {
 
         let ctx = AccumCtx {
             plan,
+            kernel: self.kernel,
             nonprivate: variant == "nonprivate",
             clip_norm: meta.clip_norm as f32,
             params: params.as_slice(),
@@ -1552,7 +1586,8 @@ impl Backend for ReferenceBackend {
         let work = b * plan.macs_per_example();
         let nthreads = self.workers(work, b);
         let mut pooled = PooledScratch::take(&self.scratch);
-        let (dz, tape, scale, losses, bwd) = pooled.get().accum(b, nthreads, plan);
+        let AccumBuffers { dz, tape, scale, losses, bwd, m_row, contrib } =
+            pooled.get().accum(b, nthreads, plan);
 
         // Phase 1: per-example forward tape + backward dz / losses /
         // norms / scales, parallel over fixed contiguous example
@@ -1658,11 +1693,19 @@ impl Backend for ReferenceBackend {
                     }
                     let (chunk, tail) = rest.split_at_mut(cut);
                     rest = tail;
-                    sc.spawn(move || accum_update(ctx, chunk, dz, tape, scale));
+                    // Each worker checks out its own arena for the
+                    // phase-2 block buffers (the pool grows to the
+                    // steady-state worker count once and stays there —
+                    // `memory.rs` prices exactly this).
+                    sc.spawn(move || {
+                        let mut pooled = PooledScratch::take(&self.scratch);
+                        let (m_row, contrib) = pooled.get().blocks(ctx.plan);
+                        accum_update(ctx, chunk, dz, tape, scale, m_row, contrib);
+                    });
                 }
             });
         } else {
-            accum_update(ctx, &mut units, dz, tape, scale);
+            accum_update(ctx, &mut units, dz, tape, scale, m_row, contrib);
         }
         Ok(AccumStats { loss_sum, sq_norms })
     }
@@ -1679,9 +1722,10 @@ impl Backend for ReferenceBackend {
         args: &ApplyArgs,
     ) -> Result<()> {
         let spec = self.spec(prep)?;
-        if !matches!(spec.as_ref(), RefExec::Apply) {
-            return Err(anyhow!("{} is not an apply executable", prep.key));
-        }
+        let bf16 = match spec.as_ref() {
+            RefExec::Apply { bf16 } => *bf16,
+            _ => return Err(anyhow!("{} is not an apply executable", prep.key)),
+        };
         Self::check_model_vectors(meta, params, Some(acc))?;
         let ApplyArgs { seed, denom, lr, noise_mult } = *args;
         if !denom.is_finite() || denom <= 0.0 {
@@ -1700,6 +1744,13 @@ impl Backend for ReferenceBackend {
             for (pj, &aj) in out.iter_mut().zip(acc.as_slice()) {
                 *pj -= lr * aj / denom;
             }
+        }
+        if bf16 {
+            // bf16 storage, f32 compute: the update above ran in f32;
+            // round-to-nearest-even back onto the bf16 grid on store
+            // (DESIGN.md §14). Quantizing after the full loop is
+            // elementwise, so it commutes with any update order.
+            quantize_bf16(out);
         }
         Ok(())
     }
@@ -1748,7 +1799,7 @@ impl Backend for ReferenceBackend {
                 let (d_in, d_out) = (pl.spec.d_in, pl.spec.d_out);
                 let a_in: &[f32] = if l == 0 { xi } else { &cur[..d_in] };
                 let out = &mut nxt[..d_out];
-                layer_forward(pl, p, a_in, out, &mut ext[..tape_extras(&pl.spec)]);
+                layer_forward(self.kernel, pl, p, a_in, out, &mut ext[..tape_extras(&pl.spec)]);
                 std::mem::swap(&mut cur, &mut nxt);
             }
             let lg = &cur[..ncls];
@@ -1823,6 +1874,21 @@ mod tests {
                 meta.accum_batches("masked", "f32"),
                 vec![1, 2, 4, 8, 16, 32, 64],
                 "{name}"
+            );
+            // Both parameter dtypes are lowered (the bf16 rows are what
+            // the measured precision figures consume), and the default
+            // dtype-less apply lookup still lands on the f32 step.
+            assert_eq!(
+                meta.accum_batches("ghost", "bf16"),
+                vec![1, 2, 4, 8, 16, 32, 64],
+                "{name}"
+            );
+            assert_eq!(meta.find_apply().and_then(|e| e.dtype.clone()), None, "{name}");
+            assert!(
+                meta.executables
+                    .iter()
+                    .any(|e| e.kind == "apply" && e.dtype.as_deref() == Some("bf16")),
+                "{name}: bf16 apply lowered"
             );
             let variants = meta.variants();
             for v in ACCUM_VARIANTS {
@@ -2133,6 +2199,69 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn kernel_choice_never_changes_the_bits() {
+        // The DESIGN.md §14 contract, spot-checked in-module on every
+        // layer kind: the scalar path and the auto-detected SIMD path
+        // produce identical accumulators, losses, and norms. (The full
+        // trajectory-level proptests live in
+        // rust/tests/kernel_bitwise.rs.)
+        for meta in kind_ladder() {
+            let (x, y) = batch_of(&meta, 8);
+            let mask = [1.0, 0.0, 1.0, 1.0, 1.0, 0.0, 1.0, 1.0];
+            let mut want: Option<AccumOut> = None;
+            for kernel in [Kernel::Scalar, Kernel::auto()] {
+                let b = ReferenceBackend::with_options(0, 0, kernel);
+                let prep = prepare_accum(&b, &meta, "mix", 8);
+                let params = b.init_params(Path::new("."), &meta).unwrap();
+                let acc = Tensor::zeros(meta.n_params);
+                let out = b
+                    .run_accum(
+                        &prep,
+                        &meta,
+                        &params,
+                        &acc,
+                        &AccumArgs { x: &x, y: &y, mask: &mask },
+                    )
+                    .unwrap();
+                if let Some(w) = &want {
+                    assert_eq!(w.acc, out.acc, "{kernel:?}: acc diverged");
+                    assert_eq!(w.loss_sum.to_bits(), out.loss_sum.to_bits(), "{kernel:?}");
+                    assert_eq!(w.sq_norms, out.sq_norms, "{kernel:?}");
+                } else {
+                    want = Some(out);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_apply_quantizes_parameter_storage() {
+        let (b, meta) = setup();
+        let bf16_exe = meta
+            .executables
+            .iter()
+            .find(|e| e.kind == "apply" && e.dtype.as_deref() == Some("bf16"))
+            .unwrap()
+            .clone();
+        let prep = b.prepare(Path::new("."), &meta, &bf16_exe).unwrap();
+        let params = b.init_params(Path::new("."), &meta).unwrap();
+        let mut acc = Tensor::zeros(meta.n_params);
+        acc.as_mut_slice()[0] = 2.0;
+        let args = ApplyArgs { seed: 42, denom: 4.0, lr: 0.1, noise_mult: 1.0 };
+        let out = b.run_apply(&prep, &meta, &params, &acc, &args).unwrap();
+        // Every stored value sits on the bf16 grid...
+        assert!(out.as_slice().iter().all(|v| v.to_bits() & 0xffff == 0));
+        // ...and equals the f32 step rounded onto it (bf16 storage,
+        // f32 compute — never bf16 arithmetic).
+        let f32_exe = meta.find_apply().unwrap().clone();
+        let f32_prep = b.prepare(Path::new("."), &meta, &f32_exe).unwrap();
+        let f32_out = b.run_apply(&f32_prep, &meta, &params, &acc, &args).unwrap();
+        let mut rounded = f32_out.clone();
+        rounded.quantize_bf16();
+        assert_eq!(out, rounded);
     }
 
     #[test]

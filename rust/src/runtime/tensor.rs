@@ -85,6 +85,34 @@ impl Tensor {
     pub fn into_vec(self) -> Vec<f32> {
         self.data
     }
+
+    /// Quantize every element to the nearest bf16 value in place
+    /// (round-to-nearest-even) — the `--param-dtype bf16` storage step.
+    pub fn quantize_bf16(&mut self) {
+        quantize_bf16(&mut self.data);
+    }
+}
+
+/// Round one f32 to the nearest bf16-representable value
+/// (round-to-nearest-even on the dropped 16 mantissa bits), returned as
+/// an f32. Every bf16 value is exactly representable in f32, so
+/// bf16-storage parameters survive f32 checkpoints bit-for-bit.
+pub fn bf16_round(x: f32) -> f32 {
+    if x.is_nan() {
+        // Keep a quiet NaN rather than risking rounding a signaling
+        // payload into infinity.
+        return f32::from_bits((x.to_bits() & 0xffff_0000) | 0x0040_0000);
+    }
+    let bits = x.to_bits();
+    let rounded = bits.wrapping_add(0x7fff + ((bits >> 16) & 1));
+    f32::from_bits(rounded & 0xffff_0000)
+}
+
+/// [`bf16_round`] over a whole parameter buffer.
+pub fn quantize_bf16(data: &mut [f32]) {
+    for v in data.iter_mut() {
+        *v = bf16_round(*v);
+    }
 }
 
 #[cfg(test)]
@@ -132,5 +160,36 @@ mod tests {
         let v = vec![0.5f32; 7];
         let t = Tensor::from_vec(v.clone());
         assert_eq!(t.into_vec(), v);
+    }
+
+    #[test]
+    fn bf16_round_is_rne_and_idempotent() {
+        // Exactly representable values pass through untouched.
+        for v in [0.0f32, -0.0, 1.0, -2.5, 0.15625, f32::INFINITY] {
+            assert_eq!(bf16_round(v).to_bits(), v.to_bits(), "{v}");
+        }
+        // 1.0 + 2^-8 sits exactly halfway between bf16 neighbors
+        // 1.0 (mantissa ...000) and 1.0078125 (...001): round to even.
+        assert_eq!(bf16_round(f32::from_bits(0x3f80_8000)), 1.0);
+        // One ulp above the halfway point rounds up.
+        assert_eq!(
+            bf16_round(f32::from_bits(0x3f80_8001)).to_bits(),
+            0x3f81_0000
+        );
+        // Just below halfway rounds down.
+        assert_eq!(bf16_round(f32::from_bits(0x3f80_7fff)), 1.0);
+        // Idempotent: quantizing a quantized buffer is a no-op.
+        let mut buf: Vec<f32> = (0..64).map(|i| (i as f32).exp2().sin() * 3.7).collect();
+        quantize_bf16(&mut buf);
+        let once: Vec<u32> = buf.iter().map(|v| v.to_bits()).collect();
+        quantize_bf16(&mut buf);
+        let twice: Vec<u32> = buf.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(once, twice);
+        // NaN stays NaN (never rounds into infinity).
+        assert!(bf16_round(f32::NAN).is_nan());
+        // Low 16 bits are always clear after rounding.
+        for v in &buf {
+            assert_eq!(v.to_bits() & 0xffff, 0);
+        }
     }
 }

@@ -180,6 +180,12 @@ fn warn_fixtures() -> Vec<(&'static str, RunPlan)> {
     p.dtypes.push("fp8".into());
     out.push((rule::DTYPE_UNKNOWN, p));
 
+    // Reference kernels on an ISA the bitwise battery has not pinned:
+    // wall-clock knob, so surfaced without blocking.
+    let mut p = test_plan(2);
+    p.kernel_isa = "avx512".into();
+    out.push((rule::KERNEL_UNVERIFIED_ISA, p));
+
     out
 }
 

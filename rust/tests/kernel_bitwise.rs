@@ -1,0 +1,324 @@
+//! Kernel bitwise-equality battery (DESIGN.md §14).
+//!
+//! The determinism contract says `--kernel` is a wall-clock knob only:
+//! the scalar 8-lane fixed-tree path is the specification and every
+//! SIMD path must land on the same bits. This suite pins that at three
+//! levels:
+//!
+//! 1. **Dispatch level** — `dot` / `axpy` / `matvec` / `matvec_t` /
+//!    `gram_sq` called with `Kernel::Scalar` vs `Kernel::auto()` agree
+//!    bitwise on random operands of awkward lengths (remainder tails,
+//!    row counts not divisible by the 4-row block).
+//! 2. **Trajectory level** — whole `TrainSession` runs on a
+//!    scalar-kernel runtime vs an auto-kernel runtime are
+//!    bitwise-identical (final params, per-step losses, epsilon) across
+//!    all five reference models × clip variants × worker counts ×
+//!    seeds × param dtypes.
+//! 3. **Checkpoint level** — the executed bf16 storage mode round-trips
+//!    exactly through JSON checkpoints (fingerprint generation `v7`),
+//!    and a checkpoint taken under one kernel resumes under the other
+//!    without moving a bit (the kernel is excluded from the
+//!    fingerprint, like `workers`).
+//!
+//! The cross-ISA CI job re-runs this whole file with
+//! `DPSHORT_FORCE_SCALAR=1`: `Kernel::auto()` then resolves to scalar
+//! on every host, so the suite degenerates to scalar-vs-scalar and
+//! stays green (and meaningful as a regression harness) on machines
+//! with no vector unit.
+
+use dp_shortcuts::coordinator::batcher::BatchingMode;
+use dp_shortcuts::coordinator::trainer::{config_fingerprint, resolve_sigma};
+use dp_shortcuts::runtime::{kernels, Kernel};
+use dp_shortcuts::util::rng::ChaChaRng;
+use dp_shortcuts::{Runtime, TrainCheckpoint, TrainConfig, TrainSession, Trainer};
+use proptest::prelude::*;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+fn randv(rng: &mut ChaChaRng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_normal() as f32).collect()
+}
+
+// ---------------------------------------------------------------------
+// 1. Dispatch-level equality: scalar vs the detected kernel.
+// ---------------------------------------------------------------------
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(96))]
+
+    /// `dot` and `axpy` dispatch bitwise-equally across lengths that
+    /// exercise empty inputs, pure-tail inputs (< 8), exact multiples
+    /// of the 8-lane chunk, and long mixed cases.
+    #[test]
+    fn dot_and_axpy_dispatch_bitwise_equal(
+        len in 0usize..200,
+        data_seed in proptest::num::u64::ANY,
+    ) {
+        let auto = Kernel::auto();
+        let mut rng = ChaChaRng::from_seed_stream(data_seed, 0, b"kbitwise");
+        let a = randv(&mut rng, len);
+        let b = randv(&mut rng, len);
+        prop_assert_eq!(
+            kernels::dot(Kernel::Scalar, &a, &b).to_bits(),
+            kernels::dot(auto, &a, &b).to_bits(),
+            "dot diverged at len {} on {:?}", len, auto
+        );
+
+        let g = rng.next_normal() as f32;
+        let mut scalar_row = a.clone();
+        let mut auto_row = a.clone();
+        kernels::axpy(Kernel::Scalar, &mut scalar_row, &b, g);
+        kernels::axpy(auto, &mut auto_row, &b, g);
+        prop_assert_eq!(bits(&scalar_row), bits(&auto_row), "axpy diverged at len {}", len);
+    }
+
+    /// The cache-blocked forward matvec and the blocked transpose
+    /// matvec (fold of axpy rows) agree bitwise with the scalar
+    /// row-at-a-time loops — including row counts that leave 1..3
+    /// remainder rows after the 4-row blocks.
+    #[test]
+    fn blocked_matvecs_dispatch_bitwise_equal(
+        d_in in 1usize..48,
+        d_out in 1usize..24,
+        data_seed in proptest::num::u64::ANY,
+    ) {
+        let auto = Kernel::auto();
+        let mut rng = ChaChaRng::from_seed_stream(data_seed, 1, b"kbitwise");
+        let w = randv(&mut rng, d_out * d_in);
+        let bias = randv(&mut rng, d_out);
+        let a = randv(&mut rng, d_in);
+
+        let mut scalar_out = vec![0.0f32; d_out];
+        let mut auto_out = vec![0.0f32; d_out];
+        kernels::matvec(Kernel::Scalar, &mut scalar_out, &w, &bias, &a);
+        kernels::matvec(auto, &mut auto_out, &w, &bias, &a);
+        prop_assert_eq!(
+            bits(&scalar_out), bits(&auto_out),
+            "matvec diverged at {}x{}", d_out, d_in
+        );
+
+        let gs = randv(&mut rng, d_out);
+        let seed_da = randv(&mut rng, d_in);
+        let mut scalar_da = seed_da.clone();
+        let mut auto_da = seed_da;
+        kernels::matvec_t(Kernel::Scalar, &mut scalar_da, &w, &gs);
+        kernels::matvec_t(auto, &mut auto_da, &w, &gs);
+        prop_assert_eq!(
+            bits(&scalar_da), bits(&auto_da),
+            "matvec_t diverged at {}x{}", d_out, d_in
+        );
+    }
+
+    /// The ghost Gram-norm product — the one kernel whose *outer*
+    /// accumulation order is privacy-relevant — dispatches bitwise
+    /// equally over token matrices of every small shape.
+    #[test]
+    fn gram_sq_dispatch_bitwise_equal(
+        t in 1usize..6,
+        aw in 1usize..24,
+        gw in 1usize..12,
+        data_seed in proptest::num::u64::ANY,
+    ) {
+        let auto = Kernel::auto();
+        let mut rng = ChaChaRng::from_seed_stream(data_seed, 2, b"kbitwise");
+        let a = randv(&mut rng, t * aw);
+        let g = randv(&mut rng, t * gw);
+        prop_assert_eq!(
+            kernels::gram_sq(Kernel::Scalar, &a, aw, &g, gw, t).to_bits(),
+            kernels::gram_sq(auto, &a, aw, &g, gw, t).to_bits(),
+            "gram_sq diverged at t={} aw={} gw={}", t, aw, gw
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. Trajectory-level equality: whole training runs, scalar vs auto.
+// ---------------------------------------------------------------------
+
+/// Small-but-real config: Poisson sampling over 48 examples, masked
+/// Algorithm-2 batching, 3 noisy steps. Any physical batch in the
+/// lowered menu works; 4 keeps the chunk planner honest (logical
+/// batches straddle several chunks).
+fn train_config(model: &str, variant: &str, workers: usize, seed: u64, bf16: bool) -> TrainConfig {
+    TrainConfig {
+        model: model.into(),
+        variant: variant.into(),
+        bf16,
+        mode: BatchingMode::Masked,
+        dataset_size: 48,
+        sampling_rate: 0.3,
+        physical_batch: 4,
+        steps: 3,
+        lr: 0.05,
+        noise_multiplier: Some(1.1),
+        seed,
+        eval_examples: 0,
+        workers,
+        ..Default::default()
+    }
+}
+
+fn run(rt: &Runtime, cfg: TrainConfig) -> dp_shortcuts::TrainReport {
+    Trainer::new(rt, cfg).unwrap().run().unwrap()
+}
+
+proptest! {
+    // Every case trains two full sessions, so keep the case count low;
+    // the grid below still sweeps all five models, the executed clip
+    // variants, 1/2/4 workers, both dtypes, and random seeds (which
+    // vary the Poisson masks) across runs.
+    #![proptest_config(ProptestConfig::with_cases(8))]
+
+    /// A scalar-kernel runtime and an auto-kernel runtime train the
+    /// **identical** trajectory: final parameter bits, per-step loss
+    /// bits, and the composed epsilon. This is the executed form of the
+    /// DESIGN.md §14 contract ("a kernel switch never moves a single
+    /// bit") — and the reason `--kernel` may be excluded from the
+    /// checkpoint fingerprint.
+    #[test]
+    fn training_trajectories_are_kernel_invariant(
+        model_idx in 0usize..5,
+        variant_idx in 0usize..5,
+        workers_idx in 0usize..3,
+        bf16 in proptest::bool::ANY,
+        seed in 0u64..1_000_000,
+    ) {
+        let model =
+            ["ref-linear", "mlp-small", "mlp-wide", "cnn-small", "attn-tiny"][model_idx];
+        let variant = ["masked", "ghost", "perex", "mix", "bk"][variant_idx];
+        let workers = [1usize, 2, 4][workers_idx];
+
+        let scalar_rt = Runtime::reference_with_options(0, 0, Kernel::Scalar);
+        let auto_rt = Runtime::reference_with_options(0, 0, Kernel::auto());
+        let want = run(&scalar_rt, train_config(model, variant, workers, seed, bf16));
+        let got = run(&auto_rt, train_config(model, variant, workers, seed, bf16));
+
+        prop_assert_eq!(
+            bits(&got.final_params), bits(&want.final_params),
+            "{}/{} ({} workers, bf16={}) params diverged across kernels",
+            model, variant, workers, bf16
+        );
+        prop_assert_eq!(got.epsilon_spent.to_bits(), want.epsilon_spent.to_bits());
+        prop_assert_eq!(got.steps.len(), want.steps.len());
+        for (a, b) in got.steps.iter().zip(&want.steps) {
+            prop_assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{}/{}", model, variant);
+            prop_assert_eq!(a.logical_batch, b.logical_batch);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. Checkpoint-level: executed bf16 storage round-trips exactly, and
+//    kernels stay out of the fingerprint.
+// ---------------------------------------------------------------------
+
+/// bf16 storage with RNE-on-store keeps the low 16 mantissa bits of
+/// every stored parameter zero — the property that makes the storage
+/// mode *executed* rather than a tag.
+fn all_bf16_quantized(params: &[f32]) -> bool {
+    params.iter().all(|p| p.to_bits() & 0xffff == 0)
+}
+
+#[test]
+fn bf16_checkpoint_round_trip_is_exact() {
+    let cfg = train_config("mlp-small", "ghost", 1, 11, true);
+
+    // Uninterrupted bf16 run: the oracle trajectory.
+    let rt = Runtime::reference_with_options(0, 0, Kernel::Scalar);
+    let want = run(&rt, cfg.clone());
+    assert!(
+        all_bf16_quantized(&want.final_params),
+        "bf16 apply must re-quantize parameter storage after every update"
+    );
+
+    // Interrupted run: step once, checkpoint through the JSON wire
+    // format, resume in a fresh session, finish.
+    let mut first = TrainSession::new(&rt, cfg.clone()).unwrap();
+    first.step().unwrap();
+    let ckpt = first.checkpoint().unwrap();
+    assert!(ckpt.fingerprint.starts_with("v7|"), "fingerprint generation: {}", ckpt.fingerprint);
+    assert!(
+        all_bf16_quantized(&ckpt.params),
+        "checkpointed bf16 params must already be quantized (session-quantized init + \
+         requantizing apply)"
+    );
+    let wire = ckpt.to_json().unwrap();
+    let restored = TrainCheckpoint::from_json(&wire).unwrap();
+    assert!(restored.checksum_ok(), "JSON round-trip broke the crash-consistency seal");
+    assert_eq!(bits(&restored.params), bits(&ckpt.params), "params drifted through JSON");
+
+    let mut resumed = TrainSession::resume(&rt, cfg.clone(), restored).unwrap();
+    assert_eq!(resumed.step_index(), 1);
+    while !resumed.done() {
+        resumed.step().unwrap();
+    }
+    let got = resumed.finish().unwrap();
+    assert_eq!(
+        bits(&got.final_params),
+        bits(&want.final_params),
+        "resumed bf16 run diverged from the uninterrupted one"
+    );
+    assert_eq!(got.epsilon_spent.to_bits(), want.epsilon_spent.to_bits());
+    assert_eq!(got.steps.len(), want.steps.len());
+    for (a, b) in got.steps.iter().zip(&want.steps) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+    }
+}
+
+#[test]
+fn checkpoints_resume_across_kernels() {
+    // A checkpoint taken on a scalar-kernel runtime resumes on an
+    // auto-kernel runtime (and lands on the scalar oracle's bits): the
+    // kernel is a wall-clock knob, excluded from the fingerprint
+    // exactly like `workers`.
+    let cfg = train_config("cnn-small", "mix", 1, 23, false);
+    let scalar_rt = Runtime::reference_with_options(0, 0, Kernel::Scalar);
+    let want = run(&scalar_rt, cfg.clone());
+
+    let mut first = TrainSession::new(&scalar_rt, cfg.clone()).unwrap();
+    first.step().unwrap();
+    first.step().unwrap();
+    let ckpt = first.checkpoint().unwrap();
+
+    let auto_rt = Runtime::reference_with_options(0, 0, Kernel::auto());
+    let mut resumed = TrainSession::resume(&auto_rt, cfg.clone(), ckpt).unwrap();
+    while !resumed.done() {
+        resumed.step().unwrap();
+    }
+    let got = resumed.finish().unwrap();
+    assert_eq!(
+        bits(&got.final_params),
+        bits(&want.final_params),
+        "cross-kernel resume diverged"
+    );
+    assert_eq!(got.epsilon_spent.to_bits(), want.epsilon_spent.to_bits());
+}
+
+#[test]
+fn fingerprint_tracks_dtype_but_not_kernel() {
+    let base = train_config("mlp-small", "ghost", 1, 5, false);
+    let sigma = resolve_sigma(&base).unwrap();
+    let fp = config_fingerprint(&base, sigma);
+    assert!(fp.starts_with("v7|"), "{fp}");
+    assert!(fp.contains("|f32|"), "dtype tag missing: {fp}");
+
+    // bf16 is an executed storage mode: it changes the trajectory, so
+    // it MUST change the fingerprint (a v6-style f32 checkpoint must
+    // not resume under bf16 or vice versa).
+    let mut bf16 = base.clone();
+    bf16.bf16 = true;
+    let bf16_fp = config_fingerprint(&bf16, sigma);
+    assert_ne!(fp, bf16_fp);
+    assert!(bf16_fp.contains("|bf16|"), "{bf16_fp}");
+
+    // The kernel selection never moves a bit, so two configs differing
+    // only in `kernel` share one fingerprint — checkpoints flow freely
+    // between scalar and SIMD hosts.
+    let mut scalar = base.clone();
+    scalar.kernel = "scalar".into();
+    let mut simd = base;
+    simd.kernel = "simd".into();
+    assert_eq!(config_fingerprint(&scalar, sigma), config_fingerprint(&simd, sigma));
+}
